@@ -1,0 +1,61 @@
+//! Table 3 as a runnable example: ResNet-101's convolution inventory on
+//! the Mobile configuration (1 thread, batch 1), weighted by how often
+//! each layer shape occurs in the network.
+//!
+//! The paper reports Conv.cpu 203.6 MB / 1701.6 ms vs MEC.cpu 64.6 MB /
+//! 1391.6 ms (ratios 3.2× memory, 1.2× runtime). Absolute milliseconds
+//! are host-specific; the ratios are the reproduction target.
+//!
+//! ```text
+//! cargo run --release --example resnet_mobile
+//! ```
+
+use mec::bench::workload::resnet101_table3;
+use mec::conv::{AlgoKind, ConvContext};
+use mec::memory::Workspace;
+use mec::tensor::{Kernel, Tensor};
+use mec::util::Rng;
+use std::time::Instant;
+
+fn main() {
+    let ctx = ConvContext::mobile();
+    let mut rng = Rng::new(101);
+    println!(
+        "{:<6} {:>7} | {:>12} {:>12} | {:>12} {:>12}",
+        "layer", "weight", "conv MB", "conv ms", "MEC MB", "MEC ms"
+    );
+    let mut totals = [0.0f64; 4]; // conv_mb, conv_ms, mec_mb, mec_ms
+    for (w, weight) in resnet101_table3() {
+        let shape = w.shape(1, 1);
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let mut row = [0.0f64; 4];
+        for (i, kind) in [AlgoKind::Im2col, AlgoKind::Mec].iter().enumerate() {
+            let algo = kind.build();
+            let mut out = Tensor::zeros(shape.output());
+            let mut ws = Workspace::new();
+            algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out); // warm
+            let t0 = Instant::now();
+            algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            row[i * 2] = algo.workspace_bytes(&shape) as f64 / 1e6;
+            row[i * 2 + 1] = ms;
+        }
+        println!(
+            "{:<6} {:>7} | {:>12.1} {:>12.1} | {:>12.1} {:>12.1}",
+            w.name, weight, row[0], row[1], row[2], row[3]
+        );
+        for i in 0..4 {
+            totals[i] += weight as f64 * row[i];
+        }
+    }
+    println!(
+        "{:<6} {:>7} | {:>12.1} {:>12.1} | {:>12.1} {:>12.1}",
+        "SUM", "", totals[0], totals[1], totals[2], totals[3]
+    );
+    println!(
+        "\nratios: memory {:.2}x (paper: 3.2x)   runtime {:.2}x (paper: 1.2x)",
+        totals[0] / totals[2],
+        totals[1] / totals[3]
+    );
+}

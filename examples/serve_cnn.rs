@@ -1,0 +1,123 @@
+//! END-TO-END DRIVER (recorded in EXPERIMENTS.md §E2E): proves all three
+//! layers compose on a real workload.
+//!
+//! 1. Loads the CNN that `make artifacts` trained in JAX on the synthetic
+//!    shapes dataset (`artifacts/model.mecw`, ~97% eval accuracy) and the
+//!    held-out eval set (`artifacts/eval.bin`).
+//! 2. Plans every conv layer with the memory-budgeted planner (MEC wins).
+//! 3. Serves the eval set as individual requests through the coordinator
+//!    (queue → dynamic batcher → workers → native MEC engine), reporting
+//!    accuracy, p50/p95/p99 latency, and throughput.
+//! 4. Cross-checks the native engine against the PJRT executor running
+//!    the AOT JAX/Pallas HLO (`artifacts/model_fwd.hlo.txt`) on the same
+//!    samples — the full Pallas ≡ rust proof, at serve time.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example serve_cnn
+//! ```
+
+use mec::conv::ConvContext;
+use mec::coordinator::{BatchPolicy, Server, ServerConfig};
+use mec::memory::Budget;
+use mec::model::{load_mecw, EvalSet};
+use mec::planner::Planner;
+use mec::runtime::{model_weight_inputs, Executor, Manifest, PjrtEngine, PjrtExecutor};
+use mec::tensor::{Nhwc, Tensor};
+use mec::util::assert_allclose;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    mec::util::logging::init();
+    let dir = mec::runtime::artifacts::default_dir();
+    anyhow::ensure!(
+        dir.join("model.mecw").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    // ---- 1. load model + eval set -------------------------------------
+    let mut model = load_mecw(dir.join("model.mecw"))?;
+    let eval = EvalSet::load(dir.join("eval.bin"))?;
+    println!(
+        "model {:?}: {} layers / {} params; eval set: {} samples",
+        model.name,
+        model.layers.len(),
+        model.param_count(),
+        eval.len()
+    );
+
+    // ---- 2. plan under a mobile-ish budget ----------------------------
+    let budget = Budget::new(2 << 20); // 2 MB workspace — phone territory
+    let ctx = ConvContext::default();
+    model.plan(&Planner::new(), &budget, &ctx, 32);
+    for (i, algo) in model.plan_summary() {
+        println!("  conv layer {i}: planned -> {}", algo.name());
+    }
+
+    // ---- 3. serve the eval set through the coordinator ----------------
+    let model = Arc::new(model);
+    let server = Server::start(
+        Arc::clone(&model),
+        ServerConfig {
+            workers: 1,
+            queue_capacity: 512,
+            policy: BatchPolicy::new(32, Duration::from_millis(2)),
+            ctx: ctx.clone(),
+        },
+    );
+    let client = server.client();
+    let t0 = Instant::now();
+    let rxs: Vec<_> = eval
+        .samples
+        .iter()
+        .map(|s| client.submit(s.clone()).expect("queue sized for eval set"))
+        .collect();
+    let mut correct = 0;
+    let mut native_scores: Vec<Vec<f32>> = Vec::with_capacity(eval.len());
+    for (rx, &label) in rxs.into_iter().zip(&eval.labels) {
+        let resp = rx.recv()?;
+        if resp.class == label {
+            correct += 1;
+        }
+        native_scores.push(resp.scores);
+    }
+    let wall = t0.elapsed();
+    let metrics = server.shutdown();
+    let acc = correct as f64 / eval.len() as f64;
+    println!("\n== serving results ==");
+    println!(
+        "accuracy {}/{} = {:.1}%  (python trainer reported ~97%)",
+        correct,
+        eval.len(),
+        100.0 * acc
+    );
+    println!("{}", metrics.report());
+    println!(
+        "wall time {:.2}s -> {:.1} req/s end-to-end",
+        wall.as_secs_f64(),
+        eval.len() as f64 / wall.as_secs_f64()
+    );
+    assert!(acc > 0.9, "accuracy regression: {acc}");
+
+    // ---- 4. PJRT cross-check ------------------------------------------
+    let manifest = Manifest::load(&dir)?;
+    let engine = PjrtEngine::cpu()?;
+    let mut pjrt = PjrtExecutor::from_artifact(&engine, &manifest, "model_fwd")?
+        .with_weights(model_weight_inputs(&model))?;
+    let b = pjrt.lowered_batch();
+    let mut data = Vec::new();
+    for s in &eval.samples[..b] {
+        data.extend_from_slice(s);
+    }
+    let batch = Tensor::from_vec(Nhwc::new(b, eval.h, eval.w, eval.c), data);
+    let pjrt_scores = pjrt.forward(&batch)?;
+    let native_flat: Vec<f32> = native_scores[..b].concat();
+    assert_allclose(&pjrt_scores, &native_flat, 1e-3, "pjrt vs native");
+    println!(
+        "\nPJRT cross-check ✓ — AOT JAX/Pallas HLO ({} platform) matches the \
+         native rust engine on {} samples",
+        engine.platform(),
+        b
+    );
+    Ok(())
+}

@@ -1,0 +1,144 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the rust runtime.
+
+Interchange format is HLO *text*, never ``.serialize()``: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the pinned
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (+ manifest.txt index, parsed by rust ``runtime::artifacts``):
+
+* ``model_fwd.hlo.txt``  — the trained CNN forward (Pallas MEC convs),
+  batch ``SERVE_BATCH``, probabilities out. Served by the PJRT executor
+  and cross-checked against the native engine.
+* ``conv_<layer>.hlo.txt`` — standalone MEC convolution for a couple of
+  paper layers (channel-scaled), inputs (x, k): the kernel-level bridge
+  the runtime integration tests exercise.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import mec
+from .trainer import load_params_npz
+
+SERVE_BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def weight_order():
+    """Weight inputs in a fixed order shared with the rust executor:
+    per conv layer (w, b), then dense (w, b).
+
+    Weights are runtime *parameters*, not closure constants: the pinned
+    xla_extension 0.5.1 HLO-text parser mis-parses the multi-dimensional
+    f32 constant literals jax ≥0.8 emits (silently wrong numerics —
+    found by the rust cross-check test, see EXPERIMENTS.md §Findings).
+    Parameters round-trip exactly, and match how serving systems feed
+    weights anyway.
+    """
+    order = []
+    for name, kh, kw, ic, kc, _s, _p in model.CONV_SPECS:
+        order.append((name, "w", (kh, kw, ic, kc)))
+        order.append((name, "b", (kc,)))
+    order.append(("dense", "w", (model.DENSE_IN, model.NUM_CLASSES)))
+    order.append(("dense", "b", (model.NUM_CLASSES,)))
+    return order
+
+
+def lower_model_fwd(params, batch=SERVE_BATCH):
+    """Probabilities with the Pallas MEC conv path baked in."""
+    h, w, c = model.INPUT_HWC
+    order = weight_order()
+
+    def fwd(x, *weights):
+        p = {}
+        for (lname, key, _shape), wv in zip(order, weights):
+            p.setdefault(lname, {})[key] = wv
+        return model.predict_proba(p, x, use_pallas=True)
+
+    specs = [jax.ShapeDtypeStruct((batch, h, w, c), jnp.float32)] + [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for (_n, _k, shape) in order
+    ]
+    lowered = jax.jit(fwd).lower(*specs)
+    in_shapes = [(batch, h, w, c)] + [shape for (_n, _k, shape) in order]
+    del params  # weights flow in at run time
+    return to_hlo_text(lowered), in_shapes, (batch, model.NUM_CLASSES)
+
+
+# Standalone conv artifacts: (name, ih, iw, ic, kh, kw, kc, stride).
+# cv6/cv12 geometries channel-scaled /8 to keep interpret-mode HLO compact.
+CONV_ARTIFACTS = [
+    ("conv_cv6s", 12, 12, 32, 3, 3, 64, 1),
+    ("conv_cv12s", 7, 7, 64, 3, 3, 64, 1),
+    ("conv_cv1s", 32, 32, 3, 11, 11, 12, 4),
+]
+
+
+def lower_conv(ih, iw, ic, kh, kw, kc, stride, batch=1):
+    def conv(x, k):
+        return mec.mec_conv(x, k, (stride, stride))
+
+    xs = jax.ShapeDtypeStruct((batch, ih, iw, ic), jnp.float32)
+    ks = jax.ShapeDtypeStruct((kh, kw, ic, kc), jnp.float32)
+    lowered = jax.jit(conv).lower(xs, ks)
+    oh = (ih - kh) // stride + 1
+    ow = (iw - kw) // stride + 1
+    return (
+        to_hlo_text(lowered),
+        [(batch, ih, iw, ic), (kh, kw, ic, kc)],
+        (batch, oh, ow, kc),
+    )
+
+
+def fmt_shape(s):
+    return ",".join(str(d) for d in s)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = ["# MEC AOT artifacts (HLO text; see python/compile/aot.py)"]
+
+    params = load_params_npz(os.path.join(args.out, "params.npz"))
+    text, ishapes, oshape = lower_model_fwd(params)
+    with open(os.path.join(args.out, "model_fwd.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest.append(
+        f"name=model_fwd file=model_fwd.hlo.txt "
+        f"inputs={';'.join(fmt_shape(s) for s in ishapes)} outputs={fmt_shape(oshape)}"
+    )
+    print(f"model_fwd: {len(text)} chars, in {ishapes[0]} (+{len(ishapes) - 1} weights) out {oshape}")
+
+    for name, ih, iw, ic, kh, kw, kc, s in CONV_ARTIFACTS:
+        text, ins, out = lower_conv(ih, iw, ic, kh, kw, kc, s)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest.append(
+            f"name={name} file={fname} "
+            f"inputs={';'.join(fmt_shape(i) for i in ins)} outputs={fmt_shape(out)}"
+        )
+        print(f"{name}: {len(text)} chars")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest) - 1} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Synthetic "shapes" dataset for the end-to-end training/serving demo.
+
+Three 28×28 grayscale classes with additive noise and random jitter:
+  0 — filled square
+  1 — cross (plus sign)
+  2 — diagonal stripes
+
+Deterministic in the seed; split into train/eval by the generator.
+This stands in for the proprietary/real datasets the paper's DNNs were
+trained on (substitution documented in DESIGN.md §6): the serving demo
+needs *a* real learning task to prove the full stack trains and serves,
+not ImageNet itself.
+"""
+
+import numpy as np
+
+H = W = 28
+
+
+def _square(rng):
+    img = np.zeros((H, W), np.float32)
+    size = rng.integers(8, 16)
+    y = rng.integers(2, H - size - 2)
+    x = rng.integers(2, W - size - 2)
+    img[y : y + size, x : x + size] = 1.0
+    return img
+
+
+def _cross(rng):
+    img = np.zeros((H, W), np.float32)
+    cy = rng.integers(10, H - 10)
+    cx = rng.integers(10, W - 10)
+    t = rng.integers(2, 4)
+    arm = rng.integers(6, 10)
+    img[cy - t : cy + t, cx - arm : cx + arm] = 1.0
+    img[cy - arm : cy + arm, cx - t : cx + t] = 1.0
+    return img
+
+
+def _stripes(rng):
+    img = np.zeros((H, W), np.float32)
+    period = rng.integers(4, 7)
+    phase = rng.integers(0, period)
+    yy, xx = np.mgrid[0:H, 0:W]
+    img[((yy + xx + phase) % period) < period // 2] = 1.0
+    return img
+
+
+_MAKERS = [_square, _cross, _stripes]
+
+
+def make_dataset(n, seed=0, noise=0.25):
+    """Returns ``(images (n,28,28,1) float32 in [0,1]-ish, labels (n,) int32)``."""
+    rng = np.random.default_rng(seed)
+    xs = np.zeros((n, H, W, 1), np.float32)
+    ys = np.zeros((n,), np.int32)
+    for i in range(n):
+        cls = int(rng.integers(0, 3))
+        img = _MAKERS[cls](rng)
+        img = img + rng.normal(0.0, noise, img.shape).astype(np.float32)
+        xs[i, :, :, 0] = img
+        ys[i] = cls
+    return xs, ys
+
+
+def save_eval_bin(path, xs, ys):
+    """Binary eval set for the rust serve example:
+
+    ``u32 count, u32 h, u32 w, u32 c``, then per sample
+    ``f32[h·w·c] pixels, u32 label`` (little-endian).
+    """
+    n, h, w, c = xs.shape
+    with open(path, "wb") as f:
+        for v in (n, h, w, c):
+            f.write(np.uint32(v).tobytes())
+        for i in range(n):
+            f.write(xs[i].astype("<f4").tobytes())
+            f.write(np.uint32(ys[i]).tobytes())

@@ -1,0 +1,57 @@
+"""Layer-1 baseline: im2col lowering as a Pallas kernel (paper Fig. 1b).
+
+Used for the kernel-level memory comparison (Eq. 2 vs Eq. 3) and as the
+Pallas-side baseline mirroring the rust engine's ``conv::im2col``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lower_kernel(x_ref, l_ref, *, sh, sw, kh, kw, ow):
+    """One grid step: lowered row for output position (y, x) of sample n.
+
+    Grid = (n, oh*ow); each program linearizes one receptive field — this
+    is the per-output-position copy whose redundancy MEC eliminates.
+    """
+    t = pl.program_id(1)
+    ic = x_ref.shape[3]
+    y = t // ow
+    x = t % ow
+    l_ref[0, 0] = jax.lax.dynamic_slice(x_ref[0], (y * sh, x * sw, 0), (kh, kw, ic))
+
+
+def im2col_lower(x, k_shape, stride=(1, 1), *, interpret=True):
+    """Toeplitz lowering: ``(n, ih, iw, ic) -> (n, oh·ow, kh, kw, ic)``.
+
+    Element count is Eq. (2) — compare ``mec.mec_lower``'s Eq. (3).
+    """
+    n, ih, iw, ic = x.shape
+    kh, kw = k_shape[0], k_shape[1]
+    sh, sw = stride
+    oh = (ih - kh) // sh + 1
+    ow = (iw - kw) // sw + 1
+    return pl.pallas_call(
+        functools.partial(_lower_kernel, sh=sh, sw=sw, kh=kh, kw=kw, ow=ow),
+        grid=(n, oh * ow),
+        in_specs=[pl.BlockSpec((1, ih, iw, ic), lambda i, j: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, kh, kw, ic), lambda i, j: (i, j, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, oh * ow, kh, kw, ic), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def im2col_conv(x, k, stride=(1, 1), *, interpret=True):
+    """im2col convolution: lower + one big GEMM (paper Fig. 1b)."""
+    n, ih, iw, ic = x.shape
+    kh, kw, _, kc = k.shape
+    sh, sw = stride
+    oh = (ih - kh) // sh + 1
+    ow = (iw - kw) // sw + 1
+    l = im2col_lower(x, k.shape, stride, interpret=interpret)
+    lmat = l.reshape(n * oh * ow, kh * kw * ic)
+    kmat = k.reshape(kh * kw * ic, kc)
+    return jnp.dot(lmat, kmat).reshape(n, oh, ow, kc)

@@ -1,0 +1,119 @@
+"""Layer-1 Pallas kernels: MEC convolution (paper Algorithm 2).
+
+Two kernels compose into the full convolution, mirroring the paper:
+
+* :func:`mec_lower` — Algorithm 2 lines 4-6: a grid over ``(n, w)``; each
+  program copies one vertical strip ``I[n, :, s_w·w : s_w·w + k_w, :]``
+  into row ``(n, w)`` of the compact lowered tensor L (Eq. 3).
+* :func:`mec_multiply` — lines 21-25 (Solution B shape): a grid over
+  ``(n, h)``; program ``(n, h)`` multiplies the *overlapping* slice
+  ``L[n, :, h·s_h·k_w·i_c : … + k_h·k_w·i_c]`` by the kernel matrix on
+  the MXU. The overlap is expressed by ``dynamic_slice`` into L held in
+  VMEM — the Pallas restatement of the paper's BLAS ``ld`` trick.
+
+HARDWARE ADAPTATION (DESIGN.md §3): the paper's GPU path batches these
+GEMMs via ``cublasSgemmBatched``; on TPU the batch dimension *is* the
+Pallas grid, and each step feeds an ``(o_w × k_h·k_w·i_c)`` tile through
+the MXU. VMEM footprint per grid step = one sample's L row-block +
+kernel matrix — see DESIGN.md §7 for per-layer numbers.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO, which both pytest and
+the rust runtime execute. Real-TPU compilation is a compile-only target.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lower_kernel(x_ref, l_ref, *, sw, kw):
+    """One grid step: copy strip w of sample n (grid = (n, ow))."""
+    w = pl.program_id(1)
+    ih, _, ic = x_ref.shape[1:]
+    # L[n, w] = I[n, :, sw*w : sw*w+kw, :]  (Algorithm 2 line 5)
+    l_ref[0, 0] = jax.lax.dynamic_slice(x_ref[0], (0, sw * w, 0), (ih, kw, ic))
+
+
+def mec_lower(x, kw, sw=1, *, interpret=True):
+    """Compact MEC lowering: ``(n, ih, iw, ic) -> (n, ow, ih, kw, ic)``."""
+    n, ih, iw, ic = x.shape
+    ow = (iw - kw) // sw + 1
+    return pl.pallas_call(
+        functools.partial(_lower_kernel, sw=sw, kw=kw),
+        grid=(n, ow),
+        in_specs=[pl.BlockSpec((1, ih, iw, ic), lambda i, j: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, ih, kw, ic), lambda i, j: (i, j, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ow, ih, kw, ic), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def _multiply_kernel(l_ref, k_ref, o_ref, *, sh, kw, ic, kh):
+    """One grid step: output row h of sample n (grid = (n, oh))."""
+    h = pl.program_id(1)
+    ow = l_ref.shape[1]
+    # Overlapping partition h of L (the ld trick, paper §3.2):
+    a = jax.lax.dynamic_slice(
+        l_ref[0], (0, h * sh * kw * ic), (ow, kh * kw * ic)
+    )
+    # (ow × kh·kw·ic) @ (kh·kw·ic × kc) on the MXU.
+    o_ref[0, 0] = jnp.dot(a, k_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def mec_multiply(l, k, sh=1, *, interpret=True):
+    """Recover the convolution from L: ``-> (n, oh, ow, kc)``.
+
+    Args:
+      l: lowered tensor ``(n, ow, ih, kw, ic)`` from :func:`mec_lower`.
+      k: kernel ``(kh, kw, ic, kc)``.
+      sh: vertical stride.
+    """
+    n, ow, ih, kw, ic = l.shape
+    kh, kw2, ic2, kc = k.shape
+    assert (kw2, ic2) == (kw, ic), f"kernel {k.shape} vs lowered {l.shape}"
+    oh = (ih - kh) // sh + 1
+    l2 = l.reshape(n, ow, ih * kw * ic)
+    kmat = k.reshape(kh * kw * ic, kc)
+    return pl.pallas_call(
+        functools.partial(_multiply_kernel, sh=sh, kw=kw, ic=ic, kh=kh),
+        grid=(n, oh),
+        in_specs=[
+            pl.BlockSpec((1, ow, ih * kw * ic), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((kh * kw * ic, kc), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, ow, kc), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, kc), l.dtype),
+        interpret=interpret,
+    )(l2, kmat)
+
+
+def mec_conv(x, k, stride=(1, 1), *, interpret=True):
+    """Full MEC convolution (Algorithm 2): lower + multiply.
+
+    Drop-in equal to :func:`..ref.conv2d_ref` — asserted by pytest.
+    """
+    sh, sw = stride
+    l = mec_lower(x, k.shape[1], sw, interpret=interpret)
+    return mec_multiply(l, k, sh, interpret=interpret)
+
+
+def mec_lowered_elems(x_shape, k_shape, stride=(1, 1)):
+    """Eq. (3): element count of L (memory-overhead accounting)."""
+    n, ih, iw, ic = x_shape
+    kh, kw, _, kc = k_shape
+    _, sw = stride
+    ow = (iw - kw) // sw + 1
+    return n * ow * ih * kw * ic
+
+
+def im2col_lowered_elems(x_shape, k_shape, stride=(1, 1)):
+    """Eq. (2): element count of im2col's lowered matrix."""
+    n, ih, iw, ic = x_shape
+    kh, kw, _, kc = k_shape
+    sh, sw = stride
+    oh = (ih - kh) // sh + 1
+    ow = (iw - kw) // sw + 1
+    return n * oh * ow * kh * kw * ic

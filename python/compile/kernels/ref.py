@@ -1,0 +1,67 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is the *reference* semantics: NHWC convolution via
+``jax.lax.conv_general_dilated`` and a plain-jnp MEC lowering.
+The Pallas kernels in ``mec.py`` are asserted against these in
+``python/tests`` (the core L1 correctness signal).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, k, stride=(1, 1)):
+    """VALID NHWC convolution (cross-correlation, CNN convention).
+
+    Args:
+      x: input, ``(n, ih, iw, ic)``.
+      k: kernel, ``(kh, kw, ic, kc)``.
+      stride: ``(sh, sw)``.
+
+    Returns:
+      ``(n, oh, ow, kc)`` with ``o = (i - k) / s + 1`` (paper Eq. 1).
+    """
+    return jax.lax.conv_general_dilated(
+        x,
+        k,
+        window_strides=stride,
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def mec_lower_ref(x, kw, sw=1):
+    """Reference MEC lowering (paper Algorithm 2 lines 4-6).
+
+    Produces L of shape ``(n, ow, ih, kw, ic)``: L[n, w] is the vertical
+    strip I[n, :, sw*w : sw*w + kw, :].
+    """
+    n, ih, iw, ic = x.shape
+    ow = (iw - kw) // sw + 1
+    cols = jnp.stack(
+        [jax.lax.dynamic_slice(x, (0, 0, sw * w, 0), (n, ih, kw, ic)) for w in range(ow)],
+        axis=1,
+    )
+    return cols  # (n, ow, ih, kw, ic)
+
+
+def mec_conv_ref(x, k, stride=(1, 1)):
+    """MEC evaluated with plain jnp ops (no Pallas): lower, then multiply
+    the o_h overlapping partitions (paper §3.2 / Algorithm 2 Solution B).
+
+    Numerically identical to ``conv2d_ref`` — used to test the algebra
+    of the lowering independent of the Pallas implementation.
+    """
+    n, ih, iw, ic = x.shape
+    kh, kw, _, kc = k.shape
+    sh, sw = stride
+    oh = (ih - kh) // sh + 1
+    ow = (iw - kw) // sw + 1
+    l = mec_lower_ref(x, kw, sw).reshape(n, ow, ih * kw * ic)
+    kmat = k.reshape(kh * kw * ic, kc)
+    rows = []
+    for h in range(oh):
+        # Partition h: columns [h·sh·kw·ic : h·sh·kw·ic + kh·kw·ic).
+        a = jax.lax.dynamic_slice(l, (0, 0, h * sh * kw * ic), (n, ow, kh * kw * ic))
+        rows.append(jnp.einsum("nwk,kc->nwc", a, kmat))
+    return jnp.stack(rows, axis=1)  # (n, oh, ow, kc)

@@ -1,0 +1,91 @@
+"""Layer-2 JAX model: a small CNN whose convolutions run through the
+Layer-1 MEC Pallas kernels.
+
+Architecture (28×28×1 in, 3 classes out — the synthetic shapes task):
+
+    conv 3×3×1×8  SAME → relu → maxpool 2
+    conv 3×3×8×16 SAME → relu → maxpool 2
+    flatten → dense 784→3
+
+``use_pallas`` switches conv between the Pallas MEC kernel (the artifact
+that gets AOT-lowered and served) and the pure-jnp reference (used for
+the training loop, where we want fast ``jax.grad``). Both paths are
+numerically identical — asserted in ``python/tests/test_model.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mec, ref
+
+# (name, kh, kw, ic, kc, stride, pad)
+CONV_SPECS = [
+    ("conv1", 3, 3, 1, 8, 1, 1),
+    ("conv2", 3, 3, 8, 16, 1, 1),
+]
+INPUT_HWC = (28, 28, 1)
+NUM_CLASSES = 3
+DENSE_IN = 7 * 7 * 16  # after two stride-2 pools: 28 -> 14 -> 7
+
+
+def init_params(key):
+    """He-style init, deterministic in ``key``."""
+    params = {}
+    for name, kh, kw, ic, kc, _s, _p in CONV_SPECS:
+        key, k1 = jax.random.split(key)
+        fan_in = kh * kw * ic
+        params[name] = {
+            "w": jax.random.normal(k1, (kh, kw, ic, kc), jnp.float32)
+            * jnp.sqrt(2.0 / fan_in),
+            "b": jnp.zeros((kc,), jnp.float32),
+        }
+    key, k1 = jax.random.split(key)
+    params["dense"] = {
+        "w": jax.random.normal(k1, (DENSE_IN, NUM_CLASSES), jnp.float32)
+        * jnp.sqrt(2.0 / DENSE_IN),
+        "b": jnp.zeros((NUM_CLASSES,), jnp.float32),
+    }
+    return params
+
+
+def conv_layer(x, w, b, stride, pad, use_pallas):
+    """SAME-padded conv through MEC (pallas) or the reference."""
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    if use_pallas:
+        y = mec.mec_conv(x, w, (stride, stride))
+    else:
+        y = ref.conv2d_ref(x, w, (stride, stride))
+    return y + b
+
+
+def max_pool(x, k=2, s=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, s, s, 1), "VALID"
+    )
+
+
+def forward(params, x, use_pallas=False):
+    """Logits for a batch ``(n, 28, 28, 1) -> (n, 3)``."""
+    for name, _kh, _kw, _ic, _kc, s, p in CONV_SPECS:
+        x = conv_layer(x, params[name]["w"], params[name]["b"], s, p, use_pallas)
+        x = jax.nn.relu(x)
+        x = max_pool(x)
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["dense"]["w"] + params["dense"]["b"]
+
+
+def predict_proba(params, x, use_pallas=False):
+    return jax.nn.softmax(forward(params, x, use_pallas), axis=-1)
+
+
+def loss_fn(params, x, y):
+    """Mean cross-entropy (training uses the reference conv path)."""
+    logits = forward(params, x, use_pallas=False)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def accuracy(params, x, y, use_pallas=False):
+    preds = jnp.argmax(forward(params, x, use_pallas), axis=-1)
+    return jnp.mean((preds == y).astype(jnp.float32))

@@ -1,0 +1,137 @@
+"""Build-time trainer: fit the L2 CNN on the synthetic shapes dataset,
+log the loss curve, and export everything the rust side needs:
+
+* ``model.mecw``      — weights in the rust loader's format
+* ``eval.bin``        — held-out eval set for the serve example
+* ``params.npz``      — raw params for ``aot.py`` (keeps the AOT module
+                        self-contained)
+* ``loss_curve.txt``  — step,loss pairs (recorded into EXPERIMENTS.md)
+
+Runs once under ``make artifacts``; never on the serve path.
+"""
+
+import argparse
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model
+
+
+def sgd_momentum(params, grads, vel, lr, mu=0.9):
+    new_vel = jax.tree_util.tree_map(lambda v, g: mu * v + g, vel, grads)
+    new_params = jax.tree_util.tree_map(lambda p, v: p - lr * v, params, new_vel)
+    return new_params, new_vel
+
+
+def train(steps=400, batch=64, lr=0.01, seed=0, log_every=20):
+    """Returns (params, loss_curve [(step, loss)], eval_acc, eval set)."""
+    xs, ys = data.make_dataset(4096, seed=seed)
+    ex, ey = data.make_dataset(512, seed=seed + 1)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    vel = jax.tree_util.tree_map(jnp.zeros_like, params)
+    loss_grad = jax.jit(jax.value_and_grad(model.loss_fn))
+    rng = np.random.default_rng(seed + 2)
+    curve = []
+    for step in range(steps):
+        idx = rng.integers(0, len(xs), batch)
+        loss, grads = loss_grad(params, jnp.asarray(xs[idx]), jnp.asarray(ys[idx]))
+        params, vel = sgd_momentum(params, vel, grads, lr)
+        if step % log_every == 0 or step == steps - 1:
+            curve.append((step, float(loss)))
+    acc = float(model.accuracy(params, jnp.asarray(ex), jnp.asarray(ey)))
+    return params, curve, acc, (ex, ey)
+
+
+# ---------------------------------------------------------------- .mecw --
+
+_TAG_CONV, _TAG_RELU, _TAG_MAXPOOL, _TAG_FLATTEN, _TAG_DENSE, _TAG_SOFTMAX = range(6)
+
+
+def _w32(f, v):
+    f.write(struct.pack("<I", v))
+
+
+def _wf32s(f, arr):
+    f.write(np.asarray(arr, dtype="<f4").tobytes())
+
+
+def save_mecw(path, params, name="shapes-cnn"):
+    """Mirror of rust ``model::loader`` (see its format doc)."""
+    h, w, c = model.INPUT_HWC
+    with open(path, "wb") as f:
+        f.write(b"MECW0001")
+        nb = name.encode()
+        _w32(f, len(nb))
+        f.write(nb)
+        for v in (h, w, c):
+            _w32(f, v)
+        # conv1,relu,pool, conv2,relu,pool, flatten, dense, softmax
+        layers = 3 * len(model.CONV_SPECS) + 3
+        _w32(f, layers)
+        for cname, kh, kw, ic, kc, s, p in model.CONV_SPECS:
+            _w32(f, _TAG_CONV)
+            for v in (kh, kw, ic, kc, s, s, p, p):
+                _w32(f, v)
+            _wf32s(f, params[cname]["w"])  # (kh,kw,ic,kc) row-major = loader layout
+            _wf32s(f, params[cname]["b"])
+            _w32(f, _TAG_RELU)
+            _w32(f, _TAG_MAXPOOL)
+            _w32(f, 2)
+            _w32(f, 2)
+        _w32(f, _TAG_FLATTEN)
+        _w32(f, _TAG_DENSE)
+        _w32(f, model.DENSE_IN)
+        _w32(f, model.NUM_CLASSES)
+        _wf32s(f, params["dense"]["w"])
+        _wf32s(f, params["dense"]["b"])
+        _w32(f, _TAG_SOFTMAX)
+
+
+def save_params_npz(path, params):
+    flat = {}
+    for k, v in params.items():
+        for kk, vv in v.items():
+            flat[f"{k}/{kk}"] = np.asarray(vv)
+    np.savez(path, **flat)
+
+
+def load_params_npz(path):
+    flat = np.load(path)
+    params = {}
+    for key in flat.files:
+        k, kk = key.split("/")
+        params.setdefault(k, {})[kk] = jnp.asarray(flat[key])
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=int(os.environ.get("MEC_TRAIN_STEPS", 400)))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    t0 = time.time()
+    params, curve, acc, (ex, ey) = train(steps=args.steps)
+    dt = time.time() - t0
+    print(f"trained {args.steps} steps in {dt:.1f}s; eval accuracy {acc:.3f}")
+    assert acc > 0.85, f"training failed to converge (acc={acc})"
+
+    save_mecw(os.path.join(args.out, "model.mecw"), params)
+    save_params_npz(os.path.join(args.out, "params.npz"), params)
+    data.save_eval_bin(os.path.join(args.out, "eval.bin"), ex[:256], ey[:256])
+    with open(os.path.join(args.out, "loss_curve.txt"), "w") as f:
+        f.write("# step loss (shapes-cnn, synthetic 3-class, SGD+momentum)\n")
+        for step, loss in curve:
+            f.write(f"{step} {loss:.5f}\n")
+        f.write(f"# eval_accuracy {acc:.4f}\n")
+    print(f"wrote model.mecw / params.npz / eval.bin / loss_curve.txt to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

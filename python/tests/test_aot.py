@@ -1,0 +1,90 @@
+"""AOT pipeline: HLO text generation, manifest format, mecw writer."""
+
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model, trainer
+
+
+def test_conv_artifact_lowers_to_hlo_text():
+    text, ins, out = aot.lower_conv(8, 8, 2, 3, 3, 4, 1)
+    assert text.startswith("HloModule")
+    # The pallas grid lowers to a while loop + dynamic slices in HLO.
+    assert "dynamic-slice" in text or "while" in text
+    assert ins[0] == (1, 8, 8, 2)
+    assert out == (1, 6, 6, 4)
+
+
+def test_model_fwd_lowers_with_pallas_path():
+    params = model.init_params(jax.random.PRNGKey(0))
+    text, ishapes, oshape = aot.lower_model_fwd(params, batch=2)
+    assert text.startswith("HloModule")
+    assert ishapes[0] == (2, 28, 28, 1)
+    # Weights are parameters (the 0.5.1 constant-parsing workaround):
+    # per conv (w, b) + dense (w, b).
+    assert len(ishapes) == 1 + 2 * len(model.CONV_SPECS) + 2
+    assert oshape == (2, model.NUM_CLASSES)
+    # No multi-dim f32 weight constants may remain in the entry graph.
+    assert text.count("parameter(") >= len(ishapes)
+
+
+def test_weight_order_matches_conv_specs():
+    order = aot.weight_order()
+    assert order[0][:2] == ("conv1", "w")
+    assert order[1][:2] == ("conv1", "b")
+    assert order[-2][:2] == ("dense", "w")
+    assert order[-1][:2] == ("dense", "b")
+
+
+def test_manifest_shape_formatting():
+    assert aot.fmt_shape((1, 2, 3)) == "1,2,3"
+
+
+def test_mecw_writer_matches_rust_layout(tmp_path):
+    """Byte-level spot check of the header the rust loader parses."""
+    params = model.init_params(jax.random.PRNGKey(3))
+    p = tmp_path / "m.mecw"
+    trainer.save_mecw(p, params, name="abc")
+    raw = p.read_bytes()
+    assert raw[:8] == b"MECW0001"
+    (name_len,) = struct.unpack_from("<I", raw, 8)
+    assert name_len == 3
+    assert raw[12:15] == b"abc"
+    h, w, c, layers = struct.unpack_from("<IIII", raw, 15)
+    assert (h, w, c) == model.INPUT_HWC
+    assert layers == 3 * len(model.CONV_SPECS) + 3
+    # First layer tag must be conv (0) with kh=kw=3.
+    tag, kh, kw = struct.unpack_from("<III", raw, 31)
+    assert (tag, kh, kw) == (0, 3, 3)
+
+
+def test_params_npz_roundtrip(tmp_path):
+    params = model.init_params(jax.random.PRNGKey(4))
+    p = tmp_path / "p.npz"
+    trainer.save_params_npz(p, params)
+    loaded = trainer.load_params_npz(p)
+    for lname, sub in params.items():
+        for k, v in sub.items():
+            np.testing.assert_allclose(
+                np.asarray(loaded[lname][k]), np.asarray(v), rtol=1e-6
+            )
+
+
+def test_lowered_conv_numerics_roundtrip():
+    """Execute the lowered-for-AOT function in-process and compare to the
+    oracle — guards against lowering changing semantics."""
+    from compile.kernels import mec, ref
+
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 8, 8, 2), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(6), (3, 3, 2, 4), jnp.float32)
+    jitted = jax.jit(lambda a, b: mec.mec_conv(a, b, (1, 1)))
+    np.testing.assert_allclose(
+        np.asarray(jitted(x, k)),
+        np.asarray(ref.conv2d_ref(x, k, (1, 1))),
+        rtol=2e-4,
+        atol=1e-4,
+    )

@@ -1,0 +1,146 @@
+"""L1 correctness: the Pallas MEC kernels vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compile path: if these pass,
+the HLO the rust runtime serves computes the paper's convolution.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import im2col, mec, ref
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ------------------------------------------------------------ lowering --
+
+
+def test_lower_matches_fig2_shape():
+    # Paper Fig. 2: 7x7 input, kw=3, sw=1 -> L is (1, 5, 7, 3, 1): 5x21.
+    x = jnp.arange(49, dtype=jnp.float32).reshape(1, 7, 7, 1)
+    l = mec.mec_lower(x, kw=3, sw=1)
+    assert l.shape == (1, 5, 7, 3, 1)
+    # Partition A = I[0:7, 0:3] (paper's first shaded strip).
+    np.testing.assert_array_equal(
+        np.asarray(l[0, 0, :, :, 0]), np.asarray(x[0, :, 0:3, 0])
+    )
+    # Partition B = I[0:7, 1:4].
+    np.testing.assert_array_equal(
+        np.asarray(l[0, 1, :, :, 0]), np.asarray(x[0, :, 1:4, 0])
+    )
+
+
+def test_lower_matches_reference():
+    x = rand(0, (2, 9, 11, 3))
+    for kw, sw in [(3, 1), (3, 2), (5, 3), (1, 1)]:
+        got = mec.mec_lower(x, kw=kw, sw=sw)
+        want = ref.mec_lower_ref(x, kw=kw, sw=sw)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_eq3_memory_accounting():
+    # Fig. 2 numbers: MEC L = 105 elems vs im2col 225.
+    assert mec.mec_lowered_elems((1, 7, 7, 1), (3, 3, 1, 1)) == 105
+    assert mec.im2col_lowered_elems((1, 7, 7, 1), (3, 3, 1, 1)) == 225
+
+
+# ---------------------------------------------------------- full conv --
+
+
+@pytest.mark.parametrize(
+    "n,ih,iw,ic,kh,kw,kc,sh,sw",
+    [
+        (1, 7, 7, 1, 3, 3, 1, 1, 1),      # paper Fig. 1/2 geometry
+        (2, 9, 8, 3, 3, 2, 4, 2, 1),
+        (1, 12, 10, 2, 5, 5, 3, 2, 2),
+        (3, 6, 6, 4, 1, 1, 8, 1, 1),      # 1x1 conv
+        (1, 11, 5, 2, 4, 3, 2, 3, 2),     # k < s in one dim
+        (1, 12, 12, 8, 3, 3, 16, 1, 1),   # cv6-like (scaled)
+    ],
+)
+def test_mec_conv_matches_lax(n, ih, iw, ic, kh, kw, kc, sh, sw):
+    x = rand(n * 100 + ih, (n, ih, iw, ic))
+    k = rand(kh * 10 + kw, (kh, kw, ic, kc))
+    want = ref.conv2d_ref(x, k, (sh, sw))
+    got = mec.mec_conv(x, k, (sh, sw))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-4)
+
+
+def test_im2col_conv_matches_lax():
+    x = rand(5, (2, 8, 9, 3))
+    k = rand(6, (3, 3, 3, 4))
+    want = ref.conv2d_ref(x, k, (2, 1))
+    got = im2col.im2col_conv(x, k, (2, 1))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-4)
+
+
+def test_mec_conv_ref_algebra():
+    # The jnp restatement of Algorithm 2 (no pallas) is also exact.
+    x = rand(7, (2, 10, 7, 2))
+    k = rand(8, (3, 3, 2, 5))
+    want = ref.conv2d_ref(x, k, (1, 2))
+    got = ref.mec_conv_ref(x, k, (1, 2))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-4)
+
+
+# -------------------------------------------------------- hypothesis --
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 2),
+    ih=st.integers(4, 10),
+    iw=st.integers(4, 10),
+    ic=st.integers(1, 3),
+    kh=st.integers(1, 3),
+    kw=st.integers(1, 3),
+    kc=st.integers(1, 4),
+    sh=st.integers(1, 2),
+    sw=st.integers(1, 2),
+    seed=st.integers(0, 2**16),
+)
+def test_mec_conv_property(n, ih, iw, ic, kh, kw, kc, sh, sw, seed):
+    """MEC == lax.conv for every geometry where the output is non-empty."""
+    if ih < kh or iw < kw:
+        return
+    x = rand(seed, (n, ih, iw, ic))
+    k = rand(seed + 1, (kh, kw, ic, kc))
+    want = ref.conv2d_ref(x, k, (sh, sw))
+    got = mec.mec_conv(x, k, (sh, sw))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    iw=st.integers(4, 12),
+    kw=st.integers(1, 4),
+    sw=st.integers(1, 3),
+    seed=st.integers(0, 2**16),
+)
+def test_lower_property(iw, kw, sw, seed):
+    """Every lowered strip equals the corresponding input slice."""
+    if iw < kw:
+        return
+    x = rand(seed, (1, 5, iw, 2))
+    l = np.asarray(mec.mec_lower(x, kw=kw, sw=sw))
+    xn = np.asarray(x)
+    ow = (iw - kw) // sw + 1
+    assert l.shape == (1, ow, 5, kw, 2)
+    for w in range(ow):
+        np.testing.assert_array_equal(l[0, w], xn[0, :, sw * w : sw * w + kw, :])
+
+
+def test_dtype_bfloat16_close():
+    """The kernel also lowers in bf16 (TPU-native dtype) within bf16 tol."""
+    x = rand(1, (1, 8, 8, 2)).astype(jnp.bfloat16)
+    k = rand(2, (3, 3, 2, 4)).astype(jnp.bfloat16)
+    got = mec.mec_conv(x, k, (1, 1)).astype(jnp.float32)
+    want = ref.conv2d_ref(
+        x.astype(jnp.float32), k.astype(jnp.float32), (1, 1)
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0.1, atol=0.15)

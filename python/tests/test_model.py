@@ -1,0 +1,60 @@
+"""L2 correctness: model shapes, pallas-vs-reference forward equality."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data, model
+
+
+def test_forward_shapes():
+    params = model.init_params(jax.random.PRNGKey(0))
+    x = jnp.zeros((4, 28, 28, 1), jnp.float32)
+    logits = model.forward(params, x)
+    assert logits.shape == (4, 3)
+    probs = model.predict_proba(params, x)
+    np.testing.assert_allclose(np.asarray(probs).sum(axis=1), 1.0, rtol=1e-5)
+
+
+def test_pallas_and_reference_paths_agree():
+    """The artifact we serve (pallas path) must equal the training path."""
+    params = model.init_params(jax.random.PRNGKey(1))
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 28, 28, 1), jnp.float32)
+    ref_logits = model.forward(params, x, use_pallas=False)
+    pallas_logits = model.forward(params, x, use_pallas=True)
+    np.testing.assert_allclose(
+        np.asarray(pallas_logits), np.asarray(ref_logits), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_loss_decreases_on_tiny_run():
+    from compile import trainer
+
+    _, curve, _, _ = trainer.train(steps=60, batch=32, log_every=10)
+    assert curve[0][1] > curve[-1][1], f"loss did not decrease: {curve}"
+
+
+def test_dataset_is_deterministic_and_balancedish():
+    x1, y1 = data.make_dataset(128, seed=5)
+    x2, y2 = data.make_dataset(128, seed=5)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    assert x1.shape == (128, 28, 28, 1)
+    counts = np.bincount(y1, minlength=3)
+    assert (counts > 20).all(), counts
+
+
+def test_eval_bin_format(tmp_path):
+    xs, ys = data.make_dataset(10, seed=1)
+    p = tmp_path / "eval.bin"
+    data.save_eval_bin(p, xs, ys)
+    raw = p.read_bytes()
+    n, h, w, c = np.frombuffer(raw[:16], "<u4")
+    assert (n, h, w, c) == (10, 28, 28, 1)
+    rec = h * w * c * 4 + 4
+    assert len(raw) == 16 + n * rec
+    # First sample pixels + label round-trip.
+    px = np.frombuffer(raw[16 : 16 + h * w * c * 4], "<f4").reshape(h, w, c)
+    np.testing.assert_allclose(px, xs[0], rtol=1e-6)
+    label = np.frombuffer(raw[16 + h * w * c * 4 : 16 + rec], "<u4")[0]
+    assert label == ys[0]

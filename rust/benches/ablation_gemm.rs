@@ -1,0 +1,64 @@
+//! Ablation: GEMM cache-blocking parameters on MEC's hot shapes.
+//!
+//! MEC funnels its FLOPs through many (m = i_n·o_w) × (k_h·k_w·i_c) ×
+//! k_c gemms; this sweeps MC/KC/NC on cv6 and cv4 geometry to justify
+//! the defaults (DESIGN.md §9).
+
+use mec::bench::harness::{bench_fn, bench_scale, print_table, BenchOpts};
+use mec::bench::workload::by_name;
+use mec::conv::{AlgoKind, ConvContext};
+use mec::gemm::BlockSizes;
+use mec::memory::Workspace;
+use mec::tensor::{Kernel, Tensor};
+use mec::util::Rng;
+
+fn main() {
+    let scale = bench_scale().max(2);
+    let opts = BenchOpts::default();
+    let mut rng = Rng::new(9);
+    let candidates = [
+        BlockSizes { mc: 32, kc: 64, nc: 128 },
+        BlockSizes { mc: 64, kc: 128, nc: 256 },
+        BlockSizes { mc: 128, kc: 256, nc: 512 }, // default
+        BlockSizes { mc: 256, kc: 256, nc: 512 },
+        BlockSizes { mc: 128, kc: 512, nc: 256 },
+        BlockSizes { mc: 64, kc: 256, nc: 1024 },
+    ];
+    let mut rows = Vec::new();
+    for name in ["cv6", "cv4", "cv11"] {
+        let shape = by_name(name).unwrap().shape(1, scale);
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let mut out = Tensor::zeros(shape.output());
+        let mut cells = vec![name.to_string()];
+        let mut best = (f64::INFINITY, 0usize);
+        for (i, bs) in candidates.iter().enumerate() {
+            let mut ctx = ConvContext::mobile();
+            ctx.blocks = *bs;
+            let algo = AlgoKind::Mec.build();
+            let mut ws = Workspace::new();
+            let r = bench_fn(&format!("{name}-bs{i}"), &opts, || {
+                algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
+            });
+            if r.median_ns() < best.0 {
+                best = (r.median_ns(), i);
+            }
+            cells.push(format!("{:.1}", r.median_ms()));
+        }
+        cells.push(format!(
+            "mc{}/kc{}/nc{}",
+            candidates[best.1].mc, candidates[best.1].kc, candidates[best.1].nc
+        ));
+        rows.push(cells);
+    }
+    let header: Vec<String> = std::iter::once("layer".into())
+        .chain(
+            candidates
+                .iter()
+                .map(|b| format!("{}·{}·{}", b.mc, b.kc, b.nc)),
+        )
+        .chain(std::iter::once("best".into()))
+        .collect();
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    print_table("Ablation — MEC runtime (ms) vs GEMM blocking (MC·KC·NC)", &header_refs, &rows);
+}

@@ -1,0 +1,53 @@
+//! Ablation: MEC Solution A vs Solution B vs the Algorithm-2 line-8
+//! auto dispatch, across cv1–cv12 and batch sizes 1/8 — the design
+//! choice §3.3 of the paper discusses (format handling + gemm-size
+//! trade-off).
+
+use mec::bench::harness::{bench_fn, bench_scale, print_table, BenchOpts};
+use mec::bench::workload::suite;
+use mec::conv::mec::{Mec, Solution};
+use mec::conv::{AlgoKind, ConvContext};
+use mec::memory::Workspace;
+use mec::tensor::{Kernel, Tensor};
+use mec::util::Rng;
+
+fn main() {
+    let scale = bench_scale().max(2);
+    let ctx = ConvContext::mobile();
+    let opts = BenchOpts::default();
+    let mut rng = Rng::new(7);
+    for batch in [1usize, 8] {
+        let mut rows = Vec::new();
+        for w in suite() {
+            let shape = w.shape(batch, scale);
+            let input = Tensor::random(shape.input, &mut rng);
+            let kernel = Kernel::random(shape.kernel, &mut rng);
+            let mut out = Tensor::zeros(shape.output());
+            let mut cells = vec![w.name.to_string()];
+            for kind in [AlgoKind::MecSolutionA, AlgoKind::MecSolutionB, AlgoKind::Mec] {
+                let algo = kind.build();
+                let mut ws = Workspace::new();
+                let r = bench_fn(&format!("b{batch}-{}-{}", w.name, algo.name()), &opts, || {
+                    algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
+                });
+                cells.push(format!("{:.1}", r.median_ms()));
+            }
+            let resolved = Mec::auto().resolve(&ctx, &shape);
+            cells.push(
+                match resolved {
+                    Solution::A => "A",
+                    Solution::B => "B",
+                    Solution::Auto => "?",
+                }
+                .to_string(),
+            );
+            rows.push(cells);
+        }
+        print_table(
+            &format!("Ablation — MEC Solution A vs B vs auto (ms), batch={batch}"),
+            &["layer", "A", "B", "auto", "auto chose"],
+            &rows,
+        );
+    }
+    println!("\npaper §3.3: A amortizes gemm-call overhead into o_h big calls but pays a\nrepack; B has i_n·o_h small calls in native layout. T dispatch should track the winner.");
+}

@@ -1,0 +1,55 @@
+//! Ablation: the dispatch threshold `T` (Algorithm 2 line 8).
+//!
+//! The paper tuned T ≈ 100 for GPUs. This sweep measures the auto
+//! dispatcher at several T values on layers whose o_w straddles the
+//! threshold, re-deriving the right T for this host.
+
+use mec::bench::harness::{bench_fn, bench_scale, print_table, BenchOpts};
+use mec::bench::workload::suite;
+use mec::conv::mec::{Mec, Solution};
+use mec::conv::{AlgoKind, ConvContext};
+use mec::memory::Workspace;
+use mec::tensor::{Kernel, Tensor};
+use mec::util::Rng;
+
+fn main() {
+    let scale = bench_scale().max(2);
+    let opts = BenchOpts::default();
+    let mut rng = Rng::new(8);
+    let t_values = [1usize, 8, 25, 50, 100, 256];
+    let mut rows = Vec::new();
+    // Layers with small and large o_w to straddle the threshold.
+    for name in ["cv5", "cv6", "cv9", "cv7", "cv12"] {
+        let w = suite().into_iter().find(|w| w.name == name).unwrap();
+        let shape = w.shape(4, scale);
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let mut out = Tensor::zeros(shape.output());
+        let mut cells = vec![format!("{name} (ow={})", shape.ow())];
+        for &t in &t_values {
+            let ctx = ConvContext::mobile().with_mec_t(t);
+            let algo = AlgoKind::Mec.build();
+            let mut ws = Workspace::new();
+            let r = bench_fn(&format!("{name}-T{t}"), &opts, || {
+                algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
+            });
+            let sol = match Mec::auto().resolve(&ctx, &shape) {
+                Solution::A => "A",
+                Solution::B => "B",
+                Solution::Auto => "?",
+            };
+            cells.push(format!("{:.1}{}", r.median_ms(), sol));
+        }
+        rows.push(cells);
+    }
+    let header: Vec<String> = std::iter::once("layer".to_string())
+        .chain(t_values.iter().map(|t| format!("T={t}")))
+        .collect();
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    print_table(
+        "Ablation — MEC auto dispatch vs threshold T (ms, suffix = solution chosen)",
+        &header_refs,
+        &rows,
+    );
+    println!("\npaper found T≈100 good for GPUs; the crossover here tells this host's T.");
+}

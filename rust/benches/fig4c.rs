@@ -1,0 +1,67 @@
+//! Figure 4(c): runtime on Mobile (1 thread, batch 1) across cv1–cv12
+//! for Conv.cpu, Wino.cpu (3×3 layers), and MEC.cpu.
+//!
+//! Paper's claims: MEC.cpu ~20% faster than Conv.cpu overall, up to
+//! ~90% on cv6; faster than Wino.cpu on 5 of the 7 3×3 layers.
+//! `MEC_BENCH_SCALE` shrinks channels for quick runs (default: paper
+//! scale — the big early layers take a few hundred ms each on 1 thread).
+
+use mec::bench::harness::{bench_fn, bench_scale, print_table, BenchOpts};
+use mec::bench::workload::suite;
+use mec::conv::{AlgoKind, ConvContext};
+use mec::memory::Workspace;
+use mec::tensor::{Kernel, Tensor};
+use mec::util::Rng;
+
+fn main() {
+    let scale = bench_scale();
+    let ctx = ConvContext::mobile();
+    let opts = BenchOpts::default();
+    let mut rng = Rng::new(43);
+    let mut rows = Vec::new();
+    let mut sums = [0.0f64; 3];
+    println!("Figure 4(c) reproduction: Mobile (1 thread, batch 1), scale={scale}");
+    for w in suite() {
+        let shape = w.shape(1, scale);
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let mut out = Tensor::zeros(shape.output());
+        let mut cells = vec![w.name.to_string()];
+        let mut layer_ms = [f64::NAN; 3];
+        for (i, kind) in [AlgoKind::Im2col, AlgoKind::WinogradChunked, AlgoKind::Mec]
+            .iter()
+            .enumerate()
+        {
+            let algo = kind.build();
+            if !algo.supports(&shape) {
+                cells.push("-".into());
+                continue;
+            }
+            let mut ws = Workspace::new();
+            let r = bench_fn(&format!("{}-{}", w.name, algo.name()), &opts, || {
+                algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
+            });
+            layer_ms[i] = r.median_ms();
+            sums[i] += r.median_ms();
+            cells.push(format!("{:.1}", r.median_ms()));
+        }
+        cells.push(if layer_ms[2].is_finite() && layer_ms[0].is_finite() {
+            format!("{:.2}x", layer_ms[0] / layer_ms[2])
+        } else {
+            "-".into()
+        });
+        rows.push(cells);
+    }
+    print_table(
+        "Fig 4c — runtime (ms), Mobile",
+        &["layer", "Conv.cpu", "Wino.cpu", "MEC.cpu", "conv/mec"],
+        &rows,
+    );
+    println!(
+        "\ntotals: Conv.cpu {:.0} ms | Wino.cpu {:.0} ms (3x3 only) | MEC.cpu {:.0} ms  => overall MEC speedup {:.2}x (paper: ~1.2x)",
+        sums[0],
+        sums[1],
+        sums[2],
+        sums[0] / sums[2]
+    );
+}

@@ -1,0 +1,74 @@
+//! Figure 4(d): runtime on Server-CPU (all cores, mini-batch 32) across
+//! cv1–cv12 for Conv.cpu, Wino.cpu, and MEC.cpu.
+//!
+//! Paper's claim: MEC.cpu ~8.8× faster than Conv.cpu overall (their
+//! many-core Xeon punished im2col's footprint; on this host the *sign*
+//! — MEC ≥ Conv — is the reproduction target). Default batch is scaled
+//! to 8 (32 × cv4's im2col workspace is 4.8 GB and dominates wall time
+//! on 1 core); set MEC_BENCH_BATCH=32 for the paper's batch.
+
+use mec::bench::harness::{bench_fn, bench_scale, print_table, BenchOpts};
+use mec::bench::workload::suite;
+use mec::conv::{AlgoKind, ConvContext};
+use mec::memory::Workspace;
+use mec::tensor::{Kernel, Tensor};
+use mec::util::Rng;
+
+fn main() {
+    let scale = bench_scale().max(2); // server sweep default: /2 channels
+    let batch: usize = std::env::var("MEC_BENCH_BATCH")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    let ctx = ConvContext::server();
+    let opts = BenchOpts::default();
+    let mut rng = Rng::new(44);
+    let mut rows = Vec::new();
+    let mut sums = [0.0f64; 3];
+    println!(
+        "Figure 4(d) reproduction: Server-CPU ({} threads), batch={batch}, scale={scale}",
+        ctx.threads
+    );
+    for w in suite() {
+        let shape = w.shape(batch, scale);
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let mut out = Tensor::zeros(shape.output());
+        let mut cells = vec![w.name.to_string()];
+        let mut layer_ms = [f64::NAN; 3];
+        for (i, kind) in [AlgoKind::Im2col, AlgoKind::Winograd, AlgoKind::Mec]
+            .iter()
+            .enumerate()
+        {
+            let algo = kind.build();
+            if !algo.supports(&shape) {
+                cells.push("-".into());
+                continue;
+            }
+            let mut ws = Workspace::new();
+            let r = bench_fn(&format!("{}-{}", w.name, algo.name()), &opts, || {
+                algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
+            });
+            layer_ms[i] = r.median_ms();
+            sums[i] += r.median_ms();
+            cells.push(format!("{:.1}", r.median_ms()));
+        }
+        cells.push(if layer_ms[2].is_finite() && layer_ms[0].is_finite() {
+            format!("{:.2}x", layer_ms[0] / layer_ms[2])
+        } else {
+            "-".into()
+        });
+        rows.push(cells);
+    }
+    print_table(
+        "Fig 4d — runtime (ms), Server-CPU",
+        &["layer", "Conv.cpu", "Wino.cpu", "MEC.cpu", "conv/mec"],
+        &rows,
+    );
+    println!(
+        "\ntotals: Conv.cpu {:.0} ms | MEC.cpu {:.0} ms => overall speedup {:.2}x (paper: 8.8x on 2-socket Xeon; expect smaller on this host)",
+        sums[0],
+        sums[2],
+        sums[0] / sums[2]
+    );
+}

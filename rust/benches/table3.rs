@@ -1,0 +1,82 @@
+//! Table 3: ResNet-101 on Mobile — weighted memory-overhead and runtime
+//! for Conv.cpu vs MEC.cpu over the five layer shapes the paper weights
+//! {cv4:1, cv9:3, cv10:4, cv11:23, cv12:3}.
+//!
+//! Paper: Conv.cpu 203.6 MB / 1701.6 ms; MEC.cpu 64.6 MB / 1391.6 ms;
+//! ratios 3.2× memory and 1.2× runtime. Memory is exact here; runtime
+//! ratio is the shape target (ARM7 vs this host).
+
+use mec::bench::harness::{bench_fn, bench_scale, print_table, BenchOpts};
+use mec::bench::workload::resnet101_table3;
+use mec::conv::{AlgoKind, ConvContext};
+use mec::memory::Workspace;
+use mec::tensor::{Kernel, Tensor};
+use mec::util::Rng;
+
+fn main() {
+    let scale = bench_scale();
+    let ctx = ConvContext::mobile();
+    let opts = BenchOpts::default();
+    let mut rng = Rng::new(101);
+    let mut rows = Vec::new();
+    let mut tot = [0.0f64; 4]; // conv_mb, conv_ms, mec_mb, mec_ms
+    println!("Table 3 reproduction: ResNet-101 weighted conv layers, Mobile, scale={scale}");
+    for (w, weight) in resnet101_table3() {
+        let shape = w.shape(1, scale);
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let mut out = Tensor::zeros(shape.output());
+        let mut vals = [0.0f64; 4];
+        for (i, kind) in [AlgoKind::Im2col, AlgoKind::Mec].iter().enumerate() {
+            let algo = kind.build();
+            let mut ws = Workspace::new();
+            let r = bench_fn(&format!("{}-{}", w.name, algo.name()), &opts, || {
+                algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
+            });
+            vals[i * 2] = algo.workspace_bytes(&shape) as f64 / 1e6;
+            vals[i * 2 + 1] = r.median_ms();
+        }
+        rows.push(vec![
+            w.name.to_string(),
+            weight.to_string(),
+            format!("{:.1}", vals[0]),
+            format!("{:.1}", vals[1]),
+            format!("{:.1}", vals[2]),
+            format!("{:.1}", vals[3]),
+        ]);
+        for i in 0..4 {
+            tot[i] += weight as f64 * vals[i];
+        }
+    }
+    rows.push(vec![
+        "SUM".into(),
+        "".into(),
+        format!("{:.1}", tot[0]),
+        format!("{:.1}", tot[1]),
+        format!("{:.1}", tot[2]),
+        format!("{:.1}", tot[3]),
+    ]);
+    rows.push(vec![
+        "RATIO".into(),
+        "".into(),
+        format!("{:.2}", tot[0] / tot[2]),
+        format!("{:.2}", tot[1] / tot[3]),
+        "1.0".into(),
+        "1.0".into(),
+    ]);
+    print_table(
+        "Table 3 — ResNet-101 on Mobile: Conv.cpu vs MEC.cpu (weighted)",
+        &["layer", "weight", "conv MB", "conv ms", "MEC MB", "MEC ms"],
+        &rows,
+    );
+    println!(
+        "\npaper: MEM ratio 3.2 (203.6/64.6 MB), RUNTIME ratio 1.2 (1701.6/1391.6 ms)\n\
+         ours : MEM ratio {:.2} ({:.1}/{:.1} MB), RUNTIME ratio {:.2} ({:.0}/{:.0} ms)",
+        tot[0] / tot[2],
+        tot[0],
+        tot[2],
+        tot[1] / tot[3],
+        tot[1],
+        tot[3]
+    );
+}

@@ -1,0 +1,171 @@
+//! Timing harness (criterion replacement).
+//!
+//! Adaptive: measures once, picks a repetition count targeting
+//! `target_time`, reports median/MAD over the reps. Honors two env vars
+//! so `cargo bench` stays usable on slow hosts:
+//! * `MEC_BENCH_SCALE`  — channel divisor for the paper workloads (default 1)
+//! * `MEC_BENCH_FAST`   — if set, caps reps at 3 and target time at 200 ms
+
+use crate::util::stats::{fmt_ns, Summary};
+use std::time::{Duration, Instant};
+
+/// Harness options.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub warmup: usize,
+    pub min_reps: usize,
+    pub max_reps: usize,
+    pub target_time: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        if std::env::var_os("MEC_BENCH_FAST").is_some() {
+            BenchOpts {
+                warmup: 1,
+                min_reps: 2,
+                max_reps: 3,
+                target_time: Duration::from_millis(200),
+            }
+        } else {
+            BenchOpts {
+                warmup: 1,
+                min_reps: 3,
+                max_reps: 10,
+                target_time: Duration::from_secs(1),
+            }
+        }
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn median_ns(&self) -> f64 {
+        self.summary.median
+    }
+
+    pub fn median_ms(&self) -> f64 {
+        self.summary.median / 1e6
+    }
+
+    pub fn display(&self) -> String {
+        format!(
+            "{:<24} {:>12} ± {:<10} (n={})",
+            self.name,
+            fmt_ns(self.summary.median),
+            fmt_ns(self.summary.mad),
+            self.summary.n
+        )
+    }
+}
+
+/// Time `f` adaptively. The closure should perform one full operation.
+pub fn bench_fn(name: &str, opts: &BenchOpts, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..opts.warmup {
+        f();
+    }
+    // Pilot run to size the repetition count.
+    let t0 = Instant::now();
+    f();
+    let pilot = t0.elapsed().as_nanos().max(1) as f64;
+    let want = (opts.target_time.as_nanos() as f64 / pilot).ceil() as usize;
+    let reps = want.clamp(opts.min_reps, opts.max_reps);
+    let mut samples = Vec::with_capacity(reps + 1);
+    samples.push(pilot);
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        summary: Summary::from(&samples),
+    }
+}
+
+/// The env-var workload scale (`MEC_BENCH_SCALE`, default 1 = paper-exact).
+pub fn bench_scale() -> usize {
+    std::env::var("MEC_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+}
+
+/// Print a report table header + rows, paper-figure style.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!(
+        "{}",
+        fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    );
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_counts_reps() {
+        let mut calls = 0usize;
+        let opts = BenchOpts {
+            warmup: 1,
+            min_reps: 2,
+            max_reps: 4,
+            target_time: Duration::from_millis(1),
+        };
+        let r = bench_fn("noop", &opts, || {
+            calls += 1;
+        });
+        // warmup(1) + pilot(1) + reps(2..=4)
+        assert!(calls >= 4 && calls <= 6, "calls={calls}");
+        assert!(r.summary.median >= 0.0);
+        assert!(r.display().contains("noop"));
+    }
+
+    #[test]
+    fn bench_measures_sleep_duration() {
+        let opts = BenchOpts {
+            warmup: 0,
+            min_reps: 2,
+            max_reps: 2,
+            target_time: Duration::from_millis(1),
+        };
+        let r = bench_fn("sleep", &opts, || {
+            std::thread::sleep(Duration::from_millis(5));
+        });
+        assert!(r.median_ms() >= 4.0, "median={}ms", r.median_ms());
+    }
+
+    #[test]
+    fn scale_default_is_one() {
+        // (env not set in tests)
+        if std::env::var_os("MEC_BENCH_SCALE").is_none() {
+            assert_eq!(bench_scale(), 1);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Benchmark support: the paper's workload tables, a timing harness
+//! (criterion is unavailable offline), and paper-style report printing.
+//! One binary per paper artifact lives in `rust/benches/`.
+
+pub mod harness;
+pub mod workload;
+
+pub use harness::{bench_fn, BenchOpts, BenchResult};
+pub use workload::{resnet101_table3, suite, Platform, Workload};

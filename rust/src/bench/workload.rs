@@ -1,0 +1,175 @@
+//! The paper's benchmark workloads.
+//!
+//! * [`suite`] — Table 2: cv1–cv12, twelve convolution layers drawn from
+//!   AlexNet/OverFeat/VGG/GoogLeNet/ResNet.
+//! * [`resnet101_table3`] — Table 3's weighted layer inventory for the
+//!   ResNet-101 mobile experiment.
+//!
+//! `scale` lets the harness shrink channel counts uniformly when a quick
+//! run is wanted (`MEC_BENCH_SCALE`); shapes stay faithful at scale=1.
+
+use crate::tensor::{ConvShape, KernelShape, Nhwc};
+
+/// One named benchmark layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Workload {
+    pub name: &'static str,
+    pub ih: usize,
+    pub iw: usize,
+    pub ic: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub kc: usize,
+    pub s: usize,
+}
+
+impl Workload {
+    /// ConvShape for a batch size, with channels divided by `scale`
+    /// (floored at 1). scale=1 reproduces the paper exactly.
+    pub fn shape(&self, batch: usize, scale: usize) -> ConvShape {
+        let sc = scale.max(1);
+        let ic = (self.ic / sc).max(1);
+        let kc = (self.kc / sc).max(1);
+        ConvShape::new(
+            Nhwc::new(batch.max(1), self.ih, self.iw, ic),
+            KernelShape::new(self.kh, self.kw, ic, kc),
+            self.s,
+            self.s,
+        )
+    }
+
+    /// k/s ratio — the quantity Eq. (4) says drives MEC's advantage.
+    pub fn k_over_s(&self) -> f64 {
+        self.kh as f64 / self.s as f64
+    }
+}
+
+/// Paper Table 2: cv1–cv12.
+pub fn suite() -> Vec<Workload> {
+    vec![
+        Workload { name: "cv1", ih: 227, iw: 227, ic: 3, kh: 11, kw: 11, kc: 96, s: 4 },
+        Workload { name: "cv2", ih: 231, iw: 231, ic: 3, kh: 11, kw: 11, kc: 96, s: 4 },
+        Workload { name: "cv3", ih: 227, iw: 227, ic: 3, kh: 7, kw: 7, kc: 64, s: 2 },
+        Workload { name: "cv4", ih: 224, iw: 224, ic: 64, kh: 7, kw: 7, kc: 64, s: 2 },
+        Workload { name: "cv5", ih: 24, iw: 24, ic: 96, kh: 5, kw: 5, kc: 256, s: 1 },
+        Workload { name: "cv6", ih: 12, iw: 12, ic: 256, kh: 3, kw: 3, kc: 512, s: 1 },
+        Workload { name: "cv7", ih: 224, iw: 224, ic: 3, kh: 3, kw: 3, kc: 64, s: 1 },
+        Workload { name: "cv8", ih: 112, iw: 112, ic: 64, kh: 3, kw: 3, kc: 128, s: 1 },
+        Workload { name: "cv9", ih: 56, iw: 56, ic: 64, kh: 3, kw: 3, kc: 64, s: 1 },
+        Workload { name: "cv10", ih: 28, iw: 28, ic: 128, kh: 3, kw: 3, kc: 128, s: 1 },
+        Workload { name: "cv11", ih: 14, iw: 14, ic: 256, kh: 3, kw: 3, kc: 256, s: 1 },
+        Workload { name: "cv12", ih: 7, iw: 7, ic: 512, kh: 3, kw: 3, kc: 512, s: 1 },
+    ]
+}
+
+/// Look up one workload by name.
+pub fn by_name(name: &str) -> Option<Workload> {
+    suite().into_iter().find(|w| w.name == name)
+}
+
+/// Paper Table 3: ResNet-101 layers with occurrence weights.
+pub fn resnet101_table3() -> Vec<(Workload, usize)> {
+    let get = |n: &str| by_name(n).unwrap();
+    vec![
+        (get("cv4"), 1),
+        (get("cv9"), 3),
+        (get("cv10"), 4),
+        (get("cv11"), 23),
+        (get("cv12"), 3),
+    ]
+}
+
+/// The two platforms of §4, as engine configurations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Platform {
+    /// ARM7 phone: 1 thread, mini-batch 1.
+    Mobile,
+    /// Server CPU: all cores, mini-batch 32.
+    ServerCpu,
+    /// Server GPU simulated by the batched-gemm path (see DESIGN.md §3):
+    /// memory numbers are exact, runtimes are CPU-host stand-ins.
+    ServerGpuSim,
+}
+
+impl Platform {
+    pub fn batch(&self) -> usize {
+        match self {
+            Platform::Mobile => 1,
+            _ => 32,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        match self {
+            Platform::Mobile => 1,
+            _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
+    }
+
+    pub fn ctx(&self) -> crate::conv::ConvContext {
+        crate::conv::ConvContext::default().with_threads(self.threads())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_is_faithful() {
+        let s = suite();
+        assert_eq!(s.len(), 12);
+        // Spot-check against the paper's Table 2.
+        let cv1 = &s[0];
+        assert_eq!((cv1.ih, cv1.iw, cv1.ic), (227, 227, 3));
+        assert_eq!((cv1.kh, cv1.kc, cv1.s), (11, 96, 4));
+        let cv6 = by_name("cv6").unwrap();
+        assert_eq!((cv6.ih, cv6.ic, cv6.kh, cv6.kc, cv6.s), (12, 256, 3, 512, 1));
+        let cv12 = by_name("cv12").unwrap();
+        assert_eq!((cv12.ih, cv12.ic, cv12.kc), (7, 512, 512));
+    }
+
+    #[test]
+    fn shapes_compute_eq1() {
+        // cv1: (227-11)/4+1 = 55.
+        let cv1 = by_name("cv1").unwrap().shape(1, 1);
+        assert_eq!((cv1.oh(), cv1.ow()), (55, 55));
+        // cv4: (224-7)/2+1 = 109 (paper uses it in ResNet table).
+        let cv4 = by_name("cv4").unwrap().shape(1, 1);
+        assert_eq!(cv4.oh(), 109);
+    }
+
+    #[test]
+    fn scaling_shrinks_channels_only() {
+        let full = by_name("cv6").unwrap().shape(1, 1);
+        let s4 = by_name("cv6").unwrap().shape(1, 4);
+        assert_eq!(full.input.h, s4.input.h);
+        assert_eq!(s4.input.c, 64);
+        assert_eq!(s4.kernel.kc, 128);
+    }
+
+    #[test]
+    fn table3_weights_match_paper() {
+        let t = resnet101_table3();
+        let weights: Vec<usize> = t.iter().map(|(_, w)| *w).collect();
+        assert_eq!(weights, vec![1, 3, 4, 23, 3]);
+        assert_eq!(t[0].0.name, "cv4");
+        assert_eq!(t[3].0.name, "cv11");
+    }
+
+    #[test]
+    fn eq2_eq3_on_cv1_mobile() {
+        // Fig 4a anchor: cv1 im2col vs MEC lowered sizes at stride 4.
+        let cv1 = by_name("cv1").unwrap().shape(1, 1);
+        let ratio = cv1.im2col_lowered_elems() as f64 / cv1.mec_lowered_elems() as f64;
+        // k_h/s_h = 11/4 = 2.75 -> ratio should be near (o_h·k_h)/i_h ≈ 2.67.
+        assert!(ratio > 2.0 && ratio < 3.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn platforms() {
+        assert_eq!(Platform::Mobile.batch(), 1);
+        assert_eq!(Platform::Mobile.threads(), 1);
+        assert_eq!(Platform::ServerCpu.batch(), 32);
+    }
+}

@@ -1,0 +1,182 @@
+//! Direct convolution (paper Fig. 1a): the straightforward 7-loop nest.
+//! Zero memory overhead, poor arithmetic intensity — the correctness
+//! oracle every other algorithm is tested against, and the "no overhead"
+//! end of the paper's memory/performance trade-off.
+
+use super::{ConvContext, Convolution};
+use crate::memory::Workspace;
+use crate::tensor::{ConvShape, Kernel, Tensor};
+use crate::threadpool::parallel_for;
+
+pub struct Direct;
+
+impl Convolution for Direct {
+    fn name(&self) -> &'static str {
+        "direct"
+    }
+
+    fn supports(&self, _shape: &ConvShape) -> bool {
+        true
+    }
+
+    fn workspace_elems(&self, _shape: &ConvShape) -> usize {
+        0 // the defining property (paper §3.1)
+    }
+
+    fn run(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        input: &Tensor,
+        kernel: &Kernel,
+        _ws: &mut Workspace,
+        output: &mut Tensor,
+    ) {
+        let s = *shape;
+        let (oh, ow) = (s.oh(), s.ow());
+        let out_shape = s.output();
+        assert_eq!(output.shape(), out_shape);
+        assert_eq!(input.shape(), s.input);
+        assert_eq!(kernel.shape(), s.kernel);
+        let k = s.kernel;
+        let ish = s.input;
+
+        let in_data = input.data();
+        let k_data = kernel.data();
+        let out = crate::threadpool::SharedSlice::new(output.data_mut());
+
+        // Parallelize over (n, oh): each task writes a disjoint output row.
+        parallel_for(ctx.threads, ish.n * oh, |t| {
+            let n = t / oh;
+            let y = t % oh;
+            let out_data: &mut [f32] = out.slice();
+            for x in 0..ow {
+                let out_off = out_shape.index(n, y, x, 0);
+                let acc = &mut out_data[out_off..out_off + k.kc];
+                acc.fill(0.0);
+                for u in 0..k.kh {
+                    for v in 0..k.kw {
+                        let in_off = ish.index(n, y * s.sh + u, x * s.sw + v, 0);
+                        let in_px = &in_data[in_off..in_off + k.ic];
+                        let k_off = k.index(u, v, 0, 0);
+                        for (i, &iv) in in_px.iter().enumerate() {
+                            let k_row = &k_data[k_off + i * k.kc..k_off + i * k.kc + k.kc];
+                            for (o, acc_o) in acc.iter_mut().enumerate() {
+                                *acc_o += iv * k_row[o];
+                            }
+                        }
+                    }
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{KernelShape, Nhwc};
+
+    /// The worked example from paper Fig. 1(a): 7×7 input of a simple
+    /// pattern, 3×3 ones-ish kernel. We use a delta kernel and a sum
+    /// kernel to check geometry exactly.
+    #[test]
+    fn delta_kernel_is_identity_window() {
+        let shape = ConvShape::new(Nhwc::new(1, 5, 5, 1), KernelShape::new(3, 3, 1, 1), 1, 1);
+        let input = Tensor::from_fn(shape.input, |_, h, w, _| (h * 5 + w) as f32);
+        // Kernel = 1 at center (1,1), else 0 -> output = center crop.
+        let kernel = Kernel::from_fn(shape.kernel, |h, w, _, _| {
+            if h == 1 && w == 1 {
+                1.0
+            } else {
+                0.0
+            }
+        });
+        let mut out = Tensor::zeros(shape.output());
+        Direct.run(
+            &ConvContext::default(),
+            &shape,
+            &input,
+            &kernel,
+            &mut Workspace::new(),
+            &mut out,
+        );
+        for y in 0..3 {
+            for x in 0..3 {
+                assert_eq!(out.at(0, y, x, 0), input.at(0, y + 1, x + 1, 0));
+            }
+        }
+    }
+
+    #[test]
+    fn ones_kernel_sums_window_with_stride() {
+        let shape = ConvShape::new(Nhwc::new(1, 6, 6, 1), KernelShape::new(2, 2, 1, 1), 2, 2);
+        let input = Tensor::from_fn(shape.input, |_, _, _, _| 1.0);
+        let kernel = Kernel::from_fn(shape.kernel, |_, _, _, _| 1.0);
+        let mut out = Tensor::zeros(shape.output());
+        Direct.run(
+            &ConvContext::default(),
+            &shape,
+            &input,
+            &kernel,
+            &mut Workspace::new(),
+            &mut out,
+        );
+        assert_eq!(out.shape(), Nhwc::new(1, 3, 3, 1));
+        assert!(out.data().iter().all(|&v| v == 4.0));
+    }
+
+    #[test]
+    fn channels_sum_and_outputs_separate() {
+        // 2 input channels, 3 output channels; kernel picks channel sums.
+        let shape = ConvShape::new(Nhwc::new(1, 3, 3, 2), KernelShape::new(1, 1, 2, 3), 1, 1);
+        let input = Tensor::from_fn(shape.input, |_, h, w, c| (h + w) as f32 + c as f32);
+        let kernel = Kernel::from_fn(shape.kernel, |_, _, i, o| ((i + 1) * (o + 1)) as f32);
+        let mut out = Tensor::zeros(shape.output());
+        Direct.run(
+            &ConvContext::default(),
+            &shape,
+            &input,
+            &kernel,
+            &mut Workspace::new(),
+            &mut out,
+        );
+        for h in 0..3 {
+            for w in 0..3 {
+                let (c0, c1) = ((h + w) as f32, (h + w) as f32 + 1.0);
+                for o in 0..3 {
+                    let want = c0 * (o + 1) as f32 + c1 * 2.0 * (o + 1) as f32;
+                    assert_eq!(out.at(0, h, w, o), want, "h={h} w={w} o={o}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multithreaded_matches_single() {
+        let shape = ConvShape::new(Nhwc::new(2, 9, 11, 3), KernelShape::new(3, 3, 3, 5), 2, 1);
+        let mut rng = crate::util::Rng::new(1);
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let mut o1 = Tensor::zeros(shape.output());
+        let mut o4 = Tensor::zeros(shape.output());
+        let mut ws = Workspace::new();
+        Direct.run(&ConvContext::default(), &shape, &input, &kernel, &mut ws, &mut o1);
+        Direct.run(
+            &ConvContext::default().with_threads(4),
+            &shape,
+            &input,
+            &kernel,
+            &mut ws,
+            &mut o4,
+        );
+        assert_eq!(o1, o4);
+    }
+
+    #[test]
+    fn zero_workspace() {
+        let shape = ConvShape::new(Nhwc::new(1, 7, 7, 1), KernelShape::new(3, 3, 1, 1), 1, 1);
+        assert_eq!(Direct.workspace_elems(&shape), 0);
+        assert!(Direct.supports(&shape));
+    }
+}

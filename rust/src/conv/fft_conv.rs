@@ -1,0 +1,339 @@
+//! FFT-based convolution — the `FFT.gpu` baseline (paper §2.2; Mathieu et
+//! al. 2013; Vasilache et al. 2014).
+//!
+//! Convolution in the spatial domain is pointwise multiplication in the
+//! frequency domain. The catch the paper leans on (Fig. 4e): **every
+//! kernel must be padded up to the input size** before transforming, so
+//! the temporary spectra occupy
+//! `(i_c·k_c + i_c + …) · P_h·P_w` complex values — enormous when the
+//! kernel (3×3) is much smaller than the input (224×224). That blow-up is
+//! exactly what this module reproduces and what `fig4e` measures.
+//!
+//! CNN "convolution" is cross-correlation; we convert it to true (linear)
+//! convolution by flipping the kernel, evaluate it circularly on a grid
+//! padded to the next power of two ≥ `i + k - 1` (no wrap-around), and
+//! read the valid window with stride.
+//!
+//! Caching: kernel spectra are input-independent. When they fit under
+//! `ctx.fft_cache_cap_bytes` we transform each kernel once per call
+//! (paper-faithful memory shape); above the cap we stream them per
+//! output channel to stay runnable on small hosts — the analytic
+//! `workspace_elems` still reports the paper-model (cached) footprint,
+//! and the memory benches label which mode actually ran.
+
+use super::{ConvContext, Convolution};
+use crate::fft::{fft2d, next_pow2, pointwise_mul_acc, C32};
+use crate::memory::Workspace;
+use crate::tensor::{ConvShape, Kernel, Tensor};
+use crate::threadpool::{parallel_for_with_id, SharedSlice};
+
+pub struct FftConv;
+
+/// Padded FFT grid for a geometry: next pow2 of `i + k - 1` per axis.
+pub fn fft_grid(s: &ConvShape) -> (usize, usize) {
+    (
+        next_pow2(s.input.h + s.kernel.kh - 1),
+        next_pow2(s.input.w + s.kernel.kw - 1),
+    )
+}
+
+/// Complex values per spectrum.
+fn spectrum_len(s: &ConvShape) -> usize {
+    let (ph, pw) = fft_grid(s);
+    ph * pw
+}
+
+/// Floats for the paper-model footprint: the fully-parallel GPU
+/// formulation holds kernel spectra `i_c·k_c` **plus the whole batch's**
+/// input spectra `i_n·i_c` and output accumulators `i_n·k_c` at once
+/// (that is what lets cuFFT batch its transforms), each `P_h·P_w`
+/// complex = 2 floats. Our CPU execution streams over samples and so
+/// allocates less; `workspace_elems` reports the paper model, which is
+/// the Fig. 4e quantity.
+fn cached_workspace_elems(s: &ConvShape) -> usize {
+    let sp = spectrum_len(s);
+    let (ic, kc) = (s.kernel.ic, s.kernel.kc);
+    let n = s.input.n;
+    2 * sp * (ic * kc + n * ic + n * kc + 2)
+}
+
+/// Floats for the streaming footprint: input spectra `i_c` + per-thread
+/// (acc + kernel scratch) spectra.
+fn streaming_workspace_elems(s: &ConvShape, threads: usize) -> usize {
+    let sp = spectrum_len(s);
+    2 * sp * (s.kernel.ic + 2 * threads.max(1))
+}
+
+/// Would the cached mode fit under the cap?
+pub fn uses_cache(ctx: &ConvContext, s: &ConvShape) -> bool {
+    cached_workspace_elems(s) * 4 <= ctx.fft_cache_cap_bytes
+}
+
+impl Convolution for FftConv {
+    fn name(&self) -> &'static str {
+        "fft"
+    }
+
+    fn supports(&self, _s: &ConvShape) -> bool {
+        true
+    }
+
+    /// Paper-model footprint (kernels padded to input size, all spectra
+    /// live) — the quantity Fig. 4e plots.
+    fn workspace_elems(&self, s: &ConvShape) -> usize {
+        cached_workspace_elems(s)
+    }
+
+    fn run(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        input: &Tensor,
+        kernel: &Kernel,
+        ws: &mut Workspace,
+        output: &mut Tensor,
+    ) {
+        let s = *shape;
+        assert_eq!(output.shape(), s.output());
+        if uses_cache(ctx, &s) {
+            run_cached(ctx, &s, input, kernel, ws, output);
+        } else {
+            run_streaming(ctx, &s, input, kernel, ws, output);
+        }
+    }
+}
+
+/// Transform one kernel slice (i, o), flipped, into `spec`.
+fn kernel_spectrum(s: &ConvShape, kernel: &Kernel, i: usize, o: usize, spec: &mut [C32]) {
+    let (ph, pw) = fft_grid(s);
+    let k = s.kernel;
+    spec.fill(C32::ZERO);
+    for u in 0..k.kh {
+        for v in 0..k.kw {
+            // Flip: correlation -> convolution.
+            spec[(k.kh - 1 - u) * pw + (k.kw - 1 - v)] = C32::new(kernel.at(u, v, i, o), 0.0);
+        }
+    }
+    fft2d(spec, ph, pw, false);
+}
+
+/// Transform one input channel of sample n into `spec`.
+fn input_spectrum(s: &ConvShape, input: &Tensor, n: usize, i: usize, spec: &mut [C32]) {
+    let (ph, pw) = fft_grid(s);
+    let ish = s.input;
+    spec.fill(C32::ZERO);
+    for y in 0..ish.h {
+        for x in 0..ish.w {
+            spec[y * pw + x] = C32::new(input.at(n, y, x, i), 0.0);
+        }
+    }
+    fft2d(spec, ph, pw, false);
+}
+
+/// Interpret a float slice as complex (len/2 C32s) — workspace is f32.
+fn as_c32(buf: &mut [f32]) -> &mut [C32] {
+    assert_eq!(buf.len() % 2, 0);
+    // SAFETY: C32 is repr(Rust) of two f32 with align 4 and no padding —
+    // identical layout to [f32; 2].
+    unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut C32, buf.len() / 2) }
+}
+
+fn run_cached(
+    ctx: &ConvContext,
+    s: &ConvShape,
+    input: &Tensor,
+    kernel: &Kernel,
+    ws: &mut Workspace,
+    output: &mut Tensor,
+) {
+    let sp = spectrum_len(s);
+    let (ic, kc) = (s.kernel.ic, s.kernel.kc);
+    let n = s.input.n;
+    let threads = ctx.threads;
+
+    let total = cached_workspace_elems(s).max(2 * sp * (ic * kc + ic + 2 * threads.max(1)));
+    let buf = ws.take(total);
+    let (kbuf, rest) = buf.split_at_mut(2 * sp * ic * kc);
+    let (xbuf, accbuf) = rest.split_at_mut(2 * sp * ic);
+
+    // Kernel spectra once per call (input-independent).
+    {
+        let kshared = SharedSlice::new(kbuf);
+        parallel_for_with_id(threads, ic * kc, |_, t| {
+            let kb = kshared.slice();
+            let (i, o) = (t / kc, t % kc);
+            let spec = as_c32(&mut kb[2 * sp * t..2 * sp * (t + 1)]);
+            kernel_spectrum(s, kernel, i, o, spec);
+        });
+    }
+
+    for nn in 0..n {
+        // Input spectra for this sample.
+        {
+            let xshared = SharedSlice::new(xbuf);
+            parallel_for_with_id(threads, ic, |_, i| {
+                let xb = xshared.slice();
+                let spec = as_c32(&mut xb[2 * sp * i..2 * sp * (i + 1)]);
+                input_spectrum(s, input, nn, i, spec);
+            });
+        }
+        // Accumulate + inverse per output channel (per-thread acc).
+        let (ph, pw) = fft_grid(s);
+        let xref: &[f32] = xbuf;
+        let kref: &[f32] = kbuf;
+        let acc_shared = SharedSlice::new(accbuf);
+        let out_shared = SharedSlice::new(output.data_mut());
+        parallel_for_with_id(threads, kc, |tid, o| {
+            let accb = acc_shared.slice();
+            let acc = as_c32(&mut accb[2 * sp * tid..2 * sp * (tid + 1)]);
+            acc.fill(C32::ZERO);
+            for i in 0..ic {
+                let x = unsafe {
+                    std::slice::from_raw_parts(
+                        xref[2 * sp * i..].as_ptr() as *const C32,
+                        sp,
+                    )
+                };
+                let kf = unsafe {
+                    std::slice::from_raw_parts(
+                        kref[2 * sp * (i * kc + o)..].as_ptr() as *const C32,
+                        sp,
+                    )
+                };
+                pointwise_mul_acc(acc, x, kf);
+            }
+            fft2d(acc, ph, pw, true);
+            // Each o writes disjoint output entries (channel stride).
+            scatter_into(s, acc, nn, o, out_shared.slice());
+        });
+    }
+}
+
+/// scatter_output but writing into a raw output slice (parallel path).
+fn scatter_into(s: &ConvShape, acc: &[C32], n: usize, o: usize, out: &mut [f32]) {
+    let (_, pw) = fft_grid(s);
+    let (oh, ow) = (s.oh(), s.ow());
+    let k = s.kernel;
+    let osh = s.output();
+    for y in 0..oh {
+        let row = (y * s.sh + k.kh - 1) * pw + (k.kw - 1);
+        for x in 0..ow {
+            out[osh.index(n, y, x, o)] = acc[row + x * s.sw].re;
+        }
+    }
+}
+
+fn run_streaming(
+    ctx: &ConvContext,
+    s: &ConvShape,
+    input: &Tensor,
+    kernel: &Kernel,
+    ws: &mut Workspace,
+    output: &mut Tensor,
+) {
+    let sp = spectrum_len(s);
+    let (ic, kc) = (s.kernel.ic, s.kernel.kc);
+    let n = s.input.n;
+    let threads = ctx.threads.max(1);
+
+    let buf = ws.take(streaming_workspace_elems(s, threads));
+    let (xbuf, scratch) = buf.split_at_mut(2 * sp * ic);
+
+    let (ph, pw) = fft_grid(s);
+    for nn in 0..n {
+        {
+            let xshared = SharedSlice::new(xbuf);
+            parallel_for_with_id(threads, ic, |_, i| {
+                let xb = xshared.slice();
+                let spec = as_c32(&mut xb[2 * sp * i..2 * sp * (i + 1)]);
+                input_spectrum(s, input, nn, i, spec);
+            });
+        }
+        let xref: &[f32] = xbuf;
+        let scratch_shared = SharedSlice::new(scratch);
+        let out_shared = SharedSlice::new(output.data_mut());
+        parallel_for_with_id(threads, kc, |tid, o| {
+            let sb = scratch_shared.slice();
+            let lane = &mut sb[2 * sp * 2 * tid..2 * sp * 2 * (tid + 1)];
+            let (acc_f, kf_f) = lane.split_at_mut(2 * sp);
+            let acc = as_c32(acc_f);
+            let kf = as_c32(kf_f);
+            acc.fill(C32::ZERO);
+            for i in 0..ic {
+                kernel_spectrum(s, kernel, i, o, kf);
+                let x = unsafe {
+                    std::slice::from_raw_parts(xref[2 * sp * i..].as_ptr() as *const C32, sp)
+                };
+                pointwise_mul_acc(acc, x, kf);
+            }
+            fft2d(acc, ph, pw, true);
+            scatter_into(s, acc, nn, o, out_shared.slice());
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct::Direct;
+    use crate::tensor::{KernelShape, Nhwc};
+    use crate::util::{assert_allclose, Rng};
+
+    fn check(shape: ConvShape, threads: usize, cap: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let mut ctx = ConvContext::default().with_threads(threads);
+        ctx.fft_cache_cap_bytes = cap;
+        let mut want = Tensor::zeros(shape.output());
+        let mut got = Tensor::zeros(shape.output());
+        let mut ws = Workspace::new();
+        Direct.run(&ctx, &shape, &input, &kernel, &mut ws, &mut want);
+        FftConv.run(&ctx, &shape, &input, &kernel, &mut ws, &mut got);
+        assert_allclose(got.data(), want.data(), 1e-3, &shape.describe());
+    }
+
+    #[test]
+    fn matches_direct_cached_mode() {
+        for (n, ih, iw, ic, kh, kw, kc, sh, sw, seed) in [
+            (1usize, 7, 7, 1, 3, 3, 1, 1, 1, 1u64),
+            (2, 9, 8, 2, 3, 2, 3, 1, 1, 2),
+            (1, 12, 10, 3, 5, 5, 2, 2, 2, 3),
+            (1, 8, 8, 2, 3, 3, 4, 3, 1, 4),
+        ] {
+            let shape = ConvShape::new(
+                Nhwc::new(n, ih, iw, ic),
+                KernelShape::new(kh, kw, ic, kc),
+                sh,
+                sw,
+            );
+            check(shape, 1, usize::MAX, seed);
+            check(shape, 3, usize::MAX, seed);
+        }
+    }
+
+    #[test]
+    fn matches_direct_streaming_mode() {
+        let shape = ConvShape::new(Nhwc::new(2, 10, 10, 3), KernelShape::new(3, 3, 3, 4), 1, 1);
+        check(shape, 1, 0, 7); // cap 0 -> always stream
+        check(shape, 2, 0, 7);
+    }
+
+    #[test]
+    fn grid_is_linear_conv_safe() {
+        let s = ConvShape::new(Nhwc::new(1, 7, 7, 1), KernelShape::new(3, 3, 1, 1), 1, 1);
+        let (ph, pw) = fft_grid(&s);
+        assert!(ph >= 9 && pw >= 9);
+        assert_eq!((ph, pw), (16, 16));
+    }
+
+    #[test]
+    fn paper_model_overhead_dwarfs_mec_for_small_kernels() {
+        // cv7-like scaled: 56x56x3 -> 3x3x8: FFT spectra must be much
+        // bigger than MEC's L (Fig. 4e's qualitative claim).
+        let s = ConvShape::new(Nhwc::new(1, 56, 56, 3), KernelShape::new(3, 3, 3, 8), 1, 1);
+        let fft = FftConv.workspace_elems(&s);
+        let mec = s.mec_lowered_elems();
+        assert!(fft > 5 * mec, "fft={fft} mec={mec}");
+    }
+}

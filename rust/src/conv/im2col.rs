@@ -1,0 +1,155 @@
+//! im2col-based convolution (paper Fig. 1b) — the `Conv.cpu`/`Conv.gpu`
+//! baseline.
+//!
+//! Lowers the input into a Toeplitz matrix L of shape
+//! `i_n·o_h·o_w × k_h·k_w·i_c` (Eq. 2) — each output position's receptive
+//! field linearized into one row — then computes `O = L × K` with a single
+//! big GEMM. The memory-overhead is exactly `|L|`, which is what MEC
+//! attacks: every input pixel is replicated up to `k_h·k_w / (s_h·s_w)`
+//! times.
+
+use super::{ConvContext, Convolution};
+use crate::gemm::{gemm_ex, MatMut, MatRef};
+use crate::memory::Workspace;
+use crate::tensor::{ConvShape, Kernel, Tensor};
+use crate::threadpool::parallel_for;
+
+pub struct Im2col;
+
+impl Im2col {
+    /// Fill the lowered matrix. Exposed for the lowering-only benchmark
+    /// (Fig. 4f's "MEC lowers 85% faster" claim compares this loop with
+    /// MEC's).
+    pub fn lower(ctx: &ConvContext, shape: &ConvShape, input: &Tensor, l: &mut [f32]) {
+        let s = *shape;
+        let (oh, ow) = (s.oh(), s.ow());
+        let k = s.kernel;
+        let ish = s.input;
+        let row_len = k.kh * k.kw * k.ic;
+        assert_eq!(l.len(), ish.n * oh * ow * row_len);
+        let in_data = input.data();
+        let lp = crate::threadpool::SharedSlice::new(l);
+
+        // One task per lowered row (= one output position): rows are
+        // disjoint, copies are k_w·i_c contiguous runs.
+        parallel_for(ctx.threads, ish.n * oh * ow, |r| {
+            let l_data: &mut [f32] = lp.slice();
+            let n = r / (oh * ow);
+            let y = (r / ow) % oh;
+            let x = r % ow;
+            let row = &mut l_data[r * row_len..(r + 1) * row_len];
+            for u in 0..k.kh {
+                let src_off = ish.index(n, y * s.sh + u, x * s.sw, 0);
+                let dst_off = u * k.kw * k.ic;
+                row[dst_off..dst_off + k.kw * k.ic]
+                    .copy_from_slice(&in_data[src_off..src_off + k.kw * k.ic]);
+            }
+        });
+    }
+}
+
+impl Convolution for Im2col {
+    fn name(&self) -> &'static str {
+        "im2col"
+    }
+
+    fn supports(&self, _shape: &ConvShape) -> bool {
+        true
+    }
+
+    /// Eq. (2): `i_n·o_h·o_w · k_h·k_w·i_c` floats.
+    fn workspace_elems(&self, shape: &ConvShape) -> usize {
+        shape.im2col_lowered_elems()
+    }
+
+    fn run(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        input: &Tensor,
+        kernel: &Kernel,
+        ws: &mut Workspace,
+        output: &mut Tensor,
+    ) {
+        let s = *shape;
+        let k = s.kernel;
+        let rows = s.input.n * s.oh() * s.ow();
+        let row_len = k.kh * k.kw * k.ic;
+        assert_eq!(output.shape(), s.output());
+
+        let l = ws.take(rows * row_len);
+        Im2col::lower(ctx, &s, input, l);
+
+        // O (i_n·o_h·o_w × k_c, row-major NHWC is exactly this matrix)
+        //   = L (rows × row_len) × K (row_len × k_c).
+        let a = MatRef::new(l, rows, row_len);
+        let b = MatRef::new(kernel.data(), row_len, k.kc);
+        let mut c = MatMut::new(output.data_mut(), rows, k.kc);
+        gemm_ex(a, b, &mut c, 1.0, 0.0, ctx.threads, ctx.blocks);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct::Direct;
+    use crate::tensor::{KernelShape, Nhwc};
+    use crate::util::{assert_allclose, Rng};
+
+    #[test]
+    fn lowered_matrix_matches_fig1b() {
+        // Paper Fig. 1: 7x7 input, 3x3 kernel, s=1 -> L is 25x9.
+        let shape = ConvShape::new(Nhwc::new(1, 7, 7, 1), KernelShape::new(3, 3, 1, 1), 1, 1);
+        let input = Tensor::from_fn(shape.input, |_, h, w, _| (h * 7 + w) as f32);
+        let mut l = vec![0.0; shape.im2col_lowered_elems()];
+        assert_eq!(l.len(), 25 * 9);
+        Im2col::lower(&ConvContext::default(), &shape, &input, &mut l);
+        // Row 0 = input[0:3, 0:3] linearized.
+        assert_eq!(&l[0..9], &[0., 1., 2., 7., 8., 9., 14., 15., 16.]);
+        // Row 1 = window slid by s_w=1.
+        assert_eq!(&l[9..18], &[1., 2., 3., 8., 9., 10., 15., 16., 17.]);
+        // Row 5 = window slid down by s_h=1 (first of second output row).
+        assert_eq!(&l[5 * 9..5 * 9 + 3], &[7., 8., 9.]);
+    }
+
+    #[test]
+    fn matches_direct_on_random_geometries() {
+        let mut rng = Rng::new(21);
+        for (n, ih, iw, ic, kh, kw, kc, sh, sw) in [
+            (1usize, 7, 7, 1, 3, 3, 1, 1, 1),
+            (2, 9, 8, 3, 3, 2, 4, 2, 1),
+            (1, 12, 12, 2, 5, 5, 3, 2, 2),
+            (3, 6, 6, 4, 1, 1, 8, 1, 1),
+            (1, 11, 5, 2, 4, 3, 2, 3, 2),
+        ] {
+            let shape = ConvShape::new(
+                Nhwc::new(n, ih, iw, ic),
+                KernelShape::new(kh, kw, ic, kc),
+                sh,
+                sw,
+            );
+            let input = Tensor::random(shape.input, &mut rng);
+            let kernel = Kernel::random(shape.kernel, &mut rng);
+            let ctx = ConvContext::default().with_threads(2);
+            let mut want = Tensor::zeros(shape.output());
+            let mut got = Tensor::zeros(shape.output());
+            let mut ws = Workspace::new();
+            Direct.run(&ctx, &shape, &input, &kernel, &mut ws, &mut want);
+            Im2col.run(&ctx, &shape, &input, &kernel, &mut ws, &mut got);
+            assert_allclose(got.data(), want.data(), 1e-4, &shape.describe());
+        }
+    }
+
+    #[test]
+    fn workspace_matches_eq2() {
+        // cv1 geometry: 227x227x3, 11x11x96, s=4 -> o=55.
+        let shape = ConvShape::new(
+            Nhwc::new(1, 227, 227, 3),
+            KernelShape::new(11, 11, 3, 96),
+            4,
+            4,
+        );
+        assert_eq!(shape.oh(), 55);
+        assert_eq!(Im2col.workspace_elems(&shape), 55 * 55 * 11 * 11 * 3);
+    }
+}

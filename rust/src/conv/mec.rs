@@ -1,0 +1,493 @@
+//! MEC — Memory-efficient Convolution (paper §3, Algorithm 2).
+//!
+//! The contribution: lower the input **once per vertical strip** instead of
+//! once per output position. L has shape `i_n × o_w × i_h × k_w × i_c`
+//! (Eq. 3) — smaller than im2col's lowered matrix by ≈`k_h` whenever
+//! kernel instances overlap vertically (`k_h > s_h`, Eq. 4). The vertical
+//! redundancy im2col materializes is *recovered* arithmetically: the `o_h`
+//! row-blocks of the output are products of **overlapping** sub-matrices
+//! of L — partition `h` starts `s_h·k_w·i_c` columns after partition
+//! `h-1` and is addressed with the BLAS leading-dimension trick
+//! (`ld = i_h·k_w·i_c`), so no bytes move between GEMMs.
+//!
+//! Mini-batch handling (§3.3) gives two schedules:
+//! * **Solution A** (lines 9–19): `o_h` *large* GEMMs over all samples at
+//!   once, producing `h-n-w-c` order, then an in-place-style repack to
+//!   `n-h-w-c` reusing L as the auxiliary buffer (valid while `|O| ≤ |L|`).
+//! * **Solution B** (lines 21–25): `i_n·o_h` *small* GEMMs (one per
+//!   sample per output row), directly producing `n-h-w-c` — the batched-
+//!   GEMM shape (`cublasSgemmBatched` in the paper's GPU code).
+//! The dispatch threshold `T` (line 8, `o_w ≤ T`) trades GEMM size
+//! against count; the paper found ~100 good on GPUs (`ablation_t`
+//! re-derives this).
+
+use super::{ConvContext, Convolution};
+use crate::gemm::{gemm_prepacked, gemm_prepacked_batch, MatMut, MatRef, PackedB};
+use crate::memory::Workspace;
+use crate::tensor::{ConvShape, Kernel, Tensor};
+use crate::threadpool::parallel_for;
+
+/// Which mini-batch schedule to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Solution {
+    /// Algorithm 2 line 8: A if `o_w ≤ T` and `|O| ≤ |L|`, else B.
+    Auto,
+    A,
+    B,
+}
+
+pub struct Mec {
+    solution: Solution,
+}
+
+impl Mec {
+    pub fn auto() -> Mec {
+        Mec { solution: Solution::Auto }
+    }
+
+    pub fn solution_a() -> Mec {
+        Mec { solution: Solution::A }
+    }
+
+    pub fn solution_b() -> Mec {
+        Mec { solution: Solution::B }
+    }
+
+    /// Resolve the schedule for a geometry (Algorithm 2 line 8).
+    pub fn resolve(&self, ctx: &ConvContext, shape: &ConvShape) -> Solution {
+        match self.solution {
+            Solution::Auto => {
+                if shape.ow() <= ctx.mec_t && solution_a_available(shape) {
+                    Solution::A
+                } else {
+                    Solution::B
+                }
+            }
+            s => s,
+        }
+    }
+
+    /// The compact lowering (Algorithm 2 lines 4–6): for each `(n, w)`,
+    /// copy the `i_h × k_w × i_c` strip starting at column `s_w·w` into
+    /// `L[n, w]`. Each copy is `k_w·i_c` contiguous floats per input row —
+    /// this is why MEC wants n-h-w-c layout (§3.3). Exposed for the
+    /// lowering-only bench (Fig. 4f's 85%-faster-lowering claim).
+    pub fn lower(ctx: &ConvContext, shape: &ConvShape, input: &Tensor, l: &mut [f32]) {
+        let s = *shape;
+        let ow = s.ow();
+        let k = s.kernel;
+        let ish = s.input;
+        let strip = k.kw * k.ic; // bytes copied per input row
+        let row_len = ish.h * strip; // one L row: i_h·k_w·i_c
+        assert_eq!(l.len(), ish.n * ow * row_len);
+        let in_data = input.data();
+        let lp = crate::threadpool::SharedSlice::new(l);
+
+        // One task per (n, w) pair; h loop inside for cache-friendly runs.
+        parallel_for(ctx.threads, ish.n * ow, |t| {
+            let l_data: &mut [f32] = lp.slice();
+            let n = t / ow;
+            let w = t % ow;
+            let dst_base = t * row_len;
+            let src_col = s.sw * w * k.ic;
+            for h in 0..ish.h {
+                let src = ish.index(n, h, 0, 0) + src_col;
+                let dst = dst_base + h * strip;
+                l_data[dst..dst + strip].copy_from_slice(&in_data[src..src + strip]);
+            }
+        });
+    }
+}
+
+/// `|O| ≤ |L|` — Solution A needs L as the repack aux (Alg. 2 line 8).
+pub fn solution_a_available(shape: &ConvShape) -> bool {
+    shape.output().len() <= shape.mec_lowered_elems()
+}
+
+impl Convolution for Mec {
+    fn name(&self) -> &'static str {
+        match self.solution {
+            Solution::Auto => "mec",
+            Solution::A => "mec-a",
+            Solution::B => "mec-b",
+        }
+    }
+
+    fn supports(&self, _shape: &ConvShape) -> bool {
+        true
+    }
+
+    /// Eq. (3): `i_n·o_w·i_h·k_w·i_c` floats. Solution A's aux space *is*
+    /// L (the paper's trick); only a pinned Solution A on a geometry where
+    /// `|O| > |L|` needs a separate aux.
+    fn workspace_elems(&self, shape: &ConvShape) -> usize {
+        let l = shape.mec_lowered_elems();
+        match self.solution {
+            Solution::A if !solution_a_available(shape) => l + shape.output().len(),
+            _ => l,
+        }
+    }
+
+    fn run(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        input: &Tensor,
+        kernel: &Kernel,
+        ws: &mut Workspace,
+        output: &mut Tensor,
+    ) {
+        let s = *shape;
+        assert_eq!(output.shape(), s.output());
+        assert_eq!(input.shape(), s.input);
+        assert_eq!(kernel.shape(), s.kernel);
+
+        match self.resolve(ctx, &s) {
+            Solution::A => run_solution_a(ctx, &s, input, kernel, ws, output),
+            Solution::B => run_solution_b(ctx, &s, input, kernel, ws, output),
+            Solution::Auto => unreachable!("resolve never returns Auto"),
+        }
+    }
+}
+
+/// Solution A (Algorithm 2 lines 9–19): `o_h` big GEMMs over the whole
+/// mini-batch producing `h-n-w-c`, then repack to `n-h-w-c` via aux.
+fn run_solution_a(
+    ctx: &ConvContext,
+    s: &ConvShape,
+    input: &Tensor,
+    kernel: &Kernel,
+    ws: &mut Workspace,
+    output: &mut Tensor,
+) {
+    let (oh, ow) = (s.oh(), s.ow());
+    let k = s.kernel;
+    let n = s.input.n;
+    let l_elems = s.mec_lowered_elems();
+    let o_elems = s.output().len();
+    let l_rows = n * ow; // L as i_n·o_w × i_h·k_w·i_c (line 9)
+    let l_cols = s.input.h * k.kw * k.ic;
+    let kdim = k.kh * k.kw * k.ic;
+    let step = s.sh * k.kw * k.ic; // partition shift (line 12)
+
+    // When |O| > |L| (pinned Solution A), the aux is a separate region.
+    let reuse_l_as_aux = o_elems <= l_elems;
+    let (l, aux_sep) = if reuse_l_as_aux {
+        (ws.take(l_elems), None)
+    } else {
+        let (l, aux) = ws.take_split(l_elems, o_elems);
+        (l, Some(aux))
+    };
+
+    Mec::lower(ctx, s, input, l);
+
+    // Lines 10-13: O[h] = L[0:i_n·o_w, step·h : step·h + k_h·k_w·i_c] × K,
+    // one gemm per output row h; O interpreted as o_h × (i_n·o_w·k_c).
+    //
+    // §Perf: K is shared by all o_h gemms — pack it ONCE (PackedB) instead
+    // of per call; this is what the paper gets for free from BLAS keeping
+    // its packing internal, and it roughly halved MEC runtime on cv6.
+    let kmat = MatRef::new(kernel.data(), kdim, k.kc);
+    let packed_k = PackedB::pack(kmat, ctx.blocks);
+    let out_row = n * ow * k.kc;
+    if ctx.threads <= 1 {
+        // Mobile path (§Perf iteration 3): fuse the o_h gemms so each
+        // packed-K tile is streamed once and reused across partitions —
+        // K traffic dominates when m = i_n·o_w is small (cv11/cv12).
+        let l_ref: &[f32] = l;
+        let a_views: Vec<MatRef<'_>> = (0..oh)
+            .map(|h| MatRef::strided(&l_ref[step * h..], l_rows, kdim, l_cols))
+            .collect();
+        let mut c_views: Vec<MatMut<'_>> = output
+            .data_mut()
+            .chunks_exact_mut(out_row)
+            .map(|chunk| MatMut::new(chunk, l_rows, k.kc))
+            .collect();
+        gemm_prepacked_batch(&a_views, &packed_k, &mut c_views);
+    } else {
+        let out = crate::threadpool::SharedSlice::new(output.data_mut());
+        let l_ref: &[f32] = l;
+        // Each h writes a disjoint row of the h-n-w-c output.
+        parallel_for(ctx.threads.min(oh), oh, |h| {
+            let out_data: &mut [f32] = out.slice();
+            let a = MatRef::strided(&l_ref[step * h..], l_rows, kdim, l_cols);
+            let mut c = MatMut::new(&mut out_data[h * out_row..(h + 1) * out_row], l_rows, k.kc);
+            gemm_prepacked(a, &packed_k, &mut c);
+        });
+    }
+
+    // Lines 14-19: repack h-n-w-c -> n-h-w-c using L (or separate aux).
+    let aux: &mut [f32] = match aux_sep {
+        Some(a) => a,
+        None => &mut l[..o_elems],
+    };
+    aux.copy_from_slice(&output.data()[..o_elems]); // line 14: L = O
+    let chunk = ow * k.kc; // o_w·k_c contiguous run per (n,h)
+    let out = crate::threadpool::SharedSlice::new(output.data_mut());
+    let aux_ref: &[f32] = aux;
+    parallel_for(ctx.threads, n * oh, |t| {
+        let out_data: &mut [f32] = out.slice();
+        let nn = t / oh;
+        let h = t % oh;
+        // L viewed as o_h × i_n × (o_w·k_c): O[n,h,:] = L[h,n,:] (line 18)
+        let src = (h * n_of(s) + nn) * chunk;
+        let dst = (nn * oh + h) * chunk;
+        out_data[dst..dst + chunk].copy_from_slice(&aux_ref[src..src + chunk]);
+    });
+}
+
+#[inline]
+fn n_of(s: &ConvShape) -> usize {
+    s.input.n
+}
+
+/// Solution B (Algorithm 2 lines 21–25): per-sample batched GEMMs
+/// directly in n-h-w-c. `i_n·o_h` gemms of `o_w × (k_h·k_w·i_c) × k_c`.
+fn run_solution_b(
+    ctx: &ConvContext,
+    s: &ConvShape,
+    input: &Tensor,
+    kernel: &Kernel,
+    ws: &mut Workspace,
+    output: &mut Tensor,
+) {
+    let (oh, ow) = (s.oh(), s.ow());
+    let k = s.kernel;
+    let n = s.input.n;
+    let l_elems = s.mec_lowered_elems();
+    let l_cols = s.input.h * k.kw * k.ic;
+    let kdim = k.kh * k.kw * k.ic;
+    let step = s.sh * k.kw * k.ic;
+    let sample_l = ow * l_cols; // one sample's L block (o_w × i_h·k_w·i_c)
+
+    let l = ws.take(l_elems);
+    Mec::lower(ctx, s, input, l);
+
+    let kmat = MatRef::new(kernel.data(), kdim, k.kc);
+    // §Perf: shared K packed once across the i_n·o_h batched gemms (the
+    // cublasSgemmBatched analogue: one kernel image, many activations).
+    let packed_k = PackedB::pack(kmat, ctx.blocks);
+    let chunk = ow * k.kc;
+    if ctx.threads <= 1 {
+        // Mobile path: fused batch order keeps each K tile cache-warm
+        // across all i_n·o_h partitions (§Perf iteration 3).
+        let l_ref: &[f32] = l;
+        let a_views: Vec<MatRef<'_>> = (0..n * oh)
+            .map(|t| {
+                let nn = t / oh;
+                let h = t % oh;
+                MatRef::strided(&l_ref[nn * sample_l + step * h..], ow, kdim, l_cols)
+            })
+            .collect();
+        let mut c_views: Vec<MatMut<'_>> = output
+            .data_mut()
+            .chunks_exact_mut(chunk)
+            .map(|ch| MatMut::new(ch, ow, k.kc))
+            .collect();
+        gemm_prepacked_batch(&a_views, &packed_k, &mut c_views);
+    } else {
+        let out = crate::threadpool::SharedSlice::new(output.data_mut());
+        let l_ref: &[f32] = l;
+        // The paper's "i_n·o_h parallel/batched gemm calls with smaller
+        // inputs" — each writes the contiguous O[n][h] row block.
+        parallel_for(ctx.threads, n * oh, |t| {
+            let out_data: &mut [f32] = out.slice();
+            let nn = t / oh;
+            let h = t % oh;
+            let a = MatRef::strided(&l_ref[nn * sample_l + step * h..], ow, kdim, l_cols);
+            let dst = (nn * oh + h) * chunk;
+            let mut c = MatMut::new(&mut out_data[dst..dst + chunk], ow, k.kc);
+            gemm_prepacked(a, &packed_k, &mut c);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct::Direct;
+    use crate::tensor::{KernelShape, Nhwc};
+    use crate::util::{assert_allclose, Rng};
+
+    fn fig2_shape() -> ConvShape {
+        ConvShape::new(Nhwc::new(1, 7, 7, 1), KernelShape::new(3, 3, 1, 1), 1, 1)
+    }
+
+    #[test]
+    fn fig2_lowered_dimensions() {
+        // Paper Fig. 2: L is 5 × 21 (54% smaller than im2col's 25 × 9).
+        let s = fig2_shape();
+        assert_eq!(s.mec_lowered_elems(), 5 * 21);
+        assert_eq!(Mec::auto().workspace_elems(&s), 105);
+    }
+
+    #[test]
+    fn fig2_lowering_content() {
+        // Partition A = I[0:7, 0:3] is row 0 of L; B = I[0:7, 1:4] row 1.
+        let s = fig2_shape();
+        let input = Tensor::from_fn(s.input, |_, h, w, _| (h * 7 + w) as f32);
+        let mut l = vec![0.0; 105];
+        Mec::lower(&ConvContext::default(), &s, &input, &mut l);
+        // Row 0 (partition A): rows of I[*, 0:3] concatenated.
+        assert_eq!(&l[0..6], &[0., 1., 2., 7., 8., 9.]);
+        assert_eq!(&l[18..21], &[42., 43., 44.]);
+        // Row 1 (partition B): I[*, 1:4].
+        assert_eq!(&l[21..24], &[1., 2., 3.]);
+    }
+
+    #[test]
+    fn vertical_partitions_share_storage() {
+        // P = L[0:5, 0:9], Q = L[0:5, 3:12]: Q's first row must equal
+        // P's first row shifted by s_h·k_w = 3 — the ld trick.
+        let s = fig2_shape();
+        let input = Tensor::from_fn(s.input, |_, h, w, _| (h * 7 + w) as f32);
+        let mut l = vec![0.0; 105];
+        Mec::lower(&ConvContext::default(), &s, &input, &mut l);
+        let p = MatRef::strided(&l, 5, 9, 21);
+        let q = MatRef::strided(&l[3..], 5, 9, 21);
+        for r in 0..5 {
+            for c in 0..6 {
+                assert_eq!(q.at(r, c), p.at(r, c + 3));
+            }
+        }
+    }
+
+    fn check_vs_direct(shape: ConvShape, solution: Solution, threads: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let ctx = ConvContext::default().with_threads(threads);
+        let mut want = Tensor::zeros(shape.output());
+        let mut got = Tensor::zeros(shape.output());
+        let mut ws = Workspace::new();
+        Direct.run(&ctx, &shape, &input, &kernel, &mut ws, &mut want);
+        let mec = Mec { solution };
+        mec.run(&ctx, &shape, &input, &kernel, &mut ws, &mut got);
+        assert_allclose(
+            got.data(),
+            want.data(),
+            1e-4,
+            &format!("{:?} {}", solution, shape.describe()),
+        );
+    }
+
+    #[test]
+    fn solution_a_matches_direct() {
+        for (n, ih, iw, ic, kh, kw, kc, sh, sw, seed) in [
+            (1usize, 7, 7, 1, 3, 3, 1, 1, 1, 1u64),
+            (2, 9, 8, 3, 3, 2, 4, 2, 1, 2),
+            (4, 10, 10, 2, 5, 5, 3, 1, 1, 3),
+            (1, 12, 6, 3, 4, 3, 2, 3, 2, 4),
+        ] {
+            let shape = ConvShape::new(
+                Nhwc::new(n, ih, iw, ic),
+                KernelShape::new(kh, kw, ic, kc),
+                sh,
+                sw,
+            );
+            check_vs_direct(shape, Solution::A, 1, seed);
+            check_vs_direct(shape, Solution::A, 3, seed);
+        }
+    }
+
+    #[test]
+    fn solution_b_matches_direct() {
+        for (n, ih, iw, ic, kh, kw, kc, sh, sw, seed) in [
+            (1usize, 7, 7, 1, 3, 3, 1, 1, 1, 11u64),
+            (3, 9, 8, 3, 3, 2, 4, 2, 1, 12),
+            (2, 24, 24, 4, 5, 5, 8, 1, 1, 13),
+            (1, 8, 15, 2, 2, 4, 3, 2, 3, 14),
+        ] {
+            let shape = ConvShape::new(
+                Nhwc::new(n, ih, iw, ic),
+                KernelShape::new(kh, kw, ic, kc),
+                sh,
+                sw,
+            );
+            check_vs_direct(shape, Solution::B, 1, seed);
+            check_vs_direct(shape, Solution::B, 4, seed);
+        }
+    }
+
+    #[test]
+    fn solutions_agree_with_each_other() {
+        let shape = ConvShape::new(Nhwc::new(2, 14, 14, 3), KernelShape::new(3, 3, 3, 5), 1, 1);
+        let mut rng = Rng::new(31);
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let ctx = ConvContext::default();
+        let mut oa = Tensor::zeros(shape.output());
+        let mut ob = Tensor::zeros(shape.output());
+        let mut ws = Workspace::new();
+        Mec::solution_a().run(&ctx, &shape, &input, &kernel, &mut ws, &mut oa);
+        Mec::solution_b().run(&ctx, &shape, &input, &kernel, &mut ws, &mut ob);
+        assert_allclose(oa.data(), ob.data(), 1e-5, "A vs B");
+    }
+
+    #[test]
+    fn auto_dispatch_follows_line8() {
+        let ctx = ConvContext::default(); // T = 100
+        // o_w = 5 <= 100 and |O| (25) <= |L| (105) -> Solution A.
+        assert_eq!(Mec::auto().resolve(&ctx, &fig2_shape()), Solution::A);
+        // Huge o_w -> Solution B.
+        let wide = ConvShape::new(Nhwc::new(1, 7, 300, 1), KernelShape::new(3, 3, 1, 1), 1, 1);
+        assert!(wide.ow() > 100);
+        assert_eq!(Mec::auto().resolve(&ctx, &wide), Solution::B);
+        // |O| > |L| (many output channels) -> Solution B even if o_w small.
+        let fat = ConvShape::new(Nhwc::new(1, 7, 7, 1), KernelShape::new(3, 3, 1, 64), 1, 1);
+        assert!(!solution_a_available(&fat));
+        assert_eq!(Mec::auto().resolve(&ctx, &fat), Solution::B);
+        // T tunable.
+        let t4 = ConvContext::default().with_mec_t(4);
+        assert_eq!(Mec::auto().resolve(&t4, &fig2_shape()), Solution::B);
+    }
+
+    #[test]
+    fn pinned_a_works_when_o_exceeds_l() {
+        // |O| > |L|: pinned Solution A must allocate separate aux and
+        // still be correct.
+        let shape = ConvShape::new(Nhwc::new(1, 7, 7, 1), KernelShape::new(3, 3, 1, 64), 1, 1);
+        assert!(!solution_a_available(&shape));
+        assert_eq!(
+            Mec::solution_a().workspace_elems(&shape),
+            shape.mec_lowered_elems() + shape.output().len()
+        );
+        check_vs_direct(shape, Solution::A, 2, 41);
+    }
+
+    #[test]
+    fn workspace_is_eq3_and_smaller_than_eq2_when_overlapping() {
+        // cv5 geometry: 24x24x96, 5x5x256, s=1.
+        let s = ConvShape::new(
+            Nhwc::new(1, 24, 24, 96),
+            KernelShape::new(5, 5, 96, 256),
+            1,
+            1,
+        );
+        let mec = Mec::auto().workspace_elems(&s);
+        assert_eq!(mec, 20 * 24 * 5 * 96); // o_w·i_h·k_w·i_c
+        assert!(mec < crate::conv::im2col::Im2col.workspace_elems(&s));
+    }
+
+    #[test]
+    fn batch_in_solution_a_interleaves_correctly() {
+        // Regression guard for the h-n-w-c -> n-h-w-c repack: use a batch
+        // where each sample is constant so any mixup is visible.
+        let shape = ConvShape::new(Nhwc::new(3, 5, 5, 1), KernelShape::new(3, 3, 1, 2), 1, 1);
+        let input = Tensor::from_fn(shape.input, |n, _, _, _| (n + 1) as f32);
+        let kernel = Kernel::from_fn(shape.kernel, |_, _, _, o| if o == 0 { 1.0 } else { 2.0 });
+        let ctx = ConvContext::default();
+        let mut out = Tensor::zeros(shape.output());
+        let mut ws = Workspace::new();
+        Mec::solution_a().run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
+        for n in 0..3 {
+            let base = 9.0 * (n + 1) as f32; // 3x3 ones window
+            for h in 0..shape.oh() {
+                for w in 0..shape.ow() {
+                    assert_eq!(out.at(n, h, w, 0), base, "n={n}");
+                    assert_eq!(out.at(n, h, w, 1), 2.0 * base, "n={n}");
+                }
+            }
+        }
+    }
+}

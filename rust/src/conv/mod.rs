@@ -1,0 +1,234 @@
+//! Convolution algorithms — the paper's subject matter.
+//!
+//! One module per algorithm the paper evaluates (§4):
+//!
+//! | module      | paper name            | role |
+//! |-------------|-----------------------|------|
+//! | [`direct`]  | direct convolution    | zero-overhead oracle |
+//! | [`im2col`]  | Conv.cpu / Conv.gpu   | baseline lowering (Eq. 2) |
+//! | [`mec`]     | MEC.cpu / MEC.gpu     | **the contribution** (Alg. 2, Eq. 3) |
+//! | [`winograd`]| Wino.cpu / Wino.gpu   | F(2×2, 3×3) baseline |
+//! | [`fft_conv`]| FFT.gpu               | frequency-domain baseline |
+//!
+//! All implement [`Convolution`]: a cuDNN-style API where the caller asks
+//! for the workspace size up front (that *is* the paper's memory-overhead
+//! metric) and provides the scratch explicitly, so the planner can enforce
+//! device budgets and the tracker can measure true peaks.
+
+pub mod direct;
+pub mod fft_conv;
+pub mod im2col;
+pub mod mec;
+pub mod winograd;
+pub mod winograd_chunked;
+
+use crate::gemm::BlockSizes;
+use crate::memory::Workspace;
+use crate::tensor::{ConvShape, Kernel, Tensor};
+
+/// Execution environment for a convolution call.
+#[derive(Debug, Clone)]
+pub struct ConvContext {
+    /// Worker threads for the parallel loops (paper: OpenMP threads /
+    /// GPU blocks). `1` models the paper's Mobile platform.
+    pub threads: usize,
+    /// GEMM cache-blocking parameters (ablation_gemm sweeps these).
+    pub blocks: BlockSizes,
+    /// MEC's Solution A/B dispatch threshold `T` (Algorithm 2 line 8).
+    /// The paper found ~100 good for GPUs.
+    pub mec_t: usize,
+    /// Cap on cached FFT kernel spectra; above this the FFT algorithm
+    /// streams kernel transforms instead of caching them.
+    pub fft_cache_cap_bytes: usize,
+}
+
+impl Default for ConvContext {
+    fn default() -> Self {
+        ConvContext {
+            threads: 1,
+            blocks: BlockSizes::default(),
+            mec_t: 100,
+            fft_cache_cap_bytes: 256 << 20,
+        }
+    }
+}
+
+impl ConvContext {
+    /// Paper "Mobile" platform: 1 thread, batch handled by caller.
+    pub fn mobile() -> ConvContext {
+        ConvContext::default()
+    }
+
+    /// Paper "Server" platform: all cores.
+    pub fn server() -> ConvContext {
+        ConvContext {
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            ..ConvContext::default()
+        }
+    }
+
+    pub fn with_threads(mut self, t: usize) -> ConvContext {
+        self.threads = t;
+        self
+    }
+
+    pub fn with_mec_t(mut self, t: usize) -> ConvContext {
+        self.mec_t = t;
+        self
+    }
+}
+
+/// A convolution algorithm with an explicit-workspace API.
+pub trait Convolution: Send + Sync {
+    /// Short name used in reports ("MEC.cpu" style naming lives in the
+    /// bench layer; this is the algorithm identity).
+    fn name(&self) -> &'static str;
+
+    /// Whether this algorithm can handle the geometry (e.g. Winograd
+    /// F(2×2,3×3) requires k=3×3, s=1 — paper §4).
+    fn supports(&self, shape: &ConvShape) -> bool;
+
+    /// Temporary floats needed beyond I, K, O — the paper's
+    /// "memory-overhead" (§3.4), exact per algorithm.
+    fn workspace_elems(&self, shape: &ConvShape) -> usize;
+
+    /// Same in bytes.
+    fn workspace_bytes(&self, shape: &ConvShape) -> usize {
+        self.workspace_elems(shape) * std::mem::size_of::<f32>()
+    }
+
+    /// Run the convolution. `output` must be pre-allocated to
+    /// `shape.output()`; `ws` is grown as needed (callers reuse it across
+    /// calls — the serving hot path allocates nothing).
+    fn run(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        input: &Tensor,
+        kernel: &Kernel,
+        ws: &mut Workspace,
+        output: &mut Tensor,
+    );
+}
+
+/// Algorithm identifiers for CLI/planner/config use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AlgoKind {
+    Direct,
+    Im2col,
+    /// MEC with automatic Solution A/B dispatch (Algorithm 2 line 8).
+    Mec,
+    /// MEC pinned to Solution A (h-n-w-c gemm + repack).
+    MecSolutionA,
+    /// MEC pinned to Solution B (per-sample batched gemms).
+    MecSolutionB,
+    /// Fully-materialized F(2×2,3×3) — the paper's Wino.gpu formulation.
+    Winograd,
+    /// Tile-chunked F(2×2,3×3) — the paper's memory-optimized Wino.cpu.
+    WinogradChunked,
+    Fft,
+}
+
+impl AlgoKind {
+    pub const ALL: [AlgoKind; 8] = [
+        AlgoKind::Direct,
+        AlgoKind::Im2col,
+        AlgoKind::Mec,
+        AlgoKind::MecSolutionA,
+        AlgoKind::MecSolutionB,
+        AlgoKind::Winograd,
+        AlgoKind::WinogradChunked,
+        AlgoKind::Fft,
+    ];
+
+    /// The subset benchmarked as distinct systems in the paper.
+    pub const PAPER: [AlgoKind; 5] = [
+        AlgoKind::Direct,
+        AlgoKind::Im2col,
+        AlgoKind::Mec,
+        AlgoKind::Winograd,
+        AlgoKind::Fft,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoKind::Direct => "direct",
+            AlgoKind::Im2col => "im2col",
+            AlgoKind::Mec => "mec",
+            AlgoKind::MecSolutionA => "mec-a",
+            AlgoKind::MecSolutionB => "mec-b",
+            AlgoKind::Winograd => "winograd",
+            AlgoKind::WinogradChunked => "winograd-chunked",
+            AlgoKind::Fft => "fft",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AlgoKind> {
+        Some(match s {
+            "direct" => AlgoKind::Direct,
+            "im2col" | "conv" => AlgoKind::Im2col,
+            "mec" => AlgoKind::Mec,
+            "mec-a" | "mec_a" => AlgoKind::MecSolutionA,
+            "mec-b" | "mec_b" => AlgoKind::MecSolutionB,
+            "winograd" | "wino" => AlgoKind::Winograd,
+            "winograd-chunked" | "wino-cpu" => AlgoKind::WinogradChunked,
+            "fft" => AlgoKind::Fft,
+            _ => return None,
+        })
+    }
+
+    /// Instantiate the algorithm.
+    pub fn build(&self) -> Box<dyn Convolution> {
+        match self {
+            AlgoKind::Direct => Box::new(direct::Direct),
+            AlgoKind::Im2col => Box::new(im2col::Im2col),
+            AlgoKind::Mec => Box::new(mec::Mec::auto()),
+            AlgoKind::MecSolutionA => Box::new(mec::Mec::solution_a()),
+            AlgoKind::MecSolutionB => Box::new(mec::Mec::solution_b()),
+            AlgoKind::Winograd => Box::new(winograd::Winograd),
+            AlgoKind::WinogradChunked => Box::new(winograd_chunked::WinogradChunked::default()),
+            AlgoKind::Fft => Box::new(fft_conv::FftConv),
+        }
+    }
+}
+
+/// Convenience: run `algo` on fresh workspace, returning the output.
+pub fn convolve(
+    algo: AlgoKind,
+    ctx: &ConvContext,
+    shape: &ConvShape,
+    input: &Tensor,
+    kernel: &Kernel,
+) -> Tensor {
+    let a = algo.build();
+    assert!(
+        a.supports(shape),
+        "{} does not support geometry {}",
+        a.name(),
+        shape.describe()
+    );
+    let mut ws = Workspace::new();
+    let mut out = Tensor::zeros(shape.output());
+    a.run(ctx, shape, input, kernel, &mut ws, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_names_roundtrip() {
+        for k in AlgoKind::ALL {
+            assert_eq!(AlgoKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(AlgoKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn contexts() {
+        assert_eq!(ConvContext::mobile().threads, 1);
+        assert!(ConvContext::server().threads >= 1);
+        assert_eq!(ConvContext::default().mec_t, 100);
+    }
+}

@@ -1,0 +1,362 @@
+//! Winograd-based convolution, F(2×2, 3×3) — the `Wino.cpu`/`Wino.gpu`
+//! baseline (paper §2.2, §4; Lavin 2015).
+//!
+//! Only applicable when `k_h = k_w = 3` and `s_h = s_w = 1` (the paper
+//! benchmarks it on cv6–cv12 only, for exactly this reason). Each 2×2
+//! output tile is computed from a 4×4 input tile with 16 multiplies
+//! instead of 36:
+//!
+//! ```text
+//!   Y = Aᵀ [ (G g Gᵀ) ⊙ (Bᵀ d B) ] A
+//! ```
+//!
+//! Summed over input channels, the elementwise products become 16
+//! independent GEMMs of shape `(k_c × i_c) × (i_c × P)` where
+//! `P = i_n·⌈o_h/2⌉·⌈o_w/2⌉` — the paper's Appendix describes exactly
+//! this "all tiles/channels in full parallel" decomposition, and its
+//! memory cost: transformed-kernel U, transformed-input V, and product M
+//! are all materialized, which is why Fig. 4b/e show Winograd needing
+//! noticeably more temporary memory than MEC.
+
+use super::{ConvContext, Convolution};
+use crate::gemm::{gemm_ex, MatMut, MatRef};
+use crate::memory::Workspace;
+use crate::tensor::{ConvShape, Kernel, Tensor};
+use crate::threadpool::{parallel_for, SharedSlice};
+
+pub struct Winograd;
+
+/// Tiles along one axis: 2-output tiles, ceil.
+fn tiles(o: usize) -> usize {
+    o.div_ceil(2)
+}
+
+/// Total tile count `P = i_n · ⌈o_h/2⌉ · ⌈o_w/2⌉`.
+pub fn tile_count(shape: &ConvShape) -> usize {
+    shape.input.n * tiles(shape.oh()) * tiles(shape.ow())
+}
+
+impl Convolution for Winograd {
+    fn name(&self) -> &'static str {
+        "winograd"
+    }
+
+    /// F(2×2,3×3) requires 3×3 kernels with unit stride (paper §4:
+    /// "applicable only when k_h = k_w = 3").
+    fn supports(&self, s: &ConvShape) -> bool {
+        s.kernel.kh == 3 && s.kernel.kw == 3 && s.sh == 1 && s.sw == 1
+    }
+
+    /// U (16·k_c·i_c) + V (16·i_c·P) + M (16·k_c·P) floats.
+    fn workspace_elems(&self, s: &ConvShape) -> usize {
+        let p = tile_count(s);
+        let (ic, kc) = (s.kernel.ic, s.kernel.kc);
+        16 * kc * ic + 16 * ic * p + 16 * kc * p
+    }
+
+    fn run(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        input: &Tensor,
+        kernel: &Kernel,
+        ws: &mut Workspace,
+        output: &mut Tensor,
+    ) {
+        let s = *shape;
+        assert!(self.supports(&s), "winograd: unsupported geometry {}", s.describe());
+        assert_eq!(output.shape(), s.output());
+        let (ic, kc) = (s.kernel.ic, s.kernel.kc);
+        let (oh, ow) = (s.oh(), s.ow());
+        let (th, tw) = (tiles(oh), tiles(ow));
+        let p = s.input.n * th * tw;
+
+        let (u, rest) = ws.take_split(16 * kc * ic, 16 * ic * p + 16 * kc * p);
+        let (v, m) = rest.split_at_mut(16 * ic * p);
+
+        // ---- 1. Kernel transform: U[xy][o][i] = (G g Gᵀ)[xy] ----
+        kernel_transform(ctx, kernel, ic, kc, u);
+
+        // ---- 2. Input transform: V[xy][i][p] = (Bᵀ d B)[xy] ----
+        input_transform(ctx, &s, input, th, tw, v);
+
+        // ---- 3. 16 batched GEMMs: M[xy] = U[xy] (kc×ic) × V[xy] (ic×P) ----
+        {
+            let m_shared = SharedSlice::new(m);
+            let u_ref: &[f32] = u;
+            let v_ref: &[f32] = v;
+            let inner = if ctx.threads >= 16 { 1 } else { ctx.threads };
+            parallel_for(ctx.threads.min(16), 16, |xy| {
+                let m_data = m_shared.slice();
+                let a = MatRef::new(&u_ref[xy * kc * ic..(xy + 1) * kc * ic], kc, ic);
+                let b = MatRef::new(&v_ref[xy * ic * p..(xy + 1) * ic * p], ic, p);
+                let mut c = MatMut::new(&mut m_data[xy * kc * p..(xy + 1) * kc * p], kc, p);
+                gemm_ex(a, b, &mut c, 1.0, 0.0, inner, ctx.blocks);
+            });
+        }
+
+        // ---- 4. Output transform: Y = Aᵀ m A per (tile, kc), clipped ----
+        output_transform(ctx, &s, m, th, tw, output);
+    }
+}
+
+/// G g Gᵀ for every (o, i); U laid out as 16 matrices of kc×ic.
+fn kernel_transform(ctx: &ConvContext, kernel: &Kernel, ic: usize, kc: usize, u: &mut [f32]) {
+    let u_shared = SharedSlice::new(u);
+    parallel_for(ctx.threads, kc * ic, |t| {
+        let u_data = u_shared.slice();
+        let o = t / ic;
+        let i = t % ic;
+        // g: 3x3 slice for (i, o).
+        let mut g = [[0.0f32; 3]; 3];
+        for (r, grow) in g.iter_mut().enumerate() {
+            for (c, gval) in grow.iter_mut().enumerate() {
+                *gval = kernel.at(r, c, i, o);
+            }
+        }
+        // G (4x3): rows [1,0,0],[.5,.5,.5],[.5,-.5,.5],[0,0,1]
+        // t1 = G·g (4x3)
+        let mut t1 = [[0.0f32; 3]; 4];
+        for c in 0..3 {
+            t1[0][c] = g[0][c];
+            t1[1][c] = 0.5 * (g[0][c] + g[1][c] + g[2][c]);
+            t1[2][c] = 0.5 * (g[0][c] - g[1][c] + g[2][c]);
+            t1[3][c] = g[2][c];
+        }
+        // ugg = t1·Gᵀ (4x4)
+        for (r, row) in t1.iter().enumerate() {
+            let out = [
+                row[0],
+                0.5 * (row[0] + row[1] + row[2]),
+                0.5 * (row[0] - row[1] + row[2]),
+                row[2],
+            ];
+            for (xy_c, &val) in out.iter().enumerate() {
+                let xy = r * 4 + xy_c;
+                u_data[xy * kc * ic + o * ic + i] = val;
+            }
+        }
+    });
+}
+
+/// Bᵀ d B for every (tile, i); V laid out as 16 matrices of ic×P. Input
+/// tiles read with zero padding at the bottom/right edges (odd o_h/o_w).
+fn input_transform(
+    ctx: &ConvContext,
+    s: &ConvShape,
+    input: &Tensor,
+    th: usize,
+    tw: usize,
+    v: &mut [f32],
+) {
+    let ish = s.input;
+    let ic = s.kernel.ic;
+    let p = ish.n * th * tw;
+    let v_shared = SharedSlice::new(v);
+    let in_data = input.data();
+    parallel_for(ctx.threads, p, |tile| {
+        let v_data = v_shared.slice();
+        let n = tile / (th * tw);
+        let ty = (tile / tw) % th;
+        let tx = tile % tw;
+        let (y0, x0) = (2 * ty, 2 * tx);
+        for i in 0..ic {
+            // d: 4x4 input patch (zero beyond bounds).
+            let mut d = [[0.0f32; 4]; 4];
+            for (r, drow) in d.iter_mut().enumerate() {
+                let y = y0 + r;
+                if y >= ish.h {
+                    continue;
+                }
+                for (c, dval) in drow.iter_mut().enumerate() {
+                    let x = x0 + c;
+                    if x < ish.w {
+                        *dval = in_data[ish.index(n, y, x, i)];
+                    }
+                }
+            }
+            // t1 = Bᵀ·d where Bᵀ rows: [1,0,-1,0],[0,1,1,0],[0,-1,1,0],[0,1,0,-1]
+            let mut t1 = [[0.0f32; 4]; 4];
+            for c in 0..4 {
+                t1[0][c] = d[0][c] - d[2][c];
+                t1[1][c] = d[1][c] + d[2][c];
+                t1[2][c] = d[2][c] - d[1][c];
+                t1[3][c] = d[1][c] - d[3][c];
+            }
+            // vt = t1·B (apply the same combination to columns).
+            for (r, row) in t1.iter().enumerate() {
+                let out = [
+                    row[0] - row[2],
+                    row[1] + row[2],
+                    row[2] - row[1],
+                    row[1] - row[3],
+                ];
+                for (c, &val) in out.iter().enumerate() {
+                    let xy = r * 4 + c;
+                    v_data[xy * ic * p + i * p + tile] = val;
+                }
+            }
+        }
+    });
+}
+
+/// Y = Aᵀ m A per (tile, o); writes 2×2 outputs with edge clipping.
+fn output_transform(
+    ctx: &ConvContext,
+    s: &ConvShape,
+    m: &[f32],
+    th: usize,
+    tw: usize,
+    output: &mut Tensor,
+) {
+    let osh = s.output();
+    let kc = s.kernel.kc;
+    let p = s.input.n * th * tw;
+    let out_shared = SharedSlice::new(output.data_mut());
+    parallel_for(ctx.threads, p, |tile| {
+        let out_data = out_shared.slice();
+        let n = tile / (th * tw);
+        let ty = (tile / tw) % th;
+        let tx = tile % tw;
+        let (y0, x0) = (2 * ty, 2 * tx);
+        for o in 0..kc {
+            // mm: 4x4 gathered from the 16 GEMM outputs.
+            let mut mm = [[0.0f32; 4]; 4];
+            for (r, mrow) in mm.iter_mut().enumerate() {
+                for (c, mval) in mrow.iter_mut().enumerate() {
+                    let xy = r * 4 + c;
+                    *mval = m[xy * kc * p + o * p + tile];
+                }
+            }
+            // t1 = Aᵀ·mm, Aᵀ = [1,1,1,0],[0,1,-1,-1] (2x4)
+            let mut t1 = [[0.0f32; 4]; 2];
+            for c in 0..4 {
+                t1[0][c] = mm[0][c] + mm[1][c] + mm[2][c];
+                t1[1][c] = mm[1][c] - mm[2][c] - mm[3][c];
+            }
+            // y = t1·A (2x2)
+            for (r, trow) in t1.iter().enumerate() {
+                let y = y0 + r;
+                if y >= osh.h {
+                    continue;
+                }
+                let vals = [
+                    trow[0] + trow[1] + trow[2],
+                    trow[1] - trow[2] - trow[3],
+                ];
+                for (c, &val) in vals.iter().enumerate() {
+                    let x = x0 + c;
+                    if x < osh.w {
+                        out_data[osh.index(n, y, x, o)] = val;
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct::Direct;
+    use crate::tensor::{KernelShape, Nhwc};
+    use crate::util::{assert_allclose, Rng};
+
+    fn check(n: usize, ih: usize, iw: usize, ic: usize, kc: usize, threads: usize, seed: u64) {
+        let shape = ConvShape::new(
+            Nhwc::new(n, ih, iw, ic),
+            KernelShape::new(3, 3, ic, kc),
+            1,
+            1,
+        );
+        let mut rng = Rng::new(seed);
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let ctx = ConvContext::default().with_threads(threads);
+        let mut want = Tensor::zeros(shape.output());
+        let mut got = Tensor::zeros(shape.output());
+        let mut ws = Workspace::new();
+        Direct.run(&ctx, &shape, &input, &kernel, &mut ws, &mut want);
+        Winograd.run(&ctx, &shape, &input, &kernel, &mut ws, &mut got);
+        // Winograd loses a little precision (the 0.5 factors + gather),
+        // tolerance slightly looser than the gemm-family algorithms.
+        assert_allclose(got.data(), want.data(), 1e-3, &shape.describe());
+    }
+
+    #[test]
+    fn matches_direct_even_output() {
+        check(1, 6, 6, 1, 1, 1, 1);
+        check(2, 10, 6, 3, 4, 1, 2);
+    }
+
+    #[test]
+    fn matches_direct_odd_output_needs_clipping() {
+        // o_h = o_w = 5 (odd): last tile row/col is half-valid.
+        check(1, 7, 7, 1, 1, 1, 3);
+        check(1, 9, 7, 2, 3, 1, 4);
+    }
+
+    #[test]
+    fn matches_direct_threaded() {
+        check(2, 12, 12, 4, 5, 4, 5);
+    }
+
+    #[test]
+    fn supports_only_3x3_stride1() {
+        let ok = ConvShape::new(Nhwc::new(1, 8, 8, 1), KernelShape::new(3, 3, 1, 1), 1, 1);
+        let bad_k = ConvShape::new(Nhwc::new(1, 8, 8, 1), KernelShape::new(5, 5, 1, 1), 1, 1);
+        let bad_s = ConvShape::new(Nhwc::new(1, 8, 8, 1), KernelShape::new(3, 3, 1, 1), 2, 2);
+        assert!(Winograd.supports(&ok));
+        assert!(!Winograd.supports(&bad_k));
+        assert!(!Winograd.supports(&bad_s));
+    }
+
+    #[test]
+    fn workspace_formula() {
+        let s = ConvShape::new(
+            Nhwc::new(1, 7, 7, 8),
+            KernelShape::new(3, 3, 8, 16),
+            1,
+            1,
+        );
+        let p = 3 * 3; // ⌈5/2⌉ × ⌈5/2⌉
+        assert_eq!(tile_count(&s), p);
+        assert_eq!(
+            Winograd.workspace_elems(&s),
+            16 * 16 * 8 + 16 * 8 * p + 16 * 16 * p
+        );
+        // Winograd overhead exceeds MEC's on this shape (Fig. 4b story).
+        assert!(Winograd.workspace_elems(&s) > s.mec_lowered_elems());
+    }
+
+    #[test]
+    fn identity_kernel_center() {
+        // Kernel = delta at center: winograd must reproduce the crop.
+        let shape = ConvShape::new(Nhwc::new(1, 6, 6, 1), KernelShape::new(3, 3, 1, 1), 1, 1);
+        let input = Tensor::from_fn(shape.input, |_, h, w, _| (h * 6 + w) as f32);
+        let kernel = Kernel::from_fn(shape.kernel, |h, w, _, _| {
+            if h == 1 && w == 1 {
+                1.0
+            } else {
+                0.0
+            }
+        });
+        let mut out = Tensor::zeros(shape.output());
+        Winograd.run(
+            &ConvContext::default(),
+            &shape,
+            &input,
+            &kernel,
+            &mut Workspace::new(),
+            &mut out,
+        );
+        for y in 0..4 {
+            for x in 0..4 {
+                assert!(
+                    (out.at(0, y, x, 0) - input.at(0, y + 1, x + 1, 0)).abs() < 1e-4,
+                    "y={y} x={x}"
+                );
+            }
+        }
+    }
+}

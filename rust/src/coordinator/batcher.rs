@@ -1,0 +1,147 @@
+//! Dynamic batching policy.
+//!
+//! Classic serving trade-off: larger batches amortize per-call overhead
+//! (and steer MEC toward its Solution A regime), smaller batches cut
+//! tail latency. The batcher waits at most `max_delay` for up to
+//! `max_batch` requests — whichever fills first wins.
+
+use super::queue::RequestQueue;
+use super::Request;
+use std::time::{Duration, Instant};
+
+/// Batch-forming policy.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Hard cap on batch size (paper's Server runs use 32).
+    pub max_batch: usize,
+    /// Max time the first request of a batch may wait for company.
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 32,
+            max_delay: Duration::from_millis(2),
+        }
+    }
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, max_delay: Duration) -> BatchPolicy {
+        BatchPolicy {
+            max_batch: max_batch.max(1),
+            max_delay,
+        }
+    }
+
+    /// Mobile-style: no batching at all.
+    pub fn no_batching() -> BatchPolicy {
+        BatchPolicy::new(1, Duration::ZERO)
+    }
+}
+
+/// Pulls batches off a queue according to a policy.
+pub struct Batcher<'q> {
+    queue: &'q RequestQueue,
+    policy: BatchPolicy,
+}
+
+impl<'q> Batcher<'q> {
+    pub fn new(queue: &'q RequestQueue, policy: BatchPolicy) -> Batcher<'q> {
+        Batcher { queue, policy }
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    /// Form the next batch: block for the first request (long poll),
+    /// then top up until `max_batch` or `max_delay` from the first
+    /// request's arrival. `None` = queue closed and drained.
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        // Long-poll for the first request(s).
+        let mut batch = loop {
+            match self
+                .queue
+                .pop_up_to(self.policy.max_batch, Instant::now() + Duration::from_millis(50))
+            {
+                None => return None,
+                Some(v) if v.is_empty() => continue,
+                Some(v) => break v,
+            }
+        };
+        // Top up until the delay budget expires.
+        let deadline = Instant::now() + self.policy.max_delay;
+        while batch.len() < self.policy.max_batch {
+            match self.queue.pop_up_to(self.policy.max_batch - batch.len(), deadline) {
+                None => break,
+                Some(v) if v.is_empty() => break, // deadline hit
+                Some(mut v) => batch.append(&mut v),
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{mpsc, Arc};
+
+    fn req(id: u64) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request {
+            id,
+            sample: vec![],
+            enqueued_at: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn batches_cap_at_max_batch() {
+        let q = RequestQueue::new(64);
+        for i in 0..10 {
+            q.push(req(i)).unwrap();
+        }
+        let b = Batcher::new(&q, BatchPolicy::new(4, Duration::ZERO));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].id, 0);
+    }
+
+    #[test]
+    fn no_batching_policy_returns_singletons() {
+        let q = RequestQueue::new(8);
+        for i in 0..3 {
+            q.push(req(i)).unwrap();
+        }
+        let b = Batcher::new(&q, BatchPolicy::no_batching());
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn delay_tops_up_late_arrivals() {
+        let q = Arc::new(RequestQueue::new(8));
+        q.push(req(0)).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            q2.push(req(1)).unwrap();
+        });
+        let b = Batcher::new(&q, BatchPolicy::new(8, Duration::from_millis(200)));
+        let batch = b.next_batch().unwrap();
+        h.join().unwrap();
+        assert_eq!(batch.len(), 2, "late arrival should join the batch");
+    }
+
+    #[test]
+    fn closed_queue_ends_batching() {
+        let q = RequestQueue::new(8);
+        q.close();
+        let b = Batcher::new(&q, BatchPolicy::default());
+        assert!(b.next_batch().is_none());
+    }
+}

@@ -1,0 +1,130 @@
+//! Serving metrics: counters + latency histograms, shared across workers.
+
+use crate::util::stats::{fmt_ns, Histogram};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Thread-safe serving metrics.
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    batch_size_sum: AtomicU64,
+    /// End-to-end latency (enqueue -> reply), ns.
+    latency: Mutex<Histogram>,
+    /// Model forward time per batch, ns.
+    forward: Mutex<Histogram>,
+    started: std::time::Instant,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            requests: AtomicU64::new(0),
+            responses: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_size_sum: AtomicU64::new(0),
+            latency: Mutex::new(Histogram::latency_ns()),
+            forward: Mutex::new(Histogram::latency_ns()),
+            started: std::time::Instant::now(),
+        }
+    }
+
+    pub fn record_batch(&self, batch_size: usize, forward_ns: f64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_size_sum
+            .fetch_add(batch_size as u64, Ordering::Relaxed);
+        self.forward.lock().unwrap().record(forward_ns);
+    }
+
+    pub fn record_latency(&self, ns: f64) {
+        self.responses.fetch_add(1, Ordering::Relaxed);
+        self.latency.lock().unwrap().record(ns);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batch_size_sum.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        self.latency.lock().unwrap().percentile(p)
+    }
+
+    pub fn forward_percentile(&self, p: f64) -> f64 {
+        self.forward.lock().unwrap().percentile(p)
+    }
+
+    /// Served requests per second since start.
+    pub fn throughput_rps(&self) -> f64 {
+        let served = self.responses.load(Ordering::Relaxed) as f64;
+        served / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    /// Multi-line human-readable report.
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} responses={} rejected={} batches={} mean_batch={:.2}\n\
+             latency p50={} p95={} p99={} | forward p50={} p95={}\n\
+             throughput={:.1} req/s",
+            self.requests.load(Ordering::Relaxed),
+            self.responses.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            fmt_ns(self.latency_percentile(50.0)),
+            fmt_ns(self.latency_percentile(95.0)),
+            fmt_ns(self.latency_percentile(99.0)),
+            fmt_ns(self.forward_percentile(50.0)),
+            fmt_ns(self.forward_percentile(95.0)),
+            self.throughput_rps(),
+        )
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::new();
+        m.record_batch(4, 1e6);
+        m.record_batch(8, 2e6);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 2);
+        assert!((m.mean_batch_size() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_percentiles_populate() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.record_latency(i as f64 * 1e5);
+        }
+        assert!(m.latency_percentile(50.0) > 0.0);
+        assert!(m.latency_percentile(99.0) >= m.latency_percentile(50.0));
+        assert_eq!(m.responses.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn report_renders() {
+        let m = Metrics::new();
+        m.record_batch(2, 5e5);
+        m.record_latency(1e6);
+        let r = m.report();
+        assert!(r.contains("mean_batch=2.00"));
+        assert!(r.contains("latency"));
+    }
+}

@@ -1,0 +1,84 @@
+//! Inference-serving coordinator.
+//!
+//! The deployment story the paper's intro motivates ("minimize response
+//! delay ... on end-point devices"): an always-on server that accepts
+//! single-image classification requests, groups them into mini-batches
+//! (MEC's Solution A/B dispatch is exactly a batch-size question), runs
+//! the planned engine, and reports latency/throughput.
+//!
+//! Pieces:
+//! * [`queue`]  — bounded MPSC request queue with backpressure.
+//! * [`batcher`] — dynamic batching: wait up to `max_delay` to fill a
+//!   batch of `max_batch` (vLLM/Triton-style).
+//! * [`server`] — worker threads draining batches through a shared
+//!   [`Model`](crate::model::Model), per-worker reusable workspaces.
+//! * [`metrics`] — latency histograms + counters.
+
+pub mod batcher;
+pub mod metrics;
+pub mod queue;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::Metrics;
+pub use queue::{QueueError, RequestQueue};
+pub use server::{Server, ServerConfig};
+
+use crate::tensor::Tensor;
+use std::sync::mpsc;
+
+/// A single inference request: one sample (h·w·c floats) plus a oneshot
+/// channel for the reply.
+pub struct Request {
+    pub id: u64,
+    pub sample: Vec<f32>,
+    pub enqueued_at: std::time::Instant,
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// The server's answer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    /// Class probabilities (or logits if the model has no softmax).
+    pub scores: Vec<f32>,
+    /// Argmax class.
+    pub class: usize,
+    /// Batch this request was served in (observability).
+    pub batch_size: usize,
+}
+
+/// Assemble a batch tensor from requests (NHWC, n = requests.len()).
+pub fn assemble_batch(hwc: (usize, usize, usize), requests: &[Request]) -> Tensor {
+    let (h, w, c) = hwc;
+    let per = h * w * c;
+    let mut data = Vec::with_capacity(requests.len() * per);
+    for r in requests {
+        assert_eq!(r.sample.len(), per, "request {} has wrong sample size", r.id);
+        data.extend_from_slice(&r.sample);
+    }
+    Tensor::from_vec(crate::tensor::Nhwc::new(requests.len(), h, w, c), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn assemble_batch_layout() {
+        let (tx, _rx) = mpsc::channel();
+        let reqs: Vec<Request> = (0..3)
+            .map(|i| Request {
+                id: i,
+                sample: vec![i as f32; 4],
+                enqueued_at: Instant::now(),
+                reply: tx.clone(),
+            })
+            .collect();
+        let t = assemble_batch((2, 2, 1), &reqs);
+        assert_eq!(t.shape().n, 3);
+        assert_eq!(t.sample(0), &[0.0; 4]);
+        assert_eq!(t.sample(2), &[2.0; 4]);
+    }
+}

@@ -1,0 +1,198 @@
+//! Bounded request queue with backpressure.
+//!
+//! `std::sync::mpsc` is unbounded (or rendezvous with `sync_channel`'s
+//! per-send blocking semantics we don't want for try-enqueue), so we keep
+//! our own Mutex+Condvar deque: `push` fails fast when full (the caller
+//! sheds load), `pop_up_to` blocks with a deadline — exactly the
+//! primitive the dynamic batcher needs.
+
+use super::Request;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum QueueError {
+    #[error("queue full (capacity {0})")]
+    Full(usize),
+    #[error("queue closed")]
+    Closed,
+}
+
+struct Inner {
+    items: VecDeque<Request>,
+    closed: bool,
+}
+
+/// MPMC bounded FIFO of [`Request`]s.
+pub struct RequestQueue {
+    inner: Mutex<Inner>,
+    available: Condvar,
+    capacity: usize,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize) -> RequestQueue {
+        RequestQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::with_capacity(capacity),
+                closed: false,
+            }),
+            available: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Non-blocking enqueue; `Err(Full)` applies backpressure to clients.
+    pub fn push(&self, req: Request) -> Result<(), QueueError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(QueueError::Closed);
+        }
+        if g.items.len() >= self.capacity {
+            return Err(QueueError::Full(self.capacity));
+        }
+        g.items.push_back(req);
+        drop(g);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Pop 1..=max requests. Blocks until at least one is available or
+    /// the deadline passes (returns empty vec) or the queue is closed and
+    /// drained (returns None).
+    pub fn pop_up_to(&self, max: usize, deadline: Instant) -> Option<Vec<Request>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.items.is_empty() {
+                let take = max.min(g.items.len()).max(1);
+                return Some(g.items.drain(..take).collect());
+            }
+            if g.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Some(Vec::new());
+            }
+            let (ng, timeout) = self
+                .available
+                .wait_timeout(g, deadline.duration_since(now))
+                .unwrap();
+            g = ng;
+            if timeout.timed_out() && g.items.is_empty() {
+                return if g.closed { None } else { Some(Vec::new()) };
+            }
+        }
+    }
+
+    /// Blocking pop of exactly one (no deadline) — tests/tools.
+    pub fn pop_blocking(&self) -> Option<Request> {
+        loop {
+            match self.pop_up_to(1, Instant::now() + Duration::from_secs(3600)) {
+                None => return None,
+                Some(mut v) if !v.is_empty() => return v.pop(),
+                Some(_) => continue,
+            }
+        }
+    }
+
+    /// Close: producers get `Closed`, consumers drain then get `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.available.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{mpsc, Arc};
+
+    fn req(id: u64) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request {
+            id,
+            sample: vec![],
+            enqueued_at: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let q = RequestQueue::new(8);
+        for i in 0..5 {
+            q.push(req(i)).unwrap();
+        }
+        let batch = q.pop_up_to(3, Instant::now()).unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        let batch = q.pop_up_to(10, Instant::now()).unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 4]);
+    }
+
+    #[test]
+    fn backpressure_when_full() {
+        let q = RequestQueue::new(2);
+        q.push(req(0)).unwrap();
+        q.push(req(1)).unwrap();
+        assert_eq!(q.push(req(2)), Err(QueueError::Full(2)));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn deadline_returns_empty() {
+        let q = RequestQueue::new(2);
+        let t0 = Instant::now();
+        let got = q.pop_up_to(4, t0 + Duration::from_millis(30)).unwrap();
+        assert!(got.is_empty());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn close_rejects_producers_and_drains() {
+        let q = RequestQueue::new(4);
+        q.push(req(1)).unwrap();
+        q.close();
+        assert_eq!(q.push(req(2)).unwrap_err(), QueueError::Closed);
+        // Drains the remaining item, then None.
+        let got = q.pop_up_to(4, Instant::now() + Duration::from_millis(10)).unwrap();
+        assert_eq!(got.len(), 1);
+        assert!(q.pop_up_to(4, Instant::now() + Duration::from_millis(10)).is_none());
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let q = Arc::new(RequestQueue::new(16));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            for i in 0..100 {
+                while q2.push(req(i)).is_err() {
+                    std::thread::yield_now();
+                }
+            }
+            q2.close();
+        });
+        let mut seen = 0;
+        loop {
+            match q.pop_up_to(7, Instant::now() + Duration::from_secs(5)) {
+                None => break,
+                Some(batch) => seen += batch.len(),
+            }
+        }
+        h.join().unwrap();
+        assert_eq!(seen, 100);
+    }
+}

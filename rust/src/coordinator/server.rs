@@ -1,0 +1,311 @@
+//! The serving loop: worker threads drain the queue through the model.
+//!
+//! Ownership layout: the [`Model`] is shared read-only (`Arc`); each
+//! worker owns a reusable [`Workspace`] (grows to the high-water mark on
+//! first batches, then the hot path allocates nothing but activations).
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::queue::{QueueError, RequestQueue};
+use super::{assemble_batch, Request, Response};
+use crate::conv::ConvContext;
+use crate::memory::Workspace;
+use crate::model::Model;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub workers: usize,
+    pub queue_capacity: usize,
+    pub policy: BatchPolicy,
+    pub ctx: ConvContext,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 1,
+            queue_capacity: 256,
+            policy: BatchPolicy::default(),
+            ctx: ConvContext::default(),
+        }
+    }
+}
+
+/// Handle for submitting requests to a running server.
+#[derive(Clone)]
+pub struct Client {
+    queue: Arc<RequestQueue>,
+    metrics: Arc<Metrics>,
+    next_id: Arc<AtomicU64>,
+    hwc: (usize, usize, usize),
+}
+
+impl Client {
+    /// Submit one sample; returns a receiver for the response.
+    pub fn submit(&self, sample: Vec<f32>) -> Result<mpsc::Receiver<Response>, QueueError> {
+        let (h, w, c) = self.hwc;
+        assert_eq!(sample.len(), h * w * c, "sample size mismatch");
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            sample,
+            enqueued_at: Instant::now(),
+            reply: tx,
+        };
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        match self.queue.push(req) {
+            Ok(()) => Ok(rx),
+            Err(e) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Submit and block for the answer.
+    pub fn infer(&self, sample: Vec<f32>) -> Result<Response, QueueError> {
+        let rx = self.submit(sample)?;
+        rx.recv().map_err(|_| QueueError::Closed)
+    }
+}
+
+/// A running inference server.
+pub struct Server {
+    queue: Arc<RequestQueue>,
+    metrics: Arc<Metrics>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    hwc: (usize, usize, usize),
+    next_id: Arc<AtomicU64>,
+}
+
+impl Server {
+    /// Start worker threads over a planned model.
+    pub fn start(model: Arc<Model>, cfg: ServerConfig) -> Server {
+        let queue = Arc::new(RequestQueue::new(cfg.queue_capacity));
+        let metrics = Arc::new(Metrics::new());
+        let hwc = model.input_hwc;
+        let mut workers = Vec::new();
+        for wid in 0..cfg.workers.max(1) {
+            let queue = Arc::clone(&queue);
+            let metrics = Arc::clone(&metrics);
+            let model = Arc::clone(&model);
+            let policy = cfg.policy.clone();
+            let ctx = cfg.ctx.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("mec-serve-{wid}"))
+                    .spawn(move || {
+                        worker_loop(&queue, &metrics, &model, policy, ctx);
+                    })
+                    .expect("spawn server worker"),
+            );
+        }
+        Server {
+            queue,
+            metrics,
+            workers,
+            hwc,
+            next_id: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    pub fn client(&self) -> Client {
+        Client {
+            queue: Arc::clone(&self.queue),
+            metrics: Arc::clone(&self.metrics),
+            next_id: Arc::clone(&self.next_id),
+            hwc: self.hwc,
+        }
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Stop accepting, drain, and join workers.
+    pub fn shutdown(mut self) -> Arc<Metrics> {
+        self.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        Arc::clone(&self.metrics)
+    }
+}
+
+fn worker_loop(
+    queue: &RequestQueue,
+    metrics: &Metrics,
+    model: &Model,
+    policy: BatchPolicy,
+    ctx: ConvContext,
+) {
+    let batcher = Batcher::new(queue, policy);
+    let mut ws = Workspace::new();
+    while let Some(batch) = batcher.next_batch() {
+        if batch.is_empty() {
+            continue;
+        }
+        let t0 = Instant::now();
+        let input = assemble_batch(model.input_hwc, &batch);
+        let out = model.forward(&ctx, &input, &mut ws);
+        let forward_ns = t0.elapsed().as_nanos() as f64;
+        metrics.record_batch(batch.len(), forward_ns);
+        let classes = out.shape().c;
+        for (i, req) in batch.iter().enumerate() {
+            let scores = out.data()[i * classes..(i + 1) * classes].to_vec();
+            let class = scores
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(c, _)| c)
+                .unwrap_or(0);
+            let resp = Response {
+                id: req.id,
+                scores,
+                class,
+                batch_size: batch.len(),
+            };
+            metrics.record_latency(req.enqueued_at.elapsed().as_nanos() as f64);
+            let _ = req.reply.send(resp); // receiver may have given up
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::AlgoKind;
+    use crate::model::{Layer, Model};
+    use crate::tensor::{Kernel, KernelShape};
+    use crate::util::Rng;
+    use std::time::Duration;
+
+    fn tiny_model() -> Model {
+        let mut rng = Rng::new(77);
+        let mut m = Model::new(
+            "serve-test",
+            (6, 6, 1),
+            vec![
+                Layer::Conv {
+                    kernel: Kernel::random(KernelShape::new(3, 3, 1, 2), &mut rng),
+                    bias: vec![0.0; 2],
+                    sh: 1,
+                    sw: 1,
+                    ph: 1,
+                    pw: 1,
+                },
+                Layer::Relu,
+                Layer::Flatten,
+                Layer::Dense {
+                    w: {
+                        let mut w = vec![0.0; 72 * 3];
+                        rng.fill_uniform(&mut w, -0.3, 0.3);
+                        w
+                    },
+                    bias: vec![0.0; 3],
+                    d_in: 72,
+                    d_out: 3,
+                },
+                Layer::Softmax,
+            ],
+        );
+        m.pin_algo(AlgoKind::Mec);
+        m
+    }
+
+    #[test]
+    fn serves_and_answers() {
+        let server = Server::start(Arc::new(tiny_model()), ServerConfig::default());
+        let client = server.client();
+        let mut rng = Rng::new(1);
+        let mut sample = vec![0.0; 36];
+        rng.fill_uniform(&mut sample, 0.0, 1.0);
+        let resp = client.infer(sample).unwrap();
+        assert_eq!(resp.scores.len(), 3);
+        assert!(resp.class < 3);
+        let metrics = server.shutdown();
+        assert_eq!(metrics.responses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn batch_answers_match_standalone_forward() {
+        // Responses through the server must equal a direct model call.
+        let model = Arc::new(tiny_model());
+        let server = Server::start(
+            Arc::clone(&model),
+            ServerConfig {
+                policy: BatchPolicy::new(8, Duration::from_millis(20)),
+                ..ServerConfig::default()
+            },
+        );
+        let client = server.client();
+        let mut rng = Rng::new(5);
+        let samples: Vec<Vec<f32>> = (0..6)
+            .map(|_| {
+                let mut s = vec![0.0; 36];
+                rng.fill_uniform(&mut s, -1.0, 1.0);
+                s
+            })
+            .collect();
+        let rxs: Vec<_> = samples
+            .iter()
+            .map(|s| client.submit(s.clone()).unwrap())
+            .collect();
+        let responses: Vec<Response> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        server.shutdown();
+        // Standalone forward, batch of 1 each (batch-size independent).
+        let ctx = ConvContext::default();
+        let mut ws = crate::memory::Workspace::new();
+        for (s, resp) in samples.iter().zip(&responses) {
+            let t = crate::tensor::Tensor::from_vec(
+                crate::tensor::Nhwc::new(1, 6, 6, 1),
+                s.clone(),
+            );
+            let want = model.forward(&ctx, &t, &mut ws);
+            crate::util::assert_allclose(&resp.scores, want.data(), 1e-4, "server vs direct");
+        }
+    }
+
+    #[test]
+    fn dynamic_batching_groups_requests() {
+        let server = Server::start(
+            Arc::new(tiny_model()),
+            ServerConfig {
+                policy: BatchPolicy::new(16, Duration::from_millis(50)),
+                ..ServerConfig::default()
+            },
+        );
+        let client = server.client();
+        let rxs: Vec<_> = (0..8)
+            .map(|_| client.submit(vec![0.5; 36]).unwrap())
+            .collect();
+        let batch_sizes: Vec<usize> = rxs.into_iter().map(|rx| rx.recv().unwrap().batch_size).collect();
+        let metrics = server.shutdown();
+        // All 8 should have been served; at least one batch had > 1 request.
+        assert_eq!(metrics.responses.load(Ordering::Relaxed), 8);
+        assert!(
+            batch_sizes.iter().any(|&b| b > 1),
+            "expected dynamic batching to form a multi-request batch, got {batch_sizes:?}"
+        );
+    }
+
+    #[test]
+    fn shutdown_is_clean_under_load() {
+        let server = Server::start(Arc::new(tiny_model()), ServerConfig::default());
+        let client = server.client();
+        for _ in 0..20 {
+            let _ = client.submit(vec![0.1; 36]);
+        }
+        let metrics = server.shutdown();
+        // Everything accepted was answered (drain semantics).
+        assert_eq!(
+            metrics.responses.load(Ordering::Relaxed)
+                + metrics.rejected.load(Ordering::Relaxed),
+            metrics.requests.load(Ordering::Relaxed)
+        );
+    }
+}

@@ -1,0 +1,280 @@
+//! FFT substrate — our stand-in for cuFFT, used by the FFT-based
+//! convolution baseline (paper §2.2, Fig. 4e/f).
+//!
+//! Iterative radix-2 Cooley–Tukey over `Complex32`, plus 2-D transforms
+//! (row FFTs then column FFTs). Sizes are rounded up to powers of two by
+//! the caller — exactly the padding that gives FFT-based convolution its
+//! notorious memory overhead, which Fig. 4e measures.
+
+use std::f64::consts::PI;
+
+/// Minimal complex number (num-complex is not vendored).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct C32 {
+    pub re: f32,
+    pub im: f32,
+}
+
+impl C32 {
+    pub const ZERO: C32 = C32 { re: 0.0, im: 0.0 };
+
+    pub fn new(re: f32, im: f32) -> C32 {
+        C32 { re, im }
+    }
+
+    #[inline(always)]
+    pub fn add(self, o: C32) -> C32 {
+        C32::new(self.re + o.re, self.im + o.im)
+    }
+
+    #[inline(always)]
+    pub fn sub(self, o: C32) -> C32 {
+        C32::new(self.re - o.re, self.im - o.im)
+    }
+
+    #[inline(always)]
+    pub fn mul(self, o: C32) -> C32 {
+        C32::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+
+    pub fn conj(self) -> C32 {
+        C32::new(self.re, -self.im)
+    }
+
+    pub fn scale(self, s: f32) -> C32 {
+        C32::new(self.re * s, self.im * s)
+    }
+}
+
+/// Next power of two >= n (n >= 1).
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// Precomputed twiddle table + bit-reversal permutation for length `n`
+/// (power of two). Reused across the many per-channel transforms of one
+/// convolution, which matters: twiddle computation is all `sin`/`cos`.
+#[derive(Debug, Clone)]
+pub struct FftPlan {
+    pub n: usize,
+    /// twiddles[s] holds the stage-s factors, total n/2 per full table; we
+    /// store one flat half-length table: w[j] = exp(-2πi·j/n), j < n/2.
+    w: Vec<C32>,
+    rev: Vec<u32>,
+}
+
+impl FftPlan {
+    pub fn new(n: usize) -> FftPlan {
+        assert!(n.is_power_of_two(), "FftPlan requires power of two, got {n}");
+        let mut w = Vec::with_capacity(n / 2);
+        for j in 0..n / 2 {
+            let ang = -2.0 * PI * j as f64 / n as f64;
+            w.push(C32::new(ang.cos() as f32, ang.sin() as f32));
+        }
+        let bits = n.trailing_zeros();
+        let rev = (0..n as u32)
+            .map(|i| if n > 1 { i.reverse_bits() >> (32 - bits) } else { 0 })
+            .collect();
+        FftPlan { n, w, rev }
+    }
+
+    /// In-place forward FFT of `buf` (length n).
+    pub fn forward(&self, buf: &mut [C32]) {
+        self.transform(buf, false);
+    }
+
+    /// In-place inverse FFT (includes the 1/n normalization).
+    pub fn inverse(&self, buf: &mut [C32]) {
+        self.transform(buf, true);
+        let s = 1.0 / self.n as f32;
+        for v in buf.iter_mut() {
+            *v = v.scale(s);
+        }
+    }
+
+    fn transform(&self, buf: &mut [C32], inverse: bool) {
+        let n = self.n;
+        assert_eq!(buf.len(), n);
+        if n == 1 {
+            return;
+        }
+        // Bit-reversal permutation.
+        for i in 0..n {
+            let j = self.rev[i] as usize;
+            if i < j {
+                buf.swap(i, j);
+            }
+        }
+        // Butterflies.
+        let mut len = 2;
+        while len <= n {
+            let half = len / 2;
+            let step = n / len; // stride into the half-length twiddle table
+            let mut start = 0;
+            while start < n {
+                for k in 0..half {
+                    let mut w = self.w[k * step];
+                    if inverse {
+                        w = w.conj();
+                    }
+                    let a = buf[start + k];
+                    let b = buf[start + k + half].mul(w);
+                    buf[start + k] = a.add(b);
+                    buf[start + k + half] = a.sub(b);
+                }
+                start += len;
+            }
+            len <<= 1;
+        }
+    }
+}
+
+/// 2-D FFT over a row-major `rows × cols` grid (both powers of two),
+/// in place: row transforms, then column transforms (via a scratch column).
+pub fn fft2d(buf: &mut [C32], rows: usize, cols: usize, inverse: bool) {
+    assert_eq!(buf.len(), rows * cols);
+    let row_plan = FftPlan::new(cols);
+    let col_plan = FftPlan::new(rows);
+    for r in 0..rows {
+        let row = &mut buf[r * cols..(r + 1) * cols];
+        if inverse {
+            row_plan.inverse(row);
+        } else {
+            row_plan.forward(row);
+        }
+    }
+    let mut col = vec![C32::ZERO; rows];
+    for c in 0..cols {
+        for r in 0..rows {
+            col[r] = buf[r * cols + c];
+        }
+        if inverse {
+            col_plan.inverse(&mut col);
+        } else {
+            col_plan.forward(&mut col);
+        }
+        for r in 0..rows {
+            buf[r * cols + c] = col[r];
+        }
+    }
+}
+
+/// Pointwise `a[i] *= b[i]` over complex spectra — the frequency-domain
+/// "multiplication is convolution" step.
+pub fn pointwise_mul_acc(acc: &mut [C32], a: &[C32], b: &[C32]) {
+    assert_eq!(acc.len(), a.len());
+    assert_eq!(a.len(), b.len());
+    for i in 0..acc.len() {
+        acc[i] = acc[i].add(a[i].mul(b[i]));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_dft(x: &[C32], inverse: bool) -> Vec<C32> {
+        let n = x.len();
+        let sign = if inverse { 1.0 } else { -1.0 };
+        let mut out = vec![C32::ZERO; n];
+        for (k, o) in out.iter_mut().enumerate() {
+            let mut s = C32::ZERO;
+            for (j, &v) in x.iter().enumerate() {
+                let ang = sign * 2.0 * PI * (k * j) as f64 / n as f64;
+                s = s.add(v.mul(C32::new(ang.cos() as f32, ang.sin() as f32)));
+            }
+            *o = if inverse { s.scale(1.0 / n as f32) } else { s };
+        }
+        out
+    }
+
+    fn close(a: &[C32], b: &[C32], tol: f32) -> bool {
+        a.iter()
+            .zip(b)
+            .all(|(x, y)| (x.re - y.re).abs() < tol && (x.im - y.im).abs() < tol)
+    }
+
+    #[test]
+    fn fft_matches_naive_dft() {
+        for n in [1usize, 2, 4, 8, 16, 64] {
+            let plan = FftPlan::new(n);
+            let mut x: Vec<C32> = (0..n)
+                .map(|i| C32::new((i as f32 * 0.7).sin(), (i as f32 * 0.3).cos()))
+                .collect();
+            let want = naive_dft(&x, false);
+            plan.forward(&mut x);
+            assert!(close(&x, &want, 1e-3), "n={n}");
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let n = 32;
+        let plan = FftPlan::new(n);
+        let orig: Vec<C32> = (0..n).map(|i| C32::new(i as f32, -(i as f32) / 3.0)).collect();
+        let mut x = orig.clone();
+        plan.forward(&mut x);
+        plan.inverse(&mut x);
+        assert!(close(&x, &orig, 1e-3));
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let n = 64;
+        let plan = FftPlan::new(n);
+        let x: Vec<C32> = (0..n).map(|i| C32::new((i as f32).sin(), 0.0)).collect();
+        let e_time: f64 = x.iter().map(|v| (v.re * v.re + v.im * v.im) as f64).sum();
+        let mut f = x.clone();
+        plan.forward(&mut f);
+        let e_freq: f64 =
+            f.iter().map(|v| (v.re * v.re + v.im * v.im) as f64).sum::<f64>() / n as f64;
+        assert!((e_time - e_freq).abs() / e_time < 1e-4);
+    }
+
+    #[test]
+    fn fft2d_roundtrip() {
+        let (r, c) = (8, 16);
+        let orig: Vec<C32> = (0..r * c).map(|i| C32::new((i % 13) as f32, 0.0)).collect();
+        let mut x = orig.clone();
+        fft2d(&mut x, r, c, false);
+        fft2d(&mut x, r, c, true);
+        assert!(close(&x, &orig, 1e-3));
+    }
+
+    #[test]
+    fn fft_convolution_theorem_1d() {
+        // Circular conv of x and h via FFT == naive circular conv.
+        let n = 16;
+        let plan = FftPlan::new(n);
+        let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.9).sin()).collect();
+        let h: Vec<f32> = (0..n).map(|i| if i < 3 { 1.0 } else { 0.0 }).collect();
+        let mut want = vec![0.0f32; n];
+        for i in 0..n {
+            for j in 0..n {
+                want[(i + j) % n] += x[i] * h[j];
+            }
+        }
+        let mut xf: Vec<C32> = x.iter().map(|&v| C32::new(v, 0.0)).collect();
+        let mut hf: Vec<C32> = h.iter().map(|&v| C32::new(v, 0.0)).collect();
+        plan.forward(&mut xf);
+        plan.forward(&mut hf);
+        let mut prod = vec![C32::ZERO; n];
+        pointwise_mul_acc(&mut prod, &xf, &hf);
+        plan.inverse(&mut prod);
+        for i in 0..n {
+            assert!((prod[i].re - want[i]).abs() < 1e-3, "i={i}");
+            assert!(prod[i].im.abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn next_pow2_values() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(7), 8);
+        assert_eq!(next_pow2(8), 8);
+        assert_eq!(next_pow2(227), 256);
+    }
+}

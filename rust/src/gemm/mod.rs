@@ -1,0 +1,699 @@
+//! Single-precision GEMM substrate — our stand-in for OpenBLAS/cuBLAS.
+//!
+//! The paper's whole point is that both im2col and MEC reduce convolution
+//! to `sgemm` calls; MEC additionally requires the BLAS *leading dimension*
+//! trick: its vertical partitions P,Q,R,… of the lowered matrix L are
+//! overlapping sub-matrices specified by a start pointer and
+//! `ld = i_h·k_w·i_c` (paper §3.2). So the one hard requirement here is
+//! supporting **row stride ≠ row length** on all of A, B, C.
+//!
+//! Implementation: classic Goto-style blocking (KC×MC×NC panels, packed A
+//! and B, an MR×NR register micro-kernel that LLVM auto-vectorizes), with
+//! the MC loop parallelized over the caller-provided thread count — the
+//! same structure OpenBLAS uses, scaled down.
+
+pub mod micro;
+pub mod pack;
+
+use crate::threadpool::parallel_for;
+use micro::{MR, NR};
+
+/// Immutable matrix view: `rows × cols` with row stride `rs`
+/// (`rs >= cols`; `rs > cols` expresses BLAS `ld` sub-matrices).
+#[derive(Debug, Clone, Copy)]
+pub struct MatRef<'a> {
+    pub data: &'a [f32],
+    pub rows: usize,
+    pub cols: usize,
+    pub rs: usize,
+}
+
+impl<'a> MatRef<'a> {
+    pub fn new(data: &'a [f32], rows: usize, cols: usize) -> MatRef<'a> {
+        MatRef::strided(data, rows, cols, cols)
+    }
+
+    pub fn strided(data: &'a [f32], rows: usize, cols: usize, rs: usize) -> MatRef<'a> {
+        assert!(rs >= cols, "row stride {rs} < cols {cols}");
+        if rows > 0 {
+            assert!(
+                (rows - 1) * rs + cols <= data.len(),
+                "view {rows}x{cols} (rs={rs}) exceeds buffer of {}",
+                data.len()
+            );
+        }
+        MatRef { data, rows, cols, rs }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.rs + c]
+    }
+
+    /// Sub-view of rows `r0..r0+nr`, cols `c0..c0+nc`.
+    pub fn sub(&self, r0: usize, nr: usize, c0: usize, nc: usize) -> MatRef<'a> {
+        assert!(r0 + nr <= self.rows && c0 + nc <= self.cols);
+        MatRef::strided(&self.data[r0 * self.rs + c0..], nr, nc, self.rs)
+    }
+}
+
+/// Mutable matrix view with row stride.
+#[derive(Debug)]
+pub struct MatMut<'a> {
+    pub data: &'a mut [f32],
+    pub rows: usize,
+    pub cols: usize,
+    pub rs: usize,
+}
+
+impl<'a> MatMut<'a> {
+    pub fn new(data: &'a mut [f32], rows: usize, cols: usize) -> MatMut<'a> {
+        MatMut::strided(data, rows, cols, cols)
+    }
+
+    pub fn strided(data: &'a mut [f32], rows: usize, cols: usize, rs: usize) -> MatMut<'a> {
+        assert!(rs >= cols);
+        if rows > 0 {
+            assert!((rows - 1) * rs + cols <= data.len());
+        }
+        MatMut { data, rows, cols, rs }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.rs + c]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.rs + c] = v;
+    }
+
+    pub fn as_ref(&self) -> MatRef<'_> {
+        MatRef {
+            data: self.data,
+            rows: self.rows,
+            cols: self.cols,
+            rs: self.rs,
+        }
+    }
+}
+
+/// Cache-blocking parameters. Tunable for the §Perf pass and the
+/// `ablation_gemm` bench.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockSizes {
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
+}
+
+impl Default for BlockSizes {
+    fn default() -> Self {
+        // Sized for ~32 KB L1 / 256 KB-1 MB L2: A panel MC×KC ≈ 128 KB,
+        // B panel KC×NC ≈ 512 KB.
+        BlockSizes {
+            mc: 128,
+            kc: 256,
+            nc: 512,
+        }
+    }
+}
+
+/// `C = A × B` (beta = 0), single-threaded, default blocking.
+pub fn gemm(a: MatRef<'_>, b: MatRef<'_>, c: &mut MatMut<'_>) {
+    gemm_ex(a, b, c, 1.0, 0.0, 1, BlockSizes::default());
+}
+
+/// `C = alpha·A×B + beta·C` with explicit thread count and blocking.
+///
+/// Dimensions: A is m×k, B is k×n, C is m×n (all row-major views).
+/// Parallelism: the M dimension is split across threads (row panels are
+/// independent); each thread packs its own A panels, B panels are packed
+/// once per (KC,NC) tile and shared read-only.
+pub fn gemm_ex(
+    a: MatRef<'_>,
+    b: MatRef<'_>,
+    c: &mut MatMut<'_>,
+    alpha: f32,
+    beta: f32,
+    threads: usize,
+    bs: BlockSizes,
+) {
+    let (m, k) = (a.rows, a.cols);
+    let n = b.cols;
+    assert_eq!(b.rows, k, "gemm: A cols {k} != B rows {}", b.rows);
+    assert_eq!(c.rows, m, "gemm: C rows");
+    assert_eq!(c.cols, n, "gemm: C cols");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        scale_c(c, beta);
+        return;
+    }
+
+    // Apply beta once up front so the micro-kernel can always accumulate.
+    scale_c(c, beta);
+
+    let crs = c.rs;
+    // Parallel partitioning: threads write disjoint row panels of C,
+    // rebuilt from a SharedSlice (see threadpool docs for the contract).
+    let c_shared = crate::threadpool::SharedSlice::new(c.data);
+
+    let row_panels: Vec<(usize, usize)> = split_ranges(m, threads.max(1));
+    let nthreads = row_panels.len();
+
+    // Pack B once per (pc, jc) tile, shared across row panels. To keep the
+    // code lock-free we let each thread pack B redundantly only when
+    // running multi-threaded would contend; measurement (§Perf) showed
+    // per-thread packing of B is cheap relative to the FLOPs at the sizes
+    // the conv layers produce, and it avoids a barrier.
+    parallel_for(nthreads, nthreads, |t| {
+        let (r0, r1) = row_panels[t];
+        if r0 == r1 {
+            return;
+        }
+        // Rebuild this thread's disjoint C row panel.
+        let c_data: &mut [f32] = c_shared.slice();
+        let mut c_panel = MatMut::strided(
+            &mut c_data[r0 * crs..],
+            r1 - r0,
+            n,
+            crs,
+        );
+        let a_panel = a.sub(r0, r1 - r0, 0, k);
+        gemm_serial(a_panel, b, &mut c_panel, alpha, bs);
+    });
+}
+
+/// B packed once for reuse across many GEMM calls that share the same
+/// right-hand side — MEC's exact situation: the kernel matrix K is
+/// multiplied by `o_h` (Solution A) or `i_n·o_h` (Solution B)
+/// overlapping partitions of L. Packing K per call cost ~2× on cv6-like
+/// shapes (§Perf); packing once removes that entirely.
+///
+/// Layout: tiles in (pc, jc) loop order; tile (pc, jc) holds the
+/// `kb × nb` block packed into NR-column strips (see [`pack::pack_b`]).
+#[derive(Debug, Clone)]
+pub struct PackedB {
+    pub k: usize,
+    pub n: usize,
+    pub bs: BlockSizes,
+    data: Vec<f32>,
+    /// Start offset of each (pc-block, jc-block) tile.
+    tile_offsets: Vec<usize>,
+    n_blocks: usize,
+}
+
+impl PackedB {
+    /// Pack the whole of B.
+    pub fn pack(b: MatRef<'_>, bs: BlockSizes) -> PackedB {
+        let (k, n) = (b.rows, b.cols);
+        let k_blocks = k.div_ceil(bs.kc).max(1);
+        let n_blocks = n.div_ceil(bs.nc).max(1);
+        let mut data = Vec::new();
+        let mut tile_offsets = Vec::with_capacity(k_blocks * n_blocks);
+        for pb in 0..k_blocks {
+            let pc = pb * bs.kc;
+            let kb = bs.kc.min(k - pc);
+            for jb in 0..n_blocks {
+                let jc = jb * bs.nc;
+                let nb = bs.nc.min(n - jc);
+                tile_offsets.push(data.len());
+                let tile_len = nb.div_ceil(NR) * kb * NR;
+                let start = data.len();
+                data.resize(start + tile_len, 0.0);
+                pack::pack_b(b.sub(pc, kb, jc, nb), &mut data[start..]);
+            }
+        }
+        let _ = k_blocks; // implicit in tile_offsets length
+        PackedB {
+            k,
+            n,
+            bs,
+            data,
+            tile_offsets,
+            n_blocks,
+        }
+    }
+
+    fn tile(&self, pb: usize, jb: usize) -> &[f32] {
+        let idx = pb * self.n_blocks + jb;
+        let start = self.tile_offsets[idx];
+        let end = self
+            .tile_offsets
+            .get(idx + 1)
+            .copied()
+            .unwrap_or(self.data.len());
+        &self.data[start..end]
+    }
+
+    /// Bytes held by the packed copy.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// `C = A × pb` with B pre-packed (beta=0), serial. A's packing scratch
+/// is a reused thread-local buffer — the serving hot path allocates
+/// nothing here after warmup.
+pub fn gemm_prepacked(a: MatRef<'_>, pb: &PackedB, c: &mut MatMut<'_>) {
+    assert_eq!(a.cols, pb.k, "gemm_prepacked: A cols vs packed B rows");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, pb.n);
+    scale_c(c, 0.0);
+    gemm_serial_inner(a, BSource::Packed(pb), c, 1.0, pb.bs);
+}
+
+/// Batched `C[i] = A[i] × pb` with the batch loop INSIDE the (pc, jc)
+/// tile loops, so each packed-B tile is streamed from memory once and
+/// reused (warm) across all batch entries.
+///
+/// §Perf iteration 3: MEC's Solution A issues `o_h` gemms whose A
+/// matrices are tiny (`m = i_n·o_w`, e.g. 5 on cv12) while K is large
+/// (9.4 MB on cv12) — per-gemm K traffic dominated. This fused order
+/// cut cv12 from 9.5 ms to ~7 ms mobile. Serial by design (the mobile
+/// platform); the threaded path parallelizes over batch entries instead.
+pub fn gemm_prepacked_batch(a: &[MatRef<'_>], pb: &PackedB, c: &mut [MatMut<'_>]) {
+    assert_eq!(a.len(), c.len());
+    for (ai, ci) in a.iter().zip(c.iter_mut()) {
+        assert_eq!(ai.cols, pb.k);
+        assert_eq!(ci.rows, ai.rows);
+        assert_eq!(ci.cols, pb.n);
+        scale_c(ci, 0.0);
+    }
+    let bs = pb.bs;
+    let k = pb.k;
+    let n = pb.n;
+    SCRATCH.with(|scratch| {
+        let mut guard = scratch.borrow_mut();
+        let (packed_a, _) = &mut *guard;
+        let max_m = a.iter().map(|x| x.rows).max().unwrap_or(0);
+        let pa_len = bs.mc.min(max_m.max(1)).next_multiple_of(MR) * bs.kc.min(k);
+        if packed_a.len() < pa_len {
+            packed_a.resize(pa_len, 0.0);
+        }
+        let mut acc = [0.0f32; MR * NR];
+        let mut pc = 0;
+        let mut pb_idx = 0;
+        while pc < k {
+            let kb = bs.kc.min(k - pc);
+            let mut jc = 0;
+            let mut jb_idx = 0;
+            while jc < n {
+                let nb = bs.nc.min(n - jc);
+                let b_tile = pb.tile(pb_idx, jb_idx);
+                // Batch loop inside the tile: B tile stays cache-warm.
+                for (ai, ci) in a.iter().zip(c.iter_mut()) {
+                    let m = ai.rows;
+                    let mut ic = 0;
+                    while ic < m {
+                        let mb = bs.mc.min(m - ic);
+                        pack::pack_a(ai.sub(ic, mb, pc, kb), packed_a);
+                        let mut jr = 0;
+                        while jr < nb {
+                            let nr = NR.min(nb - jr);
+                            let bp = &b_tile[(jr / NR) * kb * NR..(jr / NR + 1) * kb * NR];
+                            let mut ir = 0;
+                            while ir < mb {
+                                let mr = MR.min(mb - ir);
+                                let ap =
+                                    &packed_a[(ir / MR) * kb * MR..(ir / MR + 1) * kb * MR];
+                                if mr == MR {
+                                    micro::kernel(ap, bp, kb, &mut acc);
+                                } else {
+                                    micro::kernel_edge(ap, bp, kb, &mut acc, mr);
+                                }
+                                for r in 0..mr {
+                                    let crow = (ic + ir + r) * ci.rs + jc + jr;
+                                    for col in 0..nr {
+                                        ci.data[crow + col] += acc[r * NR + col];
+                                    }
+                                }
+                                ir += MR;
+                            }
+                            jr += NR;
+                        }
+                        ic += bs.mc;
+                    }
+                }
+                jc += bs.nc;
+                jb_idx += 1;
+            }
+            pc += bs.kc;
+            pb_idx += 1;
+        }
+    });
+}
+
+/// Serial blocked gemm over one row panel: C += alpha·A×B (beta already
+/// applied by the caller). B is packed per (pc, jc) tile.
+fn gemm_serial(a: MatRef<'_>, b: MatRef<'_>, c: &mut MatMut<'_>, alpha: f32, bs: BlockSizes) {
+    gemm_serial_inner(a, BSource::Raw(b), c, alpha, bs);
+}
+
+enum BSource<'a> {
+    Raw(MatRef<'a>),
+    Packed(&'a PackedB),
+}
+
+thread_local! {
+    /// Reused packing scratch (A always; B when not prepacked).
+    static SCRATCH: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+}
+
+fn gemm_serial_inner(
+    a: MatRef<'_>,
+    b: BSource<'_>,
+    c: &mut MatMut<'_>,
+    alpha: f32,
+    bs: BlockSizes,
+) {
+    let (m, k) = (a.rows, a.cols);
+    let n = c.cols;
+    SCRATCH.with(|scratch| {
+        let mut guard = scratch.borrow_mut();
+        let (packed_a, packed_b) = &mut *guard;
+        let pa_len = bs.mc.min(m).next_multiple_of(MR) * bs.kc.min(k);
+        if packed_a.len() < pa_len {
+            packed_a.resize(pa_len, 0.0);
+        }
+        let pb_len = bs.kc.min(k) * bs.nc.min(n).next_multiple_of(NR);
+        if matches!(b, BSource::Raw(_)) && packed_b.len() < pb_len {
+            packed_b.resize(pb_len, 0.0);
+        }
+        let mut acc = [0.0f32; MR * NR];
+
+        let mut pc = 0;
+        let mut pb_idx = 0;
+        while pc < k {
+            let kb = bs.kc.min(k - pc);
+            let mut jc = 0;
+            let mut jb_idx = 0;
+            while jc < n {
+                let nb = bs.nc.min(n - jc);
+                let b_tile: &[f32] = match &b {
+                    BSource::Raw(braw) => {
+                        pack::pack_b(braw.sub(pc, kb, jc, nb), packed_b);
+                        &packed_b[..]
+                    }
+                    BSource::Packed(p) => p.tile(pb_idx, jb_idx),
+                };
+                let mut ic = 0;
+                while ic < m {
+                    let mb = bs.mc.min(m - ic);
+                    pack::pack_a(a.sub(ic, mb, pc, kb), packed_a);
+                    // Macro-kernel: packed A (mb×kb) times packed B (kb×nb).
+                    // Packed layouts (see pack.rs): A strips of MR rows at
+                    // offset (ir/MR)·kb·MR, B strips of NR cols at
+                    // offset (jr/NR)·kb·NR; both zero-padded at the edges.
+                    let mut jr = 0;
+                    while jr < nb {
+                        let nr = NR.min(nb - jr);
+                        let bp = &b_tile[(jr / NR) * kb * NR..(jr / NR + 1) * kb * NR];
+                        let mut ir = 0;
+                        while ir < mb {
+                            let mr = MR.min(mb - ir);
+                            let ap = &packed_a[(ir / MR) * kb * MR..(ir / MR + 1) * kb * MR];
+                            if mr == MR {
+                                micro::kernel(ap, bp, kb, &mut acc);
+                            } else {
+                                micro::kernel_edge(ap, bp, kb, &mut acc, mr);
+                            }
+                            // Accumulate into C with alpha.
+                            for r in 0..mr {
+                                let crow = (ic + ir + r) * c.rs + jc + jr;
+                                for col in 0..nr {
+                                    c.data[crow + col] += alpha * acc[r * NR + col];
+                                }
+                            }
+                            ir += MR;
+                        }
+                        jr += NR;
+                    }
+                    ic += bs.mc;
+                }
+                jc += bs.nc;
+                jb_idx += 1;
+            }
+            pc += bs.kc;
+            pb_idx += 1;
+        }
+    });
+}
+
+fn scale_c(c: &mut MatMut<'_>, beta: f32) {
+    if beta == 1.0 {
+        return;
+    }
+    for r in 0..c.rows {
+        let row = &mut c.data[r * c.rs..r * c.rs + c.cols];
+        if beta == 0.0 {
+            row.fill(0.0);
+        } else {
+            for v in row.iter_mut() {
+                *v *= beta;
+            }
+        }
+    }
+}
+
+/// Split `0..n` into at most `parts` contiguous ranges of near-equal size.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.max(1).min(n.max(1));
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// Reference triple-loop gemm (used by tests to validate the blocked one).
+pub fn gemm_reference(a: MatRef<'_>, b: MatRef<'_>, c: &mut MatMut<'_>, alpha: f32, beta: f32) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut s = 0f32;
+            for p in 0..a.cols {
+                s += a.at(i, p) * b.at(p, j);
+            }
+            let v = alpha * s + beta * c.at(i, j);
+            c.set(i, j, v);
+        }
+    }
+}
+
+/// Batched gemm: `C[i] = A[i] × B` for a shared B — the shape MEC's
+/// Solution B needs (`i_n·o_h` small gemms against the same kernel matrix,
+/// paper's `cublasSgemmBatched` note in §4). Parallelized over the batch.
+pub fn gemm_batched_shared_b(
+    a: &[MatRef<'_>],
+    b: MatRef<'_>,
+    c: &mut [MatMut<'_>],
+    threads: usize,
+    bs: BlockSizes,
+) {
+    assert_eq!(a.len(), c.len());
+    let n = a.len();
+    // Each batch entry is independent; parallelize across entries and run
+    // each gemm serially inside (small inputs — matches the paper's GPU
+    // batched-gemm trade-off discussion, §3.3 Solution B).
+    let c_cell: Vec<SendPtr> = c.iter_mut().map(|m| SendPtr(m.data.as_mut_ptr())).collect();
+    let metas: Vec<(usize, usize, usize, usize)> = c
+        .iter()
+        .map(|m| (m.rows, m.cols, m.rs, m.data.len()))
+        .collect();
+    parallel_for(threads, n, |i| {
+        scale_and_mul(a[i], b, &c_cell[i], metas[i], bs);
+    });
+}
+
+fn scale_and_mul(
+    a: MatRef<'_>,
+    b: MatRef<'_>,
+    cptr: &SendPtr,
+    meta: (usize, usize, usize, usize),
+    bs: BlockSizes,
+) {
+    let (rows, cols, rs, len) = meta;
+    let data: &mut [f32] = unsafe { std::slice::from_raw_parts_mut(cptr.0, len) };
+    let mut c = MatMut::strided(data, rows, cols, rs);
+    scale_c(&mut c, 0.0);
+    gemm_serial(a, b, &mut c, 1.0, bs);
+}
+
+/// Raw pointer wrapper that asserts Send; used to hand disjoint C panels to
+/// scoped worker threads. Safety argument: all call sites partition C into
+/// non-overlapping row ranges or distinct batch entries.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{assert_allclose, Rng};
+
+    fn random_mat(rng: &mut Rng, rows: usize, cols: usize) -> Vec<f32> {
+        let mut v = vec![0.0; rows * cols];
+        rng.fill_uniform(&mut v, -1.0, 1.0);
+        v
+    }
+
+    fn check_blocked_vs_reference(m: usize, k: usize, n: usize, threads: usize, bs: BlockSizes) {
+        let mut rng = Rng::new((m * 1000 + k * 100 + n) as u64);
+        let a = random_mat(&mut rng, m, k);
+        let b = random_mat(&mut rng, k, n);
+        let mut c1 = vec![0.5; m * n]; // non-zero to exercise beta=0 reset
+        let mut c2 = vec![0.5; m * n];
+        gemm_ex(
+            MatRef::new(&a, m, k),
+            MatRef::new(&b, k, n),
+            &mut MatMut::new(&mut c1, m, n),
+            1.0,
+            0.0,
+            threads,
+            bs,
+        );
+        gemm_reference(
+            MatRef::new(&a, m, k),
+            MatRef::new(&b, k, n),
+            &mut MatMut::new(&mut c2, m, n),
+            1.0,
+            0.0,
+        );
+        assert_allclose(&c1, &c2, 1e-4, &format!("gemm {m}x{k}x{n} t={threads}"));
+    }
+
+    #[test]
+    fn blocked_matches_reference_small() {
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (8, 8, 8), (17, 13, 9), (5, 64, 3)] {
+            check_blocked_vs_reference(m, k, n, 1, BlockSizes::default());
+        }
+    }
+
+    #[test]
+    fn blocked_matches_reference_odd_blocking() {
+        // Block sizes smaller than the matrix force all edge paths.
+        let bs = BlockSizes { mc: 5, kc: 7, nc: 6 };
+        for (m, k, n) in [(11, 15, 13), (24, 21, 19), (8, 7, 33)] {
+            check_blocked_vs_reference(m, k, n, 1, bs);
+        }
+    }
+
+    #[test]
+    fn blocked_matches_reference_threaded() {
+        check_blocked_vs_reference(64, 48, 32, 4, BlockSizes::default());
+        check_blocked_vs_reference(33, 17, 29, 3, BlockSizes { mc: 8, kc: 8, nc: 8 });
+    }
+
+    #[test]
+    fn strided_views_work() {
+        // A is a sub-matrix of a bigger buffer (the MEC ld trick).
+        let mut rng = Rng::new(99);
+        let big = random_mat(&mut rng, 10, 20);
+        let a = MatRef::strided(&big[3..], 6, 7, 20); // 6x7 view at col 3
+        let b = random_mat(&mut rng, 7, 4);
+        let mut c1 = vec![0.0; 6 * 4];
+        let mut c2 = vec![0.0; 6 * 4];
+        gemm(a, MatRef::new(&b, 7, 4), &mut MatMut::new(&mut c1, 6, 4));
+        gemm_reference(
+            a,
+            MatRef::new(&b, 7, 4),
+            &mut MatMut::new(&mut c2, 6, 4),
+            1.0,
+            0.0,
+        );
+        assert_allclose(&c1, &c2, 1e-4, "strided gemm");
+    }
+
+    #[test]
+    fn alpha_beta_semantics() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [1.0f32, 0.0, 0.0, 1.0];
+        let mut c = [10.0f32, 20.0, 30.0, 40.0];
+        // C = 2*A*I + 0.5*C
+        gemm_ex(
+            MatRef::new(&a, 2, 2),
+            MatRef::new(&b, 2, 2),
+            &mut MatMut::new(&mut c, 2, 2),
+            2.0,
+            0.5,
+            1,
+            BlockSizes::default(),
+        );
+        assert_eq!(c, [7.0, 14.0, 21.0, 28.0]);
+    }
+
+    #[test]
+    fn batched_shared_b_matches_serial() {
+        let mut rng = Rng::new(7);
+        let b = random_mat(&mut rng, 9, 4);
+        let bref = MatRef::new(&b, 9, 4);
+        let a_bufs: Vec<Vec<f32>> = (0..6).map(|_| random_mat(&mut rng, 5, 9)).collect();
+        let mut c_bufs: Vec<Vec<f32>> = (0..6).map(|_| vec![1.0; 5 * 4]).collect();
+        let mut expected: Vec<Vec<f32>> = Vec::new();
+        for abuf in &a_bufs {
+            let mut c = vec![0.0; 5 * 4];
+            gemm_reference(
+                MatRef::new(abuf, 5, 9),
+                bref,
+                &mut MatMut::new(&mut c, 5, 4),
+                1.0,
+                0.0,
+            );
+            expected.push(c);
+        }
+        {
+            let a_refs: Vec<MatRef<'_>> = a_bufs.iter().map(|v| MatRef::new(v, 5, 9)).collect();
+            let mut c_refs: Vec<MatMut<'_>> =
+                c_bufs.iter_mut().map(|v| MatMut::new(v, 5, 4)).collect();
+            gemm_batched_shared_b(&a_refs, bref, &mut c_refs, 3, BlockSizes::default());
+        }
+        for (got, want) in c_bufs.iter().zip(&expected) {
+            assert_allclose(got, want, 1e-4, "batched");
+        }
+    }
+
+    #[test]
+    fn split_ranges_partition() {
+        for (n, p) in [(10, 3), (7, 7), (5, 9), (0, 4), (100, 1)] {
+            let rs = split_ranges(n, p);
+            let mut covered = 0;
+            let mut prev_end = 0;
+            for &(s, e) in &rs {
+                assert_eq!(s, prev_end);
+                covered += e - s;
+                prev_end = e;
+            }
+            assert_eq!(covered, n, "n={n} p={p}");
+        }
+    }
+
+    #[test]
+    fn k_zero_applies_beta() {
+        let a: [f32; 0] = [];
+        let b: [f32; 0] = [];
+        let mut c = [3.0f32, 3.0];
+        gemm_ex(
+            MatRef::new(&a, 2, 0),
+            MatRef::new(&b, 0, 1),
+            &mut MatMut::new(&mut c, 2, 1),
+            1.0,
+            0.0,
+            1,
+            BlockSizes::default(),
+        );
+        assert_eq!(c, [0.0, 0.0]);
+    }
+}

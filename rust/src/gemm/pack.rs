@@ -1,0 +1,108 @@
+//! Panel packing for the blocked GEMM.
+//!
+//! Packing copies a cache-block of A/B into a contiguous, micro-kernel-
+//! friendly layout once per block, so the O(m·n·k) inner loops touch only
+//! unit-stride memory. Crucially for MEC, packing reads *strided* views —
+//! this is where the BLAS `ld` trick (overlapping partitions of the
+//! lowered matrix L, paper §3.2) meets the hardware.
+
+use super::micro::{MR, NR};
+use super::MatRef;
+
+/// Pack an A block (`mb × kb`, arbitrary row stride) into strips of MR
+/// rows: strip `i` occupies `kb·MR` floats at offset `i·kb·MR`, laid out
+/// k-major (`[k][r]`), zero-padded when `mb % MR != 0`.
+pub fn pack_a(a: MatRef<'_>, out: &mut [f32]) {
+    let (mb, kb) = (a.rows, a.cols);
+    let strips = mb.div_ceil(MR);
+    assert!(out.len() >= strips * kb * MR, "pack_a buffer too small");
+    for s in 0..strips {
+        let r0 = s * MR;
+        let rows = MR.min(mb - r0);
+        let dst = &mut out[s * kb * MR..(s + 1) * kb * MR];
+        if rows == MR {
+            for k in 0..kb {
+                let d = &mut dst[k * MR..k * MR + MR];
+                for r in 0..MR {
+                    d[r] = a.data[(r0 + r) * a.rs + k];
+                }
+            }
+        } else {
+            for k in 0..kb {
+                let d = &mut dst[k * MR..k * MR + MR];
+                for (r, slot) in d.iter_mut().enumerate() {
+                    *slot = if r < rows { a.data[(r0 + r) * a.rs + k] } else { 0.0 };
+                }
+            }
+        }
+    }
+}
+
+/// Pack a B block (`kb × nb`) into strips of NR columns: strip `j`
+/// occupies `kb·NR` floats at offset `j·kb·NR`, laid out k-major
+/// (`[k][c]`), zero-padded when `nb % NR != 0`.
+pub fn pack_b(b: MatRef<'_>, out: &mut [f32]) {
+    let (kb, nb) = (b.rows, b.cols);
+    let strips = nb.div_ceil(NR);
+    assert!(out.len() >= strips * kb * NR, "pack_b buffer too small");
+    for s in 0..strips {
+        let c0 = s * NR;
+        let cols = NR.min(nb - c0);
+        let dst = &mut out[s * kb * NR..(s + 1) * kb * NR];
+        if cols == NR {
+            for k in 0..kb {
+                let src = &b.data[k * b.rs + c0..k * b.rs + c0 + NR];
+                dst[k * NR..k * NR + NR].copy_from_slice(src);
+            }
+        } else {
+            for k in 0..kb {
+                let d = &mut dst[k * NR..k * NR + NR];
+                for (c, slot) in d.iter_mut().enumerate() {
+                    *slot = if c < cols { b.data[k * b.rs + c0 + c] } else { 0.0 };
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_a_layout_and_padding() {
+        // 3x2 matrix inside a wider buffer (rs=4).
+        let buf: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let a = MatRef::strided(&buf, 3, 2, 4);
+        let mut out = vec![-1.0; MR * 2];
+        pack_a(a, &mut out);
+        // k=0 column: rows 0..3 = buf[0], buf[4], buf[8], pad zeros.
+        assert_eq!(&out[0..MR], &[0.0, 4.0, 8.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        // k=1 column: buf[1], buf[5], buf[9].
+        assert_eq!(&out[MR..2 * MR], &[1.0, 5.0, 9.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn pack_b_layout_and_padding() {
+        // 2x3 matrix, strided.
+        let buf: Vec<f32> = (0..10).map(|x| x as f32).collect();
+        let b = MatRef::strided(&buf, 2, 3, 5);
+        let mut out = vec![-1.0; 2 * NR];
+        pack_b(b, &mut out);
+        // k=0 row: 0,1,2 then zero pad.
+        assert_eq!(&out[0..NR], &[0.0, 1.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        // k=1 row: 5,6,7.
+        assert_eq!(&out[NR..2 * NR], &[5.0, 6.0, 7.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn pack_a_multiple_strips() {
+        let rows = MR + 3;
+        let buf: Vec<f32> = (0..rows * 2).map(|x| x as f32).collect();
+        let a = MatRef::new(&buf, rows, 2);
+        let mut out = vec![0.0; 2 * 2 * MR];
+        pack_a(a, &mut out);
+        // Strip 1, k=0, r=0 is row MR, col 0 => buf[MR*2].
+        assert_eq!(out[2 * MR], (MR * 2) as f32);
+    }
+}

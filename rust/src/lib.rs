@@ -1,0 +1,33 @@
+//! # MEC: Memory-efficient Convolution for Deep Neural Network
+//!
+//! Full-stack reproduction of Cho & Brand, ICML 2017. The library has
+//! three layers (see `DESIGN.md`):
+//!
+//! * **Engine** — every convolution algorithm the paper evaluates, built
+//!   from scratch on our own GEMM/FFT/threadpool substrates:
+//!   [`conv::direct`], [`conv::im2col`], [`conv::mec`] (the paper's
+//!   contribution, Algorithm 2 with Solutions A/B), [`conv::winograd`],
+//!   [`conv::fft_conv`]; with exact memory-overhead accounting
+//!   ([`memory`]) matching the paper's Eq. (2)/(3)/(4).
+//! * **Planner + model** — workspace-budgeted algorithm selection
+//!   ([`planner`]), a layer-graph CNN executor ([`model`]) that loads
+//!   weights trained by the build-time JAX pipeline.
+//! * **Coordinator + runtime** — an inference-serving front end
+//!   ([`coordinator`]: queue, dynamic batcher, workers, metrics) and a
+//!   PJRT path ([`runtime`]) that executes the AOT-lowered JAX/Pallas
+//!   artifacts through the `xla` crate.
+
+pub mod bench;
+pub mod conv;
+pub mod coordinator;
+pub mod fft;
+pub mod gemm;
+pub mod memory;
+pub mod model;
+pub mod planner;
+pub mod runtime;
+pub mod tensor;
+pub mod threadpool;
+pub mod util;
+
+pub use tensor::{ConvShape, Kernel, KernelShape, Nhwc, Tensor};

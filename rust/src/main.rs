@@ -1,0 +1,263 @@
+//! `mec` — CLI for the MEC convolution engine + serving runtime.
+//!
+//! Subcommands:
+//! * `info`  — workloads, algorithms, platform.
+//! * `run`   — execute one benchmark layer with one algorithm; print
+//!             runtime and measured/analytic memory overhead.
+//! * `plan`  — show the planner's choice for a layer under a budget.
+//! * `tune`  — measure all admissible algorithms on a layer.
+//! * `serve` — load a `.mecw` model and serve synthetic requests through
+//!             the coordinator, printing latency/throughput metrics.
+
+use mec::bench::workload::{by_name, suite};
+use mec::conv::{AlgoKind, ConvContext};
+use mec::coordinator::{BatchPolicy, Server, ServerConfig};
+use mec::memory::{measure_peak, Budget, Workspace};
+use mec::model::load_mecw;
+use mec::planner::{AutoTuner, Planner};
+use mec::tensor::{Kernel, Tensor};
+use mec::util::cli::Args;
+use mec::util::stats::{fmt_bytes, fmt_ns};
+use mec::util::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    mec::util::logging::init();
+    let mut args = Args::from_env(
+        "MEC: memory-efficient convolution engine (ICML'17 reproduction).\n\
+         Subcommands: info | run | plan | tune | serve",
+    );
+    match args.subcommand().unwrap_or("info") {
+        "info" => cmd_info(),
+        "run" => cmd_run(&mut args),
+        "plan" => cmd_plan(&mut args),
+        "tune" => cmd_tune(&mut args),
+        "serve" => cmd_serve(&mut args),
+        other => {
+            eprintln!("unknown subcommand {other:?}\n\n{}", args.usage());
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_budget(s: &str) -> Budget {
+    if s == "unlimited" {
+        return Budget::unlimited();
+    }
+    let (num, mult) = if let Some(v) = s.strip_suffix("GB") {
+        (v, 1_000_000_000)
+    } else if let Some(v) = s.strip_suffix("MB") {
+        (v, 1_000_000)
+    } else if let Some(v) = s.strip_suffix("KB") {
+        (v, 1_000)
+    } else {
+        (s, 1)
+    };
+    match num.parse::<f64>() {
+        Ok(v) => Budget::new((v * mult as f64) as usize),
+        Err(_) => {
+            eprintln!("bad budget {s:?} (use e.g. 16MB, 1.5GB, unlimited)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_info() {
+    println!("MEC engine — paper workloads (Table 2):");
+    println!(
+        "{:<6} {:>14} {:>12} {:>4} {:>10} {:>12} {:>12}",
+        "name", "input", "kernel", "s", "k/s", "im2col MB", "MEC MB"
+    );
+    for w in suite() {
+        let s = w.shape(1, 1);
+        println!(
+            "{:<6} {:>14} {:>12} {:>4} {:>10.2} {:>12} {:>12}",
+            w.name,
+            format!("{}x{}x{}", w.ih, w.iw, w.ic),
+            format!("{}x{}x{}", w.kh, w.kw, w.kc),
+            w.s,
+            w.k_over_s(),
+            fmt_bytes(s.im2col_lowered_elems() * 4),
+            fmt_bytes(s.mec_lowered_elems() * 4),
+        );
+    }
+    println!("\nalgorithms: direct im2col mec mec-a mec-b winograd fft");
+    println!(
+        "host threads: {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+}
+
+fn layer_arg(args: &mut Args) -> mec::tensor::ConvShape {
+    let layer = args.opt("layer", "cv6", "benchmark layer (cv1..cv12)");
+    let batch = args.opt_usize("batch", 1, "mini-batch size");
+    let scale = args.opt_usize("scale", 1, "channel divisor (1 = paper-exact)");
+    match by_name(&layer) {
+        Some(w) => w.shape(batch, scale),
+        None => {
+            eprintln!("unknown layer {layer:?} (cv1..cv12)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_run(args: &mut Args) {
+    let shape = layer_arg(args);
+    let algo_s = args.opt("algo", "mec", "algorithm (direct|im2col|mec|mec-a|mec-b|winograd|fft)");
+    let threads = args.opt_usize("threads", 1, "worker threads");
+    let reps = args.opt_usize("reps", 3, "timed repetitions");
+    args.finish();
+    let Some(kind) = AlgoKind::parse(&algo_s) else {
+        eprintln!("unknown algorithm {algo_s:?}");
+        std::process::exit(2);
+    };
+    let algo = kind.build();
+    if !algo.supports(&shape) {
+        eprintln!("{} does not support {}", algo.name(), shape.describe());
+        std::process::exit(1);
+    }
+    let ctx = ConvContext::default().with_threads(threads);
+    let mut rng = Rng::new(42);
+    let input = Tensor::random(shape.input, &mut rng);
+    let kernel = Kernel::random(shape.kernel, &mut rng);
+    let mut out = Tensor::zeros(shape.output());
+
+    let ((), peak) = measure_peak(|| {
+        let mut ws = Workspace::new();
+        algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
+    });
+    let mut ws = Workspace::new();
+    algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out); // warm
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
+        best = best.min(t0.elapsed().as_nanos() as f64);
+    }
+    println!("layer    : {}", shape.describe());
+    println!("algorithm: {}", algo.name());
+    println!("runtime  : {} (best of {reps}, {threads} threads)", fmt_ns(best));
+    println!(
+        "overhead : measured {} / analytic {}",
+        fmt_bytes(peak),
+        fmt_bytes(algo.workspace_bytes(&shape))
+    );
+    println!("gflops   : {:.2}", shape.flops() as f64 / best);
+}
+
+fn cmd_plan(args: &mut Args) {
+    let shape = layer_arg(args);
+    let budget = parse_budget(&args.opt("budget", "unlimited", "workspace budget (e.g. 16MB)"));
+    let threads = args.opt_usize("threads", 1, "worker threads");
+    args.finish();
+    let planner = Planner::new();
+    let ctx = ConvContext::default().with_threads(threads);
+    println!("layer: {}", shape.describe());
+    println!(
+        "budget: {}",
+        if budget.limit() == usize::MAX {
+            "unlimited".into()
+        } else {
+            fmt_bytes(budget.limit())
+        }
+    );
+    println!("\nadmissible plans:");
+    for p in planner.admissible(&shape, &budget) {
+        println!(
+            "  {:<10} workspace={:>12} est={:>12}",
+            p.algo.name(),
+            fmt_bytes(p.workspace_bytes),
+            fmt_ns(p.est_ns)
+        );
+    }
+    let chosen = planner.plan(&shape, &budget, &ctx);
+    println!(
+        "\nchosen: {} ({} workspace)",
+        chosen.algo.name(),
+        fmt_bytes(chosen.workspace_bytes)
+    );
+}
+
+fn cmd_tune(args: &mut Args) {
+    let shape = layer_arg(args);
+    let budget = parse_budget(&args.opt("budget", "unlimited", "workspace budget"));
+    let threads = args.opt_usize("threads", 1, "worker threads");
+    args.finish();
+    let tuner = AutoTuner::new();
+    let ctx = ConvContext::default().with_threads(threads);
+    println!("measuring on {} ...", shape.describe());
+    let mut ms = tuner.measure_all(&shape, &budget, &ctx);
+    ms.sort_by(|a, b| a.median_ns.partial_cmp(&b.median_ns).unwrap());
+    for m in &ms {
+        println!(
+            "  {:<10} {:>12}  workspace={}",
+            m.algo.name(),
+            fmt_ns(m.median_ns),
+            fmt_bytes(m.workspace_bytes)
+        );
+    }
+    println!("winner: {}", ms[0].algo.name());
+}
+
+fn cmd_serve(args: &mut Args) {
+    let model_path = args.opt("model", "artifacts/model.mecw", "path to .mecw weights");
+    let requests = args.opt_usize("requests", 256, "synthetic requests to send");
+    let workers = args.opt_usize("workers", 1, "server worker threads");
+    let max_batch = args.opt_usize("max-batch", 32, "dynamic batch cap");
+    let delay_ms = args.opt_usize("max-delay-ms", 2, "dynamic batch delay");
+    let budget = parse_budget(&args.opt("budget", "unlimited", "conv workspace budget"));
+    let threads = args.opt_usize("threads", 1, "engine threads per worker");
+    args.finish();
+
+    let mut model = match load_mecw(&model_path) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("cannot load model {model_path:?}: {e}\n(run `make artifacts` first)");
+            std::process::exit(1);
+        }
+    };
+    let ctx = ConvContext::default().with_threads(threads);
+    model.plan(&Planner::new(), &budget, &ctx, max_batch);
+    println!(
+        "model {:?}: {} layers, {} params, plans: {:?}",
+        model.name,
+        model.layers.len(),
+        model.param_count(),
+        model
+            .plan_summary()
+            .iter()
+            .map(|(i, a)| format!("L{i}:{}", a.name()))
+            .collect::<Vec<_>>()
+    );
+    let (h, w, c) = model.input_hwc;
+    let server = Server::start(
+        Arc::new(model),
+        ServerConfig {
+            workers,
+            queue_capacity: 1024,
+            policy: BatchPolicy::new(max_batch, Duration::from_millis(delay_ms as u64)),
+            ctx,
+        },
+    );
+    let client = server.client();
+    let mut rng = Rng::new(7);
+    let mut pending = Vec::new();
+    for _ in 0..requests {
+        let mut sample = vec![0.0f32; h * w * c];
+        rng.fill_uniform(&mut sample, 0.0, 1.0);
+        match client.submit(sample) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => log::warn!("request rejected: {e}"),
+        }
+    }
+    let mut served = 0;
+    for rx in pending {
+        if rx.recv().is_ok() {
+            served += 1;
+        }
+    }
+    let metrics = server.shutdown();
+    println!("\nserved {served}/{requests}");
+    println!("{}", metrics.report());
+}

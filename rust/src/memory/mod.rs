@@ -1,0 +1,223 @@
+//! Memory-overhead accounting — the paper's headline metric.
+//!
+//! "Memory-overhead" in the paper (Fig. 4b/e, Table 3) is the temporary
+//! storage an algorithm needs *beyond* the input I, kernel K, and output O
+//! (the lowered matrix L for im2col/MEC, transformed tiles for Winograd,
+//! padded spectra for FFT). This module provides:
+//!
+//! * [`tracker`] — a global byte counter with peak tracking, so benches
+//!   report *measured* overhead and tests assert it equals the analytic
+//!   Eq. (2)/Eq. (3) formulas.
+//! * [`Workspace`] — a tracked, reusable scratch allocation handed to the
+//!   conv algorithms (mirrors cuDNN's explicit workspace API, which is the
+//!   deployment model for memory-constrained devices the paper targets).
+//! * [`Budget`] — an enforced cap used by the planner to reject algorithms
+//!   whose workspace would exceed the device budget.
+
+pub mod tracker;
+
+pub use tracker::{current_bytes, peak_bytes, MeasureScope};
+
+use std::sync::atomic::Ordering;
+
+/// A tracked scratch buffer of `f32`s. Allocation and release are recorded
+/// in the global [`tracker`]; the buffer is reusable across calls (the
+/// serving hot path allocates once per worker, then reuses).
+#[derive(Debug)]
+pub struct Workspace {
+    buf: Vec<f32>,
+}
+
+impl Workspace {
+    /// Empty workspace (no tracked bytes).
+    pub fn new() -> Workspace {
+        Workspace { buf: Vec::new() }
+    }
+
+    /// Workspace pre-sized to `elems` floats.
+    pub fn with_capacity(elems: usize) -> Workspace {
+        let mut w = Workspace::new();
+        w.reserve(elems);
+        w
+    }
+
+    /// Ensure capacity for `elems` floats, growing (and recording) if
+    /// needed. Never shrinks — matching how serving systems hold their
+    /// high-water workspace.
+    pub fn reserve(&mut self, elems: usize) {
+        if elems > self.buf.len() {
+            let grow = elems - self.buf.len();
+            tracker::track_alloc(grow * 4);
+            self.buf.resize(elems, 0.0);
+        }
+    }
+
+    /// Borrow the first `elems` floats (must be reserved), zeroed.
+    pub fn take_zeroed(&mut self, elems: usize) -> &mut [f32] {
+        self.reserve(elems);
+        let s = &mut self.buf[..elems];
+        s.fill(0.0);
+        s
+    }
+
+    /// Borrow the first `elems` floats without zeroing (for full-overwrite
+    /// consumers like the lowering loops).
+    pub fn take(&mut self, elems: usize) -> &mut [f32] {
+        self.reserve(elems);
+        &mut self.buf[..elems]
+    }
+
+    /// Split into two disjoint tracked slices (e.g. lowered matrix + aux).
+    pub fn take_split(&mut self, a: usize, b: usize) -> (&mut [f32], &mut [f32]) {
+        self.reserve(a + b);
+        let (x, rest) = self.buf.split_at_mut(a);
+        (x, &mut rest[..b])
+    }
+
+    /// Current capacity in floats.
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Current capacity in bytes — "memory-overhead" of whoever sized it.
+    pub fn bytes(&self) -> usize {
+        self.buf.len() * 4
+    }
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Workspace::new()
+    }
+}
+
+impl Drop for Workspace {
+    fn drop(&mut self) {
+        tracker::track_free(self.buf.len() * 4);
+    }
+}
+
+/// A byte budget for temporary memory, enforced by the planner.
+#[derive(Debug, Clone)]
+pub struct Budget {
+    limit: usize,
+}
+
+/// Error returned when a requested workspace exceeds the budget.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[error("workspace of {requested} B exceeds memory budget of {limit} B")]
+pub struct BudgetExceeded {
+    pub requested: usize,
+    pub limit: usize,
+}
+
+impl Budget {
+    pub fn new(limit_bytes: usize) -> Budget {
+        Budget { limit: limit_bytes }
+    }
+
+    /// Unlimited budget.
+    pub fn unlimited() -> Budget {
+        Budget { limit: usize::MAX }
+    }
+
+    pub fn limit(&self) -> usize {
+        self.limit
+    }
+
+    /// Check a request against the budget.
+    pub fn check(&self, bytes: usize) -> Result<(), BudgetExceeded> {
+        if bytes <= self.limit {
+            Ok(())
+        } else {
+            Err(BudgetExceeded {
+                requested: bytes,
+                limit: self.limit,
+            })
+        }
+    }
+
+    pub fn allows(&self, bytes: usize) -> bool {
+        bytes <= self.limit
+    }
+}
+
+/// Convenience: measure the peak tracked overhead while running `f`.
+/// Returns `(result, peak_overhead_bytes_during_f)`.
+///
+/// Measurements are serialized on a global lock: the tracker is a
+/// process-wide counter, so two concurrent `measure_peak` calls would
+/// see each other's transients (relevant when `cargo test` runs tests
+/// in parallel).
+pub fn measure_peak<T>(f: impl FnOnce() -> T) -> (T, usize) {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let scope = MeasureScope::begin();
+    let out = f();
+    let peak = scope.peak();
+    (out, peak)
+}
+
+/// Global ordering used by the tracker atomics (relaxed is fine — we only
+/// need monotone counters, not synchronization).
+pub(crate) const ORD: Ordering = Ordering::Relaxed;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workspace_tracks_growth_and_release() {
+        let before = current_bytes();
+        {
+            let mut w = Workspace::new();
+            w.reserve(1000);
+            assert_eq!(current_bytes(), before + 4000);
+            w.reserve(500); // no growth
+            assert_eq!(current_bytes(), before + 4000);
+            w.reserve(2000); // grows by 1000 floats
+            assert_eq!(current_bytes(), before + 8000);
+        }
+        assert_eq!(current_bytes(), before);
+    }
+
+    #[test]
+    fn take_zeroed_zeroes() {
+        let mut w = Workspace::new();
+        w.take(4).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(w.take_zeroed(4), &[0.0; 4]);
+    }
+
+    #[test]
+    fn take_split_disjoint() {
+        let mut w = Workspace::new();
+        let (a, b) = w.take_split(3, 2);
+        a.fill(1.0);
+        b.fill(2.0);
+        assert_eq!(a, &[1.0, 1.0, 1.0]);
+        assert_eq!(b, &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn budget_enforced() {
+        let b = Budget::new(100);
+        assert!(b.check(100).is_ok());
+        assert_eq!(
+            b.check(101),
+            Err(BudgetExceeded {
+                requested: 101,
+                limit: 100
+            })
+        );
+        assert!(Budget::unlimited().allows(usize::MAX));
+    }
+
+    #[test]
+    fn measure_peak_sees_transient() {
+        let (_, peak) = measure_peak(|| {
+            let mut w = Workspace::with_capacity(256);
+            let _ = w.take(256);
+        });
+        assert!(peak >= 1024, "peak={peak}");
+    }
+}

@@ -1,0 +1,86 @@
+//! Global overhead-byte tracker.
+//!
+//! Records every tracked temporary allocation (workspaces, lowered
+//! matrices, transform buffers) so benches can print **measured** memory
+//! overhead next to the paper's analytic formulas. Lock-free atomics; the
+//! peak is maintained with a CAS loop.
+
+use super::ORD;
+use std::sync::atomic::AtomicUsize;
+
+static CURRENT: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+/// Record an allocation of `bytes` of temporary memory.
+pub fn track_alloc(bytes: usize) {
+    let now = CURRENT.fetch_add(bytes, ORD) + bytes;
+    // Monotone max via CAS.
+    let mut peak = PEAK.load(ORD);
+    while now > peak {
+        match PEAK.compare_exchange_weak(peak, now, ORD, ORD) {
+            Ok(_) => break,
+            Err(p) => peak = p,
+        }
+    }
+}
+
+/// Record a release of `bytes`.
+pub fn track_free(bytes: usize) {
+    CURRENT.fetch_sub(bytes, ORD);
+}
+
+/// Currently tracked overhead bytes.
+pub fn current_bytes() -> usize {
+    CURRENT.load(ORD)
+}
+
+/// All-time peak of tracked overhead bytes.
+pub fn peak_bytes() -> usize {
+    PEAK.load(ORD)
+}
+
+/// A measurement scope: captures the tracked peak *during* the scope by
+/// recording the baseline at `begin()` and watermarking increments above
+/// it. Implementation note: the global PEAK is all-time, so the scope
+/// resets it down to `current` at begin — safe because scopes are used by
+/// single-measurement bench/test code, not concurrently.
+pub struct MeasureScope {
+    baseline: usize,
+}
+
+impl MeasureScope {
+    pub fn begin() -> MeasureScope {
+        let cur = current_bytes();
+        PEAK.store(cur, ORD);
+        MeasureScope { baseline: cur }
+    }
+
+    /// Peak overhead accumulated since `begin()`, relative to the baseline.
+    pub fn peak(&self) -> usize {
+        peak_bytes().saturating_sub(self.baseline)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let before = current_bytes();
+        track_alloc(123);
+        assert_eq!(current_bytes(), before + 123);
+        track_free(123);
+        assert_eq!(current_bytes(), before);
+    }
+
+    #[test]
+    fn scope_measures_relative_peak() {
+        let scope = MeasureScope::begin();
+        track_alloc(1000);
+        track_free(1000);
+        track_alloc(400);
+        track_free(400);
+        assert_eq!(scope.peak(), 1000);
+    }
+}

@@ -1,0 +1,87 @@
+//! Reader for `artifacts/eval.bin` — the held-out eval set the python
+//! trainer exports for the end-to-end serving example.
+//!
+//! Format (little-endian): `u32 n, h, w, c`, then per sample
+//! `f32[h·w·c]` pixels + `u32` label.
+
+use std::io::Read;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct EvalSet {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// Row-major per-sample pixels, `n × (h·w·c)`.
+    pub samples: Vec<Vec<f32>>,
+    pub labels: Vec<usize>,
+}
+
+impl EvalSet {
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> std::io::Result<EvalSet> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut hdr = [0u8; 16];
+        f.read_exact(&mut hdr)?;
+        let rd = |i: usize| u32::from_le_bytes(hdr[i * 4..i * 4 + 4].try_into().unwrap()) as usize;
+        let (n, h, w, c) = (rd(0), rd(1), rd(2), rd(3));
+        let per = h * w * c;
+        let mut samples = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        let mut px = vec![0u8; per * 4];
+        let mut lb = [0u8; 4];
+        for _ in 0..n {
+            f.read_exact(&mut px)?;
+            samples.push(
+                px.chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect(),
+            );
+            f.read_exact(&mut lb)?;
+            labels.push(u32::from_le_bytes(lb) as usize);
+        }
+        Ok(EvalSet {
+            h,
+            w,
+            c,
+            samples,
+            labels,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn reads_synthetic_file() {
+        let dir = std::env::temp_dir().join("mec_evalset");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.bin");
+        let mut f = std::fs::File::create(&path).unwrap();
+        for v in [2u32, 1, 2, 1] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        for (pix, label) in [([1.0f32, 2.0], 0u32), ([3.0, 4.0], 2)] {
+            for p in pix {
+                f.write_all(&p.to_le_bytes()).unwrap();
+            }
+            f.write_all(&label.to_le_bytes()).unwrap();
+        }
+        drop(f);
+        let es = EvalSet::load(&path).unwrap();
+        assert_eq!(es.len(), 2);
+        assert_eq!((es.h, es.w, es.c), (1, 2, 1));
+        assert_eq!(es.samples[0], vec![1.0, 2.0]);
+        assert_eq!(es.labels, vec![0, 2]);
+    }
+}

@@ -1,0 +1,345 @@
+//! The model graph + forward executor.
+//!
+//! Convolutions are planned per layer (once, at load) by the
+//! [`Planner`](crate::planner::Planner) under the device [`Budget`]; the
+//! chosen algorithm and its workspace are reused for every request — the
+//! hot path performs no allocation beyond first-call workspace growth.
+
+use crate::conv::{AlgoKind, ConvContext, Convolution};
+use crate::gemm::{gemm_ex, MatMut, MatRef};
+use crate::memory::{Budget, Workspace};
+use crate::model::layer::Layer;
+use crate::planner::Planner;
+use crate::tensor::{ConvShape, Nhwc, Tensor};
+
+/// A sequential CNN with planned convolution algorithms.
+pub struct Model {
+    pub name: String,
+    /// Spatial input shape per sample (h, w, c); batch dim comes from the
+    /// request.
+    pub input_hwc: (usize, usize, usize),
+    pub layers: Vec<Layer>,
+    /// Chosen conv algorithm per layer index (None for non-conv layers).
+    plans: Vec<Option<AlgoKind>>,
+}
+
+impl Model {
+    pub fn new(name: &str, input_hwc: (usize, usize, usize), layers: Vec<Layer>) -> Model {
+        let plans = vec![None; layers.len()];
+        Model {
+            name: name.to_string(),
+            input_hwc,
+            layers,
+            plans,
+        }
+    }
+
+    /// Validate layer chaining by propagating a batch-1 shape; returns
+    /// the final output shape.
+    pub fn validate(&self) -> Nhwc {
+        let (h, w, c) = self.input_hwc;
+        let mut shape = Nhwc::new(1, h, w, c);
+        for layer in &self.layers {
+            shape = layer.output_shape(shape);
+        }
+        shape
+    }
+
+    /// Output features per sample.
+    pub fn output_features(&self) -> usize {
+        let s = self.validate();
+        s.h * s.w * s.c
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+
+    /// Plan every conv layer under `budget` for batch size `batch`
+    /// (the planner sees the true batched geometry).
+    pub fn plan(&mut self, planner: &Planner, budget: &Budget, ctx: &ConvContext, batch: usize) {
+        let (h, w, c) = self.input_hwc;
+        let mut shape = Nhwc::new(batch.max(1), h, w, c);
+        for (i, layer) in self.layers.iter().enumerate() {
+            if let Layer::Conv {
+                kernel, sh, sw, ph, pw, ..
+            } = layer
+            {
+                let padded = Nhwc::new(shape.n, shape.h + 2 * ph, shape.w + 2 * pw, shape.c);
+                let cs = ConvShape::new(padded, kernel.shape(), *sh, *sw);
+                self.plans[i] = Some(planner.plan(&cs, budget, ctx).algo);
+            }
+            shape = layer.output_shape(shape);
+        }
+    }
+
+    /// Pin a single algorithm for all conv layers (benchmark mode).
+    pub fn pin_algo(&mut self, algo: AlgoKind) {
+        for (i, layer) in self.layers.iter().enumerate() {
+            if matches!(layer, Layer::Conv { .. }) {
+                self.plans[i] = Some(algo);
+            }
+        }
+    }
+
+    /// Chosen algorithm per conv layer (for reports).
+    pub fn plan_summary(&self) -> Vec<(usize, AlgoKind)> {
+        self.plans
+            .iter()
+            .enumerate()
+            .filter_map(|(i, p)| p.map(|a| (i, a)))
+            .collect()
+    }
+
+    /// Run a forward pass on a batch. Returns the final activation
+    /// (logits or probabilities, depending on the last layer).
+    pub fn forward(&self, ctx: &ConvContext, batch: &Tensor, ws: &mut Workspace) -> Tensor {
+        let mut x = batch.clone();
+        for (i, layer) in self.layers.iter().enumerate() {
+            x = self.forward_layer(i, layer, ctx, x, ws);
+        }
+        x
+    }
+
+    fn forward_layer(
+        &self,
+        idx: usize,
+        layer: &Layer,
+        ctx: &ConvContext,
+        x: Tensor,
+        ws: &mut Workspace,
+    ) -> Tensor {
+        match layer {
+            Layer::Conv {
+                kernel, bias, sh, sw, ph, pw,
+            } => {
+                let padded = if *ph > 0 || *pw > 0 {
+                    x.pad_spatial(*ph, *pw)
+                } else {
+                    x
+                };
+                let cs = ConvShape::new(padded.shape(), kernel.shape(), *sh, *sw);
+                let algo: Box<dyn Convolution> = self.plans[idx]
+                    .unwrap_or(AlgoKind::Mec)
+                    .build();
+                let mut out = Tensor::zeros(cs.output());
+                algo.run(ctx, &cs, &padded, kernel, ws, &mut out);
+                // Bias add (per output channel).
+                let kc = kernel.shape().kc;
+                for chunk in out.data_mut().chunks_exact_mut(kc) {
+                    for (v, b) in chunk.iter_mut().zip(bias) {
+                        *v += b;
+                    }
+                }
+                out
+            }
+            Layer::Relu => {
+                let mut out = x;
+                for v in out.data_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                out
+            }
+            Layer::MaxPool { k, s } => max_pool(&x, *k, *s),
+            Layer::Flatten => {
+                let sh = x.shape();
+                Tensor::from_vec(
+                    Nhwc::new(sh.n, 1, 1, sh.h * sh.w * sh.c),
+                    x.into_vec(),
+                )
+            }
+            Layer::Dense { w, bias, d_in, d_out } => {
+                let sh = x.shape();
+                let n = sh.n;
+                assert_eq!(sh.h * sh.w * sh.c, *d_in);
+                let mut out = Tensor::zeros(Nhwc::new(n, 1, 1, *d_out));
+                let a = MatRef::new(x.data(), n, *d_in);
+                let b = MatRef::new(w, *d_in, *d_out);
+                let mut c = MatMut::new(out.data_mut(), n, *d_out);
+                gemm_ex(a, b, &mut c, 1.0, 0.0, ctx.threads, ctx.blocks);
+                for row in out.data_mut().chunks_exact_mut(*d_out) {
+                    for (v, bb) in row.iter_mut().zip(bias) {
+                        *v += bb;
+                    }
+                }
+                out
+            }
+            Layer::Softmax => {
+                let mut out = x;
+                let c = out.shape().c;
+                for row in out.data_mut().chunks_exact_mut(c) {
+                    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let mut sum = 0.0;
+                    for v in row.iter_mut() {
+                        *v = (*v - m).exp();
+                        sum += *v;
+                    }
+                    for v in row.iter_mut() {
+                        *v /= sum;
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Argmax class per sample of the final activation.
+    pub fn predict(&self, ctx: &ConvContext, batch: &Tensor, ws: &mut Workspace) -> Vec<usize> {
+        let out = self.forward(ctx, batch, ws);
+        let c = out.shape().c;
+        out.data()
+            .chunks_exact(c)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+fn max_pool(x: &Tensor, k: usize, s: usize) -> Tensor {
+    let sh = x.shape();
+    let oh = (sh.h - k) / s + 1;
+    let ow = (sh.w - k) / s + 1;
+    let out_shape = Nhwc::new(sh.n, oh, ow, sh.c);
+    let mut out = Tensor::zeros(out_shape);
+    for n in 0..sh.n {
+        for y in 0..oh {
+            for x0 in 0..ow {
+                for c in 0..sh.c {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            m = m.max(x.at(n, y * s + dy, x0 * s + dx, c));
+                        }
+                    }
+                    *out.at_mut(n, y, x0, c) = m;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Kernel, KernelShape};
+    use crate::util::Rng;
+
+    fn tiny_model() -> Model {
+        let mut rng = Rng::new(3);
+        Model::new(
+            "tiny",
+            (8, 8, 1),
+            vec![
+                Layer::Conv {
+                    kernel: Kernel::random(KernelShape::new(3, 3, 1, 4), &mut rng),
+                    bias: vec![0.1; 4],
+                    sh: 1,
+                    sw: 1,
+                    ph: 1,
+                    pw: 1,
+                },
+                Layer::Relu,
+                Layer::MaxPool { k: 2, s: 2 },
+                Layer::Flatten,
+                Layer::Dense {
+                    w: {
+                        let mut w = vec![0.0; 4 * 4 * 4 * 3];
+                        rng.fill_uniform(&mut w, -0.5, 0.5);
+                        w
+                    },
+                    bias: vec![0.0; 3],
+                    d_in: 64,
+                    d_out: 3,
+                },
+                Layer::Softmax,
+            ],
+        )
+    }
+
+    #[test]
+    fn validate_chains_shapes() {
+        let m = tiny_model();
+        assert_eq!(m.validate(), Nhwc::new(1, 1, 1, 3));
+        assert_eq!(m.output_features(), 3);
+        assert!(m.param_count() > 0);
+    }
+
+    #[test]
+    fn forward_produces_probabilities() {
+        let mut m = tiny_model();
+        m.plan(
+            &Planner::new(),
+            &Budget::unlimited(),
+            &ConvContext::default(),
+            2,
+        );
+        let mut rng = Rng::new(9);
+        let batch = Tensor::random(Nhwc::new(2, 8, 8, 1), &mut rng);
+        let mut ws = Workspace::new();
+        let out = m.forward(&ConvContext::default(), &batch, &mut ws);
+        assert_eq!(out.shape(), Nhwc::new(2, 1, 1, 3));
+        for row in out.data().chunks_exact(3) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "softmax row sums to {sum}");
+            assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn algorithm_choice_does_not_change_outputs() {
+        let mut m = tiny_model();
+        let mut rng = Rng::new(11);
+        let batch = Tensor::random(Nhwc::new(3, 8, 8, 1), &mut rng);
+        let ctx = ConvContext::default();
+        let mut ws = Workspace::new();
+        let mut outs = Vec::new();
+        for algo in [AlgoKind::Direct, AlgoKind::Im2col, AlgoKind::Mec, AlgoKind::Winograd] {
+            m.pin_algo(algo);
+            outs.push(m.forward(&ctx, &batch, &mut ws));
+        }
+        for o in &outs[1..] {
+            crate::util::assert_allclose(o.data(), outs[0].data(), 1e-3, "algo equivalence");
+        }
+    }
+
+    #[test]
+    fn predict_returns_classes() {
+        let mut m = tiny_model();
+        m.pin_algo(AlgoKind::Mec);
+        let mut rng = Rng::new(13);
+        let batch = Tensor::random(Nhwc::new(4, 8, 8, 1), &mut rng);
+        let preds = m.predict(&ConvContext::default(), &batch, &mut Workspace::new());
+        assert_eq!(preds.len(), 4);
+        assert!(preds.iter().all(|&p| p < 3));
+    }
+
+    #[test]
+    fn max_pool_values() {
+        let x = Tensor::from_fn(Nhwc::new(1, 4, 4, 1), |_, h, w, _| (h * 4 + w) as f32);
+        let p = max_pool(&x, 2, 2);
+        assert_eq!(p.shape(), Nhwc::new(1, 2, 2, 1));
+        assert_eq!(p.data(), &[5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn plan_assigns_conv_layers_only() {
+        let mut m = tiny_model();
+        m.plan(
+            &Planner::new(),
+            &Budget::unlimited(),
+            &ConvContext::default(),
+            1,
+        );
+        let summary = m.plan_summary();
+        assert_eq!(summary.len(), 1);
+        assert_eq!(summary[0].0, 0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Layer definitions for the CNN executor.
+
+use crate::tensor::{Kernel, KernelShape, Nhwc};
+
+/// One layer of the network. Weights are owned (loaded from `.mecw`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    /// 2-D convolution with symmetric zero padding `(ph, pw)` applied
+    /// before the conv (the paper assumes pre-applied padding, §2.1) and
+    /// a per-output-channel bias.
+    Conv {
+        kernel: Kernel,
+        bias: Vec<f32>,
+        sh: usize,
+        sw: usize,
+        ph: usize,
+        pw: usize,
+    },
+    /// Elementwise max(0, x).
+    Relu,
+    /// Max pooling over `k × k` windows with stride `s`.
+    MaxPool { k: usize, s: usize },
+    /// Flatten NHWC -> (N, H·W·C).
+    Flatten,
+    /// Fully connected: y = x·W + b, W is (in × out) row-major.
+    Dense {
+        w: Vec<f32>,
+        bias: Vec<f32>,
+        d_in: usize,
+        d_out: usize,
+    },
+    /// Row-wise softmax (numerically stable).
+    Softmax,
+}
+
+impl Layer {
+    /// Short tag for display/metrics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Layer::Conv { .. } => "conv",
+            Layer::Relu => "relu",
+            Layer::MaxPool { .. } => "maxpool",
+            Layer::Flatten => "flatten",
+            Layer::Dense { .. } => "dense",
+            Layer::Softmax => "softmax",
+        }
+    }
+
+    /// Output shape for a given input shape. Panics on geometry mismatch
+    /// (caught at model load by [`super::Model::validate`]).
+    pub fn output_shape(&self, input: Nhwc) -> Nhwc {
+        match self {
+            Layer::Conv {
+                kernel, sh, sw, ph, pw, ..
+            } => {
+                let ks: KernelShape = kernel.shape();
+                assert_eq!(input.c, ks.ic, "conv expects {} channels, got {}", ks.ic, input.c);
+                let h = input.h + 2 * ph;
+                let w = input.w + 2 * pw;
+                Nhwc::new(
+                    input.n,
+                    (h - ks.kh) / sh + 1,
+                    (w - ks.kw) / sw + 1,
+                    ks.kc,
+                )
+            }
+            Layer::Relu | Layer::Softmax => input,
+            Layer::MaxPool { k, s } => Nhwc::new(
+                input.n,
+                (input.h - k) / s + 1,
+                (input.w - k) / s + 1,
+                input.c,
+            ),
+            Layer::Flatten => Nhwc::new(input.n, 1, 1, input.h * input.w * input.c),
+            Layer::Dense { d_in, d_out, .. } => {
+                assert_eq!(
+                    input.h * input.w * input.c,
+                    *d_in,
+                    "dense expects {} features",
+                    d_in
+                );
+                Nhwc::new(input.n, 1, 1, *d_out)
+            }
+        }
+    }
+
+    /// Parameter count (weights + biases).
+    pub fn param_count(&self) -> usize {
+        match self {
+            Layer::Conv { kernel, bias, .. } => kernel.shape().len() + bias.len(),
+            Layer::Dense { w, bias, .. } => w.len() + bias.len(),
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn conv_output_shape_with_padding() {
+        let mut rng = Rng::new(1);
+        let l = Layer::Conv {
+            kernel: Kernel::random(KernelShape::new(3, 3, 2, 8), &mut rng),
+            bias: vec![0.0; 8],
+            sh: 1,
+            sw: 1,
+            ph: 1,
+            pw: 1,
+        };
+        // SAME padding: 16x16 stays 16x16.
+        assert_eq!(
+            l.output_shape(Nhwc::new(4, 16, 16, 2)),
+            Nhwc::new(4, 16, 16, 8)
+        );
+        assert_eq!(l.param_count(), 3 * 3 * 2 * 8 + 8);
+    }
+
+    #[test]
+    fn pool_flatten_dense_shapes() {
+        let pool = Layer::MaxPool { k: 2, s: 2 };
+        assert_eq!(
+            pool.output_shape(Nhwc::new(1, 8, 8, 4)),
+            Nhwc::new(1, 4, 4, 4)
+        );
+        let flat = Layer::Flatten;
+        assert_eq!(
+            flat.output_shape(Nhwc::new(2, 4, 4, 4)),
+            Nhwc::new(2, 1, 1, 64)
+        );
+        let dense = Layer::Dense {
+            w: vec![0.0; 64 * 10],
+            bias: vec![0.0; 10],
+            d_in: 64,
+            d_out: 10,
+        };
+        assert_eq!(
+            dense.output_shape(Nhwc::new(2, 1, 1, 64)),
+            Nhwc::new(2, 1, 1, 10)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "dense expects")]
+    fn dense_shape_mismatch_panics() {
+        let dense = Layer::Dense {
+            w: vec![0.0; 10],
+            bias: vec![0.0; 10],
+            d_in: 1,
+            d_out: 10,
+        };
+        let _ = dense.output_shape(Nhwc::new(1, 2, 2, 2));
+    }
+}

@@ -1,0 +1,253 @@
+//! `.mecw` — the weight interchange format between the build-time JAX
+//! trainer and the rust executor. Hand-rolled little-endian binary (serde
+//! is not in the offline registry), with a mirrored writer in
+//! `python/compile/trainer.py`.
+//!
+//! ```text
+//! magic   8 B   "MECW0001"
+//! name    u32 len + utf-8 bytes
+//! input   u32 h, u32 w, u32 c
+//! layers  u32 count, then per layer:
+//!   tag u32: 0=conv 1=relu 2=maxpool 3=flatten 4=dense 5=softmax
+//!   conv:    u32 kh,kw,ic,kc,sh,sw,ph,pw; f32[kh·kw·ic·kc] weights
+//!            (row-major khkwic×kc, exactly the GEMM layout); f32[kc] bias
+//!   maxpool: u32 k, s
+//!   dense:   u32 d_in, d_out; f32[d_in·d_out] (row-major); f32[d_out]
+//! ```
+
+use crate::model::layer::Layer;
+use crate::model::Model;
+use crate::tensor::{Kernel, KernelShape};
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 8] = b"MECW0001";
+
+#[derive(Debug, thiserror::Error)]
+pub enum LoadError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad magic (not a .mecw file)")]
+    BadMagic,
+    #[error("unknown layer tag {0}")]
+    UnknownTag(u32),
+    #[error("malformed file: {0}")]
+    Malformed(String),
+}
+
+struct Reader<R: Read> {
+    r: R,
+}
+
+impl<R: Read> Reader<R> {
+    fn u32(&mut self) -> Result<u32, LoadError> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn usize(&mut self) -> Result<usize, LoadError> {
+        Ok(self.u32()? as usize)
+    }
+
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>, LoadError> {
+        let mut bytes = vec![0u8; n * 4];
+        self.r.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn string(&mut self) -> Result<String, LoadError> {
+        let n = self.usize()?;
+        if n > 1 << 20 {
+            return Err(LoadError::Malformed(format!("string length {n}")));
+        }
+        let mut b = vec![0u8; n];
+        self.r.read_exact(&mut b)?;
+        String::from_utf8(b).map_err(|e| LoadError::Malformed(e.to_string()))
+    }
+}
+
+/// Load a model from a `.mecw` file.
+pub fn load_mecw(path: impl AsRef<Path>) -> Result<Model, LoadError> {
+    let f = std::fs::File::open(path)?;
+    let mut r = Reader {
+        r: std::io::BufReader::new(f),
+    };
+    let mut magic = [0u8; 8];
+    r.r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(LoadError::BadMagic);
+    }
+    let name = r.string()?;
+    let (h, w, c) = (r.usize()?, r.usize()?, r.usize()?);
+    let n_layers = r.usize()?;
+    if n_layers > 10_000 {
+        return Err(LoadError::Malformed(format!("{n_layers} layers")));
+    }
+    let mut layers = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let tag = r.u32()?;
+        layers.push(match tag {
+            0 => {
+                let (kh, kw, ic, kc) = (r.usize()?, r.usize()?, r.usize()?, r.usize()?);
+                let (sh, sw, ph, pw) = (r.usize()?, r.usize()?, r.usize()?, r.usize()?);
+                let shape = KernelShape::new(kh, kw, ic, kc);
+                let weights = r.f32_vec(shape.len())?;
+                let bias = r.f32_vec(kc)?;
+                Layer::Conv {
+                    kernel: Kernel::from_vec(shape, weights),
+                    bias,
+                    sh,
+                    sw,
+                    ph,
+                    pw,
+                }
+            }
+            1 => Layer::Relu,
+            2 => {
+                let (k, s) = (r.usize()?, r.usize()?);
+                Layer::MaxPool { k, s }
+            }
+            3 => Layer::Flatten,
+            4 => {
+                let (d_in, d_out) = (r.usize()?, r.usize()?);
+                let w = r.f32_vec(d_in * d_out)?;
+                let bias = r.f32_vec(d_out)?;
+                Layer::Dense { w, bias, d_in, d_out }
+            }
+            5 => Layer::Softmax,
+            t => return Err(LoadError::UnknownTag(t)),
+        });
+    }
+    let model = Model::new(&name, (h, w, c), layers);
+    model.validate(); // panics on inconsistent chaining — fail fast at load
+    Ok(model)
+}
+
+/// Save a model to `.mecw` (round-trip testing; the production writer is
+/// the python trainer).
+pub fn save_mecw(model: &Model, path: impl AsRef<Path>) -> Result<(), LoadError> {
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    write_str(&mut w, &model.name)?;
+    let (h, ww, c) = model.input_hwc;
+    for v in [h, ww, c, model.layers.len()] {
+        w.write_all(&(v as u32).to_le_bytes())?;
+    }
+    for layer in &model.layers {
+        match layer {
+            Layer::Conv {
+                kernel, bias, sh, sw, ph, pw,
+            } => {
+                w.write_all(&0u32.to_le_bytes())?;
+                let ks = kernel.shape();
+                for v in [ks.kh, ks.kw, ks.ic, ks.kc, *sh, *sw, *ph, *pw] {
+                    w.write_all(&(v as u32).to_le_bytes())?;
+                }
+                write_f32s(&mut w, kernel.data())?;
+                write_f32s(&mut w, bias)?;
+            }
+            Layer::Relu => w.write_all(&1u32.to_le_bytes())?,
+            Layer::MaxPool { k, s } => {
+                w.write_all(&2u32.to_le_bytes())?;
+                w.write_all(&(*k as u32).to_le_bytes())?;
+                w.write_all(&(*s as u32).to_le_bytes())?;
+            }
+            Layer::Flatten => w.write_all(&3u32.to_le_bytes())?,
+            Layer::Dense { w: dw, bias, d_in, d_out } => {
+                w.write_all(&4u32.to_le_bytes())?;
+                w.write_all(&(*d_in as u32).to_le_bytes())?;
+                w.write_all(&(*d_out as u32).to_le_bytes())?;
+                write_f32s(&mut w, dw)?;
+                write_f32s(&mut w, bias)?;
+            }
+            Layer::Softmax => w.write_all(&5u32.to_le_bytes())?,
+        }
+    }
+    Ok(())
+}
+
+fn write_str<W: Write>(w: &mut W, s: &str) -> std::io::Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())
+}
+
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> std::io::Result<()> {
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample_model() -> Model {
+        let mut rng = Rng::new(5);
+        Model::new(
+            "roundtrip",
+            (6, 6, 2),
+            vec![
+                Layer::Conv {
+                    kernel: Kernel::random(KernelShape::new(3, 3, 2, 4), &mut rng),
+                    bias: vec![0.5, -0.5, 0.25, 0.0],
+                    sh: 1,
+                    sw: 1,
+                    ph: 1,
+                    pw: 1,
+                },
+                Layer::Relu,
+                Layer::MaxPool { k: 2, s: 2 },
+                Layer::Flatten,
+                Layer::Dense {
+                    w: (0..36 * 3).map(|i| i as f32 * 0.01).collect(),
+                    bias: vec![1.0, 2.0, 3.0],
+                    d_in: 36,
+                    d_out: 3,
+                },
+                Layer::Softmax,
+            ],
+        )
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let m = sample_model();
+        let dir = std::env::temp_dir().join("mecw_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.mecw");
+        save_mecw(&m, &path).unwrap();
+        let loaded = load_mecw(&path).unwrap();
+        assert_eq!(loaded.name, "roundtrip");
+        assert_eq!(loaded.input_hwc, (6, 6, 2));
+        assert_eq!(loaded.layers, m.layers);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("mecw_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.mecw");
+        std::fs::write(&path, b"NOTMECW!xxxx").unwrap();
+        assert!(matches!(load_mecw(&path), Err(LoadError::BadMagic)));
+    }
+
+    #[test]
+    fn truncated_file_errors_not_panics() {
+        let m = sample_model();
+        let dir = std::env::temp_dir().join("mecw_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.mecw");
+        save_mecw(&m, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let cut = dir.join("cut.mecw");
+        std::fs::write(&cut, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load_mecw(&cut).is_err());
+    }
+}

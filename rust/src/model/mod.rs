@@ -1,0 +1,20 @@
+//! CNN model graph: layers, forward executor, and the `.mecw` weight
+//! format produced by the build-time JAX trainer
+//! (`python/compile/trainer.py`).
+//!
+//! The executor is the library's deployment story: every convolution goes
+//! through the [`planner`](crate::planner) under the device's memory
+//! budget, workspaces are reused across layers and requests, and the same
+//! graph can also be executed through the PJRT path
+//! ([`runtime`](crate::runtime)) for cross-checking against the JAX
+//! artifacts.
+
+pub mod evalset;
+pub mod graph;
+pub mod layer;
+pub mod loader;
+
+pub use evalset::EvalSet;
+pub use graph::Model;
+pub use layer::Layer;
+pub use loader::{load_mecw, save_mecw, LoadError};

@@ -1,0 +1,141 @@
+//! Empirical algorithm selection: measure admissible algorithms on the
+//! real geometry, cache the winner per shape. This is what frameworks do
+//! at model-load time (cuDNN's `FindAlgorithm` vs `GetAlgorithm`), and it
+//! subsumes cost-model error at the price of a one-time measurement.
+
+use super::{Plan, Planner};
+use crate::conv::{AlgoKind, ConvContext};
+use crate::memory::{Budget, Workspace};
+use crate::tensor::{ConvShape, Kernel, Tensor};
+use crate::util::Rng;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Measured timing for one algorithm on one shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Measurement {
+    pub algo: AlgoKind,
+    pub workspace_bytes: usize,
+    pub median_ns: f64,
+}
+
+/// Measure-and-cache selector.
+pub struct AutoTuner {
+    planner: Planner,
+    /// Repetitions per candidate (median taken).
+    pub reps: usize,
+    cache: HashMap<(ConvShape, usize), Plan>,
+}
+
+impl AutoTuner {
+    pub fn new() -> AutoTuner {
+        AutoTuner {
+            planner: Planner::new(),
+            reps: 3,
+            cache: HashMap::new(),
+        }
+    }
+
+    /// Measure every admissible algorithm on `shape` (random data).
+    pub fn measure_all(
+        &self,
+        shape: &ConvShape,
+        budget: &Budget,
+        ctx: &ConvContext,
+    ) -> Vec<Measurement> {
+        let mut rng = Rng::new(0x7e57);
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let mut out = Tensor::zeros(shape.output());
+        let mut results = Vec::new();
+        for plan in self.planner.admissible(shape, budget) {
+            let algo = plan.algo.build();
+            let mut ws = Workspace::new();
+            // Warmup (allocates workspace, faults pages).
+            algo.run(ctx, shape, &input, &kernel, &mut ws, &mut out);
+            let mut times: Vec<f64> = Vec::with_capacity(self.reps);
+            for _ in 0..self.reps {
+                let t0 = Instant::now();
+                algo.run(ctx, shape, &input, &kernel, &mut ws, &mut out);
+                times.push(t0.elapsed().as_nanos() as f64);
+            }
+            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            results.push(Measurement {
+                algo: plan.algo,
+                workspace_bytes: plan.workspace_bytes,
+                median_ns: times[times.len() / 2],
+            });
+        }
+        results
+    }
+
+    /// Best measured plan for `shape` under `budget`, cached per
+    /// `(shape, budget.limit)`.
+    pub fn tune(&mut self, shape: &ConvShape, budget: &Budget, ctx: &ConvContext) -> Plan {
+        let key = (*shape, budget.limit());
+        if let Some(p) = self.cache.get(&key) {
+            return p.clone();
+        }
+        let measured = self.measure_all(shape, budget, ctx);
+        let best = measured
+            .into_iter()
+            .min_by(|a, b| a.median_ns.partial_cmp(&b.median_ns).unwrap())
+            .expect("direct always admissible");
+        let plan = Plan {
+            algo: best.algo,
+            workspace_bytes: best.workspace_bytes,
+            est_ns: best.median_ns,
+        };
+        self.cache.insert(key, plan.clone());
+        plan
+    }
+
+    pub fn cached_plans(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+impl Default for AutoTuner {
+    fn default() -> Self {
+        AutoTuner::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{KernelShape, Nhwc};
+
+    fn small_shape() -> ConvShape {
+        ConvShape::new(Nhwc::new(1, 12, 12, 4), KernelShape::new(3, 3, 4, 8), 1, 1)
+    }
+
+    #[test]
+    fn measures_all_admissible() {
+        let tuner = AutoTuner::new();
+        let ms = tuner.measure_all(&small_shape(), &Budget::unlimited(), &ConvContext::default());
+        // direct, im2col, mec, winograd, fft all support this shape.
+        assert_eq!(ms.len(), 5);
+        assert!(ms.iter().all(|m| m.median_ns > 0.0));
+    }
+
+    #[test]
+    fn tune_caches() {
+        let mut tuner = AutoTuner::new();
+        let ctx = ConvContext::default();
+        let p1 = tuner.tune(&small_shape(), &Budget::unlimited(), &ctx);
+        assert_eq!(tuner.cached_plans(), 1);
+        let p2 = tuner.tune(&small_shape(), &Budget::unlimited(), &ctx);
+        assert_eq!(tuner.cached_plans(), 1);
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn tune_respects_budget() {
+        let mut tuner = AutoTuner::new();
+        let ctx = ConvContext::default();
+        let plan = tuner.tune(&small_shape(), &Budget::new(0), &ctx);
+        assert_eq!(plan.algo, AlgoKind::Direct);
+        assert_eq!(plan.workspace_bytes, 0);
+    }
+}

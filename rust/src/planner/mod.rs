@@ -1,0 +1,253 @@
+//! Algorithm planning under a memory budget.
+//!
+//! The paper's motivation (§1) is deployment on memory-constrained
+//! devices; this module makes that operational, cuDNN-style: given a
+//! convolution geometry and a device [`Budget`], choose the fastest
+//! algorithm whose **workspace fits**. Two selectors:
+//!
+//! * [`CostModel`] — analytic: FLOPs through the GEMM roofline plus
+//!   lowering/transform byte traffic (calibrated coefficients; zero
+//!   measurement cost).
+//! * [`AutoTuner`] — empirical: measure each admissible algorithm on the
+//!   real geometry once and cache the winner (what production frameworks
+//!   do at model-load time).
+
+pub mod autotune;
+
+pub use autotune::AutoTuner;
+
+use crate::conv::{AlgoKind, ConvContext};
+use crate::memory::Budget;
+use crate::tensor::ConvShape;
+
+/// The outcome of planning one convolution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    pub algo: AlgoKind,
+    pub workspace_bytes: usize,
+    /// Estimated (cost model) or measured (autotuner) runtime in ns.
+    pub est_ns: f64,
+}
+
+/// Analytic cost model. Units are abstract "ns" — only *ratios* matter
+/// for selection; coefficients were calibrated once against the bench
+/// harness on the dev host (see EXPERIMENTS.md §Planner).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// ns per multiply-add through the blocked GEMM.
+    pub ns_per_mac: f64,
+    /// ns per multiply-add through the direct loop nest (no blocking,
+    /// poor locality — empirically ~6-10x worse than GEMM).
+    pub ns_per_mac_direct: f64,
+    /// ns per byte moved by lowering/transform/repack loops.
+    pub ns_per_byte_moved: f64,
+    /// Fixed overhead per GEMM call (matters for MEC Solution B's
+    /// `i_n·o_h` small calls — the paper's T-threshold trade-off).
+    pub ns_per_gemm_call: f64,
+    /// ns per complex butterfly in FFT transforms.
+    pub ns_per_butterfly: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            ns_per_mac: 0.45,
+            ns_per_mac_direct: 2.8,
+            ns_per_byte_moved: 0.25,
+            ns_per_gemm_call: 800.0,
+            ns_per_butterfly: 4.0,
+        }
+    }
+}
+
+impl CostModel {
+    /// Estimate runtime of `algo` on `shape` (single thread; the planner
+    /// divides by an efficiency-discounted thread count).
+    pub fn estimate_ns(&self, algo: AlgoKind, shape: &ConvShape) -> f64 {
+        let macs = shape.macs() as f64;
+        let out_bytes = (shape.output().len() * 4) as f64;
+        match algo {
+            AlgoKind::Direct => macs * self.ns_per_mac_direct,
+            AlgoKind::Im2col => {
+                let lowered = (shape.im2col_lowered_elems() * 4) as f64;
+                // write L + read L in gemm (cache reuse folded into
+                // ns_per_mac) + one gemm call.
+                lowered * self.ns_per_byte_moved + macs * self.ns_per_mac + self.ns_per_gemm_call
+            }
+            AlgoKind::Mec | AlgoKind::MecSolutionA | AlgoKind::MecSolutionB => {
+                let lowered = (shape.mec_lowered_elems() * 4) as f64;
+                // Model the Algorithm-2 line-8 dispatch for the auto
+                // variant: Solution A when o_w ≤ T(=100) and |O| ≤ |L|,
+                // else Solution B (no repack, more/smaller gemm calls).
+                let solution_a = match algo {
+                    AlgoKind::MecSolutionA => true,
+                    AlgoKind::MecSolutionB => false,
+                    _ => {
+                        shape.ow() <= 100
+                            && shape.output().len() <= shape.mec_lowered_elems()
+                    }
+                };
+                let calls = if solution_a {
+                    shape.oh() as f64
+                } else {
+                    (shape.input.n * shape.oh()) as f64
+                };
+                let repack = if solution_a { 2.0 * out_bytes } else { 0.0 };
+                lowered * self.ns_per_byte_moved
+                    + macs * self.ns_per_mac
+                    + calls * self.ns_per_gemm_call
+                    + repack * self.ns_per_byte_moved
+            }
+            AlgoKind::Winograd | AlgoKind::WinogradChunked => {
+                // 16/36 of the direct multiplies go through gemm, plus
+                // transform traffic over U/V/M.
+                let p = crate::conv::winograd::tile_count(shape) as f64;
+                let k = shape.kernel;
+                let gemm_macs = 16.0 * k.kc as f64 * k.ic as f64 * p;
+                let transform_bytes =
+                    (16.0 * (k.kc * k.ic) as f64 + 32.0 * (k.ic as f64 + k.kc as f64) * p) * 4.0;
+                gemm_macs * self.ns_per_mac
+                    + transform_bytes * self.ns_per_byte_moved * 2.0
+                    + 16.0 * self.ns_per_gemm_call
+            }
+            AlgoKind::Fft => {
+                let (ph, pw) = crate::conv::fft_conv::fft_grid(shape);
+                let grid = (ph * pw) as f64;
+                let log2 = grid.log2().max(1.0);
+                let k = shape.kernel;
+                let n = shape.input.n as f64;
+                // transforms: ic·kc kernel + n·ic input + n·kc inverse
+                let transforms = (k.ic * k.kc) as f64 + n * k.ic as f64 + n * k.kc as f64;
+                let pointwise = n * (k.ic * k.kc) as f64 * grid;
+                transforms * grid * log2 * self.ns_per_butterfly
+                    + pointwise * self.ns_per_mac * 4.0
+            }
+        }
+    }
+}
+
+/// Planner: admissibility (supported + within budget) then cost ranking.
+#[derive(Debug, Clone, Default)]
+pub struct Planner {
+    pub cost: CostModel,
+}
+
+impl Planner {
+    pub fn new() -> Planner {
+        Planner::default()
+    }
+
+    /// Algorithms admissible for `shape` under `budget`.
+    pub fn admissible(&self, shape: &ConvShape, budget: &Budget) -> Vec<Plan> {
+        let mut out = Vec::new();
+        for kind in AlgoKind::PAPER {
+            let algo = kind.build();
+            if !algo.supports(shape) {
+                continue;
+            }
+            let ws = algo.workspace_bytes(shape);
+            if !budget.allows(ws) {
+                continue;
+            }
+            out.push(Plan {
+                algo: kind,
+                workspace_bytes: ws,
+                est_ns: self.cost.estimate_ns(kind, shape),
+            });
+        }
+        out
+    }
+
+    /// Pick the estimated-fastest admissible algorithm. `direct` has zero
+    /// workspace, so there is always at least one plan.
+    pub fn plan(&self, shape: &ConvShape, budget: &Budget, ctx: &ConvContext) -> Plan {
+        let mut best: Option<Plan> = None;
+        for mut p in self.admissible(shape, budget) {
+            // Thread scaling with a 75% parallel-efficiency discount.
+            let t = ctx.threads.max(1) as f64;
+            p.est_ns /= 1.0 + 0.75 * (t - 1.0);
+            match &best {
+                Some(b) if b.est_ns <= p.est_ns => {}
+                _ => best = Some(p),
+            }
+        }
+        best.expect("direct always admissible")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{KernelShape, Nhwc};
+
+    fn cv6() -> ConvShape {
+        ConvShape::new(
+            Nhwc::new(1, 12, 12, 256),
+            KernelShape::new(3, 3, 256, 512),
+            1,
+            1,
+        )
+    }
+
+    #[test]
+    fn direct_always_admissible() {
+        let p = Planner::new();
+        let plans = p.admissible(&cv6(), &Budget::new(0));
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].algo, AlgoKind::Direct);
+        assert_eq!(plans[0].workspace_bytes, 0);
+    }
+
+    #[test]
+    fn budget_excludes_hungry_algorithms() {
+        let p = Planner::new();
+        let shape = cv6();
+        let mec_bytes = AlgoKind::Mec.build().workspace_bytes(&shape);
+        let im2col_bytes = AlgoKind::Im2col.build().workspace_bytes(&shape);
+        assert!(mec_bytes < im2col_bytes);
+        // Budget between MEC and im2col: plan must avoid im2col.
+        let budget = Budget::new((mec_bytes + im2col_bytes) / 2);
+        let plan = p.plan(&shape, &budget, &ConvContext::default());
+        assert_ne!(plan.algo, AlgoKind::Im2col);
+        assert!(plan.workspace_bytes <= budget.limit());
+    }
+
+    #[test]
+    fn unlimited_budget_prefers_gemm_family_over_direct() {
+        let p = Planner::new();
+        let plan = p.plan(&cv6(), &Budget::unlimited(), &ConvContext::default());
+        assert_ne!(plan.algo, AlgoKind::Direct, "{plan:?}");
+    }
+
+    #[test]
+    fn winograd_not_offered_for_non_3x3() {
+        let p = Planner::new();
+        let shape = ConvShape::new(
+            Nhwc::new(1, 227, 227, 3),
+            KernelShape::new(11, 11, 3, 96),
+            4,
+            4,
+        );
+        assert!(p
+            .admissible(&shape, &Budget::unlimited())
+            .iter()
+            .all(|pl| pl.algo != AlgoKind::Winograd));
+    }
+
+    #[test]
+    fn mec_estimated_cheaper_than_im2col_when_overlapping() {
+        // The cost model must reflect the paper's core claim: fewer bytes
+        // moved -> faster, same MACs.
+        let cm = CostModel::default();
+        let shape = cv6();
+        assert!(cm.estimate_ns(AlgoKind::Mec, &shape) < cm.estimate_ns(AlgoKind::Im2col, &shape));
+    }
+
+    #[test]
+    fn eq4_memory_relation_no_overlap() {
+        // k_h <= s_h: MEC's L is not smaller (paper §3.4) — the planner's
+        // admissibility sees that via workspace_bytes.
+        let shape = ConvShape::new(Nhwc::new(1, 32, 32, 8), KernelShape::new(3, 3, 8, 8), 3, 3);
+        assert!(shape.mec_lowered_elems() >= shape.im2col_lowered_elems());
+    }
+}

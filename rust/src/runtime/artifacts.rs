@@ -1,0 +1,141 @@
+//! Artifact manifest: what `make artifacts` produced and how to call it.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt`, one line per
+//! artifact (hand-rolled format; serde is unavailable offline):
+//!
+//! ```text
+//! # comment
+//! name=conv_cv6 file=conv_cv6.hlo.txt inputs=1,12,12,256;3,3,256,512 outputs=1,10,10,512
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One artifact entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Artifact {
+    pub name: String,
+    pub file: PathBuf,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<Artifact>,
+}
+
+fn parse_shapes(s: &str) -> Result<Vec<Vec<usize>>> {
+    if s.is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(';')
+        .map(|shape| {
+            shape
+                .split(',')
+                .map(|d| d.trim().parse::<usize>().context("bad dim"))
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `dir/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Manifest::parse(&text, dir)
+    }
+
+    /// Parse manifest text (testable without files).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut name = None;
+            let mut file = None;
+            let mut inputs = Vec::new();
+            let mut outputs = Vec::new();
+            for field in line.split_whitespace() {
+                let Some((k, v)) = field.split_once('=') else {
+                    bail!("manifest line {}: bad field {:?}", lineno + 1, field);
+                };
+                match k {
+                    "name" => name = Some(v.to_string()),
+                    "file" => file = Some(v.to_string()),
+                    "inputs" => inputs = parse_shapes(v)?,
+                    "outputs" => outputs = parse_shapes(v)?,
+                    _ => bail!("manifest line {}: unknown key {:?}", lineno + 1, k),
+                }
+            }
+            let (Some(name), Some(file)) = (name, file) else {
+                bail!("manifest line {}: missing name/file", lineno + 1);
+            };
+            artifacts.push(Artifact {
+                name,
+                file: dir.join(file),
+                input_shapes: inputs,
+                output_shapes: outputs,
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+}
+
+/// Default artifacts directory: `$MEC_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("MEC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# artifacts built 2026-07-11
+name=model_fwd file=model_fwd.hlo.txt inputs=8,28,28,1 outputs=8,3
+name=conv_cv6 file=conv_cv6.hlo.txt inputs=1,12,12,256;3,3,256,512 outputs=1,10,10,512
+";
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let cv6 = m.find("conv_cv6").unwrap();
+        assert_eq!(cv6.file, PathBuf::from("/a/conv_cv6.hlo.txt"));
+        assert_eq!(cv6.input_shapes.len(), 2);
+        assert_eq!(cv6.input_shapes[1], vec![3, 3, 256, 512]);
+        assert_eq!(cv6.output_shapes[0], vec![1, 10, 10, 512]);
+        assert!(m.find("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("name=x", PathBuf::new()).is_err()); // no file
+        assert!(Manifest::parse("garbage line", PathBuf::new()).is_err());
+        assert!(Manifest::parse("name=x file=y unknown=z", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let m = Manifest::parse("# only comments\n\n", PathBuf::new()).unwrap();
+        assert!(m.artifacts.is_empty());
+    }
+}

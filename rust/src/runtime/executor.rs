@@ -1,0 +1,201 @@
+//! The two execution backends behind one trait: the native rust engine
+//! (conv algorithms + planner) and the PJRT path (AOT JAX/Pallas HLO).
+//! `examples/serve_cnn.rs` cross-checks them numerically.
+
+use crate::conv::ConvContext;
+use crate::memory::Workspace;
+use crate::model::Model;
+use crate::tensor::{Nhwc, Tensor};
+use anyhow::Result;
+
+/// A batched forward executor: NHWC batch in, (n × classes) scores out.
+///
+/// Not `Send`: the PJRT client wraps host resources in `Rc`. Construct
+/// executors inside the thread that uses them (the serve example builds
+/// its PJRT cross-check executor on the main thread).
+pub trait Executor {
+    fn name(&self) -> &str;
+    /// Expected per-sample (h, w, c).
+    fn input_hwc(&self) -> (usize, usize, usize);
+    /// Run a forward pass; returns row-major (n × features).
+    fn forward(&mut self, batch: &Tensor) -> Result<Vec<f32>>;
+    /// Features per sample in the output.
+    fn output_features(&self) -> usize;
+}
+
+/// Native engine executor over a planned [`Model`].
+pub struct NativeExecutor {
+    pub model: std::sync::Arc<Model>,
+    pub ctx: ConvContext,
+    ws: Workspace,
+}
+
+impl NativeExecutor {
+    pub fn new(model: std::sync::Arc<Model>, ctx: ConvContext) -> NativeExecutor {
+        NativeExecutor {
+            model,
+            ctx,
+            ws: Workspace::new(),
+        }
+    }
+}
+
+impl Executor for NativeExecutor {
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn input_hwc(&self) -> (usize, usize, usize) {
+        self.model.input_hwc
+    }
+
+    fn forward(&mut self, batch: &Tensor) -> Result<Vec<f32>> {
+        let out = self.model.forward(&self.ctx, batch, &mut self.ws);
+        Ok(out.into_vec())
+    }
+
+    fn output_features(&self) -> usize {
+        self.model.output_features()
+    }
+}
+
+/// PJRT executor over a compiled artifact. The artifact was lowered for a
+/// fixed batch size (XLA staticness); callers must match it — the serve
+/// example pads the final partial batch.
+///
+/// Weights travel as runtime parameters, not baked constants: the pinned
+/// xla_extension 0.5.1 HLO-text parser silently mis-parses jax ≥0.8's
+/// multi-dimensional f32 constant literals (found by the cross-check
+/// test; see EXPERIMENTS.md §Findings). Input 0 is the image batch; the
+/// remaining manifest inputs are weights supplied via [`Self::with_weights`]
+/// or extracted from a loaded [`Model`] via [`model_weight_inputs`].
+pub struct PjrtExecutor {
+    computation: super::Computation,
+    hwc: (usize, usize, usize),
+    batch: usize,
+    features: usize,
+    weight_shapes: Vec<Vec<usize>>,
+    weights: Vec<Vec<f32>>,
+}
+
+impl PjrtExecutor {
+    /// Build from an engine + manifest entry named `name`: input 0 is the
+    /// NHWC image batch, inputs 1.. are weight tensors, single output
+    /// `n × f`.
+    pub fn from_artifact(
+        engine: &super::PjrtEngine,
+        manifest: &super::Manifest,
+        name: &str,
+    ) -> Result<PjrtExecutor> {
+        let art = manifest
+            .find(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest"))?;
+        anyhow::ensure!(
+            !art.input_shapes.is_empty() && art.input_shapes[0].len() == 4,
+            "artifact {name:?}: expected NHWC input 0, got {:?}",
+            art.input_shapes
+        );
+        let ishape = &art.input_shapes[0];
+        let oshape = &art.output_shapes[0];
+        let computation = engine.load_hlo_text(&art.file)?;
+        Ok(PjrtExecutor {
+            computation,
+            hwc: (ishape[1], ishape[2], ishape[3]),
+            batch: ishape[0],
+            features: oshape.iter().skip(1).product(),
+            weight_shapes: art.input_shapes[1..].to_vec(),
+            weights: Vec::new(),
+        })
+    }
+
+    /// Supply the weight tensors (order/shape per the manifest).
+    pub fn with_weights(mut self, weights: Vec<Vec<f32>>) -> Result<PjrtExecutor> {
+        anyhow::ensure!(
+            weights.len() == self.weight_shapes.len(),
+            "expected {} weight tensors, got {}",
+            self.weight_shapes.len(),
+            weights.len()
+        );
+        for (w, s) in weights.iter().zip(&self.weight_shapes) {
+            let want: usize = s.iter().product();
+            anyhow::ensure!(w.len() == want, "weight shape {:?} vs {} elems", s, w.len());
+        }
+        self.weights = weights;
+        Ok(self)
+    }
+
+    /// The fixed batch size this executable was lowered for.
+    pub fn lowered_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn run_batch(&self, data: &[f32], n: usize) -> Result<Vec<f32>> {
+        let (h, w, c) = self.hwc;
+        let xshape = [n, h, w, c];
+        let mut inputs: Vec<(&[f32], &[usize])> = Vec::with_capacity(1 + self.weights.len());
+        inputs.push((data, &xshape));
+        for (wv, ws) in self.weights.iter().zip(&self.weight_shapes) {
+            inputs.push((wv, ws));
+        }
+        self.computation.run_f32(&inputs)
+    }
+}
+
+/// Extract weight tensors from a loaded model in the AOT `weight_order`:
+/// per conv layer (kernel, bias), then dense (w, bias).
+pub fn model_weight_inputs(model: &Model) -> Vec<Vec<f32>> {
+    let mut out = Vec::new();
+    for layer in &model.layers {
+        match layer {
+            crate::model::Layer::Conv { kernel, bias, .. } => {
+                out.push(kernel.data().to_vec());
+                out.push(bias.clone());
+            }
+            crate::model::Layer::Dense { w, bias, .. } => {
+                out.push(w.clone());
+                out.push(bias.clone());
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+impl Executor for PjrtExecutor {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn input_hwc(&self) -> (usize, usize, usize) {
+        self.hwc
+    }
+
+    fn forward(&mut self, batch: &Tensor) -> Result<Vec<f32>> {
+        let shape: Nhwc = batch.shape();
+        let (h, w, c) = self.hwc;
+        anyhow::ensure!(
+            (shape.h, shape.w, shape.c) == (h, w, c),
+            "batch hwc {:?} vs lowered {:?}",
+            (shape.h, shape.w, shape.c),
+            self.hwc
+        );
+        let n = shape.n;
+        if n == self.batch {
+            return self.run_batch(batch.data(), n);
+        }
+        anyhow::ensure!(
+            n < self.batch,
+            "batch {n} exceeds lowered batch {}",
+            self.batch
+        );
+        // Pad the partial batch with zeros, truncate the scores.
+        let mut padded = vec![0.0f32; self.batch * h * w * c];
+        padded[..batch.data().len()].copy_from_slice(batch.data());
+        let out = self.run_batch(&padded, self.batch)?;
+        Ok(out[..n * self.features].to_vec())
+    }
+
+    fn output_features(&self) -> usize {
+        self.features
+    }
+}

@@ -1,0 +1,8 @@
+//! NHWC tensors and convolution geometry (paper §2.1, Table 1).
+
+pub mod shape;
+#[allow(clippy::module_inception)]
+pub mod tensor;
+
+pub use shape::{ConvShape, KernelShape, Nhwc};
+pub use tensor::{Kernel, Tensor};

@@ -1,0 +1,243 @@
+//! Dense `f32` NHWC tensors. Row-major (C convention, paper §2.1), so a
+//! tensor can be reinterpreted as matrices of various shapes without moving
+//! data — the property both im2col and MEC exploit.
+
+use super::shape::{KernelShape, Nhwc};
+use crate::util::Rng;
+
+/// Owned 4-D NHWC tensor of `f32`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Nhwc,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: Nhwc) -> Tensor {
+        Tensor {
+            shape,
+            data: vec![0.0; shape.len()],
+        }
+    }
+
+    /// Build from an existing buffer (must match the shape's length).
+    pub fn from_vec(shape: Nhwc, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.len(), data.len(), "shape {shape} != buffer {}", data.len());
+        Tensor { shape, data }
+    }
+
+    /// Element-wise construction from indices.
+    pub fn from_fn<F: FnMut(usize, usize, usize, usize) -> f32>(shape: Nhwc, mut f: F) -> Tensor {
+        let mut data = Vec::with_capacity(shape.len());
+        for n in 0..shape.n {
+            for h in 0..shape.h {
+                for w in 0..shape.w {
+                    for c in 0..shape.c {
+                        data.push(f(n, h, w, c));
+                    }
+                }
+            }
+        }
+        Tensor { shape, data }
+    }
+
+    /// Uniform random in `[-1, 1)` from a deterministic RNG.
+    pub fn random(shape: Nhwc, rng: &mut Rng) -> Tensor {
+        let mut data = vec![0.0; shape.len()];
+        rng.fill_uniform(&mut data, -1.0, 1.0);
+        Tensor { shape, data }
+    }
+
+    pub fn shape(&self) -> Nhwc {
+        self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Element access.
+    #[inline(always)]
+    pub fn at(&self, n: usize, h: usize, w: usize, c: usize) -> f32 {
+        self.data[self.shape.index(n, h, w, c)]
+    }
+
+    /// Mutable element access.
+    #[inline(always)]
+    pub fn at_mut(&mut self, n: usize, h: usize, w: usize, c: usize) -> &mut f32 {
+        let i = self.shape.index(n, h, w, c);
+        &mut self.data[i]
+    }
+
+    /// The `n`-th sample as a contiguous slice (`h·w·c` elements).
+    pub fn sample(&self, n: usize) -> &[f32] {
+        let sz = self.shape.h * self.shape.w * self.shape.c;
+        &self.data[n * sz..(n + 1) * sz]
+    }
+
+    /// Zero-pad spatially by `(ph, pw)` on each side — the paper assumes
+    /// padding is pre-applied (§2.1); this is the pre-application.
+    pub fn pad_spatial(&self, ph: usize, pw: usize) -> Tensor {
+        let s = self.shape;
+        let out_shape = Nhwc::new(s.n, s.h + 2 * ph, s.w + 2 * pw, s.c);
+        let mut out = Tensor::zeros(out_shape);
+        for n in 0..s.n {
+            for h in 0..s.h {
+                let src = &self.data[s.index(n, h, 0, 0)..s.index(n, h, 0, 0) + s.w * s.c];
+                let dst_off = out_shape.index(n, h + ph, pw, 0);
+                out.data[dst_off..dst_off + s.w * s.c].copy_from_slice(src);
+            }
+        }
+        out
+    }
+
+    /// Bytes of payload.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Owned convolution kernel tensor, `k_h × k_w × i_c × k_c` row-major —
+/// i.e. already in the `(k_h·k_w·i_c) × k_c` matrix layout that both
+/// im2col and MEC multiply against (paper Algorithm 2 line 7).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Kernel {
+    shape: KernelShape,
+    data: Vec<f32>,
+}
+
+impl Kernel {
+    pub fn zeros(shape: KernelShape) -> Kernel {
+        Kernel {
+            shape,
+            data: vec![0.0; shape.len()],
+        }
+    }
+
+    pub fn from_vec(shape: KernelShape, data: Vec<f32>) -> Kernel {
+        assert_eq!(shape.len(), data.len());
+        Kernel { shape, data }
+    }
+
+    pub fn from_fn<F: FnMut(usize, usize, usize, usize) -> f32>(
+        shape: KernelShape,
+        mut f: F,
+    ) -> Kernel {
+        let mut data = Vec::with_capacity(shape.len());
+        for h in 0..shape.kh {
+            for w in 0..shape.kw {
+                for i in 0..shape.ic {
+                    for o in 0..shape.kc {
+                        data.push(f(h, w, i, o));
+                    }
+                }
+            }
+        }
+        Kernel { shape, data }
+    }
+
+    pub fn random(shape: KernelShape, rng: &mut Rng) -> Kernel {
+        let mut data = vec![0.0; shape.len()];
+        rng.fill_uniform(&mut data, -1.0, 1.0);
+        Kernel { shape, data }
+    }
+
+    pub fn shape(&self) -> KernelShape {
+        self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    #[inline(always)]
+    pub fn at(&self, h: usize, w: usize, i: usize, o: usize) -> f32 {
+        self.data[self.shape.index(h, w, i, o)]
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_fn_row_major() {
+        let t = Tensor::from_fn(Nhwc::new(1, 2, 2, 2), |_, h, w, c| (h * 4 + w * 2 + c) as f32);
+        assert_eq!(t.data(), &[0., 1., 2., 3., 4., 5., 6., 7.]);
+        assert_eq!(t.at(0, 1, 0, 1), 5.0);
+    }
+
+    #[test]
+    fn pad_spatial_places_content() {
+        let t = Tensor::from_fn(Nhwc::new(1, 2, 2, 1), |_, h, w, _| (h * 2 + w + 1) as f32);
+        let p = t.pad_spatial(1, 1);
+        assert_eq!(p.shape(), Nhwc::new(1, 4, 4, 1));
+        assert_eq!(p.at(0, 0, 0, 0), 0.0);
+        assert_eq!(p.at(0, 1, 1, 0), 1.0);
+        assert_eq!(p.at(0, 2, 2, 0), 4.0);
+        assert_eq!(p.at(0, 3, 3, 0), 0.0);
+        // Padded mass equals original mass.
+        let sum: f32 = p.data().iter().sum();
+        assert_eq!(sum, 1.0 + 2.0 + 3.0 + 4.0);
+    }
+
+    #[test]
+    fn sample_slices() {
+        let t = Tensor::from_fn(Nhwc::new(2, 1, 2, 1), |n, _, w, _| (n * 10 + w) as f32);
+        assert_eq!(t.sample(0), &[0.0, 1.0]);
+        assert_eq!(t.sample(1), &[10.0, 11.0]);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = Tensor::random(Nhwc::new(1, 3, 3, 2), &mut r1);
+        let b = Tensor::random(Nhwc::new(1, 3, 3, 2), &mut r2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn kernel_matrix_layout() {
+        // Kernel [kh,kw,ic,kc] row-major == (kh·kw·ic) × kc matrix: the
+        // element (row r, col o) with r = (h·kw + w)·ic + i must be at
+        // linear r·kc + o.
+        let k = Kernel::from_fn(KernelShape::new(2, 2, 3, 4), |h, w, i, o| {
+            (((h * 2 + w) * 3 + i) * 4 + o) as f32
+        });
+        for (lin, &v) in k.data().iter().enumerate() {
+            assert_eq!(lin as f32, v);
+        }
+    }
+
+    #[test]
+    fn bytes_reported() {
+        let t = Tensor::zeros(Nhwc::new(1, 2, 2, 1));
+        assert_eq!(t.bytes(), 16);
+    }
+}

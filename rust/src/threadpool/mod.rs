@@ -1,0 +1,261 @@
+//! Scoped thread pool + `parallel_for` — our stand-in for the paper's
+//! OpenMP parallel loops (rayon is unavailable offline).
+//!
+//! Design: a fixed set of worker threads parked on a shared injector;
+//! `scope()` lets callers borrow stack data (like OpenMP), implemented with
+//! `std::thread::scope` under the hood for the borrowed case, and a
+//! long-lived pool for the serving path where tasks are `'static`.
+//!
+//! The "Mobile" configuration of the paper (single ARM core) is modelled by
+//! constructing a pool with 1 thread: `parallel_for` then degenerates to a
+//! sequential loop with no thread overhead.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// A chunked parallel for-loop over `0..n` with `threads` workers that may
+/// borrow from the caller's stack. Each worker receives disjoint index
+/// ranges; `body(i)` is called exactly once per index.
+///
+/// With `threads <= 1` (or tiny `n`) it runs inline — this is the paper's
+/// Mobile configuration and also keeps nested parallelism cheap.
+pub fn parallel_for<F>(threads: usize, n: usize, body: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || n <= 1 {
+        for i in 0..n {
+            body(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    // Chunk size balances scheduling overhead vs. load balance; the conv
+    // loops have fairly uniform bodies so a modest chunk works well.
+    let chunk = (n / (threads * 4)).max(1);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    body(i);
+                }
+            });
+        }
+    });
+}
+
+/// Like [`parallel_for`] but the body gets `(worker_id, index)` so workers
+/// can keep per-thread scratch.
+pub fn parallel_for_with_id<F>(threads: usize, n: usize, body: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || n <= 1 {
+        for i in 0..n {
+            body(0, i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let chunk = (n / (threads * 4)).max(1);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let next = &next;
+            let body = &body;
+            s.spawn(move || loop {
+                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    body(t, i);
+                }
+            });
+        }
+    });
+}
+
+/// A `&mut [f32]` smuggled across `parallel_for` workers that write
+/// **disjoint** regions. Methods (not field access) are used inside
+/// closures so edition-2021 disjoint capture grabs the whole (Sync)
+/// wrapper rather than the raw pointer field.
+///
+/// Safety contract: callers must ensure tasks write non-overlapping index
+/// ranges; the paper's parallel loops (over output rows / lowered-matrix
+/// rows / batch entries) all have this property by construction.
+pub struct SharedSlice {
+    ptr: *mut f32,
+    len: usize,
+}
+
+unsafe impl Send for SharedSlice {}
+unsafe impl Sync for SharedSlice {}
+
+impl SharedSlice {
+    pub fn new(buf: &mut [f32]) -> SharedSlice {
+        SharedSlice {
+            ptr: buf.as_mut_ptr(),
+            len: buf.len(),
+        }
+    }
+
+    /// Reconstruct the full slice. Each caller must touch only its own
+    /// disjoint region (see type docs).
+    #[allow(clippy::mut_from_ref)]
+    pub fn slice(&self) -> &mut [f32] {
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Long-lived pool for `'static` jobs (the coordinator's workers).
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (min 1).
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(size);
+        for id in 0..size {
+            let rx = Arc::clone(&rx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("mec-worker-{id}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped -> shut down
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool {
+            tx: Some(tx),
+            handles,
+            size,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Drop the sender and join all workers.
+    pub fn shutdown(&mut self) {
+        self.tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn parallel_for_covers_all_indices_once() {
+        for threads in [1, 2, 4] {
+            let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+            parallel_for(threads, 1000, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_for_empty() {
+        parallel_for(4, 0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let total = AtomicU64::new(0);
+        parallel_for(3, 10_000, |i| {
+            total.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 10_000u64 * 9_999 / 2);
+    }
+
+    #[test]
+    fn with_id_ids_in_range() {
+        let bad = AtomicUsize::new(0);
+        parallel_for_with_id(3, 500, |t, _| {
+            if t >= 3 {
+                bad.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(bad.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn pool_runs_jobs_and_shuts_down() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mut pool = ThreadPool::new(2);
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..64 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..64 {
+            rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn pool_size_min_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+    }
+}

@@ -1,0 +1,202 @@
+//! Tiny command-line parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Each binary declares its options with [`Args::flag`] / [`Args::opt`] /
+//! typed getters; `--help` output is assembled from those declarations.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line plus accumulated help text.
+#[derive(Debug, Clone)]
+pub struct Args {
+    program: String,
+    /// key -> values (repeated options collect)
+    opts: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    help: Vec<(String, String)>,
+    about: String,
+}
+
+impl Args {
+    /// Parse from `std::env::args()`.
+    pub fn from_env(about: &str) -> Args {
+        let mut it = std::env::args();
+        let program = it.next().unwrap_or_else(|| "mec".into());
+        Args::parse(program, it.collect(), about)
+    }
+
+    /// Parse from an explicit vector (testable).
+    pub fn parse(program: String, argv: Vec<String>, about: &str) -> Args {
+        let mut opts: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    opts.entry(k.to_string()).or_default().push(v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    opts.entry(rest.to_string())
+                        .or_default()
+                        .push(argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.push(rest.to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Args {
+            program,
+            opts,
+            flags,
+            positional,
+            help: Vec::new(),
+            about: about.to_string(),
+        }
+    }
+
+    /// Declare + read a boolean flag.
+    pub fn flag(&mut self, name: &str, help: &str) -> bool {
+        self.help.push((format!("--{name}"), help.to_string()));
+        self.flags.iter().any(|f| f == name) || self.opts.contains_key(name)
+    }
+
+    /// Declare + read a string option with default.
+    pub fn opt(&mut self, name: &str, default: &str, help: &str) -> String {
+        self.help
+            .push((format!("--{name} <v>"), format!("{help} [default: {default}]")));
+        self.opts
+            .get(name)
+            .and_then(|v| v.last().cloned())
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Declare + read an optional string option (no default).
+    pub fn opt_maybe(&mut self, name: &str, help: &str) -> Option<String> {
+        self.help.push((format!("--{name} <v>"), help.to_string()));
+        self.opts.get(name).and_then(|v| v.last().cloned())
+    }
+
+    /// Declare + read a usize option with default.
+    pub fn opt_usize(&mut self, name: &str, default: usize, help: &str) -> usize {
+        let raw = self.opt(name, &default.to_string(), help);
+        raw.parse().unwrap_or_else(|_| {
+            eprintln!("error: --{name} expects an integer, got {raw:?}");
+            std::process::exit(2);
+        })
+    }
+
+    /// Declare + read an f64 option with default.
+    pub fn opt_f64(&mut self, name: &str, default: f64, help: &str) -> f64 {
+        let raw = self.opt(name, &default.to_string(), help);
+        raw.parse().unwrap_or_else(|_| {
+            eprintln!("error: --{name} expects a number, got {raw:?}");
+            std::process::exit(2);
+        })
+    }
+
+    /// All values given for a repeatable option.
+    pub fn opt_all(&mut self, name: &str, help: &str) -> Vec<String> {
+        self.help
+            .push((format!("--{name} <v> (repeatable)"), help.to_string()));
+        self.opts.get(name).cloned().unwrap_or_default()
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional (subcommand style).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Render help text.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{}\n\nUsage: {} [options]\n\nOptions:\n", self.about, self.program);
+        for (k, h) in &self.help {
+            s.push_str(&format!("  {k:<28} {h}\n"));
+        }
+        s.push_str("  --help                       show this message\n");
+        s
+    }
+
+    /// If `--help` was passed, print usage and exit. Call after declaring
+    /// all options so the help is complete.
+    pub fn finish(&self) {
+        if self.flags.iter().any(|f| f == "help") {
+            println!("{}", self.usage());
+            std::process::exit(0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(argv: &[&str]) -> Args {
+        Args::parse(
+            "test".into(),
+            argv.iter().map(|s| s.to_string()).collect(),
+            "about",
+        )
+    }
+
+    #[test]
+    fn parses_key_value() {
+        let mut a = mk(&["--layers", "cv1", "--batch", "32"]);
+        assert_eq!(a.opt("layers", "all", ""), "cv1");
+        assert_eq!(a.opt_usize("batch", 1, ""), 32);
+    }
+
+    #[test]
+    fn parses_key_eq_value() {
+        let mut a = mk(&["--batch=8"]);
+        assert_eq!(a.opt_usize("batch", 1, ""), 8);
+    }
+
+    #[test]
+    fn parses_flags() {
+        // NOTE: subcommands go first — `--flag value`-style ambiguity is
+        // resolved in favour of options (documented parser behaviour).
+        let mut a = mk(&["run", "--verbose"]);
+        assert!(a.flag("verbose", ""));
+        assert!(!a.flag("quiet", ""));
+        assert_eq!(a.subcommand(), Some("run"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = mk(&[]);
+        assert_eq!(a.opt("algo", "mec", ""), "mec");
+        assert_eq!(a.opt_usize("threads", 4, ""), 4);
+        assert!(a.opt_maybe("missing", "").is_none());
+    }
+
+    #[test]
+    fn repeated_options_collect() {
+        let mut a = mk(&["--layer", "cv1", "--layer", "cv2"]);
+        assert_eq!(a.opt_all("layer", ""), vec!["cv1", "cv2"]);
+    }
+
+    #[test]
+    fn usage_mentions_declared() {
+        let mut a = mk(&[]);
+        let _ = a.opt("algo", "mec", "algorithm to use");
+        assert!(a.usage().contains("--algo"));
+        assert!(a.usage().contains("algorithm to use"));
+    }
+
+    #[test]
+    fn last_value_wins() {
+        let mut a = mk(&["--batch", "8", "--batch", "16"]);
+        assert_eq!(a.opt_usize("batch", 1, ""), 16);
+    }
+}

@@ -1,0 +1,76 @@
+//! Minimal `log` facade backend (env_logger is unavailable offline).
+//!
+//! `MEC_LOG=debug|info|warn|error|off` controls verbosity; default `info`.
+//! Output goes to stderr with a monotonic timestamp so serving traces line
+//! up with latency measurements.
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use std::sync::Once;
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+    level: LevelFilter,
+}
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!(
+            "[{:>9.3}s {} {}] {}",
+            t.as_secs_f64(),
+            lvl,
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static INIT: Once = Once::new();
+
+/// Install the logger (idempotent). Reads `MEC_LOG`.
+pub fn init() {
+    INIT.call_once(|| {
+        let level = match std::env::var("MEC_LOG").as_deref() {
+            Ok("trace") => LevelFilter::Trace,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("error") => LevelFilter::Error,
+            Ok("off") => LevelFilter::Off,
+            _ => LevelFilter::Info,
+        };
+        let logger = Box::new(StderrLogger {
+            start: Instant::now(),
+            level,
+        });
+        if log::set_boxed_logger(logger).is_ok() {
+            log::set_max_level(level);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

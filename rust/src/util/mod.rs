@@ -1,0 +1,77 @@
+//! Cross-cutting utilities: deterministic RNG, property-testing harness,
+//! statistics, CLI parsing, logging. All substrates the offline build
+//! cannot pull from crates.io (rand/proptest/clap/env_logger/criterion).
+
+pub mod cli;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+
+/// Relative-L2 + max-abs comparison used everywhere we check numerics
+/// between two convolution implementations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Diff {
+    pub max_abs: f64,
+    pub rel_l2: f64,
+}
+
+/// Compare two equally-shaped buffers.
+pub fn diff(a: &[f32], b: &[f32]) -> Diff {
+    assert_eq!(a.len(), b.len(), "diff: length mismatch {} vs {}", a.len(), b.len());
+    let mut max_abs = 0f64;
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        let d = (x as f64 - y as f64).abs();
+        if d > max_abs {
+            max_abs = d;
+        }
+        num += (x as f64 - y as f64).powi(2);
+        den += (y as f64).powi(2);
+    }
+    Diff {
+        max_abs,
+        rel_l2: if den == 0.0 { num.sqrt() } else { (num / den).sqrt() },
+    }
+}
+
+/// Assert two buffers match within tolerances, with a helpful message.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f64, context: &str) {
+    let d = diff(a, b);
+    assert!(
+        d.rel_l2 <= rtol,
+        "{context}: buffers differ: rel_l2={:.3e} (rtol={rtol:.1e}), max_abs={:.3e}",
+        d.rel_l2,
+        d.max_abs
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diff_identical_is_zero() {
+        let a = [1.0f32, -2.0, 3.5];
+        let d = diff(&a, &a);
+        assert_eq!(d.max_abs, 0.0);
+        assert_eq!(d.rel_l2, 0.0);
+    }
+
+    #[test]
+    fn diff_detects_mismatch() {
+        let a = [1.0f32, 2.0];
+        let b = [1.0f32, 2.5];
+        let d = diff(&a, &b);
+        assert!(d.max_abs > 0.49 && d.max_abs < 0.51);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffers differ")]
+    fn assert_allclose_panics() {
+        assert_allclose(&[1.0], &[2.0], 1e-6, "test");
+    }
+}

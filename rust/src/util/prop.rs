@@ -1,0 +1,185 @@
+//! Minimal property-based-testing harness.
+//!
+//! `proptest` is not in the offline registry, so we provide the subset the
+//! repo needs: run a property over many generated cases, report the seed and
+//! the generated case on failure, and optionally shrink integer tuples by
+//! halving toward the minimum. Deterministic by default (fixed seed) so CI
+//! is stable; override via `MEC_PROP_SEED` / `MEC_PROP_CASES`.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("MEC_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(DEFAULT_SEED);
+        let cases = std::env::var("MEC_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Config { cases, seed }
+    }
+}
+
+/// ASCII "MEC_SEED" — fixed default so CI runs are reproducible.
+pub const DEFAULT_SEED: u64 = 0x4d45_435f_5345_4544;
+
+/// Run `prop` on `cfg.cases` cases produced by `gen`. Panics with the seed,
+/// case index, and debug-printed input on the first failure (after trying
+/// to shrink via `shrink`).
+pub fn check_with<T, G, P, S>(cfg: &Config, mut gen: G, mut prop: P, shrink: S)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    S: Fn(&T) -> Vec<T>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let mut case_rng = rng.split();
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink: repeatedly take the first shrunken candidate
+            // that still fails, up to a bounded number of steps.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < 200 {
+                for cand in shrink(&best) {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        steps += 1;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={:#x}, case {}/{}):\n  input (shrunk): {:?}\n  error: {}",
+                cfg.seed, case_idx, cfg.cases, best, best_msg
+            );
+        }
+    }
+}
+
+/// `check_with` without shrinking.
+pub fn check<T, G, P>(cfg: &Config, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    check_with(cfg, gen, prop, |_| Vec::new());
+}
+
+/// Convenience: default config.
+pub fn quickcheck<T, G, P>(gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    check(&Config::default(), gen, prop);
+}
+
+/// Shrinker for a vector of usizes toward provided minimums: yields
+/// candidates with each coordinate halved toward its floor.
+pub fn shrink_usizes(xs: &[usize], floors: &[usize]) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    for i in 0..xs.len() {
+        let fl = floors.get(i).copied().unwrap_or(0);
+        if xs[i] > fl {
+            let mut c = xs.to_vec();
+            c[i] = fl + (xs[i] - fl) / 2;
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        quickcheck(
+            |r: &mut Rng| r.range(0, 100),
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} out of range"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        quickcheck(
+            |r: &mut Rng| r.range(0, 100),
+            |&x| {
+                if x < 1 {
+                    Ok(())
+                } else {
+                    Err("nope".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinking_reaches_small_case() {
+        // Property "x < 10" fails for x >= 10; shrinking should land near 10.
+        let cfg = Config { cases: 64, seed: 1 };
+        let result = std::panic::catch_unwind(|| {
+            check_with(
+                &cfg,
+                |r: &mut Rng| vec![r.range(0, 1000)],
+                |xs| {
+                    if xs[0] < 10 {
+                        Ok(())
+                    } else {
+                        Err("too big".into())
+                    }
+                },
+                |xs| shrink_usizes(xs, &[0]),
+            );
+        });
+        let err = result.expect_err("should fail");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        // Greedy halving from anywhere in [10,1000) must end in [10, 20).
+        let shrunk: usize = msg
+            .split('[')
+            .nth(1)
+            .and_then(|s| s.split(']').next())
+            .and_then(|s| s.trim().parse().ok())
+            .expect("parse shrunk value");
+        assert!((10..20).contains(&shrunk), "shrunk to {shrunk}: {msg}");
+    }
+
+    #[test]
+    fn default_seed_is_stable() {
+        assert_eq!(DEFAULT_SEED, 0x4d45_435f_5345_4544);
+    }
+
+    #[test]
+    fn shrink_usizes_respects_floors() {
+        let cands = shrink_usizes(&[8, 3], &[2, 3]);
+        assert_eq!(cands, vec![vec![5, 3]]);
+    }
+}

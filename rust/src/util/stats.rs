@@ -1,0 +1,249 @@
+//! Small statistics helpers shared by the bench harness and the
+//! coordinator's latency metrics (criterion is unavailable offline, so the
+//! bench harness is ours — see `bench::harness`).
+
+/// Summary statistics over a sample of measurements (e.g. nanoseconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    /// Median absolute deviation — robust spread estimate.
+    pub mad: f64,
+    pub p95: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    /// Compute a summary. Panics on an empty sample.
+    pub fn from(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::from(empty)");
+        let mut xs: Vec<f64> = samples.to_vec();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let median = percentile_sorted(&xs, 50.0);
+        let mut devs: Vec<f64> = xs.iter().map(|x| (x - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = percentile_sorted(&devs, 50.0);
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / (n.max(2) - 1) as f64;
+        Summary {
+            n,
+            min: xs[0],
+            max: xs[n - 1],
+            mean,
+            median,
+            mad,
+            p95: percentile_sorted(&xs, 95.0),
+            stddev: var.sqrt(),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a **sorted** slice. `p` in [0,100].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Streaming histogram with fixed power-of-two-ish bucket boundaries,
+/// used by the coordinator for latency percentiles without storing every
+/// sample. Buckets grow geometrically from `base_ns`.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    base: f64,
+    growth: f64,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Histogram {
+    /// `base`: upper bound of the first bucket; `growth`: geometric factor;
+    /// `buckets`: number of buckets (everything above the last bound lands
+    /// in the overflow bucket).
+    pub fn new(base: f64, growth: f64, buckets: usize) -> Histogram {
+        assert!(base > 0.0 && growth > 1.0 && buckets >= 2);
+        Histogram {
+            base,
+            growth,
+            counts: vec![0; buckets],
+            total: 0,
+            sum: 0.0,
+            max: 0.0,
+        }
+    }
+
+    /// Default latency histogram: 1µs..~70s in 64 buckets (ns units).
+    pub fn latency_ns() -> Histogram {
+        Histogram::new(1_000.0, 1.33, 64)
+    }
+
+    fn bucket_of(&self, v: f64) -> usize {
+        let mut bound = self.base;
+        for i in 0..self.counts.len() - 1 {
+            if v <= bound {
+                return i;
+            }
+            bound *= self.growth;
+        }
+        self.counts.len() - 1
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let b = self.bucket_of(v);
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Approximate percentile: upper bound of the bucket containing the
+    /// p-th sample. `p` in [0,100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        let mut bound = self.base;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i == self.counts.len() - 1 { self.max } else { bound };
+            }
+            bound *= self.growth;
+        }
+        self.max
+    }
+
+    /// Merge another histogram with identical shape.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Human-readable byte count ("41.7 MB" style, decimal like the paper).
+pub fn fmt_bytes(bytes: usize) -> String {
+    let b = bytes as f64;
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.1} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.1} KB", b / 1e3)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Human-readable duration from nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.mad, 1.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&xs, 50.0), 5.0);
+        assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn histogram_percentiles_monotone() {
+        let mut h = Histogram::latency_ns();
+        for i in 1..=1000 {
+            h.record(i as f64 * 10_000.0); // 10µs..10ms
+        }
+        let p50 = h.percentile(50.0);
+        let p95 = h.percentile(95.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // p50 should be around 5ms (5e6 ns) within a bucket factor.
+        assert!(p50 > 2e6 && p50 < 12e6, "p50={p50}");
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::latency_ns();
+        let mut b = Histogram::latency_ns();
+        a.record(1e6);
+        b.record(2e6);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.mean() - 1.5e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_bytes(500), "500 B");
+        assert_eq!(fmt_bytes(41_700_000), "41.7 MB");
+        assert_eq!(fmt_ns(1_500_000.0), "1.50 ms");
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::latency_ns();
+        assert_eq!(h.percentile(99.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

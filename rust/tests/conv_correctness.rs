@@ -1,0 +1,186 @@
+//! Cross-algorithm correctness on the paper's workload geometries
+//! (channel-scaled so the suite runs in seconds): every algorithm must
+//! agree with direct convolution, and measured workspace must equal the
+//! analytic Eq. (2)/(3) formulas.
+
+use mec::bench::workload::suite;
+use mec::conv::{AlgoKind, ConvContext};
+use mec::memory::{measure_peak, Workspace};
+use mec::tensor::{Kernel, Tensor};
+use mec::util::{assert_allclose, Rng};
+
+/// Channel scale for tests: cv layers shrink ~8x in channels.
+const SCALE: usize = 8;
+
+#[test]
+fn all_algorithms_match_direct_on_cv_suite() {
+    let mut rng = Rng::new(0xC0);
+    for w in suite() {
+        let shape = w.shape(1, SCALE);
+        // Crop the 224/227-pixel layers to keep direct-conv oracle time
+        // reasonable; kernel/stride geometry (what the algorithms care
+        // about) is preserved.
+        let shape = if shape.input.h > 64 {
+            let cropped = mec::tensor::Nhwc::new(1, 64, 64, shape.input.c);
+            if 64 < shape.kernel.kh {
+                continue;
+            }
+            mec::tensor::ConvShape::new(cropped, shape.kernel, shape.sh, shape.sw)
+        } else {
+            shape
+        };
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let ctx = ConvContext::default();
+        let mut want = Tensor::zeros(shape.output());
+        let mut ws = Workspace::new();
+        AlgoKind::Direct
+            .build()
+            .run(&ctx, &shape, &input, &kernel, &mut ws, &mut want);
+        for kind in [
+            AlgoKind::Im2col,
+            AlgoKind::Mec,
+            AlgoKind::MecSolutionA,
+            AlgoKind::MecSolutionB,
+            AlgoKind::Winograd,
+            AlgoKind::Fft,
+        ] {
+            let algo = kind.build();
+            if !algo.supports(&shape) {
+                continue;
+            }
+            let mut got = Tensor::zeros(shape.output());
+            algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut got);
+            let tol = if kind == AlgoKind::Fft || kind == AlgoKind::Winograd {
+                2e-3
+            } else {
+                1e-4
+            };
+            assert_allclose(
+                got.data(),
+                want.data(),
+                tol,
+                &format!("{} on {} ({})", algo.name(), w.name, shape.describe()),
+            );
+        }
+    }
+}
+
+#[test]
+fn measured_workspace_equals_analytic_for_lowering_algorithms() {
+    let mut rng = Rng::new(0xC1);
+    for w in suite() {
+        let shape = w.shape(1, SCALE);
+        if shape.input.h > 64 {
+            continue; // formulas covered by unit tests; avoid big allocs
+        }
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let ctx = ConvContext::default();
+        for kind in [AlgoKind::Im2col, AlgoKind::Mec, AlgoKind::Winograd] {
+            let algo = kind.build();
+            if !algo.supports(&shape) {
+                continue;
+            }
+            let mut out = Tensor::zeros(shape.output());
+            let ((), peak) = measure_peak(|| {
+                let mut ws = Workspace::new();
+                algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
+            });
+            assert_eq!(
+                peak,
+                algo.workspace_bytes(&shape),
+                "{} on {}: measured {} != analytic {}",
+                algo.name(),
+                w.name,
+                peak,
+                algo.workspace_bytes(&shape)
+            );
+        }
+    }
+}
+
+#[test]
+fn mec_memory_win_matches_eq4_sign_across_suite() {
+    // Every cv layer has k_h > s_h, so MEC must win memory on all of them
+    // (paper Fig. 4b: always-less-than-Conv).
+    for w in suite() {
+        let shape = w.shape(1, 1);
+        assert!(
+            shape.mec_wins_memory(),
+            "{}: k={} s={} should overlap",
+            w.name,
+            w.kh,
+            w.s
+        );
+        assert!(shape.mec_lowered_elems() < shape.im2col_lowered_elems());
+    }
+}
+
+#[test]
+fn batch_dimension_consistency() {
+    // Batched runs must equal per-sample runs stacked (both solutions).
+    let binding = suite();
+    let w = &binding[5]; // cv6
+    let shape_b = w.shape(3, SCALE);
+    let mut rng = Rng::new(0xC2);
+    let input = Tensor::random(shape_b.input, &mut rng);
+    let kernel = Kernel::random(shape_b.kernel, &mut rng);
+    let ctx = ConvContext::default();
+    let mut ws = Workspace::new();
+
+    for kind in [AlgoKind::MecSolutionA, AlgoKind::MecSolutionB, AlgoKind::Im2col] {
+        let algo = kind.build();
+        let mut batched = Tensor::zeros(shape_b.output());
+        algo.run(&ctx, &shape_b, &input, &kernel, &mut ws, &mut batched);
+        // Per-sample.
+        let shape_1 = w.shape(1, SCALE);
+        for n in 0..3 {
+            let single = Tensor::from_vec(shape_1.input, input.sample(n).to_vec());
+            let mut out1 = Tensor::zeros(shape_1.output());
+            algo.run(&ctx, &shape_1, &single, &kernel, &mut ws, &mut out1);
+            assert_allclose(
+                batched.sample(n),
+                out1.data(),
+                1e-5,
+                &format!("{} sample {n}", algo.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn threads_do_not_change_results() {
+    let binding = suite();
+    let w = &binding[4]; // cv5
+    let shape = w.shape(2, SCALE);
+    let mut rng = Rng::new(0xC3);
+    let input = Tensor::random(shape.input, &mut rng);
+    let kernel = Kernel::random(shape.kernel, &mut rng);
+    let mut ws = Workspace::new();
+    for kind in [AlgoKind::Mec, AlgoKind::Im2col, AlgoKind::Winograd] {
+        let algo = kind.build();
+        if !algo.supports(&shape) {
+            continue;
+        }
+        let mut o1 = Tensor::zeros(shape.output());
+        let mut o4 = Tensor::zeros(shape.output());
+        algo.run(
+            &ConvContext::default(),
+            &shape,
+            &input,
+            &kernel,
+            &mut ws,
+            &mut o1,
+        );
+        algo.run(
+            &ConvContext::default().with_threads(4),
+            &shape,
+            &input,
+            &kernel,
+            &mut ws,
+            &mut o4,
+        );
+        assert_eq!(o1.data(), o4.data(), "{} thread-count variance", algo.name());
+    }
+}

@@ -1,0 +1,193 @@
+//! Coordinator under concurrent load: correctness of responses, metric
+//! invariants, backpressure, and property tests on the batcher.
+
+use mec::conv::AlgoKind;
+use mec::coordinator::{BatchPolicy, QueueError, RequestQueue, Server, ServerConfig};
+use mec::model::{Layer, Model};
+use mec::tensor::{Kernel, KernelShape};
+use mec::util::prop::{check, Config};
+use mec::util::Rng;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn tiny_model() -> Model {
+    let mut rng = Rng::new(0xBEEF);
+    let mut m = Model::new(
+        "itest",
+        (8, 8, 1),
+        vec![
+            Layer::Conv {
+                kernel: Kernel::random(KernelShape::new(3, 3, 1, 4), &mut rng),
+                bias: vec![0.05; 4],
+                sh: 1,
+                sw: 1,
+                ph: 1,
+                pw: 1,
+            },
+            Layer::Relu,
+            Layer::MaxPool { k: 2, s: 2 },
+            Layer::Flatten,
+            Layer::Dense {
+                w: {
+                    let mut w = vec![0.0; 64 * 3];
+                    rng.fill_uniform(&mut w, -0.4, 0.4);
+                    w
+                },
+                bias: vec![0.0; 3],
+                d_in: 64,
+                d_out: 3,
+            },
+            Layer::Softmax,
+        ],
+    );
+    m.pin_algo(AlgoKind::Mec);
+    m
+}
+
+#[test]
+fn concurrent_clients_all_served_consistently() {
+    let model = Arc::new(tiny_model());
+    let server = Server::start(
+        Arc::clone(&model),
+        ServerConfig {
+            workers: 2,
+            queue_capacity: 512,
+            policy: BatchPolicy::new(8, Duration::from_millis(5)),
+            ..ServerConfig::default()
+        },
+    );
+    let client = server.client();
+    let n_threads = 4;
+    let per_thread = 25;
+    let handles: Vec<_> = (0..n_threads)
+        .map(|t| {
+            let client = client.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(t as u64);
+                let mut ok = 0;
+                for _ in 0..per_thread {
+                    let mut s = vec![0.0f32; 64];
+                    rng.fill_uniform(&mut s, 0.0, 1.0);
+                    match client.infer(s.clone()) {
+                        Ok(resp) => {
+                            // Scores are a probability row.
+                            let sum: f32 = resp.scores.iter().sum();
+                            assert!((sum - 1.0).abs() < 1e-4);
+                            ok += 1;
+                        }
+                        Err(QueueError::Full(_)) => {}
+                        Err(e) => panic!("unexpected {e}"),
+                    }
+                }
+                ok
+            })
+        })
+        .collect();
+    let total_ok: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let metrics = server.shutdown();
+    assert_eq!(
+        metrics.responses.load(Ordering::Relaxed) as usize,
+        total_ok
+    );
+    assert!(total_ok > 0);
+    // Conservation: requests = responses + rejected.
+    assert_eq!(
+        metrics.requests.load(Ordering::Relaxed),
+        metrics.responses.load(Ordering::Relaxed) + metrics.rejected.load(Ordering::Relaxed)
+    );
+}
+
+#[test]
+fn backpressure_rejects_when_queue_small() {
+    let model = Arc::new(tiny_model());
+    let server = Server::start(
+        model,
+        ServerConfig {
+            workers: 1,
+            queue_capacity: 2,
+            // Slow consumption: big batches with long delay.
+            policy: BatchPolicy::new(32, Duration::from_millis(30)),
+            ..ServerConfig::default()
+        },
+    );
+    let client = server.client();
+    let mut rejected = 0;
+    let mut rxs = Vec::new();
+    for _ in 0..64 {
+        match client.submit(vec![0.2; 64]) {
+            Ok(rx) => rxs.push(rx),
+            Err(QueueError::Full(_)) => rejected += 1,
+            Err(e) => panic!("{e}"),
+        }
+    }
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let metrics = server.shutdown();
+    assert!(rejected > 0, "tiny queue should shed load");
+    assert_eq!(metrics.rejected.load(Ordering::Relaxed) as usize, rejected);
+}
+
+#[test]
+fn prop_batcher_never_exceeds_max_batch_and_preserves_fifo() {
+    let cfg = Config { cases: 16, ..Config::default() };
+    check(
+        &cfg,
+        |r: &mut Rng| (r.range(1, 9), r.range(1, 40)),
+        |&(max_batch, n_reqs)| {
+            let q = RequestQueue::new(64);
+            let (tx, _rx) = std::sync::mpsc::channel();
+            for i in 0..n_reqs as u64 {
+                q.push(mec::coordinator::Request {
+                    id: i,
+                    sample: vec![],
+                    enqueued_at: Instant::now(),
+                    reply: tx.clone(),
+                })
+                .map_err(|e| e.to_string())?;
+            }
+            q.close();
+            let b = mec::coordinator::Batcher::new(
+                &q,
+                BatchPolicy::new(max_batch, Duration::ZERO),
+            );
+            let mut seen: Vec<u64> = Vec::new();
+            while let Some(batch) = b.next_batch() {
+                if batch.len() > max_batch {
+                    return Err(format!("batch {} > max {}", batch.len(), max_batch));
+                }
+                seen.extend(batch.iter().map(|r| r.id));
+            }
+            let want: Vec<u64> = (0..n_reqs as u64).collect();
+            if seen != want {
+                return Err(format!("order violated: {seen:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn metrics_percentiles_are_monotone_under_load() {
+    let model = Arc::new(tiny_model());
+    let server = Server::start(model, ServerConfig::default());
+    let client = server.client();
+    let mut rxs = Vec::new();
+    for _ in 0..40 {
+        if let Ok(rx) = client.submit(vec![0.3; 64]) {
+            rxs.push(rx);
+        }
+    }
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let m = server.shutdown();
+    let p50 = m.latency_percentile(50.0);
+    let p95 = m.latency_percentile(95.0);
+    let p99 = m.latency_percentile(99.0);
+    assert!(p50 > 0.0);
+    assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+    assert!(m.throughput_rps() > 0.0);
+    assert!(m.mean_batch_size() >= 1.0);
+}

@@ -1,0 +1,132 @@
+//! End-to-end over the build artifacts: load the JAX-trained `.mecw`
+//! model, run the held-out eval set through the native engine, and check
+//! the accuracy the python trainer reported. Skips (with a message) when
+//! `make artifacts` has not run.
+
+use mec::conv::{AlgoKind, ConvContext};
+use mec::memory::{Budget, Workspace};
+use mec::model::{load_mecw, EvalSet};
+use mec::planner::Planner;
+use mec::tensor::{Nhwc, Tensor};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = mec::runtime::artifacts::default_dir();
+    if dir.join("model.mecw").exists() && dir.join("eval.bin").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts missing — run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn trained_model_loads_and_validates() {
+    let Some(dir) = artifacts_dir() else { return };
+    let model = load_mecw(dir.join("model.mecw")).expect("load model.mecw");
+    assert_eq!(model.input_hwc, (28, 28, 1));
+    let out = model.validate();
+    assert_eq!(out.c, 3);
+    assert!(model.param_count() > 1000);
+}
+
+#[test]
+fn eval_accuracy_matches_training_report() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut model = load_mecw(dir.join("model.mecw")).unwrap();
+    let eval = EvalSet::load(dir.join("eval.bin")).unwrap();
+    assert!(eval.len() >= 100);
+    model.plan(
+        &Planner::new(),
+        &Budget::unlimited(),
+        &ConvContext::default(),
+        32,
+    );
+    let ctx = ConvContext::default();
+    let mut ws = Workspace::new();
+    let mut correct = 0;
+    for chunk in eval
+        .samples
+        .chunks(32)
+        .zip(eval.labels.chunks(32))
+        .map(|(s, l)| (s, l))
+    {
+        let (samples, labels) = chunk;
+        let n = samples.len();
+        let mut data = Vec::with_capacity(n * eval.h * eval.w * eval.c);
+        for s in samples {
+            data.extend_from_slice(s);
+        }
+        let batch = Tensor::from_vec(Nhwc::new(n, eval.h, eval.w, eval.c), data);
+        let preds = model.predict(&ctx, &batch, &mut ws);
+        correct += preds
+            .iter()
+            .zip(labels)
+            .filter(|(p, l)| *p == *l)
+            .count();
+    }
+    let acc = correct as f64 / eval.len() as f64;
+    // Python reported ~0.97; the engine must reproduce it (same weights,
+    // same math). Loose lower bound guards against layout bugs.
+    assert!(acc > 0.9, "eval accuracy {acc} too low — layout/format bug?");
+}
+
+#[test]
+fn all_conv_algorithms_give_same_predictions() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut model = load_mecw(dir.join("model.mecw")).unwrap();
+    let eval = EvalSet::load(dir.join("eval.bin")).unwrap();
+    let n = 16.min(eval.len());
+    let mut data = Vec::new();
+    for s in &eval.samples[..n] {
+        data.extend_from_slice(s);
+    }
+    let batch = Tensor::from_vec(Nhwc::new(n, eval.h, eval.w, eval.c), data);
+    let ctx = ConvContext::default();
+    let mut ws = Workspace::new();
+    let mut all: Vec<Vec<usize>> = Vec::new();
+    for algo in [
+        AlgoKind::Direct,
+        AlgoKind::Im2col,
+        AlgoKind::Mec,
+        AlgoKind::MecSolutionA,
+        AlgoKind::MecSolutionB,
+        AlgoKind::Winograd,
+    ] {
+        model.pin_algo(algo);
+        all.push(model.predict(&ctx, &batch, &mut ws));
+    }
+    for (i, preds) in all.iter().enumerate().skip(1) {
+        assert_eq!(preds, &all[0], "algorithm #{i} disagrees on predictions");
+    }
+}
+
+#[test]
+fn serving_under_memory_budget_still_accurate() {
+    // Plan with a budget that excludes im2col on the big conv layer —
+    // the paper's mobile deployment — and confirm accuracy is unchanged.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut model = load_mecw(dir.join("model.mecw")).unwrap();
+    let eval = EvalSet::load(dir.join("eval.bin")).unwrap();
+    model.plan(
+        &Planner::new(),
+        &Budget::new(512 << 10), // 512 KB workspace cap
+        &ConvContext::default(),
+        8,
+    );
+    let ctx = ConvContext::default();
+    let mut ws = Workspace::new();
+    let n = 64.min(eval.len());
+    let mut data = Vec::new();
+    for s in &eval.samples[..n] {
+        data.extend_from_slice(s);
+    }
+    let batch = Tensor::from_vec(Nhwc::new(n, eval.h, eval.w, eval.c), data);
+    let preds = model.predict(&ctx, &batch, &mut ws);
+    let acc = preds
+        .iter()
+        .zip(&eval.labels[..n])
+        .filter(|(p, l)| *p == *l)
+        .count() as f64
+        / n as f64;
+    assert!(acc > 0.85, "budgeted accuracy {acc}");
+}

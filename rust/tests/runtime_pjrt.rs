@@ -1,0 +1,155 @@
+//! PJRT path: load the AOT HLO artifacts (JAX/Pallas lowered at build
+//! time) and cross-check their numerics against the native rust engine.
+//! This closes the three-layer loop: Pallas kernel ≡ rust engine ≡ the
+//! HLO the server executes. Skips when artifacts are missing.
+
+use mec::conv::{AlgoKind, ConvContext};
+use mec::memory::{Budget, Workspace};
+use mec::model::{load_mecw, EvalSet};
+use mec::planner::Planner;
+use mec::runtime::{model_weight_inputs, Executor, Manifest, NativeExecutor, PjrtEngine, PjrtExecutor};
+use mec::tensor::{ConvShape, Kernel, KernelShape, Nhwc, Tensor};
+use mec::util::{assert_allclose, Rng};
+
+fn manifest() -> Option<Manifest> {
+    let dir = mec::runtime::artifacts::default_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("SKIP: no artifacts manifest — run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn conv_artifacts_match_native_engine() {
+    let Some(manifest) = manifest() else { return };
+    let engine = PjrtEngine::cpu().expect("pjrt client");
+    let mut checked = 0;
+    for art in &manifest.artifacts {
+        if !art.name.starts_with("conv_") {
+            continue;
+        }
+        let comp = engine.load_hlo_text(&art.file).expect("compile artifact");
+        let xs = &art.input_shapes[0];
+        let ks = &art.input_shapes[1];
+        let mut rng = Rng::new(42 + checked as u64);
+        let mut x = vec![0.0f32; xs.iter().product()];
+        let mut k = vec![0.0f32; ks.iter().product()];
+        rng.fill_uniform(&mut x, -1.0, 1.0);
+        rng.fill_uniform(&mut k, -1.0, 1.0);
+
+        // PJRT result (the Pallas-lowered HLO).
+        let got = comp
+            .run_f32(&[(&x, xs), (&k, ks)])
+            .expect("execute artifact");
+
+        // Native engine result. Conv artifacts have stride in their
+        // geometry: recover it from shapes via Eq. (1).
+        let input_shape = Nhwc::new(xs[0], xs[1], xs[2], xs[3]);
+        let kern_shape = KernelShape::new(ks[0], ks[1], ks[2], ks[3]);
+        let os = &art.output_shapes[0];
+        // s = (i - k) / (o - 1) when o > 1.
+        let sh = if os[1] > 1 { (xs[1] - ks[0]) / (os[1] - 1) } else { 1 };
+        let sw = if os[2] > 1 { (xs[2] - ks[1]) / (os[2] - 1) } else { 1 };
+        let shape = ConvShape::new(input_shape, kern_shape, sh, sw);
+        let input = Tensor::from_vec(shape.input, x);
+        let kernel = Kernel::from_vec(shape.kernel, k);
+        let mut want = Tensor::zeros(shape.output());
+        let mut ws = Workspace::new();
+        AlgoKind::Mec.build().run(
+            &ConvContext::default(),
+            &shape,
+            &input,
+            &kernel,
+            &mut ws,
+            &mut want,
+        );
+        assert_eq!(got.len(), want.len(), "{}: output size", art.name);
+        assert_allclose(&got, want.data(), 1e-4, &format!("pjrt {}", art.name));
+        checked += 1;
+    }
+    assert!(checked >= 3, "expected ≥3 conv artifacts, found {checked}");
+}
+
+#[test]
+fn model_fwd_artifact_matches_native_model_and_labels() {
+    let Some(manifest) = manifest() else { return };
+    let dir = mec::runtime::artifacts::default_dir();
+    let engine = PjrtEngine::cpu().expect("pjrt client");
+    let mut model = load_mecw(dir.join("model.mecw")).unwrap();
+    let mut pjrt = PjrtExecutor::from_artifact(&engine, &manifest, "model_fwd")
+        .expect("model_fwd")
+        .with_weights(model_weight_inputs(&model))
+        .expect("weights");
+    model.plan(
+        &Planner::new(),
+        &Budget::unlimited(),
+        &ConvContext::default(),
+        pjrt.lowered_batch(),
+    );
+    let mut native = NativeExecutor::new(std::sync::Arc::new(model), ConvContext::default());
+
+    let eval = EvalSet::load(dir.join("eval.bin")).unwrap();
+    let b = pjrt.lowered_batch();
+    let mut data = Vec::new();
+    for s in &eval.samples[..b] {
+        data.extend_from_slice(s);
+    }
+    let batch = Tensor::from_vec(Nhwc::new(b, eval.h, eval.w, eval.c), data);
+
+    let scores_pjrt = pjrt.forward(&batch).expect("pjrt forward");
+    let scores_native = native.forward(&batch).expect("native forward");
+    assert_eq!(scores_pjrt.len(), b * 3);
+    // Same weights, same math — two completely independent stacks
+    // (JAX/Pallas HLO via PJRT vs rust engine) must agree closely.
+    assert_allclose(&scores_pjrt, &scores_native, 1e-3, "pjrt vs native model");
+
+    // And both should classify the eval samples correctly (trained net).
+    let correct = scores_pjrt
+        .chunks_exact(3)
+        .zip(&eval.labels[..b])
+        .filter(|(row, &l)| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                == Some(l)
+        })
+        .count();
+    assert!(correct * 10 >= b * 8, "pjrt accuracy {correct}/{b}");
+}
+
+#[test]
+fn partial_batch_is_padded_and_truncated() {
+    let Some(manifest) = manifest() else { return };
+    let dir = mec::runtime::artifacts::default_dir();
+    let engine = PjrtEngine::cpu().expect("pjrt client");
+    let model = load_mecw(dir.join("model.mecw")).unwrap();
+    let mut pjrt = PjrtExecutor::from_artifact(&engine, &manifest, "model_fwd")
+        .expect("model_fwd")
+        .with_weights(model_weight_inputs(&model))
+        .expect("weights");
+    let b = pjrt.lowered_batch();
+    assert!(b >= 2);
+    let (h, w, c) = pjrt.input_hwc();
+    let mut rng = Rng::new(9);
+    let mut full = vec![0.0f32; b * h * w * c];
+    rng.fill_uniform(&mut full, 0.0, 1.0);
+    let full_t = Tensor::from_vec(Nhwc::new(b, h, w, c), full.clone());
+    let full_scores = pjrt.forward(&full_t).unwrap();
+    // Run just the first 3 samples as a partial batch.
+    let part_t = Tensor::from_vec(
+        Nhwc::new(3, h, w, c),
+        full[..3 * h * w * c].to_vec(),
+    );
+    let part_scores = pjrt.forward(&part_t).unwrap();
+    assert_eq!(part_scores.len(), 3 * pjrt.output_features());
+    assert_allclose(
+        &part_scores,
+        &full_scores[..3 * pjrt.output_features()],
+        1e-5,
+        "partial batch",
+    );
+}
