@@ -8,7 +8,7 @@
 //! ```
 
 use mec::bench::workload::by_name;
-use mec::conv::ConvContext;
+use mec::conv::{ConvContext, Convolution};
 use mec::memory::Budget;
 use mec::planner::Planner;
 use mec::util::stats::fmt_bytes;

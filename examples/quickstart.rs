@@ -10,7 +10,7 @@
 //! ```
 
 use mec::bench::workload::by_name;
-use mec::conv::{AlgoKind, ConvContext};
+use mec::conv::{AlgoKind, ConvContext, Convolution};
 use mec::memory::{measure_peak, Workspace};
 use mec::tensor::{Kernel, Tensor};
 use mec::util::stats::{fmt_bytes, fmt_ns};

@@ -11,7 +11,7 @@
 //! ```
 
 use mec::bench::workload::resnet101_table3;
-use mec::conv::{AlgoKind, ConvContext};
+use mec::conv::{AlgoKind, ConvContext, Convolution};
 use mec::memory::Workspace;
 use mec::tensor::{Kernel, Tensor};
 use mec::util::Rng;

@@ -4,11 +4,11 @@
 //! k_c gemms; this sweeps MC/KC/NC on cv6 and cv4 geometry to justify
 //! the defaults (DESIGN.md §9).
 
-use mec::bench::harness::{bench_fn, bench_scale, print_table, BenchOpts};
+use mec::bench::bench_conv;
+use mec::bench::harness::{bench_scale, print_table, BenchOpts};
 use mec::bench::workload::by_name;
 use mec::conv::{AlgoKind, ConvContext};
 use mec::gemm::BlockSizes;
-use mec::memory::Workspace;
 use mec::tensor::{Kernel, Tensor};
 use mec::util::Rng;
 
@@ -36,10 +36,8 @@ fn main() {
             let mut ctx = ConvContext::mobile();
             ctx.blocks = *bs;
             let algo = AlgoKind::Mec.build();
-            let mut ws = Workspace::new();
-            let r = bench_fn(&format!("{name}-bs{i}"), &opts, || {
-                algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
-            });
+            let bname = format!("{name}-bs{i}");
+            let r = bench_conv(&bname, &opts, &*algo, &ctx, &shape, &input, &kernel, &mut out);
             if r.median_ns() < best.0 {
                 best = (r.median_ns(), i);
             }

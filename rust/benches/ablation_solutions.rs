@@ -3,11 +3,11 @@
 //! choice §3.3 of the paper discusses (format handling + gemm-size
 //! trade-off).
 
-use mec::bench::harness::{bench_fn, bench_scale, print_table, BenchOpts};
+use mec::bench::bench_conv;
+use mec::bench::harness::{bench_mode, bench_scale, print_table, BenchOpts};
 use mec::bench::workload::suite;
 use mec::conv::mec::{Mec, Solution};
-use mec::conv::{AlgoKind, ConvContext};
-use mec::memory::Workspace;
+use mec::conv::{AlgoKind, ConvContext, Convolution};
 use mec::tensor::{Kernel, Tensor};
 use mec::util::Rng;
 
@@ -16,6 +16,7 @@ fn main() {
     let ctx = ConvContext::mobile();
     let opts = BenchOpts::default();
     let mut rng = Rng::new(7);
+    println!("timing mode: {}", bench_mode().label());
     for batch in [1usize, 8] {
         let mut rows = Vec::new();
         for w in suite() {
@@ -26,10 +27,9 @@ fn main() {
             let mut cells = vec![w.name.to_string()];
             for kind in [AlgoKind::MecSolutionA, AlgoKind::MecSolutionB, AlgoKind::Mec] {
                 let algo = kind.build();
-                let mut ws = Workspace::new();
-                let r = bench_fn(&format!("b{batch}-{}-{}", w.name, algo.name()), &opts, || {
-                    algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
-                });
+                let name = format!("b{batch}-{}-{}", w.name, algo.name());
+                let r =
+                    bench_conv(&name, &opts, &*algo, &ctx, &shape, &input, &kernel, &mut out);
                 cells.push(format!("{:.1}", r.median_ms()));
             }
             let resolved = Mec::auto().resolve(&ctx, &shape);

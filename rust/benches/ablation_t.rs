@@ -4,11 +4,11 @@
 //! dispatcher at several T values on layers whose o_w straddles the
 //! threshold, re-deriving the right T for this host.
 
-use mec::bench::harness::{bench_fn, bench_scale, print_table, BenchOpts};
+use mec::bench::bench_conv;
+use mec::bench::harness::{bench_scale, print_table, BenchOpts};
 use mec::bench::workload::suite;
 use mec::conv::mec::{Mec, Solution};
 use mec::conv::{AlgoKind, ConvContext};
-use mec::memory::Workspace;
 use mec::tensor::{Kernel, Tensor};
 use mec::util::Rng;
 
@@ -29,10 +29,8 @@ fn main() {
         for &t in &t_values {
             let ctx = ConvContext::mobile().with_mec_t(t);
             let algo = AlgoKind::Mec.build();
-            let mut ws = Workspace::new();
-            let r = bench_fn(&format!("{name}-T{t}"), &opts, || {
-                algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
-            });
+            let bname = format!("{name}-T{t}");
+            let r = bench_conv(&bname, &opts, &*algo, &ctx, &shape, &input, &kernel, &mut out);
             let sol = match Mec::auto().resolve(&ctx, &shape) {
                 Solution::A => "A",
                 Solution::B => "B",

@@ -5,10 +5,10 @@
 //! Paper's claim: both factors grow with the k/s ratio, per Eq. (4).
 //! Run: `cargo bench --bench fig4a` (env: MEC_BENCH_FAST, MEC_BENCH_SCALE)
 
-use mec::bench::harness::{bench_fn, bench_scale, print_table, BenchOpts};
+use mec::bench::harness::{bench_mode, bench_scale, print_table, BenchOpts};
 use mec::bench::workload::by_name;
-use mec::conv::{AlgoKind, ConvContext};
-use mec::memory::Workspace;
+use mec::bench::bench_conv;
+use mec::conv::{AlgoKind, ConvContext, Convolution};
 use mec::tensor::{ConvShape, Kernel, KernelShape, Nhwc, Tensor};
 use mec::util::Rng;
 
@@ -23,6 +23,7 @@ fn main() {
         "Figure 4(a) reproduction: cv1, k=11x11 fixed, stride 1..10, {} threads, scale={scale}",
         ctx.threads
     );
+    println!("timing mode: {}", bench_mode().label());
     for s in 1..=10usize {
         let ic = (base.ic / scale).max(1);
         let kc = (base.kc / scale).max(1);
@@ -42,10 +43,8 @@ fn main() {
         let mut times = Vec::new();
         for kind in [AlgoKind::Im2col, AlgoKind::Mec] {
             let algo = kind.build();
-            let mut ws = Workspace::new();
-            let r = bench_fn(&format!("s{s}-{}", algo.name()), &opts, || {
-                algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
-            });
+            let name = format!("s{s}-{}", algo.name());
+            let r = bench_conv(&name, &opts, &*algo, &ctx, &shape, &input, &kernel, &mut out);
             times.push(r.median_ns());
         }
         rows.push(vec![

@@ -10,7 +10,7 @@
 
 use mec::bench::harness::print_table;
 use mec::bench::workload::suite;
-use mec::conv::{AlgoKind, ConvContext};
+use mec::conv::{AlgoKind, ConvContext, Convolution};
 use mec::memory::{measure_peak, Workspace};
 use mec::tensor::{Kernel, Tensor};
 use mec::util::Rng;

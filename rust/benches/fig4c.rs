@@ -6,10 +6,10 @@
 //! `MEC_BENCH_SCALE` shrinks channels for quick runs (default: paper
 //! scale — the big early layers take a few hundred ms each on 1 thread).
 
-use mec::bench::harness::{bench_fn, bench_scale, print_table, BenchOpts};
+use mec::bench::bench_conv;
+use mec::bench::harness::{bench_mode, bench_scale, print_table, BenchOpts};
 use mec::bench::workload::suite;
-use mec::conv::{AlgoKind, ConvContext};
-use mec::memory::Workspace;
+use mec::conv::{AlgoKind, ConvContext, Convolution};
 use mec::tensor::{Kernel, Tensor};
 use mec::util::Rng;
 
@@ -21,6 +21,7 @@ fn main() {
     let mut rows = Vec::new();
     let mut sums = [0.0f64; 3];
     println!("Figure 4(c) reproduction: Mobile (1 thread, batch 1), scale={scale}");
+    println!("timing mode: {}", bench_mode().label());
     for w in suite() {
         let shape = w.shape(1, scale);
         let input = Tensor::random(shape.input, &mut rng);
@@ -37,10 +38,8 @@ fn main() {
                 cells.push("-".into());
                 continue;
             }
-            let mut ws = Workspace::new();
-            let r = bench_fn(&format!("{}-{}", w.name, algo.name()), &opts, || {
-                algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
-            });
+            let name = format!("{}-{}", w.name, algo.name());
+            let r = bench_conv(&name, &opts, &*algo, &ctx, &shape, &input, &kernel, &mut out);
             layer_ms[i] = r.median_ms();
             sums[i] += r.median_ms();
             cells.push(format!("{:.1}", r.median_ms()));

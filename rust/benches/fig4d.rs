@@ -7,10 +7,10 @@
 //! to 8 (32 × cv4's im2col workspace is 4.8 GB and dominates wall time
 //! on 1 core); set MEC_BENCH_BATCH=32 for the paper's batch.
 
-use mec::bench::harness::{bench_fn, bench_scale, print_table, BenchOpts};
+use mec::bench::bench_conv;
+use mec::bench::harness::{bench_mode, bench_scale, print_table, BenchOpts};
 use mec::bench::workload::suite;
-use mec::conv::{AlgoKind, ConvContext};
-use mec::memory::Workspace;
+use mec::conv::{AlgoKind, ConvContext, Convolution};
 use mec::tensor::{Kernel, Tensor};
 use mec::util::Rng;
 
@@ -29,6 +29,7 @@ fn main() {
         "Figure 4(d) reproduction: Server-CPU ({} threads), batch={batch}, scale={scale}",
         ctx.threads
     );
+    println!("timing mode: {}", bench_mode().label());
     for w in suite() {
         let shape = w.shape(batch, scale);
         let input = Tensor::random(shape.input, &mut rng);
@@ -45,10 +46,8 @@ fn main() {
                 cells.push("-".into());
                 continue;
             }
-            let mut ws = Workspace::new();
-            let r = bench_fn(&format!("{}-{}", w.name, algo.name()), &opts, || {
-                algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
-            });
+            let name = format!("{}-{}", w.name, algo.name());
+            let r = bench_conv(&name, &opts, &*algo, &ctx, &shape, &input, &kernel, &mut out);
             layer_ms[i] = r.median_ms();
             sums[i] += r.median_ms();
             cells.push(format!("{:.1}", r.median_ms()));

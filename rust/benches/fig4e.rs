@@ -11,7 +11,7 @@
 
 use mec::bench::harness::print_table;
 use mec::bench::workload::suite;
-use mec::conv::AlgoKind;
+use mec::conv::{AlgoKind, Convolution};
 
 fn main() {
     let batch = 32; // paper's server mini-batch

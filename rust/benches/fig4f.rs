@@ -15,12 +15,12 @@
 //! spectra fit the cache cap (cv5/cv6/cv11/cv12-class); FFT's *memory*
 //! story is Fig 4e.
 
-use mec::bench::harness::{bench_fn, bench_scale, print_table, BenchOpts};
+use mec::bench::bench_conv;
+use mec::bench::harness::{bench_fn, bench_mode, bench_scale, print_table, BenchOpts};
 use mec::bench::workload::suite;
 use mec::conv::im2col::Im2col;
 use mec::conv::mec::Mec;
-use mec::conv::{AlgoKind, ConvContext};
-use mec::memory::Workspace;
+use mec::conv::{AlgoKind, ConvContext, Convolution};
 use mec::tensor::{Kernel, Tensor};
 use mec::util::Rng;
 
@@ -36,6 +36,7 @@ fn main() {
     println!(
         "Figure 4(f) reproduction: Server-GPU(sim) = batched-gemm engine, batch={batch}, scale={scale}"
     );
+    println!("timing mode: {}", bench_mode().label());
 
     // Part 1: lowering-only — bytes written + time (the 85% claim).
     let mut rows = Vec::new();
@@ -78,15 +79,13 @@ fn main() {
         for kind in [AlgoKind::Im2col, AlgoKind::Winograd, AlgoKind::Fft, AlgoKind::MecSolutionB] {
             let algo = kind.build();
             let skip_fft = kind == AlgoKind::Fft
-                && algo.workspace_bytes(&shape) > ctx.fft_cache_cap_bytes;
+                && Convolution::workspace_bytes(&*algo, &shape) > ctx.fft_cache_cap_bytes;
             if !algo.supports(&shape) || skip_fft {
                 cells.push("-".into());
                 continue;
             }
-            let mut ws = Workspace::new();
-            let r = bench_fn(&format!("{}-{}", w.name, algo.name()), &opts, || {
-                algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
-            });
+            let name = format!("{}-{}", w.name, algo.name());
+            let r = bench_conv(&name, &opts, &*algo, &ctx, &shape, &input, &kernel, &mut out);
             cells.push(format!("{:.1}", r.median_ms()));
         }
         rows.push(cells);

@@ -6,10 +6,10 @@
 //! ratios 3.2× memory and 1.2× runtime. Memory is exact here; runtime
 //! ratio is the shape target (ARM7 vs this host).
 
-use mec::bench::harness::{bench_fn, bench_scale, print_table, BenchOpts};
+use mec::bench::bench_conv;
+use mec::bench::harness::{bench_mode, bench_scale, print_table, BenchOpts};
 use mec::bench::workload::resnet101_table3;
-use mec::conv::{AlgoKind, ConvContext};
-use mec::memory::Workspace;
+use mec::conv::{AlgoKind, ConvContext, Convolution};
 use mec::tensor::{Kernel, Tensor};
 use mec::util::Rng;
 
@@ -21,6 +21,7 @@ fn main() {
     let mut rows = Vec::new();
     let mut tot = [0.0f64; 4]; // conv_mb, conv_ms, mec_mb, mec_ms
     println!("Table 3 reproduction: ResNet-101 weighted conv layers, Mobile, scale={scale}");
+    println!("timing mode: {}", bench_mode().label());
     for (w, weight) in resnet101_table3() {
         let shape = w.shape(1, scale);
         let input = Tensor::random(shape.input, &mut rng);
@@ -29,10 +30,8 @@ fn main() {
         let mut vals = [0.0f64; 4];
         for (i, kind) in [AlgoKind::Im2col, AlgoKind::Mec].iter().enumerate() {
             let algo = kind.build();
-            let mut ws = Workspace::new();
-            let r = bench_fn(&format!("{}-{}", w.name, algo.name()), &opts, || {
-                algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
-            });
+            let name = format!("{}-{}", w.name, algo.name());
+            let r = bench_conv(&name, &opts, &*algo, &ctx, &shape, &input, &kernel, &mut out);
             vals[i * 2] = algo.workspace_bytes(&shape) as f64 / 1e6;
             vals[i * 2 + 1] = r.median_ms();
         }

@@ -1,10 +1,13 @@
 //! Timing harness (criterion replacement).
 //!
 //! Adaptive: measures once, picks a repetition count targeting
-//! `target_time`, reports median/MAD over the reps. Honors two env vars
+//! `target_time`, reports median/MAD over the reps. Honors three env vars
 //! so `cargo bench` stays usable on slow hosts:
 //! * `MEC_BENCH_SCALE`  — channel divisor for the paper workloads (default 1)
 //! * `MEC_BENCH_FAST`   — if set, caps reps at 3 and target time at 200 ms
+//! * `MEC_BENCH_MODE`   — `amortized` (default: plan built once, only
+//!   `execute` timed — steady-state serving cost) or `oneshot` (plan +
+//!   execute per call — cold-path cost, the pre-plan/execute behaviour)
 
 use crate::util::stats::{fmt_ns, Summary};
 use std::time::{Duration, Instant};
@@ -95,6 +98,45 @@ pub fn bench_scale() -> usize {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(1)
+}
+
+/// How convolution benches time the algorithms (`MEC_BENCH_MODE`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BenchMode {
+    /// Plan once at setup, time only `ConvPlan::execute` — the
+    /// steady-state serving cost the Fig. 4 numbers should reflect.
+    Amortized,
+    /// Plan + execute inside the timed region — the cold, one-shot cost.
+    Oneshot,
+}
+
+impl BenchMode {
+    pub fn label(self) -> &'static str {
+        match self {
+            BenchMode::Amortized => "plan-amortized (set MEC_BENCH_MODE=oneshot for cold)",
+            BenchMode::Oneshot => "oneshot (plan+execute per call)",
+        }
+    }
+}
+
+/// The env-var bench mode (`MEC_BENCH_MODE`, default amortized).
+/// Case-insensitive; warns on stderr for unrecognized values instead of
+/// silently falling back.
+pub fn bench_mode() -> BenchMode {
+    match std::env::var("MEC_BENCH_MODE") {
+        Ok(v) => match v.trim().to_ascii_lowercase().as_str() {
+            "oneshot" | "one-shot" | "cold" => BenchMode::Oneshot,
+            "" | "amortized" | "amortised" | "plan-amortized" | "warm" => BenchMode::Amortized,
+            other => {
+                eprintln!(
+                    "warning: unrecognized MEC_BENCH_MODE={other:?} (expected \
+                     'amortized' or 'oneshot'); using amortized"
+                );
+                BenchMode::Amortized
+            }
+        },
+        Err(_) => BenchMode::Amortized,
+    }
 }
 
 /// Print a report table header + rows, paper-figure style.

@@ -3,8 +3,8 @@
 //! oracle every other algorithm is tested against, and the "no overhead"
 //! end of the paper's memory/performance trade-off.
 
-use super::{ConvContext, Convolution};
-use crate::memory::Workspace;
+use super::{AlgoKind, ConvContext, ConvPlan, Convolution};
+use crate::memory::WorkspaceLayout;
 use crate::tensor::{ConvShape, Kernel, Tensor};
 use crate::threadpool::parallel_for;
 
@@ -23,30 +23,60 @@ impl Convolution for Direct {
         0 // the defining property (paper §3.1)
     }
 
-    fn run(
-        &self,
-        ctx: &ConvContext,
-        shape: &ConvShape,
-        input: &Tensor,
-        kernel: &Kernel,
-        _ws: &mut Workspace,
-        output: &mut Tensor,
-    ) {
-        let s = *shape;
+    fn plan(&self, ctx: &ConvContext, shape: &ConvShape, kernel: &Kernel) -> Box<dyn ConvPlan> {
+        assert_eq!(kernel.shape(), shape.kernel);
+        Box::new(DirectPlan {
+            ctx: ctx.clone(),
+            shape: *shape,
+            kernel: kernel.clone(),
+            layout: WorkspaceLayout::new(),
+        })
+    }
+}
+
+/// Plan for the direct loop nest: nothing to precompute beyond owning the
+/// kernel; the layout is empty (zero workspace).
+pub struct DirectPlan {
+    ctx: ConvContext,
+    shape: ConvShape,
+    kernel: Kernel,
+    layout: WorkspaceLayout,
+}
+
+impl ConvPlan for DirectPlan {
+    fn algo(&self) -> AlgoKind {
+        AlgoKind::Direct
+    }
+
+    fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+
+    fn layout(&self) -> &WorkspaceLayout {
+        &self.layout
+    }
+
+    fn resident_bytes(&self) -> usize {
+        // The plan owns a copy of the kernel (a deliberate trade: plans
+        // are self-contained; see ARCHITECTURE.md).
+        self.kernel.bytes()
+    }
+
+    fn execute_in(&self, input: &Tensor, _scratch: &mut [f32], output: &mut Tensor) {
+        let s = self.shape;
         let (oh, ow) = (s.oh(), s.ow());
         let out_shape = s.output();
         assert_eq!(output.shape(), out_shape);
         assert_eq!(input.shape(), s.input);
-        assert_eq!(kernel.shape(), s.kernel);
         let k = s.kernel;
         let ish = s.input;
 
         let in_data = input.data();
-        let k_data = kernel.data();
+        let k_data = self.kernel.data();
         let out = crate::threadpool::SharedSlice::new(output.data_mut());
 
         // Parallelize over (n, oh): each task writes a disjoint output row.
-        parallel_for(ctx.threads, ish.n * oh, |t| {
+        parallel_for(self.ctx.threads, ish.n * oh, |t| {
             let n = t / oh;
             let y = t % oh;
             let out_data: &mut [f32] = out.slice();
@@ -75,6 +105,7 @@ impl Convolution for Direct {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::memory::Workspace;
     use crate::tensor::{KernelShape, Nhwc};
 
     /// The worked example from paper Fig. 1(a): 7×7 input of a simple
@@ -176,7 +207,14 @@ mod tests {
     #[test]
     fn zero_workspace() {
         let shape = ConvShape::new(Nhwc::new(1, 7, 7, 1), KernelShape::new(3, 3, 1, 1), 1, 1);
-        assert_eq!(Direct.workspace_elems(&shape), 0);
+        assert_eq!(Convolution::workspace_elems(&Direct, &shape), 0);
         assert!(Direct.supports(&shape));
+        // The plan mirrors the algorithm: empty layout, zero scratch.
+        let kernel = Kernel::zeros(shape.kernel);
+        let plan = Direct.plan(&ConvContext::default(), &shape, &kernel);
+        assert_eq!(plan.workspace_elems(), 0);
+        assert_eq!(plan.algo(), AlgoKind::Direct);
+        assert_eq!(plan.shape(), &shape);
+        assert!(plan.layout().regions().is_empty());
     }
 }

@@ -14,16 +14,20 @@
 //! padded to the next power of two ≥ `i + k - 1` (no wrap-around), and
 //! read the valid window with stride.
 //!
-//! Caching: kernel spectra are input-independent. When they fit under
-//! `ctx.fft_cache_cap_bytes` we transform each kernel once per call
-//! (paper-faithful memory shape); above the cap we stream them per
-//! output channel to stay runnable on small hosts — the analytic
-//! `workspace_elems` still reports the paper-model (cached) footprint,
-//! and the memory benches label which mode actually ran.
+//! Plan/execute: kernel spectra are input-independent. When they fit
+//! under `ctx.fft_cache_cap_bytes`, the **plan** transforms every kernel
+//! once and holds the spectra (the cuFFT "plan + cached filter FFT"
+//! deployment shape) — execute transforms only the input and runs the
+//! pointwise/inverse stages. Above the cap, the plan fixes streaming
+//! mode: kernels are re-transformed per output channel to stay runnable
+//! on small hosts. The analytic `workspace_elems` still reports the
+//! paper-model (all spectra live) footprint — that is the Fig. 4e
+//! quantity — while the plan's own layout reflects what execute actually
+//! touches.
 
-use super::{ConvContext, Convolution};
+use super::{AlgoKind, ConvContext, ConvPlan, Convolution};
 use crate::fft::{fft2d, next_pow2, pointwise_mul_acc, C32};
-use crate::memory::Workspace;
+use crate::memory::WorkspaceLayout;
 use crate::tensor::{ConvShape, Kernel, Tensor};
 use crate::threadpool::{parallel_for_with_id, SharedSlice};
 
@@ -57,13 +61,6 @@ fn cached_workspace_elems(s: &ConvShape) -> usize {
     2 * sp * (ic * kc + n * ic + n * kc + 2)
 }
 
-/// Floats for the streaming footprint: input spectra `i_c` + per-thread
-/// (acc + kernel scratch) spectra.
-fn streaming_workspace_elems(s: &ConvShape, threads: usize) -> usize {
-    let sp = spectrum_len(s);
-    2 * sp * (s.kernel.ic + 2 * threads.max(1))
-}
-
 /// Would the cached mode fit under the cap?
 pub fn uses_cache(ctx: &ConvContext, s: &ConvShape) -> bool {
     cached_workspace_elems(s) * 4 <= ctx.fft_cache_cap_bytes
@@ -84,21 +81,99 @@ impl Convolution for FftConv {
         cached_workspace_elems(s)
     }
 
-    fn run(
-        &self,
-        ctx: &ConvContext,
-        shape: &ConvShape,
-        input: &Tensor,
-        kernel: &Kernel,
-        ws: &mut Workspace,
-        output: &mut Tensor,
-    ) {
-        let s = *shape;
-        assert_eq!(output.shape(), s.output());
-        if uses_cache(ctx, &s) {
-            run_cached(ctx, &s, input, kernel, ws, output);
+    fn plan(&self, ctx: &ConvContext, shape: &ConvShape, kernel: &Kernel) -> Box<dyn ConvPlan> {
+        assert_eq!(kernel.shape(), shape.kernel);
+        let sp = spectrum_len(shape);
+        let (ic, kc) = (shape.kernel.ic, shape.kernel.kc);
+        let threads = ctx.threads.max(1);
+        let mut layout = WorkspaceLayout::new();
+        layout.push("input-spectra", 2 * sp * ic);
+        let mode = if uses_cache(ctx, shape) {
+            // ---- plan-time: every kernel spectrum, once ----
+            let mut kspec = vec![0.0f32; 2 * sp * ic * kc];
+            {
+                let kshared = SharedSlice::new(&mut kspec);
+                parallel_for_with_id(threads, ic * kc, |_, t| {
+                    let kb = kshared.slice();
+                    let (i, o) = (t / kc, t % kc);
+                    let spec = as_c32(&mut kb[2 * sp * t..2 * sp * (t + 1)]);
+                    kernel_spectrum(shape, kernel, i, o, spec);
+                });
+            }
+            // Per-thread inverse-transform accumulators.
+            layout.push("accumulators", 2 * sp * threads);
+            Mode::Cached { kspec }
         } else {
-            run_streaming(ctx, &s, input, kernel, ws, output);
+            // Streaming: per-thread (accumulator + kernel scratch) lanes;
+            // kernel spectra recomputed per output channel at execute.
+            layout.push("stream-scratch", 2 * sp * 2 * threads);
+            Mode::Streaming {
+                kernel: kernel.clone(),
+            }
+        };
+        Box::new(FftConvPlan {
+            ctx: ctx.clone(),
+            shape: *shape,
+            mode,
+            layout,
+        })
+    }
+}
+
+enum Mode {
+    /// Kernel spectra precomputed at plan time (fits the cache cap).
+    Cached { kspec: Vec<f32> },
+    /// Over the cap: keep the raw kernel, stream its transforms.
+    Streaming { kernel: Kernel },
+}
+
+/// Plan for FFT-based convolution: cached-vs-streaming mode resolved, and
+/// (in cached mode) every kernel spectrum precomputed.
+pub struct FftConvPlan {
+    ctx: ConvContext,
+    shape: ConvShape,
+    mode: Mode,
+    layout: WorkspaceLayout,
+}
+
+impl FftConvPlan {
+    /// Whether this plan holds precomputed kernel spectra.
+    pub fn is_cached(&self) -> bool {
+        matches!(self.mode, Mode::Cached { .. })
+    }
+}
+
+impl ConvPlan for FftConvPlan {
+    fn algo(&self) -> AlgoKind {
+        AlgoKind::Fft
+    }
+
+    fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+
+    fn layout(&self) -> &WorkspaceLayout {
+        &self.layout
+    }
+
+    fn resident_bytes(&self) -> usize {
+        match &self.mode {
+            Mode::Cached { kspec } => kspec.len() * 4,
+            Mode::Streaming { kernel } => kernel.bytes(),
+        }
+    }
+
+    fn execute_in(&self, input: &Tensor, scratch: &mut [f32], output: &mut Tensor) {
+        let s = self.shape;
+        assert_eq!(output.shape(), s.output());
+        assert_eq!(input.shape(), s.input);
+        match &self.mode {
+            Mode::Cached { kspec } => {
+                run_cached(&self.ctx, &s, input, kspec, scratch, output);
+            }
+            Mode::Streaming { kernel } => {
+                run_streaming(&self.ctx, &s, input, kernel, scratch, output);
+            }
         }
     }
 }
@@ -138,34 +213,27 @@ fn as_c32(buf: &mut [f32]) -> &mut [C32] {
     unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut C32, buf.len() / 2) }
 }
 
+/// Read-only variant of [`as_c32`].
+fn as_c32_ref(buf: &[f32]) -> &[C32] {
+    assert_eq!(buf.len() % 2, 0);
+    // SAFETY: same layout argument as `as_c32`.
+    unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const C32, buf.len() / 2) }
+}
+
 fn run_cached(
     ctx: &ConvContext,
     s: &ConvShape,
     input: &Tensor,
-    kernel: &Kernel,
-    ws: &mut Workspace,
+    kspec: &[f32],
+    scratch: &mut [f32],
     output: &mut Tensor,
 ) {
     let sp = spectrum_len(s);
     let (ic, kc) = (s.kernel.ic, s.kernel.kc);
     let n = s.input.n;
-    let threads = ctx.threads;
+    let threads = ctx.threads.max(1);
 
-    let total = cached_workspace_elems(s).max(2 * sp * (ic * kc + ic + 2 * threads.max(1)));
-    let buf = ws.take(total);
-    let (kbuf, rest) = buf.split_at_mut(2 * sp * ic * kc);
-    let (xbuf, accbuf) = rest.split_at_mut(2 * sp * ic);
-
-    // Kernel spectra once per call (input-independent).
-    {
-        let kshared = SharedSlice::new(kbuf);
-        parallel_for_with_id(threads, ic * kc, |_, t| {
-            let kb = kshared.slice();
-            let (i, o) = (t / kc, t % kc);
-            let spec = as_c32(&mut kb[2 * sp * t..2 * sp * (t + 1)]);
-            kernel_spectrum(s, kernel, i, o, spec);
-        });
-    }
+    let (xbuf, accbuf) = scratch[..2 * sp * (ic + threads)].split_at_mut(2 * sp * ic);
 
     for nn in 0..n {
         // Input spectra for this sample.
@@ -180,7 +248,6 @@ fn run_cached(
         // Accumulate + inverse per output channel (per-thread acc).
         let (ph, pw) = fft_grid(s);
         let xref: &[f32] = xbuf;
-        let kref: &[f32] = kbuf;
         let acc_shared = SharedSlice::new(accbuf);
         let out_shared = SharedSlice::new(output.data_mut());
         parallel_for_with_id(threads, kc, |tid, o| {
@@ -188,18 +255,8 @@ fn run_cached(
             let acc = as_c32(&mut accb[2 * sp * tid..2 * sp * (tid + 1)]);
             acc.fill(C32::ZERO);
             for i in 0..ic {
-                let x = unsafe {
-                    std::slice::from_raw_parts(
-                        xref[2 * sp * i..].as_ptr() as *const C32,
-                        sp,
-                    )
-                };
-                let kf = unsafe {
-                    std::slice::from_raw_parts(
-                        kref[2 * sp * (i * kc + o)..].as_ptr() as *const C32,
-                        sp,
-                    )
-                };
+                let x = as_c32_ref(&xref[2 * sp * i..2 * sp * (i + 1)]);
+                let kf = as_c32_ref(&kspec[2 * sp * (i * kc + o)..2 * sp * (i * kc + o + 1)]);
                 pointwise_mul_acc(acc, x, kf);
             }
             fft2d(acc, ph, pw, true);
@@ -228,7 +285,7 @@ fn run_streaming(
     s: &ConvShape,
     input: &Tensor,
     kernel: &Kernel,
-    ws: &mut Workspace,
+    scratch: &mut [f32],
     output: &mut Tensor,
 ) {
     let sp = spectrum_len(s);
@@ -236,8 +293,7 @@ fn run_streaming(
     let n = s.input.n;
     let threads = ctx.threads.max(1);
 
-    let buf = ws.take(streaming_workspace_elems(s, threads));
-    let (xbuf, scratch) = buf.split_at_mut(2 * sp * ic);
+    let (xbuf, lanes) = scratch[..2 * sp * (ic + 2 * threads)].split_at_mut(2 * sp * ic);
 
     let (ph, pw) = fft_grid(s);
     for nn in 0..n {
@@ -250,7 +306,7 @@ fn run_streaming(
             });
         }
         let xref: &[f32] = xbuf;
-        let scratch_shared = SharedSlice::new(scratch);
+        let scratch_shared = SharedSlice::new(lanes);
         let out_shared = SharedSlice::new(output.data_mut());
         parallel_for_with_id(threads, kc, |tid, o| {
             let sb = scratch_shared.slice();
@@ -261,9 +317,7 @@ fn run_streaming(
             acc.fill(C32::ZERO);
             for i in 0..ic {
                 kernel_spectrum(s, kernel, i, o, kf);
-                let x = unsafe {
-                    std::slice::from_raw_parts(xref[2 * sp * i..].as_ptr() as *const C32, sp)
-                };
+                let x = as_c32_ref(&xref[2 * sp * i..2 * sp * (i + 1)]);
                 pointwise_mul_acc(acc, x, kf);
             }
             fft2d(acc, ph, pw, true);
@@ -276,6 +330,7 @@ fn run_streaming(
 mod tests {
     use super::*;
     use crate::conv::direct::Direct;
+    use crate::memory::Workspace;
     use crate::tensor::{KernelShape, Nhwc};
     use crate::util::{assert_allclose, Rng};
 
@@ -320,6 +375,20 @@ mod tests {
     }
 
     #[test]
+    fn plan_mode_follows_cache_cap() {
+        let shape = ConvShape::new(Nhwc::new(1, 8, 8, 2), KernelShape::new(3, 3, 2, 3), 1, 1);
+        let kernel = Kernel::zeros(shape.kernel);
+        let plan = FftConv.plan(&ConvContext::default(), &shape, &kernel);
+        // Default 256 MB cap: tiny geometry caches its spectra at plan
+        // time, so execute's scratch excludes the i_c·k_c kernel planes.
+        assert!(plan.workspace_elems() < Convolution::workspace_elems(&FftConv, &shape));
+        let mut tight = ConvContext::default();
+        tight.fft_cache_cap_bytes = 0;
+        let streaming = FftConv.plan(&tight, &shape, &kernel);
+        assert!(streaming.layout().region("stream-scratch").is_some());
+    }
+
+    #[test]
     fn grid_is_linear_conv_safe() {
         let s = ConvShape::new(Nhwc::new(1, 7, 7, 1), KernelShape::new(3, 3, 1, 1), 1, 1);
         let (ph, pw) = fft_grid(&s);
@@ -332,7 +401,7 @@ mod tests {
         // cv7-like scaled: 56x56x3 -> 3x3x8: FFT spectra must be much
         // bigger than MEC's L (Fig. 4e's qualitative claim).
         let s = ConvShape::new(Nhwc::new(1, 56, 56, 3), KernelShape::new(3, 3, 3, 8), 1, 1);
-        let fft = FftConv.workspace_elems(&s);
+        let fft = Convolution::workspace_elems(&FftConv, &s);
         let mec = s.mec_lowered_elems();
         assert!(fft > 5 * mec, "fft={fft} mec={mec}");
     }

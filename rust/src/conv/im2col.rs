@@ -7,10 +7,14 @@
 //! big GEMM. The memory-overhead is exactly `|L|`, which is what MEC
 //! attacks: every input pixel is replicated up to `k_h·k_w / (s_h·s_w)`
 //! times.
+//!
+//! Plan/execute: the kernel matrix K is the GEMM's B-operand and is
+//! input-independent, so the plan packs it once ([`PackedB`]); execute
+//! lowers into the arena and runs one prepacked GEMM.
 
-use super::{ConvContext, Convolution};
-use crate::gemm::{gemm_ex, MatMut, MatRef};
-use crate::memory::Workspace;
+use super::{AlgoKind, ConvContext, ConvPlan, Convolution};
+use crate::gemm::{gemm_prepacked_ex, MatMut, MatRef, PackedB};
+use crate::memory::WorkspaceLayout;
 use crate::tensor::{ConvShape, Kernel, Tensor};
 use crate::threadpool::parallel_for;
 
@@ -62,30 +66,64 @@ impl Convolution for Im2col {
         shape.im2col_lowered_elems()
     }
 
-    fn run(
-        &self,
-        ctx: &ConvContext,
-        shape: &ConvShape,
-        input: &Tensor,
-        kernel: &Kernel,
-        ws: &mut Workspace,
-        output: &mut Tensor,
-    ) {
-        let s = *shape;
+    fn plan(&self, ctx: &ConvContext, shape: &ConvShape, kernel: &Kernel) -> Box<dyn ConvPlan> {
+        assert_eq!(kernel.shape(), shape.kernel);
+        let k = shape.kernel;
+        let kdim = k.kh * k.kw * k.ic;
+        let kmat = MatRef::new(kernel.data(), kdim, k.kc);
+        let mut layout = WorkspaceLayout::new();
+        layout.push("lowered", shape.im2col_lowered_elems());
+        Box::new(Im2colPlan {
+            ctx: ctx.clone(),
+            shape: *shape,
+            packed_k: PackedB::pack(kmat, ctx.blocks),
+            layout,
+        })
+    }
+}
+
+/// Plan for im2col: prepacked kernel matrix + the Eq. (2) lowered-matrix
+/// region.
+pub struct Im2colPlan {
+    ctx: ConvContext,
+    shape: ConvShape,
+    packed_k: PackedB,
+    layout: WorkspaceLayout,
+}
+
+impl ConvPlan for Im2colPlan {
+    fn algo(&self) -> AlgoKind {
+        AlgoKind::Im2col
+    }
+
+    fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+
+    fn layout(&self) -> &WorkspaceLayout {
+        &self.layout
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.packed_k.bytes()
+    }
+
+    fn execute_in(&self, input: &Tensor, scratch: &mut [f32], output: &mut Tensor) {
+        let s = self.shape;
         let k = s.kernel;
         let rows = s.input.n * s.oh() * s.ow();
         let row_len = k.kh * k.kw * k.ic;
         assert_eq!(output.shape(), s.output());
+        assert_eq!(input.shape(), s.input);
 
-        let l = ws.take(rows * row_len);
-        Im2col::lower(ctx, &s, input, l);
+        let l = &mut scratch[..rows * row_len];
+        Im2col::lower(&self.ctx, &s, input, l);
 
         // O (i_n·o_h·o_w × k_c, row-major NHWC is exactly this matrix)
         //   = L (rows × row_len) × K (row_len × k_c).
         let a = MatRef::new(l, rows, row_len);
-        let b = MatRef::new(kernel.data(), row_len, k.kc);
         let mut c = MatMut::new(output.data_mut(), rows, k.kc);
-        gemm_ex(a, b, &mut c, 1.0, 0.0, ctx.threads, ctx.blocks);
+        gemm_prepacked_ex(a, &self.packed_k, &mut c, self.ctx.threads);
     }
 }
 
@@ -93,6 +131,7 @@ impl Convolution for Im2col {
 mod tests {
     use super::*;
     use crate::conv::direct::Direct;
+    use crate::memory::Workspace;
     use crate::tensor::{KernelShape, Nhwc};
     use crate::util::{assert_allclose, Rng};
 
@@ -151,5 +190,17 @@ mod tests {
         );
         assert_eq!(shape.oh(), 55);
         assert_eq!(Im2col.workspace_elems(&shape), 55 * 55 * 11 * 11 * 3);
+    }
+
+    #[test]
+    fn plan_layout_is_the_lowered_matrix() {
+        let shape = ConvShape::new(Nhwc::new(1, 7, 7, 1), KernelShape::new(3, 3, 1, 1), 1, 1);
+        let kernel = Kernel::zeros(shape.kernel);
+        let plan = Im2col.plan(&ConvContext::default(), &shape, &kernel);
+        assert_eq!(plan.workspace_elems(), shape.im2col_lowered_elems());
+        assert_eq!(
+            plan.layout().region("lowered").unwrap().elems,
+            shape.im2col_lowered_elems()
+        );
     }
 }

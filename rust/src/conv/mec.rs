@@ -20,10 +20,15 @@
 //! The dispatch threshold `T` (line 8, `o_w ≤ T`) trades GEMM size
 //! against count; the paper found ~100 good on GPUs (`ablation_t`
 //! re-derives this).
+//!
+//! Plan/execute: the A/B dispatch and the kernel-matrix packing
+//! ([`PackedB`]) are input-independent, so [`MecPlan`] resolves and
+//! prepacks them once; execute only lowers, multiplies, and (Solution A)
+//! repacks — allocating nothing.
 
-use super::{ConvContext, Convolution};
+use super::{AlgoKind, ConvContext, ConvPlan, Convolution};
 use crate::gemm::{gemm_prepacked, gemm_prepacked_batch, MatMut, MatRef, PackedB};
-use crate::memory::Workspace;
+use crate::memory::WorkspaceLayout;
 use crate::tensor::{ConvShape, Kernel, Tensor};
 use crate::threadpool::parallel_for;
 
@@ -100,6 +105,7 @@ impl Mec {
 }
 
 /// `|O| ≤ |L|` — Solution A needs L as the repack aux (Alg. 2 line 8).
+/// Batch-independent: both sides scale linearly in `i_n`.
 pub fn solution_a_available(shape: &ConvShape) -> bool {
     shape.output().len() <= shape.mec_lowered_elems()
 }
@@ -128,67 +134,123 @@ impl Convolution for Mec {
         }
     }
 
-    fn run(
-        &self,
-        ctx: &ConvContext,
-        shape: &ConvShape,
-        input: &Tensor,
-        kernel: &Kernel,
-        ws: &mut Workspace,
-        output: &mut Tensor,
-    ) {
-        let s = *shape;
+    fn plan(&self, ctx: &ConvContext, shape: &ConvShape, kernel: &Kernel) -> Box<dyn ConvPlan> {
+        assert_eq!(kernel.shape(), shape.kernel);
+        let k = shape.kernel;
+        let kdim = k.kh * k.kw * k.ic;
+        let solution = self.resolve(ctx, shape);
+        let mut layout = WorkspaceLayout::new();
+        layout.push("lowered", shape.mec_lowered_elems());
+        // Pinned Solution A where |O| > |L|: the h-n-w-c → n-h-w-c repack
+        // cannot reuse L and needs its own region.
+        if solution == Solution::A && !solution_a_available(shape) {
+            layout.push("repack-aux", shape.output().len());
+        }
+        let kmat = MatRef::new(kernel.data(), kdim, k.kc);
+        Box::new(MecPlan {
+            ctx: ctx.clone(),
+            shape: *shape,
+            kind: match self.solution {
+                Solution::Auto => AlgoKind::Mec,
+                Solution::A => AlgoKind::MecSolutionA,
+                Solution::B => AlgoKind::MecSolutionB,
+            },
+            solution,
+            packed_k: PackedB::pack(kmat, ctx.blocks),
+            layout,
+        })
+    }
+}
+
+/// Plan for MEC: the Algorithm-2 line-8 dispatch resolved, the kernel
+/// matrix packed once, and the Eq. (3) lowered region (+ optional repack
+/// aux) laid out.
+pub struct MecPlan {
+    ctx: ConvContext,
+    shape: ConvShape,
+    kind: AlgoKind,
+    solution: Solution,
+    packed_k: PackedB,
+    layout: WorkspaceLayout,
+}
+
+impl MecPlan {
+    /// The schedule this plan resolved to (observability / tests).
+    pub fn solution(&self) -> Solution {
+        self.solution
+    }
+}
+
+impl ConvPlan for MecPlan {
+    fn algo(&self) -> AlgoKind {
+        self.kind
+    }
+
+    fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+
+    fn layout(&self) -> &WorkspaceLayout {
+        &self.layout
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.packed_k.bytes()
+    }
+
+    fn execute_in(&self, input: &Tensor, scratch: &mut [f32], output: &mut Tensor) {
+        let s = self.shape;
         assert_eq!(output.shape(), s.output());
         assert_eq!(input.shape(), s.input);
-        assert_eq!(kernel.shape(), s.kernel);
-
-        match self.resolve(ctx, &s) {
-            Solution::A => run_solution_a(ctx, &s, input, kernel, ws, output),
-            Solution::B => run_solution_b(ctx, &s, input, kernel, ws, output),
-            Solution::Auto => unreachable!("resolve never returns Auto"),
+        let total = self.layout.total_elems();
+        let buf = &mut scratch[..total];
+        match self.solution {
+            Solution::A => {
+                let l_elems = s.mec_lowered_elems();
+                let (l, aux) = if total > l_elems {
+                    let (l, aux) = buf.split_at_mut(l_elems);
+                    (l, Some(aux))
+                } else {
+                    (buf, None)
+                };
+                run_solution_a(&self.ctx, &s, input, &self.packed_k, l, aux, output);
+            }
+            Solution::B => run_solution_b(&self.ctx, &s, input, &self.packed_k, buf, output),
+            Solution::Auto => unreachable!("plan() always resolves the schedule"),
         }
     }
 }
 
 /// Solution A (Algorithm 2 lines 9–19): `o_h` big GEMMs over the whole
 /// mini-batch producing `h-n-w-c`, then repack to `n-h-w-c` via aux.
+/// `aux_sep` is `Some` only for pinned-A geometries where `|O| > |L|`.
 fn run_solution_a(
     ctx: &ConvContext,
     s: &ConvShape,
     input: &Tensor,
-    kernel: &Kernel,
-    ws: &mut Workspace,
+    packed_k: &PackedB,
+    l: &mut [f32],
+    aux_sep: Option<&mut [f32]>,
     output: &mut Tensor,
 ) {
     let (oh, ow) = (s.oh(), s.ow());
     let k = s.kernel;
     let n = s.input.n;
-    let l_elems = s.mec_lowered_elems();
     let o_elems = s.output().len();
     let l_rows = n * ow; // L as i_n·o_w × i_h·k_w·i_c (line 9)
     let l_cols = s.input.h * k.kw * k.ic;
     let kdim = k.kh * k.kw * k.ic;
     let step = s.sh * k.kw * k.ic; // partition shift (line 12)
 
-    // When |O| > |L| (pinned Solution A), the aux is a separate region.
-    let reuse_l_as_aux = o_elems <= l_elems;
-    let (l, aux_sep) = if reuse_l_as_aux {
-        (ws.take(l_elems), None)
-    } else {
-        let (l, aux) = ws.take_split(l_elems, o_elems);
-        (l, Some(aux))
-    };
-
     Mec::lower(ctx, s, input, l);
 
     // Lines 10-13: O[h] = L[0:i_n·o_w, step·h : step·h + k_h·k_w·i_c] × K,
     // one gemm per output row h; O interpreted as o_h × (i_n·o_w·k_c).
     //
-    // §Perf: K is shared by all o_h gemms — pack it ONCE (PackedB) instead
-    // of per call; this is what the paper gets for free from BLAS keeping
-    // its packing internal, and it roughly halved MEC runtime on cv6.
-    let kmat = MatRef::new(kernel.data(), kdim, k.kc);
-    let packed_k = PackedB::pack(kmat, ctx.blocks);
+    // §Perf: K is shared by all o_h gemms — packed ONCE at plan time
+    // (PackedB) instead of per call; this is what the paper gets for free
+    // from BLAS keeping its packing internal, and it roughly halved MEC
+    // runtime on cv6.
     let out_row = n * ow * k.kc;
     if ctx.threads <= 1 {
         // Mobile path (§Perf iteration 3): fuse the o_h gemms so each
@@ -203,7 +265,7 @@ fn run_solution_a(
             .chunks_exact_mut(out_row)
             .map(|chunk| MatMut::new(chunk, l_rows, k.kc))
             .collect();
-        gemm_prepacked_batch(&a_views, &packed_k, &mut c_views);
+        gemm_prepacked_batch(&a_views, packed_k, &mut c_views);
     } else {
         let out = crate::threadpool::SharedSlice::new(output.data_mut());
         let l_ref: &[f32] = l;
@@ -212,7 +274,7 @@ fn run_solution_a(
             let out_data: &mut [f32] = out.slice();
             let a = MatRef::strided(&l_ref[step * h..], l_rows, kdim, l_cols);
             let mut c = MatMut::new(&mut out_data[h * out_row..(h + 1) * out_row], l_rows, k.kc);
-            gemm_prepacked(a, &packed_k, &mut c);
+            gemm_prepacked(a, packed_k, &mut c);
         });
     }
 
@@ -230,15 +292,10 @@ fn run_solution_a(
         let nn = t / oh;
         let h = t % oh;
         // L viewed as o_h × i_n × (o_w·k_c): O[n,h,:] = L[h,n,:] (line 18)
-        let src = (h * n_of(s) + nn) * chunk;
+        let src = (h * n + nn) * chunk;
         let dst = (nn * oh + h) * chunk;
         out_data[dst..dst + chunk].copy_from_slice(&aux_ref[src..src + chunk]);
     });
-}
-
-#[inline]
-fn n_of(s: &ConvShape) -> usize {
-    s.input.n
 }
 
 /// Solution B (Algorithm 2 lines 21–25): per-sample batched GEMMs
@@ -247,26 +304,23 @@ fn run_solution_b(
     ctx: &ConvContext,
     s: &ConvShape,
     input: &Tensor,
-    kernel: &Kernel,
-    ws: &mut Workspace,
+    packed_k: &PackedB,
+    l: &mut [f32],
     output: &mut Tensor,
 ) {
     let (oh, ow) = (s.oh(), s.ow());
     let k = s.kernel;
     let n = s.input.n;
-    let l_elems = s.mec_lowered_elems();
     let l_cols = s.input.h * k.kw * k.ic;
     let kdim = k.kh * k.kw * k.ic;
     let step = s.sh * k.kw * k.ic;
     let sample_l = ow * l_cols; // one sample's L block (o_w × i_h·k_w·i_c)
 
-    let l = ws.take(l_elems);
     Mec::lower(ctx, s, input, l);
 
-    let kmat = MatRef::new(kernel.data(), kdim, k.kc);
-    // §Perf: shared K packed once across the i_n·o_h batched gemms (the
-    // cublasSgemmBatched analogue: one kernel image, many activations).
-    let packed_k = PackedB::pack(kmat, ctx.blocks);
+    // §Perf: shared K packed once at plan time across the i_n·o_h batched
+    // gemms (the cublasSgemmBatched analogue: one kernel image, many
+    // activations).
     let chunk = ow * k.kc;
     if ctx.threads <= 1 {
         // Mobile path: fused batch order keeps each K tile cache-warm
@@ -284,7 +338,7 @@ fn run_solution_b(
             .chunks_exact_mut(chunk)
             .map(|ch| MatMut::new(ch, ow, k.kc))
             .collect();
-        gemm_prepacked_batch(&a_views, &packed_k, &mut c_views);
+        gemm_prepacked_batch(&a_views, packed_k, &mut c_views);
     } else {
         let out = crate::threadpool::SharedSlice::new(output.data_mut());
         let l_ref: &[f32] = l;
@@ -297,7 +351,7 @@ fn run_solution_b(
             let a = MatRef::strided(&l_ref[nn * sample_l + step * h..], ow, kdim, l_cols);
             let dst = (nn * oh + h) * chunk;
             let mut c = MatMut::new(&mut out_data[dst..dst + chunk], ow, k.kc);
-            gemm_prepacked(a, &packed_k, &mut c);
+            gemm_prepacked(a, packed_k, &mut c);
         });
     }
 }
@@ -306,6 +360,7 @@ fn run_solution_b(
 mod tests {
     use super::*;
     use crate::conv::direct::Direct;
+    use crate::memory::Workspace;
     use crate::tensor::{KernelShape, Nhwc};
     use crate::util::{assert_allclose, Rng};
 
@@ -440,6 +495,26 @@ mod tests {
         // T tunable.
         let t4 = ConvContext::default().with_mec_t(4);
         assert_eq!(Mec::auto().resolve(&t4, &fig2_shape()), Solution::B);
+    }
+
+    #[test]
+    fn plan_resolves_dispatch_once() {
+        // The plan freezes the Algorithm-2 line-8 decision at plan time.
+        let ctx = ConvContext::default();
+        let s = fig2_shape();
+        let kernel = Kernel::zeros(s.kernel);
+        let plan = Mec::auto().plan(&ctx, &s, &kernel);
+        assert_eq!(plan.algo(), AlgoKind::Mec);
+        assert_eq!(plan.workspace_elems(), s.mec_lowered_elems());
+        // Pinned A on |O| > |L| gets the separate repack-aux region.
+        let fat = ConvShape::new(Nhwc::new(1, 7, 7, 1), KernelShape::new(3, 3, 1, 64), 1, 1);
+        let fat_kernel = Kernel::zeros(fat.kernel);
+        let plan_a = Mec::solution_a().plan(&ctx, &fat, &fat_kernel);
+        assert_eq!(
+            plan_a.workspace_elems(),
+            fat.mec_lowered_elems() + fat.output().len()
+        );
+        assert!(plan_a.layout().region("repack-aux").is_some());
     }
 
     #[test]

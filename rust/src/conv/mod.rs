@@ -10,10 +10,27 @@
 //! | [`winograd`]| Wino.cpu / Wino.gpu   | F(2×2, 3×3) baseline |
 //! | [`fft_conv`]| FFT.gpu               | frequency-domain baseline |
 //!
-//! All implement [`Convolution`]: a cuDNN-style API where the caller asks
-//! for the workspace size up front (that *is* the paper's memory-overhead
-//! metric) and provides the scratch explicitly, so the planner can enforce
-//! device budgets and the tracker can measure true peaks.
+//! # Plan / execute split
+//!
+//! The API is two-phase, cuDNN-graph style (see `ARCHITECTURE.md`):
+//!
+//! * [`Convolution::plan`] runs **once per (geometry, context)** — at
+//!   model load. It resolves every data-independent decision (MEC's
+//!   Solution A/B + `T` dispatch, FFT cached-vs-streaming mode), performs
+//!   every kernel-side precomputation (GEMM B-operand packing via
+//!   [`PackedB`](crate::gemm::PackedB), Winograd filter transforms, FFT
+//!   kernel spectra), and emits a [`WorkspaceLayout`] of named offsets
+//!   into a single scratch buffer.
+//! * [`ConvPlan::execute`] runs **per request** and allocates and
+//!   recomputes nothing: scratch comes from a caller-owned
+//!   [`Arena`], prepacked operands come from the plan.
+//!
+//! The one-shot [`Convolution::run`] (and the [`convolve`] helper) is a
+//! thin plan-then-execute wrapper, so the two paths are the same code and
+//! produce bit-identical outputs by construction. The explicit-workspace
+//! request (`workspace_elems` = the paper's memory-overhead, §3.4) is
+//! unchanged — that is still what the planner budgets against and what
+//! the memory benches report.
 
 pub mod direct;
 pub mod fft_conv;
@@ -23,7 +40,7 @@ pub mod winograd;
 pub mod winograd_chunked;
 
 use crate::gemm::BlockSizes;
-use crate::memory::Workspace;
+use crate::memory::{Arena, Workspace, WorkspaceLayout};
 use crate::tensor::{ConvShape, Kernel, Tensor};
 
 /// Execution environment for a convolution call.
@@ -78,7 +95,58 @@ impl ConvContext {
     }
 }
 
-/// A convolution algorithm with an explicit-workspace API.
+/// A prepared convolution: geometry resolved, kernel-side operands
+/// prepacked/transformed, workspace layout fixed. Built once by
+/// [`Convolution::plan`]; [`ConvPlan::execute`] is the allocation-free
+/// hot path.
+pub trait ConvPlan: Send + Sync {
+    /// The algorithm this plan executes.
+    fn algo(&self) -> AlgoKind;
+
+    /// The geometry the plan was built for.
+    fn shape(&self) -> &ConvShape;
+
+    /// The plan's scratch-memory map (named regions in one buffer).
+    fn layout(&self) -> &WorkspaceLayout;
+
+    /// Scratch floats `execute` needs — the layout total. For algorithms
+    /// whose kernel-side precomputation moved into the plan (Winograd
+    /// filter transforms, FFT spectra) this is *smaller* than the
+    /// one-shot algorithm's analytic `workspace_elems`.
+    fn workspace_elems(&self) -> usize {
+        self.layout().total_elems()
+    }
+
+    /// Same in bytes.
+    fn workspace_bytes(&self) -> usize {
+        self.workspace_elems() * std::mem::size_of::<f32>()
+    }
+
+    /// Bytes the plan itself holds resident (prepacked kernel matrices,
+    /// transformed filters, cached spectra, owned kernel copies) —
+    /// model-load memory, paid once, carved out of the algorithm-level
+    /// analytic `workspace_elems` where applicable. `resident_bytes` +
+    /// `workspace_bytes` ≈ the algorithm's total footprint beyond I/K/O.
+    fn resident_bytes(&self) -> usize {
+        0
+    }
+
+    /// Core entry point: run the convolution with caller-provided scratch
+    /// of at least [`Self::workspace_elems`] floats. Writes every output
+    /// element; reads no stale scratch. Performs no allocation and no
+    /// kernel repacking/transforms.
+    fn execute_in(&self, input: &Tensor, scratch: &mut [f32], output: &mut Tensor);
+
+    /// Run the convolution against a shared [`Arena`]. The arena grows to
+    /// the layout total on first use (tracked); after that, repeated
+    /// calls allocate zero tracked bytes.
+    fn execute(&self, input: &Tensor, arena: &mut Arena, output: &mut Tensor) {
+        let elems = self.workspace_elems();
+        self.execute_in(input, arena.slice(elems), output);
+    }
+}
+
+/// A convolution algorithm with an explicit-workspace, two-phase API.
 pub trait Convolution: Send + Sync {
     /// Short name used in reports ("MEC.cpu" style naming lives in the
     /// bench layer; this is the algorithm identity).
@@ -89,7 +157,10 @@ pub trait Convolution: Send + Sync {
     fn supports(&self, shape: &ConvShape) -> bool;
 
     /// Temporary floats needed beyond I, K, O — the paper's
-    /// "memory-overhead" (§3.4), exact per algorithm.
+    /// "memory-overhead" (§3.4), exact per algorithm. This is the
+    /// *analytic, algorithm-level* figure the planner budgets with;
+    /// a plan's own `workspace_elems` can be smaller when kernel-side
+    /// buffers moved to plan time.
     fn workspace_elems(&self, shape: &ConvShape) -> usize;
 
     /// Same in bytes.
@@ -97,9 +168,14 @@ pub trait Convolution: Send + Sync {
         self.workspace_elems(shape) * std::mem::size_of::<f32>()
     }
 
-    /// Run the convolution. `output` must be pre-allocated to
-    /// `shape.output()`; `ws` is grown as needed (callers reuse it across
-    /// calls — the serving hot path allocates nothing).
+    /// Build a reusable plan: resolve dispatch, prepack/transform the
+    /// kernel, fix the workspace layout. Pays all setup cost once so
+    /// [`ConvPlan::execute`] can amortize it across every request.
+    fn plan(&self, ctx: &ConvContext, shape: &ConvShape, kernel: &Kernel) -> Box<dyn ConvPlan>;
+
+    /// One-shot convenience: plan, then execute out of `ws`. Kept for
+    /// tests/examples and cold paths; the serving stack holds plans
+    /// directly. `output` must be pre-allocated to `shape.output()`.
     fn run(
         &self,
         ctx: &ConvContext,
@@ -108,7 +184,11 @@ pub trait Convolution: Send + Sync {
         kernel: &Kernel,
         ws: &mut Workspace,
         output: &mut Tensor,
-    );
+    ) {
+        let plan = self.plan(ctx, shape, kernel);
+        let scratch = ws.take_uninit(plan.workspace_elems());
+        plan.execute_in(input, scratch, output);
+    }
 }
 
 /// Algorithm identifiers for CLI/planner/config use.
@@ -128,6 +208,23 @@ pub enum AlgoKind {
     WinogradChunked,
     Fft,
 }
+
+/// Error for [`AlgoKind::from_str`]: the offending input plus the list of
+/// accepted names.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseAlgoError(pub String);
+
+impl std::fmt::Display for ParseAlgoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown algorithm {:?} (expected one of: direct, im2col, mec, mec-a, mec-b, winograd, winograd-chunked, fft)",
+            self.0
+        )
+    }
+}
+
+impl std::error::Error for ParseAlgoError {}
 
 impl AlgoKind {
     pub const ALL: [AlgoKind; 8] = [
@@ -163,8 +260,11 @@ impl AlgoKind {
         }
     }
 
+    /// Case-insensitive name lookup (accepts the aliases the CLI and
+    /// config files have historically used). `FromStr` delegates here so
+    /// callers can also write `s.parse::<AlgoKind>()?`.
     pub fn parse(s: &str) -> Option<AlgoKind> {
-        Some(match s {
+        Some(match s.trim().to_ascii_lowercase().as_str() {
             "direct" => AlgoKind::Direct,
             "im2col" | "conv" => AlgoKind::Im2col,
             "mec" => AlgoKind::Mec,
@@ -192,7 +292,17 @@ impl AlgoKind {
     }
 }
 
+impl std::str::FromStr for AlgoKind {
+    type Err = ParseAlgoError;
+
+    fn from_str(s: &str) -> Result<AlgoKind, ParseAlgoError> {
+        AlgoKind::parse(s).ok_or_else(|| ParseAlgoError(s.to_string()))
+    }
+}
+
 /// Convenience: run `algo` on fresh workspace, returning the output.
+/// A thin plan-then-execute wrapper — identical code path to holding a
+/// [`ConvPlan`] and executing it against an [`Arena`].
 pub fn convolve(
     algo: AlgoKind,
     ctx: &ConvContext,
@@ -223,6 +333,23 @@ mod tests {
             assert_eq!(AlgoKind::parse(k.name()), Some(k));
         }
         assert_eq!(AlgoKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn parse_is_case_insensitive() {
+        assert_eq!(AlgoKind::parse("MEC"), Some(AlgoKind::Mec));
+        assert_eq!(AlgoKind::parse("Im2Col"), Some(AlgoKind::Im2col));
+        assert_eq!(AlgoKind::parse("  WINO-CPU "), Some(AlgoKind::WinogradChunked));
+        assert_eq!(AlgoKind::parse("MEC_A"), Some(AlgoKind::MecSolutionA));
+    }
+
+    #[test]
+    fn from_str_delegates_to_parse() {
+        assert_eq!("fft".parse::<AlgoKind>(), Ok(AlgoKind::Fft));
+        assert_eq!("Direct".parse::<AlgoKind>(), Ok(AlgoKind::Direct));
+        let err = "bogus".parse::<AlgoKind>().unwrap_err();
+        assert!(err.to_string().contains("bogus"));
+        assert!(err.to_string().contains("winograd"));
     }
 
     #[test]

@@ -14,13 +14,18 @@
 //! independent GEMMs of shape `(k_c × i_c) × (i_c × P)` where
 //! `P = i_n·⌈o_h/2⌉·⌈o_w/2⌉` — the paper's Appendix describes exactly
 //! this "all tiles/channels in full parallel" decomposition, and its
-//! memory cost: transformed-kernel U, transformed-input V, and product M
-//! are all materialized, which is why Fig. 4b/e show Winograd needing
-//! noticeably more temporary memory than MEC.
+//! memory cost: transformed-input V and product M are materialized in
+//! full, which is why Fig. 4b/e show Winograd needing noticeably more
+//! temporary memory than MEC.
+//!
+//! Plan/execute: the transformed filters U = G g Gᵀ are input-independent
+//! — cuDNN-style, the plan computes them once and holds them as model
+//! memory (like a prepacked weight), so the per-call workspace is V + M
+//! and execute performs no filter transforms.
 
-use super::{ConvContext, Convolution};
+use super::{AlgoKind, ConvContext, ConvPlan, Convolution};
 use crate::gemm::{gemm_ex, MatMut, MatRef};
-use crate::memory::Workspace;
+use crate::memory::WorkspaceLayout;
 use crate::tensor::{ConvShape, Kernel, Tensor};
 use crate::threadpool::{parallel_for, SharedSlice};
 
@@ -47,43 +52,87 @@ impl Convolution for Winograd {
         s.kernel.kh == 3 && s.kernel.kw == 3 && s.sh == 1 && s.sw == 1
     }
 
-    /// U (16·k_c·i_c) + V (16·i_c·P) + M (16·k_c·P) floats.
+    /// U (16·k_c·i_c) + V (16·i_c·P) + M (16·k_c·P) floats — the total
+    /// temporary memory beyond I/K/O, which is what the planner budgets
+    /// against. A plan carves U out as plan-resident
+    /// ([`ConvPlan::resident_bytes`]), so its per-call scratch layout is
+    /// only V + M.
     fn workspace_elems(&self, s: &ConvShape) -> usize {
         let p = tile_count(s);
         let (ic, kc) = (s.kernel.ic, s.kernel.kc);
         16 * kc * ic + 16 * ic * p + 16 * kc * p
     }
 
-    fn run(
-        &self,
-        ctx: &ConvContext,
-        shape: &ConvShape,
-        input: &Tensor,
-        kernel: &Kernel,
-        ws: &mut Workspace,
-        output: &mut Tensor,
-    ) {
-        let s = *shape;
-        assert!(self.supports(&s), "winograd: unsupported geometry {}", s.describe());
+    fn plan(&self, ctx: &ConvContext, shape: &ConvShape, kernel: &Kernel) -> Box<dyn ConvPlan> {
+        assert!(
+            self.supports(shape),
+            "winograd: unsupported geometry {}",
+            shape.describe()
+        );
+        assert_eq!(kernel.shape(), shape.kernel);
+        let (ic, kc) = (shape.kernel.ic, shape.kernel.kc);
+        let p = tile_count(shape);
+        // ---- plan-time: U[xy][o][i] = (G g Gᵀ)[xy] once ----
+        let mut u = vec![0.0f32; 16 * kc * ic];
+        kernel_transform(ctx, kernel, ic, kc, &mut u);
+        let mut layout = WorkspaceLayout::new();
+        layout.push("input-transform", 16 * ic * p);
+        layout.push("products", 16 * kc * p);
+        Box::new(WinogradPlan {
+            ctx: ctx.clone(),
+            shape: *shape,
+            u,
+            layout,
+        })
+    }
+}
+
+/// Plan for fully-materialized F(2×2,3×3): transformed filters resident,
+/// V and M regions laid out.
+pub struct WinogradPlan {
+    ctx: ConvContext,
+    shape: ConvShape,
+    /// Transformed filters, 16 matrices of k_c×i_c ([xy][o][i]).
+    u: Vec<f32>,
+    layout: WorkspaceLayout,
+}
+
+impl ConvPlan for WinogradPlan {
+    fn algo(&self) -> AlgoKind {
+        AlgoKind::Winograd
+    }
+
+    fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+
+    fn layout(&self) -> &WorkspaceLayout {
+        &self.layout
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.u.len() * 4
+    }
+
+    fn execute_in(&self, input: &Tensor, scratch: &mut [f32], output: &mut Tensor) {
+        let s = self.shape;
         assert_eq!(output.shape(), s.output());
+        assert_eq!(input.shape(), s.input);
+        let ctx = &self.ctx;
         let (ic, kc) = (s.kernel.ic, s.kernel.kc);
         let (oh, ow) = (s.oh(), s.ow());
         let (th, tw) = (tiles(oh), tiles(ow));
         let p = s.input.n * th * tw;
 
-        let (u, rest) = ws.take_split(16 * kc * ic, 16 * ic * p + 16 * kc * p);
-        let (v, m) = rest.split_at_mut(16 * ic * p);
+        let (v, m) = scratch[..16 * ic * p + 16 * kc * p].split_at_mut(16 * ic * p);
 
-        // ---- 1. Kernel transform: U[xy][o][i] = (G g Gᵀ)[xy] ----
-        kernel_transform(ctx, kernel, ic, kc, u);
-
-        // ---- 2. Input transform: V[xy][i][p] = (Bᵀ d B)[xy] ----
+        // ---- 1. Input transform: V[xy][i][p] = (Bᵀ d B)[xy] ----
         input_transform(ctx, &s, input, th, tw, v);
 
-        // ---- 3. 16 batched GEMMs: M[xy] = U[xy] (kc×ic) × V[xy] (ic×P) ----
+        // ---- 2. 16 batched GEMMs: M[xy] = U[xy] (kc×ic) × V[xy] (ic×P) ----
         {
             let m_shared = SharedSlice::new(m);
-            let u_ref: &[f32] = u;
+            let u_ref: &[f32] = &self.u;
             let v_ref: &[f32] = v;
             let inner = if ctx.threads >= 16 { 1 } else { ctx.threads };
             parallel_for(ctx.threads.min(16), 16, |xy| {
@@ -95,13 +144,20 @@ impl Convolution for Winograd {
             });
         }
 
-        // ---- 4. Output transform: Y = Aᵀ m A per (tile, kc), clipped ----
+        // ---- 3. Output transform: Y = Aᵀ m A per (tile, kc), clipped ----
         output_transform(ctx, &s, m, th, tw, output);
     }
 }
 
-/// G g Gᵀ for every (o, i); U laid out as 16 matrices of kc×ic.
-fn kernel_transform(ctx: &ConvContext, kernel: &Kernel, ic: usize, kc: usize, u: &mut [f32]) {
+/// G g Gᵀ for every (o, i); U laid out as 16 matrices of kc×ic. Shared by
+/// the full and chunked variants (plan-time only).
+pub(super) fn kernel_transform(
+    ctx: &ConvContext,
+    kernel: &Kernel,
+    ic: usize,
+    kc: usize,
+    u: &mut [f32],
+) {
     let u_shared = SharedSlice::new(u);
     parallel_for(ctx.threads, kc * ic, |t| {
         let u_data = u_shared.slice();
@@ -259,6 +315,7 @@ fn output_transform(
 mod tests {
     use super::*;
     use crate::conv::direct::Direct;
+    use crate::memory::Workspace;
     use crate::tensor::{KernelShape, Nhwc};
     use crate::util::{assert_allclose, Rng};
 
@@ -321,9 +378,20 @@ mod tests {
         );
         let p = 3 * 3; // ⌈5/2⌉ × ⌈5/2⌉
         assert_eq!(tile_count(&s), p);
+        // Analytic total: U + V + M (what the planner budgets).
         assert_eq!(
             Winograd.workspace_elems(&s),
             16 * 16 * 8 + 16 * 8 * p + 16 * 16 * p
+        );
+        // The plan carves U out as resident memory; per-call scratch is
+        // V + M, and resident + scratch covers the analytic total.
+        let kernel = Kernel::zeros(s.kernel);
+        let plan = Winograd.plan(&ConvContext::default(), &s, &kernel);
+        assert_eq!(plan.workspace_elems(), 16 * 8 * p + 16 * 16 * p);
+        assert_eq!(plan.resident_bytes(), 16 * 16 * 8 * 4);
+        assert_eq!(
+            plan.resident_bytes() + plan.workspace_bytes(),
+            Winograd.workspace_bytes(&s)
         );
         // Winograd overhead exceeds MEC's on this shape (Fig. 4b story).
         assert!(Winograd.workspace_elems(&s) > s.mec_lowered_elems());

@@ -11,13 +11,22 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum QueueError {
-    #[error("queue full (capacity {0})")]
     Full(usize),
-    #[error("queue closed")]
     Closed,
 }
+
+impl std::fmt::Display for QueueError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QueueError::Full(cap) => write!(f, "queue full (capacity {cap})"),
+            QueueError::Closed => write!(f, "queue closed"),
+        }
+    }
+}
+
+impl std::error::Error for QueueError {}
 
 struct Inner {
     items: VecDeque<Request>,

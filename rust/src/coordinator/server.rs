@@ -1,15 +1,17 @@
 //! The serving loop: worker threads drain the queue through the model.
 //!
-//! Ownership layout: the [`Model`] is shared read-only (`Arc`); each
-//! worker owns a reusable [`Workspace`] (grows to the high-water mark on
-//! first batches, then the hot path allocates nothing but activations).
+//! Ownership layout: the [`Model`] is shared read-only (`Arc`) and holds
+//! the prepacked per-layer [`ConvPlan`](crate::conv::ConvPlan)s; each
+//! worker owns a shared [`Arena`] pre-sized by the planner to the max
+//! per-layer workspace, so the hot path allocates nothing but
+//! activations — no kernel repacking, no workspace growth.
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use super::queue::{QueueError, RequestQueue};
 use super::{assemble_batch, Request, Response};
 use crate::conv::ConvContext;
-use crate::memory::Workspace;
+use crate::memory::Arena;
 use crate::model::Model;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -144,14 +146,16 @@ fn worker_loop(
     ctx: ConvContext,
 ) {
     let batcher = Batcher::new(queue, policy);
-    let mut ws = Workspace::new();
+    // Planner-sized shared arena: max (not sum) over planned layers.
+    // Batches at or below the planned size never grow it.
+    let mut arena = model.sized_arena();
     while let Some(batch) = batcher.next_batch() {
         if batch.is_empty() {
             continue;
         }
         let t0 = Instant::now();
         let input = assemble_batch(model.input_hwc, &batch);
-        let out = model.forward(&ctx, &input, &mut ws);
+        let out = model.forward(&ctx, &input, &mut arena);
         let forward_ns = t0.elapsed().as_nanos() as f64;
         metrics.record_batch(batch.len(), forward_ns);
         let classes = out.shape().c;
@@ -259,13 +263,13 @@ mod tests {
         server.shutdown();
         // Standalone forward, batch of 1 each (batch-size independent).
         let ctx = ConvContext::default();
-        let mut ws = crate::memory::Workspace::new();
+        let mut arena = crate::memory::Arena::new();
         for (s, resp) in samples.iter().zip(&responses) {
             let t = crate::tensor::Tensor::from_vec(
                 crate::tensor::Nhwc::new(1, 6, 6, 1),
                 s.clone(),
             );
-            let want = model.forward(&ctx, &t, &mut ws);
+            let want = model.forward(&ctx, &t, &mut arena);
             crate::util::assert_allclose(&resp.scores, want.data(), 1e-4, "server vs direct");
         }
     }

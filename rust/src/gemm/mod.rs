@@ -266,6 +266,41 @@ pub fn gemm_prepacked(a: MatRef<'_>, pb: &PackedB, c: &mut MatMut<'_>) {
     gemm_serial_inner(a, BSource::Packed(pb), c, 1.0, pb.bs);
 }
 
+/// `C = A × pb` with B pre-packed, parallelized over row panels of C —
+/// the plan-execute path of im2col (one big GEMM, kernel matrix packed
+/// once at plan time). Thread partitioning matches [`gemm_ex`] exactly
+/// (same row panels, same tile walk), so results are bit-identical to
+/// the raw-B path at any thread count.
+pub fn gemm_prepacked_ex(a: MatRef<'_>, pb: &PackedB, c: &mut MatMut<'_>, threads: usize) {
+    assert_eq!(a.cols, pb.k, "gemm_prepacked_ex: A cols vs packed B rows");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, pb.n);
+    if threads <= 1 {
+        gemm_prepacked(a, pb, c);
+        return;
+    }
+    let (m, k) = (a.rows, a.cols);
+    let n = pb.n;
+    if m == 0 || n == 0 {
+        return;
+    }
+    scale_c(c, 0.0);
+    let crs = c.rs;
+    let c_shared = crate::threadpool::SharedSlice::new(c.data);
+    let row_panels: Vec<(usize, usize)> = split_ranges(m, threads);
+    let nthreads = row_panels.len();
+    parallel_for(nthreads, nthreads, |t| {
+        let (r0, r1) = row_panels[t];
+        if r0 == r1 {
+            return;
+        }
+        let c_data: &mut [f32] = c_shared.slice();
+        let mut c_panel = MatMut::strided(&mut c_data[r0 * crs..], r1 - r0, n, crs);
+        let a_panel = a.sub(r0, r1 - r0, 0, k);
+        gemm_serial_inner(a_panel, BSource::Packed(pb), &mut c_panel, 1.0, pb.bs);
+    });
+}
+
 /// Batched `C[i] = A[i] × pb` with the batch loop INSIDE the (pc, jc)
 /// tile loops, so each packed-B tile is streamed from memory once and
 /// reused (warm) across all batch entries.
@@ -662,6 +697,38 @@ mod tests {
         }
         for (got, want) in c_bufs.iter().zip(&expected) {
             assert_allclose(got, want, 1e-4, "batched");
+        }
+    }
+
+    #[test]
+    fn prepacked_ex_matches_raw_gemm_bitwise() {
+        // The plan path (PackedB once, threaded execute) must be
+        // bit-identical to the one-shot raw-B path at any thread count.
+        let mut rng = Rng::new(123);
+        let (m, k, n) = (37, 29, 21);
+        let a = random_mat(&mut rng, m, k);
+        let b = random_mat(&mut rng, k, n);
+        let bs = BlockSizes { mc: 16, kc: 8, nc: 12 };
+        let mut want = vec![0.0; m * n];
+        gemm_ex(
+            MatRef::new(&a, m, k),
+            MatRef::new(&b, k, n),
+            &mut MatMut::new(&mut want, m, n),
+            1.0,
+            0.0,
+            1,
+            bs,
+        );
+        let pb = PackedB::pack(MatRef::new(&b, k, n), bs);
+        for threads in [1usize, 3, 8] {
+            let mut got = vec![0.5; m * n];
+            gemm_prepacked_ex(
+                MatRef::new(&a, m, k),
+                &pb,
+                &mut MatMut::new(&mut got, m, n),
+                threads,
+            );
+            assert_eq!(got, want, "threads={threads}");
         }
     }
 

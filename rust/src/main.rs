@@ -10,9 +10,9 @@
 //!             the coordinator, printing latency/throughput metrics.
 
 use mec::bench::workload::{by_name, suite};
-use mec::conv::{AlgoKind, ConvContext};
+use mec::conv::{AlgoKind, ConvContext, ConvPlan, Convolution};
 use mec::coordinator::{BatchPolicy, Server, ServerConfig};
-use mec::memory::{measure_peak, Budget, Workspace};
+use mec::memory::{measure_peak, Arena, Budget};
 use mec::model::load_mecw;
 use mec::planner::{AutoTuner, Planner};
 use mec::tensor::{Kernel, Tensor};
@@ -108,9 +108,12 @@ fn cmd_run(args: &mut Args) {
     let threads = args.opt_usize("threads", 1, "worker threads");
     let reps = args.opt_usize("reps", 3, "timed repetitions");
     args.finish();
-    let Some(kind) = AlgoKind::parse(&algo_s) else {
-        eprintln!("unknown algorithm {algo_s:?}");
-        std::process::exit(2);
+    let kind: AlgoKind = match algo_s.parse() {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
     };
     let algo = kind.build();
     if !algo.supports(&shape) {
@@ -123,24 +126,31 @@ fn cmd_run(args: &mut Args) {
     let kernel = Kernel::random(shape.kernel, &mut rng);
     let mut out = Tensor::zeros(shape.output());
 
+    // Plan once (model-load cost), then measure steady-state executes
+    // against a planner-sized arena — the serving hot path.
+    let t_plan = Instant::now();
+    let plan = algo.plan(&ctx, &shape, &kernel);
+    let plan_ns = t_plan.elapsed().as_nanos() as f64;
     let ((), peak) = measure_peak(|| {
-        let mut ws = Workspace::new();
-        algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
+        let mut arena = Arena::with_capacity(plan.workspace_elems());
+        plan.execute(&input, &mut arena, &mut out);
     });
-    let mut ws = Workspace::new();
-    algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out); // warm
+    let mut arena = Arena::with_capacity(plan.workspace_elems());
+    plan.execute(&input, &mut arena, &mut out); // warm
     let mut best = f64::INFINITY;
     for _ in 0..reps.max(1) {
         let t0 = Instant::now();
-        algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
+        plan.execute(&input, &mut arena, &mut out);
         best = best.min(t0.elapsed().as_nanos() as f64);
     }
     println!("layer    : {}", shape.describe());
     println!("algorithm: {}", algo.name());
-    println!("runtime  : {} (best of {reps}, {threads} threads)", fmt_ns(best));
+    println!("plan     : {} (one-time: dispatch + kernel prepack/transform)", fmt_ns(plan_ns));
+    println!("execute  : {} (best of {reps}, {threads} threads, plan-amortized)", fmt_ns(best));
     println!(
-        "overhead : measured {} / analytic {}",
+        "overhead : measured {} / plan layout {} / analytic {}",
         fmt_bytes(peak),
+        fmt_bytes(plan.workspace_bytes()),
         fmt_bytes(algo.workspace_bytes(&shape))
     );
     println!("gflops   : {:.2}", shape.flops() as f64 / best);
@@ -186,14 +196,15 @@ fn cmd_tune(args: &mut Args) {
     args.finish();
     let tuner = AutoTuner::new();
     let ctx = ConvContext::default().with_threads(threads);
-    println!("measuring on {} ...", shape.describe());
+    println!("measuring on {} (plan-amortized) ...", shape.describe());
     let mut ms = tuner.measure_all(&shape, &budget, &ctx);
     ms.sort_by(|a, b| a.median_ns.partial_cmp(&b.median_ns).unwrap());
     for m in &ms {
         println!(
-            "  {:<10} {:>12}  workspace={}",
+            "  {:<10} execute {:>12}  plan {:>12}  workspace={}",
             m.algo.name(),
             fmt_ns(m.median_ns),
+            fmt_ns(m.plan_ns),
             fmt_bytes(m.workspace_bytes)
         );
     }
@@ -230,6 +241,10 @@ fn cmd_serve(args: &mut Args) {
             .map(|(i, a)| format!("L{i}:{}", a.name()))
             .collect::<Vec<_>>()
     );
+    println!(
+        "shared arena: {} per worker (max over planned layers, not sum)",
+        fmt_bytes(model.planned_workspace_bytes())
+    );
     let (h, w, c) = model.input_hwc;
     let server = Server::start(
         Arc::new(model),
@@ -248,7 +263,7 @@ fn cmd_serve(args: &mut Args) {
         rng.fill_uniform(&mut sample, 0.0, 1.0);
         match client.submit(sample) {
             Ok(rx) => pending.push(rx),
-            Err(e) => log::warn!("request rejected: {e}"),
+            Err(e) => mec::log_warn!("request rejected: {e}"),
         }
     }
     let mut served = 0;

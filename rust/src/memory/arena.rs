@@ -1,0 +1,211 @@
+//! Shared workspace arena + named workspace layouts — the memory side of
+//! the plan/execute split (see `ARCHITECTURE.md`).
+//!
+//! A [`ConvPlan`](crate::conv::ConvPlan) computes, at plan time, a
+//! [`WorkspaceLayout`]: the named scratch regions it will need at every
+//! `execute`, as offsets into **one** buffer. The planner then sizes a
+//! single [`Arena`] per model at the **max** (not the sum) of the
+//! per-layer totals — layers execute sequentially, so they can all share
+//! the same bytes. That is exactly the paper's memory-overhead metric
+//! (Fig. 4b/4e) applied to a whole network instead of one layer.
+//!
+//! Like [`Workspace`](super::Workspace), the arena records its growth in
+//! the global [`tracker`](super::tracker), so tests and benches can assert
+//! the whole-model peak equals the analytic max.
+
+use super::tracker;
+
+/// One named region inside a workspace buffer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Region {
+    pub name: &'static str,
+    /// Offset in floats from the start of the buffer.
+    pub offset: usize,
+    /// Length in floats.
+    pub elems: usize,
+}
+
+/// A plan's scratch-memory map: named regions at fixed offsets in a single
+/// buffer. Regions are contiguous in declaration order.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct WorkspaceLayout {
+    regions: Vec<Region>,
+    total: usize,
+}
+
+impl WorkspaceLayout {
+    pub fn new() -> WorkspaceLayout {
+        WorkspaceLayout::default()
+    }
+
+    /// Append a region of `elems` floats; returns its index (stable — the
+    /// plan uses it to address the slice returned by [`Self::split`]).
+    pub fn push(&mut self, name: &'static str, elems: usize) -> usize {
+        let idx = self.regions.len();
+        self.regions.push(Region {
+            name,
+            offset: self.total,
+            elems,
+        });
+        self.total += elems;
+        idx
+    }
+
+    /// Total floats across all regions — the plan's workspace requirement.
+    pub fn total_elems(&self) -> usize {
+        self.total
+    }
+
+    /// Total bytes.
+    pub fn total_bytes(&self) -> usize {
+        self.total * std::mem::size_of::<f32>()
+    }
+
+    pub fn regions(&self) -> &[Region] {
+        &self.regions
+    }
+
+    /// Look up a region by name (diagnostics / tests).
+    pub fn region(&self, name: &str) -> Option<&Region> {
+        self.regions.iter().find(|r| r.name == name)
+    }
+
+    /// Split a scratch buffer into the per-region slices, in declaration
+    /// order. `buf` must hold at least [`Self::total_elems`] floats.
+    pub fn split<'a>(&self, buf: &'a mut [f32]) -> Vec<&'a mut [f32]> {
+        assert!(
+            buf.len() >= self.total,
+            "workspace buffer {} floats < layout total {}",
+            buf.len(),
+            self.total
+        );
+        let mut out = Vec::with_capacity(self.regions.len());
+        let mut rest = buf;
+        for r in &self.regions {
+            let (head, tail) = rest.split_at_mut(r.elems);
+            out.push(head);
+            rest = tail;
+        }
+        out
+    }
+}
+
+/// A tracked, growable scratch buffer shared by every planned layer of a
+/// model. Sized once (high-water) by the planner; the serving hot path
+/// never grows it. Growth and release are recorded in the global tracker.
+#[derive(Debug, Default)]
+pub struct Arena {
+    buf: Vec<f32>,
+}
+
+impl Arena {
+    /// Empty arena (no tracked bytes).
+    pub fn new() -> Arena {
+        Arena { buf: Vec::new() }
+    }
+
+    /// Arena pre-sized to `elems` floats (the planner's sizing path).
+    pub fn with_capacity(elems: usize) -> Arena {
+        let mut a = Arena::new();
+        a.reserve(elems);
+        a
+    }
+
+    /// Ensure capacity for `elems` floats, growing (and recording) if
+    /// needed. Never shrinks.
+    pub fn reserve(&mut self, elems: usize) {
+        if elems > self.buf.len() {
+            let grow = elems - self.buf.len();
+            tracker::track_alloc(grow * 4);
+            self.buf.resize(elems, 0.0);
+        }
+    }
+
+    /// Borrow the first `elems` floats. Contents are stale (whatever the
+    /// previous frame left) — plans fully overwrite what they read, which
+    /// is why this is not zero-filled.
+    pub fn slice(&mut self, elems: usize) -> &mut [f32] {
+        self.reserve(elems);
+        &mut self.buf[..elems]
+    }
+
+    /// Current capacity in floats.
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Current capacity in bytes — the arena's tracked footprint.
+    pub fn bytes(&self) -> usize {
+        self.buf.len() * 4
+    }
+}
+
+impl Drop for Arena {
+    fn drop(&mut self) {
+        tracker::track_free(self.buf.len() * 4);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::current_bytes;
+
+    #[test]
+    fn layout_offsets_are_contiguous() {
+        let mut l = WorkspaceLayout::new();
+        let a = l.push("lowered", 10);
+        let b = l.push("aux", 5);
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(l.total_elems(), 15);
+        assert_eq!(l.total_bytes(), 60);
+        assert_eq!(l.region("aux").unwrap().offset, 10);
+        assert!(l.region("nope").is_none());
+    }
+
+    #[test]
+    fn layout_split_is_disjoint_and_ordered() {
+        let mut l = WorkspaceLayout::new();
+        l.push("a", 3);
+        l.push("b", 2);
+        let mut buf = vec![0.0f32; 6]; // one spare float beyond the layout
+        let parts = l.split(&mut buf);
+        assert_eq!(parts.len(), 2);
+        assert_eq!((parts[0].len(), parts[1].len()), (3, 2));
+        parts.into_iter().flatten().for_each(|v| *v = 1.0);
+        assert_eq!(buf[..5], [1.0; 5]);
+        assert_eq!(buf[5], 0.0);
+    }
+
+    #[test]
+    fn empty_layout_splits_to_nothing() {
+        let l = WorkspaceLayout::new();
+        let mut buf: Vec<f32> = Vec::new();
+        assert!(l.split(&mut buf).is_empty());
+        assert_eq!(l.total_elems(), 0);
+    }
+
+    #[test]
+    fn arena_tracks_growth_and_release() {
+        let before = current_bytes();
+        {
+            let mut a = Arena::with_capacity(100);
+            assert_eq!(current_bytes(), before + 400);
+            let _ = a.slice(50); // no growth
+            assert_eq!(current_bytes(), before + 400);
+            a.reserve(200); // grows by 100 floats
+            assert_eq!(current_bytes(), before + 800);
+            assert_eq!(a.capacity(), 200);
+            assert_eq!(a.bytes(), 800);
+        }
+        assert_eq!(current_bytes(), before);
+    }
+
+    #[test]
+    fn arena_slice_preserves_contents() {
+        let mut a = Arena::new();
+        a.slice(4).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        // Not zeroed on re-borrow: plans rely on overwrite semantics.
+        assert_eq!(a.slice(4), &[1.0, 2.0, 3.0, 4.0]);
+    }
+}

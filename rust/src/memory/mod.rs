@@ -11,11 +11,17 @@
 //! * [`Workspace`] — a tracked, reusable scratch allocation handed to the
 //!   conv algorithms (mirrors cuDNN's explicit workspace API, which is the
 //!   deployment model for memory-constrained devices the paper targets).
+//! * [`Arena`] / [`WorkspaceLayout`] — the plan/execute split's memory
+//!   model: each `ConvPlan` emits a layout of named offsets into a single
+//!   buffer, and one arena sized at the max over planned layers serves the
+//!   whole model (see `ARCHITECTURE.md`).
 //! * [`Budget`] — an enforced cap used by the planner to reject algorithms
 //!   whose workspace would exceed the device budget.
 
+pub mod arena;
 pub mod tracker;
 
+pub use arena::{Arena, Region, WorkspaceLayout};
 pub use tracker::{current_bytes, peak_bytes, MeasureScope};
 
 use std::sync::atomic::Ordering;
@@ -63,6 +69,16 @@ impl Workspace {
     /// Borrow the first `elems` floats without zeroing (for full-overwrite
     /// consumers like the lowering loops).
     pub fn take(&mut self, elems: usize) -> &mut [f32] {
+        self.take_uninit(elems)
+    }
+
+    /// Explicitly-named non-zeroing accessor: the returned slice holds
+    /// stale contents from previous calls. Use only when every element is
+    /// written before being read — true for the im2col/MEC lowering
+    /// buffers and all plan workspaces, and worth it: `take_zeroed` on
+    /// cv4's lowered matrix would write ~150 MB of zeros per call for
+    /// nothing.
+    pub fn take_uninit(&mut self, elems: usize) -> &mut [f32] {
         self.reserve(elems);
         &mut self.buf[..elems]
     }
@@ -104,12 +120,23 @@ pub struct Budget {
 }
 
 /// Error returned when a requested workspace exceeds the budget.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
-#[error("workspace of {requested} B exceeds memory budget of {limit} B")]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BudgetExceeded {
     pub requested: usize,
     pub limit: usize,
 }
+
+impl std::fmt::Display for BudgetExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "workspace of {} B exceeds memory budget of {} B",
+            self.requested, self.limit
+        )
+    }
+}
+
+impl std::error::Error for BudgetExceeded {}
 
 impl Budget {
     pub fn new(limit_bytes: usize) -> Budget {
@@ -186,6 +213,15 @@ mod tests {
         let mut w = Workspace::new();
         w.take(4).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
         assert_eq!(w.take_zeroed(4), &[0.0; 4]);
+    }
+
+    #[test]
+    fn take_uninit_does_not_zero() {
+        let mut w = Workspace::new();
+        w.take_uninit(4).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        // Stale contents survive — the full-overwrite contract.
+        assert_eq!(w.take_uninit(4), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(w.take(2), &[1.0, 2.0]);
     }
 
     #[test]

@@ -1,18 +1,30 @@
 //! The model graph + forward executor.
 //!
-//! Convolutions are planned per layer (once, at load) by the
-//! [`Planner`](crate::planner::Planner) under the device [`Budget`]; the
-//! chosen algorithm and its workspace are reused for every request — the
-//! hot path performs no allocation beyond first-call workspace growth.
+//! Convolutions are planned per layer (once, at load): the
+//! [`Planner`](crate::planner::Planner) picks the algorithm under the
+//! device [`Budget`], then [`Convolution::plan`] prepacks the layer's
+//! kernel and fixes its [`WorkspaceLayout`](crate::memory::WorkspaceLayout). The resulting
+//! [`ConvPlan`]s are held by the model and reused for every request —
+//! the hot path performs no kernel repacking, no filter transforms, and
+//! no workspace allocation: all layers execute out of one shared
+//! [`Arena`] sized at the **max** (not the sum) of the per-layer
+//! workspaces.
+//!
+//! Dynamic batching can present batch sizes other than the planned one;
+//! plans for those geometries are built lazily on first sight and cached
+//! (cuDNN-graph style: one executable per shape).
 
-use crate::conv::{AlgoKind, ConvContext, Convolution};
+use crate::conv::{AlgoKind, ConvContext, ConvPlan, Convolution};
 use crate::gemm::{gemm_ex, MatMut, MatRef};
-use crate::memory::{Budget, Workspace};
+use crate::memory::{Arena, Budget};
 use crate::model::layer::Layer;
 use crate::planner::Planner;
 use crate::tensor::{ConvShape, Nhwc, Tensor};
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
 
-/// A sequential CNN with planned convolution algorithms.
+/// A sequential CNN with planned convolution algorithms and prepacked
+/// per-layer [`ConvPlan`]s.
 pub struct Model {
     pub name: String,
     /// Spatial input shape per sample (h, w, c); batch dim comes from the
@@ -21,7 +33,27 @@ pub struct Model {
     pub layers: Vec<Layer>,
     /// Chosen conv algorithm per layer index (None for non-conv layers).
     plans: Vec<Option<AlgoKind>>,
+    /// Prepared plans keyed by (layer index, exact conv geometry). The
+    /// planned batch size is populated eagerly by [`Model::plan`]; other
+    /// batch sizes (dynamic batching remainders) fill in lazily.
+    plan_cache: RwLock<HashMap<(usize, ConvShape), Arc<dyn ConvPlan>>>,
+    /// Shared-arena requirement at the planned batch: max over planned
+    /// conv layers of `ConvPlan::workspace_elems`.
+    planned_ws_elems: usize,
+    /// The context [`Model::plan`] ran under. Lazily-built plans (other
+    /// batch sizes) reuse it, so every conv layer executes under ONE
+    /// consistent context regardless of batch size; `forward`'s ctx then
+    /// only affects non-conv layers. `None` until planned (or after
+    /// `pin_algo`): plans build under the caller's forward context.
+    planned_ctx: Option<ConvContext>,
 }
+
+/// Cap on cached geometries per conv layer: the planned batch size plus
+/// a handful of dynamic-batching remainders. Beyond this, plans for
+/// unusual batch sizes are built transiently (executed, not cached) so
+/// serving memory stays bounded — each cached plan holds its own
+/// prepacked kernel operands.
+const MAX_CACHED_GEOMETRIES_PER_LAYER: usize = 8;
 
 impl Model {
     pub fn new(name: &str, input_hwc: (usize, usize, usize), layers: Vec<Layer>) -> Model {
@@ -31,6 +63,9 @@ impl Model {
             input_hwc,
             layers,
             plans,
+            plan_cache: RwLock::new(HashMap::new()),
+            planned_ws_elems: 0,
+            planned_ctx: None,
         }
     }
 
@@ -55,11 +90,18 @@ impl Model {
         self.layers.iter().map(|l| l.param_count()).sum()
     }
 
-    /// Plan every conv layer under `budget` for batch size `batch`
-    /// (the planner sees the true batched geometry).
+    /// Plan every conv layer under `budget` for batch size `batch`: the
+    /// planner picks the algorithm on the true batched geometry, then the
+    /// algorithm prepacks the layer's kernel into a reusable
+    /// [`ConvPlan`]. Also sizes the shared arena (max over layers).
     pub fn plan(&mut self, planner: &Planner, budget: &Budget, ctx: &ConvContext, batch: usize) {
+        self.plan_cache.write().unwrap().clear();
+        self.planned_ws_elems = 0;
+        self.planned_ctx = Some(ctx.clone());
         let (h, w, c) = self.input_hwc;
         let mut shape = Nhwc::new(batch.max(1), h, w, c);
+        let mut max_ws = 0usize;
+        let mut prepared: Vec<((usize, ConvShape), Arc<dyn ConvPlan>)> = Vec::new();
         for (i, layer) in self.layers.iter().enumerate() {
             if let Layer::Conv {
                 kernel, sh, sw, ph, pw, ..
@@ -67,14 +109,25 @@ impl Model {
             {
                 let padded = Nhwc::new(shape.n, shape.h + 2 * ph, shape.w + 2 * pw, shape.c);
                 let cs = ConvShape::new(padded, kernel.shape(), *sh, *sw);
-                self.plans[i] = Some(planner.plan(&cs, budget, ctx).algo);
+                let chosen = planner.plan(&cs, budget, ctx).algo;
+                self.plans[i] = Some(chosen);
+                let conv_plan: Arc<dyn ConvPlan> =
+                    Arc::from(chosen.build().plan(ctx, &cs, kernel));
+                max_ws = max_ws.max(conv_plan.workspace_elems());
+                prepared.push(((i, cs), conv_plan));
             }
             shape = layer.output_shape(shape);
         }
+        self.plan_cache.write().unwrap().extend(prepared);
+        self.planned_ws_elems = max_ws;
     }
 
     /// Pin a single algorithm for all conv layers (benchmark mode).
+    /// Invalidates any prepared plans; they rebuild lazily.
     pub fn pin_algo(&mut self, algo: AlgoKind) {
+        self.plan_cache.write().unwrap().clear();
+        self.planned_ws_elems = 0;
+        self.planned_ctx = None;
         for (i, layer) in self.layers.iter().enumerate() {
             if matches!(layer, Layer::Conv { .. }) {
                 self.plans[i] = Some(algo);
@@ -91,12 +144,73 @@ impl Model {
             .collect()
     }
 
+    /// Workspace bytes per prepared conv layer (layer index, bytes) —
+    /// the quantities whose **max** sizes the shared arena.
+    pub fn planned_layer_workspaces(&self) -> Vec<(usize, usize)> {
+        let cache = self.plan_cache.read().unwrap();
+        let mut out: Vec<(usize, usize)> = cache
+            .iter()
+            .map(|((i, _), p)| (*i, p.workspace_bytes()))
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Shared-arena floats required at the planned batch size (0 if
+    /// [`Model::plan`] has not run — the arena then grows on demand).
+    pub fn planned_workspace_elems(&self) -> usize {
+        self.planned_ws_elems
+    }
+
+    /// Same in bytes.
+    pub fn planned_workspace_bytes(&self) -> usize {
+        self.planned_ws_elems * std::mem::size_of::<f32>()
+    }
+
+    /// An [`Arena`] pre-sized for this model's planned layers — what each
+    /// serving worker owns. Peak tracked bytes of a forward pass through
+    /// it equal the max (not the sum) of per-layer workspaces.
+    pub fn sized_arena(&self) -> Arena {
+        Arena::with_capacity(self.planned_ws_elems)
+    }
+
+    /// Fetch (or lazily build) the prepared plan for conv layer `idx` on
+    /// geometry `cs`.
+    fn plan_for(
+        &self,
+        idx: usize,
+        cs: &ConvShape,
+        ctx: &ConvContext,
+        kernel: &crate::tensor::Kernel,
+    ) -> Arc<dyn ConvPlan> {
+        let key = (idx, *cs);
+        if let Some(p) = self.plan_cache.read().unwrap().get(&key) {
+            return Arc::clone(p);
+        }
+        // Build under the planning context so cached and lazily-built
+        // plans agree on threads / MEC T / FFT cache cap.
+        let build_ctx = self.planned_ctx.as_ref().unwrap_or(ctx);
+        let algo = self.plans[idx].unwrap_or(AlgoKind::Mec);
+        let built: Arc<dyn ConvPlan> = Arc::from(algo.build().plan(build_ctx, cs, kernel));
+        let mut cache = self.plan_cache.write().unwrap();
+        if !cache.contains_key(&key)
+            && cache.keys().filter(|(i, _)| *i == idx).count() >= MAX_CACHED_GEOMETRIES_PER_LAYER
+        {
+            // Bounded cache: execute this one transiently instead of
+            // holding yet another prepacked copy per odd batch size.
+            return built;
+        }
+        Arc::clone(cache.entry(key).or_insert(built))
+    }
+
     /// Run a forward pass on a batch. Returns the final activation
-    /// (logits or probabilities, depending on the last layer).
-    pub fn forward(&self, ctx: &ConvContext, batch: &Tensor, ws: &mut Workspace) -> Tensor {
+    /// (logits or probabilities, depending on the last layer). All conv
+    /// layers execute out of `arena`; after the first pass at a given
+    /// batch size the hot path performs no tracked allocation.
+    pub fn forward(&self, ctx: &ConvContext, batch: &Tensor, arena: &mut Arena) -> Tensor {
         let mut x = batch.clone();
         for (i, layer) in self.layers.iter().enumerate() {
-            x = self.forward_layer(i, layer, ctx, x, ws);
+            x = self.forward_layer(i, layer, ctx, x, arena);
         }
         x
     }
@@ -107,7 +221,7 @@ impl Model {
         layer: &Layer,
         ctx: &ConvContext,
         x: Tensor,
-        ws: &mut Workspace,
+        arena: &mut Arena,
     ) -> Tensor {
         match layer {
             Layer::Conv {
@@ -119,11 +233,9 @@ impl Model {
                     x
                 };
                 let cs = ConvShape::new(padded.shape(), kernel.shape(), *sh, *sw);
-                let algo: Box<dyn Convolution> = self.plans[idx]
-                    .unwrap_or(AlgoKind::Mec)
-                    .build();
+                let plan = self.plan_for(idx, &cs, ctx, kernel);
                 let mut out = Tensor::zeros(cs.output());
-                algo.run(ctx, &cs, &padded, kernel, ws, &mut out);
+                plan.execute(&padded, arena, &mut out);
                 // Bias add (per output channel).
                 let kc = kernel.shape().kc;
                 for chunk in out.data_mut().chunks_exact_mut(kc) {
@@ -186,8 +298,8 @@ impl Model {
     }
 
     /// Argmax class per sample of the final activation.
-    pub fn predict(&self, ctx: &ConvContext, batch: &Tensor, ws: &mut Workspace) -> Vec<usize> {
-        let out = self.forward(ctx, batch, ws);
+    pub fn predict(&self, ctx: &ConvContext, batch: &Tensor, arena: &mut Arena) -> Vec<usize> {
+        let out = self.forward(ctx, batch, arena);
         let c = out.shape().c;
         out.data()
             .chunks_exact(c)
@@ -283,14 +395,16 @@ mod tests {
         );
         let mut rng = Rng::new(9);
         let batch = Tensor::random(Nhwc::new(2, 8, 8, 1), &mut rng);
-        let mut ws = Workspace::new();
-        let out = m.forward(&ConvContext::default(), &batch, &mut ws);
+        let mut arena = m.sized_arena();
+        let out = m.forward(&ConvContext::default(), &batch, &mut arena);
         assert_eq!(out.shape(), Nhwc::new(2, 1, 1, 3));
         for row in out.data().chunks_exact(3) {
             let sum: f32 = row.iter().sum();
             assert!((sum - 1.0).abs() < 1e-5, "softmax row sums to {sum}");
             assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)));
         }
+        // Planning sized the arena once; the pass must not have grown it.
+        assert_eq!(arena.bytes(), m.planned_workspace_bytes());
     }
 
     #[test]
@@ -299,11 +413,11 @@ mod tests {
         let mut rng = Rng::new(11);
         let batch = Tensor::random(Nhwc::new(3, 8, 8, 1), &mut rng);
         let ctx = ConvContext::default();
-        let mut ws = Workspace::new();
+        let mut arena = Arena::new();
         let mut outs = Vec::new();
         for algo in [AlgoKind::Direct, AlgoKind::Im2col, AlgoKind::Mec, AlgoKind::Winograd] {
             m.pin_algo(algo);
-            outs.push(m.forward(&ctx, &batch, &mut ws));
+            outs.push(m.forward(&ctx, &batch, &mut arena));
         }
         for o in &outs[1..] {
             crate::util::assert_allclose(o.data(), outs[0].data(), 1e-3, "algo equivalence");
@@ -316,7 +430,7 @@ mod tests {
         m.pin_algo(AlgoKind::Mec);
         let mut rng = Rng::new(13);
         let batch = Tensor::random(Nhwc::new(4, 8, 8, 1), &mut rng);
-        let preds = m.predict(&ConvContext::default(), &batch, &mut Workspace::new());
+        let preds = m.predict(&ConvContext::default(), &batch, &mut Arena::new());
         assert_eq!(preds.len(), 4);
         assert!(preds.iter().all(|&p| p < 3));
     }
@@ -341,5 +455,27 @@ mod tests {
         let summary = m.plan_summary();
         assert_eq!(summary.len(), 1);
         assert_eq!(summary[0].0, 0);
+        // The conv layer's plan is prepared eagerly and sizes the arena.
+        assert_eq!(m.planned_layer_workspaces().len(), 1);
+        assert_eq!(
+            m.planned_workspace_bytes(),
+            m.planned_layer_workspaces()[0].1
+        );
+    }
+
+    #[test]
+    fn repinning_invalidates_prepared_plans() {
+        let mut m = tiny_model();
+        m.pin_algo(AlgoKind::Im2col);
+        let mut rng = Rng::new(17);
+        let batch = Tensor::random(Nhwc::new(1, 8, 8, 1), &mut rng);
+        let ctx = ConvContext::default();
+        let mut arena = Arena::new();
+        let a = m.forward(&ctx, &batch, &mut arena);
+        // Re-pin to a different algorithm: stale plans must not be reused.
+        m.pin_algo(AlgoKind::Direct);
+        assert!(m.planned_layer_workspaces().is_empty());
+        let b = m.forward(&ctx, &batch, &mut arena);
+        crate::util::assert_allclose(a.data(), b.data(), 1e-4, "repin equivalence");
     }
 }

@@ -23,16 +23,38 @@ use std::path::Path;
 
 pub const MAGIC: &[u8; 8] = b"MECW0001";
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LoadError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("bad magic (not a .mecw file)")]
+    Io(std::io::Error),
     BadMagic,
-    #[error("unknown layer tag {0}")]
     UnknownTag(u32),
-    #[error("malformed file: {0}")]
     Malformed(String),
+}
+
+impl std::fmt::Display for LoadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LoadError::Io(e) => write!(f, "io error: {e}"),
+            LoadError::BadMagic => write!(f, "bad magic (not a .mecw file)"),
+            LoadError::UnknownTag(t) => write!(f, "unknown layer tag {t}"),
+            LoadError::Malformed(m) => write!(f, "malformed file: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for LoadError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LoadError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for LoadError {
+    fn from(e: std::io::Error) -> LoadError {
+        LoadError::Io(e)
+    }
 }
 
 struct Reader<R: Read> {

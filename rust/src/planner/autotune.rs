@@ -2,10 +2,15 @@
 //! real geometry, cache the winner per shape. This is what frameworks do
 //! at model-load time (cuDNN's `FindAlgorithm` vs `GetAlgorithm`), and it
 //! subsumes cost-model error at the price of a one-time measurement.
+//!
+//! Measurement is **plan-amortized**: each candidate is planned once
+//! (prepacking measured separately as `plan_ns`) and timed on repeated
+//! `execute` calls against a pre-sized arena — the steady-state serving
+//! cost, which is what the tuner should be ranking.
 
 use super::{Plan, Planner};
-use crate::conv::{AlgoKind, ConvContext};
-use crate::memory::{Budget, Workspace};
+use crate::conv::{AlgoKind, ConvContext, ConvPlan, Convolution};
+use crate::memory::{Arena, Budget};
 use crate::tensor::{ConvShape, Kernel, Tensor};
 use crate::util::Rng;
 use std::collections::HashMap;
@@ -16,6 +21,9 @@ use std::time::Instant;
 pub struct Measurement {
     pub algo: AlgoKind,
     pub workspace_bytes: usize,
+    /// One-time cost of building the plan (prepack/transform).
+    pub plan_ns: f64,
+    /// Median steady-state execute time.
     pub median_ns: f64,
 }
 
@@ -36,7 +44,8 @@ impl AutoTuner {
         }
     }
 
-    /// Measure every admissible algorithm on `shape` (random data).
+    /// Measure every admissible algorithm on `shape` (random data):
+    /// plan once, warm once, then time `reps` executes.
     pub fn measure_all(
         &self,
         shape: &ConvShape,
@@ -48,21 +57,25 @@ impl AutoTuner {
         let kernel = Kernel::random(shape.kernel, &mut rng);
         let mut out = Tensor::zeros(shape.output());
         let mut results = Vec::new();
-        for plan in self.planner.admissible(shape, budget) {
-            let algo = plan.algo.build();
-            let mut ws = Workspace::new();
-            // Warmup (allocates workspace, faults pages).
-            algo.run(ctx, shape, &input, &kernel, &mut ws, &mut out);
+        for candidate in self.planner.admissible(shape, budget) {
+            let algo = candidate.algo.build();
+            let t_plan = Instant::now();
+            let plan = algo.plan(ctx, shape, &kernel);
+            let plan_ns = t_plan.elapsed().as_nanos() as f64;
+            let mut arena = Arena::with_capacity(plan.workspace_elems());
+            // Warmup (faults pages, fills caches).
+            plan.execute(&input, &mut arena, &mut out);
             let mut times: Vec<f64> = Vec::with_capacity(self.reps);
             for _ in 0..self.reps {
                 let t0 = Instant::now();
-                algo.run(ctx, shape, &input, &kernel, &mut ws, &mut out);
+                plan.execute(&input, &mut arena, &mut out);
                 times.push(t0.elapsed().as_nanos() as f64);
             }
             times.sort_by(|a, b| a.partial_cmp(b).unwrap());
             results.push(Measurement {
-                algo: plan.algo,
-                workspace_bytes: plan.workspace_bytes,
+                algo: candidate.algo,
+                workspace_bytes: candidate.workspace_bytes,
+                plan_ns,
                 median_ns: times[times.len() / 2],
             });
         }
@@ -117,6 +130,9 @@ mod tests {
         // direct, im2col, mec, winograd, fft all support this shape.
         assert_eq!(ms.len(), 5);
         assert!(ms.iter().all(|m| m.median_ns > 0.0));
+        // Plan time is measured for every candidate (zero-work plans like
+        // direct may round to ~0, but the field must be populated ≥ 0).
+        assert!(ms.iter().all(|m| m.plan_ns >= 0.0));
     }
 
     #[test]

@@ -16,9 +16,9 @@ pub mod autotune;
 
 pub use autotune::AutoTuner;
 
-use crate::conv::{AlgoKind, ConvContext};
+use crate::conv::{AlgoKind, ConvContext, ConvPlan, Convolution};
 use crate::memory::Budget;
-use crate::tensor::ConvShape;
+use crate::tensor::{ConvShape, Kernel};
 
 /// The outcome of planning one convolution.
 #[derive(Debug, Clone, PartialEq)]
@@ -61,6 +61,36 @@ impl Default for CostModel {
 }
 
 impl CostModel {
+    /// One-time plan cost of `algo` on `shape`: kernel packing, filter
+    /// transforms, kernel spectra. Paid at model load, amortized across
+    /// every `execute` — the planner ranks by [`Self::estimate_ns`]
+    /// (steady-state) and reports this separately.
+    pub fn estimate_plan_ns(&self, algo: AlgoKind, shape: &ConvShape) -> f64 {
+        let k = shape.kernel;
+        let kernel_bytes = (k.len() * 4) as f64;
+        match algo {
+            AlgoKind::Direct => 0.0,
+            // PackedB::pack: one read + one write of the kernel matrix.
+            AlgoKind::Im2col
+            | AlgoKind::Mec
+            | AlgoKind::MecSolutionA
+            | AlgoKind::MecSolutionB => 2.0 * kernel_bytes * self.ns_per_byte_moved,
+            // U = G g Gᵀ per (i, o): ~32 mul-adds each, plus (chunked)
+            // the 16 transpose+pack copies.
+            AlgoKind::Winograd | AlgoKind::WinogradChunked => {
+                let u_elems = (16 * k.kc * k.ic) as f64;
+                32.0 * (k.kc * k.ic) as f64 * self.ns_per_mac
+                    + 4.0 * u_elems * self.ns_per_byte_moved
+            }
+            // One padded 2-D FFT per (i, o) kernel slice.
+            AlgoKind::Fft => {
+                let (ph, pw) = crate::conv::fft_conv::fft_grid(shape);
+                let grid = (ph * pw) as f64;
+                (k.ic * k.kc) as f64 * grid * grid.log2().max(1.0) * self.ns_per_butterfly
+            }
+        }
+    }
+
     /// Estimate runtime of `algo` on `shape` (single thread; the planner
     /// divides by an efficiency-discounted thread count).
     pub fn estimate_ns(&self, algo: AlgoKind, shape: &ConvShape) -> f64 {
@@ -173,6 +203,20 @@ impl Planner {
         }
         best.expect("direct always admissible")
     }
+
+    /// Plan straight to an executable [`ConvPlan`]: pick the algorithm
+    /// under the budget, then prepack `kernel` for it. This is what
+    /// `Model::plan` runs per conv layer at load time.
+    pub fn plan_conv(
+        &self,
+        shape: &ConvShape,
+        budget: &Budget,
+        ctx: &ConvContext,
+        kernel: &Kernel,
+    ) -> Box<dyn ConvPlan> {
+        let chosen = self.plan(shape, budget, ctx);
+        chosen.algo.build().plan(ctx, shape, kernel)
+    }
 }
 
 #[cfg(test)]
@@ -241,6 +285,35 @@ mod tests {
         let cm = CostModel::default();
         let shape = cv6();
         assert!(cm.estimate_ns(AlgoKind::Mec, &shape) < cm.estimate_ns(AlgoKind::Im2col, &shape));
+    }
+
+    #[test]
+    fn plan_conv_returns_executable_plan_within_budget() {
+        let p = Planner::new();
+        let shape = cv6();
+        let kernel = crate::tensor::Kernel::zeros(shape.kernel);
+        let budget = Budget::new(AlgoKind::Mec.build().workspace_bytes(&shape));
+        let plan = p.plan_conv(&shape, &budget, &ConvContext::default(), &kernel);
+        assert!(plan.workspace_bytes() <= budget.limit());
+        assert_eq!(plan.shape(), &shape);
+    }
+
+    #[test]
+    fn plan_time_is_one_time_cost_only() {
+        let cm = CostModel::default();
+        let shape = cv6();
+        // Direct has nothing to prepack; everyone else pays something,
+        // and plan cost must be far below a single execute.
+        assert_eq!(cm.estimate_plan_ns(AlgoKind::Direct, &shape), 0.0);
+        for algo in [AlgoKind::Im2col, AlgoKind::Mec, AlgoKind::Winograd, AlgoKind::Fft] {
+            let plan_ns = cm.estimate_plan_ns(algo, &shape);
+            assert!(plan_ns > 0.0, "{algo:?}");
+            assert!(
+                plan_ns < cm.estimate_ns(algo, &shape),
+                "{algo:?}: plan {plan_ns} should amortize vs execute {}",
+                cm.estimate_ns(algo, &shape)
+            );
+        }
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! name=conv_cv6 file=conv_cv6.hlo.txt inputs=1,12,12,256;3,3,256,512 outputs=1,10,10,512
 //! ```
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One artifact entry.
@@ -65,18 +65,18 @@ impl Manifest {
             let mut outputs = Vec::new();
             for field in line.split_whitespace() {
                 let Some((k, v)) = field.split_once('=') else {
-                    bail!("manifest line {}: bad field {:?}", lineno + 1, field);
+                    crate::bail!("manifest line {}: bad field {:?}", lineno + 1, field);
                 };
                 match k {
                     "name" => name = Some(v.to_string()),
                     "file" => file = Some(v.to_string()),
                     "inputs" => inputs = parse_shapes(v)?,
                     "outputs" => outputs = parse_shapes(v)?,
-                    _ => bail!("manifest line {}: unknown key {:?}", lineno + 1, k),
+                    _ => crate::bail!("manifest line {}: unknown key {:?}", lineno + 1, k),
                 }
             }
             let (Some(name), Some(file)) = (name, file) else {
-                bail!("manifest line {}: missing name/file", lineno + 1);
+                crate::bail!("manifest line {}: missing name/file", lineno + 1);
             };
             artifacts.push(Artifact {
                 name,

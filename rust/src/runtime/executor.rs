@@ -1,12 +1,13 @@
-//! The two execution backends behind one trait: the native rust engine
-//! (conv algorithms + planner) and the PJRT path (AOT JAX/Pallas HLO).
+//! The execution backends behind one trait: the native rust engine
+//! (planned model — prepacked ConvPlans + shared arena) and, behind the
+//! `pjrt` feature, the PJRT path (AOT JAX/Pallas HLO).
 //! `examples/serve_cnn.rs` cross-checks them numerically.
 
 use crate::conv::ConvContext;
-use crate::memory::Workspace;
+use crate::memory::Arena;
 use crate::model::Model;
-use crate::tensor::{Nhwc, Tensor};
-use anyhow::Result;
+use crate::tensor::Tensor;
+use crate::util::error::Result;
 
 /// A batched forward executor: NHWC batch in, (n × classes) scores out.
 ///
@@ -23,20 +24,25 @@ pub trait Executor {
     fn output_features(&self) -> usize;
 }
 
-/// Native engine executor over a planned [`Model`].
+/// Native engine executor over a planned [`Model`]: holds the shared
+/// arena the planner sized, executes the model's prepacked plans.
 pub struct NativeExecutor {
     pub model: std::sync::Arc<Model>,
     pub ctx: ConvContext,
-    ws: Workspace,
+    arena: Arena,
 }
 
 impl NativeExecutor {
     pub fn new(model: std::sync::Arc<Model>, ctx: ConvContext) -> NativeExecutor {
-        NativeExecutor {
-            model,
-            ctx,
-            ws: Workspace::new(),
-        }
+        // Pre-sized to the planned max; grows only if the model was
+        // never planned (then it high-waters on first batches).
+        let arena = model.sized_arena();
+        NativeExecutor { model, ctx, arena }
+    }
+
+    /// Tracked bytes of the executor's shared arena.
+    pub fn arena_bytes(&self) -> usize {
+        self.arena.bytes()
     }
 }
 
@@ -50,94 +56,12 @@ impl Executor for NativeExecutor {
     }
 
     fn forward(&mut self, batch: &Tensor) -> Result<Vec<f32>> {
-        let out = self.model.forward(&self.ctx, batch, &mut self.ws);
+        let out = self.model.forward(&self.ctx, batch, &mut self.arena);
         Ok(out.into_vec())
     }
 
     fn output_features(&self) -> usize {
         self.model.output_features()
-    }
-}
-
-/// PJRT executor over a compiled artifact. The artifact was lowered for a
-/// fixed batch size (XLA staticness); callers must match it — the serve
-/// example pads the final partial batch.
-///
-/// Weights travel as runtime parameters, not baked constants: the pinned
-/// xla_extension 0.5.1 HLO-text parser silently mis-parses jax ≥0.8's
-/// multi-dimensional f32 constant literals (found by the cross-check
-/// test; see EXPERIMENTS.md §Findings). Input 0 is the image batch; the
-/// remaining manifest inputs are weights supplied via [`Self::with_weights`]
-/// or extracted from a loaded [`Model`] via [`model_weight_inputs`].
-pub struct PjrtExecutor {
-    computation: super::Computation,
-    hwc: (usize, usize, usize),
-    batch: usize,
-    features: usize,
-    weight_shapes: Vec<Vec<usize>>,
-    weights: Vec<Vec<f32>>,
-}
-
-impl PjrtExecutor {
-    /// Build from an engine + manifest entry named `name`: input 0 is the
-    /// NHWC image batch, inputs 1.. are weight tensors, single output
-    /// `n × f`.
-    pub fn from_artifact(
-        engine: &super::PjrtEngine,
-        manifest: &super::Manifest,
-        name: &str,
-    ) -> Result<PjrtExecutor> {
-        let art = manifest
-            .find(name)
-            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest"))?;
-        anyhow::ensure!(
-            !art.input_shapes.is_empty() && art.input_shapes[0].len() == 4,
-            "artifact {name:?}: expected NHWC input 0, got {:?}",
-            art.input_shapes
-        );
-        let ishape = &art.input_shapes[0];
-        let oshape = &art.output_shapes[0];
-        let computation = engine.load_hlo_text(&art.file)?;
-        Ok(PjrtExecutor {
-            computation,
-            hwc: (ishape[1], ishape[2], ishape[3]),
-            batch: ishape[0],
-            features: oshape.iter().skip(1).product(),
-            weight_shapes: art.input_shapes[1..].to_vec(),
-            weights: Vec::new(),
-        })
-    }
-
-    /// Supply the weight tensors (order/shape per the manifest).
-    pub fn with_weights(mut self, weights: Vec<Vec<f32>>) -> Result<PjrtExecutor> {
-        anyhow::ensure!(
-            weights.len() == self.weight_shapes.len(),
-            "expected {} weight tensors, got {}",
-            self.weight_shapes.len(),
-            weights.len()
-        );
-        for (w, s) in weights.iter().zip(&self.weight_shapes) {
-            let want: usize = s.iter().product();
-            anyhow::ensure!(w.len() == want, "weight shape {:?} vs {} elems", s, w.len());
-        }
-        self.weights = weights;
-        Ok(self)
-    }
-
-    /// The fixed batch size this executable was lowered for.
-    pub fn lowered_batch(&self) -> usize {
-        self.batch
-    }
-
-    fn run_batch(&self, data: &[f32], n: usize) -> Result<Vec<f32>> {
-        let (h, w, c) = self.hwc;
-        let xshape = [n, h, w, c];
-        let mut inputs: Vec<(&[f32], &[usize])> = Vec::with_capacity(1 + self.weights.len());
-        inputs.push((data, &xshape));
-        for (wv, ws) in self.weights.iter().zip(&self.weight_shapes) {
-            inputs.push((wv, ws));
-        }
-        self.computation.run_f32(&inputs)
     }
 }
 
@@ -161,6 +85,91 @@ pub fn model_weight_inputs(model: &Model) -> Vec<Vec<f32>> {
     out
 }
 
+/// PJRT executor over a compiled artifact. The artifact was lowered for a
+/// fixed batch size (XLA staticness); callers must match it — the serve
+/// example pads the final partial batch.
+///
+/// Weights travel as runtime parameters, not baked constants: the pinned
+/// xla_extension 0.5.1 HLO-text parser silently mis-parses jax ≥0.8's
+/// multi-dimensional f32 constant literals (found by the cross-check
+/// test; see EXPERIMENTS.md §Findings). Input 0 is the image batch; the
+/// remaining manifest inputs are weights supplied via [`Self::with_weights`]
+/// or extracted from a loaded [`Model`] via [`model_weight_inputs`].
+#[cfg(feature = "pjrt")]
+pub struct PjrtExecutor {
+    computation: super::Computation,
+    hwc: (usize, usize, usize),
+    batch: usize,
+    features: usize,
+    weight_shapes: Vec<Vec<usize>>,
+    weights: Vec<Vec<f32>>,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtExecutor {
+    /// Build from an engine + manifest entry named `name`: input 0 is the
+    /// NHWC image batch, inputs 1.. are weight tensors, single output
+    /// `n × f`.
+    pub fn from_artifact(
+        engine: &super::PjrtEngine,
+        manifest: &super::Manifest,
+        name: &str,
+    ) -> Result<PjrtExecutor> {
+        let art = manifest
+            .find(name)
+            .ok_or_else(|| crate::format_err!("artifact {name:?} not in manifest"))?;
+        crate::ensure!(
+            !art.input_shapes.is_empty() && art.input_shapes[0].len() == 4,
+            "artifact {name:?}: expected NHWC input 0, got {:?}",
+            art.input_shapes
+        );
+        let ishape = &art.input_shapes[0];
+        let oshape = &art.output_shapes[0];
+        let computation = engine.load_hlo_text(&art.file)?;
+        Ok(PjrtExecutor {
+            computation,
+            hwc: (ishape[1], ishape[2], ishape[3]),
+            batch: ishape[0],
+            features: oshape.iter().skip(1).product(),
+            weight_shapes: art.input_shapes[1..].to_vec(),
+            weights: Vec::new(),
+        })
+    }
+
+    /// Supply the weight tensors (order/shape per the manifest).
+    pub fn with_weights(mut self, weights: Vec<Vec<f32>>) -> Result<PjrtExecutor> {
+        crate::ensure!(
+            weights.len() == self.weight_shapes.len(),
+            "expected {} weight tensors, got {}",
+            self.weight_shapes.len(),
+            weights.len()
+        );
+        for (w, s) in weights.iter().zip(&self.weight_shapes) {
+            let want: usize = s.iter().product();
+            crate::ensure!(w.len() == want, "weight shape {:?} vs {} elems", s, w.len());
+        }
+        self.weights = weights;
+        Ok(self)
+    }
+
+    /// The fixed batch size this executable was lowered for.
+    pub fn lowered_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn run_batch(&self, data: &[f32], n: usize) -> Result<Vec<f32>> {
+        let (h, w, c) = self.hwc;
+        let xshape = [n, h, w, c];
+        let mut inputs: Vec<(&[f32], &[usize])> = Vec::with_capacity(1 + self.weights.len());
+        inputs.push((data, &xshape));
+        for (wv, ws) in self.weights.iter().zip(&self.weight_shapes) {
+            inputs.push((wv, ws));
+        }
+        self.computation.run_f32(&inputs)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl Executor for PjrtExecutor {
     fn name(&self) -> &str {
         "pjrt"
@@ -171,9 +180,9 @@ impl Executor for PjrtExecutor {
     }
 
     fn forward(&mut self, batch: &Tensor) -> Result<Vec<f32>> {
-        let shape: Nhwc = batch.shape();
+        let shape: crate::tensor::Nhwc = batch.shape();
         let (h, w, c) = self.hwc;
-        anyhow::ensure!(
+        crate::ensure!(
             (shape.h, shape.w, shape.c) == (h, w, c),
             "batch hwc {:?} vs lowered {:?}",
             (shape.h, shape.w, shape.c),
@@ -183,7 +192,7 @@ impl Executor for PjrtExecutor {
         if n == self.batch {
             return self.run_batch(batch.data(), n);
         }
-        anyhow::ensure!(
+        crate::ensure!(
             n < self.batch,
             "batch {n} exceeds lowered batch {}",
             self.batch

@@ -1,113 +1,129 @@
-//! PJRT runtime: load and execute the AOT artifacts produced by the
-//! build-time JAX/Pallas pipeline (`python/compile/aot.py`).
+//! Execution runtime: the native plan/execute engine behind the
+//! [`Executor`] trait, plus (feature-gated) the PJRT path that loads and
+//! executes the AOT artifacts produced by the build-time JAX/Pallas
+//! pipeline (`python/compile/aot.py`).
+//!
+//! The PJRT pieces need the `xla` crate, which is not in the offline
+//! registry — they compile only with `--features pjrt` after vendoring
+//! it. Everything else (manifest parsing, the native executor) is
+//! dependency-free and always available.
 //!
 //! Interchange format is **HLO text** — jax ≥ 0.5 serializes protos with
 //! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see `/opt/xla-example/README.md`). Python runs
-//! exactly once at build time; this module is the only thing touching
-//! the artifacts at serve time.
+//! parser reassigns ids. Python runs exactly once at build time; this
+//! module is the only thing touching the artifacts at serve time.
 
 pub mod artifacts;
 pub mod executor;
 
 pub use artifacts::{Artifact, Manifest};
-pub use executor::{model_weight_inputs, Executor, NativeExecutor, PjrtExecutor};
+pub use executor::{model_weight_inputs, Executor, NativeExecutor};
+#[cfg(feature = "pjrt")]
+pub use executor::PjrtExecutor;
 
-use anyhow::{Context, Result};
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Computation, PjrtEngine};
 
-/// A PJRT CPU client wrapping the `xla` crate.
-pub struct PjrtEngine {
-    client: xla::PjRtClient,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use crate::util::error::{Context, Result};
+    use std::path::Path;
 
-/// One compiled computation ready to execute.
-pub struct Computation {
-    exe: xla::PjRtLoadedExecutable,
-    /// Number of outputs in the result tuple (jax lowers with
-    /// `return_tuple=True`; 1 for all our artifacts today).
-    pub name: String,
-}
-
-impl PjrtEngine {
-    /// Create the CPU client.
-    pub fn cpu() -> Result<PjrtEngine> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(PjrtEngine { client })
+    /// A PJRT CPU client wrapping the `xla` crate.
+    pub struct PjrtEngine {
+        client: xla::PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// One compiled computation ready to execute.
+    pub struct Computation {
+        exe: xla::PjRtLoadedExecutable,
+        /// Artifact stem (jax lowers with `return_tuple=True`; all our
+        /// artifacts return one array).
+        pub name: String,
     }
 
-    pub fn device_count(&self) -> usize {
-        self.client.device_count()
-    }
+    impl PjrtEngine {
+        /// Create the CPU client.
+        pub fn cpu() -> Result<PjrtEngine> {
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            Ok(PjrtEngine { client })
+        }
 
-    /// Load + compile an HLO-text artifact.
-    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Computation> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compile {}", path.display()))?;
-        Ok(Computation {
-            exe,
-            name: path
-                .file_stem()
-                .map(|s| s.to_string_lossy().into_owned())
-                .unwrap_or_default(),
-        })
-    }
-}
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
 
-impl Computation {
-    /// Execute with f32 inputs of the given shapes; returns the flattened
-    /// f32 outputs (the single tuple element — our artifacts return one
-    /// array; extend to `to_tuple` when a model needs more).
-    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, dims)| {
-                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-                let expect: usize = dims.iter().product();
-                anyhow::ensure!(
-                    expect == data.len(),
-                    "input buffer {} elems vs shape {:?}",
-                    data.len(),
-                    dims
-                );
-                xla::Literal::vec1(data)
-                    .reshape(&dims_i64)
-                    .context("reshape input literal")
+        pub fn device_count(&self) -> usize {
+            self.client.device_count()
+        }
+
+        /// Load + compile an HLO-text artifact.
+        pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Computation> {
+            let path = path.as_ref();
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", path.display()))?;
+            Ok(Computation {
+                exe,
+                name: path
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_default(),
             })
-            .collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .context("execute")?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .context("fetch result")?
-            .to_tuple1()
-            .context("unwrap result tuple")?;
-        out.to_vec::<f32>().context("read result as f32")
+        }
     }
-}
 
-#[cfg(test)]
-mod tests {
-    // PJRT integration tests live in rust/tests/runtime_pjrt.rs (they
-    // need the artifacts built by `make artifacts`). Here: client smoke.
-    use super::*;
+    impl Computation {
+        /// Execute with f32 inputs of the given shapes; returns the
+        /// flattened f32 outputs (the single tuple element — our
+        /// artifacts return one array; extend to `to_tuple` when a model
+        /// needs more).
+        pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, dims)| {
+                    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                    let expect: usize = dims.iter().product();
+                    crate::ensure!(
+                        expect == data.len(),
+                        "input buffer {} elems vs shape {:?}",
+                        data.len(),
+                        dims
+                    );
+                    xla::Literal::vec1(data)
+                        .reshape(&dims_i64)
+                        .context("reshape input literal")
+                })
+                .collect::<Result<_>>()?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .context("execute")?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .context("fetch result")?
+                .to_tuple1()
+                .context("unwrap result tuple")?;
+            out.to_vec::<f32>().context("read result as f32")
+        }
+    }
 
-    #[test]
-    fn cpu_client_comes_up() {
-        let engine = PjrtEngine::cpu().expect("pjrt cpu client");
-        assert!(engine.device_count() >= 1);
-        assert!(!engine.platform().is_empty());
+    #[cfg(test)]
+    mod tests {
+        // PJRT integration tests live in rust/tests/runtime_pjrt.rs (they
+        // need the artifacts built by `make artifacts`). Here: client
+        // smoke.
+        use super::*;
+
+        #[test]
+        fn cpu_client_comes_up() {
+            let engine = PjrtEngine::cpu().expect("pjrt cpu client");
+            assert!(engine.device_count() >= 1);
+            assert!(!engine.platform().is_empty());
+        }
     }
 }

@@ -1,0 +1,132 @@
+//! Minimal error-handling substrate (anyhow is unavailable offline).
+//!
+//! Provides the subset the runtime layer needs: a string-backed [`Error`]
+//! type, a [`Result`] alias, a [`Context`] extension trait mirroring
+//! `anyhow::Context`, and `bail!` / `ensure!` macros. Everything else in
+//! the repository uses concrete error enums; this is only for the
+//! "many things can go wrong, report a readable chain" paths (artifact
+//! loading, PJRT execution, examples).
+
+use std::fmt;
+
+/// A human-readable error, optionally carrying the message chain built up
+/// by [`Context::context`].
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::new(e.to_string())
+    }
+}
+
+/// Result alias used by the runtime layer.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// `anyhow::Context`-style message chaining for any displayable error.
+pub trait Context<T> {
+    /// Wrap the error with `msg: <original>`.
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T>;
+    /// Like [`Context::context`], but the message is computed lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.map_err(|e| Error::new(format!("{msg}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::new(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.ok_or_else(|| Error::new(msg.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::new(f().to_string()))
+    }
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::new(format!($($arg)*)))
+    };
+}
+
+/// Return early with a formatted [`Error`] when the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+/// Construct an [`Error`] from a format string (expression position).
+#[macro_export]
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::new(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let e = io_fail().context("opening manifest").unwrap_err();
+        assert!(e.to_string().contains("opening manifest"));
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing artifact").unwrap_err();
+        assert_eq!(e.to_string(), "missing artifact");
+        assert_eq!(Some(7).context("fine").unwrap(), 7);
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                crate::bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(f(3).unwrap_err().to_string().contains("three"));
+        assert!(f(11).unwrap_err().to_string().contains("too big"));
+    }
+}

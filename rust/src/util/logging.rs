@@ -1,76 +1,147 @@
-//! Minimal `log` facade backend (env_logger is unavailable offline).
+//! Minimal leveled logging (the `log`/`env_logger` crates are unavailable
+//! offline).
 //!
-//! `MEC_LOG=debug|info|warn|error|off` controls verbosity; default `info`.
-//! Output goes to stderr with a monotonic timestamp so serving traces line
-//! up with latency measurements.
+//! `MEC_LOG=trace|debug|info|warn|error|off` controls verbosity; default
+//! `info`. Output goes to stderr with a monotonic timestamp so serving
+//! traces line up with latency measurements. Use via the crate-root
+//! macros: `mec::log_info!("...")`, `mec::log_warn!("...")`, etc.
 
-use log::{Level, LevelFilter, Log, Metadata, Record};
-use std::sync::Once;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
-struct StderrLogger {
-    start: Instant,
-    level: LevelFilter,
+/// Log severity, ordered from most to least severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
 }
 
-impl Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= self.level
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let t = self.start.elapsed();
-        let lvl = match record.level() {
+impl Level {
+    fn label(self) -> &'static str {
+        match self {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
-        };
-        eprintln!(
-            "[{:>9.3}s {} {}] {}",
-            t.as_secs_f64(),
-            lvl,
-            record.target(),
-            record.args()
-        );
+        }
     }
-
-    fn flush(&self) {}
 }
 
-static INIT: Once = Once::new();
+/// 0 = off; otherwise the numeric value of the maximum enabled [`Level`].
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static START: OnceLock<Instant> = OnceLock::new();
 
 /// Install the logger (idempotent). Reads `MEC_LOG`.
 pub fn init() {
-    INIT.call_once(|| {
-        let level = match std::env::var("MEC_LOG").as_deref() {
-            Ok("trace") => LevelFilter::Trace,
-            Ok("debug") => LevelFilter::Debug,
-            Ok("warn") => LevelFilter::Warn,
-            Ok("error") => LevelFilter::Error,
-            Ok("off") => LevelFilter::Off,
-            _ => LevelFilter::Info,
-        };
-        let logger = Box::new(StderrLogger {
-            start: Instant::now(),
-            level,
-        });
-        if log::set_boxed_logger(logger).is_ok() {
-            log::set_max_level(level);
-        }
-    });
+    START.get_or_init(Instant::now);
+    let level = match std::env::var("MEC_LOG").as_deref() {
+        Ok("trace") => Level::Trace as u8,
+        Ok("debug") => Level::Debug as u8,
+        Ok("warn") => Level::Warn as u8,
+        Ok("error") => Level::Error as u8,
+        Ok("off") => 0,
+        _ => Level::Info as u8,
+    };
+    MAX_LEVEL.store(level, Ordering::Relaxed);
+}
+
+/// Whether a message at `level` would be emitted.
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit a log record. Prefer the `log_*!` macros.
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed();
+    eprintln!(
+        "[{:>9.3}s {} {}] {}",
+        t.as_secs_f64(),
+        level.label(),
+        target,
+        args
+    );
+}
+
+/// Log at ERROR level.
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at WARN level.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at INFO level.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at DEBUG level.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logging smoke test");
+        init();
+        init();
+        crate::log_info!("logging smoke test");
+    }
+
+    #[test]
+    fn levels_are_ordered() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn off_disables_everything() {
+        // Not testing env parsing here (process-global); just the gate.
+        let prev = MAX_LEVEL.swap(0, Ordering::Relaxed);
+        assert!(!enabled(Level::Error));
+        MAX_LEVEL.store(prev, Ordering::Relaxed);
     }
 }

@@ -3,6 +3,7 @@
 //! cannot pull from crates.io (rand/proptest/clap/env_logger/criterion).
 
 pub mod cli;
+pub mod error;
 pub mod logging;
 pub mod prop;
 pub mod rng;

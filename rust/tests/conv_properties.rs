@@ -7,7 +7,7 @@
 //! * Solution A ≡ Solution B for every geometry where A is available.
 //! * The lowering is a *projection*: every element of L appears in I.
 
-use mec::conv::{AlgoKind, ConvContext};
+use mec::conv::{AlgoKind, ConvContext, Convolution};
 use mec::memory::Workspace;
 use mec::tensor::{ConvShape, Kernel, KernelShape, Nhwc, Tensor};
 use mec::util::prop::{check_with, shrink_usizes, Config};

@@ -2,7 +2,7 @@
 //! numbers are allocator facts; these tests pin them down exactly.
 
 use mec::bench::workload::{by_name, resnet101_table3, suite};
-use mec::conv::AlgoKind;
+use mec::conv::{AlgoKind, Convolution};
 use mec::memory::{tracker, Budget, Workspace};
 
 #[test]

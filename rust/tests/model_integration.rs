@@ -4,7 +4,7 @@
 //! `make artifacts` has not run.
 
 use mec::conv::{AlgoKind, ConvContext};
-use mec::memory::{Budget, Workspace};
+use mec::memory::{Arena, Budget};
 use mec::model::{load_mecw, EvalSet};
 use mec::planner::Planner;
 use mec::tensor::{Nhwc, Tensor};
@@ -42,7 +42,7 @@ fn eval_accuracy_matches_training_report() {
         32,
     );
     let ctx = ConvContext::default();
-    let mut ws = Workspace::new();
+    let mut arena = model.sized_arena();
     let mut correct = 0;
     for chunk in eval
         .samples
@@ -57,7 +57,7 @@ fn eval_accuracy_matches_training_report() {
             data.extend_from_slice(s);
         }
         let batch = Tensor::from_vec(Nhwc::new(n, eval.h, eval.w, eval.c), data);
-        let preds = model.predict(&ctx, &batch, &mut ws);
+        let preds = model.predict(&ctx, &batch, &mut arena);
         correct += preds
             .iter()
             .zip(labels)
@@ -82,7 +82,7 @@ fn all_conv_algorithms_give_same_predictions() {
     }
     let batch = Tensor::from_vec(Nhwc::new(n, eval.h, eval.w, eval.c), data);
     let ctx = ConvContext::default();
-    let mut ws = Workspace::new();
+    let mut arena = Arena::new();
     let mut all: Vec<Vec<usize>> = Vec::new();
     for algo in [
         AlgoKind::Direct,
@@ -93,7 +93,7 @@ fn all_conv_algorithms_give_same_predictions() {
         AlgoKind::Winograd,
     ] {
         model.pin_algo(algo);
-        all.push(model.predict(&ctx, &batch, &mut ws));
+        all.push(model.predict(&ctx, &batch, &mut arena));
     }
     for (i, preds) in all.iter().enumerate().skip(1) {
         assert_eq!(preds, &all[0], "algorithm #{i} disagrees on predictions");
@@ -114,14 +114,14 @@ fn serving_under_memory_budget_still_accurate() {
         8,
     );
     let ctx = ConvContext::default();
-    let mut ws = Workspace::new();
+    let mut arena = model.sized_arena();
     let n = 64.min(eval.len());
     let mut data = Vec::new();
     for s in &eval.samples[..n] {
         data.extend_from_slice(s);
     }
     let batch = Tensor::from_vec(Nhwc::new(n, eval.h, eval.w, eval.c), data);
-    let preds = model.predict(&ctx, &batch, &mut ws);
+    let preds = model.predict(&ctx, &batch, &mut arena);
     let acc = preds
         .iter()
         .zip(&eval.labels[..n])

@@ -1,0 +1,247 @@
+//! Plan/execute contract tests — the acceptance criteria of the
+//! plan-once / execute-many refactor:
+//!
+//! * plan-once + execute-many output is **bitwise identical** to the
+//!   one-shot `convolve` path, for every algorithm, across random
+//!   geometries;
+//! * repeated `execute` calls perform **zero tracked allocation** after
+//!   the first (no kernel repacking, no workspace growth) — asserted
+//!   against the memory tracker;
+//! * a whole model's shared arena peaks at the **max** (not the sum) of
+//!   per-layer workspaces.
+//!
+//! Tracker-sensitive tests run inside `measure_peak`, which serializes on
+//! the tracker's global lock, so parallel test threads don't interfere.
+
+use mec::conv::{convolve, AlgoKind, ConvContext, ConvPlan, Convolution};
+use mec::memory::{self, measure_peak, Arena, Budget};
+use mec::model::{Layer, Model};
+use mec::planner::Planner;
+use mec::tensor::{ConvShape, Kernel, KernelShape, Nhwc, Tensor};
+use mec::util::Rng;
+
+/// Run `f` holding the tracker's global lock (via `measure_peak`), so
+/// tests in this binary never see each other's tracked allocations. Do
+/// NOT nest — the lock is not reentrant.
+fn with_tracker_lock<T>(f: impl FnOnce() -> T) -> T {
+    measure_peak(f).0
+}
+
+/// Random geometry: [n, ih, iw, ic, kh, kw, kc, sh, sw] (same generator
+/// family as conv_properties).
+fn gen_geometry(r: &mut Rng) -> ConvShape {
+    let ih = r.range(3, 14);
+    let iw = r.range(3, 14);
+    let ic = r.range(1, 5);
+    let kh = r.range(1, ih.min(5) + 1);
+    let kw = r.range(1, iw.min(5) + 1);
+    ConvShape::new(
+        Nhwc::new(r.range(1, 4), ih, iw, ic),
+        KernelShape::new(kh, kw, ic, r.range(1, 6)),
+        r.range(1, 4),
+        r.range(1, 4),
+    )
+}
+
+#[test]
+fn plan_once_execute_many_is_bitwise_identical_to_convolve() {
+    with_tracker_lock(plan_once_execute_many_body);
+}
+
+fn plan_once_execute_many_body() {
+    let mut rng = Rng::new(0x9a7);
+    let ctx = ConvContext::default();
+    for case in 0..24 {
+        let shape = gen_geometry(&mut rng);
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        for kind in AlgoKind::ALL {
+            let algo = kind.build();
+            if !algo.supports(&shape) {
+                continue;
+            }
+            let oneshot = convolve(kind, &ctx, &shape, &input, &kernel);
+            let plan = algo.plan(&ctx, &shape, &kernel);
+            let mut arena = Arena::new();
+            let mut out = Tensor::zeros(shape.output());
+            for rep in 0..3 {
+                plan.execute(&input, &mut arena, &mut out);
+                assert_eq!(
+                    out.data(),
+                    oneshot.data(),
+                    "case {case} rep {rep}: {} not bitwise-identical on {}",
+                    kind.name(),
+                    shape.describe()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_execute_bitwise_identical_under_threads() {
+    with_tracker_lock(plan_execute_threaded_body);
+}
+
+fn plan_execute_threaded_body() {
+    // The threaded execute paths must agree with the one-shot threaded
+    // run too (same partitioning by construction).
+    let mut rng = Rng::new(0x517);
+    let ctx = ConvContext::default().with_threads(4);
+    let shape = ConvShape::new(Nhwc::new(2, 12, 11, 3), KernelShape::new(3, 3, 3, 5), 1, 1);
+    let input = Tensor::random(shape.input, &mut rng);
+    let kernel = Kernel::random(shape.kernel, &mut rng);
+    for kind in AlgoKind::ALL {
+        let algo = kind.build();
+        if !algo.supports(&shape) {
+            continue;
+        }
+        let oneshot = convolve(kind, &ctx, &shape, &input, &kernel);
+        let plan = algo.plan(&ctx, &shape, &kernel);
+        let mut arena = Arena::new();
+        let mut out = Tensor::zeros(shape.output());
+        plan.execute(&input, &mut arena, &mut out);
+        assert_eq!(out.data(), oneshot.data(), "{} threaded", kind.name());
+    }
+}
+
+#[test]
+fn repeated_execute_allocates_zero_tracked_bytes_after_first() {
+    let mut rng = Rng::new(0xa110c);
+    let ctx = ConvContext::default();
+    for shape in [
+        ConvShape::new(Nhwc::new(1, 9, 9, 2), KernelShape::new(3, 3, 2, 4), 1, 1),
+        ConvShape::new(Nhwc::new(2, 12, 10, 3), KernelShape::new(5, 3, 3, 2), 2, 1),
+    ] {
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        for kind in AlgoKind::ALL {
+            let algo = kind.build();
+            if !algo.supports(&shape) {
+                continue;
+            }
+            let plan = algo.plan(&ctx, &shape, &kernel);
+            // Inside measure_peak: holds the tracker lock, so the
+            // current-bytes deltas below are ours alone.
+            let ((), _peak) = measure_peak(|| {
+                let mut arena = Arena::new();
+                let mut out = Tensor::zeros(shape.output());
+                plan.execute(&input, &mut arena, &mut out); // first: arena grows
+                let bytes_after_first = memory::current_bytes();
+                let cap_after_first = arena.capacity();
+                assert_eq!(arena.bytes(), plan.workspace_bytes(), "{}", kind.name());
+                for rep in 0..4 {
+                    plan.execute(&input, &mut arena, &mut out);
+                    assert_eq!(
+                        memory::current_bytes(),
+                        bytes_after_first,
+                        "{} rep {rep}: tracked allocation in steady state on {}",
+                        kind.name(),
+                        shape.describe()
+                    );
+                    assert_eq!(arena.capacity(), cap_after_first, "{}", kind.name());
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn first_execute_peak_equals_plan_workspace() {
+    // The arena's tracked growth is exactly the plan's layout total — the
+    // plan-level analogue of the measured==analytic workspace tests.
+    let mut rng = Rng::new(0xbeef);
+    let ctx = ConvContext::default();
+    let shape = ConvShape::new(Nhwc::new(1, 10, 10, 3), KernelShape::new(3, 3, 3, 4), 1, 1);
+    let input = Tensor::random(shape.input, &mut rng);
+    let kernel = Kernel::random(shape.kernel, &mut rng);
+    for kind in [AlgoKind::Im2col, AlgoKind::Mec, AlgoKind::Winograd] {
+        let algo = kind.build();
+        let plan = algo.plan(&ctx, &shape, &kernel);
+        let mut out = Tensor::zeros(shape.output());
+        let ((), peak) = measure_peak(|| {
+            let mut arena = Arena::new();
+            plan.execute(&input, &mut arena, &mut out);
+        });
+        assert_eq!(peak, plan.workspace_bytes(), "{}", kind.name());
+    }
+}
+
+fn two_conv_model() -> Model {
+    let mut rng = Rng::new(0x2c);
+    Model::new(
+        "arena-test",
+        (12, 12, 2),
+        vec![
+            // Layer 0: 3x3x2 -> 8 channels (bigger workspace).
+            Layer::Conv {
+                kernel: Kernel::random(KernelShape::new(3, 3, 2, 8), &mut rng),
+                bias: vec![0.0; 8],
+                sh: 1,
+                sw: 1,
+                ph: 1,
+                pw: 1,
+            },
+            Layer::Relu,
+            // Layer 2: 3x3x8 -> 4 channels on the same spatial grid.
+            Layer::Conv {
+                kernel: Kernel::random(KernelShape::new(3, 3, 8, 4), &mut rng),
+                bias: vec![0.0; 4],
+                sh: 1,
+                sw: 1,
+                ph: 1,
+                pw: 1,
+            },
+        ],
+    )
+}
+
+#[test]
+fn model_arena_peak_is_max_not_sum_of_layer_workspaces() {
+    let mut m = two_conv_model();
+    let ctx = ConvContext::default();
+    let batch = 2;
+    m.plan(&Planner::new(), &Budget::unlimited(), &ctx, batch);
+
+    let per_layer = m.planned_layer_workspaces();
+    assert_eq!(per_layer.len(), 2, "both conv layers planned");
+    let max: usize = per_layer.iter().map(|(_, b)| *b).max().unwrap();
+    let sum: usize = per_layer.iter().map(|(_, b)| *b).sum();
+    assert_eq!(m.planned_workspace_bytes(), max);
+    assert!(
+        max < sum,
+        "layers should differ so max ({max}) < sum ({sum}) is meaningful"
+    );
+
+    // Tracker assertion: a forward pass through the planner-sized arena
+    // peaks at exactly the max, never the sum.
+    let mut rng = Rng::new(7);
+    let input = Tensor::random(Nhwc::new(batch, 12, 12, 2), &mut rng);
+    let (out, peak) = measure_peak(|| {
+        let mut arena = m.sized_arena();
+        m.forward(&ctx, &input, &mut arena)
+    });
+    assert_eq!(out.shape().c, 4);
+    assert_eq!(peak, max, "arena peak must equal max over planned layers");
+}
+
+#[test]
+fn planned_model_forward_does_not_grow_arena() {
+    let mut m = two_conv_model();
+    let ctx = ConvContext::default();
+    m.plan(&Planner::new(), &Budget::unlimited(), &ctx, 3);
+    let mut rng = Rng::new(8);
+    let input = Tensor::random(Nhwc::new(3, 12, 12, 2), &mut rng);
+    let small = Tensor::random(Nhwc::new(1, 12, 12, 2), &mut rng);
+    with_tracker_lock(|| {
+        let mut arena = m.sized_arena();
+        let before = arena.bytes();
+        for _ in 0..3 {
+            let _ = m.forward(&ctx, &input, &mut arena);
+            assert_eq!(arena.bytes(), before, "forward grew the planned arena");
+        }
+        // Smaller batches fit inside the planned arena too.
+        let _ = m.forward(&ctx, &small, &mut arena);
+        assert_eq!(arena.bytes(), before);
+    });
+}

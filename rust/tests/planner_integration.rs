@@ -3,7 +3,7 @@
 //! end, and tuned plans must actually be runnable.
 
 use mec::bench::workload::{by_name, suite};
-use mec::conv::{AlgoKind, ConvContext};
+use mec::conv::{AlgoKind, ConvContext, Convolution};
 use mec::memory::{Budget, Workspace};
 use mec::planner::{AutoTuner, Planner};
 use mec::tensor::{Kernel, Tensor};

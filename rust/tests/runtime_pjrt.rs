@@ -2,8 +2,12 @@
 //! time) and cross-check their numerics against the native rust engine.
 //! This closes the three-layer loop: Pallas kernel ≡ rust engine ≡ the
 //! HLO the server executes. Skips when artifacts are missing.
+//!
+//! Compiled only with `--features pjrt` (needs a vendored `xla` crate —
+//! see Cargo.toml).
+#![cfg(feature = "pjrt")]
 
-use mec::conv::{AlgoKind, ConvContext};
+use mec::conv::{AlgoKind, ConvContext, Convolution};
 use mec::memory::{Budget, Workspace};
 use mec::model::{load_mecw, EvalSet};
 use mec::planner::Planner;
