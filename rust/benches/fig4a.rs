@@ -5,9 +5,9 @@
 //! Paper's claim: both factors grow with the k/s ratio, per Eq. (4).
 //! Run: `cargo bench --bench fig4a` (env: MEC_BENCH_FAST, MEC_BENCH_SCALE)
 
-use mec::bench::harness::{bench_mode, bench_scale, print_table, BenchOpts};
-use mec::bench::workload::by_name;
 use mec::bench::bench_conv;
+use mec::bench::harness::{bench_mode, bench_precision, bench_scale, print_table, BenchOpts};
+use mec::bench::workload::by_name;
 use mec::conv::{AlgoKind, ConvContext, Convolution};
 use mec::tensor::{ConvShape, Kernel, KernelShape, Nhwc, Tensor};
 use mec::util::Rng;
@@ -15,7 +15,7 @@ use mec::util::Rng;
 fn main() {
     let scale = bench_scale();
     let base = by_name("cv1").unwrap();
-    let ctx = ConvContext::server();
+    let ctx = ConvContext::server().with_precision(bench_precision());
     let opts = BenchOpts::default();
     let mut rng = Rng::new(41);
     let mut rows = Vec::new();
@@ -24,6 +24,10 @@ fn main() {
         ctx.threads
     );
     println!("timing mode: {}", bench_mode().label());
+    println!(
+        "precision: {} (set MEC_BENCH_PRECISION=q16 for the paper's fixed-point grid)",
+        ctx.precision
+    );
     for s in 1..=10usize {
         let ic = (base.ic / scale).max(1);
         let kc = (base.kc / scale).max(1);

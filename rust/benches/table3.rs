@@ -7,7 +7,7 @@
 //! ratio is the shape target (ARM7 vs this host).
 
 use mec::bench::bench_conv;
-use mec::bench::harness::{bench_mode, bench_scale, print_table, BenchOpts};
+use mec::bench::harness::{bench_mode, bench_precision, bench_scale, print_table, BenchOpts};
 use mec::bench::workload::resnet101_table3;
 use mec::conv::{AlgoKind, ConvContext, Convolution};
 use mec::tensor::{Kernel, Tensor};
@@ -15,13 +15,17 @@ use mec::util::Rng;
 
 fn main() {
     let scale = bench_scale();
-    let ctx = ConvContext::mobile();
+    let ctx = ConvContext::mobile().with_precision(bench_precision());
     let opts = BenchOpts::default();
     let mut rng = Rng::new(101);
     let mut rows = Vec::new();
     let mut tot = [0.0f64; 4]; // conv_mb, conv_ms, mec_mb, mec_ms
     println!("Table 3 reproduction: ResNet-101 weighted conv layers, Mobile, scale={scale}");
     println!("timing mode: {}", bench_mode().label());
+    println!(
+        "precision: {} (set MEC_BENCH_PRECISION=q16 for the paper's fixed-point grid)",
+        ctx.precision
+    );
     for (w, weight) in resnet101_table3() {
         let shape = w.shape(1, scale);
         let input = Tensor::random(shape.input, &mut rng);
@@ -32,7 +36,10 @@ fn main() {
             let algo = kind.build();
             let name = format!("{}-{}", w.name, algo.name());
             let r = bench_conv(&name, &opts, &*algo, &ctx, &shape, &input, &kernel, &mut out);
-            vals[i * 2] = algo.workspace_bytes(&shape) as f64 / 1e6;
+            // Lowering overhead in the run precision: Eq. 2/3 elements ×
+            // operand width (q16 halves the paper's MB column).
+            vals[i * 2] = (algo.workspace_elems(&shape) * ctx.precision.bytes_per_elem()) as f64
+                / 1e6;
             vals[i * 2 + 1] = r.median_ms();
         }
         rows.push(vec![

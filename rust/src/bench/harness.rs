@@ -1,14 +1,17 @@
 //! Timing harness (criterion replacement).
 //!
 //! Adaptive: measures once, picks a repetition count targeting
-//! `target_time`, reports median/MAD over the reps. Honors three env vars
+//! `target_time`, reports median/MAD over the reps. Honors four env vars
 //! so `cargo bench` stays usable on slow hosts:
 //! * `MEC_BENCH_SCALE`  — channel divisor for the paper workloads (default 1)
 //! * `MEC_BENCH_FAST`   — if set, caps reps at 3 and target time at 200 ms
 //! * `MEC_BENCH_MODE`   — `amortized` (default: plan built once, only
 //!   `execute` timed — steady-state serving cost) or `oneshot` (plan +
 //!   execute per call — cold-path cost, the pre-plan/execute behaviour)
+//! * `MEC_BENCH_PRECISION` — `f32` (default) or `q16`: the paper's two §4
+//!   grids, so the float-vs-fixed comparison is one env var
 
+use crate::tensor::quant::Precision;
 use crate::util::stats::{fmt_ns, Summary};
 use std::time::{Duration, Instant};
 
@@ -116,6 +119,25 @@ impl BenchMode {
             BenchMode::Amortized => "plan-amortized (set MEC_BENCH_MODE=oneshot for cold)",
             BenchMode::Oneshot => "oneshot (plan+execute per call)",
         }
+    }
+}
+
+/// The env-var execution precision (`MEC_BENCH_PRECISION`, default f32).
+/// Case-insensitive; warns on stderr for unrecognized values instead of
+/// silently falling back.
+pub fn bench_precision() -> Precision {
+    match std::env::var("MEC_BENCH_PRECISION") {
+        Ok(v) => match Precision::parse(&v) {
+            Some(p) => p,
+            None => {
+                eprintln!(
+                    "warning: unrecognized MEC_BENCH_PRECISION={v:?} (expected \
+                     'f32' or 'q16'); using f32"
+                );
+                Precision::F32
+            }
+        },
+        Err(_) => Precision::F32,
     }
 }
 

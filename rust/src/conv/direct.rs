@@ -3,12 +3,30 @@
 //! oracle every other algorithm is tested against, and the "no overhead"
 //! end of the paper's memory/performance trade-off.
 
-use super::{AlgoKind, ConvContext, ConvPlan, Convolution};
+use super::{downcast_prepack, AlgoKind, ConvContext, ConvPlan, Convolution, KernelPrepack};
 use crate::memory::WorkspaceLayout;
 use crate::tensor::{ConvShape, Kernel, Tensor};
 use crate::threadpool::parallel_for;
+use std::any::Any;
+use std::sync::Arc;
 
 pub struct Direct;
+
+/// Direct's "prepack" is just an owned kernel copy (self-contained plans,
+/// see ARCHITECTURE.md) — shared so per-batch-size plans hold one copy.
+pub struct DirectPrepack {
+    pub kernel: Kernel,
+}
+
+impl KernelPrepack for DirectPrepack {
+    fn bytes(&self) -> usize {
+        self.kernel.bytes()
+    }
+
+    fn into_any_arc(self: Arc<Self>) -> Arc<dyn Any + Send + Sync> {
+        self
+    }
+}
 
 impl Convolution for Direct {
     fn name(&self) -> &'static str {
@@ -23,23 +41,41 @@ impl Convolution for Direct {
         0 // the defining property (paper §3.1)
     }
 
-    fn plan(&self, ctx: &ConvContext, shape: &ConvShape, kernel: &Kernel) -> Box<dyn ConvPlan> {
+    fn prepack(
+        &self,
+        _ctx: &ConvContext,
+        shape: &ConvShape,
+        kernel: &Kernel,
+    ) -> Arc<dyn KernelPrepack> {
         assert_eq!(kernel.shape(), shape.kernel);
+        Arc::new(DirectPrepack {
+            kernel: kernel.clone(),
+        })
+    }
+
+    fn plan_shared(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        prepack: Arc<dyn KernelPrepack>,
+    ) -> Box<dyn ConvPlan> {
+        let prepack: Arc<DirectPrepack> = downcast_prepack(prepack, "direct");
+        assert_eq!(prepack.kernel.shape(), shape.kernel);
         Box::new(DirectPlan {
             ctx: ctx.clone(),
             shape: *shape,
-            kernel: kernel.clone(),
+            prepack,
             layout: WorkspaceLayout::new(),
         })
     }
 }
 
-/// Plan for the direct loop nest: nothing to precompute beyond owning the
-/// kernel; the layout is empty (zero workspace).
+/// Plan for the direct loop nest: nothing to precompute beyond the shared
+/// kernel copy; the layout is empty (zero workspace).
 pub struct DirectPlan {
     ctx: ConvContext,
     shape: ConvShape,
-    kernel: Kernel,
+    prepack: Arc<DirectPrepack>,
     layout: WorkspaceLayout,
 }
 
@@ -57,9 +93,11 @@ impl ConvPlan for DirectPlan {
     }
 
     fn resident_bytes(&self) -> usize {
-        // The plan owns a copy of the kernel (a deliberate trade: plans
-        // are self-contained; see ARCHITECTURE.md).
-        self.kernel.bytes()
+        self.prepack.bytes()
+    }
+
+    fn shared_prepack(&self) -> Option<Arc<dyn KernelPrepack>> {
+        Some(Arc::clone(&self.prepack) as Arc<dyn KernelPrepack>)
     }
 
     fn execute_in(&self, input: &Tensor, _scratch: &mut [f32], output: &mut Tensor) {
@@ -72,7 +110,7 @@ impl ConvPlan for DirectPlan {
         let ish = s.input;
 
         let in_data = input.data();
-        let k_data = self.kernel.data();
+        let k_data = self.prepack.kernel.data();
         let out = crate::threadpool::SharedSlice::new(output.data_mut());
 
         // Parallelize over (n, oh): each task writes a disjoint output row.

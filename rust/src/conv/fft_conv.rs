@@ -25,13 +25,36 @@
 //! quantity — while the plan's own layout reflects what execute actually
 //! touches.
 
-use super::{AlgoKind, ConvContext, ConvPlan, Convolution};
+use super::{downcast_prepack, AlgoKind, ConvContext, ConvPlan, Convolution, KernelPrepack};
 use crate::fft::{fft2d, next_pow2, pointwise_mul_acc, C32};
 use crate::memory::WorkspaceLayout;
 use crate::tensor::{ConvShape, Kernel, Tensor};
 use crate::threadpool::{parallel_for_with_id, SharedSlice};
+use std::any::Any;
+use std::sync::Arc;
 
 pub struct FftConv;
+
+/// The cached-vs-streaming decision plus its kernel-side data (cached:
+/// every kernel spectrum; streaming: the raw kernel) — batch-independent
+/// (spectra size is `i_c·k_c·P_h·P_w`, no `i_n` term), so a layer's
+/// per-batch-size plans share one copy and one mode.
+pub struct FftPrepack {
+    mode: Mode,
+}
+
+impl KernelPrepack for FftPrepack {
+    fn bytes(&self) -> usize {
+        match &self.mode {
+            Mode::Cached { kspec } => kspec.len() * 4,
+            Mode::Streaming { kernel } => kernel.bytes(),
+        }
+    }
+
+    fn into_any_arc(self: Arc<Self>) -> Arc<dyn Any + Send + Sync> {
+        self
+    }
+}
 
 /// Padded FFT grid for a geometry: next pow2 of `i + k - 1` per axis.
 pub fn fft_grid(s: &ConvShape) -> (usize, usize) {
@@ -61,9 +84,18 @@ fn cached_workspace_elems(s: &ConvShape) -> usize {
     2 * sp * (ic * kc + n * ic + n * kc + 2)
 }
 
+/// Bytes the cached mode would hold resident: every kernel spectrum,
+/// `i_c·k_c` complex planes of `P_h·P_w` — what `fft_cache_cap_bytes`
+/// actually caps. Deliberately **batch-independent** (no `i_n` term), so
+/// the cached-vs-streaming decision frozen into a layer's shared
+/// [`FftPrepack`] is the same for every batch size the layer serves.
+pub fn kernel_spectra_bytes(s: &ConvShape) -> usize {
+    2 * spectrum_len(s) * s.kernel.ic * s.kernel.kc * 4
+}
+
 /// Would the cached mode fit under the cap?
 pub fn uses_cache(ctx: &ConvContext, s: &ConvShape) -> bool {
-    cached_workspace_elems(s) * 4 <= ctx.fft_cache_cap_bytes
+    kernel_spectra_bytes(s) <= ctx.fft_cache_cap_bytes
 }
 
 impl Convolution for FftConv {
@@ -81,13 +113,16 @@ impl Convolution for FftConv {
         cached_workspace_elems(s)
     }
 
-    fn plan(&self, ctx: &ConvContext, shape: &ConvShape, kernel: &Kernel) -> Box<dyn ConvPlan> {
+    fn prepack(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        kernel: &Kernel,
+    ) -> Arc<dyn KernelPrepack> {
         assert_eq!(kernel.shape(), shape.kernel);
         let sp = spectrum_len(shape);
         let (ic, kc) = (shape.kernel.ic, shape.kernel.kc);
         let threads = ctx.threads.max(1);
-        let mut layout = WorkspaceLayout::new();
-        layout.push("input-spectra", 2 * sp * ic);
         let mode = if uses_cache(ctx, shape) {
             // ---- plan-time: every kernel spectrum, once ----
             let mut kspec = vec![0.0f32; 2 * sp * ic * kc];
@@ -100,21 +135,58 @@ impl Convolution for FftConv {
                     kernel_spectrum(shape, kernel, i, o, spec);
                 });
             }
-            // Per-thread inverse-transform accumulators.
-            layout.push("accumulators", 2 * sp * threads);
             Mode::Cached { kspec }
         } else {
-            // Streaming: per-thread (accumulator + kernel scratch) lanes;
-            // kernel spectra recomputed per output channel at execute.
-            layout.push("stream-scratch", 2 * sp * 2 * threads);
+            // Streaming: keep the raw kernel; spectra recomputed per
+            // output channel at execute.
             Mode::Streaming {
                 kernel: kernel.clone(),
             }
         };
+        Arc::new(FftPrepack { mode })
+    }
+
+    fn plan_shared(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        prepack: Arc<dyn KernelPrepack>,
+    ) -> Box<dyn ConvPlan> {
+        let prepack: Arc<FftPrepack> = downcast_prepack(prepack, "fft");
+        let sp = spectrum_len(shape);
+        let (ic, kc) = (shape.kernel.ic, shape.kernel.kc);
+        // The cached spectra are sized by the padded grid (input h/w), so
+        // prepacks are shareable across batch sizes only — reject reuse
+        // across a different spatial geometry instead of mis-indexing.
+        match &prepack.mode {
+            Mode::Cached { kspec } => assert_eq!(
+                kspec.len(),
+                2 * sp * ic * kc,
+                "fft: shared prepack built for a different padded grid"
+            ),
+            Mode::Streaming { kernel } => assert_eq!(
+                kernel.shape(),
+                shape.kernel,
+                "fft: shared prepack built for a different kernel geometry"
+            ),
+        }
+        let threads = ctx.threads.max(1);
+        let mut layout = WorkspaceLayout::new();
+        layout.push("input-spectra", 2 * sp * ic);
+        match &prepack.mode {
+            // Per-thread inverse-transform accumulators.
+            Mode::Cached { .. } => {
+                layout.push("accumulators", 2 * sp * threads);
+            }
+            // Streaming: per-thread (accumulator + kernel scratch) lanes.
+            Mode::Streaming { .. } => {
+                layout.push("stream-scratch", 2 * sp * 2 * threads);
+            }
+        }
         Box::new(FftConvPlan {
             ctx: ctx.clone(),
             shape: *shape,
-            mode,
+            prepack,
             layout,
         })
     }
@@ -128,18 +200,18 @@ enum Mode {
 }
 
 /// Plan for FFT-based convolution: cached-vs-streaming mode resolved, and
-/// (in cached mode) every kernel spectrum precomputed.
+/// (in cached mode) every kernel spectrum precomputed — both shared.
 pub struct FftConvPlan {
     ctx: ConvContext,
     shape: ConvShape,
-    mode: Mode,
+    prepack: Arc<FftPrepack>,
     layout: WorkspaceLayout,
 }
 
 impl FftConvPlan {
     /// Whether this plan holds precomputed kernel spectra.
     pub fn is_cached(&self) -> bool {
-        matches!(self.mode, Mode::Cached { .. })
+        matches!(self.prepack.mode, Mode::Cached { .. })
     }
 }
 
@@ -157,17 +229,18 @@ impl ConvPlan for FftConvPlan {
     }
 
     fn resident_bytes(&self) -> usize {
-        match &self.mode {
-            Mode::Cached { kspec } => kspec.len() * 4,
-            Mode::Streaming { kernel } => kernel.bytes(),
-        }
+        self.prepack.bytes()
+    }
+
+    fn shared_prepack(&self) -> Option<Arc<dyn KernelPrepack>> {
+        Some(Arc::clone(&self.prepack) as Arc<dyn KernelPrepack>)
     }
 
     fn execute_in(&self, input: &Tensor, scratch: &mut [f32], output: &mut Tensor) {
         let s = self.shape;
         assert_eq!(output.shape(), s.output());
         assert_eq!(input.shape(), s.input);
-        match &self.mode {
+        match &self.prepack.mode {
             Mode::Cached { kspec } => {
                 run_cached(&self.ctx, &s, input, kspec, scratch, output);
             }

@@ -9,14 +9,25 @@
 //! times.
 //!
 //! Plan/execute: the kernel matrix K is the GEMM's B-operand and is
-//! input-independent, so the plan packs it once ([`PackedB`]); execute
-//! lowers into the arena and runs one prepacked GEMM.
+//! input-independent, so the plan packs it once ([`PackedKernel`], shared
+//! across a layer's per-batch-size plans); execute lowers into the arena
+//! and runs one prepacked GEMM.
+//!
+//! Precision: under [`Precision::Q16`](crate::tensor::quant::Precision)
+//! the kernel is quantized at plan time and the lowering quantizes while
+//! it copies (the activation scale comes from a per-execute abs-max), so
+//! L occupies **half** the bytes — the paper's fixed-point grid riding
+//! the same compact lowering.
 
-use super::{AlgoKind, ConvContext, ConvPlan, Convolution};
-use crate::gemm::{gemm_prepacked_ex, MatMut, MatRef, PackedB};
+use super::{
+    downcast_prepack, AlgoKind, ConvContext, ConvPlan, Convolution, KernelPrepack, PackedKernel,
+};
+use crate::gemm::{gemm_prepacked_ex, gemm_prepacked_ex_i16, MatMut, MatRef, MatRefI16};
 use crate::memory::WorkspaceLayout;
+use crate::tensor::quant::{f32_as_i16_mut, i16_slots, Precision, QParams};
 use crate::tensor::{ConvShape, Kernel, Tensor};
 use crate::threadpool::parallel_for;
+use std::sync::Arc;
 
 pub struct Im2col;
 
@@ -50,6 +61,45 @@ impl Im2col {
             }
         });
     }
+
+    /// Quantizing variant of [`Im2col::lower`]: identical walk, but each
+    /// copied element is quantized into the i16 L with `qp`'s scale —
+    /// the lowering already streams every element once, so quantization
+    /// rides the same pass for free.
+    pub fn lower_q16(
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        input: &Tensor,
+        qp: QParams,
+        l: &mut [i16],
+    ) {
+        let s = *shape;
+        let (oh, ow) = (s.oh(), s.ow());
+        let k = s.kernel;
+        let ish = s.input;
+        let row_len = k.kh * k.kw * k.ic;
+        assert_eq!(l.len(), ish.n * oh * ow * row_len);
+        let in_data = input.data();
+        let lp = crate::threadpool::SharedSlice::new(l);
+
+        parallel_for(ctx.threads, ish.n * oh * ow, |r| {
+            let l_data: &mut [i16] = lp.slice();
+            let n = r / (oh * ow);
+            let y = (r / ow) % oh;
+            let x = r % ow;
+            let row = &mut l_data[r * row_len..(r + 1) * row_len];
+            for u in 0..k.kh {
+                let src_off = ish.index(n, y * s.sh + u, x * s.sw, 0);
+                let dst_off = u * k.kw * k.ic;
+                for (d, &v) in row[dst_off..dst_off + k.kw * k.ic]
+                    .iter_mut()
+                    .zip(&in_data[src_off..src_off + k.kw * k.ic])
+                {
+                    *d = qp.quantize(v);
+                }
+            }
+        });
+    }
 }
 
 impl Convolution for Im2col {
@@ -66,28 +116,57 @@ impl Convolution for Im2col {
         shape.im2col_lowered_elems()
     }
 
-    fn plan(&self, ctx: &ConvContext, shape: &ConvShape, kernel: &Kernel) -> Box<dyn ConvPlan> {
-        assert_eq!(kernel.shape(), shape.kernel);
-        let k = shape.kernel;
-        let kdim = k.kh * k.kw * k.ic;
-        let kmat = MatRef::new(kernel.data(), kdim, k.kc);
+    /// Under q16 the lowered matrix is stored in i16 lanes: half the
+    /// Eq. 2 bytes (rounded up to a whole f32 slot) — exactly the plan's
+    /// layout, so budget admission sees the real fixed-point footprint.
+    fn workspace_bytes_prec(&self, shape: &ConvShape, precision: Precision) -> usize {
+        match precision {
+            Precision::F32 => self.workspace_bytes(shape),
+            Precision::Q16 => i16_slots(shape.im2col_lowered_elems()) * 4,
+        }
+    }
+
+    fn prepack(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        kernel: &Kernel,
+    ) -> Arc<dyn KernelPrepack> {
+        Arc::new(PackedKernel::pack(ctx, shape, kernel))
+    }
+
+    fn plan_shared(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        prepack: Arc<dyn KernelPrepack>,
+    ) -> Box<dyn ConvPlan> {
+        let packed_k: Arc<PackedKernel> = downcast_prepack(prepack, "im2col");
         let mut layout = WorkspaceLayout::new();
-        layout.push("lowered", shape.im2col_lowered_elems());
+        match &*packed_k {
+            PackedKernel::F32(_) => {
+                layout.push("lowered", shape.im2col_lowered_elems());
+            }
+            PackedKernel::Q16 { .. } => {
+                // i16 lanes inside the f32 arena: half the bytes of Eq. 2.
+                layout.push_i16("lowered", shape.im2col_lowered_elems());
+            }
+        }
         Box::new(Im2colPlan {
             ctx: ctx.clone(),
             shape: *shape,
-            packed_k: PackedB::pack(kmat, ctx.blocks),
+            packed_k,
             layout,
         })
     }
 }
 
-/// Plan for im2col: prepacked kernel matrix + the Eq. (2) lowered-matrix
-/// region.
+/// Plan for im2col: prepacked kernel matrix (shared, precision-resolved)
+/// + the Eq. (2) lowered-matrix region.
 pub struct Im2colPlan {
     ctx: ConvContext,
     shape: ConvShape,
-    packed_k: PackedB,
+    packed_k: Arc<PackedKernel>,
     layout: WorkspaceLayout,
 }
 
@@ -108,6 +187,10 @@ impl ConvPlan for Im2colPlan {
         self.packed_k.bytes()
     }
 
+    fn shared_prepack(&self) -> Option<Arc<dyn KernelPrepack>> {
+        Some(Arc::clone(&self.packed_k) as Arc<dyn KernelPrepack>)
+    }
+
     fn execute_in(&self, input: &Tensor, scratch: &mut [f32], output: &mut Tensor) {
         let s = self.shape;
         let k = s.kernel;
@@ -116,14 +199,32 @@ impl ConvPlan for Im2colPlan {
         assert_eq!(output.shape(), s.output());
         assert_eq!(input.shape(), s.input);
 
-        let l = &mut scratch[..rows * row_len];
-        Im2col::lower(&self.ctx, &s, input, l);
+        match &*self.packed_k {
+            PackedKernel::F32(pk) => {
+                let l = &mut scratch[..rows * row_len];
+                Im2col::lower(&self.ctx, &s, input, l);
 
-        // O (i_n·o_h·o_w × k_c, row-major NHWC is exactly this matrix)
-        //   = L (rows × row_len) × K (row_len × k_c).
-        let a = MatRef::new(l, rows, row_len);
-        let mut c = MatMut::new(output.data_mut(), rows, k.kc);
-        gemm_prepacked_ex(a, &self.packed_k, &mut c, self.ctx.threads);
+                // O (i_n·o_h·o_w × k_c, row-major NHWC is exactly this
+                // matrix) = L (rows × row_len) × K (row_len × k_c).
+                let a = MatRef::new(l, rows, row_len);
+                let mut c = MatMut::new(output.data_mut(), rows, k.kc);
+                gemm_prepacked_ex(a, pk, &mut c, self.ctx.threads);
+            }
+            PackedKernel::Q16 { packed, qk } => {
+                // Dynamic activation scale, then quantize-while-lowering
+                // into the halved i16 L and run the widening GEMM; the
+                // combined scale folds the Q15 product shift back out.
+                let qa = QParams::from_slice(input.data());
+                let slots = i16_slots(rows * row_len);
+                let l = &mut f32_as_i16_mut(&mut scratch[..slots])[..rows * row_len];
+                Im2col::lower_q16(&self.ctx, &s, input, qa, l);
+
+                let a = MatRefI16::new(l, rows, row_len);
+                let mut c = MatMut::new(output.data_mut(), rows, k.kc);
+                let scale = qa.scale * qk.scale * 32768.0;
+                gemm_prepacked_ex_i16(a, packed, &mut c, scale, self.ctx.threads);
+            }
+        }
     }
 }
 
@@ -202,5 +303,50 @@ mod tests {
             plan.layout().region("lowered").unwrap().elems,
             shape.im2col_lowered_elems()
         );
+    }
+
+    #[test]
+    fn q16_plan_halves_the_lowered_region() {
+        let shape = ConvShape::new(Nhwc::new(2, 9, 8, 3), KernelShape::new(3, 2, 3, 4), 2, 1);
+        let mut rng = Rng::new(0x60);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let fplan = Im2col.plan(&ConvContext::default(), &shape, &kernel);
+        let qplan = Im2col.plan(
+            &ConvContext::default().with_precision(Precision::Q16),
+            &shape,
+            &kernel,
+        );
+        let fl = fplan.layout().region("lowered").unwrap().elems;
+        let ql = qplan.layout().region("lowered").unwrap().elems;
+        assert_eq!(ql, fl.div_ceil(2));
+    }
+
+    #[test]
+    fn q16_matches_direct_within_quantization_noise() {
+        let shape = ConvShape::new(Nhwc::new(2, 10, 9, 3), KernelShape::new(3, 3, 3, 5), 1, 2);
+        let mut rng = Rng::new(0x61);
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let mut want = Tensor::zeros(shape.output());
+        Direct.run(
+            &ConvContext::default(),
+            &shape,
+            &input,
+            &kernel,
+            &mut Workspace::new(),
+            &mut want,
+        );
+        for threads in [1usize, 3] {
+            let ctx = ConvContext::default()
+                .with_threads(threads)
+                .with_precision(Precision::Q16);
+            let plan = Im2col.plan(&ctx, &shape, &kernel);
+            // Plain Vec scratch (not a tracked Arena): unit tests must not
+            // perturb the global tracker the memory tests assert against.
+            let mut scratch = vec![0.0f32; plan.workspace_elems()];
+            let mut got = Tensor::zeros(shape.output());
+            plan.execute_in(&input, &mut scratch, &mut got);
+            assert_allclose(got.data(), want.data(), 1e-3, &format!("q16 t={threads}"));
+        }
     }
 }

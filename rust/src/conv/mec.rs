@@ -22,20 +22,35 @@
 //! re-derives this).
 //!
 //! Plan/execute: the A/B dispatch and the kernel-matrix packing
-//! ([`PackedB`]) are input-independent, so [`MecPlan`] resolves and
-//! prepacks them once; execute only lowers, multiplies, and (Solution A)
-//! repacks — allocating nothing.
+//! ([`PackedKernel`], shared across a layer's per-batch-size plans) are
+//! input-independent, so [`MecPlan`] resolves and prepacks them once;
+//! execute only lowers, multiplies, and (Solution A) repacks —
+//! allocating nothing.
+//!
+//! Precision: the paper's 16-bit fixed-point grid rides the identical
+//! schedule — the lowering quantizes while it copies (halving |L|'s
+//! bytes), the overlapping-partition `ld` trick works unchanged on the
+//! i16 L, and the GEMMs widen into i32. Solution A's repack stays f32
+//! (the output is f32 post-dequantization), so q16 Solution A always
+//! carries a separate `repack-aux` region instead of reusing L.
 
-use super::{AlgoKind, ConvContext, ConvPlan, Convolution};
-use crate::gemm::{gemm_prepacked, gemm_prepacked_batch, MatMut, MatRef, PackedB};
+use super::{
+    downcast_prepack, AlgoKind, ConvContext, ConvPlan, Convolution, KernelPrepack, PackedKernel,
+};
+use crate::gemm::{
+    gemm_prepacked, gemm_prepacked_batch, gemm_prepacked_batch_i16, gemm_prepacked_i16, MatMut,
+    MatRef, MatRefI16, PackedB, PackedBI16,
+};
 use crate::memory::WorkspaceLayout;
+use crate::tensor::quant::{f32_as_i16_mut, i16_slots, Precision, QParams};
 use crate::tensor::{ConvShape, Kernel, Tensor};
 use crate::threadpool::parallel_for;
+use std::sync::Arc;
 
 /// Which mini-batch schedule to use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Solution {
-    /// Algorithm 2 line 8: A if `o_w ≤ T` and `|O| ≤ |L|`, else B.
+    /// Algorithm 2 line 8: A if `o_w ≤ T` and the repack aux fits, else B.
     Auto,
     A,
     B,
@@ -58,11 +73,15 @@ impl Mec {
         Mec { solution: Solution::B }
     }
 
-    /// Resolve the schedule for a geometry (Algorithm 2 line 8).
+    /// Resolve the schedule for a geometry (Algorithm 2 line 8). The
+    /// availability condition is precision-aware: f32 Solution A reuses L
+    /// as the repack aux (`|O| ≤ |L|`); q16 Solution A needs a separate
+    /// f32 aux next to the halved i16 L, and stays Auto-eligible only
+    /// while that total still fits the analytic Eq. 3 budget.
     pub fn resolve(&self, ctx: &ConvContext, shape: &ConvShape) -> Solution {
         match self.solution {
             Solution::Auto => {
-                if shape.ow() <= ctx.mec_t && solution_a_available(shape) {
+                if shape.ow() <= ctx.mec_t && solution_a_available_p(shape, ctx.precision) {
                     Solution::A
                 } else {
                     Solution::B
@@ -102,12 +121,67 @@ impl Mec {
             }
         });
     }
+
+    /// Quantizing variant of [`Mec::lower`]: the identical strip walk,
+    /// but each element is quantized into the i16 L with `qp`'s scale —
+    /// Eq. 3's compact lowering at half the bytes.
+    pub fn lower_q16(
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        input: &Tensor,
+        qp: QParams,
+        l: &mut [i16],
+    ) {
+        let s = *shape;
+        let ow = s.ow();
+        let k = s.kernel;
+        let ish = s.input;
+        let strip = k.kw * k.ic;
+        let row_len = ish.h * strip;
+        assert_eq!(l.len(), ish.n * ow * row_len);
+        let in_data = input.data();
+        let lp = crate::threadpool::SharedSlice::new(l);
+
+        parallel_for(ctx.threads, ish.n * ow, |t| {
+            let l_data: &mut [i16] = lp.slice();
+            let n = t / ow;
+            let w = t % ow;
+            let dst_base = t * row_len;
+            let src_col = s.sw * w * k.ic;
+            for h in 0..ish.h {
+                let src = ish.index(n, h, 0, 0) + src_col;
+                let dst = dst_base + h * strip;
+                for (d, &v) in l_data[dst..dst + strip]
+                    .iter_mut()
+                    .zip(&in_data[src..src + strip])
+                {
+                    *d = qp.quantize(v);
+                }
+            }
+        });
+    }
 }
 
-/// `|O| ≤ |L|` — Solution A needs L as the repack aux (Alg. 2 line 8).
+/// `|O| ≤ |L|` — f32 Solution A needs L as the repack aux (Alg. 2 line 8).
 /// Batch-independent: both sides scale linearly in `i_n`.
 pub fn solution_a_available(shape: &ConvShape) -> bool {
     shape.output().len() <= shape.mec_lowered_elems()
+}
+
+/// Precision-aware Solution-A availability — the ONE definition of the
+/// Algorithm-2 line-8 aux condition, shared by [`Mec::resolve`] and the
+/// planner's [`CostModel`](crate::planner::CostModel) so the cost
+/// estimate can never model a schedule the plan won't execute. f32
+/// reuses L as the repack aux; q16's f32 aux must fit beside the halved
+/// i16 L within the analytic Eq. 3 budget.
+pub fn solution_a_available_p(shape: &ConvShape, precision: Precision) -> bool {
+    match precision {
+        Precision::F32 => solution_a_available(shape),
+        Precision::Q16 => {
+            i16_slots(shape.mec_lowered_elems()) + shape.output().len()
+                <= shape.mec_lowered_elems()
+        }
+    }
 }
 
 impl Convolution for Mec {
@@ -134,19 +208,68 @@ impl Convolution for Mec {
         }
     }
 
-    fn plan(&self, ctx: &ConvContext, shape: &ConvShape, kernel: &Kernel) -> Box<dyn ConvPlan> {
-        assert_eq!(kernel.shape(), shape.kernel);
-        let k = shape.kernel;
-        let kdim = k.kh * k.kw * k.ic;
+    /// Under q16 the lowered L is stored in i16 lanes (half the Eq. 3
+    /// bytes) and Solution A carries a separate f32 repack aux. For the
+    /// pinned variants this is exactly the plan's layout; for Auto it is
+    /// the max over the schedules the `T` dispatch can resolve to (the
+    /// cost model has no `ctx`), so budget admission never under-counts.
+    fn workspace_bytes_prec(&self, shape: &ConvShape, precision: Precision) -> usize {
+        match precision {
+            Precision::F32 => self.workspace_bytes(shape),
+            Precision::Q16 => {
+                let slots = i16_slots(shape.mec_lowered_elems());
+                let aux = match self.solution {
+                    Solution::B => 0,
+                    Solution::A => shape.output().len(),
+                    Solution::Auto => {
+                        if solution_a_available_p(shape, Precision::Q16) {
+                            shape.output().len()
+                        } else {
+                            0
+                        }
+                    }
+                };
+                (slots + aux) * 4
+            }
+        }
+    }
+
+    fn prepack(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        kernel: &Kernel,
+    ) -> Arc<dyn KernelPrepack> {
+        Arc::new(PackedKernel::pack(ctx, shape, kernel))
+    }
+
+    fn plan_shared(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        prepack: Arc<dyn KernelPrepack>,
+    ) -> Box<dyn ConvPlan> {
+        let packed_k: Arc<PackedKernel> = downcast_prepack(prepack, "mec");
         let solution = self.resolve(ctx, shape);
         let mut layout = WorkspaceLayout::new();
-        layout.push("lowered", shape.mec_lowered_elems());
-        // Pinned Solution A where |O| > |L|: the h-n-w-c → n-h-w-c repack
-        // cannot reuse L and needs its own region.
-        if solution == Solution::A && !solution_a_available(shape) {
-            layout.push("repack-aux", shape.output().len());
+        match &*packed_k {
+            PackedKernel::F32(_) => {
+                layout.push("lowered", shape.mec_lowered_elems());
+                // Pinned Solution A where |O| > |L|: the h-n-w-c → n-h-w-c
+                // repack cannot reuse L and needs its own region.
+                if solution == Solution::A && !solution_a_available(shape) {
+                    layout.push("repack-aux", shape.output().len());
+                }
+            }
+            PackedKernel::Q16 { .. } => {
+                layout.push_i16("lowered", shape.mec_lowered_elems());
+                // The i16 L cannot host the f32 repack, so q16 Solution A
+                // always carries a separate aux region.
+                if solution == Solution::A {
+                    layout.push("repack-aux", shape.output().len());
+                }
+            }
         }
-        let kmat = MatRef::new(kernel.data(), kdim, k.kc);
         Box::new(MecPlan {
             ctx: ctx.clone(),
             shape: *shape,
@@ -156,21 +279,21 @@ impl Convolution for Mec {
                 Solution::B => AlgoKind::MecSolutionB,
             },
             solution,
-            packed_k: PackedB::pack(kmat, ctx.blocks),
+            packed_k,
             layout,
         })
     }
 }
 
 /// Plan for MEC: the Algorithm-2 line-8 dispatch resolved, the kernel
-/// matrix packed once, and the Eq. (3) lowered region (+ optional repack
-/// aux) laid out.
+/// matrix packed once (shared, precision-resolved), and the Eq. (3)
+/// lowered region (+ optional repack aux) laid out.
 pub struct MecPlan {
     ctx: ConvContext,
     shape: ConvShape,
     kind: AlgoKind,
     solution: Solution,
-    packed_k: PackedB,
+    packed_k: Arc<PackedKernel>,
     layout: WorkspaceLayout,
 }
 
@@ -198,25 +321,53 @@ impl ConvPlan for MecPlan {
         self.packed_k.bytes()
     }
 
+    fn shared_prepack(&self) -> Option<Arc<dyn KernelPrepack>> {
+        Some(Arc::clone(&self.packed_k) as Arc<dyn KernelPrepack>)
+    }
+
     fn execute_in(&self, input: &Tensor, scratch: &mut [f32], output: &mut Tensor) {
         let s = self.shape;
         assert_eq!(output.shape(), s.output());
         assert_eq!(input.shape(), s.input);
         let total = self.layout.total_elems();
         let buf = &mut scratch[..total];
-        match self.solution {
-            Solution::A => {
-                let l_elems = s.mec_lowered_elems();
-                let (l, aux) = if total > l_elems {
-                    let (l, aux) = buf.split_at_mut(l_elems);
-                    (l, Some(aux))
-                } else {
-                    (buf, None)
-                };
-                run_solution_a(&self.ctx, &s, input, &self.packed_k, l, aux, output);
+        match &*self.packed_k {
+            PackedKernel::F32(pk) => match self.solution {
+                Solution::A => {
+                    let l_elems = s.mec_lowered_elems();
+                    let (l, aux) = if total > l_elems {
+                        let (l, aux) = buf.split_at_mut(l_elems);
+                        (l, Some(aux))
+                    } else {
+                        (buf, None)
+                    };
+                    run_solution_a(&self.ctx, &s, input, pk, l, aux, output);
+                }
+                Solution::B => run_solution_b(&self.ctx, &s, input, pk, buf, output),
+                Solution::Auto => unreachable!("plan() always resolves the schedule"),
+            },
+            PackedKernel::Q16 { packed, qk } => {
+                // Dynamic activation scale; the combined dequant scale
+                // folds the Q15 product shift (2^15) back out.
+                let qa = QParams::from_slice(input.data());
+                let scale = qa.scale * qk.scale * 32768.0;
+                let l_slots = i16_slots(s.mec_lowered_elems());
+                match self.solution {
+                    Solution::A => {
+                        let (l_f32, aux) = buf.split_at_mut(l_slots);
+                        let l = &mut f32_as_i16_mut(l_f32)[..s.mec_lowered_elems()];
+                        Mec::lower_q16(&self.ctx, &s, input, qa, l);
+                        run_gemms_a_q16(&self.ctx, &s, packed, scale, l, output);
+                        repack_hnwc_to_nhwc(&self.ctx, &s, aux, output);
+                    }
+                    Solution::B => {
+                        let l = &mut f32_as_i16_mut(&mut buf[..l_slots])[..s.mec_lowered_elems()];
+                        Mec::lower_q16(&self.ctx, &s, input, qa, l);
+                        run_gemms_b_q16(&self.ctx, &s, packed, scale, l, output);
+                    }
+                    Solution::Auto => unreachable!("plan() always resolves the schedule"),
+                }
             }
-            Solution::B => run_solution_b(&self.ctx, &s, input, &self.packed_k, buf, output),
-            Solution::Auto => unreachable!("plan() always resolves the schedule"),
         }
     }
 }
@@ -283,6 +434,56 @@ fn run_solution_a(
         Some(a) => a,
         None => &mut l[..o_elems],
     };
+    repack_hnwc_to_nhwc(ctx, s, aux, output);
+}
+
+/// The q16 twin of Solution A's GEMM stage: the same `o_h` overlapping
+/// partitions of the (now i16) L, widening GEMMs, dequantized f32 out.
+fn run_gemms_a_q16(
+    ctx: &ConvContext,
+    s: &ConvShape,
+    packed_k: &PackedBI16,
+    scale: f32,
+    l: &[i16],
+    output: &mut Tensor,
+) {
+    let (oh, ow) = (s.oh(), s.ow());
+    let k = s.kernel;
+    let n = s.input.n;
+    let l_rows = n * ow;
+    let l_cols = s.input.h * k.kw * k.ic;
+    let kdim = k.kh * k.kw * k.ic;
+    let step = s.sh * k.kw * k.ic;
+    let out_row = n * ow * k.kc;
+    if ctx.threads <= 1 {
+        let a_views: Vec<MatRefI16<'_>> = (0..oh)
+            .map(|h| MatRefI16::strided(&l[step * h..], l_rows, kdim, l_cols))
+            .collect();
+        let mut c_views: Vec<MatMut<'_>> = output
+            .data_mut()
+            .chunks_exact_mut(out_row)
+            .map(|chunk| MatMut::new(chunk, l_rows, k.kc))
+            .collect();
+        gemm_prepacked_batch_i16(&a_views, packed_k, &mut c_views, scale);
+    } else {
+        let out = crate::threadpool::SharedSlice::new(output.data_mut());
+        parallel_for(ctx.threads.min(oh), oh, |h| {
+            let out_data: &mut [f32] = out.slice();
+            let a = MatRefI16::strided(&l[step * h..], l_rows, kdim, l_cols);
+            let mut c = MatMut::new(&mut out_data[h * out_row..(h + 1) * out_row], l_rows, k.kc);
+            gemm_prepacked_i16(a, packed_k, &mut c, scale);
+        });
+    }
+}
+
+/// Algorithm 2 lines 14-19: repack the h-n-w-c GEMM output to n-h-w-c
+/// through `aux` (L in f32 Solution A, a dedicated region otherwise).
+fn repack_hnwc_to_nhwc(ctx: &ConvContext, s: &ConvShape, aux: &mut [f32], output: &mut Tensor) {
+    let (oh, ow) = (s.oh(), s.ow());
+    let k = s.kernel;
+    let n = s.input.n;
+    let o_elems = s.output().len();
+    let aux = &mut aux[..o_elems];
     aux.copy_from_slice(&output.data()[..o_elems]); // line 14: L = O
     let chunk = ow * k.kc; // o_w·k_c contiguous run per (n,h)
     let out = crate::threadpool::SharedSlice::new(output.data_mut());
@@ -352,6 +553,52 @@ fn run_solution_b(
             let dst = (nn * oh + h) * chunk;
             let mut c = MatMut::new(&mut out_data[dst..dst + chunk], ow, k.kc);
             gemm_prepacked(a, packed_k, &mut c);
+        });
+    }
+}
+
+/// The q16 twin of Solution B: per-sample batched widening GEMMs over the
+/// i16 L, directly in n-h-w-c.
+fn run_gemms_b_q16(
+    ctx: &ConvContext,
+    s: &ConvShape,
+    packed_k: &PackedBI16,
+    scale: f32,
+    l: &[i16],
+    output: &mut Tensor,
+) {
+    let (oh, ow) = (s.oh(), s.ow());
+    let k = s.kernel;
+    let n = s.input.n;
+    let l_cols = s.input.h * k.kw * k.ic;
+    let kdim = k.kh * k.kw * k.ic;
+    let step = s.sh * k.kw * k.ic;
+    let sample_l = ow * l_cols;
+    let chunk = ow * k.kc;
+    if ctx.threads <= 1 {
+        let a_views: Vec<MatRefI16<'_>> = (0..n * oh)
+            .map(|t| {
+                let nn = t / oh;
+                let h = t % oh;
+                MatRefI16::strided(&l[nn * sample_l + step * h..], ow, kdim, l_cols)
+            })
+            .collect();
+        let mut c_views: Vec<MatMut<'_>> = output
+            .data_mut()
+            .chunks_exact_mut(chunk)
+            .map(|ch| MatMut::new(ch, ow, k.kc))
+            .collect();
+        gemm_prepacked_batch_i16(&a_views, packed_k, &mut c_views, scale);
+    } else {
+        let out = crate::threadpool::SharedSlice::new(output.data_mut());
+        parallel_for(ctx.threads, n * oh, |t| {
+            let out_data: &mut [f32] = out.slice();
+            let nn = t / oh;
+            let h = t % oh;
+            let a = MatRefI16::strided(&l[nn * sample_l + step * h..], ow, kdim, l_cols);
+            let dst = (nn * oh + h) * chunk;
+            let mut c = MatMut::new(&mut out_data[dst..dst + chunk], ow, k.kc);
+            gemm_prepacked_i16(a, packed_k, &mut c, scale);
         });
     }
 }
@@ -498,6 +745,19 @@ mod tests {
     }
 
     #[test]
+    fn q16_auto_dispatch_accounts_for_separate_aux() {
+        // fig2: i16_slots(105) + 25 = 53 + 25 = 78 <= 105 -> still A.
+        let q16 = ConvContext::default().with_precision(Precision::Q16);
+        assert_eq!(Mec::auto().resolve(&q16, &fig2_shape()), Solution::A);
+        // |O| close to |L|: f32 still picks A, q16 must fall to B because
+        // half-L + aux would exceed the Eq. 3 budget.
+        let tight = ConvShape::new(Nhwc::new(1, 7, 7, 1), KernelShape::new(3, 3, 1, 3), 1, 1);
+        assert!(solution_a_available(&tight)); // 75 <= 105
+        assert_eq!(Mec::auto().resolve(&ConvContext::default(), &tight), Solution::A);
+        assert_eq!(Mec::auto().resolve(&q16, &tight), Solution::B); // 53+75 > 105
+    }
+
+    #[test]
     fn plan_resolves_dispatch_once() {
         // The plan freezes the Algorithm-2 line-8 decision at plan time.
         let ctx = ConvContext::default();
@@ -515,6 +775,60 @@ mod tests {
             fat.mec_lowered_elems() + fat.output().len()
         );
         assert!(plan_a.layout().region("repack-aux").is_some());
+    }
+
+    #[test]
+    fn q16_plan_halves_lowered_and_keeps_aux() {
+        let s = fig2_shape();
+        let kernel = Kernel::zeros(s.kernel);
+        let q16 = ConvContext::default().with_precision(Precision::Q16);
+        let plan = Mec::auto().plan(&q16, &s, &kernel);
+        let lowered = plan.layout().region("lowered").unwrap().elems;
+        assert_eq!(lowered, s.mec_lowered_elems().div_ceil(2));
+        // Auto resolved to A under q16 (see dispatch test) -> aux present.
+        assert_eq!(
+            plan.layout().region("repack-aux").unwrap().elems,
+            s.output().len()
+        );
+    }
+
+    #[test]
+    fn q16_solutions_match_direct_within_quantization_noise() {
+        for (solution, threads, seed) in [
+            (Solution::A, 1usize, 0x70u64),
+            (Solution::A, 3, 0x71),
+            (Solution::B, 1, 0x72),
+            (Solution::B, 4, 0x73),
+        ] {
+            let shape = ConvShape::new(Nhwc::new(2, 10, 9, 3), KernelShape::new(3, 3, 3, 4), 1, 1);
+            let mut rng = Rng::new(seed);
+            let input = Tensor::random(shape.input, &mut rng);
+            let kernel = Kernel::random(shape.kernel, &mut rng);
+            let mut want = Tensor::zeros(shape.output());
+            Direct.run(
+                &ConvContext::default(),
+                &shape,
+                &input,
+                &kernel,
+                &mut Workspace::new(),
+                &mut want,
+            );
+            let ctx = ConvContext::default()
+                .with_threads(threads)
+                .with_precision(Precision::Q16);
+            let plan = Mec { solution }.plan(&ctx, &shape, &kernel);
+            // Plain Vec scratch (not a tracked Arena): unit tests must not
+            // perturb the global tracker the memory tests assert against.
+            let mut scratch = vec![0.0f32; plan.workspace_elems()];
+            let mut got = Tensor::zeros(shape.output());
+            plan.execute_in(&input, &mut scratch, &mut got);
+            assert_allclose(
+                got.data(),
+                want.data(),
+                1e-3,
+                &format!("q16 {:?} t={threads}", solution),
+            );
+        }
     }
 
     #[test]

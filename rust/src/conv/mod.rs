@@ -39,9 +39,12 @@ pub mod mec;
 pub mod winograd;
 pub mod winograd_chunked;
 
-use crate::gemm::BlockSizes;
+use crate::gemm::{BlockSizes, MatRef, MatRefI16, PackedB, PackedBI16};
 use crate::memory::{Arena, Workspace, WorkspaceLayout};
+use crate::tensor::quant::{Precision, QParams};
 use crate::tensor::{ConvShape, Kernel, Tensor};
+use std::any::Any;
+use std::sync::Arc;
 
 /// Execution environment for a convolution call.
 #[derive(Debug, Clone)]
@@ -57,6 +60,13 @@ pub struct ConvContext {
     /// Cap on cached FFT kernel spectra; above this the FFT algorithm
     /// streams kernel transforms instead of caching them.
     pub fft_cache_cap_bytes: usize,
+    /// Execution precision of the GEMM-lowering family (paper §4's two
+    /// grids): `F32`, or `Q16` (i16 storage, i32 accumulate, symmetric
+    /// per-tensor scales — kernels quantized at plan time, activations
+    /// per execute). `direct` always runs f32 (the reference oracle);
+    /// Winograd/FFT have no q16 path, so the planner excludes them under
+    /// `Q16` and falls back to the quantized GEMM family.
+    pub precision: Precision,
 }
 
 impl Default for ConvContext {
@@ -66,6 +76,7 @@ impl Default for ConvContext {
             blocks: BlockSizes::default(),
             mec_t: 100,
             fft_cache_cap_bytes: 256 << 20,
+            precision: Precision::F32,
         }
     }
 }
@@ -91,6 +102,96 @@ impl ConvContext {
 
     pub fn with_mec_t(mut self, t: usize) -> ConvContext {
         self.mec_t = t;
+        self
+    }
+
+    pub fn with_precision(mut self, p: Precision) -> ConvContext {
+        self.precision = p;
+        self
+    }
+}
+
+/// A batch-independent kernel-side precomputation: the prepacked GEMM
+/// B-operand (im2col/MEC), Winograd's transformed filters U, FFT kernel
+/// spectra, or direct's owned kernel copy. Everything a plan holds that
+/// depends only on `(kernel, context)` — never on the batch size — lives
+/// behind this trait, so the model can build it **once per layer** and
+/// `Arc`-share it across every per-batch-size [`ConvPlan`] (dynamic
+/// batching used to duplicate these per cached geometry).
+pub trait KernelPrepack: Send + Sync {
+    /// Resident bytes held by the shared prepack (counted once per layer,
+    /// not per plan).
+    fn bytes(&self) -> usize;
+
+    /// Type recovery for [`Convolution::plan_shared`].
+    fn into_any_arc(self: Arc<Self>) -> Arc<dyn Any + Send + Sync>;
+}
+
+/// Downcast a shared prepack to the algorithm's concrete type; panics
+/// with the algorithm name when handed a foreign prepack.
+pub(crate) fn downcast_prepack<T: Send + Sync + 'static>(
+    prepack: Arc<dyn KernelPrepack>,
+    algo: &str,
+) -> Arc<T> {
+    prepack
+        .into_any_arc()
+        .downcast::<T>()
+        .unwrap_or_else(|_| panic!("{algo}: shared prepack built by a different algorithm"))
+}
+
+/// The prepacked GEMM B-operand for the kernel matrix
+/// (`k_h·k_w·i_c × k_c`), in the planned precision — the shared prepack
+/// of both the im2col and MEC plans. Q16 quantizes the kernel once here
+/// (symmetric per-tensor scale, round-to-nearest) so execute never
+/// touches the f32 weights.
+pub enum PackedKernel {
+    F32(PackedB),
+    Q16 { packed: PackedBI16, qk: QParams },
+}
+
+impl PackedKernel {
+    pub fn pack(ctx: &ConvContext, shape: &ConvShape, kernel: &Kernel) -> PackedKernel {
+        assert_eq!(kernel.shape(), shape.kernel);
+        let k = shape.kernel;
+        let kdim = k.kh * k.kw * k.ic;
+        match ctx.precision {
+            Precision::F32 => PackedKernel::F32(PackedB::pack(
+                MatRef::new(kernel.data(), kdim, k.kc),
+                ctx.blocks,
+            )),
+            Precision::Q16 => {
+                let qk = QParams::from_slice(kernel.data());
+                let mut q = vec![0i16; kernel.data().len()];
+                qk.quantize_slice(kernel.data(), &mut q);
+                PackedKernel::Q16 {
+                    packed: PackedBI16::pack(MatRefI16::new(&q, kdim, k.kc), ctx.blocks),
+                    qk,
+                }
+            }
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        match self {
+            PackedKernel::F32(p) => p.bytes(),
+            PackedKernel::Q16 { packed, .. } => packed.bytes(),
+        }
+    }
+
+    pub fn precision(&self) -> Precision {
+        match self {
+            PackedKernel::F32(_) => Precision::F32,
+            PackedKernel::Q16 { .. } => Precision::Q16,
+        }
+    }
+}
+
+impl KernelPrepack for PackedKernel {
+    fn bytes(&self) -> usize {
+        PackedKernel::bytes(self)
+    }
+
+    fn into_any_arc(self: Arc<Self>) -> Arc<dyn Any + Send + Sync> {
         self
     }
 }
@@ -127,8 +228,17 @@ pub trait ConvPlan: Send + Sync {
     /// model-load memory, paid once, carved out of the algorithm-level
     /// analytic `workspace_elems` where applicable. `resident_bytes` +
     /// `workspace_bytes` ≈ the algorithm's total footprint beyond I/K/O.
+    /// Since prepacks are `Arc`-shared, plans for several batch sizes of
+    /// one layer report the same resident bytes but hold one copy.
     fn resident_bytes(&self) -> usize {
         0
+    }
+
+    /// The shared batch-independent prepack this plan executes with —
+    /// what the model's per-layer prepack cache hands out, and what the
+    /// sharing tests compare by pointer.
+    fn shared_prepack(&self) -> Option<Arc<dyn KernelPrepack>> {
+        None
     }
 
     /// Core entry point: run the convolution with caller-provided scratch
@@ -168,10 +278,41 @@ pub trait Convolution: Send + Sync {
         self.workspace_elems(shape) * std::mem::size_of::<f32>()
     }
 
+    /// Analytic workspace in bytes under `precision` — what a
+    /// precision-aware planner budgets with. Defaults to the f32 figure;
+    /// the GEMM-lowering family overrides it so the halved i16 buffers
+    /// genuinely relax tight budgets (the paper's fixed-point memory
+    /// win), matching the plan's actual layout for that precision.
+    fn workspace_bytes_prec(&self, shape: &ConvShape, precision: Precision) -> usize {
+        let _ = precision;
+        self.workspace_bytes(shape)
+    }
+
+    /// Build the batch-independent kernel-side prepack for this algorithm
+    /// (everything `plan` precomputes that does not depend on the batch
+    /// size). The model builds this once per layer and shares it across
+    /// per-batch-size plans via [`Convolution::plan_shared`].
+    fn prepack(&self, ctx: &ConvContext, shape: &ConvShape, kernel: &Kernel)
+        -> Arc<dyn KernelPrepack>;
+
+    /// Build a plan around an externally shared prepack. The prepack must
+    /// come from this algorithm's [`Convolution::prepack`] under an
+    /// equivalent context and the same kernel; a foreign prepack panics.
+    fn plan_shared(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        prepack: Arc<dyn KernelPrepack>,
+    ) -> Box<dyn ConvPlan>;
+
     /// Build a reusable plan: resolve dispatch, prepack/transform the
     /// kernel, fix the workspace layout. Pays all setup cost once so
     /// [`ConvPlan::execute`] can amortize it across every request.
-    fn plan(&self, ctx: &ConvContext, shape: &ConvShape, kernel: &Kernel) -> Box<dyn ConvPlan>;
+    /// (A thin prepack-then-plan_shared composition, so the one-shot and
+    /// shared paths are the same code.)
+    fn plan(&self, ctx: &ConvContext, shape: &ConvShape, kernel: &Kernel) -> Box<dyn ConvPlan> {
+        self.plan_shared(ctx, shape, self.prepack(ctx, shape, kernel))
+    }
 
     /// One-shot convenience: plan, then execute out of `ws`. Kept for
     /// tests/examples and cold paths; the serving stack holds plans
@@ -277,6 +418,25 @@ impl AlgoKind {
         })
     }
 
+    /// Whether the algorithm has an execution path for precision `p`.
+    /// The GEMM-lowering family (im2col, every MEC variant) runs q16;
+    /// `direct` stays the f32 reference; Winograd and FFT are f32-only
+    /// (their transforms have no fixed-point formulation here), so a q16
+    /// planner treats them as unsupported and falls back.
+    pub fn supports_precision(&self, p: Precision) -> bool {
+        match p {
+            Precision::F32 => true,
+            Precision::Q16 => matches!(
+                self,
+                AlgoKind::Direct
+                    | AlgoKind::Im2col
+                    | AlgoKind::Mec
+                    | AlgoKind::MecSolutionA
+                    | AlgoKind::MecSolutionB
+            ),
+        }
+    }
+
     /// Instantiate the algorithm.
     pub fn build(&self) -> Box<dyn Convolution> {
         match self {
@@ -357,5 +517,58 @@ mod tests {
         assert_eq!(ConvContext::mobile().threads, 1);
         assert!(ConvContext::server().threads >= 1);
         assert_eq!(ConvContext::default().mec_t, 100);
+        assert_eq!(ConvContext::default().precision, Precision::F32);
+        assert_eq!(
+            ConvContext::default().with_precision(Precision::Q16).precision,
+            Precision::Q16
+        );
+    }
+
+    #[test]
+    fn precision_support_matrix() {
+        for k in AlgoKind::ALL {
+            assert!(k.supports_precision(Precision::F32), "{}", k.name());
+        }
+        for k in [
+            AlgoKind::Direct,
+            AlgoKind::Im2col,
+            AlgoKind::Mec,
+            AlgoKind::MecSolutionA,
+            AlgoKind::MecSolutionB,
+        ] {
+            assert!(k.supports_precision(Precision::Q16), "{}", k.name());
+        }
+        for k in [AlgoKind::Winograd, AlgoKind::WinogradChunked, AlgoKind::Fft] {
+            assert!(!k.supports_precision(Precision::Q16), "{}", k.name());
+        }
+    }
+
+    #[test]
+    fn packed_kernel_follows_context_precision_and_halves_bytes() {
+        use crate::tensor::{KernelShape, Nhwc};
+        let shape = ConvShape::new(Nhwc::new(1, 8, 8, 3), KernelShape::new(3, 3, 3, 8), 1, 1);
+        let mut rng = crate::util::Rng::new(0x51);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let f = PackedKernel::pack(&ConvContext::default(), &shape, &kernel);
+        let q = PackedKernel::pack(
+            &ConvContext::default().with_precision(Precision::Q16),
+            &shape,
+            &kernel,
+        );
+        assert_eq!(f.precision(), Precision::F32);
+        assert_eq!(q.precision(), Precision::Q16);
+        assert_eq!(q.bytes() * 2, f.bytes());
+    }
+
+    #[test]
+    #[should_panic(expected = "different algorithm")]
+    fn foreign_prepack_is_rejected() {
+        use crate::tensor::{KernelShape, Nhwc};
+        let shape = ConvShape::new(Nhwc::new(1, 7, 7, 1), KernelShape::new(3, 3, 1, 1), 1, 1);
+        let kernel = Kernel::zeros(shape.kernel);
+        let ctx = ConvContext::default();
+        // A direct prepack handed to im2col must panic, not mis-execute.
+        let foreign = AlgoKind::Direct.build().prepack(&ctx, &shape, &kernel);
+        let _ = AlgoKind::Im2col.build().plan_shared(&ctx, &shape, foreign);
     }
 }

@@ -23,13 +23,31 @@
 //! memory (like a prepacked weight), so the per-call workspace is V + M
 //! and execute performs no filter transforms.
 
-use super::{AlgoKind, ConvContext, ConvPlan, Convolution};
+use super::{downcast_prepack, AlgoKind, ConvContext, ConvPlan, Convolution, KernelPrepack};
 use crate::gemm::{gemm_ex, MatMut, MatRef};
 use crate::memory::WorkspaceLayout;
 use crate::tensor::{ConvShape, Kernel, Tensor};
 use crate::threadpool::{parallel_for, SharedSlice};
+use std::any::Any;
+use std::sync::Arc;
 
 pub struct Winograd;
+
+/// The transformed filters U = G g Gᵀ (16 matrices of k_c×i_c) —
+/// batch-independent, shared across a layer's per-batch-size plans.
+pub struct WinogradPrepack {
+    pub u: Vec<f32>,
+}
+
+impl KernelPrepack for WinogradPrepack {
+    fn bytes(&self) -> usize {
+        self.u.len() * 4
+    }
+
+    fn into_any_arc(self: Arc<Self>) -> Arc<dyn Any + Send + Sync> {
+        self
+    }
+}
 
 /// Tiles along one axis: 2-output tiles, ceil.
 fn tiles(o: usize) -> usize {
@@ -63,7 +81,12 @@ impl Convolution for Winograd {
         16 * kc * ic + 16 * ic * p + 16 * kc * p
     }
 
-    fn plan(&self, ctx: &ConvContext, shape: &ConvShape, kernel: &Kernel) -> Box<dyn ConvPlan> {
+    fn prepack(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        kernel: &Kernel,
+    ) -> Arc<dyn KernelPrepack> {
         assert!(
             self.supports(shape),
             "winograd: unsupported geometry {}",
@@ -71,29 +94,46 @@ impl Convolution for Winograd {
         );
         assert_eq!(kernel.shape(), shape.kernel);
         let (ic, kc) = (shape.kernel.ic, shape.kernel.kc);
-        let p = tile_count(shape);
         // ---- plan-time: U[xy][o][i] = (G g Gᵀ)[xy] once ----
         let mut u = vec![0.0f32; 16 * kc * ic];
         kernel_transform(ctx, kernel, ic, kc, &mut u);
+        Arc::new(WinogradPrepack { u })
+    }
+
+    fn plan_shared(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        prepack: Arc<dyn KernelPrepack>,
+    ) -> Box<dyn ConvPlan> {
+        assert!(
+            self.supports(shape),
+            "winograd: unsupported geometry {}",
+            shape.describe()
+        );
+        let prepack: Arc<WinogradPrepack> = downcast_prepack(prepack, "winograd");
+        let (ic, kc) = (shape.kernel.ic, shape.kernel.kc);
+        assert_eq!(prepack.u.len(), 16 * kc * ic, "winograd: prepack shape mismatch");
+        let p = tile_count(shape);
         let mut layout = WorkspaceLayout::new();
         layout.push("input-transform", 16 * ic * p);
         layout.push("products", 16 * kc * p);
         Box::new(WinogradPlan {
             ctx: ctx.clone(),
             shape: *shape,
-            u,
+            prepack,
             layout,
         })
     }
 }
 
-/// Plan for fully-materialized F(2×2,3×3): transformed filters resident,
-/// V and M regions laid out.
+/// Plan for fully-materialized F(2×2,3×3): transformed filters resident
+/// (shared), V and M regions laid out.
 pub struct WinogradPlan {
     ctx: ConvContext,
     shape: ConvShape,
     /// Transformed filters, 16 matrices of k_c×i_c ([xy][o][i]).
-    u: Vec<f32>,
+    prepack: Arc<WinogradPrepack>,
     layout: WorkspaceLayout,
 }
 
@@ -111,7 +151,11 @@ impl ConvPlan for WinogradPlan {
     }
 
     fn resident_bytes(&self) -> usize {
-        self.u.len() * 4
+        self.prepack.bytes()
+    }
+
+    fn shared_prepack(&self) -> Option<Arc<dyn KernelPrepack>> {
+        Some(Arc::clone(&self.prepack) as Arc<dyn KernelPrepack>)
     }
 
     fn execute_in(&self, input: &Tensor, scratch: &mut [f32], output: &mut Tensor) {
@@ -132,7 +176,7 @@ impl ConvPlan for WinogradPlan {
         // ---- 2. 16 batched GEMMs: M[xy] = U[xy] (kc×ic) × V[xy] (ic×P) ----
         {
             let m_shared = SharedSlice::new(m);
-            let u_ref: &[f32] = &self.u;
+            let u_ref: &[f32] = &self.prepack.u;
             let v_ref: &[f32] = v;
             let inner = if ctx.threads >= 16 { 1 } else { ctx.threads };
             parallel_for(ctx.threads.min(16), 16, |xy| {

@@ -17,11 +17,13 @@
 //! prepacked weight), so per-call scratch is just the V/M chunk.
 
 use super::winograd::{kernel_transform, tile_count};
-use super::{AlgoKind, ConvContext, ConvPlan, Convolution};
+use super::{downcast_prepack, AlgoKind, ConvContext, ConvPlan, Convolution, KernelPrepack};
 use crate::gemm::{gemm_prepacked, MatMut, MatRef, PackedB};
 use crate::memory::WorkspaceLayout;
 use crate::tensor::{ConvShape, Kernel, Tensor};
 use crate::threadpool::{parallel_for, SharedSlice};
+use std::any::Any;
+use std::sync::Arc;
 
 /// Tiles processed per chunk. 64 ⇒ V/M chunks of 16·64·(i_c+k_c) floats:
 /// cache-resident for every cv layer while keeping gemm m=chunk efficient.
@@ -43,6 +45,22 @@ impl WinogradChunked {
     }
 }
 
+/// U transformed and GEMM-prepacked per xy (16 `PackedB`s) —
+/// batch-independent, shared across a layer's per-batch-size plans.
+pub struct WinogradChunkedPrepack {
+    pub packed_u: Vec<PackedB>,
+}
+
+impl KernelPrepack for WinogradChunkedPrepack {
+    fn bytes(&self) -> usize {
+        self.packed_u.iter().map(|p| p.bytes()).sum()
+    }
+
+    fn into_any_arc(self: Arc<Self>) -> Arc<dyn Any + Send + Sync> {
+        self
+    }
+}
+
 impl Convolution for WinogradChunked {
     fn name(&self) -> &'static str {
         "winograd-chunked"
@@ -61,7 +79,12 @@ impl Convolution for WinogradChunked {
         16 * kc * ic + ch * 16 * (ic + kc)
     }
 
-    fn plan(&self, ctx: &ConvContext, shape: &ConvShape, kernel: &Kernel) -> Box<dyn ConvPlan> {
+    fn prepack(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        kernel: &Kernel,
+    ) -> Arc<dyn KernelPrepack> {
         assert!(
             self.supports(shape),
             "winograd-chunked: unsupported geometry {}",
@@ -69,8 +92,6 @@ impl Convolution for WinogradChunked {
         );
         assert_eq!(kernel.shape(), shape.kernel);
         let (ic, kc) = (shape.kernel.ic, shape.kernel.kc);
-        let p_total = tile_count(shape);
-        let chunk = self.chunk.min(p_total).max(1);
 
         // ---- plan-time: U once, then the 16 per-xy GEMM packs ----
         let mut u = vec![0.0f32; 16 * kc * ic];
@@ -89,7 +110,25 @@ impl Convolution for WinogradChunked {
                 PackedB::pack(MatRef::new(&ut, ic, kc), ctx.blocks)
             })
             .collect();
+        Arc::new(WinogradChunkedPrepack { packed_u })
+    }
 
+    fn plan_shared(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        prepack: Arc<dyn KernelPrepack>,
+    ) -> Box<dyn ConvPlan> {
+        assert!(
+            self.supports(shape),
+            "winograd-chunked: unsupported geometry {}",
+            shape.describe()
+        );
+        let prepack: Arc<WinogradChunkedPrepack> = downcast_prepack(prepack, "winograd-chunked");
+        assert_eq!(prepack.packed_u.len(), 16);
+        let (ic, kc) = (shape.kernel.ic, shape.kernel.kc);
+        let p_total = tile_count(shape);
+        let chunk = self.chunk.min(p_total).max(1);
         let mut layout = WorkspaceLayout::new();
         layout.push("input-transform", chunk * 16 * ic);
         layout.push("products", chunk * 16 * kc);
@@ -97,19 +136,19 @@ impl Convolution for WinogradChunked {
             ctx: ctx.clone(),
             shape: *shape,
             chunk,
-            packed_u,
+            prepack,
             layout,
         })
     }
 }
 
 /// Plan for tile-chunked F(2×2,3×3): the 16 transformed-and-prepacked
-/// filter matrices resident, one chunk of V/M laid out.
+/// filter matrices resident (shared), one chunk of V/M laid out.
 pub struct WinogradChunkedPlan {
     ctx: ConvContext,
     shape: ConvShape,
     chunk: usize,
-    packed_u: Vec<PackedB>,
+    prepack: Arc<WinogradChunkedPrepack>,
     layout: WorkspaceLayout,
 }
 
@@ -127,7 +166,11 @@ impl ConvPlan for WinogradChunkedPlan {
     }
 
     fn resident_bytes(&self) -> usize {
-        self.packed_u.iter().map(|p| p.bytes()).sum()
+        self.prepack.bytes()
+    }
+
+    fn shared_prepack(&self) -> Option<Arc<dyn KernelPrepack>> {
+        Some(Arc::clone(&self.prepack) as Arc<dyn KernelPrepack>)
     }
 
     fn execute_in(&self, input: &Tensor, scratch: &mut [f32], output: &mut Tensor) {
@@ -213,7 +256,7 @@ impl ConvPlan for WinogradChunkedPlan {
                         kc,
                         16 * kc,
                     );
-                    gemm_prepacked(a, &self.packed_u[xy], &mut c);
+                    gemm_prepacked(a, &self.prepack.packed_u[xy], &mut c);
                 });
             }
             // ---- output transform for this chunk ----

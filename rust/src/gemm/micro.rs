@@ -24,10 +24,15 @@ pub fn kernel(ap: &[f32], bp: &[f32], kb: usize, acc: &mut [f32; MR * NR]) {
 /// gemms have `m = o_w` (often 5–14, paper Table 2), so the MR-strip
 /// tail is a large fraction of the work — computing padded rows cost
 /// ~35% on cv6 before this was added (§Perf iteration 2).
+///
+/// `mr` must be in `1..=MR`: every macro-kernel strip has at least one
+/// real row. `mr == 0` used to fall through to the full-MR kernel and
+/// compute 8 rows of garbage; it now zeroes `acc` (debug builds assert).
 #[inline(always)]
 pub fn kernel_edge(ap: &[f32], bp: &[f32], kb: usize, acc: &mut [f32; MR * NR], mr: usize) {
-    debug_assert!(mr <= MR);
+    debug_assert!((1..=MR).contains(&mr), "kernel_edge: mr={mr} out of range 1..=MR");
     match mr {
+        0 => acc.fill(0.0),
         1 => kernel_rows::<1>(ap, bp, kb, acc),
         2 => kernel_rows::<2>(ap, bp, kb, acc),
         3 => kernel_rows::<3>(ap, bp, kb, acc),
@@ -76,6 +81,74 @@ fn kernel_rows<const R: usize>(ap: &[f32], bp: &[f32], kb: usize, acc: &mut [f32
     }
 }
 
+/// Q15 fixed-point variant of [`kernel`]: i16 operands, i32 accumulators.
+///
+/// `acc[r][c] = Σ_k (ap[k·MR+r] · bp[k·NR+c] + 2¹⁴) >> 15` — each widened
+/// product is rounded-shifted back into Q15 before accumulation, so the
+/// running sum stays within i32 for any realistic K (the packers assert
+/// `K ≤ 2¹⁵`). The caller folds the 2¹⁵ into its dequantization scale
+/// (`scale_a · scale_b · 32768`).
+#[inline(always)]
+pub fn kernel_i16(ap: &[i16], bp: &[i16], kb: usize, acc: &mut [i32; MR * NR]) {
+    kernel_rows_i16::<MR>(ap, bp, kb, acc);
+}
+
+/// Edge variant of [`kernel_i16`]: compute only the first `mr` rows.
+/// Same `1..=MR` contract as [`kernel_edge`].
+#[inline(always)]
+pub fn kernel_edge_i16(ap: &[i16], bp: &[i16], kb: usize, acc: &mut [i32; MR * NR], mr: usize) {
+    debug_assert!(
+        (1..=MR).contains(&mr),
+        "kernel_edge_i16: mr={mr} out of range 1..=MR"
+    );
+    match mr {
+        0 => acc.fill(0),
+        1 => kernel_rows_i16::<1>(ap, bp, kb, acc),
+        2 => kernel_rows_i16::<2>(ap, bp, kb, acc),
+        3 => kernel_rows_i16::<3>(ap, bp, kb, acc),
+        4 => kernel_rows_i16::<4>(ap, bp, kb, acc),
+        5 => kernel_rows_i16::<5>(ap, bp, kb, acc),
+        6 => kernel_rows_i16::<6>(ap, bp, kb, acc),
+        7 => kernel_rows_i16::<7>(ap, bp, kb, acc),
+        _ => kernel_rows_i16::<MR>(ap, bp, kb, acc),
+    }
+}
+
+#[inline(always)]
+fn kernel_rows_i16<const R: usize>(ap: &[i16], bp: &[i16], kb: usize, acc: &mut [i32; MR * NR]) {
+    debug_assert!(ap.len() >= kb * MR);
+    debug_assert!(bp.len() >= kb * NR);
+    let mut c = [[0i32; NR]; R];
+    let mut k = 0;
+    while k + 4 <= kb {
+        for kk in 0..4 {
+            let a = &ap[(k + kk) * MR..(k + kk) * MR + MR];
+            let b = &bp[(k + kk) * NR..(k + kk) * NR + NR];
+            for r in 0..R {
+                let ar = a[r] as i32;
+                for j in 0..NR {
+                    c[r][j] += (ar * b[j] as i32 + (1 << 14)) >> 15;
+                }
+            }
+        }
+        k += 4;
+    }
+    while k < kb {
+        let a = &ap[k * MR..k * MR + MR];
+        let b = &bp[k * NR..k * NR + NR];
+        for r in 0..R {
+            let ar = a[r] as i32;
+            for j in 0..NR {
+                c[r][j] += (ar * b[j] as i32 + (1 << 14)) >> 15;
+            }
+        }
+        k += 1;
+    }
+    for r in 0..R {
+        acc[r * NR..r * NR + NR].copy_from_slice(&c[r]);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,5 +183,76 @@ mod tests {
         let mut acc = [1.0f32; MR * NR];
         kernel(&[], &[], 0, &mut acc);
         assert!(acc.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "kernel_edge: mr=0"))]
+    fn kernel_edge_rejects_zero_rows() {
+        // Debug builds assert; release builds must zero the accumulator
+        // instead of computing MR garbage rows (the old fall-through bug).
+        let mut acc = [7.0f32; MR * NR];
+        kernel_edge(&[1.0; MR], &[1.0; NR], 1, &mut acc, 0);
+        assert!(acc.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn kernel_edge_all_valid_rows_match_full() {
+        let kb = 9;
+        let mut ap = vec![0.0f32; kb * MR];
+        let mut bp = vec![0.0f32; kb * NR];
+        for (i, v) in ap.iter_mut().enumerate() {
+            *v = ((i * 7) % 11) as f32 - 5.0;
+        }
+        for (i, v) in bp.iter_mut().enumerate() {
+            *v = ((i * 3) % 13) as f32 * 0.25 - 1.5;
+        }
+        let mut full = [0.0f32; MR * NR];
+        kernel(&ap, &bp, kb, &mut full);
+        for mr in 1..=MR {
+            let mut edge = [f32::NAN; MR * NR];
+            kernel_edge(&ap, &bp, kb, &mut edge, mr);
+            for r in 0..mr {
+                assert_eq!(&edge[r * NR..r * NR + NR], &full[r * NR..r * NR + NR], "mr={mr} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_i16_matches_naive_shifted_sum() {
+        let kb = 13;
+        let mut ap = vec![0i16; kb * MR];
+        let mut bp = vec![0i16; kb * NR];
+        for (i, v) in ap.iter_mut().enumerate() {
+            *v = ((i as i32 * 2477) % 65535 - 32767) as i16;
+        }
+        for (i, v) in bp.iter_mut().enumerate() {
+            *v = ((i as i32 * 4391) % 65535 - 32767) as i16;
+        }
+        let mut acc = [0i32; MR * NR];
+        kernel_i16(&ap, &bp, kb, &mut acc);
+        for r in 0..MR {
+            for c in 0..NR {
+                let want: i32 = (0..kb)
+                    .map(|k| (ap[k * MR + r] as i32 * bp[k * NR + c] as i32 + (1 << 14)) >> 15)
+                    .sum();
+                assert_eq!(acc[r * NR + c], want, "r={r} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_edge_i16_matches_full_rows() {
+        let kb = 6;
+        let ap: Vec<i16> = (0..kb * MR).map(|i| (i as i32 * 911 % 3000 - 1500) as i16).collect();
+        let bp: Vec<i16> = (0..kb * NR).map(|i| (i as i32 * 577 % 3000 - 1500) as i16).collect();
+        let mut full = [0i32; MR * NR];
+        kernel_i16(&ap, &bp, kb, &mut full);
+        for mr in 1..=MR {
+            let mut edge = [0i32; MR * NR];
+            kernel_edge_i16(&ap, &bp, kb, &mut edge, mr);
+            for r in 0..mr {
+                assert_eq!(&edge[r * NR..r * NR + NR], &full[r * NR..r * NR + NR], "mr={mr}");
+            }
+        }
     }
 }

@@ -14,6 +14,11 @@
 
 pub mod micro;
 pub mod pack;
+pub mod q16;
+
+pub use q16::{
+    gemm_prepacked_batch_i16, gemm_prepacked_ex_i16, gemm_prepacked_i16, MatRefI16, PackedBI16,
+};
 
 use crate::threadpool::parallel_for;
 use micro::{MR, NR};

@@ -1,0 +1,547 @@
+//! 16-bit fixed-point GEMM substrate — the q16 sibling of the f32 path.
+//!
+//! The paper's §4 evaluates MEC in "16-bit fixed point" as well as f32:
+//! with the lowering already compact, operand precision is the remaining
+//! memory lever, and halving the bytes through the same L roughly halves
+//! the lowering/packing traffic. This module mirrors the f32 pipeline
+//! one-for-one so the conv plans can swap precisions without changing
+//! shape logic:
+//!
+//! * [`MatRefI16`] — strided i16 views (the BLAS `ld` trick works
+//!   unchanged on the quantized L).
+//! * [`pack_a_i16`] / [`pack_b_i16`] — the panel packers, i16 lanes.
+//! * [`PackedBI16`] — plan-time prepacked kernel matrices.
+//! * [`gemm_prepacked_i16`] / [`gemm_prepacked_ex_i16`] /
+//!   [`gemm_prepacked_batch_i16`] — the prepacked GEMMs, writing
+//!   dequantized f32 into C.
+//!
+//! Arithmetic: i16 × i16 widened to i32, each product rounded-shifted
+//! back to Q15 before accumulation (see
+//! [`micro::kernel_i16`](super::micro::kernel_i16)), so i32 accumulators
+//! cannot overflow for any `K ≤ 2¹⁵` (asserted at pack time). The caller
+//! supplies `scale = scale_a · scale_b · 32768` to map accumulator units
+//! back to f32.
+
+use super::micro::{self, MR, NR};
+use super::{scale_c, split_ranges, BlockSizes, MatMut};
+use crate::threadpool::{parallel_for, SharedSlice};
+
+/// Immutable i16 matrix view: `rows × cols` with row stride `rs`
+/// (`rs >= cols`; `rs > cols` expresses BLAS `ld` sub-matrices — MEC's
+/// overlapping partitions of the quantized L).
+#[derive(Debug, Clone, Copy)]
+pub struct MatRefI16<'a> {
+    pub data: &'a [i16],
+    pub rows: usize,
+    pub cols: usize,
+    pub rs: usize,
+}
+
+impl<'a> MatRefI16<'a> {
+    pub fn new(data: &'a [i16], rows: usize, cols: usize) -> MatRefI16<'a> {
+        MatRefI16::strided(data, rows, cols, cols)
+    }
+
+    pub fn strided(data: &'a [i16], rows: usize, cols: usize, rs: usize) -> MatRefI16<'a> {
+        assert!(rs >= cols, "row stride {rs} < cols {cols}");
+        if rows > 0 {
+            assert!(
+                (rows - 1) * rs + cols <= data.len(),
+                "view {rows}x{cols} (rs={rs}) exceeds buffer of {}",
+                data.len()
+            );
+        }
+        MatRefI16 { data, rows, cols, rs }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, r: usize, c: usize) -> i16 {
+        self.data[r * self.rs + c]
+    }
+
+    /// Sub-view of rows `r0..r0+nr`, cols `c0..c0+nc`.
+    pub fn sub(&self, r0: usize, nr: usize, c0: usize, nc: usize) -> MatRefI16<'a> {
+        assert!(r0 + nr <= self.rows && c0 + nc <= self.cols);
+        MatRefI16::strided(&self.data[r0 * self.rs + c0..], nr, nc, self.rs)
+    }
+}
+
+/// Pack an i16 A block into MR-row strips, k-major, zero-padded — the
+/// exact layout of [`pack::pack_a`](super::pack::pack_a) in i16 lanes.
+pub fn pack_a_i16(a: MatRefI16<'_>, out: &mut [i16]) {
+    let (mb, kb) = (a.rows, a.cols);
+    let strips = mb.div_ceil(MR);
+    assert!(out.len() >= strips * kb * MR, "pack_a_i16 buffer too small");
+    for s in 0..strips {
+        let r0 = s * MR;
+        let rows = MR.min(mb - r0);
+        let dst = &mut out[s * kb * MR..(s + 1) * kb * MR];
+        for k in 0..kb {
+            let d = &mut dst[k * MR..k * MR + MR];
+            for (r, slot) in d.iter_mut().enumerate() {
+                *slot = if r < rows { a.data[(r0 + r) * a.rs + k] } else { 0 };
+            }
+        }
+    }
+}
+
+/// Pack an i16 B block into NR-column strips, k-major, zero-padded — the
+/// exact layout of [`pack::pack_b`](super::pack::pack_b) in i16 lanes.
+pub fn pack_b_i16(b: MatRefI16<'_>, out: &mut [i16]) {
+    let (kb, nb) = (b.rows, b.cols);
+    let strips = nb.div_ceil(NR);
+    assert!(out.len() >= strips * kb * NR, "pack_b_i16 buffer too small");
+    for s in 0..strips {
+        let c0 = s * NR;
+        let cols = NR.min(nb - c0);
+        let dst = &mut out[s * kb * NR..(s + 1) * kb * NR];
+        for k in 0..kb {
+            let d = &mut dst[k * NR..k * NR + NR];
+            for (c, slot) in d.iter_mut().enumerate() {
+                *slot = if c < cols { b.data[k * b.rs + c0 + c] } else { 0 };
+            }
+        }
+    }
+}
+
+/// A quantized B operand packed once for reuse — the q16 twin of
+/// [`PackedB`](super::PackedB), holding i16 tiles in the same
+/// (pc, jc) order.
+#[derive(Debug, Clone)]
+pub struct PackedBI16 {
+    pub k: usize,
+    pub n: usize,
+    pub bs: BlockSizes,
+    data: Vec<i16>,
+    tile_offsets: Vec<usize>,
+    n_blocks: usize,
+}
+
+impl PackedBI16 {
+    /// Pack the whole of B. Asserts the Q15 accumulator depth bound
+    /// (`k ≤ 2¹⁵` — far above any cv-layer `k_h·k_w·i_c`).
+    pub fn pack(b: MatRefI16<'_>, bs: BlockSizes) -> PackedBI16 {
+        let (k, n) = (b.rows, b.cols);
+        assert!(
+            k <= 1 << 15,
+            "q16 gemm: reduction depth {k} exceeds the i32-accumulator bound 2^15"
+        );
+        let k_blocks = k.div_ceil(bs.kc).max(1);
+        let n_blocks = n.div_ceil(bs.nc).max(1);
+        let mut data = Vec::new();
+        let mut tile_offsets = Vec::with_capacity(k_blocks * n_blocks);
+        for pb in 0..k_blocks {
+            let pc = pb * bs.kc;
+            let kb = bs.kc.min(k - pc);
+            for jb in 0..n_blocks {
+                let jc = jb * bs.nc;
+                let nb = bs.nc.min(n - jc);
+                tile_offsets.push(data.len());
+                let tile_len = nb.div_ceil(NR) * kb * NR;
+                let start = data.len();
+                data.resize(start + tile_len, 0);
+                pack_b_i16(b.sub(pc, kb, jc, nb), &mut data[start..]);
+            }
+        }
+        PackedBI16 {
+            k,
+            n,
+            bs,
+            data,
+            tile_offsets,
+            n_blocks,
+        }
+    }
+
+    fn tile(&self, pb: usize, jb: usize) -> &[i16] {
+        let idx = pb * self.n_blocks + jb;
+        let start = self.tile_offsets[idx];
+        let end = self
+            .tile_offsets
+            .get(idx + 1)
+            .copied()
+            .unwrap_or(self.data.len());
+        &self.data[start..end]
+    }
+
+    /// Bytes held by the packed copy — half the f32 pack's for the same
+    /// matrix.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 2
+    }
+}
+
+thread_local! {
+    /// Reused i16 A-packing scratch (B is always prepacked on the q16
+    /// path, so there is no raw-B scratch).
+    static SCRATCH_I16: std::cell::RefCell<Vec<i16>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// `C = scale · (Aq × PBq)` with B pre-packed (beta = 0), serial: i16
+/// operands, i32 accumulation, f32 writeback. `scale` must be
+/// `scale_a · scale_b · 32768` (the Q15 product shift folded in).
+pub fn gemm_prepacked_i16(a: MatRefI16<'_>, pb: &PackedBI16, c: &mut MatMut<'_>, scale: f32) {
+    assert_eq!(a.cols, pb.k, "gemm_prepacked_i16: A cols vs packed B rows");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, pb.n);
+    scale_c(c, 0.0);
+    gemm_serial_prepacked_i16(a, pb, c, scale);
+}
+
+/// Threaded [`gemm_prepacked_i16`], parallelized over row panels of C —
+/// the q16 twin of [`gemm_prepacked_ex`](super::gemm_prepacked_ex), with
+/// the identical partitioning (same row panels, same tile walk), so
+/// results are bit-identical to the serial path at any thread count.
+pub fn gemm_prepacked_ex_i16(
+    a: MatRefI16<'_>,
+    pb: &PackedBI16,
+    c: &mut MatMut<'_>,
+    scale: f32,
+    threads: usize,
+) {
+    assert_eq!(a.cols, pb.k, "gemm_prepacked_ex_i16: A cols vs packed B rows");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, pb.n);
+    if threads <= 1 {
+        gemm_prepacked_i16(a, pb, c, scale);
+        return;
+    }
+    let (m, k) = (a.rows, a.cols);
+    let n = pb.n;
+    if m == 0 || n == 0 {
+        return;
+    }
+    scale_c(c, 0.0);
+    let crs = c.rs;
+    let c_shared = SharedSlice::new(c.data);
+    let row_panels: Vec<(usize, usize)> = split_ranges(m, threads);
+    let nthreads = row_panels.len();
+    parallel_for(nthreads, nthreads, |t| {
+        let (r0, r1) = row_panels[t];
+        if r0 == r1 {
+            return;
+        }
+        let c_data: &mut [f32] = c_shared.slice();
+        let mut c_panel = MatMut::strided(&mut c_data[r0 * crs..], r1 - r0, n, crs);
+        let a_panel = a.sub(r0, r1 - r0, 0, k);
+        gemm_serial_prepacked_i16(a_panel, pb, &mut c_panel, scale);
+    });
+}
+
+/// Batched `C[i] = scale · (Aq[i] × PBq)` with the batch loop inside the
+/// (pc, jc) tile loops — the q16 twin of
+/// [`gemm_prepacked_batch`](super::gemm_prepacked_batch) (MEC's mobile
+/// path: each packed-K tile streams from memory once across all
+/// partitions).
+pub fn gemm_prepacked_batch_i16(
+    a: &[MatRefI16<'_>],
+    pb: &PackedBI16,
+    c: &mut [MatMut<'_>],
+    scale: f32,
+) {
+    assert_eq!(a.len(), c.len());
+    for (ai, ci) in a.iter().zip(c.iter_mut()) {
+        assert_eq!(ai.cols, pb.k);
+        assert_eq!(ci.rows, ai.rows);
+        assert_eq!(ci.cols, pb.n);
+        scale_c(ci, 0.0);
+    }
+    let bs = pb.bs;
+    let k = pb.k;
+    let n = pb.n;
+    SCRATCH_I16.with(|scratch| {
+        let packed_a = &mut *scratch.borrow_mut();
+        let max_m = a.iter().map(|x| x.rows).max().unwrap_or(0);
+        let pa_len = bs.mc.min(max_m.max(1)).next_multiple_of(MR) * bs.kc.min(k);
+        if packed_a.len() < pa_len {
+            packed_a.resize(pa_len, 0);
+        }
+        let mut acc = [0i32; MR * NR];
+        let mut pc = 0;
+        let mut pb_idx = 0;
+        while pc < k {
+            let kb = bs.kc.min(k - pc);
+            let mut jc = 0;
+            let mut jb_idx = 0;
+            while jc < n {
+                let nb = bs.nc.min(n - jc);
+                let b_tile = pb.tile(pb_idx, jb_idx);
+                for (ai, ci) in a.iter().zip(c.iter_mut()) {
+                    let m = ai.rows;
+                    let mut ic = 0;
+                    while ic < m {
+                        let mb = bs.mc.min(m - ic);
+                        pack_a_i16(ai.sub(ic, mb, pc, kb), packed_a);
+                        let mut jr = 0;
+                        while jr < nb {
+                            let nr = NR.min(nb - jr);
+                            let bp = &b_tile[(jr / NR) * kb * NR..(jr / NR + 1) * kb * NR];
+                            let mut ir = 0;
+                            while ir < mb {
+                                let mr = MR.min(mb - ir);
+                                let ap =
+                                    &packed_a[(ir / MR) * kb * MR..(ir / MR + 1) * kb * MR];
+                                if mr == MR {
+                                    micro::kernel_i16(ap, bp, kb, &mut acc);
+                                } else {
+                                    micro::kernel_edge_i16(ap, bp, kb, &mut acc, mr);
+                                }
+                                for r in 0..mr {
+                                    let crow = (ic + ir + r) * ci.rs + jc + jr;
+                                    for col in 0..nr {
+                                        ci.data[crow + col] += scale * acc[r * NR + col] as f32;
+                                    }
+                                }
+                                ir += MR;
+                            }
+                            jr += NR;
+                        }
+                        ic += bs.mc;
+                    }
+                }
+                jc += bs.nc;
+                jb_idx += 1;
+            }
+            pc += bs.kc;
+            pb_idx += 1;
+        }
+    });
+}
+
+/// Serial blocked q16 gemm over one row panel: C += scale·(Aq × tiles of
+/// PBq); beta already applied by the caller.
+fn gemm_serial_prepacked_i16(a: MatRefI16<'_>, pb: &PackedBI16, c: &mut MatMut<'_>, scale: f32) {
+    let (m, k) = (a.rows, a.cols);
+    let n = c.cols;
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let bs = pb.bs;
+    SCRATCH_I16.with(|scratch| {
+        let packed_a = &mut *scratch.borrow_mut();
+        let pa_len = bs.mc.min(m).next_multiple_of(MR) * bs.kc.min(k);
+        if packed_a.len() < pa_len {
+            packed_a.resize(pa_len, 0);
+        }
+        let mut acc = [0i32; MR * NR];
+        let mut pc = 0;
+        let mut pb_idx = 0;
+        while pc < k {
+            let kb = bs.kc.min(k - pc);
+            let mut jc = 0;
+            let mut jb_idx = 0;
+            while jc < n {
+                let nb = bs.nc.min(n - jc);
+                let b_tile = pb.tile(pb_idx, jb_idx);
+                let mut ic = 0;
+                while ic < m {
+                    let mb = bs.mc.min(m - ic);
+                    pack_a_i16(a.sub(ic, mb, pc, kb), packed_a);
+                    let mut jr = 0;
+                    while jr < nb {
+                        let nr = NR.min(nb - jr);
+                        let bp = &b_tile[(jr / NR) * kb * NR..(jr / NR + 1) * kb * NR];
+                        let mut ir = 0;
+                        while ir < mb {
+                            let mr = MR.min(mb - ir);
+                            let ap = &packed_a[(ir / MR) * kb * MR..(ir / MR + 1) * kb * MR];
+                            if mr == MR {
+                                micro::kernel_i16(ap, bp, kb, &mut acc);
+                            } else {
+                                micro::kernel_edge_i16(ap, bp, kb, &mut acc, mr);
+                            }
+                            for r in 0..mr {
+                                let crow = (ic + ir + r) * c.rs + jc + jr;
+                                for col in 0..nr {
+                                    c.data[crow + col] += scale * acc[r * NR + col] as f32;
+                                }
+                            }
+                            ir += MR;
+                        }
+                        jr += NR;
+                    }
+                    ic += bs.mc;
+                }
+                jc += bs.nc;
+                jb_idx += 1;
+            }
+            pc += bs.kc;
+            pb_idx += 1;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Naive fixed-point reference: the exact per-product rounded shift
+    /// the micro-kernel performs, so blocked results must match bitwise.
+    fn reference_q15(a: &MatRefI16<'_>, b: &[i16], n: usize, c: &mut [f32], scale: f32) {
+        for i in 0..a.rows {
+            for j in 0..n {
+                let mut s = 0i32;
+                for p in 0..a.cols {
+                    s += (a.at(i, p) as i32 * b[p * n + j] as i32 + (1 << 14)) >> 15;
+                }
+                c[i * n + j] = scale * s as f32;
+            }
+        }
+    }
+
+    fn random_q(rng: &mut Rng, len: usize) -> Vec<i16> {
+        (0..len)
+            .map(|_| (rng.range(0, 2 * 32767 + 1) as i32 - 32767) as i16)
+            .collect()
+    }
+
+    #[test]
+    fn prepacked_i16_matches_reference_exactly() {
+        let mut rng = Rng::new(0x916);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (17, 13, 9), (5, 64, 3), (33, 21, 19)] {
+            let a = random_q(&mut rng, m * k);
+            let b = random_q(&mut rng, k * n);
+            let bs = BlockSizes { mc: 8, kc: 8, nc: 8 };
+            let pb = PackedBI16::pack(MatRefI16::new(&b, k, n), bs);
+            let scale = 3.1e-9f32;
+            let mut got = vec![0.5f32; m * n]; // non-zero: exercises beta=0
+            gemm_prepacked_i16(
+                MatRefI16::new(&a, m, k),
+                &pb,
+                &mut MatMut::new(&mut got, m, n),
+                scale,
+            );
+            let mut want = vec![0.0f32; m * n];
+            reference_q15(&MatRefI16::new(&a, m, k), &b, n, &mut want, scale);
+            // Integer accumulation is exact; the only float op is the
+            // final scale-multiply, identical on both sides... except the
+            // blocked path adds per-k-block partial dequants. Compare with
+            // a tight absolute tolerance instead of bitwise.
+            for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() <= scale * 4.0 + w.abs() * 1e-6,
+                    "({m},{k},{n}) elem {i}: {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prepacked_ex_i16_matches_serial_bitwise() {
+        let mut rng = Rng::new(0x917);
+        let (m, k, n) = (37, 29, 21);
+        let a = random_q(&mut rng, m * k);
+        let b = random_q(&mut rng, k * n);
+        let bs = BlockSizes { mc: 16, kc: 8, nc: 12 };
+        let pb = PackedBI16::pack(MatRefI16::new(&b, k, n), bs);
+        let scale = 1.7e-9f32;
+        let mut want = vec![0.0f32; m * n];
+        gemm_prepacked_i16(
+            MatRefI16::new(&a, m, k),
+            &pb,
+            &mut MatMut::new(&mut want, m, n),
+            scale,
+        );
+        for threads in [2usize, 3, 8] {
+            let mut got = vec![0.25f32; m * n];
+            gemm_prepacked_ex_i16(
+                MatRefI16::new(&a, m, k),
+                &pb,
+                &mut MatMut::new(&mut got, m, n),
+                scale,
+                threads,
+            );
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn batch_i16_matches_per_entry_serial() {
+        let mut rng = Rng::new(0x918);
+        let (m, k, n) = (5, 18, 6);
+        let b = random_q(&mut rng, k * n);
+        let bs = BlockSizes { mc: 4, kc: 7, nc: 5 };
+        let pb = PackedBI16::pack(MatRefI16::new(&b, k, n), bs);
+        let scale = 2.5e-9f32;
+        let a_bufs: Vec<Vec<i16>> = (0..4).map(|_| random_q(&mut rng, m * k)).collect();
+        let mut expected = Vec::new();
+        for abuf in &a_bufs {
+            let mut c = vec![0.0f32; m * n];
+            gemm_prepacked_i16(
+                MatRefI16::new(abuf, m, k),
+                &pb,
+                &mut MatMut::new(&mut c, m, n),
+                scale,
+            );
+            expected.push(c);
+        }
+        let mut c_bufs: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0f32; m * n]).collect();
+        {
+            let a_refs: Vec<MatRefI16<'_>> =
+                a_bufs.iter().map(|v| MatRefI16::new(v, m, k)).collect();
+            let mut c_refs: Vec<MatMut<'_>> =
+                c_bufs.iter_mut().map(|v| MatMut::new(v, m, n)).collect();
+            gemm_prepacked_batch_i16(&a_refs, &pb, &mut c_refs, scale);
+        }
+        for (got, want) in c_bufs.iter().zip(&expected) {
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn strided_views_support_the_ld_trick() {
+        // A view into a wider i16 buffer (MEC's overlapping partitions).
+        let mut rng = Rng::new(0x919);
+        let big = random_q(&mut rng, 10 * 20);
+        let a = MatRefI16::strided(&big[3..], 6, 7, 20);
+        let b = random_q(&mut rng, 7 * 4);
+        let pb = PackedBI16::pack(MatRefI16::new(&b, 7, 4), BlockSizes::default());
+        let scale = 1e-9f32;
+        let mut got = vec![0.0f32; 6 * 4];
+        gemm_prepacked_i16(a, &pb, &mut MatMut::new(&mut got, 6, 4), scale);
+        let mut want = vec![0.0f32; 6 * 4];
+        reference_q15(&a, &b, 4, &mut want, scale);
+        for (&g, &w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= scale * 2.0, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn pack_layouts_mirror_f32_packers() {
+        // pack_a_i16: 3x2 inside rs=4.
+        let buf: Vec<i16> = (0..12).collect();
+        let a = MatRefI16::strided(&buf, 3, 2, 4);
+        let mut out = vec![-1i16; MR * 2];
+        pack_a_i16(a, &mut out);
+        assert_eq!(&out[0..MR], &[0, 4, 8, 0, 0, 0, 0, 0]);
+        assert_eq!(&out[MR..2 * MR], &[1, 5, 9, 0, 0, 0, 0, 0]);
+        // pack_b_i16: 2x3 strided rs=5.
+        let buf: Vec<i16> = (0..10).collect();
+        let b = MatRefI16::strided(&buf, 2, 3, 5);
+        let mut out = vec![-1i16; 2 * NR];
+        pack_b_i16(b, &mut out);
+        assert_eq!(&out[0..NR], &[0, 1, 2, 0, 0, 0, 0, 0]);
+        assert_eq!(&out[NR..2 * NR], &[5, 6, 7, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn packed_b_bytes_halve_f32() {
+        let b: Vec<i16> = vec![1; 16 * 24];
+        let pb = PackedBI16::pack(MatRefI16::new(&b, 16, 24), BlockSizes::default());
+        let bf: Vec<f32> = vec![1.0; 16 * 24];
+        let pf = super::super::PackedB::pack(
+            super::super::MatRef::new(&bf, 16, 24),
+            BlockSizes::default(),
+        );
+        assert_eq!(pb.bytes() * 2, pf.bytes());
+    }
+
+    #[test]
+    #[should_panic(expected = "accumulator bound")]
+    fn pack_rejects_overdeep_reduction() {
+        let b = vec![0i16; (1 << 15) + 1];
+        let _ = PackedBI16::pack(MatRefI16::new(&b, (1 << 15) + 1, 1), BlockSizes::default());
+    }
+}

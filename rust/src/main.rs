@@ -15,7 +15,7 @@ use mec::coordinator::{BatchPolicy, Server, ServerConfig};
 use mec::memory::{measure_peak, Arena, Budget};
 use mec::model::load_mecw;
 use mec::planner::{AutoTuner, Planner};
-use mec::tensor::{Kernel, Tensor};
+use mec::tensor::{Kernel, Precision, Tensor};
 use mec::util::cli::Args;
 use mec::util::stats::{fmt_bytes, fmt_ns};
 use mec::util::Rng;
@@ -89,6 +89,17 @@ fn cmd_info() {
     );
 }
 
+fn precision_arg(args: &mut Args) -> Precision {
+    let p = args.opt("precision", "f32", "execution precision (f32|q16)");
+    match Precision::parse(&p) {
+        Some(v) => v,
+        None => {
+            eprintln!("unknown precision {p:?} (expected f32 or q16)");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn layer_arg(args: &mut Args) -> mec::tensor::ConvShape {
     let layer = args.opt("layer", "cv6", "benchmark layer (cv1..cv12)");
     let batch = args.opt_usize("batch", 1, "mini-batch size");
@@ -107,6 +118,7 @@ fn cmd_run(args: &mut Args) {
     let algo_s = args.opt("algo", "mec", "algorithm (direct|im2col|mec|mec-a|mec-b|winograd|fft)");
     let threads = args.opt_usize("threads", 1, "worker threads");
     let reps = args.opt_usize("reps", 3, "timed repetitions");
+    let precision = precision_arg(args);
     args.finish();
     let kind: AlgoKind = match algo_s.parse() {
         Ok(k) => k,
@@ -120,7 +132,13 @@ fn cmd_run(args: &mut Args) {
         eprintln!("{} does not support {}", algo.name(), shape.describe());
         std::process::exit(1);
     }
-    let ctx = ConvContext::default().with_threads(threads);
+    if !kind.supports_precision(precision) {
+        eprintln!("{} has no {precision} path (q16 covers direct/im2col/mec)", algo.name());
+        std::process::exit(1);
+    }
+    let ctx = ConvContext::default()
+        .with_threads(threads)
+        .with_precision(precision);
     let mut rng = Rng::new(42);
     let input = Tensor::random(shape.input, &mut rng);
     let kernel = Kernel::random(shape.kernel, &mut rng);
@@ -145,6 +163,7 @@ fn cmd_run(args: &mut Args) {
     }
     println!("layer    : {}", shape.describe());
     println!("algorithm: {}", algo.name());
+    println!("precision: {precision}");
     println!("plan     : {} (one-time: dispatch + kernel prepack/transform)", fmt_ns(plan_ns));
     println!("execute  : {} (best of {reps}, {threads} threads, plan-amortized)", fmt_ns(best));
     println!(
@@ -160,10 +179,14 @@ fn cmd_plan(args: &mut Args) {
     let shape = layer_arg(args);
     let budget = parse_budget(&args.opt("budget", "unlimited", "workspace budget (e.g. 16MB)"));
     let threads = args.opt_usize("threads", 1, "worker threads");
+    let precision = precision_arg(args);
     args.finish();
     let planner = Planner::new();
-    let ctx = ConvContext::default().with_threads(threads);
+    let ctx = ConvContext::default()
+        .with_threads(threads)
+        .with_precision(precision);
     println!("layer: {}", shape.describe());
+    println!("precision: {precision}");
     println!(
         "budget: {}",
         if budget.limit() == usize::MAX {
@@ -173,7 +196,7 @@ fn cmd_plan(args: &mut Args) {
         }
     );
     println!("\nadmissible plans:");
-    for p in planner.admissible(&shape, &budget) {
+    for p in planner.admissible(&shape, &budget, &ctx) {
         println!(
             "  {:<10} workspace={:>12} est={:>12}",
             p.algo.name(),
@@ -193,10 +216,16 @@ fn cmd_tune(args: &mut Args) {
     let shape = layer_arg(args);
     let budget = parse_budget(&args.opt("budget", "unlimited", "workspace budget"));
     let threads = args.opt_usize("threads", 1, "worker threads");
+    let precision = precision_arg(args);
     args.finish();
     let tuner = AutoTuner::new();
-    let ctx = ConvContext::default().with_threads(threads);
-    println!("measuring on {} (plan-amortized) ...", shape.describe());
+    let ctx = ConvContext::default()
+        .with_threads(threads)
+        .with_precision(precision);
+    println!(
+        "measuring on {} ({precision}, plan-amortized) ...",
+        shape.describe()
+    );
     let mut ms = tuner.measure_all(&shape, &budget, &ctx);
     ms.sort_by(|a, b| a.median_ns.partial_cmp(&b.median_ns).unwrap());
     for m in &ms {
@@ -219,6 +248,7 @@ fn cmd_serve(args: &mut Args) {
     let delay_ms = args.opt_usize("max-delay-ms", 2, "dynamic batch delay");
     let budget = parse_budget(&args.opt("budget", "unlimited", "conv workspace budget"));
     let threads = args.opt_usize("threads", 1, "engine threads per worker");
+    let precision = precision_arg(args);
     args.finish();
 
     let mut model = match load_mecw(&model_path) {
@@ -228,7 +258,9 @@ fn cmd_serve(args: &mut Args) {
             std::process::exit(1);
         }
     };
-    let ctx = ConvContext::default().with_threads(threads);
+    let ctx = ConvContext::default()
+        .with_threads(threads)
+        .with_precision(precision);
     model.plan(&Planner::new(), &budget, &ctx, max_batch);
     println!(
         "model {:?}: {} layers, {} params, plans: {:?}",

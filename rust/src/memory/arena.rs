@@ -51,6 +51,17 @@ impl WorkspaceLayout {
         idx
     }
 
+    /// Append a region that stores `elems` **i16** values inside the f32
+    /// buffer: two lanes per f32 slot, rounded up — how q16 plans get
+    /// their halved lowering buffers out of the shared f32 arena
+    /// ([`f32_as_i16_mut`](crate::tensor::quant::f32_as_i16_mut)
+    /// reinterprets the slice at execute time). Returns the region index;
+    /// the recorded `elems` is in f32 slots like every other region, so
+    /// arena sizing and the max-over-layers rule need no special cases.
+    pub fn push_i16(&mut self, name: &'static str, i16_elems: usize) -> usize {
+        self.push(name, i16_elems.div_ceil(2))
+    }
+
     /// Total floats across all regions — the plan's workspace requirement.
     pub fn total_elems(&self) -> usize {
         self.total
@@ -161,6 +172,18 @@ mod tests {
         assert_eq!(l.total_bytes(), 60);
         assert_eq!(l.region("aux").unwrap().offset, 10);
         assert!(l.region("nope").is_none());
+    }
+
+    #[test]
+    fn push_i16_packs_two_lanes_per_slot() {
+        let mut l = WorkspaceLayout::new();
+        l.push_i16("q-lowered", 10); // 5 f32 slots
+        l.push_i16("q-odd", 7); // 4 f32 slots (rounded up)
+        l.push("aux", 3);
+        assert_eq!(l.region("q-lowered").unwrap().elems, 5);
+        assert_eq!(l.region("q-odd").unwrap().elems, 4);
+        assert_eq!(l.region("aux").unwrap().offset, 9);
+        assert_eq!(l.total_elems(), 12);
     }
 
     #[test]

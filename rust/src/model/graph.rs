@@ -14,12 +14,12 @@
 //! plans for those geometries are built lazily on first sight and cached
 //! (cuDNN-graph style: one executable per shape).
 
-use crate::conv::{AlgoKind, ConvContext, ConvPlan, Convolution};
+use crate::conv::{AlgoKind, ConvContext, ConvPlan, Convolution, KernelPrepack};
 use crate::gemm::{gemm_ex, MatMut, MatRef};
 use crate::memory::{Arena, Budget};
 use crate::model::layer::Layer;
 use crate::planner::Planner;
-use crate::tensor::{ConvShape, Nhwc, Tensor};
+use crate::tensor::{ConvShape, Nhwc, Precision, Tensor};
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
 
@@ -33,10 +33,19 @@ pub struct Model {
     pub layers: Vec<Layer>,
     /// Chosen conv algorithm per layer index (None for non-conv layers).
     plans: Vec<Option<AlgoKind>>,
-    /// Prepared plans keyed by (layer index, exact conv geometry). The
-    /// planned batch size is populated eagerly by [`Model::plan`]; other
-    /// batch sizes (dynamic batching remainders) fill in lazily.
-    plan_cache: RwLock<HashMap<(usize, ConvShape), Arc<dyn ConvPlan>>>,
+    /// Prepared plans keyed by (layer index, exact conv geometry, build
+    /// precision). The planned batch size is populated eagerly by
+    /// [`Model::plan`]; other batch sizes (dynamic batching remainders)
+    /// fill in lazily. Precision is in the key because a pinned/unplanned
+    /// model builds under the caller's context: a q16 forward must never
+    /// hand back an f32-planned layer or vice versa.
+    plan_cache: RwLock<HashMap<(usize, ConvShape, Precision), Arc<dyn ConvPlan>>>,
+    /// Batch-independent kernel-side prepacks (PackedKernel, Winograd U,
+    /// FFT spectra), keyed by (layer index, algorithm, build precision):
+    /// built once per layer and `Arc`-shared into every per-batch-size
+    /// plan above, so dynamic batching stops duplicating prepacked
+    /// weights per cached geometry.
+    prepack_cache: RwLock<HashMap<(usize, AlgoKind, Precision), Arc<dyn KernelPrepack>>>,
     /// Shared-arena requirement at the planned batch: max over planned
     /// conv layers of `ConvPlan::workspace_elems`.
     planned_ws_elems: usize,
@@ -64,6 +73,7 @@ impl Model {
             layers,
             plans,
             plan_cache: RwLock::new(HashMap::new()),
+            prepack_cache: RwLock::new(HashMap::new()),
             planned_ws_elems: 0,
             planned_ctx: None,
         }
@@ -96,12 +106,14 @@ impl Model {
     /// [`ConvPlan`]. Also sizes the shared arena (max over layers).
     pub fn plan(&mut self, planner: &Planner, budget: &Budget, ctx: &ConvContext, batch: usize) {
         self.plan_cache.write().unwrap().clear();
+        self.prepack_cache.write().unwrap().clear();
         self.planned_ws_elems = 0;
         self.planned_ctx = Some(ctx.clone());
         let (h, w, c) = self.input_hwc;
         let mut shape = Nhwc::new(batch.max(1), h, w, c);
         let mut max_ws = 0usize;
-        let mut prepared: Vec<((usize, ConvShape), Arc<dyn ConvPlan>)> = Vec::new();
+        let mut prepared: Vec<((usize, ConvShape, Precision), Arc<dyn ConvPlan>)> = Vec::new();
+        let mut prepacks: Vec<((usize, AlgoKind, Precision), Arc<dyn KernelPrepack>)> = Vec::new();
         for (i, layer) in self.layers.iter().enumerate() {
             if let Layer::Conv {
                 kernel, sh, sw, ph, pw, ..
@@ -111,14 +123,20 @@ impl Model {
                 let cs = ConvShape::new(padded, kernel.shape(), *sh, *sw);
                 let chosen = planner.plan(&cs, budget, ctx).algo;
                 self.plans[i] = Some(chosen);
+                let algo_impl = chosen.build();
+                // One batch-independent prepack per layer; every batch
+                // size this layer ever plans for shares it.
+                let pk = algo_impl.prepack(ctx, &cs, kernel);
                 let conv_plan: Arc<dyn ConvPlan> =
-                    Arc::from(chosen.build().plan(ctx, &cs, kernel));
+                    Arc::from(algo_impl.plan_shared(ctx, &cs, Arc::clone(&pk)));
                 max_ws = max_ws.max(conv_plan.workspace_elems());
-                prepared.push(((i, cs), conv_plan));
+                prepared.push(((i, cs, ctx.precision), conv_plan));
+                prepacks.push(((i, chosen, ctx.precision), pk));
             }
             shape = layer.output_shape(shape);
         }
         self.plan_cache.write().unwrap().extend(prepared);
+        self.prepack_cache.write().unwrap().extend(prepacks);
         self.planned_ws_elems = max_ws;
     }
 
@@ -126,6 +144,7 @@ impl Model {
     /// Invalidates any prepared plans; they rebuild lazily.
     pub fn pin_algo(&mut self, algo: AlgoKind) {
         self.plan_cache.write().unwrap().clear();
+        self.prepack_cache.write().unwrap().clear();
         self.planned_ws_elems = 0;
         self.planned_ctx = None;
         for (i, layer) in self.layers.iter().enumerate() {
@@ -150,7 +169,7 @@ impl Model {
         let cache = self.plan_cache.read().unwrap();
         let mut out: Vec<(usize, usize)> = cache
             .iter()
-            .map(|((i, _), p)| (*i, p.workspace_bytes()))
+            .map(|((i, _, _), p)| (*i, p.workspace_bytes()))
             .collect();
         out.sort_unstable();
         out
@@ -175,7 +194,10 @@ impl Model {
     }
 
     /// Fetch (or lazily build) the prepared plan for conv layer `idx` on
-    /// geometry `cs`.
+    /// geometry `cs`. The kernel-side prepack is fetched from (or
+    /// inserted into) the per-layer prepack cache, so every geometry of a
+    /// layer — including transient over-cap ones — shares one prepacked
+    /// copy.
     fn plan_for(
         &self,
         idx: usize,
@@ -183,24 +205,57 @@ impl Model {
         ctx: &ConvContext,
         kernel: &crate::tensor::Kernel,
     ) -> Arc<dyn ConvPlan> {
-        let key = (idx, *cs);
+        // Build under the planning context so cached and lazily-built
+        // plans agree on threads / MEC T / FFT cache cap / precision.
+        let build_ctx = self.planned_ctx.as_ref().unwrap_or(ctx);
+        let key = (idx, *cs, build_ctx.precision);
         if let Some(p) = self.plan_cache.read().unwrap().get(&key) {
             return Arc::clone(p);
         }
-        // Build under the planning context so cached and lazily-built
-        // plans agree on threads / MEC T / FFT cache cap.
-        let build_ctx = self.planned_ctx.as_ref().unwrap_or(ctx);
         let algo = self.plans[idx].unwrap_or(AlgoKind::Mec);
-        let built: Arc<dyn ConvPlan> = Arc::from(algo.build().plan(build_ctx, cs, kernel));
+        let algo_impl = algo.build();
+        let pk_key = (idx, algo, build_ctx.precision);
+        let pk = {
+            let cached = self.prepack_cache.read().unwrap().get(&pk_key).cloned();
+            match cached {
+                Some(p) => p,
+                None => {
+                    let built = algo_impl.prepack(build_ctx, cs, kernel);
+                    let mut cache = self.prepack_cache.write().unwrap();
+                    Arc::clone(cache.entry(pk_key).or_insert(built))
+                }
+            }
+        };
+        let built: Arc<dyn ConvPlan> = Arc::from(algo_impl.plan_shared(build_ctx, cs, pk));
         let mut cache = self.plan_cache.write().unwrap();
         if !cache.contains_key(&key)
-            && cache.keys().filter(|(i, _)| *i == idx).count() >= MAX_CACHED_GEOMETRIES_PER_LAYER
+            && cache.keys().filter(|(i, _, _)| *i == idx).count()
+                >= MAX_CACHED_GEOMETRIES_PER_LAYER
         {
             // Bounded cache: execute this one transiently instead of
-            // holding yet another prepacked copy per odd batch size.
+            // holding yet another plan per odd batch size (its prepack is
+            // still the shared one).
             return built;
         }
         Arc::clone(cache.entry(key).or_insert(built))
+    }
+
+    /// Prepared plans for conv layer `idx`, one per cached geometry
+    /// (tests/observability — the prepack-sharing assertions compare
+    /// their [`ConvPlan::shared_prepack`] pointers).
+    pub fn cached_plans_for_layer(&self, idx: usize) -> Vec<Arc<dyn ConvPlan>> {
+        self.plan_cache
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|((i, _, _), _)| *i == idx)
+            .map(|(_, p)| Arc::clone(p))
+            .collect()
+    }
+
+    /// Number of cached kernel-side prepacks (≤ one per conv layer).
+    pub fn cached_prepacks(&self) -> usize {
+        self.prepack_cache.read().unwrap().len()
     }
 
     /// Run a forward pass on a batch. Returns the final activation
@@ -461,6 +516,57 @@ mod tests {
             m.planned_workspace_bytes(),
             m.planned_layer_workspaces()[0].1
         );
+    }
+
+    #[test]
+    fn per_batch_plans_share_one_kernel_prepack() {
+        // Two geometries of the same layer (planned batch + a dynamic
+        // batching remainder) must hold the SAME prepacked kernel
+        // allocation — pointer equality, not just equal bytes.
+        let mut m = tiny_model();
+        let ctx = ConvContext::default();
+        m.plan(&Planner::new(), &Budget::unlimited(), &ctx, 4);
+        let mut rng = Rng::new(23);
+        let full = Tensor::random(Nhwc::new(4, 8, 8, 1), &mut rng);
+        let remainder = Tensor::random(Nhwc::new(3, 8, 8, 1), &mut rng);
+        let mut arena = m.sized_arena();
+        let _ = m.forward(&ctx, &full, &mut arena);
+        let _ = m.forward(&ctx, &remainder, &mut arena); // lazily plans n=3
+        let plans = m.cached_plans_for_layer(0);
+        assert_eq!(plans.len(), 2, "expected planned + lazily-built geometry");
+        assert_eq!(m.cached_prepacks(), 1, "one prepack per conv layer");
+        let a = plans[0].shared_prepack().expect("plan exposes its prepack");
+        let b = plans[1].shared_prepack().expect("plan exposes its prepack");
+        assert!(Arc::ptr_eq(&a, &b), "prepack duplicated across batch sizes");
+        // And the refcount proves the cache + both plans hold one copy.
+        assert!(Arc::strong_count(&a) >= 3);
+    }
+
+    #[test]
+    fn pinned_model_does_not_leak_precision_across_forwards() {
+        // pin_algo leaves planned_ctx=None, so lazily-built plans follow
+        // each forward's context — the cache key carries the precision,
+        // so a q16 forward must never hand its quantized plan to a later
+        // f32 forward (and vice versa).
+        use crate::tensor::Precision;
+        let mut m = tiny_model();
+        m.pin_algo(AlgoKind::Mec);
+        let mut rng = Rng::new(29);
+        let batch = Tensor::random(Nhwc::new(1, 8, 8, 1), &mut rng);
+        let mut arena = Arena::new();
+        let q16_ctx = ConvContext::default().with_precision(Precision::Q16);
+        let f32_ctx = ConvContext::default();
+        let a_q16 = m.forward(&q16_ctx, &batch, &mut arena);
+        let a_f32 = m.forward(&f32_ctx, &batch, &mut arena);
+        // The q16 plan is still cached and reproduces itself exactly.
+        let b_q16 = m.forward(&q16_ctx, &batch, &mut arena);
+        assert_eq!(a_q16.data(), b_q16.data());
+        // The f32 forward must equal a never-quantized model bitwise —
+        // i.e. it did NOT silently reuse the q16-packed plan.
+        let mut fresh = tiny_model();
+        fresh.pin_algo(AlgoKind::Mec);
+        let want = fresh.forward(&f32_ctx, &batch, &mut arena);
+        assert_eq!(a_f32.data(), want.data());
     }
 
     #[test]

@@ -11,6 +11,7 @@
 use super::{Plan, Planner};
 use crate::conv::{AlgoKind, ConvContext, ConvPlan, Convolution};
 use crate::memory::{Arena, Budget};
+use crate::tensor::quant::Precision;
 use crate::tensor::{ConvShape, Kernel, Tensor};
 use crate::util::Rng;
 use std::collections::HashMap;
@@ -32,7 +33,7 @@ pub struct AutoTuner {
     planner: Planner,
     /// Repetitions per candidate (median taken).
     pub reps: usize,
-    cache: HashMap<(ConvShape, usize), Plan>,
+    cache: HashMap<(ConvShape, usize, Precision), Plan>,
 }
 
 impl AutoTuner {
@@ -57,7 +58,7 @@ impl AutoTuner {
         let kernel = Kernel::random(shape.kernel, &mut rng);
         let mut out = Tensor::zeros(shape.output());
         let mut results = Vec::new();
-        for candidate in self.planner.admissible(shape, budget) {
+        for candidate in self.planner.admissible(shape, budget, ctx) {
             let algo = candidate.algo.build();
             let t_plan = Instant::now();
             let plan = algo.plan(ctx, shape, &kernel);
@@ -83,9 +84,9 @@ impl AutoTuner {
     }
 
     /// Best measured plan for `shape` under `budget`, cached per
-    /// `(shape, budget.limit)`.
+    /// `(shape, budget.limit, ctx.precision)`.
     pub fn tune(&mut self, shape: &ConvShape, budget: &Budget, ctx: &ConvContext) -> Plan {
-        let key = (*shape, budget.limit());
+        let key = (*shape, budget.limit(), ctx.precision);
         if let Some(p) = self.cache.get(&key) {
             return p.clone();
         }
@@ -153,5 +154,16 @@ mod tests {
         let plan = tuner.tune(&small_shape(), &Budget::new(0), &ctx);
         assert_eq!(plan.algo, AlgoKind::Direct);
         assert_eq!(plan.workspace_bytes, 0);
+    }
+
+    #[test]
+    fn q16_measures_only_quantized_candidates() {
+        use crate::tensor::Precision;
+        let tuner = AutoTuner::new();
+        let ctx = ConvContext::default().with_precision(Precision::Q16);
+        let ms = tuner.measure_all(&small_shape(), &Budget::unlimited(), &ctx);
+        // direct, im2col, mec — winograd/fft excluded under q16.
+        assert_eq!(ms.len(), 3);
+        assert!(ms.iter().all(|m| m.algo.supports_precision(Precision::Q16)));
     }
 }

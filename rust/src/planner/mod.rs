@@ -18,6 +18,7 @@ pub use autotune::AutoTuner;
 
 use crate::conv::{AlgoKind, ConvContext, ConvPlan, Convolution};
 use crate::memory::Budget;
+use crate::tensor::quant::Precision;
 use crate::tensor::{ConvShape, Kernel};
 
 /// The outcome of planning one convolution.
@@ -92,29 +93,43 @@ impl CostModel {
     }
 
     /// Estimate runtime of `algo` on `shape` (single thread; the planner
-    /// divides by an efficiency-discounted thread count).
+    /// divides by an efficiency-discounted thread count). F32 grid; the
+    /// precision-aware planner path goes through
+    /// [`Self::estimate_ns_prec`].
     pub fn estimate_ns(&self, algo: AlgoKind, shape: &ConvShape) -> f64 {
+        self.estimate_ns_prec(algo, shape, Precision::F32)
+    }
+
+    /// Precision-aware runtime estimate: the lowering/repack byte-traffic
+    /// terms scale with the operand width (q16 moves half the bytes
+    /// through the same compact L — the paper's fixed-point argument),
+    /// while MAC and per-call terms are precision-neutral on this
+    /// substrate. Winograd/FFT have no q16 path, so their estimates are
+    /// always the f32 figures.
+    pub fn estimate_ns_prec(&self, algo: AlgoKind, shape: &ConvShape, precision: Precision) -> f64 {
         let macs = shape.macs() as f64;
+        let bpe = precision.bytes_per_elem() as f64;
         let out_bytes = (shape.output().len() * 4) as f64;
         match algo {
             AlgoKind::Direct => macs * self.ns_per_mac_direct,
             AlgoKind::Im2col => {
-                let lowered = (shape.im2col_lowered_elems() * 4) as f64;
+                let lowered = shape.im2col_lowered_elems() as f64 * bpe;
                 // write L + read L in gemm (cache reuse folded into
                 // ns_per_mac) + one gemm call.
                 lowered * self.ns_per_byte_moved + macs * self.ns_per_mac + self.ns_per_gemm_call
             }
             AlgoKind::Mec | AlgoKind::MecSolutionA | AlgoKind::MecSolutionB => {
-                let lowered = (shape.mec_lowered_elems() * 4) as f64;
+                let lowered = shape.mec_lowered_elems() as f64 * bpe;
                 // Model the Algorithm-2 line-8 dispatch for the auto
-                // variant: Solution A when o_w ≤ T(=100) and |O| ≤ |L|,
-                // else Solution B (no repack, more/smaller gemm calls).
+                // variant with the SAME precision-aware availability
+                // predicate Mec::resolve uses (one definition, no drift);
+                // T is the default 100 here — the cost model has no ctx.
                 let solution_a = match algo {
                     AlgoKind::MecSolutionA => true,
                     AlgoKind::MecSolutionB => false,
                     _ => {
                         shape.ow() <= 100
-                            && shape.output().len() <= shape.mec_lowered_elems()
+                            && crate::conv::mec::solution_a_available_p(shape, precision)
                     }
                 };
                 let calls = if solution_a {
@@ -167,32 +182,43 @@ impl Planner {
         Planner::default()
     }
 
-    /// Algorithms admissible for `shape` under `budget`.
-    pub fn admissible(&self, shape: &ConvShape, budget: &Budget) -> Vec<Plan> {
+    /// Algorithms admissible for `shape` under `budget` in the context's
+    /// precision: supported geometry, workspace within budget, and an
+    /// execution path for `ctx.precision` (under q16 Winograd/FFT report
+    /// unsupported and the planner falls back to the quantized GEMM
+    /// family — `direct` keeps the fallback non-empty).
+    pub fn admissible(&self, shape: &ConvShape, budget: &Budget, ctx: &ConvContext) -> Vec<Plan> {
         let mut out = Vec::new();
         for kind in AlgoKind::PAPER {
+            if !kind.supports_precision(ctx.precision) {
+                continue;
+            }
             let algo = kind.build();
             if !algo.supports(shape) {
                 continue;
             }
-            let ws = algo.workspace_bytes(shape);
+            // Precision-aware footprint: q16's halved lowering buffers
+            // genuinely relax tight budgets (the paper's fixed-point
+            // memory win), instead of admitting on the f32 figure.
+            let ws = algo.workspace_bytes_prec(shape, ctx.precision);
             if !budget.allows(ws) {
                 continue;
             }
             out.push(Plan {
                 algo: kind,
                 workspace_bytes: ws,
-                est_ns: self.cost.estimate_ns(kind, shape),
+                est_ns: self.cost.estimate_ns_prec(kind, shape, ctx.precision),
             });
         }
         out
     }
 
     /// Pick the estimated-fastest admissible algorithm. `direct` has zero
-    /// workspace, so there is always at least one plan.
+    /// workspace (and runs in every precision), so there is always at
+    /// least one plan.
     pub fn plan(&self, shape: &ConvShape, budget: &Budget, ctx: &ConvContext) -> Plan {
         let mut best: Option<Plan> = None;
-        for mut p in self.admissible(shape, budget) {
+        for mut p in self.admissible(shape, budget, ctx) {
             // Thread scaling with a 75% parallel-efficiency discount.
             let t = ctx.threads.max(1) as f64;
             p.est_ns /= 1.0 + 0.75 * (t - 1.0);
@@ -236,7 +262,7 @@ mod tests {
     #[test]
     fn direct_always_admissible() {
         let p = Planner::new();
-        let plans = p.admissible(&cv6(), &Budget::new(0));
+        let plans = p.admissible(&cv6(), &Budget::new(0), &ConvContext::default());
         assert_eq!(plans.len(), 1);
         assert_eq!(plans[0].algo, AlgoKind::Direct);
         assert_eq!(plans[0].workspace_bytes, 0);
@@ -273,9 +299,73 @@ mod tests {
             4,
         );
         assert!(p
-            .admissible(&shape, &Budget::unlimited())
+            .admissible(&shape, &Budget::unlimited(), &ConvContext::default())
             .iter()
             .all(|pl| pl.algo != AlgoKind::Winograd));
+    }
+
+    #[test]
+    fn q16_excludes_winograd_and_fft() {
+        let p = Planner::new();
+        let ctx = ConvContext::default().with_precision(crate::tensor::Precision::Q16);
+        let plans = p.admissible(&cv6(), &Budget::unlimited(), &ctx);
+        assert!(!plans.is_empty());
+        for pl in &plans {
+            assert!(
+                pl.algo.supports_precision(crate::tensor::Precision::Q16),
+                "{:?} offered under q16",
+                pl.algo
+            );
+        }
+        // The fallback still prefers the quantized GEMM family to direct.
+        let chosen = p.plan(&cv6(), &Budget::unlimited(), &ctx);
+        assert!(matches!(chosen.algo, AlgoKind::Mec | AlgoKind::Im2col), "{chosen:?}");
+    }
+
+    #[test]
+    fn q16_budget_admits_halved_lowering() {
+        // A budget between the q16 and f32 MEC footprints: the f32
+        // planner must fall back to direct, while the q16 planner keeps
+        // the quantized GEMM family — the paper's fixed-point memory win
+        // made operational.
+        let p = Planner::new();
+        let shape = cv6();
+        let f32_mec = AlgoKind::Mec.build().workspace_bytes(&shape);
+        let budget = Budget::new(f32_mec / 2 + f32_mec / 8);
+        let f32_plan = p.plan(&shape, &budget, &ConvContext::default());
+        assert_eq!(f32_plan.algo, AlgoKind::Direct, "{f32_plan:?}");
+        let q16_ctx = ConvContext::default().with_precision(crate::tensor::Precision::Q16);
+        let q16_plan = p.plan(&shape, &budget, &q16_ctx);
+        assert!(
+            matches!(q16_plan.algo, AlgoKind::Mec | AlgoKind::Im2col),
+            "{q16_plan:?}"
+        );
+        assert!(q16_plan.workspace_bytes <= budget.limit());
+    }
+
+    #[test]
+    fn q16_halves_the_bytes_moved_term() {
+        // The estimate's lowering-traffic term must shrink under q16 —
+        // MEC and im2col both get cheaper, direct is unchanged.
+        let cm = CostModel::default();
+        let s = cv6();
+        use crate::tensor::Precision;
+        for algo in [AlgoKind::Mec, AlgoKind::Im2col] {
+            assert!(
+                cm.estimate_ns_prec(algo, &s, Precision::Q16)
+                    < cm.estimate_ns_prec(algo, &s, Precision::F32),
+                "{algo:?}"
+            );
+        }
+        assert_eq!(
+            cm.estimate_ns_prec(AlgoKind::Direct, &s, Precision::Q16),
+            cm.estimate_ns(AlgoKind::Direct, &s)
+        );
+        // And the f32 delegate agrees with the old signature.
+        assert_eq!(
+            cm.estimate_ns(AlgoKind::Mec, &s),
+            cm.estimate_ns_prec(AlgoKind::Mec, &s, Precision::F32)
+        );
     }
 
     #[test]

@@ -1,8 +1,11 @@
-//! NHWC tensors and convolution geometry (paper §2.1, Table 1).
+//! NHWC tensors and convolution geometry (paper §2.1, Table 1), plus the
+//! 16-bit fixed-point dtype layer ([`quant`]).
 
+pub mod quant;
 pub mod shape;
 #[allow(clippy::module_inception)]
 pub mod tensor;
 
+pub use quant::{Precision, QParams};
 pub use shape::{ConvShape, KernelShape, Nhwc};
 pub use tensor::{Kernel, Tensor};

@@ -1,0 +1,216 @@
+//! 16-bit fixed-point quantization — the paper's second precision grid.
+//!
+//! §4 of the paper evaluates every algorithm "in both 32-bit floating
+//! point and 16-bit fixed point", noting that MEC's compact lowering
+//! compounds with lower precision: the memory sub-system moves half the
+//! bytes through the same L. This module is the dtype layer that makes
+//! that grid expressible end to end:
+//!
+//! * [`Precision`] — the execution dtype carried by
+//!   [`ConvContext`](crate::conv::ConvContext) and the planner.
+//! * [`QParams`] — symmetric per-tensor scale with round-to-nearest
+//!   quantize/dequantize (`q = round(x / scale)`, `x ≈ q · scale`,
+//!   `|q| ≤ 32767`).
+//! * [`f32_as_i16_mut`] / [`i16_slots`] — how q16 plans carve i16 storage
+//!   out of the shared f32 [`Arena`](crate::memory::Arena): two i16 lanes
+//!   per f32 slot, so the lowering buffers genuinely halve.
+//!
+//! Activations are quantized dynamically (per-execute abs-max); kernels
+//! are quantized once at plan time (see `ARCHITECTURE.md` §Precision).
+
+use std::fmt;
+
+/// Execution precision for the GEMM-lowering convolution family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    /// 32-bit float — the paper's default grid and the reference path.
+    #[default]
+    F32,
+    /// 16-bit fixed point: i16 storage, i32 accumulation (Q15 product
+    /// shifts), symmetric per-tensor scales.
+    Q16,
+}
+
+impl Precision {
+    /// Storage bytes per element of the lowered/packed operands.
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::Q16 => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Q16 => "q16",
+        }
+    }
+
+    /// Case-insensitive name lookup (CLI `--precision`, env
+    /// `MEC_BENCH_PRECISION`).
+    pub fn parse(s: &str) -> Option<Precision> {
+        Some(match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float" | "float32" => Precision::F32,
+            "q16" | "i16" | "int16" | "fixed16" => Precision::Q16,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Symmetric per-tensor quantization parameters: `x ≈ q · scale` with
+/// `q ∈ [-32767, 32767]` (the value -32768 is never produced, keeping the
+/// grid symmetric so negation is exact).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+}
+
+impl QParams {
+    /// Largest representable magnitude in quantized units.
+    pub const QMAX: i32 = 32767;
+
+    /// Scale such that `abs_max` maps to `QMAX`. Zero / non-finite
+    /// abs-max falls back to scale 1 (everything quantizes to 0 anyway).
+    pub fn from_abs_max(abs_max: f32) -> QParams {
+        let m = if abs_max.is_finite() && abs_max > 0.0 {
+            abs_max
+        } else {
+            1.0
+        };
+        QParams {
+            scale: m / Self::QMAX as f32,
+        }
+    }
+
+    /// Per-tensor scale from a buffer's absolute maximum.
+    pub fn from_slice(data: &[f32]) -> QParams {
+        Self::from_abs_max(data.iter().fold(0.0f32, |m, &v| m.max(v.abs())))
+    }
+
+    /// Round-to-nearest quantization, clamped to the symmetric range.
+    #[inline(always)]
+    pub fn quantize(&self, v: f32) -> i16 {
+        let q = (v / self.scale).round();
+        q.clamp(-(Self::QMAX as f32), Self::QMAX as f32) as i16
+    }
+
+    #[inline(always)]
+    pub fn dequantize(&self, q: i16) -> f32 {
+        q as f32 * self.scale
+    }
+
+    /// Quantize `src` into `dst` (equal lengths).
+    pub fn quantize_slice(&self, src: &[f32], dst: &mut [i16]) {
+        assert_eq!(src.len(), dst.len());
+        for (d, &v) in dst.iter_mut().zip(src) {
+            *d = self.quantize(v);
+        }
+    }
+}
+
+/// f32 arena slots needed to store `elems` i16 values (two lanes per
+/// slot, rounded up) — what
+/// [`WorkspaceLayout::push_i16`](crate::memory::WorkspaceLayout::push_i16)
+/// reserves.
+pub fn i16_slots(elems: usize) -> usize {
+    elems.div_ceil(2)
+}
+
+/// Reinterpret an f32 scratch region as i16 storage (`2 · len` values).
+/// Sound: `f32` is 4-byte aligned ≥ `i16`'s 2, both are plain-old-data,
+/// and the q16 consumers fully overwrite before reading (the same
+/// contract the f32 lowering buffers already rely on).
+pub fn f32_as_i16_mut(buf: &mut [f32]) -> &mut [i16] {
+    unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut i16, buf.len() * 2) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_names_roundtrip() {
+        for p in [Precision::F32, Precision::Q16] {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
+        assert_eq!(Precision::parse("Q16"), Some(Precision::Q16));
+        assert_eq!(Precision::parse(" FP32 "), Some(Precision::F32));
+        assert_eq!(Precision::parse("bf16"), None);
+        assert_eq!(Precision::default(), Precision::F32);
+        assert_eq!(Precision::F32.bytes_per_elem(), 4);
+        assert_eq!(Precision::Q16.bytes_per_elem(), 2);
+        assert_eq!(format!("{}", Precision::Q16), "q16");
+    }
+
+    #[test]
+    fn quantize_roundtrip_within_half_scale() {
+        let qp = QParams::from_abs_max(1.0);
+        for v in [-1.0f32, -0.73, -1.0 / 3.0, 0.0, 1e-4, 0.5, 0.9999, 1.0] {
+            let q = qp.quantize(v);
+            let back = qp.dequantize(q);
+            assert!(
+                (back - v).abs() <= qp.scale * 0.5 + f32::EPSILON,
+                "v={v} back={back} scale={}",
+                qp.scale
+            );
+        }
+        // Extremes hit the symmetric grid ends exactly.
+        assert_eq!(qp.quantize(1.0), 32767);
+        assert_eq!(qp.quantize(-1.0), -32767);
+    }
+
+    #[test]
+    fn out_of_range_values_clamp() {
+        let qp = QParams::from_abs_max(1.0);
+        assert_eq!(qp.quantize(5.0), 32767);
+        assert_eq!(qp.quantize(-5.0), -32767);
+    }
+
+    #[test]
+    fn degenerate_scales_fall_back() {
+        let qp = QParams::from_slice(&[0.0, 0.0]);
+        assert_eq!(qp.scale, 1.0 / 32767.0);
+        assert_eq!(qp.quantize(0.0), 0);
+        let qp = QParams::from_abs_max(f32::NAN);
+        assert!(qp.scale.is_finite() && qp.scale > 0.0);
+    }
+
+    #[test]
+    fn from_slice_uses_abs_max() {
+        let qp = QParams::from_slice(&[0.25, -2.0, 1.0]);
+        assert_eq!(qp.scale, 2.0 / 32767.0);
+        let mut q = [0i16; 3];
+        qp.quantize_slice(&[0.25, -2.0, 1.0], &mut q);
+        assert_eq!(q[1], -32767);
+    }
+
+    #[test]
+    fn i16_slots_round_up() {
+        assert_eq!(i16_slots(0), 0);
+        assert_eq!(i16_slots(1), 1);
+        assert_eq!(i16_slots(2), 1);
+        assert_eq!(i16_slots(7), 4);
+        assert_eq!(i16_slots(8), 4);
+    }
+
+    #[test]
+    fn f32_buffer_reinterprets_as_i16() {
+        let mut buf = vec![0.0f32; 3];
+        {
+            let lanes = f32_as_i16_mut(&mut buf);
+            assert_eq!(lanes.len(), 6);
+            for (i, v) in lanes.iter_mut().enumerate() {
+                *v = i as i16 - 2;
+            }
+        }
+        // Re-borrow sees the same storage.
+        assert_eq!(f32_as_i16_mut(&mut buf)[3], 1);
+    }
+}

@@ -83,24 +83,25 @@ where
     });
 }
 
-/// A `&mut [f32]` smuggled across `parallel_for` workers that write
-/// **disjoint** regions. Methods (not field access) are used inside
-/// closures so edition-2021 disjoint capture grabs the whole (Sync)
-/// wrapper rather than the raw pointer field.
+/// A `&mut [T]` smuggled across `parallel_for` workers that write
+/// **disjoint** regions (`T` defaults to `f32`; the q16 path shares
+/// `&mut [i16]` lowering buffers the same way). Methods (not field
+/// access) are used inside closures so edition-2021 disjoint capture
+/// grabs the whole (Sync) wrapper rather than the raw pointer field.
 ///
 /// Safety contract: callers must ensure tasks write non-overlapping index
 /// ranges; the paper's parallel loops (over output rows / lowered-matrix
 /// rows / batch entries) all have this property by construction.
-pub struct SharedSlice {
-    ptr: *mut f32,
+pub struct SharedSlice<T = f32> {
+    ptr: *mut T,
     len: usize,
 }
 
-unsafe impl Send for SharedSlice {}
-unsafe impl Sync for SharedSlice {}
+unsafe impl<T: Send> Send for SharedSlice<T> {}
+unsafe impl<T: Send> Sync for SharedSlice<T> {}
 
-impl SharedSlice {
-    pub fn new(buf: &mut [f32]) -> SharedSlice {
+impl<T> SharedSlice<T> {
+    pub fn new(buf: &mut [T]) -> SharedSlice<T> {
         SharedSlice {
             ptr: buf.as_mut_ptr(),
             len: buf.len(),
@@ -110,7 +111,7 @@ impl SharedSlice {
     /// Reconstruct the full slice. Each caller must touch only its own
     /// disjoint region (see type docs).
     #[allow(clippy::mut_from_ref)]
-    pub fn slice(&self) -> &mut [f32] {
+    pub fn slice(&self) -> &mut [T] {
         unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
     }
 

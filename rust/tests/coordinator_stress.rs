@@ -1,0 +1,160 @@
+//! Coordinator stress: many producers hammering the bounded queue while
+//! batcher-consumers drain it and the queue closes mid-stream.
+//!
+//! The contract under test is exactly the serving guarantee the
+//! coordinator advertises: every submitted request is either **answered
+//! exactly once** (accepted by `push`) or **rejected** (backpressure
+//! `Full` / shutdown `Closed`) — no request is lost after acceptance, no
+//! request is answered twice, and nothing hangs.
+
+use mec::coordinator::{BatchPolicy, Batcher, Request, RequestQueue, Response};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+const PRODUCERS: usize = 8;
+const CONSUMERS: usize = 2;
+const PER_PRODUCER: usize = 250;
+
+#[test]
+fn multi_producer_close_midstream_answers_exactly_once_or_rejects() {
+    let queue = Arc::new(RequestQueue::new(32)); // small: forces Full paths
+    let accepted = Arc::new(AtomicUsize::new(0));
+    let rejected = Arc::new(AtomicUsize::new(0));
+    let replied = Arc::new(AtomicUsize::new(0));
+
+    // Consumers: drain batches, answer each request exactly once.
+    let mut consumers = Vec::new();
+    for _ in 0..CONSUMERS {
+        let queue = Arc::clone(&queue);
+        consumers.push(std::thread::spawn(move || {
+            let batcher = Batcher::new(&queue, BatchPolicy::new(8, Duration::from_millis(1)));
+            let mut served = 0usize;
+            while let Some(batch) = batcher.next_batch() {
+                for req in batch {
+                    let resp = Response {
+                        id: req.id,
+                        scores: vec![1.0],
+                        class: 0,
+                        batch_size: 1,
+                    };
+                    // Receiver may have gone away; the send itself must
+                    // still be the one and only reply attempt.
+                    let _ = req.reply.send(resp);
+                    served += 1;
+                }
+            }
+            served
+        }));
+    }
+
+    // Producers: one push attempt per request (Full = load shed, the
+    // queue's documented backpressure), then verify every accepted
+    // request is answered exactly once.
+    let mut producers = Vec::new();
+    for p in 0..PRODUCERS {
+        let queue = Arc::clone(&queue);
+        let accepted = Arc::clone(&accepted);
+        let rejected = Arc::clone(&rejected);
+        let replied = Arc::clone(&replied);
+        producers.push(std::thread::spawn(move || {
+            let mut receivers = Vec::new();
+            for i in 0..PER_PRODUCER {
+                let (tx, rx) = mpsc::channel();
+                let req = Request {
+                    id: (p * PER_PRODUCER + i) as u64,
+                    sample: vec![],
+                    enqueued_at: Instant::now(),
+                    reply: tx,
+                };
+                match queue.push(req) {
+                    Ok(()) => {
+                        accepted.fetch_add(1, Ordering::SeqCst);
+                        receivers.push((rx, (p * PER_PRODUCER + i) as u64));
+                    }
+                    Err(_) => {
+                        rejected.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+                if i % 16 == 0 {
+                    std::thread::yield_now();
+                }
+            }
+            for (rx, id) in receivers {
+                // Exactly-once, part 1: an accepted request MUST receive
+                // one reply (drain-on-close semantics; a hang here is the
+                // bug this test exists to catch).
+                let resp = rx
+                    .recv_timeout(Duration::from_secs(30))
+                    .unwrap_or_else(|e| panic!("accepted request {id} never answered: {e:?}"));
+                assert_eq!(resp.id, id, "reply routed to the wrong request");
+                replied.fetch_add(1, Ordering::SeqCst);
+                // Exactly-once, part 2: no second reply may ever arrive —
+                // the worker dropped its sender after the single send.
+                match rx.try_recv() {
+                    Err(mpsc::TryRecvError::Empty) | Err(mpsc::TryRecvError::Disconnected) => {}
+                    Ok(dup) => panic!("request {id} answered twice: {dup:?}"),
+                }
+            }
+        }));
+    }
+
+    // Close mid-stream while producers are still pushing: later pushes
+    // are rejected with Closed, already-accepted requests still drain.
+    // Gate the close on the first accepted push (not a fixed sleep) so a
+    // loaded runner that delays producer scheduling can't close an
+    // untouched queue and trip the accepted>0 assertion below.
+    while accepted.load(Ordering::SeqCst) == 0 {
+        std::thread::yield_now();
+    }
+    std::thread::sleep(Duration::from_millis(1));
+    queue.close();
+
+    for h in producers {
+        h.join().expect("producer panicked");
+    }
+    let served: usize = consumers
+        .into_iter()
+        .map(|h| h.join().expect("consumer panicked"))
+        .sum();
+
+    let accepted = accepted.load(Ordering::SeqCst);
+    let rejected = rejected.load(Ordering::SeqCst);
+    let replied = replied.load(Ordering::SeqCst);
+    // Conservation: every request has exactly one fate.
+    assert_eq!(accepted + rejected, PRODUCERS * PER_PRODUCER);
+    // Every accepted request was served exactly once and replied exactly
+    // once (the per-request double-reply check ran inside the producers).
+    assert_eq!(served, accepted);
+    assert_eq!(replied, accepted);
+    // The close is gated on the first accept, so accepted > 0 is
+    // deterministic. Rejections (Full backpressure / post-close Closed)
+    // are all but certain with a cap-32 queue under 2000 pushes, but a
+    // degenerate scheduling where everything lands before the close is
+    // conservation-clean too, so no hard rejected>0 assert (it would be
+    // the one flaky line in an otherwise deterministic contract).
+    assert!(accepted > 0, "close raced ahead of every producer");
+    // Queue is fully drained.
+    assert!(queue.is_empty());
+}
+
+#[test]
+fn consumers_unblock_on_close_with_empty_queue() {
+    // Regression: consumers long-polling an empty queue must wake and
+    // exit when it closes, not wait out their poll deadline forever.
+    let queue = Arc::new(RequestQueue::new(4));
+    let qc = Arc::clone(&queue);
+    let t0 = Instant::now();
+    let consumer = std::thread::spawn(move || {
+        let batcher = Batcher::new(&qc, BatchPolicy::default());
+        batcher.next_batch() // must be None once closed
+    });
+    std::thread::sleep(Duration::from_millis(20));
+    queue.close();
+    let got = consumer.join().expect("consumer panicked");
+    assert!(got.is_none());
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "consumer failed to unblock on close"
+    );
+}

@@ -197,6 +197,49 @@ fn two_conv_model() -> Model {
 }
 
 #[test]
+fn plans_share_one_prepack_across_batch_sizes() {
+    with_tracker_lock(prepack_sharing_body);
+}
+
+fn prepack_sharing_body() {
+    // The kernel-side prepack (PackedB / Winograd U / FFT spectra /
+    // direct's kernel copy) is batch-independent: building it once and
+    // plan_shared-ing it into plans for two batch sizes must (a) be the
+    // same allocation by pointer, and (b) execute correctly for both.
+    let mut rng = Rng::new(0x5a5);
+    let ctx = ConvContext::default();
+    let small = ConvShape::new(Nhwc::new(1, 10, 10, 3), KernelShape::new(3, 3, 3, 4), 1, 1);
+    let big = ConvShape::new(Nhwc::new(3, 10, 10, 3), KernelShape::new(3, 3, 3, 4), 1, 1);
+    let kernel = Kernel::random(small.kernel, &mut rng);
+    for kind in AlgoKind::ALL {
+        let algo = kind.build();
+        if !algo.supports(&small) {
+            continue;
+        }
+        let prepack = algo.prepack(&ctx, &small, &kernel);
+        let plan_small = algo.plan_shared(&ctx, &small, std::sync::Arc::clone(&prepack));
+        let plan_big = algo.plan_shared(&ctx, &big, std::sync::Arc::clone(&prepack));
+        let a = plan_small.shared_prepack().expect("plan exposes prepack");
+        let b = plan_big.shared_prepack().expect("plan exposes prepack");
+        assert!(
+            std::sync::Arc::ptr_eq(&a, &b),
+            "{}: prepack duplicated across batch sizes",
+            kind.name()
+        );
+        // Shared-prepack plans still agree with the one-shot path.
+        for shape in [small, big] {
+            let input = Tensor::random(shape.input, &mut rng);
+            let want = convolve(kind, &ctx, &shape, &input, &kernel);
+            let plan = if shape.input.n == 1 { &plan_small } else { &plan_big };
+            let mut arena = Arena::new();
+            let mut out = Tensor::zeros(shape.output());
+            plan.execute(&input, &mut arena, &mut out);
+            assert_eq!(out.data(), want.data(), "{} n={}", kind.name(), shape.input.n);
+        }
+    }
+}
+
+#[test]
 fn model_arena_peak_is_max_not_sum_of_layer_workspaces() {
     let mut m = two_conv_model();
     let ctx = ConvContext::default();

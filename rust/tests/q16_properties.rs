@@ -1,0 +1,316 @@
+//! Q16 fixed-point path — correctness and memory contracts.
+//!
+//! The paper evaluates every algorithm in f32 AND 16-bit fixed point
+//! (§4). These tests pin the reproduction's q16 grid to the f32 direct
+//! reference with an **analytic** error bound, and assert the memory
+//! story that motivates it: the q16 lowering buffers occupy half the
+//! bytes of the f32 plan's, and the q16 hot path allocates nothing in
+//! steady state (mirroring `plan_execute.rs`).
+//!
+//! # The error bound
+//!
+//! With symmetric per-tensor scales (round-to-nearest), input quantized
+//! as `a = â·s_a + Δa` (|Δa| ≤ s_a/2) and kernel likewise, one output is
+//! a K-term dot product (K = k_h·k_w·i_c). Three error sources, summed
+//! per term:
+//!
+//! * operand quantization: `|a·Δk| + |k·Δa| + |Δa·Δk|`
+//!   ≤ `amax·s_k/2 + kmax·s_a/2 + s_a·s_k/4`;
+//! * the Q15 product shift: each widened product is rounded-shifted by
+//!   2¹⁵ before i32 accumulation (overflow-proof for K ≤ 2¹⁵), adding at
+//!   most `0.5 · s_a·s_k·2¹⁵` per term;
+//! * f32 accumulation noise in both paths — absorbed by a 1.5× headroom.
+//!
+//! So: `|q16 − direct| ≤ 1.5 · K · (amax·s_k/2 + kmax·s_a/2 + s_a·s_k/4
+//! + s_a·s_k·2¹⁴) + ε`. The randomized grid below asserts the max-abs
+//! deviation against exactly this bound.
+
+use mec::conv::{AlgoKind, ConvContext, ConvPlan, Convolution};
+use mec::memory::{self, measure_peak, Arena, Budget};
+use mec::model::{Layer, Model};
+use mec::planner::Planner;
+use mec::tensor::quant::QParams;
+use mec::tensor::{ConvShape, Kernel, KernelShape, Nhwc, Precision, Tensor};
+use mec::util::Rng;
+
+/// The q16 algorithms under test (direct is the oracle, not a subject).
+const Q16_ALGOS: [AlgoKind; 4] = [
+    AlgoKind::Mec,
+    AlgoKind::MecSolutionA,
+    AlgoKind::MecSolutionB,
+    AlgoKind::Im2col,
+];
+
+/// Run `f` holding the tracker's global lock (via `measure_peak`): tests
+/// in this binary allocate tracked arenas, so they serialize against the
+/// steady-state test's `current_bytes` assertions. Do NOT nest.
+fn with_tracker_lock<T>(f: impl FnOnce() -> T) -> T {
+    measure_peak(f).0
+}
+
+/// Random geometry with explicit zero padding: returns the unpadded
+/// input, the padding, and the ConvShape on the padded input (the stack's
+/// pre-applied-padding convention, paper §2.1).
+fn gen_case(r: &mut Rng) -> (Nhwc, usize, usize, ConvShape) {
+    let ih = r.range(3, 13);
+    let iw = r.range(3, 13);
+    let ic = r.range(1, 5);
+    let (ph, pw) = (r.range(0, 3), r.range(0, 3));
+    let (h, w) = (ih + 2 * ph, iw + 2 * pw);
+    let kh = r.range(1, h.min(5) + 1);
+    let kw = r.range(1, w.min(5) + 1);
+    let shape = ConvShape::new(
+        Nhwc::new(r.range(1, 4), h, w, ic),
+        KernelShape::new(kh, kw, ic, r.range(1, 6)),
+        r.range(1, 4),
+        r.range(1, 4),
+    );
+    (Nhwc::new(shape.input.n, ih, iw, ic), ph, pw, shape)
+}
+
+/// The documented analytic bound (see module docs).
+fn q16_error_bound(shape: &ConvShape, input: &Tensor, kernel: &Kernel) -> f64 {
+    let qa = QParams::from_slice(input.data());
+    let qk = QParams::from_slice(kernel.data());
+    let amax = input.data().iter().fold(0.0f32, |m, &v| m.max(v.abs())) as f64;
+    let kmax = kernel.data().iter().fold(0.0f32, |m, &v| m.max(v.abs())) as f64;
+    let (sa, sk) = (qa.scale as f64, qk.scale as f64);
+    let kdim = (shape.kernel.kh * shape.kernel.kw * shape.kernel.ic) as f64;
+    1.5 * kdim * (amax * sk * 0.5 + kmax * sa * 0.5 + sa * sk * 0.25 + sa * sk * 16384.0) + 1e-6
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x as f64 - y as f64).abs())
+        .fold(0.0, f64::max)
+}
+
+#[test]
+fn q16_matches_f32_direct_within_analytic_bound() {
+    with_tracker_lock(bound_grid_body);
+}
+
+fn bound_grid_body() {
+    let mut rng = Rng::new(0x9160);
+    let f32_ctx = ConvContext::default();
+    for case in 0..32 {
+        let (raw_shape, ph, pw, shape) = gen_case(&mut rng);
+        let raw = Tensor::random(raw_shape, &mut rng);
+        let input = if ph > 0 || pw > 0 {
+            raw.pad_spatial(ph, pw)
+        } else {
+            raw
+        };
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let mut want = Tensor::zeros(shape.output());
+        let direct = AlgoKind::Direct.build().plan(&f32_ctx, &shape, &kernel);
+        direct.execute(&input, &mut Arena::new(), &mut want);
+
+        let bound = q16_error_bound(&shape, &input, &kernel);
+        for kind in Q16_ALGOS {
+            for threads in [1usize, 3] {
+                let ctx = ConvContext::default()
+                    .with_threads(threads)
+                    .with_precision(Precision::Q16);
+                let plan = kind.build().plan(&ctx, &shape, &kernel);
+                let mut arena = Arena::new();
+                let mut got = Tensor::zeros(shape.output());
+                plan.execute(&input, &mut arena, &mut got);
+                let d = max_abs_diff(got.data(), want.data());
+                assert!(
+                    d <= bound,
+                    "case {case} {} t={threads}: max_abs={d:.3e} > bound={bound:.3e} on {} (pad {ph},{pw})",
+                    kind.name(),
+                    shape.describe()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn q16_lowering_buffers_use_at_most_half_the_f32_bytes() {
+    let mut rng = Rng::new(0x9161);
+    // Includes strided and odd geometries; element counts here are even,
+    // so "half" is exact (odd counts round up by one f32 slot).
+    for (n, ih, iw, ic, kh, kw, kc, sh, sw) in [
+        (1usize, 7, 7, 2, 3, 3, 4, 1, 1),
+        (2, 12, 10, 3, 5, 3, 2, 2, 2),
+        (1, 9, 14, 4, 3, 2, 6, 1, 3),
+    ] {
+        let shape = ConvShape::new(
+            Nhwc::new(n, ih, iw, ic),
+            KernelShape::new(kh, kw, ic, kc),
+            sh,
+            sw,
+        );
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        for kind in [AlgoKind::Mec, AlgoKind::Im2col] {
+            let f32_plan = kind.build().plan(&ConvContext::default(), &shape, &kernel);
+            let q16_plan = kind.build().plan(
+                &ConvContext::default().with_precision(Precision::Q16),
+                &shape,
+                &kernel,
+            );
+            let f32_lowered = f32_plan.layout().region("lowered").unwrap().elems * 4;
+            let q16_lowered = q16_plan.layout().region("lowered").unwrap().elems * 4;
+            assert!(
+                q16_lowered <= f32_lowered / 2 + 4,
+                "{}: q16 lowered {q16_lowered} B vs f32 {f32_lowered} B on {}",
+                kind.name(),
+                shape.describe()
+            );
+            // The prepacked kernel halves too.
+            assert!(q16_plan.resident_bytes() <= f32_plan.resident_bytes() / 2 + 4);
+        }
+    }
+}
+
+#[test]
+fn q16_execute_allocates_zero_tracked_bytes_in_steady_state() {
+    // Each per-algorithm block runs inside measure_peak (which holds the
+    // global tracker lock), so the current_bytes deltas are ours alone.
+    let mut rng = Rng::new(0x9162);
+    let shape = ConvShape::new(Nhwc::new(2, 11, 9, 3), KernelShape::new(3, 3, 3, 4), 1, 2);
+    let input = Tensor::random(shape.input, &mut rng);
+    let kernel = Kernel::random(shape.kernel, &mut rng);
+    let ctx = ConvContext::default().with_precision(Precision::Q16);
+    for kind in Q16_ALGOS {
+        let plan = kind.build().plan(&ctx, &shape, &kernel);
+        let ((), _peak) = measure_peak(|| {
+            let mut arena = Arena::new();
+            let mut out = Tensor::zeros(shape.output());
+            plan.execute(&input, &mut arena, &mut out); // first: arena grows
+            let bytes_after_first = memory::current_bytes();
+            assert_eq!(arena.bytes(), plan.workspace_bytes(), "{}", kind.name());
+            for rep in 0..4 {
+                plan.execute(&input, &mut arena, &mut out);
+                assert_eq!(
+                    memory::current_bytes(),
+                    bytes_after_first,
+                    "{} rep {rep}: tracked allocation in q16 steady state",
+                    kind.name()
+                );
+            }
+        });
+    }
+}
+
+#[test]
+fn q16_plan_execute_is_deterministic() {
+    with_tracker_lock(determinism_body);
+}
+
+fn determinism_body() {
+    // Same plan, same input -> bitwise-identical output across repeats
+    // and across a rebuilt plan (quantization is deterministic).
+    let mut rng = Rng::new(0x9163);
+    let shape = ConvShape::new(Nhwc::new(1, 10, 10, 2), KernelShape::new(3, 3, 2, 3), 1, 1);
+    let input = Tensor::random(shape.input, &mut rng);
+    let kernel = Kernel::random(shape.kernel, &mut rng);
+    let ctx = ConvContext::default().with_precision(Precision::Q16);
+    let plan = AlgoKind::Mec.build().plan(&ctx, &shape, &kernel);
+    let mut arena = Arena::new();
+    let mut a = Tensor::zeros(shape.output());
+    let mut b = Tensor::zeros(shape.output());
+    plan.execute(&input, &mut arena, &mut a);
+    plan.execute(&input, &mut arena, &mut b);
+    assert_eq!(a.data(), b.data());
+    let rebuilt = AlgoKind::Mec.build().plan(&ctx, &shape, &kernel);
+    rebuilt.execute(&input, &mut arena, &mut b);
+    assert_eq!(a.data(), b.data());
+}
+
+#[test]
+fn env_selected_precision_plans_and_executes() {
+    // The CI matrix runs the suite under MEC_BENCH_PRECISION={f32,q16};
+    // this test picks up whichever grid the leg selected (same parsing
+    // the benches use) and drives a planned convolution end to end under
+    // it, so the q16 leg genuinely exercises the env-var-driven path.
+    with_tracker_lock(|| {
+        let precision = mec::bench::bench_precision();
+        let ctx = ConvContext::default().with_precision(precision);
+        let shape = ConvShape::new(Nhwc::new(2, 9, 9, 3), KernelShape::new(3, 3, 3, 4), 1, 1);
+        let mut rng = Rng::new(0x9165);
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let mut want = Tensor::zeros(shape.output());
+        AlgoKind::Direct
+            .build()
+            .plan(&ConvContext::default(), &shape, &kernel)
+            .execute(&input, &mut Arena::new(), &mut want);
+        let plan = AlgoKind::Mec.build().plan(&ctx, &shape, &kernel);
+        let mut got = Tensor::zeros(shape.output());
+        plan.execute(&input, &mut Arena::new(), &mut got);
+        let bound = match precision {
+            Precision::F32 => 1e-4,
+            Precision::Q16 => q16_error_bound(&shape, &input, &kernel),
+        };
+        let d = max_abs_diff(got.data(), want.data());
+        assert!(d <= bound, "{precision}: max_abs={d:.3e} > {bound:.3e}");
+    });
+}
+
+#[test]
+fn q16_model_plans_quantized_family_and_tracks_f32_forward() {
+    with_tracker_lock(model_q16_body);
+}
+
+fn model_q16_body() {
+    let mut rng = Rng::new(0x9164);
+    let mut m = Model::new(
+        "q16-test",
+        (10, 10, 2),
+        vec![
+            Layer::Conv {
+                kernel: Kernel::random(KernelShape::new(3, 3, 2, 6), &mut rng),
+                bias: vec![0.05; 6],
+                sh: 1,
+                sw: 1,
+                ph: 1,
+                pw: 1,
+            },
+            Layer::Relu,
+            Layer::Conv {
+                kernel: Kernel::random(KernelShape::new(3, 3, 6, 4), &mut rng),
+                bias: vec![0.0; 4],
+                sh: 1,
+                sw: 1,
+                ph: 0,
+                pw: 0,
+            },
+        ],
+    );
+    let batch = Tensor::random(Nhwc::new(2, 10, 10, 2), &mut rng);
+
+    let f32_ctx = ConvContext::default();
+    m.plan(&Planner::new(), &Budget::unlimited(), &f32_ctx, 2);
+    let mut arena = m.sized_arena();
+    let want = m.forward(&f32_ctx, &batch, &mut arena);
+
+    let q16_ctx = ConvContext::default().with_precision(Precision::Q16);
+    m.plan(&Planner::new(), &Budget::unlimited(), &q16_ctx, 2);
+    // The q16 planner must only pick algorithms with a q16 path.
+    for (i, algo) in m.plan_summary() {
+        assert!(
+            algo.supports_precision(Precision::Q16),
+            "layer {i} planned {algo:?} under q16"
+        );
+    }
+    let mut arena = m.sized_arena();
+    let got = m.forward(&q16_ctx, &batch, &mut arena);
+    // Whole-model drift stays small (per-layer bounds compose; ReLU is
+    // 1-Lipschitz). Loose relative tolerance, not bitwise.
+    mec::util::assert_allclose(got.data(), want.data(), 2e-2, "q16 model forward");
+    // And the planned q16 arena is no bigger than the f32 one would be —
+    // the halved lowering buffers shrink the max-over-layers.
+    let q16_ws = m.planned_workspace_bytes();
+    m.plan(&Planner::new(), &Budget::unlimited(), &f32_ctx, 2);
+    assert!(
+        q16_ws <= m.planned_workspace_bytes(),
+        "q16 arena {} > f32 arena {}",
+        q16_ws,
+        m.planned_workspace_bytes()
+    );
+}
