@@ -1,37 +1,40 @@
 //! The memory-constrained-device story (paper §1) made interactive:
-//! sweep a workspace budget from 16 MB down to zero on cv4 (ResNet's
-//! biggest conv) and watch the planner walk down the algorithm ladder —
-//! im2col → MEC → direct — trading speed for footprint.
+//! sweep a workspace budget from gigabytes down to zero on cv4 (ResNet's
+//! biggest conv) and watch the engine builder walk down the algorithm
+//! ladder — im2col → MEC → direct — trading speed for footprint. Each
+//! budget is one `Engine::builder(..).budget(..).build()` call; the
+//! chosen plan comes out of the engine's build report.
 //!
 //! ```text
 //! cargo run --release --example memory_budget
 //! ```
 
 use mec::bench::workload::by_name;
-use mec::conv::{ConvContext, Convolution};
+use mec::conv::{AlgoKind, Convolution};
+use mec::engine::Engine;
 use mec::memory::Budget;
-use mec::planner::Planner;
 use mec::util::stats::fmt_bytes;
 
 fn main() {
-    let shape = by_name("cv4").unwrap().shape(1, 1);
-    let planner = Planner::new();
-    let ctx = ConvContext::mobile();
+    let w = by_name("cv4").unwrap();
+    let shape = w.shape(1, 1);
     println!("layer cv4: {}", shape.describe());
     println!(
         "workspace needs: im2col {}, winograd n/a (k=7), mec {}, fft {}, direct 0\n",
         fmt_bytes(shape.im2col_lowered_elems() * 4),
         fmt_bytes(shape.mec_lowered_elems() * 4),
-        fmt_bytes(
-            mec::conv::AlgoKind::Fft
-                .build()
-                .workspace_bytes(&shape)
-        ),
+        fmt_bytes(AlgoKind::Fft.build().workspace_bytes(&shape)),
     );
-    println!("{:>12} | {:<10} {:>14} {:>14}", "budget", "chosen", "workspace", "est time");
+    println!(
+        "{:>12} | {:<10} {:>14} {:>14}",
+        "budget", "chosen", "workspace", "est time"
+    );
     for budget_mb in [4096.0f64, 512.0, 160.0, 100.0, 50.0, 20.0, 1.0, 0.0] {
-        let budget = Budget::new((budget_mb * 1e6) as usize);
-        let plan = planner.plan(&shape, &budget, &ctx);
+        let engine = Engine::builder(w.model(1, 101))
+            .budget(Budget::new((budget_mb * 1e6) as usize))
+            .build()
+            .expect("direct is always admissible");
+        let chosen = &engine.plan_report()[0].chosen;
         println!(
             "{:>12} | {:<10} {:>14} {:>12.1}ms",
             if budget_mb >= 1.0 {
@@ -39,9 +42,9 @@ fn main() {
             } else {
                 format!("{:.0} B", budget_mb * 1e6)
             },
-            plan.algo.name(),
-            fmt_bytes(plan.workspace_bytes),
-            plan.est_ns / 1e6,
+            chosen.algo.name(),
+            fmt_bytes(chosen.workspace_bytes),
+            chosen.est_ns / 1e6,
         );
     }
     println!(

@@ -1,24 +1,28 @@
-//! Quickstart: the paper's claim in 60 lines.
+//! Quickstart: the paper's claim through the `Engine` facade.
 //!
-//! Runs the cv6 benchmark layer (12×12×256 → 3×3×512, the layer with the
-//! paper's biggest mobile speedup) through im2col and MEC, prints the
-//! memory-overhead ratio (Eq. 2 vs Eq. 3) and runtimes, and verifies the
-//! two outputs match bit-for-bit-ish.
+//! Builds two single-layer engines on cv6 (12×12×256 → 3×3×512, the
+//! layer with the paper's biggest mobile speedup) — one pinned to
+//! im2col, one to MEC — runs a session each, and prints the
+//! memory-overhead ratio (Eq. 2 vs Eq. 3) and steady-state runtimes.
+//! The two outputs must match: same convolution, a fraction of the
+//! temporary memory.
 //!
 //! ```text
 //! cargo run --release --example quickstart
 //! ```
 
 use mec::bench::workload::by_name;
-use mec::conv::{AlgoKind, ConvContext, Convolution};
-use mec::memory::{measure_peak, Workspace};
-use mec::tensor::{Kernel, Tensor};
+use mec::conv::AlgoKind;
+use mec::engine::Engine;
+use mec::memory::measure_peak;
+use mec::tensor::Tensor;
 use mec::util::stats::{fmt_bytes, fmt_ns};
 use mec::util::{assert_allclose, Rng};
 use std::time::Instant;
 
 fn main() {
-    let shape = by_name("cv6").unwrap().shape(1, 1);
+    let w = by_name("cv6").unwrap();
+    let shape = w.shape(1, 1);
     println!("layer cv6: {}", shape.describe());
     println!(
         "analytic lowered sizes: im2col {} (Eq. 2)  vs  MEC {} (Eq. 3)",
@@ -28,42 +32,47 @@ fn main() {
 
     let mut rng = Rng::new(2017); // ICML 2017
     let input = Tensor::random(shape.input, &mut rng);
-    let kernel = Kernel::random(shape.kernel, &mut rng);
-    let ctx = ConvContext::default();
 
     let mut outputs = Vec::new();
     for kind in [AlgoKind::Im2col, AlgoKind::Mec] {
-        let algo = kind.build();
-        let mut out = Tensor::zeros(shape.output());
-        // Measure peak temporary memory on a cold workspace...
-        let ((), peak) = measure_peak(|| {
-            let mut ws = Workspace::new();
-            algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
+        // One builder call replaces the old planner + prepack + workspace
+        // choreography: build() validates the override against the
+        // geometry/precision/budget, plans the layer, and prepacks the
+        // kernel. Same seed both times, so both engines hold the same
+        // weights.
+        let engine = Engine::builder(w.model(1, 2017))
+            .pin_batch_sizes(&[1])
+            .algo_override(0, kind)
+            .build()
+            .expect("cv6 supports both algorithms");
+        // Peak temporary memory = the session arena growing to the
+        // plan's layout on first use (the paper's memory-overhead)...
+        let (mut session, peak) = measure_peak(|| {
+            let mut s = engine.session();
+            s.infer_batch(&input).expect("input matches engine");
+            s
         });
-        // ...and runtime on a warm one (the serving steady state).
-        let mut ws = Workspace::new();
-        algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
-        let t0 = Instant::now();
+        // ...and runtime in the steady state (the serving hot path:
+        // prepacked kernel, pre-sized arena, no locks).
         let reps = 5;
+        let t0 = Instant::now();
+        let mut out = None;
         for _ in 0..reps {
-            algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
+            out = Some(session.infer_batch(&input).expect("input matches engine"));
         }
         let ns = t0.elapsed().as_nanos() as f64 / reps as f64;
         println!(
             "{:<8} memory-overhead {:>10}   runtime {:>10}",
-            algo.name(),
+            kind.name(),
             fmt_bytes(peak),
             fmt_ns(ns)
         );
-        outputs.push(out);
+        outputs.push(out.unwrap());
     }
 
-    assert_allclose(
-        outputs[1].data(),
-        outputs[0].data(),
-        1e-4,
-        "MEC vs im2col",
+    assert_allclose(outputs[1].data(), outputs[0].data(), 1e-4, "MEC vs im2col");
+    println!(
+        "outputs identical ✓  (same convolution, {}x less temporary memory)",
+        shape.im2col_lowered_elems() / shape.mec_lowered_elems().max(1)
     );
-    println!("outputs identical ✓  (same convolution, {}x less temporary memory)",
-        shape.im2col_lowered_elems() / shape.mec_lowered_elems().max(1));
 }

@@ -2,6 +2,11 @@
 //! the Mobile configuration (1 thread, batch 1), weighted by how often
 //! each layer shape occurs in the network.
 //!
+//! Each (layer, algorithm) cell is a single-layer `Engine` with an
+//! `algo_override` — build validates and prepacks, a session gives the
+//! steady-state runtime — so the comparison measures exactly what a
+//! deployed engine would do.
+//!
 //! The paper reports Conv.cpu 203.6 MB / 1701.6 ms vs MEC.cpu 64.6 MB /
 //! 1391.6 ms (ratios 3.2× memory, 1.2× runtime). Absolute milliseconds
 //! are host-specific; the ratios are the reproduction target.
@@ -11,14 +16,13 @@
 //! ```
 
 use mec::bench::workload::resnet101_table3;
-use mec::conv::{AlgoKind, ConvContext, Convolution};
-use mec::memory::Workspace;
-use mec::tensor::{Kernel, Tensor};
+use mec::conv::AlgoKind;
+use mec::engine::Engine;
+use mec::tensor::Tensor;
 use mec::util::Rng;
 use std::time::Instant;
 
 fn main() {
-    let ctx = ConvContext::mobile();
     let mut rng = Rng::new(101);
     println!(
         "{:<6} {:>7} | {:>12} {:>12} | {:>12} {:>12}",
@@ -28,17 +32,20 @@ fn main() {
     for (w, weight) in resnet101_table3() {
         let shape = w.shape(1, 1);
         let input = Tensor::random(shape.input, &mut rng);
-        let kernel = Kernel::random(shape.kernel, &mut rng);
         let mut row = [0.0f64; 4];
         for (i, kind) in [AlgoKind::Im2col, AlgoKind::Mec].iter().enumerate() {
-            let algo = kind.build();
-            let mut out = Tensor::zeros(shape.output());
-            let mut ws = Workspace::new();
-            algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out); // warm
+            let engine = Engine::builder(w.model(1, 101))
+                .threads(1)
+                .pin_batch_sizes(&[1])
+                .algo_override(0, *kind)
+                .build()
+                .expect("table-3 layers run both algorithms");
+            let mut session = engine.session();
+            session.infer_batch(&input).expect("input matches"); // warm
             let t0 = Instant::now();
-            algo.run(&ctx, &shape, &input, &kernel, &mut ws, &mut out);
+            session.infer_batch(&input).expect("input matches");
             let ms = t0.elapsed().as_secs_f64() * 1e3;
-            row[i * 2] = algo.workspace_bytes(&shape) as f64 / 1e6;
+            row[i * 2] = engine.plan_report()[0].chosen.workspace_bytes as f64 / 1e6;
             row[i * 2 + 1] = ms;
         }
         println!(

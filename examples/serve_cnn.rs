@@ -1,15 +1,17 @@
 //! END-TO-END DRIVER (recorded in EXPERIMENTS.md §E2E): proves the
 //! layers compose on a real workload.
 //!
-//! 1. Loads the CNN that `make artifacts` trained in JAX on the synthetic
-//!    shapes dataset (`artifacts/model.mecw`, ~97% eval accuracy) and the
-//!    held-out eval set (`artifacts/eval.bin`).
-//! 2. Plans every conv layer with the memory-budgeted planner (MEC wins):
-//!    algorithms chosen, kernels prepacked into ConvPlans, and the shared
-//!    per-worker arena sized at the max over layers.
-//! 3. Serves the eval set as individual requests through the coordinator
-//!    (queue → dynamic batcher → workers → planned native engine),
-//!    reporting accuracy, p50/p95/p99 latency, and throughput.
+//! 1. Builds an `Engine` straight from the `.mecw` the build-time JAX
+//!    trainer produced (`artifacts/model.mecw`, ~97% eval accuracy) —
+//!    one builder call owns the budget, batch pinning, planning, and
+//!    kernel prepacking that used to be hand-assembled here.
+//! 2. The build report shows the memory-budgeted choices (MEC wins) and
+//!    the shared per-worker arena sizing (max over layers and pinned
+//!    batches).
+//! 3. Serves the held-out eval set (`artifacts/eval.bin`) as individual
+//!    requests through the coordinator (queue → dynamic batcher →
+//!    worker sessions), reporting accuracy, p50/p95/p99 latency, and
+//!    throughput.
 //! 4. With `--features pjrt`: cross-checks the native engine against the
 //!    PJRT executor running the AOT JAX/Pallas HLO
 //!    (`artifacts/model_fwd.hlo.txt`) on the same samples — the full
@@ -19,12 +21,11 @@
 //! make artifacts && cargo run --release --example serve_cnn
 //! ```
 
-use mec::conv::ConvContext;
 use mec::coordinator::{BatchPolicy, Server, ServerConfig};
+use mec::engine::Engine;
 use mec::ensure;
 use mec::memory::Budget;
-use mec::model::{load_mecw, EvalSet};
-use mec::planner::Planner;
+use mec::model::EvalSet;
 use mec::util::error::Result;
 use mec::util::stats::fmt_bytes;
 use std::sync::Arc;
@@ -38,38 +39,45 @@ fn main() -> Result<()> {
         "artifacts missing — run `make artifacts` first"
     );
 
-    // ---- 1. load model + eval set -------------------------------------
-    let mut model = load_mecw(dir.join("model.mecw")).map_err(|e| mec::format_err!("{e}"))?;
+    // ---- 1. build the engine under a mobile-ish budget ----------------
+    let engine = Engine::builder(dir.join("model.mecw"))
+        .budget(Budget::new(2 << 20)) // 2 MB workspace — phone territory
+        .pin_batch_sizes(&[1, 32])
+        .build()
+        .map_err(|e| mec::format_err!("{e}"))?;
     let eval = EvalSet::load(dir.join("eval.bin"))?;
-    println!(
-        "model {:?}: {} layers / {} params; eval set: {} samples",
-        model.name,
-        model.layers.len(),
-        model.param_count(),
-        eval.len()
-    );
+    {
+        let model = engine.model();
+        println!(
+            "model {:?}: {} layers / {} params; eval set: {} samples",
+            model.name,
+            model.layers.len(),
+            model.param_count(),
+            eval.len()
+        );
+    }
 
-    // ---- 2. plan under a mobile-ish budget ----------------------------
-    let budget = Budget::new(2 << 20); // 2 MB workspace — phone territory
-    let ctx = ConvContext::default();
-    model.plan(&Planner::new(), &budget, &ctx, 32);
-    for (i, algo) in model.plan_summary() {
-        println!("  conv layer {i}: planned -> {}", algo.name());
+    // ---- 2. the build report: planned choices + arena sizing ----------
+    for lp in engine.plan_report() {
+        println!(
+            "  conv layer {}: planned -> {}",
+            lp.layer,
+            lp.chosen.algo.name()
+        );
     }
     println!(
-        "  shared arena: {} per worker (max over planned layers)",
-        fmt_bytes(model.planned_workspace_bytes())
+        "  shared arena: {} per worker (max over planned layers and pinned batches)",
+        fmt_bytes(engine.workspace_bytes())
     );
 
     // ---- 3. serve the eval set through the coordinator ----------------
-    let model = Arc::new(model);
+    let engine = Arc::new(engine);
     let server = Server::start(
-        Arc::clone(&model),
+        Arc::clone(&engine),
         ServerConfig {
             workers: 1,
             queue_capacity: 512,
             policy: BatchPolicy::new(32, Duration::from_millis(2)),
-            ctx: ctx.clone(),
         },
     );
     let client = server.client();
@@ -85,10 +93,13 @@ fn main() -> Result<()> {
         let resp = rx
             .recv()
             .map_err(|e| mec::format_err!("worker dropped: {e}"))?;
-        if resp.class == label {
+        let pred = resp
+            .result
+            .map_err(|e| mec::format_err!("request failed: {e}"))?;
+        if pred.class == label {
             correct += 1;
         }
-        native_scores.push(resp.scores);
+        native_scores.push(pred.scores);
     }
     let wall = t0.elapsed();
     let metrics = server.shutdown();
@@ -116,9 +127,9 @@ fn main() -> Result<()> {
         use mec::util::assert_allclose;
 
         let manifest = Manifest::load(&dir)?;
-        let engine = PjrtEngine::cpu()?;
-        let mut pjrt = PjrtExecutor::from_artifact(&engine, &manifest, "model_fwd")?
-            .with_weights(model_weight_inputs(&model))?;
+        let pjrt_engine = PjrtEngine::cpu()?;
+        let mut pjrt = PjrtExecutor::from_artifact(&pjrt_engine, &manifest, "model_fwd")?
+            .with_weights(model_weight_inputs(engine.model()))?;
         let b = pjrt.lowered_batch();
         let mut data = Vec::new();
         for s in &eval.samples[..b] {
@@ -131,7 +142,7 @@ fn main() -> Result<()> {
         println!(
             "\nPJRT cross-check ✓ — AOT JAX/Pallas HLO ({} platform) matches the \
              native rust engine on {} samples",
-            engine.platform(),
+            pjrt_engine.platform(),
             b
         );
     }

@@ -11,6 +11,8 @@
 //! * `MEC_BENCH_PRECISION` — `f32` (default) or `q16`: the paper's two §4
 //!   grids, so the float-vs-fixed comparison is one env var
 
+use crate::bench::workload::Workload;
+use crate::engine::{Engine, EngineBuilder};
 use crate::tensor::quant::Precision;
 use crate::util::stats::{fmt_ns, Summary};
 use std::time::{Duration, Instant};
@@ -161,6 +163,16 @@ pub fn bench_mode() -> BenchMode {
     }
 }
 
+/// An [`EngineBuilder`] over a single-conv-layer model of `workload`,
+/// pinned to `batch` — the bridge the CLI subcommands, examples, and
+/// bench drivers use to put one paper layer behind the
+/// [`Engine`](crate::engine::Engine) facade. Callers chain the remaining
+/// knobs (`.precision`, `.budget`, `.threads`, `.algo_override(0, ..)`,
+/// `.autotune`) and `build()`.
+pub fn layer_builder(workload: &Workload, batch: usize, scale: usize) -> EngineBuilder {
+    Engine::builder(workload.model(scale, 0x6ec)).pin_batch_sizes(&[batch])
+}
+
 /// Print a report table header + rows, paper-figure style.
 pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
     println!("\n=== {title} ===");
@@ -223,6 +235,25 @@ mod tests {
             std::thread::sleep(Duration::from_millis(5));
         });
         assert!(r.median_ms() >= 4.0, "median={}ms", r.median_ms());
+    }
+
+    #[test]
+    fn layer_builder_drives_one_workload_through_the_facade() {
+        use crate::bench::workload::by_name;
+        use crate::conv::AlgoKind;
+        use crate::tensor::Tensor;
+        use crate::util::Rng;
+        let w = by_name("cv6").unwrap();
+        let scale = 16; // keep the unit test light
+        let engine = layer_builder(&w, 2, scale)
+            .algo_override(0, AlgoKind::Mec)
+            .build()
+            .expect("cv6 runs MEC");
+        assert_eq!(engine.plan_report()[0].shape, w.shape(2, scale));
+        let mut rng = Rng::new(3);
+        let input = Tensor::random(w.shape(2, scale).input, &mut rng);
+        let out = engine.session().infer_batch(&input).unwrap();
+        assert_eq!(out.shape(), w.shape(2, scale).output());
     }
 
     #[test]

@@ -5,7 +5,9 @@
 pub mod harness;
 pub mod workload;
 
-pub use harness::{bench_fn, bench_mode, bench_precision, BenchMode, BenchOpts, BenchResult};
+pub use harness::{
+    bench_fn, bench_mode, bench_precision, layer_builder, BenchMode, BenchOpts, BenchResult,
+};
 pub use workload::{resnet101_table3, suite, Platform, Workload};
 
 use crate::conv::{ConvContext, ConvPlan, Convolution};

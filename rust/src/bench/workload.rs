@@ -8,7 +8,9 @@
 //! `scale` lets the harness shrink channel counts uniformly when a quick
 //! run is wanted (`MEC_BENCH_SCALE`); shapes stay faithful at scale=1.
 
-use crate::tensor::{ConvShape, KernelShape, Nhwc};
+use crate::model::{Layer, Model};
+use crate::tensor::{ConvShape, Kernel, KernelShape, Nhwc};
+use crate::util::Rng;
 
 /// One named benchmark layer.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -41,6 +43,32 @@ impl Workload {
     /// k/s ratio — the quantity Eq. (4) says drives MEC's advantage.
     pub fn k_over_s(&self) -> f64 {
         self.kh as f64 / self.s as f64
+    }
+
+    /// A single-conv-layer [`Model`] of this workload (random weights
+    /// from `seed`, zero bias, no padding — workloads are stored
+    /// unpadded), so the CLI, benches, and examples can drive one
+    /// benchmark layer through the [`Engine`](crate::engine::Engine)
+    /// facade. Batch size comes from the engine's pinned batches, not
+    /// the model; at a given batch the model's conv geometry equals
+    /// [`Workload::shape`] exactly.
+    pub fn model(&self, scale: usize, seed: u64) -> Model {
+        let sc = scale.max(1);
+        let ic = (self.ic / sc).max(1);
+        let kc = (self.kc / sc).max(1);
+        let mut rng = Rng::new(seed);
+        Model::new(
+            self.name,
+            (self.ih, self.iw, ic),
+            vec![Layer::Conv {
+                kernel: Kernel::random(KernelShape::new(self.kh, self.kw, ic, kc), &mut rng),
+                bias: vec![0.0; kc],
+                sh: self.s,
+                sw: self.s,
+                ph: 0,
+                pw: 0,
+            }],
+        )
     }
 }
 
@@ -127,6 +155,15 @@ mod tests {
         assert_eq!((cv6.ih, cv6.ic, cv6.kh, cv6.kc, cv6.s), (12, 256, 3, 512, 1));
         let cv12 = by_name("cv12").unwrap();
         assert_eq!((cv12.ih, cv12.ic, cv12.kc), (7, 512, 512));
+    }
+
+    #[test]
+    fn workload_model_reproduces_the_conv_shape() {
+        let w = by_name("cv6").unwrap();
+        let m = w.model(4, 7);
+        let shapes = m.conv_shapes(3);
+        assert_eq!(shapes.len(), 1);
+        assert_eq!(shapes[0].1, w.shape(3, 4));
     }
 
     #[test]

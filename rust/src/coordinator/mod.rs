@@ -4,15 +4,22 @@
 //! delay ... on end-point devices"): an always-on server that accepts
 //! single-image classification requests, groups them into mini-batches
 //! (MEC's Solution A/B dispatch is exactly a batch-size question), runs
-//! the planned engine, and reports latency/throughput.
+//! them through per-worker [`Session`](crate::engine::Session)s of a
+//! shared [`Engine`](crate::engine::Engine), and reports
+//! latency/throughput.
 //!
 //! Pieces:
 //! * [`queue`]  — bounded MPSC request queue with backpressure.
 //! * [`batcher`] — dynamic batching: wait up to `max_delay` to fill a
 //!   batch of `max_batch` (vLLM/Triton-style).
-//! * [`server`] — worker threads draining batches through a shared
-//!   [`Model`](crate::model::Model), per-worker reusable workspaces.
+//! * [`server`] — worker threads draining batches through per-worker
+//!   engine sessions (shared plans/prepacks, private arenas).
 //! * [`metrics`] — latency histograms + counters.
+//!
+//! Malformed requests never abort a worker: [`Client::submit`] validates
+//! at enqueue ([`SubmitError::Invalid`]), and anything malformed that
+//! reaches a worker anyway (e.g. pushed onto the queue directly) is
+//! answered with an error [`Response`] instead of panicking.
 
 pub mod batcher;
 pub mod metrics;
@@ -22,8 +29,9 @@ pub mod server;
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::Metrics;
 pub use queue::{QueueError, RequestQueue};
-pub use server::{Server, ServerConfig};
+pub use server::{Client, Server, ServerConfig};
 
+use crate::engine::{EngineError, Prediction};
 use crate::tensor::Tensor;
 use std::sync::mpsc;
 
@@ -36,28 +44,76 @@ pub struct Request {
     pub reply: mpsc::Sender<Response>,
 }
 
-/// The server's answer.
+/// The server's answer: the prediction, or the typed reason the request
+/// could not run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Response {
     pub id: u64,
-    /// Class probabilities (or logits if the model has no softmax).
-    pub scores: Vec<f32>,
-    /// Argmax class.
-    pub class: usize,
-    /// Batch this request was served in (observability).
+    /// Batch this request was served in (observability; 0 when the
+    /// request never reached a forward pass).
     pub batch_size: usize,
+    pub result: Result<Prediction, EngineError>,
+}
+
+impl Response {
+    /// The prediction, if the request succeeded.
+    pub fn prediction(&self) -> Option<&Prediction> {
+        self.result.as_ref().ok()
+    }
+}
+
+/// Why [`Client::submit`] refused a request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SubmitError {
+    /// Queue-level backpressure (`Full`) or shutdown (`Closed`).
+    Queue(QueueError),
+    /// The sample does not match the engine input — caught at enqueue,
+    /// before a worker thread ever sees it.
+    Invalid(EngineError),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Queue(e) => write!(f, "{e}"),
+            SubmitError::Invalid(e) => write!(f, "invalid request: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+impl From<QueueError> for SubmitError {
+    fn from(e: QueueError) -> SubmitError {
+        SubmitError::Queue(e)
+    }
 }
 
 /// Assemble a batch tensor from requests (NHWC, n = requests.len()).
-pub fn assemble_batch(hwc: (usize, usize, usize), requests: &[Request]) -> Tensor {
+/// Every request must carry exactly h·w·c floats; the first mismatch is
+/// reported instead of panicking — the server validates at enqueue and
+/// filters defensively before calling this, so one malformed request
+/// can never abort a worker thread.
+pub fn assemble_batch(
+    hwc: (usize, usize, usize),
+    requests: &[Request],
+) -> Result<Tensor, EngineError> {
     let (h, w, c) = hwc;
     let per = h * w * c;
     let mut data = Vec::with_capacity(requests.len() * per);
     for r in requests {
-        assert_eq!(r.sample.len(), per, "request {} has wrong sample size", r.id);
+        if r.sample.len() != per {
+            return Err(EngineError::SampleSize {
+                expected: per,
+                got: r.sample.len(),
+            });
+        }
         data.extend_from_slice(&r.sample);
     }
-    Tensor::from_vec(crate::tensor::Nhwc::new(requests.len(), h, w, c), data)
+    Ok(Tensor::from_vec(
+        crate::tensor::Nhwc::new(requests.len(), h, w, c),
+        data,
+    ))
 }
 
 #[cfg(test)]
@@ -65,20 +121,32 @@ mod tests {
     use super::*;
     use std::time::Instant;
 
+    fn req(id: u64, sample: Vec<f32>) -> (Request, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                id,
+                sample,
+                enqueued_at: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
     #[test]
     fn assemble_batch_layout() {
-        let (tx, _rx) = mpsc::channel();
-        let reqs: Vec<Request> = (0..3)
-            .map(|i| Request {
-                id: i,
-                sample: vec![i as f32; 4],
-                enqueued_at: Instant::now(),
-                reply: tx.clone(),
-            })
-            .collect();
-        let t = assemble_batch((2, 2, 1), &reqs);
+        let reqs: Vec<Request> = (0..3).map(|i| req(i, vec![i as f32; 4]).0).collect();
+        let t = assemble_batch((2, 2, 1), &reqs).unwrap();
         assert_eq!(t.shape().n, 3);
         assert_eq!(t.sample(0), &[0.0; 4]);
         assert_eq!(t.sample(2), &[2.0; 4]);
+    }
+
+    #[test]
+    fn assemble_batch_reports_size_mismatch_instead_of_panicking() {
+        let reqs = vec![req(0, vec![0.0; 4]).0, req(1, vec![0.0; 3]).0];
+        let err = assemble_batch((2, 2, 1), &reqs).unwrap_err();
+        assert_eq!(err, EngineError::SampleSize { expected: 4, got: 3 });
     }
 }

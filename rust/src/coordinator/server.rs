@@ -1,29 +1,32 @@
-//! The serving loop: worker threads drain the queue through the model.
+//! The serving loop: worker threads drain the queue through per-worker
+//! [`Session`]s of one shared [`Engine`].
 //!
-//! Ownership layout: the [`Model`] is shared read-only (`Arc`) and holds
-//! the prepacked per-layer [`ConvPlan`](crate::conv::ConvPlan)s; each
-//! worker owns a shared [`Arena`] pre-sized by the planner to the max
-//! per-layer workspace, so the hot path allocates nothing but
-//! activations — no kernel repacking, no workspace growth.
+//! Ownership layout: the `Engine` is shared read-only (`Arc`) and holds
+//! the planned model — prepacked per-layer
+//! [`ConvPlan`](crate::conv::ConvPlan)s, shared kernel prepacks, the
+//! arena sizing. Each worker owns a `Session` whose arena is pre-sized
+//! to the engine's max-over-pinned-batches requirement and whose plan
+//! memo makes the steady state lock-free: the hot path allocates
+//! nothing but activations — no kernel repacking, no workspace growth,
+//! no plan-cache lock.
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use super::queue::{QueueError, RequestQueue};
-use super::{assemble_batch, Request, Response};
-use crate::conv::ConvContext;
-use crate::memory::Arena;
-use crate::model::Model;
+use super::{assemble_batch, Request, Response, SubmitError};
+use crate::engine::{Engine, EngineError};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-/// Server configuration.
+/// Server configuration. The execution context (threads, precision,
+/// budget) lives in the [`Engine`] — the server only decides how
+/// requests are queued and batched.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub workers: usize,
     pub queue_capacity: usize,
     pub policy: BatchPolicy,
-    pub ctx: ConvContext,
 }
 
 impl Default for ServerConfig {
@@ -32,7 +35,6 @@ impl Default for ServerConfig {
             workers: 1,
             queue_capacity: 256,
             policy: BatchPolicy::default(),
-            ctx: ConvContext::default(),
         }
     }
 }
@@ -47,10 +49,21 @@ pub struct Client {
 }
 
 impl Client {
-    /// Submit one sample; returns a receiver for the response.
-    pub fn submit(&self, sample: Vec<f32>) -> Result<mpsc::Receiver<Response>, QueueError> {
+    /// Submit one sample; returns a receiver for the response. Sample
+    /// size is validated here, at enqueue — a malformed request is
+    /// rejected with [`SubmitError::Invalid`] instead of ever reaching
+    /// (and formerly aborting) a worker thread.
+    pub fn submit(&self, sample: Vec<f32>) -> Result<mpsc::Receiver<Response>, SubmitError> {
         let (h, w, c) = self.hwc;
-        assert_eq!(sample.len(), h * w * c, "sample size mismatch");
+        let expected = h * w * c;
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        if sample.len() != expected {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Invalid(EngineError::SampleSize {
+                expected,
+                got: sample.len(),
+            }));
+        }
         let (tx, rx) = mpsc::channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -58,24 +71,23 @@ impl Client {
             enqueued_at: Instant::now(),
             reply: tx,
         };
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         match self.queue.push(req) {
             Ok(()) => Ok(rx),
             Err(e) => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(e)
+                Err(SubmitError::Queue(e))
             }
         }
     }
 
     /// Submit and block for the answer.
-    pub fn infer(&self, sample: Vec<f32>) -> Result<Response, QueueError> {
+    pub fn infer(&self, sample: Vec<f32>) -> Result<Response, SubmitError> {
         let rx = self.submit(sample)?;
-        rx.recv().map_err(|_| QueueError::Closed)
+        rx.recv().map_err(|_| SubmitError::Queue(QueueError::Closed))
     }
 }
 
-/// A running inference server.
+/// A running inference server over a shared [`Engine`].
 pub struct Server {
     queue: Arc<RequestQueue>,
     metrics: Arc<Metrics>,
@@ -85,23 +97,23 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start worker threads over a planned model.
-    pub fn start(model: Arc<Model>, cfg: ServerConfig) -> Server {
+    /// Start worker threads; each owns a [`Session`](crate::engine::Session)
+    /// of `engine`.
+    pub fn start(engine: Arc<Engine>, cfg: ServerConfig) -> Server {
         let queue = Arc::new(RequestQueue::new(cfg.queue_capacity));
         let metrics = Arc::new(Metrics::new());
-        let hwc = model.input_hwc;
+        let hwc = engine.input_hwc();
         let mut workers = Vec::new();
         for wid in 0..cfg.workers.max(1) {
             let queue = Arc::clone(&queue);
             let metrics = Arc::clone(&metrics);
-            let model = Arc::clone(&model);
+            let engine = Arc::clone(&engine);
             let policy = cfg.policy.clone();
-            let ctx = cfg.ctx.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("mec-serve-{wid}"))
                     .spawn(move || {
-                        worker_loop(&queue, &metrics, &model, policy, ctx);
+                        worker_loop(&queue, &metrics, &engine, policy);
                     })
                     .expect("spawn server worker"),
             );
@@ -138,43 +150,77 @@ impl Server {
     }
 }
 
-fn worker_loop(
-    queue: &RequestQueue,
-    metrics: &Metrics,
-    model: &Model,
-    policy: BatchPolicy,
-    ctx: ConvContext,
-) {
+fn worker_loop(queue: &RequestQueue, metrics: &Metrics, engine: &Engine, policy: BatchPolicy) {
     let batcher = Batcher::new(queue, policy);
-    // Planner-sized shared arena: max (not sum) over planned layers.
-    // Batches at or below the planned size never grow it.
-    let mut arena = model.sized_arena();
+    // Per-worker session: engine-sized arena, lock-free steady state.
+    let mut session = engine.session();
+    let (h, w, c) = engine.input_hwc();
+    let per = h * w * c;
     while let Some(batch) = batcher.next_batch() {
         if batch.is_empty() {
             continue;
         }
+        // Defensive re-validation: `Client::submit` rejects malformed
+        // samples at enqueue, but requests can be pushed onto the queue
+        // directly. A bad one gets an error reply — never a worker
+        // abort.
+        let mut valid = Vec::with_capacity(batch.len());
+        for req in batch {
+            if req.sample.len() != per {
+                let resp = Response {
+                    id: req.id,
+                    batch_size: 0,
+                    result: Err(EngineError::SampleSize {
+                        expected: per,
+                        got: req.sample.len(),
+                    }),
+                };
+                // This request bypassed Client::submit (which would have
+                // rejected it at enqueue), so the client-side counters
+                // never saw it: account it here as a rejected request —
+                // not a served response — to keep the
+                // `requests == responses + rejected` conservation and
+                // the throughput figure honest for every ingress path.
+                metrics.requests.fetch_add(1, Ordering::Relaxed);
+                metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = req.reply.send(resp);
+            } else {
+                valid.push(req);
+            }
+        }
+        if valid.is_empty() {
+            continue;
+        }
         let t0 = Instant::now();
-        let input = assemble_batch(model.input_hwc, &batch);
-        let out = model.forward(&ctx, &input, &mut arena);
-        let forward_ns = t0.elapsed().as_nanos() as f64;
-        metrics.record_batch(batch.len(), forward_ns);
-        let classes = out.shape().c;
-        for (i, req) in batch.iter().enumerate() {
-            let scores = out.data()[i * classes..(i + 1) * classes].to_vec();
-            let class = scores
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(c, _)| c)
-                .unwrap_or(0);
-            let resp = Response {
-                id: req.id,
-                scores,
-                class,
-                batch_size: batch.len(),
-            };
-            metrics.record_latency(req.enqueued_at.elapsed().as_nanos() as f64);
-            let _ = req.reply.send(resp); // receiver may have given up
+        let outcome = assemble_batch((h, w, c), &valid)
+            .and_then(|input| session.predict_batch(&input));
+        match outcome {
+            Ok(preds) => {
+                let forward_ns = t0.elapsed().as_nanos() as f64;
+                metrics.record_batch(valid.len(), forward_ns);
+                for (req, pred) in valid.iter().zip(preds) {
+                    let resp = Response {
+                        id: req.id,
+                        batch_size: valid.len(),
+                        result: Ok(pred),
+                    };
+                    metrics.record_latency(req.enqueued_at.elapsed().as_nanos() as f64);
+                    let _ = req.reply.send(resp); // receiver may have given up
+                }
+            }
+            // Unreachable after the per-request validation above, but a
+            // worker must survive anything: reply the typed error.
+            Err(e) => {
+                for req in &valid {
+                    let resp = Response {
+                        id: req.id,
+                        batch_size: 0,
+                        result: Err(e.clone()),
+                    };
+                    metrics.record_latency(req.enqueued_at.elapsed().as_nanos() as f64);
+                    let _ = req.reply.send(resp);
+                }
+            }
         }
     }
 }
@@ -190,7 +236,7 @@ mod tests {
 
     fn tiny_model() -> Model {
         let mut rng = Rng::new(77);
-        let mut m = Model::new(
+        Model::new(
             "serve-test",
             (6, 6, 1),
             vec![
@@ -216,31 +262,39 @@ mod tests {
                 },
                 Layer::Softmax,
             ],
-        );
-        m.pin_algo(AlgoKind::Mec);
-        m
+        )
+    }
+
+    fn tiny_engine() -> Arc<Engine> {
+        Arc::new(
+            Engine::builder(tiny_model())
+                .algo_override(0, AlgoKind::Mec)
+                .build()
+                .expect("tiny model builds"),
+        )
     }
 
     #[test]
     fn serves_and_answers() {
-        let server = Server::start(Arc::new(tiny_model()), ServerConfig::default());
+        let server = Server::start(tiny_engine(), ServerConfig::default());
         let client = server.client();
         let mut rng = Rng::new(1);
         let mut sample = vec![0.0; 36];
         rng.fill_uniform(&mut sample, 0.0, 1.0);
         let resp = client.infer(sample).unwrap();
-        assert_eq!(resp.scores.len(), 3);
-        assert!(resp.class < 3);
+        let pred = resp.result.expect("valid request succeeds");
+        assert_eq!(pred.scores.len(), 3);
+        assert!(pred.class < 3);
         let metrics = server.shutdown();
         assert_eq!(metrics.responses.load(Ordering::Relaxed), 1);
     }
 
     #[test]
-    fn batch_answers_match_standalone_forward() {
-        // Responses through the server must equal a direct model call.
-        let model = Arc::new(tiny_model());
+    fn batch_answers_match_standalone_session() {
+        // Responses through the server must equal a solo session.
+        let engine = tiny_engine();
         let server = Server::start(
-            Arc::clone(&model),
+            Arc::clone(&engine),
             ServerConfig {
                 policy: BatchPolicy::new(8, Duration::from_millis(20)),
                 ..ServerConfig::default()
@@ -261,23 +315,71 @@ mod tests {
             .collect();
         let responses: Vec<Response> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
         server.shutdown();
-        // Standalone forward, batch of 1 each (batch-size independent).
-        let ctx = ConvContext::default();
-        let mut arena = crate::memory::Arena::new();
+        let mut solo = engine.session();
         for (s, resp) in samples.iter().zip(&responses) {
-            let t = crate::tensor::Tensor::from_vec(
-                crate::tensor::Nhwc::new(1, 6, 6, 1),
-                s.clone(),
-            );
-            let want = model.forward(&ctx, &t, &mut arena);
-            crate::util::assert_allclose(&resp.scores, want.data(), 1e-4, "server vs direct");
+            let got = resp.prediction().expect("valid request succeeds");
+            let want = solo.infer(s).unwrap();
+            crate::util::assert_allclose(&got.scores, &want.scores, 1e-4, "server vs solo");
         }
+    }
+
+    #[test]
+    fn malformed_submit_is_rejected_at_enqueue() {
+        let server = Server::start(tiny_engine(), ServerConfig::default());
+        let client = server.client();
+        let err = client.submit(vec![0.0; 7]).unwrap_err();
+        assert_eq!(
+            err,
+            SubmitError::Invalid(EngineError::SampleSize { expected: 36, got: 7 })
+        );
+        // A valid request still works afterwards.
+        assert!(client.infer(vec![0.1; 36]).unwrap().result.is_ok());
+        let metrics = server.shutdown();
+        // Conservation: the malformed request counts as rejected.
+        assert_eq!(metrics.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.responses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn malformed_direct_push_gets_error_response_and_worker_survives() {
+        // Bypass the client's validation by pushing onto the queue
+        // directly: the worker must answer with an error Response (not
+        // abort) and keep serving valid requests afterwards.
+        let server = Server::start(tiny_engine(), ServerConfig::default());
+        let (tx, rx) = mpsc::channel();
+        server
+            .queue
+            .push(Request {
+                id: 999,
+                sample: vec![0.0; 5],
+                enqueued_at: Instant::now(),
+                reply: tx,
+            })
+            .unwrap();
+        let resp = rx.recv().expect("malformed request still gets a reply");
+        assert_eq!(resp.id, 999);
+        assert_eq!(resp.batch_size, 0);
+        assert_eq!(
+            resp.result,
+            Err(EngineError::SampleSize { expected: 36, got: 5 })
+        );
+        // The worker thread is alive and serving.
+        let client = server.client();
+        assert!(client.infer(vec![0.2; 36]).unwrap().result.is_ok());
+        let metrics = server.shutdown();
+        // Conservation holds even for the direct-ingress path: the
+        // worker accounted the malformed request as rejected, not as a
+        // served response.
+        assert_eq!(metrics.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.responses.load(Ordering::Relaxed), 1);
     }
 
     #[test]
     fn dynamic_batching_groups_requests() {
         let server = Server::start(
-            Arc::new(tiny_model()),
+            tiny_engine(),
             ServerConfig {
                 policy: BatchPolicy::new(16, Duration::from_millis(50)),
                 ..ServerConfig::default()
@@ -287,7 +389,8 @@ mod tests {
         let rxs: Vec<_> = (0..8)
             .map(|_| client.submit(vec![0.5; 36]).unwrap())
             .collect();
-        let batch_sizes: Vec<usize> = rxs.into_iter().map(|rx| rx.recv().unwrap().batch_size).collect();
+        let batch_sizes: Vec<usize> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().batch_size).collect();
         let metrics = server.shutdown();
         // All 8 should have been served; at least one batch had > 1 request.
         assert_eq!(metrics.responses.load(Ordering::Relaxed), 8);
@@ -299,7 +402,7 @@ mod tests {
 
     #[test]
     fn shutdown_is_clean_under_load() {
-        let server = Server::start(Arc::new(tiny_model()), ServerConfig::default());
+        let server = Server::start(tiny_engine(), ServerConfig::default());
         let client = server.client();
         for _ in 0..20 {
             let _ = client.submit(vec![0.1; 36]);

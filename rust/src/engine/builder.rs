@@ -1,0 +1,248 @@
+//! [`EngineBuilder`] — the one place the whole serving configuration is
+//! assembled and validated.
+//!
+//! `build()` is ordered so that *every* configuration error surfaces
+//! before any expensive work: resolve the model, check the knobs, walk
+//! the conv geometry validating overrides under the budget/precision,
+//! and only then plan + prepack each layer for every pinned batch size.
+
+use super::{Engine, EngineError, LayerPlan};
+use crate::conv::{AlgoKind, ConvContext};
+use crate::memory::Budget;
+use crate::model::{load_mecw, Layer, Model};
+use crate::planner::{AutoTuner, Plan, Planner};
+use crate::tensor::Precision;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Where [`Engine::builder`] gets its model: an in-memory [`Model`] or a
+/// `.mecw` path (loaded at `build()`, failures reported as
+/// [`EngineError::ModelLoad`]).
+pub enum ModelSource {
+    Owned(Model),
+    Path(PathBuf),
+}
+
+impl From<Model> for ModelSource {
+    fn from(m: Model) -> ModelSource {
+        ModelSource::Owned(m)
+    }
+}
+
+impl From<PathBuf> for ModelSource {
+    fn from(p: PathBuf) -> ModelSource {
+        ModelSource::Path(p)
+    }
+}
+
+impl From<&Path> for ModelSource {
+    fn from(p: &Path) -> ModelSource {
+        ModelSource::Path(p.to_path_buf())
+    }
+}
+
+impl From<&str> for ModelSource {
+    fn from(p: &str) -> ModelSource {
+        ModelSource::Path(PathBuf::from(p))
+    }
+}
+
+impl From<String> for ModelSource {
+    fn from(p: String) -> ModelSource {
+        ModelSource::Path(PathBuf::from(p))
+    }
+}
+
+/// Builder for an immutable [`Engine`]. Obtain via [`Engine::builder`].
+pub struct EngineBuilder {
+    source: ModelSource,
+    precision: Precision,
+    budget: Budget,
+    threads: usize,
+    pinned: Vec<usize>,
+    autotune: bool,
+    overrides: Vec<(usize, AlgoKind)>,
+}
+
+impl EngineBuilder {
+    pub(crate) fn new(source: ModelSource) -> EngineBuilder {
+        EngineBuilder {
+            source,
+            precision: Precision::F32,
+            budget: Budget::unlimited(),
+            threads: 1,
+            pinned: vec![1],
+            autotune: false,
+            overrides: Vec::new(),
+        }
+    }
+
+    /// Execution precision (default [`Precision::F32`]). Under
+    /// [`Precision::Q16`] the planner excludes Winograd/FFT; a q16
+    /// engine with a Winograd override fails `build()`.
+    pub fn precision(mut self, p: Precision) -> EngineBuilder {
+        self.precision = p;
+        self
+    }
+
+    /// Workspace budget the planner selects under (default unlimited).
+    pub fn budget(mut self, b: Budget) -> EngineBuilder {
+        self.budget = b;
+        self
+    }
+
+    /// Worker threads per convolution call (default 1, the paper's
+    /// Mobile platform). Zero is a configuration error.
+    pub fn threads(mut self, t: usize) -> EngineBuilder {
+        self.threads = t;
+        self
+    }
+
+    /// Batch sizes to plan + prepack eagerly (default `[1]`). Algorithms
+    /// are chosen on the largest; the session arena is sized at the max
+    /// over all of them. Other batch sizes still work — their plans
+    /// build lazily on first sight, sharing the kernel prepacks. At most
+    /// [`MAX_CACHED_GEOMETRIES_PER_LAYER`](crate::model::MAX_CACHED_GEOMETRIES_PER_LAYER)
+    /// distinct sizes can be pinned (the per-layer plan-cache bound);
+    /// more is a configuration error.
+    pub fn pin_batch_sizes(mut self, batches: &[usize]) -> EngineBuilder {
+        self.pinned = batches.to_vec();
+        self
+    }
+
+    /// Replace the cost model with measured selection: every admissible
+    /// algorithm is timed on the real geometry at build, and the
+    /// measurements are kept in the [`LayerPlan`] report.
+    pub fn autotune(mut self, on: bool) -> EngineBuilder {
+        self.autotune = on;
+        self
+    }
+
+    /// Force `algo` for conv layer `layer` (bench/bringup use). The
+    /// choice is validated up front: unsupported geometry/precision or a
+    /// budget-exceeding workspace fails `build()` with a typed error.
+    pub fn algo_override(mut self, layer: usize, algo: AlgoKind) -> EngineBuilder {
+        self.overrides.push((layer, algo));
+        self
+    }
+
+    /// Validate the whole configuration, then plan + prepack every conv
+    /// layer for every pinned batch size. On success the returned
+    /// [`Engine`] is immutable and `Arc`-shareable; per-thread work goes
+    /// through [`Engine::session`].
+    pub fn build(self) -> Result<Engine, EngineError> {
+        // -- resolve the model ------------------------------------------
+        let mut model = match self.source {
+            ModelSource::Owned(m) => m,
+            ModelSource::Path(p) => load_mecw(&p).map_err(|e| EngineError::ModelLoad {
+                path: p.display().to_string(),
+                reason: e.to_string(),
+            })?,
+        };
+
+        // -- validate knobs ---------------------------------------------
+        if self.threads == 0 {
+            return Err(EngineError::InvalidConfig("threads must be >= 1".into()));
+        }
+        let mut pinned = self.pinned;
+        if pinned.is_empty() {
+            pinned.push(1);
+        }
+        if pinned.contains(&0) {
+            return Err(EngineError::InvalidConfig(
+                "pinned batch sizes must be >= 1".into(),
+            ));
+        }
+        pinned.sort_unstable();
+        pinned.dedup();
+        // The model caches at most MAX_CACHED_GEOMETRIES_PER_LAYER plans
+        // per conv layer; more pinned batches than that could not all
+        // stay resident, which would silently void the eager-prepack and
+        // lock-free steady-state contract for the overflow sizes.
+        if pinned.len() > crate::model::MAX_CACHED_GEOMETRIES_PER_LAYER {
+            return Err(EngineError::InvalidConfig(format!(
+                "{} pinned batch sizes exceed the {} cached geometries kept per layer",
+                pinned.len(),
+                crate::model::MAX_CACHED_GEOMETRIES_PER_LAYER
+            )));
+        }
+        let ctx = ConvContext::default()
+            .with_threads(self.threads)
+            .with_precision(self.precision);
+
+        // -- validate overrides -----------------------------------------
+        let mut forced: HashMap<usize, AlgoKind> = HashMap::new();
+        for (layer, algo) in &self.overrides {
+            let is_conv = matches!(model.layers.get(*layer), Some(Layer::Conv { .. }));
+            if !is_conv {
+                return Err(EngineError::NotAConvLayer {
+                    layer: *layer,
+                    n_layers: model.layers.len(),
+                });
+            }
+            if let Some(prev) = forced.insert(*layer, *algo) {
+                if prev != *algo {
+                    return Err(EngineError::InvalidConfig(format!(
+                        "conflicting algo_override for layer {layer}: {} vs {}",
+                        prev.name(),
+                        algo.name()
+                    )));
+                }
+            }
+        }
+
+        // -- choose per-layer algorithms on the largest pinned batch ----
+        let planner = Planner::new();
+        let tuner = AutoTuner::new();
+        let plan_batch = *pinned.last().expect("pinned is non-empty");
+        let mut report: Vec<LayerPlan> = Vec::new();
+        let mut chosen: HashMap<usize, AlgoKind> = HashMap::new();
+        for (i, cs) in model.conv_shapes(plan_batch) {
+            let (picked, measurements) = if let Some(&algo) = forced.get(&i) {
+                let plan = planner
+                    .validate_choice(algo, &cs, &self.budget, &ctx)
+                    .map_err(|source| EngineError::Plan { layer: i, source })?;
+                (plan, None)
+            } else if self.autotune {
+                let ms = tuner.measure_all(&cs, &self.budget, &ctx);
+                let best = ms
+                    .iter()
+                    .min_by(|a, b| a.median_ns.total_cmp(&b.median_ns))
+                    .expect("direct is always admissible");
+                let plan = Plan {
+                    algo: best.algo,
+                    workspace_bytes: best.workspace_bytes,
+                    est_ns: best.median_ns,
+                };
+                (plan, Some(ms))
+            } else {
+                (planner.plan(&cs, &self.budget, &ctx), None)
+            };
+            chosen.insert(i, picked.algo);
+            report.push(LayerPlan {
+                layer: i,
+                shape: cs,
+                chosen: picked,
+                candidates: planner.admissible(&cs, &self.budget, &ctx),
+                measurements,
+            });
+        }
+
+        // -- plan + prepack eagerly for every pinned batch --------------
+        model.plan_with(&ctx, plan_batch, |i, _| chosen[&i]);
+        let mut ws_elems = model.planned_workspace_elems();
+        for &b in pinned.iter().filter(|&&b| b != plan_batch) {
+            ws_elems = ws_elems.max(model.prepare_batch(b));
+        }
+
+        Ok(Engine {
+            model: Arc::new(model),
+            ctx,
+            budget: self.budget,
+            ws_elems,
+            pinned,
+            report,
+        })
+    }
+}

@@ -1,0 +1,96 @@
+//! [`EngineError`] — the facade's single typed error.
+//!
+//! Before the engine existed, misconfiguration surfaced as a mix of
+//! panics (`assert_eq!` on sample sizes aborting a worker thread),
+//! `process::exit` calls in library-adjacent code, and ad-hoc strings.
+//! Every way an [`Engine`](crate::engine::Engine) build or a
+//! [`Session`](crate::engine::Session) call can fail is now one variant
+//! here, checked up front where possible (the builder validates the
+//! whole configuration before any kernel is prepacked).
+
+use crate::planner::PlanError;
+use std::fmt;
+
+/// Everything that can go wrong building an engine or running a session.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineError {
+    /// The model file could not be loaded (missing, bad magic,
+    /// truncated...). `reason` carries the loader's message.
+    ModelLoad { path: String, reason: String },
+    /// The builder configuration is inconsistent: zero threads, a pinned
+    /// batch size of 0, conflicting overrides for one layer, ...
+    InvalidConfig(String),
+    /// An `algo_override` targets a layer index that is not a
+    /// convolution (or is out of range).
+    NotAConvLayer { layer: usize, n_layers: usize },
+    /// A conv layer cannot be planned as configured: the override's
+    /// algorithm does not support the geometry or precision, or its
+    /// workspace exceeds the budget.
+    Plan { layer: usize, source: PlanError },
+    /// A sample handed to [`Session::infer`](crate::engine::Session::infer)
+    /// (or a serving request) has the wrong number of values.
+    SampleSize { expected: usize, got: usize },
+    /// A batch tensor's per-sample (h, w, c) does not match the engine's
+    /// input shape.
+    BatchShape {
+        expected: (usize, usize, usize),
+        got: (usize, usize, usize),
+    },
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::ModelLoad { path, reason } => {
+                write!(f, "cannot load model {path:?}: {reason}")
+            }
+            EngineError::InvalidConfig(msg) => {
+                write!(f, "invalid engine configuration: {msg}")
+            }
+            EngineError::NotAConvLayer { layer, n_layers } => write!(
+                f,
+                "algo_override targets layer {layer}, which is not a convolution \
+                 (model has {n_layers} layers)"
+            ),
+            EngineError::Plan { layer, source } => {
+                write!(f, "cannot plan conv layer {layer}: {source}")
+            }
+            EngineError::SampleSize { expected, got } => write!(
+                f,
+                "sample has {got} values, engine input needs {expected}"
+            ),
+            EngineError::BatchShape { expected, got } => write!(
+                f,
+                "batch samples are {}x{}x{}, engine input is {}x{}x{}",
+                got.0, got.1, got.2, expected.0, expected.1, expected.2
+            ),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::AlgoKind;
+
+    #[test]
+    fn errors_render_readable_messages() {
+        let e = EngineError::SampleSize { expected: 64, got: 3 };
+        assert!(e.to_string().contains("64"));
+        assert!(e.to_string().contains('3'));
+        let e = EngineError::Plan {
+            layer: 2,
+            source: PlanError::BudgetExceeded {
+                algo: AlgoKind::Mec,
+                workspace_bytes: 1000,
+                limit: 10,
+            },
+        };
+        let s = e.to_string();
+        assert!(s.contains("layer 2"), "{s}");
+        assert!(s.contains("mec"), "{s}");
+        assert!(s.contains("budget"), "{s}");
+    }
+}

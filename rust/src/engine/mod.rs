@@ -1,0 +1,256 @@
+//! The library's front door: a builder-configured, immutable [`Engine`]
+//! plus cheap per-thread [`Session`]s.
+//!
+//! The paper's pitch is a *deployment* trade-off — compact lowering buys
+//! memory headroom that turns into latency on real serving hardware —
+//! and production inference APIs (cuDNN graphs, the operator-setup/run
+//! split of the Indirect Convolution Algorithm) all converge on the same
+//! shape: an expensive, fully-validated, fully-planned setup object,
+//! and cheap per-thread execution state. This module is that shape for
+//! the MEC stack:
+//!
+//! * [`Engine::builder`] takes a [`Model`](crate::model::Model) (or a
+//!   `.mecw` path) plus the whole serving configuration — precision,
+//!   workspace [`Budget`], threads, pinned batch sizes, autotune,
+//!   per-layer overrides — and `build()` validates everything **up
+//!   front**, returning a typed [`EngineError`] instead of a mid-run
+//!   panic. On success every conv layer is planned and its kernel
+//!   prepacked (once per layer, `Arc`-shared across batch sizes), and
+//!   the shared-arena requirement (max over layers and pinned batches)
+//!   is fixed.
+//! * [`Engine::session`] hands out [`Session`]s: each owns its arena and
+//!   a plan memo, so the steady-state hot path takes **no locks** and
+//!   performs **zero tracked allocations**. One engine serves any number
+//!   of concurrent sessions (`Engine` is `Arc`-shareable).
+//!
+//! ```text
+//! let engine = Engine::builder(model)          // or a .mecw path
+//!     .precision(Precision::F32)
+//!     .budget("16MB".parse()?)
+//!     .threads(4)
+//!     .pin_batch_sizes(&[1, 32])
+//!     .build()?;                               // typed EngineError
+//! let engine = Arc::new(engine);
+//! let mut session = engine.session();          // one per thread
+//! let pred = session.infer(&sample)?;          // -> Prediction
+//! ```
+
+mod builder;
+mod error;
+mod session;
+
+pub use builder::{EngineBuilder, ModelSource};
+pub use error::EngineError;
+pub use session::{Prediction, Session};
+
+use crate::conv::{AlgoKind, ConvContext};
+use crate::memory::Budget;
+use crate::model::Model;
+use crate::planner::{Measurement, Plan};
+use crate::tensor::ConvShape;
+use std::sync::Arc;
+
+/// One conv layer's planning outcome, recorded by
+/// [`EngineBuilder::build`] — what the CLI `plan`/`tune` subcommands and
+/// the examples print.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    /// Layer index in the model graph.
+    pub layer: usize,
+    /// Exact batched geometry the choice was made on (largest pinned
+    /// batch, padding applied).
+    pub shape: ConvShape,
+    /// The chosen algorithm with its budgeted workspace; `est_ns` is the
+    /// cost-model estimate, or the measured median under autotune.
+    pub chosen: Plan,
+    /// Every algorithm admissible under the budget/context, with
+    /// cost-model estimates.
+    pub candidates: Vec<Plan>,
+    /// Per-candidate measurements when `.autotune(true)` built this
+    /// layer (`None` for cost-model or overridden layers).
+    pub measurements: Option<Vec<Measurement>>,
+}
+
+/// An immutable, fully-planned inference engine. Build with
+/// [`Engine::builder`]; execute through [`Engine::session`].
+pub struct Engine {
+    model: Arc<Model>,
+    ctx: ConvContext,
+    budget: Budget,
+    /// Arena floats a session needs: max over conv layers and pinned
+    /// batch sizes.
+    ws_elems: usize,
+    pinned: Vec<usize>,
+    report: Vec<LayerPlan>,
+}
+
+impl Engine {
+    /// Start configuring an engine from an in-memory
+    /// [`Model`](crate::model::Model) or a `.mecw` path.
+    pub fn builder(model_or_path: impl Into<ModelSource>) -> EngineBuilder {
+        EngineBuilder::new(model_or_path.into())
+    }
+
+    /// A new per-thread session: its arena is pre-sized to this engine's
+    /// workspace requirement, its plan memo starts empty and warms on
+    /// first use.
+    pub fn session(&self) -> Session {
+        Session::new(Arc::clone(&self.model), self.ctx.clone(), self.ws_elems)
+    }
+
+    /// The planned model (read-only; shared by every session).
+    pub fn model(&self) -> &Arc<Model> {
+        &self.model
+    }
+
+    /// The execution context every session runs under.
+    pub fn context(&self) -> &ConvContext {
+        &self.ctx
+    }
+
+    /// The workspace budget the engine was planned under.
+    pub fn budget(&self) -> &Budget {
+        &self.budget
+    }
+
+    /// Per-sample input shape (h, w, c).
+    pub fn input_hwc(&self) -> (usize, usize, usize) {
+        self.model.input_hwc
+    }
+
+    /// Batch sizes planned + prepacked eagerly at build (sorted,
+    /// deduplicated).
+    pub fn pinned_batch_sizes(&self) -> &[usize] {
+        &self.pinned
+    }
+
+    /// Workspace floats each session's arena is pre-sized to.
+    pub fn workspace_elems(&self) -> usize {
+        self.ws_elems
+    }
+
+    /// Same in bytes.
+    pub fn workspace_bytes(&self) -> usize {
+        self.ws_elems * std::mem::size_of::<f32>()
+    }
+
+    /// Per-layer planning outcomes recorded at build time.
+    pub fn plan_report(&self) -> &[LayerPlan] {
+        &self.report
+    }
+
+    /// Chosen algorithm per conv layer (delegates to the model).
+    pub fn plan_summary(&self) -> Vec<(usize, AlgoKind)> {
+        self.model.plan_summary()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Layer;
+    use crate::tensor::{Kernel, KernelShape, Nhwc, Precision, Tensor};
+    use crate::util::Rng;
+
+    fn conv_model(seed: u64) -> Model {
+        let mut rng = Rng::new(seed);
+        Model::new(
+            "engine-unit",
+            (8, 8, 2),
+            vec![
+                Layer::Conv {
+                    kernel: Kernel::random(KernelShape::new(3, 3, 2, 4), &mut rng),
+                    bias: vec![0.1; 4],
+                    sh: 1,
+                    sw: 1,
+                    ph: 1,
+                    pw: 1,
+                },
+                Layer::Relu,
+            ],
+        )
+    }
+
+    #[test]
+    fn builder_defaults_produce_a_working_engine() {
+        let engine = Engine::builder(conv_model(1)).build().unwrap();
+        assert_eq!(engine.pinned_batch_sizes(), &[1]);
+        assert_eq!(engine.context().threads, 1);
+        assert_eq!(engine.context().precision, Precision::F32);
+        assert_eq!(engine.plan_report().len(), 1);
+        assert!(engine.workspace_bytes() > 0);
+        let mut s = engine.session();
+        let mut rng = Rng::new(9);
+        let x = Tensor::random(Nhwc::new(1, 8, 8, 2), &mut rng);
+        let out = s.infer_batch(&x).unwrap();
+        assert_eq!(out.shape(), Nhwc::new(1, 8, 8, 4));
+    }
+
+    #[test]
+    fn pinned_batches_are_planned_eagerly_and_size_the_arena() {
+        let engine = Engine::builder(conv_model(2))
+            .pin_batch_sizes(&[4, 1, 4])
+            .build()
+            .unwrap();
+        assert_eq!(engine.pinned_batch_sizes(), &[1, 4], "sorted + deduped");
+        // Both geometries are cached before any inference runs, sharing
+        // one kernel prepack.
+        assert_eq!(engine.model().cached_plans_for_layer(0).len(), 2);
+        assert_eq!(engine.model().cached_prepacks(), 1);
+        // The arena covers the largest pinned batch.
+        let solo = Engine::builder(conv_model(2))
+            .pin_batch_sizes(&[4])
+            .build()
+            .unwrap();
+        assert_eq!(engine.workspace_elems(), solo.workspace_elems());
+    }
+
+    #[test]
+    fn algo_override_is_validated_and_applied() {
+        let engine = Engine::builder(conv_model(3))
+            .algo_override(0, AlgoKind::Im2col)
+            .build()
+            .unwrap();
+        assert_eq!(engine.plan_summary(), vec![(0, AlgoKind::Im2col)]);
+        // Duplicate identical override is tolerated; conflicting is not.
+        assert!(Engine::builder(conv_model(3))
+            .algo_override(0, AlgoKind::Im2col)
+            .algo_override(0, AlgoKind::Im2col)
+            .build()
+            .is_ok());
+        let err = Engine::builder(conv_model(3))
+            .algo_override(0, AlgoKind::Im2col)
+            .algo_override(0, AlgoKind::Mec)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, EngineError::InvalidConfig(_)), "{err:?}");
+    }
+
+    #[test]
+    fn invalid_knobs_fail_fast() {
+        let err = Engine::builder(conv_model(4)).threads(0).build().unwrap_err();
+        assert!(matches!(err, EngineError::InvalidConfig(_)), "{err:?}");
+        let err = Engine::builder(conv_model(4))
+            .pin_batch_sizes(&[2, 0])
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, EngineError::InvalidConfig(_)), "{err:?}");
+        // More pinned sizes than the per-layer plan cache can keep
+        // resident would silently void the eager-prepack contract.
+        let err = Engine::builder(conv_model(4))
+            .pin_batch_sizes(&[1, 2, 3, 4, 5, 6, 7, 8, 9])
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, EngineError::InvalidConfig(_)), "{err:?}");
+        let err = Engine::builder(conv_model(4))
+            .algo_override(1, AlgoKind::Mec) // layer 1 is Relu
+            .build()
+            .unwrap_err();
+        assert!(
+            matches!(err, EngineError::NotAConvLayer { layer: 1, n_layers: 2 }),
+            "{err:?}"
+        );
+        let err = Engine::builder("/no/such/model.mecw").build().unwrap_err();
+        assert!(matches!(err, EngineError::ModelLoad { .. }), "{err:?}");
+    }
+}

@@ -1,0 +1,125 @@
+//! [`Session`] — cheap per-thread execution state over a shared
+//! [`Engine`](crate::engine::Engine).
+//!
+//! A session owns the two things a forward pass mutates — the workspace
+//! [`Arena`] (pre-sized by the engine to the max over pinned batches)
+//! and a [`PlanMemo`] in front of the model's locked plan cache — so the
+//! steady-state hot path takes no locks and performs zero tracked
+//! allocation. Everything read-only (planned `ConvPlan`s, shared kernel
+//! prepacks, weights) stays in the engine's `Arc<Model>`.
+
+use super::EngineError;
+use crate::conv::ConvContext;
+use crate::memory::Arena;
+use crate::model::{Model, PlanMemo};
+use crate::tensor::{Nhwc, Tensor};
+use std::sync::Arc;
+
+/// The per-sample result of [`Session::infer`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prediction {
+    /// Final activation row (class probabilities if the model ends in
+    /// softmax, logits otherwise).
+    pub scores: Vec<f32>,
+    /// Argmax class.
+    pub class: usize,
+}
+
+impl Prediction {
+    /// Build from one output row. NaN-safe argmax: non-finite scores
+    /// simply never win, so a degenerate row yields class 0 instead of a
+    /// comparator panic.
+    pub fn from_scores(scores: Vec<f32>) -> Prediction {
+        let mut class = 0;
+        let mut best = f32::NEG_INFINITY;
+        for (i, &v) in scores.iter().enumerate() {
+            if v > best {
+                best = v;
+                class = i;
+            }
+        }
+        Prediction { scores, class }
+    }
+}
+
+/// Per-thread inference handle; create one per worker with
+/// [`Engine::session`](crate::engine::Engine::session).
+pub struct Session {
+    model: Arc<Model>,
+    ctx: ConvContext,
+    arena: Arena,
+    memo: PlanMemo,
+    input_hwc: (usize, usize, usize),
+}
+
+impl Session {
+    pub(crate) fn new(model: Arc<Model>, ctx: ConvContext, ws_elems: usize) -> Session {
+        let input_hwc = model.input_hwc;
+        Session {
+            model,
+            ctx,
+            arena: Arena::with_capacity(ws_elems),
+            memo: PlanMemo::new(),
+            input_hwc,
+        }
+    }
+
+    /// Classify one sample (`h·w·c` floats, the engine's input shape).
+    pub fn infer(&mut self, sample: &[f32]) -> Result<Prediction, EngineError> {
+        let (h, w, c) = self.input_hwc;
+        let expected = h * w * c;
+        if sample.len() != expected {
+            return Err(EngineError::SampleSize {
+                expected,
+                got: sample.len(),
+            });
+        }
+        let input = Tensor::from_vec(Nhwc::new(1, h, w, c), sample.to_vec());
+        let out = self
+            .model
+            .forward_memo(&self.ctx, &input, &mut self.arena, &mut self.memo);
+        Ok(Prediction::from_scores(out.into_vec()))
+    }
+
+    /// Run a full batch, returning the final activation tensor.
+    pub fn infer_batch(&mut self, batch: &Tensor) -> Result<Tensor, EngineError> {
+        let sh = batch.shape();
+        let (h, w, c) = self.input_hwc;
+        if (sh.h, sh.w, sh.c) != (h, w, c) {
+            return Err(EngineError::BatchShape {
+                expected: (h, w, c),
+                got: (sh.h, sh.w, sh.c),
+            });
+        }
+        Ok(self
+            .model
+            .forward_memo(&self.ctx, batch, &mut self.arena, &mut self.memo))
+    }
+
+    /// [`Session::infer_batch`] plus per-sample argmax — what the
+    /// serving workers reply with.
+    pub fn predict_batch(&mut self, batch: &Tensor) -> Result<Vec<Prediction>, EngineError> {
+        let out = self.infer_batch(batch)?;
+        let n = out.shape().n;
+        Ok((0..n)
+            .map(|i| Prediction::from_scores(out.sample(i).to_vec()))
+            .collect())
+    }
+
+    /// The execution context this session runs under (fixed at build).
+    pub fn context(&self) -> &ConvContext {
+        &self.ctx
+    }
+
+    /// Current workspace footprint — equals the engine's arena sizing,
+    /// and never grows in steady state.
+    pub fn workspace_bytes(&self) -> usize {
+        self.arena.bytes()
+    }
+
+    /// Plans memoized locally so far (observability for the lock-free
+    /// hot-path claim).
+    pub fn memoized_plans(&self) -> usize {
+        self.memo.len()
+    }
+}

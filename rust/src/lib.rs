@@ -16,10 +16,17 @@
 //!   ([`coordinator`]: queue, dynamic batcher, workers, metrics) and a
 //!   PJRT path ([`runtime`]) that executes the AOT-lowered JAX/Pallas
 //!   artifacts through the `xla` crate.
+//!
+//! The front door tying the layers together is [`engine`]:
+//! [`Engine::builder`] assembles and validates the whole serving
+//! configuration (precision, budget, threads, pinned batch sizes,
+//! autotune, overrides) into an immutable, `Arc`-shareable [`Engine`];
+//! per-thread work goes through [`Engine::session`] → [`Session`].
 
 pub mod bench;
 pub mod conv;
 pub mod coordinator;
+pub mod engine;
 pub mod fft;
 pub mod gemm;
 pub mod memory;
@@ -30,4 +37,5 @@ pub mod tensor;
 pub mod threadpool;
 pub mod util;
 
+pub use engine::{Engine, EngineBuilder, EngineError, Prediction, Session};
 pub use tensor::{ConvShape, Kernel, KernelShape, Nhwc, Tensor};

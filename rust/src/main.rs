@@ -3,19 +3,24 @@
 //! Subcommands:
 //! * `info`  — workloads, algorithms, platform.
 //! * `run`   — execute one benchmark layer with one algorithm; print
-//!             runtime and measured/analytic memory overhead.
+//!             runtime and measured/planned memory overhead.
 //! * `plan`  — show the planner's choice for a layer under a budget.
 //! * `tune`  — measure all admissible algorithms on a layer.
 //! * `serve` — load a `.mecw` model and serve synthetic requests through
 //!             the coordinator, printing latency/throughput metrics.
+//!
+//! Every subcommand is argument parsing + an [`Engine::builder`] call:
+//! the builder validates the whole configuration (algorithm, precision,
+//! budget, threads, batch) up front and returns a typed
+//! [`EngineError`], so this file owns the exit codes and nothing else.
 
-use mec::bench::workload::{by_name, suite};
-use mec::conv::{AlgoKind, ConvContext, ConvPlan, Convolution};
+use mec::bench::harness::layer_builder;
+use mec::bench::workload::{by_name, suite, Workload};
+use mec::conv::AlgoKind;
 use mec::coordinator::{BatchPolicy, Server, ServerConfig};
-use mec::memory::{measure_peak, Arena, Budget};
-use mec::model::load_mecw;
-use mec::planner::{AutoTuner, Planner};
-use mec::tensor::{Kernel, Precision, Tensor};
+use mec::engine::{Engine, EngineError};
+use mec::memory::{measure_peak, Budget};
+use mec::tensor::{Precision, Tensor};
 use mec::util::cli::Args;
 use mec::util::stats::{fmt_bytes, fmt_ns};
 use mec::util::Rng;
@@ -36,28 +41,6 @@ fn main() {
         "serve" => cmd_serve(&mut args),
         other => {
             eprintln!("unknown subcommand {other:?}\n\n{}", args.usage());
-            std::process::exit(2);
-        }
-    }
-}
-
-fn parse_budget(s: &str) -> Budget {
-    if s == "unlimited" {
-        return Budget::unlimited();
-    }
-    let (num, mult) = if let Some(v) = s.strip_suffix("GB") {
-        (v, 1_000_000_000)
-    } else if let Some(v) = s.strip_suffix("MB") {
-        (v, 1_000_000)
-    } else if let Some(v) = s.strip_suffix("KB") {
-        (v, 1_000)
-    } else {
-        (s, 1)
-    };
-    match num.parse::<f64>() {
-        Ok(v) => Budget::new((v * mult as f64) as usize),
-        Err(_) => {
-            eprintln!("bad budget {s:?} (use e.g. 16MB, 1.5GB, unlimited)");
             std::process::exit(2);
         }
     }
@@ -100,12 +83,24 @@ fn precision_arg(args: &mut Args) -> Precision {
     }
 }
 
-fn layer_arg(args: &mut Args) -> mec::tensor::ConvShape {
+fn budget_arg(args: &mut Args, help: &str) -> Budget {
+    let s = args.opt("budget", "unlimited", help);
+    match s.parse::<Budget>() {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// `--layer/--batch/--scale` → the named paper workload.
+fn workload_args(args: &mut Args) -> (Workload, usize, usize) {
     let layer = args.opt("layer", "cv6", "benchmark layer (cv1..cv12)");
     let batch = args.opt_usize("batch", 1, "mini-batch size");
     let scale = args.opt_usize("scale", 1, "channel divisor (1 = paper-exact)");
     match by_name(&layer) {
-        Some(w) => w.shape(batch, scale),
+        Some(w) => (w, batch.max(1), scale),
         None => {
             eprintln!("unknown layer {layer:?} (cv1..cv12)");
             std::process::exit(2);
@@ -113,8 +108,21 @@ fn layer_arg(args: &mut Args) -> mec::tensor::ConvShape {
     }
 }
 
+fn fmt_budget(b: &Budget) -> String {
+    if b.limit() == usize::MAX {
+        "unlimited".into()
+    } else {
+        fmt_bytes(b.limit())
+    }
+}
+
+fn exit_engine_err<T>(e: EngineError) -> T {
+    eprintln!("{e}");
+    std::process::exit(1);
+}
+
 fn cmd_run(args: &mut Args) {
-    let shape = layer_arg(args);
+    let (w, batch, scale) = workload_args(args);
     let algo_s = args.opt("algo", "mec", "algorithm (direct|im2col|mec|mec-a|mec-b|winograd|fft)");
     let threads = args.opt_usize("threads", 1, "worker threads");
     let reps = args.opt_usize("reps", 3, "timed repetitions");
@@ -127,76 +135,73 @@ fn cmd_run(args: &mut Args) {
             std::process::exit(2);
         }
     };
-    let algo = kind.build();
-    if !algo.supports(&shape) {
-        eprintln!("{} does not support {}", algo.name(), shape.describe());
-        std::process::exit(1);
-    }
-    if !kind.supports_precision(precision) {
-        eprintln!("{} has no {precision} path (q16 covers direct/im2col/mec)", algo.name());
-        std::process::exit(1);
-    }
-    let ctx = ConvContext::default()
-        .with_threads(threads)
-        .with_precision(precision);
+    let shape = w.shape(batch, scale);
+    // Synthesizing the layer's random weights is not part of the build
+    // cost a real deployment pays — keep it outside the timed region.
+    let builder = layer_builder(&w, batch, scale)
+        .threads(threads)
+        .precision(precision)
+        .algo_override(0, kind);
+    // Unsupported geometry/precision surfaces here as a typed error —
+    // not as a panic three layers down.
+    let t_build = Instant::now();
+    let engine = builder.build().unwrap_or_else(exit_engine_err);
+    let build_ns = t_build.elapsed().as_nanos() as f64;
     let mut rng = Rng::new(42);
     let input = Tensor::random(shape.input, &mut rng);
-    let kernel = Kernel::random(shape.kernel, &mut rng);
-    let mut out = Tensor::zeros(shape.output());
-
-    // Plan once (model-load cost), then measure steady-state executes
-    // against a planner-sized arena — the serving hot path.
-    let t_plan = Instant::now();
-    let plan = algo.plan(&ctx, &shape, &kernel);
-    let plan_ns = t_plan.elapsed().as_nanos() as f64;
-    let ((), peak) = measure_peak(|| {
-        let mut arena = Arena::with_capacity(plan.workspace_elems());
-        plan.execute(&input, &mut arena, &mut out);
+    // Peak temporary memory = the session arena growing to the engine's
+    // planned layout on first use...
+    let (mut session, peak) = measure_peak(|| {
+        let mut s = engine.session();
+        s.infer_batch(&input).expect("input matches engine");
+        s
     });
-    let mut arena = Arena::with_capacity(plan.workspace_elems());
-    plan.execute(&input, &mut arena, &mut out); // warm
+    // ...and runtime in the steady state (plan-amortized serving cost).
     let mut best = f64::INFINITY;
     for _ in 0..reps.max(1) {
         let t0 = Instant::now();
-        plan.execute(&input, &mut arena, &mut out);
+        session.infer_batch(&input).expect("input matches engine");
         best = best.min(t0.elapsed().as_nanos() as f64);
     }
+    let report = &engine.plan_report()[0];
     println!("layer    : {}", shape.describe());
-    println!("algorithm: {}", algo.name());
+    println!("algorithm: {}", kind.name());
     println!("precision: {precision}");
-    println!("plan     : {} (one-time: dispatch + kernel prepack/transform)", fmt_ns(plan_ns));
-    println!("execute  : {} (best of {reps}, {threads} threads, plan-amortized)", fmt_ns(best));
     println!(
-        "overhead : measured {} / plan layout {} / analytic {}",
+        "build    : {} (one-time: validate + plan + kernel prepack)",
+        fmt_ns(build_ns)
+    );
+    println!(
+        "execute  : {} (best of {reps}, {threads} threads, plan-amortized)",
+        fmt_ns(best)
+    );
+    println!(
+        "overhead : measured {} / engine arena {} / planner {}",
         fmt_bytes(peak),
-        fmt_bytes(plan.workspace_bytes()),
-        fmt_bytes(algo.workspace_bytes(&shape))
+        fmt_bytes(engine.workspace_bytes()),
+        fmt_bytes(report.chosen.workspace_bytes)
     );
     println!("gflops   : {:.2}", shape.flops() as f64 / best);
 }
 
 fn cmd_plan(args: &mut Args) {
-    let shape = layer_arg(args);
-    let budget = parse_budget(&args.opt("budget", "unlimited", "workspace budget (e.g. 16MB)"));
+    let (w, batch, scale) = workload_args(args);
+    let budget = budget_arg(args, "workspace budget (e.g. 16MB)");
     let threads = args.opt_usize("threads", 1, "worker threads");
     let precision = precision_arg(args);
     args.finish();
-    let planner = Planner::new();
-    let ctx = ConvContext::default()
-        .with_threads(threads)
-        .with_precision(precision);
-    println!("layer: {}", shape.describe());
+    let engine = layer_builder(&w, batch, scale)
+        .threads(threads)
+        .precision(precision)
+        .budget(budget.clone())
+        .build()
+        .unwrap_or_else(exit_engine_err);
+    let report = &engine.plan_report()[0];
+    println!("layer: {}", report.shape.describe());
     println!("precision: {precision}");
-    println!(
-        "budget: {}",
-        if budget.limit() == usize::MAX {
-            "unlimited".into()
-        } else {
-            fmt_bytes(budget.limit())
-        }
-    );
+    println!("budget: {}", fmt_budget(&budget));
     println!("\nadmissible plans:");
-    for p in planner.admissible(&shape, &budget, &ctx) {
+    for p in &report.candidates {
         println!(
             "  {:<10} workspace={:>12} est={:>12}",
             p.algo.name(),
@@ -204,30 +209,36 @@ fn cmd_plan(args: &mut Args) {
             fmt_ns(p.est_ns)
         );
     }
-    let chosen = planner.plan(&shape, &budget, &ctx);
     println!(
         "\nchosen: {} ({} workspace)",
-        chosen.algo.name(),
-        fmt_bytes(chosen.workspace_bytes)
+        report.chosen.algo.name(),
+        fmt_bytes(report.chosen.workspace_bytes)
     );
 }
 
 fn cmd_tune(args: &mut Args) {
-    let shape = layer_arg(args);
-    let budget = parse_budget(&args.opt("budget", "unlimited", "workspace budget"));
+    let (w, batch, scale) = workload_args(args);
+    let budget = budget_arg(args, "workspace budget");
     let threads = args.opt_usize("threads", 1, "worker threads");
     let precision = precision_arg(args);
     args.finish();
-    let tuner = AutoTuner::new();
-    let ctx = ConvContext::default()
-        .with_threads(threads)
-        .with_precision(precision);
     println!(
         "measuring on {} ({precision}, plan-amortized) ...",
-        shape.describe()
+        w.shape(batch, scale).describe()
     );
-    let mut ms = tuner.measure_all(&shape, &budget, &ctx);
-    ms.sort_by(|a, b| a.median_ns.partial_cmp(&b.median_ns).unwrap());
+    let engine = layer_builder(&w, batch, scale)
+        .threads(threads)
+        .precision(precision)
+        .budget(budget)
+        .autotune(true)
+        .build()
+        .unwrap_or_else(exit_engine_err);
+    let report = &engine.plan_report()[0];
+    let mut ms = report
+        .measurements
+        .clone()
+        .expect("autotune build records measurements");
+    ms.sort_by(|a, b| a.median_ns.total_cmp(&b.median_ns));
     for m in &ms {
         println!(
             "  {:<10} execute {:>12}  plan {:>12}  workspace={}",
@@ -237,7 +248,7 @@ fn cmd_tune(args: &mut Args) {
             fmt_bytes(m.workspace_bytes)
         );
     }
-    println!("winner: {}", ms[0].algo.name());
+    println!("winner: {}", report.chosen.algo.name());
 }
 
 fn cmd_serve(args: &mut Args) {
@@ -246,45 +257,47 @@ fn cmd_serve(args: &mut Args) {
     let workers = args.opt_usize("workers", 1, "server worker threads");
     let max_batch = args.opt_usize("max-batch", 32, "dynamic batch cap");
     let delay_ms = args.opt_usize("max-delay-ms", 2, "dynamic batch delay");
-    let budget = parse_budget(&args.opt("budget", "unlimited", "conv workspace budget"));
+    let budget = budget_arg(args, "conv workspace budget");
     let threads = args.opt_usize("threads", 1, "engine threads per worker");
     let precision = precision_arg(args);
     args.finish();
 
-    let mut model = match load_mecw(&model_path) {
-        Ok(m) => m,
-        Err(e) => {
-            eprintln!("cannot load model {model_path:?}: {e}\n(run `make artifacts` first)");
-            std::process::exit(1);
-        }
-    };
-    let ctx = ConvContext::default()
-        .with_threads(threads)
-        .with_precision(precision);
-    model.plan(&Planner::new(), &budget, &ctx, max_batch);
+    let engine = Engine::builder(model_path)
+        .budget(budget)
+        .threads(threads)
+        .precision(precision)
+        .pin_batch_sizes(&[1, max_batch.max(1)])
+        .build()
+        .unwrap_or_else(|e| {
+            if matches!(e, EngineError::ModelLoad { .. }) {
+                eprintln!("{e}\n(run `make artifacts` first)");
+                std::process::exit(1);
+            }
+            exit_engine_err(e)
+        });
+    let model = engine.model();
     println!(
         "model {:?}: {} layers, {} params, plans: {:?}",
         model.name,
         model.layers.len(),
         model.param_count(),
-        model
+        engine
             .plan_summary()
             .iter()
             .map(|(i, a)| format!("L{i}:{}", a.name()))
             .collect::<Vec<_>>()
     );
     println!(
-        "shared arena: {} per worker (max over planned layers, not sum)",
-        fmt_bytes(model.planned_workspace_bytes())
+        "shared arena: {} per worker (max over planned layers and pinned batches, not sum)",
+        fmt_bytes(engine.workspace_bytes())
     );
-    let (h, w, c) = model.input_hwc;
+    let (h, w, c) = engine.input_hwc();
     let server = Server::start(
-        Arc::new(model),
+        Arc::new(engine),
         ServerConfig {
             workers,
             queue_capacity: 1024,
             policy: BatchPolicy::new(max_batch, Duration::from_millis(delay_ms as u64)),
-            ctx,
         },
     );
     let client = server.client();
@@ -300,8 +313,10 @@ fn cmd_serve(args: &mut Args) {
     }
     let mut served = 0;
     for rx in pending {
-        if rx.recv().is_ok() {
-            served += 1;
+        if let Ok(resp) = rx.recv() {
+            if resp.result.is_ok() {
+                served += 1;
+            }
         }
     }
     let metrics = server.shutdown();

@@ -169,6 +169,51 @@ impl Budget {
     }
 }
 
+/// Error from parsing a [`Budget`] string.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseBudgetError(pub String);
+
+impl std::fmt::Display for ParseBudgetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "bad budget {:?} (use e.g. 500KB, 16MB, 1.5GB, 1048576, or unlimited)",
+            self.0
+        )
+    }
+}
+
+impl std::error::Error for ParseBudgetError {}
+
+impl std::str::FromStr for Budget {
+    type Err = ParseBudgetError;
+
+    /// Parse a human budget string: `unlimited`, a plain byte count, or
+    /// a (possibly fractional) number with a `KB`/`MB`/`GB` suffix
+    /// (decimal units, case-insensitive). This lives here — not in the
+    /// CLI — so every front end parses budgets identically and none of
+    /// them needs a `process::exit` in library-adjacent code.
+    fn from_str(s: &str) -> Result<Budget, ParseBudgetError> {
+        let lower = s.trim().to_ascii_lowercase();
+        if lower == "unlimited" {
+            return Ok(Budget::unlimited());
+        }
+        let (num, mult) = if let Some(v) = lower.strip_suffix("gb") {
+            (v, 1e9)
+        } else if let Some(v) = lower.strip_suffix("mb") {
+            (v, 1e6)
+        } else if let Some(v) = lower.strip_suffix("kb") {
+            (v, 1e3)
+        } else {
+            (lower.as_str(), 1.0)
+        };
+        match num.trim().parse::<f64>() {
+            Ok(v) if v.is_finite() && v >= 0.0 => Ok(Budget::new((v * mult) as usize)),
+            _ => Err(ParseBudgetError(s.to_string())),
+        }
+    }
+}
+
 /// Convenience: measure the peak tracked overhead while running `f`.
 /// Returns `(result, peak_overhead_bytes_during_f)`.
 ///
@@ -246,6 +291,31 @@ mod tests {
             })
         );
         assert!(Budget::unlimited().allows(usize::MAX));
+    }
+
+    #[test]
+    fn budget_parses_suffixes_and_unlimited() {
+        assert_eq!("unlimited".parse::<Budget>().unwrap().limit(), usize::MAX);
+        assert_eq!("UNLIMITED".parse::<Budget>().unwrap().limit(), usize::MAX);
+        assert_eq!("16MB".parse::<Budget>().unwrap().limit(), 16_000_000);
+        assert_eq!("1.5GB".parse::<Budget>().unwrap().limit(), 1_500_000_000);
+        assert_eq!("500KB".parse::<Budget>().unwrap().limit(), 500_000);
+        assert_eq!("  2mb ".parse::<Budget>().unwrap().limit(), 2_000_000);
+        // Plain byte counts.
+        assert_eq!("1048576".parse::<Budget>().unwrap().limit(), 1_048_576);
+        assert_eq!("0".parse::<Budget>().unwrap().limit(), 0);
+    }
+
+    #[test]
+    fn budget_parse_rejects_bad_inputs() {
+        for bad in ["", "MB", "12XB", "abcMB", "-5MB", "-1", "NaNMB", "infGB"] {
+            let err = bad.parse::<Budget>();
+            assert!(err.is_err(), "{bad:?} should not parse");
+            assert!(
+                err.unwrap_err().to_string().contains(bad),
+                "error names the offending input"
+            );
+        }
     }
 
     #[test]

@@ -62,7 +62,35 @@ pub struct Model {
 /// unusual batch sizes are built transiently (executed, not cached) so
 /// serving memory stays bounded — each cached plan holds its own
 /// prepacked kernel operands.
-const MAX_CACHED_GEOMETRIES_PER_LAYER: usize = 8;
+pub const MAX_CACHED_GEOMETRIES_PER_LAYER: usize = 8;
+
+/// A session-local memo of resolved `(layer, geometry, precision) →
+/// plan` bindings. The model's own plan cache sits behind an `RwLock`
+/// (it is shared by every session); a memo in front of it makes a
+/// session's steady-state forward lock-free — after the first pass at a
+/// batch size, every lookup is a plain `HashMap` hit on thread-owned
+/// state. Keyed by the same build precision as the model cache, so a
+/// memo reused across contexts can never hand a q16-packed plan to an
+/// f32 forward (or vice versa); bounded per layer like the model cache.
+#[derive(Default)]
+pub struct PlanMemo {
+    map: HashMap<(usize, ConvShape, Precision), Arc<dyn ConvPlan>>,
+}
+
+impl PlanMemo {
+    pub fn new() -> PlanMemo {
+        PlanMemo::default()
+    }
+
+    /// Number of memoized (layer, geometry) plan bindings.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
 
 impl Model {
     pub fn new(name: &str, input_hwc: (usize, usize, usize), layers: Vec<Layer>) -> Model {
@@ -100,11 +128,45 @@ impl Model {
         self.layers.iter().map(|l| l.param_count()).sum()
     }
 
+    /// The exact conv geometry of every conv layer at batch size `batch`
+    /// (padding applied), in layer order: what the planner/engine choose
+    /// algorithms on. Non-conv layers are skipped.
+    pub fn conv_shapes(&self, batch: usize) -> Vec<(usize, ConvShape)> {
+        let (h, w, c) = self.input_hwc;
+        let mut shape = Nhwc::new(batch.max(1), h, w, c);
+        let mut out = Vec::new();
+        for (i, layer) in self.layers.iter().enumerate() {
+            if let Layer::Conv {
+                kernel, sh, sw, ph, pw, ..
+            } = layer
+            {
+                let padded = Nhwc::new(shape.n, shape.h + 2 * ph, shape.w + 2 * pw, shape.c);
+                out.push((i, ConvShape::new(padded, kernel.shape(), *sh, *sw)));
+            }
+            shape = layer.output_shape(shape);
+        }
+        out
+    }
+
     /// Plan every conv layer under `budget` for batch size `batch`: the
     /// planner picks the algorithm on the true batched geometry, then the
     /// algorithm prepacks the layer's kernel into a reusable
     /// [`ConvPlan`]. Also sizes the shared arena (max over layers).
     pub fn plan(&mut self, planner: &Planner, budget: &Budget, ctx: &ConvContext, batch: usize) {
+        self.plan_with(ctx, batch, |_, cs| planner.plan(cs, budget, ctx).algo);
+    }
+
+    /// [`Model::plan`] with the algorithm choice delegated to `choose`
+    /// (layer index + exact batched geometry → algorithm). This is the
+    /// engine builder's entry point: the choice may come from the cost
+    /// model, the autotuner, or a validated per-layer override — the
+    /// prepack/plan/arena machinery is identical either way.
+    pub fn plan_with(
+        &mut self,
+        ctx: &ConvContext,
+        batch: usize,
+        mut choose: impl FnMut(usize, &ConvShape) -> AlgoKind,
+    ) {
         self.plan_cache.write().unwrap().clear();
         self.prepack_cache.write().unwrap().clear();
         self.planned_ws_elems = 0;
@@ -121,7 +183,7 @@ impl Model {
             {
                 let padded = Nhwc::new(shape.n, shape.h + 2 * ph, shape.w + 2 * pw, shape.c);
                 let cs = ConvShape::new(padded, kernel.shape(), *sh, *sw);
-                let chosen = planner.plan(&cs, budget, ctx).algo;
+                let chosen = choose(i, &cs);
                 self.plans[i] = Some(chosen);
                 let algo_impl = chosen.build();
                 // One batch-independent prepack per layer; every batch
@@ -191,6 +253,24 @@ impl Model {
     /// it equal the max (not the sum) of per-layer workspaces.
     pub fn sized_arena(&self) -> Arena {
         Arena::with_capacity(self.planned_ws_elems)
+    }
+
+    /// Eagerly build (and cache) every conv layer's plan for batch size
+    /// `batch`, sharing the per-layer kernel prepacks already in the
+    /// cache. Returns the max workspace elems over conv layers at that
+    /// batch — what an engine pinning several batch sizes folds into its
+    /// arena sizing. Plans build under the planning context, so
+    /// [`Model::plan`]/[`Model::plan_with`] must have run first.
+    pub fn prepare_batch(&self, batch: usize) -> usize {
+        let ctx = self.planned_ctx.clone().unwrap_or_default();
+        let mut max_ws = 0usize;
+        for (i, cs) in self.conv_shapes(batch) {
+            if let Layer::Conv { kernel, .. } = &self.layers[i] {
+                let plan = self.plan_for(i, &cs, &ctx, kernel);
+                max_ws = max_ws.max(plan.workspace_elems());
+            }
+        }
+        max_ws
     }
 
     /// Fetch (or lazily build) the prepared plan for conv layer `idx` on
@@ -265,7 +345,26 @@ impl Model {
     pub fn forward(&self, ctx: &ConvContext, batch: &Tensor, arena: &mut Arena) -> Tensor {
         let mut x = batch.clone();
         for (i, layer) in self.layers.iter().enumerate() {
-            x = self.forward_layer(i, layer, ctx, x, arena);
+            x = self.forward_layer(i, layer, ctx, x, arena, None);
+        }
+        x
+    }
+
+    /// [`Model::forward`] with a caller-owned [`PlanMemo`] in front of
+    /// the model's `RwLock`ed plan cache: once the memo has seen a batch
+    /// size, the pass resolves every conv plan with a plain `HashMap`
+    /// lookup — no locks on the hot path. This is what
+    /// [`Session`](crate::engine::Session) runs.
+    pub fn forward_memo(
+        &self,
+        ctx: &ConvContext,
+        batch: &Tensor,
+        arena: &mut Arena,
+        memo: &mut PlanMemo,
+    ) -> Tensor {
+        let mut x = batch.clone();
+        for (i, layer) in self.layers.iter().enumerate() {
+            x = self.forward_layer(i, layer, ctx, x, arena, Some(&mut *memo));
         }
         x
     }
@@ -277,6 +376,7 @@ impl Model {
         ctx: &ConvContext,
         x: Tensor,
         arena: &mut Arena,
+        memo: Option<&mut PlanMemo>,
     ) -> Tensor {
         match layer {
             Layer::Conv {
@@ -288,7 +388,28 @@ impl Model {
                     x
                 };
                 let cs = ConvShape::new(padded.shape(), kernel.shape(), *sh, *sw);
-                let plan = self.plan_for(idx, &cs, ctx, kernel);
+                let plan = match memo {
+                    Some(memo) => {
+                        // Same build precision plan_for would resolve,
+                        // so the memo key agrees with the model cache.
+                        let prec = self.planned_ctx.as_ref().unwrap_or(ctx).precision;
+                        match memo.map.get(&(idx, cs, prec)) {
+                            Some(p) => Arc::clone(p),
+                            None => {
+                                let p = self.plan_for(idx, &cs, ctx, kernel);
+                                // Same per-layer bound as the model cache:
+                                // odd batch sizes beyond it stay transient.
+                                if memo.map.keys().filter(|(i, _, _)| *i == idx).count()
+                                    < MAX_CACHED_GEOMETRIES_PER_LAYER
+                                {
+                                    memo.map.insert((idx, cs, prec), Arc::clone(&p));
+                                }
+                                p
+                            }
+                        }
+                    }
+                    None => self.plan_for(idx, &cs, ctx, kernel),
+                };
                 let mut out = Tensor::zeros(cs.output());
                 plan.execute(&padded, arena, &mut out);
                 // Bias add (per output channel).
@@ -567,6 +688,77 @@ mod tests {
         fresh.pin_algo(AlgoKind::Mec);
         let want = fresh.forward(&f32_ctx, &batch, &mut arena);
         assert_eq!(a_f32.data(), want.data());
+    }
+
+    #[test]
+    fn forward_memo_matches_forward_bitwise_and_memoizes() {
+        let mut m = tiny_model();
+        let ctx = ConvContext::default();
+        m.plan(&Planner::new(), &Budget::unlimited(), &ctx, 2);
+        let mut rng = Rng::new(31);
+        let batch = Tensor::random(Nhwc::new(2, 8, 8, 1), &mut rng);
+        let mut arena = m.sized_arena();
+        let want = m.forward(&ctx, &batch, &mut arena);
+        let mut memo = PlanMemo::new();
+        assert!(memo.is_empty());
+        let a = m.forward_memo(&ctx, &batch, &mut arena, &mut memo);
+        assert_eq!(memo.len(), 1, "one conv layer memoized");
+        // Second pass resolves through the memo alone (same plan, so
+        // bitwise-identical again).
+        let b = m.forward_memo(&ctx, &batch, &mut arena, &mut memo);
+        assert_eq!(memo.len(), 1);
+        assert_eq!(a.data(), want.data());
+        assert_eq!(b.data(), want.data());
+    }
+
+    #[test]
+    fn forward_memo_does_not_leak_precision_across_contexts() {
+        // One memo reused under q16 then f32 contexts must not hand the
+        // quantized plan to the f32 forward — the memo key carries the
+        // build precision exactly like the model's plan cache.
+        use crate::tensor::Precision;
+        let mut m = tiny_model();
+        m.pin_algo(AlgoKind::Mec);
+        let mut rng = Rng::new(37);
+        let batch = Tensor::random(Nhwc::new(1, 8, 8, 1), &mut rng);
+        let mut arena = Arena::new();
+        let mut memo = PlanMemo::new();
+        let q16_ctx = ConvContext::default().with_precision(Precision::Q16);
+        let f32_ctx = ConvContext::default();
+        let a_q16 = m.forward_memo(&q16_ctx, &batch, &mut arena, &mut memo);
+        let a_f32 = m.forward_memo(&f32_ctx, &batch, &mut arena, &mut memo);
+        assert_eq!(memo.len(), 2, "one memo entry per precision");
+        let mut fresh = tiny_model();
+        fresh.pin_algo(AlgoKind::Mec);
+        let want = fresh.forward(&f32_ctx, &batch, &mut arena);
+        assert_eq!(a_f32.data(), want.data(), "memo leaked the q16 plan");
+        let b_q16 = m.forward_memo(&q16_ctx, &batch, &mut arena, &mut memo);
+        assert_eq!(a_q16.data(), b_q16.data());
+    }
+
+    #[test]
+    fn conv_shapes_walks_padded_geometry() {
+        let m = tiny_model();
+        let shapes = m.conv_shapes(3);
+        assert_eq!(shapes.len(), 1);
+        let (idx, cs) = shapes[0];
+        assert_eq!(idx, 0);
+        // 8x8 input with 1px padding at batch 3.
+        assert_eq!(cs.input, Nhwc::new(3, 10, 10, 1));
+        assert_eq!(cs.output(), Nhwc::new(3, 8, 8, 4));
+    }
+
+    #[test]
+    fn prepare_batch_caches_extra_geometry_sharing_prepacks() {
+        let mut m = tiny_model();
+        let ctx = ConvContext::default();
+        m.plan(&Planner::new(), &Budget::unlimited(), &ctx, 4);
+        let ws4 = m.planned_workspace_elems();
+        let ws2 = m.prepare_batch(2);
+        assert!(ws2 <= ws4, "smaller batch needs no more workspace");
+        let plans = m.cached_plans_for_layer(0);
+        assert_eq!(plans.len(), 2, "planned batch + prepared batch");
+        assert_eq!(m.cached_prepacks(), 1, "prepack shared, not rebuilt");
     }
 
     #[test]

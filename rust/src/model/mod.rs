@@ -15,6 +15,6 @@ pub mod layer;
 pub mod loader;
 
 pub use evalset::EvalSet;
-pub use graph::Model;
+pub use graph::{Model, PlanMemo, MAX_CACHED_GEOMETRIES_PER_LAYER};
 pub use layer::Layer;
 pub use loader::{load_mecw, save_mecw, LoadError};

@@ -14,7 +14,7 @@
 
 pub mod autotune;
 
-pub use autotune::AutoTuner;
+pub use autotune::{AutoTuner, Measurement};
 
 use crate::conv::{AlgoKind, ConvContext, ConvPlan, Convolution};
 use crate::memory::Budget;
@@ -29,6 +29,52 @@ pub struct Plan {
     /// Estimated (cost model) or measured (autotuner) runtime in ns.
     pub est_ns: f64,
 }
+
+/// Why a *forced* algorithm choice cannot run on a geometry under a
+/// budget and context — the typed rejection
+/// [`Engine::builder`](crate::engine::Engine::builder) surfaces for an
+/// `algo_override` instead of a mid-run panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanError {
+    /// The algorithm does not support the geometry (e.g. Winograd
+    /// F(2×2,3×3) off 3×3/stride-1).
+    UnsupportedGeometry { algo: AlgoKind, shape: String },
+    /// The algorithm has no execution path for the requested precision
+    /// (Winograd/FFT under q16).
+    UnsupportedPrecision { algo: AlgoKind, precision: Precision },
+    /// The algorithm's workspace exceeds the memory budget.
+    BudgetExceeded {
+        algo: AlgoKind,
+        workspace_bytes: usize,
+        limit: usize,
+    },
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::UnsupportedGeometry { algo, shape } => {
+                write!(f, "{} does not support {shape}", algo.name())
+            }
+            PlanError::UnsupportedPrecision { algo, precision } => write!(
+                f,
+                "{} has no {precision} path (q16 covers direct/im2col/mec)",
+                algo.name()
+            ),
+            PlanError::BudgetExceeded {
+                algo,
+                workspace_bytes,
+                limit,
+            } => write!(
+                f,
+                "{} needs a {workspace_bytes} B workspace, over the {limit} B budget",
+                algo.name()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
 
 /// Analytic cost model. Units are abstract "ns" — only *ratios* matter
 /// for selection; coefficients were calibrated once against the bench
@@ -230,6 +276,46 @@ impl Planner {
         best.expect("direct always admissible")
     }
 
+    /// Validate a *forced* algorithm choice (an engine `algo_override`)
+    /// on `shape` under `budget` and `ctx`: supported geometry, an
+    /// execution path for the context precision, and workspace within
+    /// budget. Returns the same [`Plan`] record [`Planner::plan`] would,
+    /// or the typed reason the choice is inadmissible.
+    pub fn validate_choice(
+        &self,
+        algo: AlgoKind,
+        shape: &ConvShape,
+        budget: &Budget,
+        ctx: &ConvContext,
+    ) -> Result<Plan, PlanError> {
+        if !algo.supports_precision(ctx.precision) {
+            return Err(PlanError::UnsupportedPrecision {
+                algo,
+                precision: ctx.precision,
+            });
+        }
+        let built = algo.build();
+        if !built.supports(shape) {
+            return Err(PlanError::UnsupportedGeometry {
+                algo,
+                shape: shape.describe(),
+            });
+        }
+        let ws = built.workspace_bytes_prec(shape, ctx.precision);
+        if !budget.allows(ws) {
+            return Err(PlanError::BudgetExceeded {
+                algo,
+                workspace_bytes: ws,
+                limit: budget.limit(),
+            });
+        }
+        Ok(Plan {
+            algo,
+            workspace_bytes: ws,
+            est_ns: self.cost.estimate_ns_prec(algo, shape, ctx.precision),
+        })
+    }
+
     /// Plan straight to an executable [`ConvPlan`]: pick the algorithm
     /// under the budget, then prepack `kernel` for it. This is what
     /// `Model::plan` runs per conv layer at load time.
@@ -404,6 +490,57 @@ mod tests {
                 cm.estimate_ns(algo, &shape)
             );
         }
+    }
+
+    #[test]
+    fn validate_choice_accepts_admissible_and_matches_plan_record() {
+        let p = Planner::new();
+        let shape = cv6();
+        let ctx = ConvContext::default();
+        let plan = p
+            .validate_choice(AlgoKind::Mec, &shape, &Budget::unlimited(), &ctx)
+            .unwrap();
+        assert_eq!(plan.algo, AlgoKind::Mec);
+        let listed = p
+            .admissible(&shape, &Budget::unlimited(), &ctx)
+            .into_iter()
+            .find(|pl| pl.algo == AlgoKind::Mec)
+            .unwrap();
+        assert_eq!(plan, listed);
+    }
+
+    #[test]
+    fn validate_choice_rejects_with_typed_reasons() {
+        let p = Planner::new();
+        let shape = cv6();
+        let ctx = ConvContext::default();
+        // Budget smaller than MEC's workspace.
+        let err = p
+            .validate_choice(AlgoKind::Mec, &shape, &Budget::new(16), &ctx)
+            .unwrap_err();
+        assert!(
+            matches!(err, PlanError::BudgetExceeded { algo: AlgoKind::Mec, limit: 16, .. }),
+            "{err:?}"
+        );
+        // Winograd has no q16 path.
+        let q16 = ConvContext::default().with_precision(crate::tensor::Precision::Q16);
+        let err = p
+            .validate_choice(AlgoKind::Winograd, &shape, &Budget::unlimited(), &q16)
+            .unwrap_err();
+        assert!(matches!(err, PlanError::UnsupportedPrecision { .. }), "{err:?}");
+        // Winograd off 3x3/s=1 geometry.
+        let big_k = ConvShape::new(
+            Nhwc::new(1, 227, 227, 3),
+            KernelShape::new(11, 11, 3, 96),
+            4,
+            4,
+        );
+        let err = p
+            .validate_choice(AlgoKind::Winograd, &big_k, &Budget::unlimited(), &ctx)
+            .unwrap_err();
+        assert!(matches!(err, PlanError::UnsupportedGeometry { .. }), "{err:?}");
+        // Errors render human-readable reasons.
+        assert!(err.to_string().contains("winograd"));
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //! invariants, backpressure, and property tests on the batcher.
 
 use mec::conv::AlgoKind;
-use mec::coordinator::{BatchPolicy, QueueError, RequestQueue, Server, ServerConfig};
+use mec::coordinator::{BatchPolicy, QueueError, RequestQueue, Server, ServerConfig, SubmitError};
+use mec::engine::Engine;
 use mec::model::{Layer, Model};
 use mec::tensor::{Kernel, KernelShape};
 use mec::util::prop::{check, Config};
@@ -13,7 +14,7 @@ use std::time::{Duration, Instant};
 
 fn tiny_model() -> Model {
     let mut rng = Rng::new(0xBEEF);
-    let mut m = Model::new(
+    Model::new(
         "itest",
         (8, 8, 1),
         vec![
@@ -40,21 +41,27 @@ fn tiny_model() -> Model {
             },
             Layer::Softmax,
         ],
-    );
-    m.pin_algo(AlgoKind::Mec);
-    m
+    )
+}
+
+fn tiny_engine() -> Arc<Engine> {
+    Arc::new(
+        Engine::builder(tiny_model())
+            .algo_override(0, AlgoKind::Mec)
+            .pin_batch_sizes(&[1, 8])
+            .build()
+            .expect("tiny model builds"),
+    )
 }
 
 #[test]
 fn concurrent_clients_all_served_consistently() {
-    let model = Arc::new(tiny_model());
     let server = Server::start(
-        Arc::clone(&model),
+        tiny_engine(),
         ServerConfig {
             workers: 2,
             queue_capacity: 512,
             policy: BatchPolicy::new(8, Duration::from_millis(5)),
-            ..ServerConfig::default()
         },
     );
     let client = server.client();
@@ -72,11 +79,12 @@ fn concurrent_clients_all_served_consistently() {
                     match client.infer(s.clone()) {
                         Ok(resp) => {
                             // Scores are a probability row.
-                            let sum: f32 = resp.scores.iter().sum();
+                            let pred = resp.result.expect("valid request succeeds");
+                            let sum: f32 = pred.scores.iter().sum();
                             assert!((sum - 1.0).abs() < 1e-4);
                             ok += 1;
                         }
-                        Err(QueueError::Full(_)) => {}
+                        Err(SubmitError::Queue(QueueError::Full(_))) => {}
                         Err(e) => panic!("unexpected {e}"),
                     }
                 }
@@ -100,15 +108,13 @@ fn concurrent_clients_all_served_consistently() {
 
 #[test]
 fn backpressure_rejects_when_queue_small() {
-    let model = Arc::new(tiny_model());
     let server = Server::start(
-        model,
+        tiny_engine(),
         ServerConfig {
             workers: 1,
             queue_capacity: 2,
             // Slow consumption: big batches with long delay.
             policy: BatchPolicy::new(32, Duration::from_millis(30)),
-            ..ServerConfig::default()
         },
     );
     let client = server.client();
@@ -117,7 +123,7 @@ fn backpressure_rejects_when_queue_small() {
     for _ in 0..64 {
         match client.submit(vec![0.2; 64]) {
             Ok(rx) => rxs.push(rx),
-            Err(QueueError::Full(_)) => rejected += 1,
+            Err(SubmitError::Queue(QueueError::Full(_))) => rejected += 1,
             Err(e) => panic!("{e}"),
         }
     }
@@ -170,8 +176,7 @@ fn prop_batcher_never_exceeds_max_batch_and_preserves_fifo() {
 
 #[test]
 fn metrics_percentiles_are_monotone_under_load() {
-    let model = Arc::new(tiny_model());
-    let server = Server::start(model, ServerConfig::default());
+    let server = Server::start(tiny_engine(), ServerConfig::default());
     let client = server.client();
     let mut rxs = Vec::new();
     for _ in 0..40 {

@@ -8,6 +8,7 @@
 //! request is answered twice, and nothing hangs.
 
 use mec::coordinator::{BatchPolicy, Batcher, Request, RequestQueue, Response};
+use mec::engine::Prediction;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -34,9 +35,11 @@ fn multi_producer_close_midstream_answers_exactly_once_or_rejects() {
                 for req in batch {
                     let resp = Response {
                         id: req.id,
-                        scores: vec![1.0],
-                        class: 0,
                         batch_size: 1,
+                        result: Ok(Prediction {
+                            scores: vec![1.0],
+                            class: 0,
+                        }),
                     };
                     // Receiver may have gone away; the send itself must
                     // still be the one and only reply attempt.

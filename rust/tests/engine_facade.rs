@@ -1,0 +1,254 @@
+//! Engine/Session facade contract tests — the acceptance criteria of
+//! the builder-configured front door:
+//!
+//! * concurrent `Session`s on one `Engine` produce **bitwise-identical**
+//!   outputs to a solo session;
+//! * per-batch-size plans behind one engine share kernel prepacks by
+//!   **pointer equality** (pinned batches prepack eagerly, once);
+//! * builder misconfiguration (q16 + Winograd override, a budget too
+//!   small for the overridden algorithm, bad knobs, missing model file)
+//!   returns a typed [`EngineError`] rather than panicking;
+//! * session input validation returns errors, never aborts a thread.
+
+use mec::conv::AlgoKind;
+use mec::engine::{Engine, EngineError};
+use mec::memory::Budget;
+use mec::model::{Layer, Model};
+use mec::planner::PlanError;
+use mec::tensor::{Kernel, KernelShape, Nhwc, Precision, Tensor};
+use mec::util::Rng;
+use std::sync::Arc;
+
+/// Conv → relu → pool → dense → softmax, the shape of the serving models.
+fn classifier_model(seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    Model::new(
+        "facade-test",
+        (8, 8, 1),
+        vec![
+            Layer::Conv {
+                kernel: Kernel::random(KernelShape::new(3, 3, 1, 4), &mut rng),
+                bias: vec![0.05; 4],
+                sh: 1,
+                sw: 1,
+                ph: 1,
+                pw: 1,
+            },
+            Layer::Relu,
+            Layer::MaxPool { k: 2, s: 2 },
+            Layer::Flatten,
+            Layer::Dense {
+                w: {
+                    let mut w = vec![0.0; 64 * 3];
+                    rng.fill_uniform(&mut w, -0.4, 0.4);
+                    w
+                },
+                bias: vec![0.0; 3],
+                d_in: 64,
+                d_out: 3,
+            },
+            Layer::Softmax,
+        ],
+    )
+}
+
+#[test]
+fn concurrent_sessions_match_solo_session_bitwise() {
+    let engine = Arc::new(
+        Engine::builder(classifier_model(1))
+            .pin_batch_sizes(&[4])
+            .build()
+            .unwrap(),
+    );
+    let mut rng = Rng::new(11);
+    let batch = Arc::new(Tensor::random(Nhwc::new(4, 8, 8, 1), &mut rng));
+    let want = engine.session().infer_batch(&batch).unwrap();
+
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let engine = Arc::clone(&engine);
+            let batch = Arc::clone(&batch);
+            std::thread::spawn(move || {
+                let mut session = engine.session();
+                // Several passes per session: steady state included.
+                let mut out = session.infer_batch(&batch).unwrap();
+                for _ in 0..3 {
+                    out = session.infer_batch(&batch).unwrap();
+                }
+                out
+            })
+        })
+        .collect();
+    for h in handles {
+        let got = h.join().expect("session thread panicked");
+        assert_eq!(got.data(), want.data(), "concurrent != solo (bitwise)");
+    }
+}
+
+#[test]
+fn pinned_batches_share_prepacks_by_pointer_before_any_inference() {
+    let engine = Engine::builder(classifier_model(2))
+        .pin_batch_sizes(&[2, 5])
+        .build()
+        .unwrap();
+    // Eager plan + prepack: both geometries cached at build time...
+    let plans = engine.model().cached_plans_for_layer(0);
+    assert_eq!(plans.len(), 2, "one plan per pinned batch size");
+    // ...sharing ONE kernel-side prepack — pointer equality, not just
+    // equal bytes.
+    assert_eq!(engine.model().cached_prepacks(), 1);
+    let a = plans[0].shared_prepack().expect("plan exposes its prepack");
+    let b = plans[1].shared_prepack().expect("plan exposes its prepack");
+    assert!(Arc::ptr_eq(&a, &b), "prepack duplicated across batch sizes");
+    // Sessions at both batch sizes agree with each other sample-wise
+    // (allclose, not bitwise: MEC's Solution A/B dispatch is a
+    // batch-size question, so the summation *grouping* may differ).
+    let mut rng = Rng::new(23);
+    let big = Tensor::random(Nhwc::new(5, 8, 8, 1), &mut rng);
+    let mut s1 = engine.session();
+    let mut s2 = engine.session();
+    let full = s1.infer_batch(&big).unwrap();
+    for i in 0..5 {
+        let pred = s2.infer(big.sample(i)).unwrap();
+        mec::util::assert_allclose(
+            &pred.scores,
+            full.sample(i),
+            1e-4,
+            "batched vs single sample",
+        );
+    }
+}
+
+#[test]
+fn q16_winograd_override_is_a_typed_build_error() {
+    let err = Engine::builder(classifier_model(3))
+        .precision(Precision::Q16)
+        .algo_override(0, AlgoKind::Winograd)
+        .build()
+        .unwrap_err();
+    assert!(
+        matches!(
+            err,
+            EngineError::Plan {
+                layer: 0,
+                source: PlanError::UnsupportedPrecision {
+                    algo: AlgoKind::Winograd,
+                    precision: Precision::Q16,
+                },
+            }
+        ),
+        "{err:?}"
+    );
+    // Without the override the q16 build succeeds: the planner falls
+    // back to the quantized GEMM family.
+    let engine = Engine::builder(classifier_model(3))
+        .precision(Precision::Q16)
+        .build()
+        .unwrap();
+    assert!(engine.plan_summary()[0].1.supports_precision(Precision::Q16));
+}
+
+#[test]
+fn budget_too_small_for_overridden_algorithm_is_a_typed_build_error() {
+    let err = Engine::builder(classifier_model(4))
+        .budget(Budget::new(16)) // 16 B: no lowering algorithm fits
+        .algo_override(0, AlgoKind::Mec)
+        .build()
+        .unwrap_err();
+    match err {
+        EngineError::Plan {
+            layer: 0,
+            source: PlanError::BudgetExceeded { algo, workspace_bytes, limit },
+        } => {
+            assert_eq!(algo, AlgoKind::Mec);
+            assert_eq!(limit, 16);
+            assert!(workspace_bytes > 16);
+        }
+        other => panic!("expected BudgetExceeded, got {other:?}"),
+    }
+    // The same tiny budget without an override still builds: direct
+    // (zero workspace) is always admissible.
+    let engine = Engine::builder(classifier_model(4))
+        .budget(Budget::new(16))
+        .build()
+        .unwrap();
+    assert_eq!(engine.plan_summary()[0].1, AlgoKind::Direct);
+    assert_eq!(engine.plan_report()[0].chosen.workspace_bytes, 0);
+}
+
+#[test]
+fn session_input_validation_returns_errors_not_panics() {
+    let engine = Engine::builder(classifier_model(5)).build().unwrap();
+    let mut session = engine.session();
+    let err = session.infer(&[0.0; 7]).unwrap_err();
+    assert_eq!(err, EngineError::SampleSize { expected: 64, got: 7 });
+    let bad = Tensor::zeros(Nhwc::new(1, 4, 4, 1));
+    let err = session.infer_batch(&bad).unwrap_err();
+    assert_eq!(
+        err,
+        EngineError::BatchShape {
+            expected: (8, 8, 1),
+            got: (4, 4, 1),
+        }
+    );
+    // The session survives and still answers valid inputs.
+    let pred = session.infer(&[0.1; 64]).unwrap();
+    assert_eq!(pred.scores.len(), 3);
+    assert!(pred.class < 3);
+    let sum: f32 = pred.scores.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-4, "softmax row sums to {sum}");
+}
+
+#[test]
+fn autotuned_engine_matches_cost_model_engine_numerically() {
+    let cost = Engine::builder(classifier_model(6)).build().unwrap();
+    let tuned = Engine::builder(classifier_model(6))
+        .autotune(true)
+        .build()
+        .unwrap();
+    // The autotuner records its measurements in the build report.
+    let report = &tuned.plan_report()[0];
+    let ms = report.measurements.as_ref().expect("autotune measured");
+    assert!(!ms.is_empty());
+    assert!(ms.iter().any(|m| m.algo == report.chosen.algo));
+    // Whatever each selector picked, the numerics agree.
+    let mut rng = Rng::new(17);
+    let batch = Tensor::random(Nhwc::new(1, 8, 8, 1), &mut rng);
+    let a = cost.session().infer_batch(&batch).unwrap();
+    let b = tuned.session().infer_batch(&batch).unwrap();
+    mec::util::assert_allclose(a.data(), b.data(), 1e-3, "autotune vs cost model");
+}
+
+#[test]
+fn engine_is_immutable_and_shareable_across_threads() {
+    // Engine: Send + Sync by construction (compile-time check), and the
+    // same Arc serves sessions from many threads at once.
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Engine>();
+    let engine = Arc::new(
+        Engine::builder(classifier_model(7))
+            .threads(2)
+            .pin_batch_sizes(&[1, 3])
+            .build()
+            .unwrap(),
+    );
+    assert_eq!(engine.pinned_batch_sizes(), &[1, 3]);
+    assert_eq!(engine.context().threads, 2);
+    let mut rng = Rng::new(29);
+    let sample = {
+        let mut s = vec![0.0f32; 64];
+        rng.fill_uniform(&mut s, 0.0, 1.0);
+        s
+    };
+    let solo = engine.session().infer(&sample).unwrap();
+    let handles: Vec<_> = (0..3)
+        .map(|_| {
+            let engine = Arc::clone(&engine);
+            let sample = sample.clone();
+            std::thread::spawn(move || engine.session().infer(&sample).unwrap())
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), solo, "prediction differs across threads");
+    }
+}

@@ -269,6 +269,45 @@ fn model_arena_peak_is_max_not_sum_of_layer_workspaces() {
 }
 
 #[test]
+fn facade_session_steady_state_allocates_zero_tracked_bytes() {
+    // The Engine/Session facade inherits the plan/execute contract: an
+    // engine-sized session performs zero tracked allocation in steady
+    // state, for both `infer` (single sample) and `infer_batch`.
+    let engine = mec::engine::Engine::builder(two_conv_model())
+        .pin_batch_sizes(&[1, 2])
+        .build()
+        .expect("facade builds");
+    let mut rng = Rng::new(0xfa);
+    let input = Tensor::random(Nhwc::new(2, 12, 12, 2), &mut rng);
+    let mut sample = vec![0.0f32; 12 * 12 * 2];
+    rng.fill_uniform(&mut sample, -1.0, 1.0);
+    with_tracker_lock(|| {
+        let mut session = engine.session();
+        assert_eq!(
+            session.workspace_bytes(),
+            engine.workspace_bytes(),
+            "session arena pre-sized by the engine"
+        );
+        // Warm both entry points once (plans are already cached for the
+        // pinned batches; this fills the session's memo).
+        let _ = session.infer_batch(&input).unwrap();
+        let _ = session.infer(&sample).unwrap();
+        // Steady state: zero tracked allocation, no arena growth.
+        let before = memory::current_bytes();
+        for rep in 0..3 {
+            let _ = session.infer_batch(&input).unwrap();
+            let _ = session.infer(&sample).unwrap();
+            assert_eq!(
+                memory::current_bytes(),
+                before,
+                "rep {rep}: tracked allocation in facade steady state"
+            );
+            assert_eq!(session.workspace_bytes(), engine.workspace_bytes());
+        }
+    });
+}
+
+#[test]
 fn planned_model_forward_does_not_grow_arena() {
     let mut m = two_conv_model();
     let ctx = ConvContext::default();
