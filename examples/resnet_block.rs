@@ -1,0 +1,105 @@
+//! A residual block through the graph IR — the topology the sequential
+//! `Vec<Layer>` API could never express: conv → {branch conv, identity}
+//! → Add → relu, planned and served through the `Engine` facade.
+//!
+//! Prints what the pass pipeline did (conv+bias+relu fusion, dead-node
+//! elimination has nothing to remove here) and the two memory figures
+//! of the liveness pass:
+//!
+//! * workspace arena — max over planned conv nodes (the paper's rule);
+//! * activation arena — max over *live sets*, not the sum of node
+//!   outputs, so the skip connection costs only what it keeps alive.
+//!
+//! ```text
+//! cargo run --release --example resnet_block
+//! ```
+
+use mec::bench::workload::{by_name, residual_block_model};
+use mec::engine::Engine;
+use mec::memory::measure_peak;
+use mec::tensor::{Nhwc, Tensor};
+use mec::util::stats::fmt_bytes;
+use mec::util::Rng;
+use std::time::Instant;
+
+fn main() {
+    // cv10 (28×28×128, 3×3) at scale 4 keeps the example quick while
+    // staying a real paper shape.
+    let w = by_name("cv10").unwrap();
+    let scale = 4;
+    let model = residual_block_model(&w, scale, 2017);
+    let (h, ww, c) = model.input_hwc;
+    let steps = model.exec().steps().len();
+    println!(
+        "residual block on {}: {}x{}x{} input, {} graph nodes -> {} steps after fusion",
+        w.name,
+        h,
+        ww,
+        c,
+        model.node_count(),
+        steps
+    );
+    assert_eq!(
+        model.node_count() - 1,
+        steps,
+        "conv+bias+relu fusion should absorb the trailing relu"
+    );
+
+    let batch = 2;
+    let engine = Engine::builder(model)
+        .pin_batch_sizes(&[batch])
+        .build()
+        .expect("residual graph builds");
+    for lp in engine.plan_report() {
+        println!(
+            "  conv node {}: {} ({} workspace)",
+            lp.layer,
+            lp.chosen.algo.name(),
+            fmt_bytes(lp.chosen.workspace_bytes)
+        );
+    }
+    let sum_of_outputs: usize = (0..engine.model().node_count())
+        .map(|i| engine.model().exec().shape_of(i).len() * batch * 4)
+        .sum();
+    println!(
+        "memory: workspace {} (max over convs) + activations {} (max live set; \
+         node outputs sum to {})",
+        fmt_bytes(engine.workspace_bytes()),
+        fmt_bytes(engine.activation_bytes()),
+        fmt_bytes(sum_of_outputs),
+    );
+    assert_eq!(
+        engine.activation_bytes(),
+        engine.model().max_live_bytes(batch),
+        "liveness packing must hit the max-live lower bound on the diamond"
+    );
+
+    let mut rng = Rng::new(7);
+    let input = Tensor::random(Nhwc::new(batch, h, ww, c), &mut rng);
+    // First pass grows the session's arenas (tracked)...
+    let (mut session, peak) = measure_peak(|| {
+        let mut s = engine.session();
+        s.infer_batch(&input).expect("input matches engine");
+        s
+    });
+    println!("first-pass tracked peak: {}", fmt_bytes(peak));
+    // ...steady state allocates nothing and the arenas never grow.
+    let (ws0, act0) = (session.workspace_bytes(), session.activation_bytes());
+    let reps = 10;
+    let t0 = Instant::now();
+    let mut out = None;
+    for _ in 0..reps {
+        out = Some(session.infer_batch(&input).expect("input matches engine"));
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / reps as f64;
+    assert_eq!(session.workspace_bytes(), ws0);
+    assert_eq!(session.activation_bytes(), act0);
+    let out = out.unwrap();
+    assert!(out.data().iter().all(|&v| v >= 0.0), "relu output");
+    println!(
+        "steady state: {:.2} ms / batch-{batch} pass, arenas fixed at {} + {}",
+        ns / 1e6,
+        fmt_bytes(ws0),
+        fmt_bytes(act0)
+    );
+}

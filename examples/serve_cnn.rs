@@ -49,9 +49,9 @@ fn main() -> Result<()> {
     {
         let model = engine.model();
         println!(
-            "model {:?}: {} layers / {} params; eval set: {} samples",
+            "model {:?}: {} nodes / {} params; eval set: {} samples",
             model.name,
-            model.layers.len(),
+            model.node_count(),
             model.param_count(),
             eval.len()
         );

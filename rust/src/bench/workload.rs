@@ -8,7 +8,7 @@
 //! `scale` lets the harness shrink channel counts uniformly when a quick
 //! run is wanted (`MEC_BENCH_SCALE`); shapes stay faithful at scale=1.
 
-use crate::model::{Layer, Model};
+use crate::model::{GraphBuilder, Layer, Model};
 use crate::tensor::{ConvShape, Kernel, KernelShape, Nhwc};
 use crate::util::Rng;
 
@@ -70,6 +70,45 @@ impl Workload {
             }],
         )
     }
+}
+
+/// A residual block over one paper workload: conv → relu → {3×3 branch
+/// conv, identity} → add → relu — the diamond topology the sequential
+/// model API could not express, with a fusable conv+relu pair on the
+/// trunk. Stride is forced to 1 and SAME padding applied so the skip
+/// connection's shapes line up. Used by the `resnet_block` example and
+/// the graph-IR tests.
+pub fn residual_block_model(w: &Workload, scale: usize, seed: u64) -> Model {
+    let sc = scale.max(1);
+    let ic = (w.ic / sc).max(1);
+    let kc = (w.kc / sc).max(1);
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new(w.name, (w.ih, w.iw, ic));
+    let x = b.input();
+    let trunk = b.conv(
+        x,
+        Kernel::random(KernelShape::new(3, 3, ic, kc), &mut rng),
+        vec![0.05; kc],
+        1,
+        1,
+        1,
+        1,
+    );
+    // Sole consumer of the trunk conv is this relu → the fusion pass
+    // absorbs it into the conv's bias epilogue.
+    let trunk = b.relu(trunk);
+    let branch = b.conv(
+        trunk,
+        Kernel::random(KernelShape::new(3, 3, kc, kc), &mut rng),
+        vec![0.0; kc],
+        1,
+        1,
+        1,
+        1,
+    );
+    let sum = b.add(&[branch, trunk]);
+    let out = b.relu(sum);
+    Model::from_graph(b.finish(out))
 }
 
 /// Paper Table 2: cv1–cv12.

@@ -211,10 +211,15 @@ impl ConvPlan for Im2colPlan {
                 gemm_prepacked_ex(a, pk, &mut c, self.ctx.threads);
             }
             PackedKernel::Q16 { packed, qk } => {
-                // Dynamic activation scale, then quantize-while-lowering
-                // into the halved i16 L and run the widening GEMM; the
-                // combined scale folds the Q15 product shift back out.
-                let qa = QParams::from_slice(input.data());
+                // Calibrated static activation scale when available (the
+                // serving fast path), dynamic abs-max otherwise; then
+                // quantize-while-lowering into the halved i16 L and run
+                // the widening GEMM; the combined scale folds the Q15
+                // product shift back out.
+                let qa = self
+                    .ctx
+                    .act_qparams
+                    .unwrap_or_else(|| QParams::from_slice(input.data()));
                 let slots = i16_slots(rows * row_len);
                 let l = &mut f32_as_i16_mut(&mut scratch[..slots])[..rows * row_len];
                 Im2col::lower_q16(&self.ctx, &s, input, qa, l);

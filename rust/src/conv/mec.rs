@@ -347,9 +347,14 @@ impl ConvPlan for MecPlan {
                 Solution::Auto => unreachable!("plan() always resolves the schedule"),
             },
             PackedKernel::Q16 { packed, qk } => {
-                // Dynamic activation scale; the combined dequant scale
-                // folds the Q15 product shift (2^15) back out.
-                let qa = QParams::from_slice(input.data());
+                // Activation scale: the calibrated static one when the
+                // plan was built from a calibrated model, else the
+                // dynamic per-execute abs-max; the combined dequant
+                // scale folds the Q15 product shift (2^15) back out.
+                let qa = self
+                    .ctx
+                    .act_qparams
+                    .unwrap_or_else(|| QParams::from_slice(input.data()));
                 let scale = qa.scale * qk.scale * 32768.0;
                 let l_slots = i16_slots(s.mec_lowered_elems());
                 match self.solution {

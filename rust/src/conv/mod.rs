@@ -67,6 +67,12 @@ pub struct ConvContext {
     /// Winograd/FFT have no q16 path, so the planner excludes them under
     /// `Q16` and falls back to the quantized GEMM family.
     pub precision: Precision,
+    /// Calibrated static activation scale for q16 plans. `None` (the
+    /// default) keeps the dynamic per-execute abs-max pass; `Some` bakes
+    /// the scale into the plan so serving skips that pass entirely. Set
+    /// per conv node by the model when the engine was built with a
+    /// calibration set; ignored under `F32`.
+    pub act_qparams: Option<QParams>,
 }
 
 impl Default for ConvContext {
@@ -77,6 +83,7 @@ impl Default for ConvContext {
             mec_t: 100,
             fft_cache_cap_bytes: 256 << 20,
             precision: Precision::F32,
+            act_qparams: None,
         }
     }
 }
@@ -107,6 +114,13 @@ impl ConvContext {
 
     pub fn with_precision(mut self, p: Precision) -> ConvContext {
         self.precision = p;
+        self
+    }
+
+    /// Bake a calibrated static activation scale into plans built under
+    /// this context (q16 serving skips the per-execute abs-max pass).
+    pub fn with_act_qparams(mut self, q: QParams) -> ConvContext {
+        self.act_qparams = Some(q);
         self
     }
 }

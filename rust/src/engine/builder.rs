@@ -9,12 +9,17 @@
 use super::{Engine, EngineError, LayerPlan};
 use crate::conv::{AlgoKind, ConvContext};
 use crate::memory::Budget;
-use crate::model::{load_mecw, Layer, Model};
+use crate::model::{load_mecw, EvalSet, Model};
 use crate::planner::{AutoTuner, Plan, Planner};
-use crate::tensor::Precision;
+use crate::tensor::quant::QParams;
+use crate::tensor::{Nhwc, Precision, Tensor};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+
+/// Cap on samples consumed from a calibration set: activation ranges
+/// stabilize quickly, and build time should not scale with eval size.
+const MAX_CALIBRATION_SAMPLES: usize = 256;
 
 /// Where [`Engine::builder`] gets its model: an in-memory [`Model`] or a
 /// `.mecw` path (loaded at `build()`, failures reported as
@@ -63,6 +68,7 @@ pub struct EngineBuilder {
     pinned: Vec<usize>,
     autotune: bool,
     overrides: Vec<(usize, AlgoKind)>,
+    calibration: Option<EvalSet>,
 }
 
 impl EngineBuilder {
@@ -75,6 +81,7 @@ impl EngineBuilder {
             pinned: vec![1],
             autotune: false,
             overrides: Vec::new(),
+            calibration: None,
         }
     }
 
@@ -119,11 +126,23 @@ impl EngineBuilder {
         self
     }
 
-    /// Force `algo` for conv layer `layer` (bench/bringup use). The
+    /// Force `algo` for conv node `layer` (bench/bringup use). The
     /// choice is validated up front: unsupported geometry/precision or a
     /// budget-exceeding workspace fails `build()` with a typed error.
     pub fn algo_override(mut self, layer: usize, algo: AlgoKind) -> EngineBuilder {
         self.overrides.push((layer, algo));
+        self
+    }
+
+    /// Calibrate static per-node activation scales from `eval` (the q16
+    /// follow-up from the roadmap): a q16 `build()` runs up to
+    /// [`MAX_CALIBRATION_SAMPLES`] samples through the planned model,
+    /// records each conv node's input abs-max, and rebuilds the plans
+    /// with the scale baked in — serving then skips the per-execute
+    /// abs-max pass. Uncalibrated engines (or f32 builds, where the
+    /// scale is meaningless) keep the dynamic fallback.
+    pub fn calibration(mut self, eval: EvalSet) -> EngineBuilder {
+        self.calibration = Some(eval);
         self
     }
 
@@ -174,11 +193,10 @@ impl EngineBuilder {
         // -- validate overrides -----------------------------------------
         let mut forced: HashMap<usize, AlgoKind> = HashMap::new();
         for (layer, algo) in &self.overrides {
-            let is_conv = matches!(model.layers.get(*layer), Some(Layer::Conv { .. }));
-            if !is_conv {
+            if !model.is_conv(*layer) {
                 return Err(EngineError::NotAConvLayer {
                     layer: *layer,
-                    n_layers: model.layers.len(),
+                    n_layers: model.node_count(),
                 });
             }
             if let Some(prev) = forced.insert(*layer, *algo) {
@@ -226,23 +244,106 @@ impl EngineBuilder {
                 chosen: picked,
                 candidates: planner.admissible(&cs, &self.budget, &ctx),
                 measurements,
+                act_qparams: None,
             });
+        }
+        // Every override must have reached the loop above: a conv node
+        // the pass pipeline eliminated as dead would otherwise pass
+        // `is_conv` yet silently never be validated or applied.
+        for (&layer, &algo) in &forced {
+            if !chosen.contains_key(&layer) {
+                return Err(EngineError::InvalidConfig(format!(
+                    "algo_override({layer}, {}) targets a conv node that is \
+                     unreachable from the graph output (dead code)",
+                    algo.name()
+                )));
+            }
         }
 
         // -- plan + prepack eagerly for every pinned batch --------------
         model.plan_with(&ctx, plan_batch, |i, _| chosen[&i]);
+
+        // -- calibration: static activation scales (q16 serving) --------
+        if let Some(eval) = &self.calibration {
+            if self.precision == Precision::Q16 {
+                let scales = calibrate(&model, &ctx, eval, plan_batch)?;
+                model.set_activation_qparams(scales);
+                // Rebuild the plans with the static scales baked in (the
+                // chosen algorithms are unchanged — only the epilogue
+                // scale moved from execute time to plan time).
+                model.plan_with(&ctx, plan_batch, |i, _| chosen[&i]);
+                for lp in &mut report {
+                    lp.act_qparams = model.activation_qparams(lp.layer);
+                }
+            }
+        }
+
         let mut ws_elems = model.planned_workspace_elems();
         for &b in pinned.iter().filter(|&&b| b != plan_batch) {
             ws_elems = ws_elems.max(model.prepare_batch(b));
         }
+        // Activation slots scale linearly with the batch dim, so sizing
+        // at the largest pinned batch covers every smaller one.
+        let max_batch = *pinned.last().expect("pinned is non-empty");
+        let act_slots: Vec<usize> = model
+            .exec()
+            .slot_elems()
+            .iter()
+            .map(|e| e * max_batch)
+            .collect();
 
         Ok(Engine {
             model: Arc::new(model),
             ctx,
             budget: self.budget,
             ws_elems,
+            act_slots,
             pinned,
             report,
         })
     }
+}
+
+/// Run up to [`MAX_CALIBRATION_SAMPLES`] eval samples through the
+/// planned model, recording each conv node's input abs-max — exactly
+/// the quantity the dynamic q16 path computes per execute.
+fn calibrate(
+    model: &Model,
+    ctx: &ConvContext,
+    eval: &EvalSet,
+    batch: usize,
+) -> Result<HashMap<usize, QParams>, EngineError> {
+    let (h, w, c) = model.input_hwc;
+    if (eval.h, eval.w, eval.c) != (h, w, c) {
+        return Err(EngineError::InvalidConfig(format!(
+            "calibration samples are {}x{}x{}, engine input is {h}x{w}x{c}",
+            eval.h, eval.w, eval.c
+        )));
+    }
+    if eval.is_empty() {
+        return Err(EngineError::InvalidConfig(
+            "calibration set is empty".into(),
+        ));
+    }
+    let cap = eval.len().min(MAX_CALIBRATION_SAMPLES);
+    let mut maxima: HashMap<usize, f32> = HashMap::new();
+    let mut ws = model.sized_arena();
+    let mut acts = model.sized_activation_arena(batch);
+    for chunk in eval.samples[..cap].chunks(batch.max(1)) {
+        let n = chunk.len();
+        let mut data = Vec::with_capacity(n * h * w * c);
+        for s in chunk {
+            data.extend_from_slice(s);
+        }
+        let input = Tensor::from_vec(Nhwc::new(n, h, w, c), data);
+        model.forward_observing(ctx, &input, &mut ws, &mut acts, &mut |node, t| {
+            let m = t.data().iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let e = maxima.entry(node).or_insert(0.0);
+            *e = e.max(m);
+        });
+    }
+    Ok(maxima
+        .into_iter()
+        .map(|(node, m)| (node, QParams::from_abs_max(m)))
+        .collect())
 }

@@ -47,15 +47,17 @@ use crate::conv::{AlgoKind, ConvContext};
 use crate::memory::Budget;
 use crate::model::Model;
 use crate::planner::{Measurement, Plan};
+use crate::tensor::quant::QParams;
 use crate::tensor::ConvShape;
 use std::sync::Arc;
 
-/// One conv layer's planning outcome, recorded by
+/// One conv node's planning outcome, recorded by
 /// [`EngineBuilder::build`] — what the CLI `plan`/`tune` subcommands and
 /// the examples print.
 #[derive(Debug, Clone)]
 pub struct LayerPlan {
-    /// Layer index in the model graph.
+    /// Node id in the model graph (equals the historical layer index
+    /// for sequential models).
     pub layer: usize,
     /// Exact batched geometry the choice was made on (largest pinned
     /// batch, padding applied).
@@ -67,8 +69,11 @@ pub struct LayerPlan {
     /// cost-model estimates.
     pub candidates: Vec<Plan>,
     /// Per-candidate measurements when `.autotune(true)` built this
-    /// layer (`None` for cost-model or overridden layers).
+    /// node (`None` for cost-model or overridden nodes).
     pub measurements: Option<Vec<Measurement>>,
+    /// Calibrated static activation scale (q16 engines built with a
+    /// [`EngineBuilder::calibration`] set); `None` → dynamic abs-max.
+    pub act_qparams: Option<QParams>,
 }
 
 /// An immutable, fully-planned inference engine. Build with
@@ -77,9 +82,12 @@ pub struct Engine {
     model: Arc<Model>,
     ctx: ConvContext,
     budget: Budget,
-    /// Arena floats a session needs: max over conv layers and pinned
+    /// Arena floats a session needs: max over conv nodes and pinned
     /// batch sizes.
     ws_elems: usize,
+    /// Activation-slot floats per session (liveness plan at the largest
+    /// pinned batch).
+    act_slots: Vec<usize>,
     pinned: Vec<usize>,
     report: Vec<LayerPlan>,
 }
@@ -91,11 +99,16 @@ impl Engine {
         EngineBuilder::new(model_or_path.into())
     }
 
-    /// A new per-thread session: its arena is pre-sized to this engine's
-    /// workspace requirement, its plan memo starts empty and warms on
-    /// first use.
+    /// A new per-thread session: its workspace arena and activation
+    /// slots are pre-sized to this engine's requirements, its plan memo
+    /// starts empty and warms on first use.
     pub fn session(&self) -> Session {
-        Session::new(Arc::clone(&self.model), self.ctx.clone(), self.ws_elems)
+        Session::new(
+            Arc::clone(&self.model),
+            self.ctx.clone(),
+            self.ws_elems,
+            &self.act_slots,
+        )
     }
 
     /// The planned model (read-only; shared by every session).
@@ -132,6 +145,13 @@ impl Engine {
     /// Same in bytes.
     pub fn workspace_bytes(&self) -> usize {
         self.ws_elems * std::mem::size_of::<f32>()
+    }
+
+    /// Activation-arena bytes each session is pre-sized to (Σ liveness
+    /// slots at the largest pinned batch — max over live sets, not sum
+    /// over node outputs).
+    pub fn activation_bytes(&self) -> usize {
+        self.act_slots.iter().sum::<usize>() * std::mem::size_of::<f32>()
     }
 
     /// Per-layer planning outcomes recorded at build time.

@@ -10,7 +10,7 @@
 
 use super::EngineError;
 use crate::conv::ConvContext;
-use crate::memory::Arena;
+use crate::memory::{ActivationArena, Arena};
 use crate::model::{Model, PlanMemo};
 use crate::tensor::{Nhwc, Tensor};
 use std::sync::Arc;
@@ -48,17 +48,27 @@ pub struct Session {
     model: Arc<Model>,
     ctx: ConvContext,
     arena: Arena,
+    /// Activation slots from the graph's liveness plan, pre-sized by the
+    /// engine to the largest pinned batch — the counterpart of the
+    /// workspace arena for everything that is *not* a lowering buffer.
+    acts: ActivationArena,
     memo: PlanMemo,
     input_hwc: (usize, usize, usize),
 }
 
 impl Session {
-    pub(crate) fn new(model: Arc<Model>, ctx: ConvContext, ws_elems: usize) -> Session {
+    pub(crate) fn new(
+        model: Arc<Model>,
+        ctx: ConvContext,
+        ws_elems: usize,
+        act_slots: &[usize],
+    ) -> Session {
         let input_hwc = model.input_hwc;
         Session {
             model,
             ctx,
             arena: Arena::with_capacity(ws_elems),
+            acts: ActivationArena::with_slots(act_slots),
             memo: PlanMemo::new(),
             input_hwc,
         }
@@ -75,9 +85,13 @@ impl Session {
             });
         }
         let input = Tensor::from_vec(Nhwc::new(1, h, w, c), sample.to_vec());
-        let out = self
-            .model
-            .forward_memo(&self.ctx, &input, &mut self.arena, &mut self.memo);
+        let out = self.model.forward_with(
+            &self.ctx,
+            &input,
+            &mut self.arena,
+            &mut self.acts,
+            Some(&mut self.memo),
+        );
         Ok(Prediction::from_scores(out.into_vec()))
     }
 
@@ -91,9 +105,13 @@ impl Session {
                 got: (sh.h, sh.w, sh.c),
             });
         }
-        Ok(self
-            .model
-            .forward_memo(&self.ctx, batch, &mut self.arena, &mut self.memo))
+        Ok(self.model.forward_with(
+            &self.ctx,
+            batch,
+            &mut self.arena,
+            &mut self.acts,
+            Some(&mut self.memo),
+        ))
     }
 
     /// [`Session::infer_batch`] plus per-sample argmax — what the
@@ -115,6 +133,13 @@ impl Session {
     /// and never grows in steady state.
     pub fn workspace_bytes(&self) -> usize {
         self.arena.bytes()
+    }
+
+    /// Current activation-arena footprint (Σ liveness slots at the
+    /// largest batch seen) — never grows past the engine's sizing in
+    /// steady state.
+    pub fn activation_bytes(&self) -> usize {
+        self.acts.bytes()
     }
 
     /// Plans memoized locally so far (observability for the lock-free

@@ -10,8 +10,12 @@
 //!   [`conv::fft_conv`]; with exact memory-overhead accounting
 //!   ([`memory`]) matching the paper's Eq. (2)/(3)/(4).
 //! * **Planner + model** — workspace-budgeted algorithm selection
-//!   ([`planner`]), a layer-graph CNN executor ([`model`]) that loads
-//!   weights trained by the build-time JAX pipeline.
+//!   ([`planner`]), and a graph-IR CNN executor ([`model`]): a DAG of
+//!   ops (residual/branching topologies included) compiled through a
+//!   pass pipeline — shape inference, conv+bias+relu fusion, dead-node
+//!   elimination, and a liveness pass that packs activations into
+//!   arena slots at max-live-set footprint — loading weights trained by
+//!   the build-time JAX pipeline.
 //! * **Coordinator + runtime** — an inference-serving front end
 //!   ([`coordinator`]: queue, dynamic batcher, workers, metrics) and a
 //!   PJRT path ([`runtime`]) that executes the AOT-lowered JAX/Pallas

@@ -277,9 +277,9 @@ fn cmd_serve(args: &mut Args) {
         });
     let model = engine.model();
     println!(
-        "model {:?}: {} layers, {} params, plans: {:?}",
+        "model {:?}: {} nodes, {} params, plans: {:?}",
         model.name,
-        model.layers.len(),
+        model.node_count(),
         model.param_count(),
         engine
             .plan_summary()

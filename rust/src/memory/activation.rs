@@ -1,0 +1,133 @@
+//! [`ActivationArena`] — the activation side of the shared-memory story.
+//!
+//! The workspace [`Arena`](super::Arena) gives every planned conv layer
+//! one reusable scratch buffer sized at the max over layers. Activations
+//! get the same treatment from the graph IR's liveness pass
+//! (`model::graph_ir`): every intermediate value is assigned a **slot**
+//! by interval coloring, so the arena holds max-live-set bytes — not the
+//! sum of node outputs — and the serving hot path performs zero tracked
+//! allocation once a batch size has been seen.
+//!
+//! Slots are `Vec<f32>` buffers so the executor can move them into
+//! [`Tensor`](crate::tensor::Tensor)s and back without copying (the conv
+//! plans execute on tensors, not raw slices). Growth is recorded in the
+//! global [`tracker`](super::tracker), exactly like the workspace arena,
+//! so tests can assert the measured activation peak equals the liveness
+//! plan's analytic figure.
+
+use super::tracker;
+
+/// A tracked set of reusable activation slots, owned by whoever runs
+/// forwards (a `Session`, an executor, a test). Capacity only grows.
+#[derive(Debug, Default)]
+pub struct ActivationArena {
+    slots: Vec<Vec<f32>>,
+    /// Tracked capacity (floats) per slot — kept outside the Vecs so a
+    /// taken (empty) slot still accounts for its buffer.
+    caps: Vec<usize>,
+}
+
+impl ActivationArena {
+    /// Empty arena (no tracked bytes).
+    pub fn new() -> ActivationArena {
+        ActivationArena::default()
+    }
+
+    /// Arena pre-sized to the per-slot float counts `elems` (what an
+    /// engine sizes sessions with at build time).
+    pub fn with_slots(elems: &[usize]) -> ActivationArena {
+        let mut a = ActivationArena::new();
+        for (i, &e) in elems.iter().enumerate() {
+            a.ensure(i, e);
+        }
+        a
+    }
+
+    /// Number of slots seen so far.
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Ensure slot `slot` exists with capacity for `elems` floats,
+    /// growing (and recording) if needed. Never shrinks.
+    pub fn ensure(&mut self, slot: usize, elems: usize) {
+        while self.slots.len() <= slot {
+            self.slots.push(Vec::new());
+            self.caps.push(0);
+        }
+        if elems > self.caps[slot] {
+            let grow = elems - self.caps[slot];
+            tracker::track_alloc(grow * 4);
+            self.slots[slot].reserve_exact(elems - self.slots[slot].len());
+            self.caps[slot] = elems;
+        }
+    }
+
+    /// Move slot `slot`'s buffer out (zero-copy). Must be paired with
+    /// [`ActivationArena::put`]; the slot accounts for its capacity even
+    /// while taken.
+    pub fn take(&mut self, slot: usize) -> Vec<f32> {
+        std::mem::take(&mut self.slots[slot])
+    }
+
+    /// Return a buffer taken from `slot`. If an op grew it beyond the
+    /// reserved capacity (it should not), the growth is recorded.
+    pub fn put(&mut self, slot: usize, buf: Vec<f32>) {
+        if buf.capacity() > self.caps[slot] {
+            tracker::track_alloc((buf.capacity() - self.caps[slot]) * 4);
+            self.caps[slot] = buf.capacity();
+        }
+        self.slots[slot] = buf;
+    }
+
+    /// Read-only view of a slot's current contents.
+    pub fn data(&self, slot: usize) -> &[f32] {
+        &self.slots[slot]
+    }
+
+    /// Tracked footprint in bytes (Σ slot capacities) — the quantity the
+    /// arena-peak tests compare to the liveness plan's max live set.
+    pub fn bytes(&self) -> usize {
+        self.caps.iter().sum::<usize>() * 4
+    }
+}
+
+impl Drop for ActivationArena {
+    fn drop(&mut self) {
+        tracker::track_free(self.caps.iter().sum::<usize>() * 4);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::current_bytes;
+
+    #[test]
+    fn tracks_growth_take_put_and_release() {
+        let before = current_bytes();
+        {
+            let mut a = ActivationArena::new();
+            a.ensure(0, 10);
+            a.ensure(1, 5);
+            assert_eq!(a.bytes(), 60);
+            assert_eq!(current_bytes(), before + 60);
+            a.ensure(0, 8); // never shrinks
+            assert_eq!(a.bytes(), 60);
+            let mut v = a.take(0);
+            assert_eq!(current_bytes(), before + 60, "taken slot still tracked");
+            v.resize(10, 1.0);
+            a.put(0, v);
+            assert_eq!(a.data(0), &[1.0; 10]);
+            assert_eq!(a.bytes(), 60);
+        }
+        assert_eq!(current_bytes(), before, "drop releases tracked bytes");
+    }
+
+    #[test]
+    fn with_slots_presizes() {
+        let a = ActivationArena::with_slots(&[4, 0, 2]);
+        assert_eq!(a.slot_count(), 3);
+        assert_eq!(a.bytes(), 24);
+    }
+}

@@ -18,9 +18,11 @@
 //! * [`Budget`] — an enforced cap used by the planner to reject algorithms
 //!   whose workspace would exceed the device budget.
 
+pub mod activation;
 pub mod arena;
 pub mod tracker;
 
+pub use activation::ActivationArena;
 pub use arena::{Arena, Region, WorkspaceLayout};
 pub use tracker::{current_bytes, peak_bytes, MeasureScope};
 

@@ -1,80 +1,93 @@
-//! The model graph + forward executor.
+//! The model — a compiled graph IR plus the per-node conv planning
+//! machinery and forward executors.
 //!
-//! Convolutions are planned per layer (once, at load): the
-//! [`Planner`](crate::planner::Planner) picks the algorithm under the
-//! device [`Budget`], then [`Convolution::plan`] prepacks the layer's
-//! kernel and fixes its [`WorkspaceLayout`](crate::memory::WorkspaceLayout). The resulting
+//! The model core is a [`Graph`] (see [`graph_ir`](crate::model::graph_ir)):
+//! a DAG of `NodeId`-addressed ops compiled once through the pass
+//! pipeline (shape inference → conv+bias+relu fusion → dead-node
+//! elimination → liveness). Convolutions are planned per node (once, at
+//! load): the [`Planner`](crate::planner::Planner) picks the algorithm
+//! under the device [`Budget`], then [`Convolution::plan`] prepacks the
+//! node's kernel and fixes its
+//! [`WorkspaceLayout`](crate::memory::WorkspaceLayout). The resulting
 //! [`ConvPlan`]s are held by the model and reused for every request —
 //! the hot path performs no kernel repacking, no filter transforms, and
-//! no workspace allocation: all layers execute out of one shared
-//! [`Arena`] sized at the **max** (not the sum) of the per-layer
-//! workspaces.
+//! no allocation at all once a batch size has been seen: workspaces come
+//! from one shared [`Arena`] sized at the **max** (not the sum) of the
+//! per-node workspaces, and activations come from an
+//! [`ActivationArena`] whose slots the liveness pass sized at the max
+//! over live sets (not the sum over node outputs).
 //!
 //! Dynamic batching can present batch sizes other than the planned one;
 //! plans for those geometries are built lazily on first sight and cached
 //! (cuDNN-graph style: one executable per shape).
 
 use crate::conv::{AlgoKind, ConvContext, ConvPlan, Convolution, KernelPrepack};
-use crate::gemm::{gemm_ex, MatMut, MatRef};
-use crate::memory::{Arena, Budget};
+use crate::memory::{ActivationArena, Arena, Budget};
+use crate::model::graph_ir::{ExecGraph, Graph, NodeId, Op};
 use crate::model::layer::Layer;
 use crate::planner::Planner;
-use crate::tensor::{ConvShape, Nhwc, Precision, Tensor};
+use crate::tensor::quant::QParams;
+use crate::tensor::{ConvShape, Kernel, Nhwc, Precision, Tensor};
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
 
-/// A sequential CNN with planned convolution algorithms and prepacked
-/// per-layer [`ConvPlan`]s.
+/// A CNN over a compiled [`Graph`] with planned convolution algorithms
+/// and prepacked per-node [`ConvPlan`]s.
 pub struct Model {
     pub name: String,
     /// Spatial input shape per sample (h, w, c); batch dim comes from the
     /// request.
     pub input_hwc: (usize, usize, usize),
-    pub layers: Vec<Layer>,
-    /// Chosen conv algorithm per layer index (None for non-conv layers).
+    graph: Graph,
+    /// The compiled pass-pipeline output: step list + activation slots.
+    exec: ExecGraph,
+    /// Chosen conv algorithm per node id (None for non-conv nodes).
     plans: Vec<Option<AlgoKind>>,
-    /// Prepared plans keyed by (layer index, exact conv geometry, build
+    /// Prepared plans keyed by (node id, exact conv geometry, build
     /// precision). The planned batch size is populated eagerly by
     /// [`Model::plan`]; other batch sizes (dynamic batching remainders)
     /// fill in lazily. Precision is in the key because a pinned/unplanned
     /// model builds under the caller's context: a q16 forward must never
-    /// hand back an f32-planned layer or vice versa.
-    plan_cache: RwLock<HashMap<(usize, ConvShape, Precision), Arc<dyn ConvPlan>>>,
+    /// hand back an f32-planned node or vice versa.
+    plan_cache: RwLock<HashMap<(NodeId, ConvShape, Precision), Arc<dyn ConvPlan>>>,
     /// Batch-independent kernel-side prepacks (PackedKernel, Winograd U,
-    /// FFT spectra), keyed by (layer index, algorithm, build precision):
-    /// built once per layer and `Arc`-shared into every per-batch-size
-    /// plan above, so dynamic batching stops duplicating prepacked
-    /// weights per cached geometry.
-    prepack_cache: RwLock<HashMap<(usize, AlgoKind, Precision), Arc<dyn KernelPrepack>>>,
+    /// FFT spectra), keyed by (node id, algorithm, build precision):
+    /// built once per conv node and `Arc`-shared into every
+    /// per-batch-size plan above.
+    prepack_cache: RwLock<HashMap<(NodeId, AlgoKind, Precision), Arc<dyn KernelPrepack>>>,
     /// Shared-arena requirement at the planned batch: max over planned
-    /// conv layers of `ConvPlan::workspace_elems`.
+    /// conv nodes of `ConvPlan::workspace_elems`.
     planned_ws_elems: usize,
     /// The context [`Model::plan`] ran under. Lazily-built plans (other
-    /// batch sizes) reuse it, so every conv layer executes under ONE
+    /// batch sizes) reuse it, so every conv node executes under ONE
     /// consistent context regardless of batch size; `forward`'s ctx then
-    /// only affects non-conv layers. `None` until planned (or after
+    /// only affects non-conv ops. `None` until planned (or after
     /// `pin_algo`): plans build under the caller's forward context.
     planned_ctx: Option<ConvContext>,
+    /// Calibrated static activation scales per conv node (q16 serving).
+    /// When present, the node's plans are built with the scale baked in,
+    /// so execute skips the per-call abs-max pass; absent → dynamic.
+    act_qparams: HashMap<NodeId, QParams>,
 }
 
-/// Cap on cached geometries per conv layer: the planned batch size plus
+/// Cap on cached geometries per conv node: the planned batch size plus
 /// a handful of dynamic-batching remainders. Beyond this, plans for
 /// unusual batch sizes are built transiently (executed, not cached) so
 /// serving memory stays bounded — each cached plan holds its own
 /// prepacked kernel operands.
 pub const MAX_CACHED_GEOMETRIES_PER_LAYER: usize = 8;
 
-/// A session-local memo of resolved `(layer, geometry, precision) →
+/// A session-local memo of resolved `(node, geometry, precision) →
 /// plan` bindings. The model's own plan cache sits behind an `RwLock`
 /// (it is shared by every session); a memo in front of it makes a
 /// session's steady-state forward lock-free — after the first pass at a
 /// batch size, every lookup is a plain `HashMap` hit on thread-owned
 /// state. Keyed by the same build precision as the model cache, so a
 /// memo reused across contexts can never hand a q16-packed plan to an
-/// f32 forward (or vice versa); bounded per layer like the model cache.
+/// f32 forward (or vice versa); bounded per node like the model cache.
 #[derive(Default)]
 pub struct PlanMemo {
-    map: HashMap<(usize, ConvShape, Precision), Arc<dyn ConvPlan>>,
+    map: HashMap<(NodeId, ConvShape, Precision), Arc<dyn ConvPlan>>,
 }
 
 impl PlanMemo {
@@ -82,7 +95,7 @@ impl PlanMemo {
         PlanMemo::default()
     }
 
-    /// Number of memoized (layer, geometry) plan bindings.
+    /// Number of memoized (node, geometry) plan bindings.
     pub fn len(&self) -> usize {
         self.map.len()
     }
@@ -93,29 +106,64 @@ impl PlanMemo {
 }
 
 impl Model {
+    /// Compatibility constructor: a sequential chain of `layers` (the
+    /// historical `Vec<Layer>` API) — node ids equal layer indices.
     pub fn new(name: &str, input_hwc: (usize, usize, usize), layers: Vec<Layer>) -> Model {
-        let plans = vec![None; layers.len()];
+        Model::from_graph(Graph::sequential(name, input_hwc, layers))
+    }
+
+    /// The real constructor: compile `graph` through the pass pipeline
+    /// (shape inference validates every edge; fusion, DCE and the
+    /// liveness pass fix the execution schedule and activation slots).
+    pub fn from_graph(graph: Graph) -> Model {
+        let exec = graph.compile();
+        let plans = vec![None; graph.node_count()];
         Model {
-            name: name.to_string(),
-            input_hwc,
-            layers,
+            name: graph.name.clone(),
+            input_hwc: graph.input_hwc,
+            graph,
+            exec,
             plans,
             plan_cache: RwLock::new(HashMap::new()),
             prepack_cache: RwLock::new(HashMap::new()),
             planned_ws_elems: 0,
             planned_ctx: None,
+            act_qparams: HashMap::new(),
         }
     }
 
-    /// Validate layer chaining by propagating a batch-1 shape; returns
-    /// the final output shape.
-    pub fn validate(&self) -> Nhwc {
-        let (h, w, c) = self.input_hwc;
-        let mut shape = Nhwc::new(1, h, w, c);
-        for layer in &self.layers {
-            shape = layer.output_shape(shape);
+    /// The underlying graph IR (read-only).
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// The compiled execution schedule + activation-slot plan.
+    pub fn exec(&self) -> &ExecGraph {
+        &self.exec
+    }
+
+    /// Number of nodes in the graph (the historical "layer count").
+    pub fn node_count(&self) -> usize {
+        self.graph.node_count()
+    }
+
+    /// Whether node `id` is a convolution (planner/override targets).
+    pub fn is_conv(&self, id: NodeId) -> bool {
+        id < self.graph.node_count()
+            && matches!(self.graph.node(id).op, Op::Layer(Layer::Conv { .. }))
+    }
+
+    fn conv_kernel(&self, id: NodeId) -> &Kernel {
+        match &self.graph.node(id).op {
+            Op::Layer(Layer::Conv { kernel, .. }) => kernel,
+            other => panic!("node {id} is {}, not a conv", other.kind()),
         }
-        shape
+    }
+
+    /// Validate the graph by propagating a batch-1 shape; returns the
+    /// final output shape.
+    pub fn validate(&self) -> Nhwc {
+        self.graph.validate()
     }
 
     /// Output features per sample.
@@ -125,99 +173,107 @@ impl Model {
     }
 
     pub fn param_count(&self) -> usize {
-        self.layers.iter().map(|l| l.param_count()).sum()
+        self.graph.param_count()
     }
 
-    /// The exact conv geometry of every conv layer at batch size `batch`
-    /// (padding applied), in layer order: what the planner/engine choose
-    /// algorithms on. Non-conv layers are skipped.
-    pub fn conv_shapes(&self, batch: usize) -> Vec<(usize, ConvShape)> {
-        let (h, w, c) = self.input_hwc;
-        let mut shape = Nhwc::new(batch.max(1), h, w, c);
-        let mut out = Vec::new();
-        for (i, layer) in self.layers.iter().enumerate() {
-            if let Layer::Conv {
-                kernel, sh, sw, ph, pw, ..
-            } = layer
-            {
-                let padded = Nhwc::new(shape.n, shape.h + 2 * ph, shape.w + 2 * pw, shape.c);
-                out.push((i, ConvShape::new(padded, kernel.shape(), *sh, *sw)));
-            }
-            shape = layer.output_shape(shape);
-        }
-        out
+    /// The exact conv geometry of every compiled conv node at batch size
+    /// `batch` (padding applied), in execution order: what the
+    /// planner/engine choose algorithms on. Non-conv nodes are skipped.
+    pub fn conv_shapes(&self, batch: usize) -> Vec<(NodeId, ConvShape)> {
+        self.exec.conv_shapes(&self.graph, batch)
     }
 
-    /// Plan every conv layer under `budget` for batch size `batch`: the
+    /// Plan every conv node under `budget` for batch size `batch`: the
     /// planner picks the algorithm on the true batched geometry, then the
-    /// algorithm prepacks the layer's kernel into a reusable
-    /// [`ConvPlan`]. Also sizes the shared arena (max over layers).
+    /// algorithm prepacks the node's kernel into a reusable
+    /// [`ConvPlan`]. Also sizes the shared arena (max over nodes).
     pub fn plan(&mut self, planner: &Planner, budget: &Budget, ctx: &ConvContext, batch: usize) {
         self.plan_with(ctx, batch, |_, cs| planner.plan(cs, budget, ctx).algo);
     }
 
     /// [`Model::plan`] with the algorithm choice delegated to `choose`
-    /// (layer index + exact batched geometry → algorithm). This is the
+    /// (node id + exact batched geometry → algorithm). This is the
     /// engine builder's entry point: the choice may come from the cost
-    /// model, the autotuner, or a validated per-layer override — the
+    /// model, the autotuner, or a validated per-node override — the
     /// prepack/plan/arena machinery is identical either way.
     pub fn plan_with(
         &mut self,
         ctx: &ConvContext,
         batch: usize,
-        mut choose: impl FnMut(usize, &ConvShape) -> AlgoKind,
+        mut choose: impl FnMut(NodeId, &ConvShape) -> AlgoKind,
     ) {
         self.plan_cache.write().unwrap().clear();
         self.prepack_cache.write().unwrap().clear();
         self.planned_ws_elems = 0;
         self.planned_ctx = Some(ctx.clone());
-        let (h, w, c) = self.input_hwc;
-        let mut shape = Nhwc::new(batch.max(1), h, w, c);
+        // Reset stale choices (e.g. a previous pin) so the summary only
+        // ever reports what this planning round actually chose.
+        self.plans = vec![None; self.graph.node_count()];
         let mut max_ws = 0usize;
-        let mut prepared: Vec<((usize, ConvShape, Precision), Arc<dyn ConvPlan>)> = Vec::new();
-        let mut prepacks: Vec<((usize, AlgoKind, Precision), Arc<dyn KernelPrepack>)> = Vec::new();
-        for (i, layer) in self.layers.iter().enumerate() {
-            if let Layer::Conv {
-                kernel, sh, sw, ph, pw, ..
-            } = layer
-            {
-                let padded = Nhwc::new(shape.n, shape.h + 2 * ph, shape.w + 2 * pw, shape.c);
-                let cs = ConvShape::new(padded, kernel.shape(), *sh, *sw);
-                let chosen = choose(i, &cs);
-                self.plans[i] = Some(chosen);
-                let algo_impl = chosen.build();
-                // One batch-independent prepack per layer; every batch
-                // size this layer ever plans for shares it.
-                let pk = algo_impl.prepack(ctx, &cs, kernel);
-                let conv_plan: Arc<dyn ConvPlan> =
-                    Arc::from(algo_impl.plan_shared(ctx, &cs, Arc::clone(&pk)));
-                max_ws = max_ws.max(conv_plan.workspace_elems());
-                prepared.push(((i, cs, ctx.precision), conv_plan));
-                prepacks.push(((i, chosen, ctx.precision), pk));
-            }
-            shape = layer.output_shape(shape);
+        let mut prepared: Vec<((NodeId, ConvShape, Precision), Arc<dyn ConvPlan>)> = Vec::new();
+        let mut prepacks: Vec<((NodeId, AlgoKind, Precision), Arc<dyn KernelPrepack>)> = Vec::new();
+        for (i, cs) in self.conv_shapes(batch) {
+            let chosen = choose(i, &cs);
+            self.plans[i] = Some(chosen);
+            let kernel = self.conv_kernel(i);
+            let algo_impl = chosen.build();
+            let node_ctx = self.node_ctx(i, ctx);
+            // One batch-independent prepack per node; every batch size
+            // this node ever plans for shares it.
+            let pk = algo_impl.prepack(&node_ctx, &cs, kernel);
+            let conv_plan: Arc<dyn ConvPlan> =
+                Arc::from(algo_impl.plan_shared(&node_ctx, &cs, Arc::clone(&pk)));
+            max_ws = max_ws.max(conv_plan.workspace_elems());
+            prepared.push(((i, cs, ctx.precision), conv_plan));
+            prepacks.push(((i, chosen, ctx.precision), pk));
         }
         self.plan_cache.write().unwrap().extend(prepared);
         self.prepack_cache.write().unwrap().extend(prepacks);
         self.planned_ws_elems = max_ws;
     }
 
-    /// Pin a single algorithm for all conv layers (benchmark mode).
-    /// Invalidates any prepared plans; they rebuild lazily.
+    /// Pin a single algorithm for all compiled (live) conv nodes
+    /// (benchmark mode). Invalidates any prepared plans; they rebuild
+    /// lazily.
     pub fn pin_algo(&mut self, algo: AlgoKind) {
         self.plan_cache.write().unwrap().clear();
         self.prepack_cache.write().unwrap().clear();
         self.planned_ws_elems = 0;
         self.planned_ctx = None;
-        for (i, layer) in self.layers.iter().enumerate() {
-            if matches!(layer, Layer::Conv { .. }) {
-                self.plans[i] = Some(algo);
+        self.plans = vec![None; self.graph.node_count()];
+        for step in self.exec.steps() {
+            if matches!(self.graph.node(step.node).op, Op::Layer(Layer::Conv { .. })) {
+                self.plans[step.node] = Some(algo);
             }
         }
     }
 
-    /// Chosen algorithm per conv layer (for reports).
-    pub fn plan_summary(&self) -> Vec<(usize, AlgoKind)> {
+    /// Install calibrated per-node activation scales (q16 serving): the
+    /// plans rebuild with the static scale baked in, so execute skips
+    /// the per-call abs-max pass. Clears prepared plans — callers replan
+    /// (the engine builder does) or let them rebuild lazily.
+    pub fn set_activation_qparams(&mut self, qparams: HashMap<NodeId, QParams>) {
+        self.plan_cache.write().unwrap().clear();
+        self.prepack_cache.write().unwrap().clear();
+        self.act_qparams = qparams;
+    }
+
+    /// The calibrated activation scale for conv node `id`, if any.
+    pub fn activation_qparams(&self, id: NodeId) -> Option<QParams> {
+        self.act_qparams.get(&id).copied()
+    }
+
+    /// The context plans for node `id` build under: the planning (or
+    /// caller) context plus the node's calibrated activation scale.
+    fn node_ctx(&self, id: NodeId, base: &ConvContext) -> ConvContext {
+        match self.act_qparams.get(&id) {
+            Some(q) => base.clone().with_act_qparams(*q),
+            None => base.clone(),
+        }
+    }
+
+    /// Chosen algorithm per conv node (for reports).
+    pub fn plan_summary(&self) -> Vec<(NodeId, AlgoKind)> {
         self.plans
             .iter()
             .enumerate()
@@ -225,11 +281,11 @@ impl Model {
             .collect()
     }
 
-    /// Workspace bytes per prepared conv layer (layer index, bytes) —
+    /// Workspace bytes per prepared conv node (node id, bytes) —
     /// the quantities whose **max** sizes the shared arena.
-    pub fn planned_layer_workspaces(&self) -> Vec<(usize, usize)> {
+    pub fn planned_layer_workspaces(&self) -> Vec<(NodeId, usize)> {
         let cache = self.plan_cache.read().unwrap();
-        let mut out: Vec<(usize, usize)> = cache
+        let mut out: Vec<(NodeId, usize)> = cache
             .iter()
             .map(|((i, _, _), p)| (*i, p.workspace_bytes()))
             .collect();
@@ -248,16 +304,41 @@ impl Model {
         self.planned_ws_elems * std::mem::size_of::<f32>()
     }
 
-    /// An [`Arena`] pre-sized for this model's planned layers — what each
-    /// serving worker owns. Peak tracked bytes of a forward pass through
-    /// it equal the max (not the sum) of per-layer workspaces.
+    /// An [`Arena`] pre-sized for this model's planned conv nodes — what
+    /// each serving worker owns. Peak tracked bytes of the workspace side
+    /// of a forward pass equal the max (not the sum) of per-node
+    /// workspaces.
     pub fn sized_arena(&self) -> Arena {
         Arena::with_capacity(self.planned_ws_elems)
     }
 
-    /// Eagerly build (and cache) every conv layer's plan for batch size
-    /// `batch`, sharing the per-layer kernel prepacks already in the
-    /// cache. Returns the max workspace elems over conv layers at that
+    /// Activation-arena floats the liveness plan needs at `batch`
+    /// (Σ over slots; slots scale linearly with the batch dim).
+    pub fn activation_elems(&self, batch: usize) -> usize {
+        self.exec.arena_elems(batch)
+    }
+
+    /// Same in bytes.
+    pub fn activation_bytes(&self, batch: usize) -> usize {
+        self.activation_elems(batch) * std::mem::size_of::<f32>()
+    }
+
+    /// The liveness plan's max live-set bytes at `batch` — the analytic
+    /// lower bound the slot packing is asserted against (diamond test).
+    pub fn max_live_bytes(&self, batch: usize) -> usize {
+        self.exec.max_live_elems(batch) * std::mem::size_of::<f32>()
+    }
+
+    /// An [`ActivationArena`] pre-sized for batch size `batch`.
+    pub fn sized_activation_arena(&self, batch: usize) -> ActivationArena {
+        let n = batch.max(1);
+        let slots: Vec<usize> = self.exec.slot_elems().iter().map(|e| e * n).collect();
+        ActivationArena::with_slots(&slots)
+    }
+
+    /// Eagerly build (and cache) every conv node's plan for batch size
+    /// `batch`, sharing the per-node kernel prepacks already in the
+    /// cache. Returns the max workspace elems over conv nodes at that
     /// batch — what an engine pinning several batch sizes folds into its
     /// arena sizing. Plans build under the planning context, so
     /// [`Model::plan`]/[`Model::plan_with`] must have run first.
@@ -265,25 +346,24 @@ impl Model {
         let ctx = self.planned_ctx.clone().unwrap_or_default();
         let mut max_ws = 0usize;
         for (i, cs) in self.conv_shapes(batch) {
-            if let Layer::Conv { kernel, .. } = &self.layers[i] {
-                let plan = self.plan_for(i, &cs, &ctx, kernel);
-                max_ws = max_ws.max(plan.workspace_elems());
-            }
+            let kernel = self.conv_kernel(i);
+            let plan = self.plan_for(i, &cs, &ctx, kernel);
+            max_ws = max_ws.max(plan.workspace_elems());
         }
         max_ws
     }
 
-    /// Fetch (or lazily build) the prepared plan for conv layer `idx` on
+    /// Fetch (or lazily build) the prepared plan for conv node `idx` on
     /// geometry `cs`. The kernel-side prepack is fetched from (or
-    /// inserted into) the per-layer prepack cache, so every geometry of a
-    /// layer — including transient over-cap ones — shares one prepacked
+    /// inserted into) the per-node prepack cache, so every geometry of a
+    /// node — including transient over-cap ones — shares one prepacked
     /// copy.
     fn plan_for(
         &self,
-        idx: usize,
+        idx: NodeId,
         cs: &ConvShape,
         ctx: &ConvContext,
-        kernel: &crate::tensor::Kernel,
+        kernel: &Kernel,
     ) -> Arc<dyn ConvPlan> {
         // Build under the planning context so cached and lazily-built
         // plans agree on threads / MEC T / FFT cache cap / precision.
@@ -294,19 +374,20 @@ impl Model {
         }
         let algo = self.plans[idx].unwrap_or(AlgoKind::Mec);
         let algo_impl = algo.build();
+        let node_ctx = self.node_ctx(idx, build_ctx);
         let pk_key = (idx, algo, build_ctx.precision);
         let pk = {
             let cached = self.prepack_cache.read().unwrap().get(&pk_key).cloned();
             match cached {
                 Some(p) => p,
                 None => {
-                    let built = algo_impl.prepack(build_ctx, cs, kernel);
+                    let built = algo_impl.prepack(&node_ctx, cs, kernel);
                     let mut cache = self.prepack_cache.write().unwrap();
                     Arc::clone(cache.entry(pk_key).or_insert(built))
                 }
             }
         };
-        let built: Arc<dyn ConvPlan> = Arc::from(algo_impl.plan_shared(build_ctx, cs, pk));
+        let built: Arc<dyn ConvPlan> = Arc::from(algo_impl.plan_shared(&node_ctx, cs, pk));
         let mut cache = self.plan_cache.write().unwrap();
         if !cache.contains_key(&key)
             && cache.keys().filter(|(i, _, _)| *i == idx).count()
@@ -320,10 +401,10 @@ impl Model {
         Arc::clone(cache.entry(key).or_insert(built))
     }
 
-    /// Prepared plans for conv layer `idx`, one per cached geometry
+    /// Prepared plans for conv node `idx`, one per cached geometry
     /// (tests/observability — the prepack-sharing assertions compare
     /// their [`ConvPlan::shared_prepack`] pointers).
-    pub fn cached_plans_for_layer(&self, idx: usize) -> Vec<Arc<dyn ConvPlan>> {
+    pub fn cached_plans_for_layer(&self, idx: NodeId) -> Vec<Arc<dyn ConvPlan>> {
         self.plan_cache
             .read()
             .unwrap()
@@ -333,28 +414,26 @@ impl Model {
             .collect()
     }
 
-    /// Number of cached kernel-side prepacks (≤ one per conv layer).
+    /// Number of cached kernel-side prepacks (≤ one per conv node).
     pub fn cached_prepacks(&self) -> usize {
         self.prepack_cache.read().unwrap().len()
     }
 
     /// Run a forward pass on a batch. Returns the final activation
-    /// (logits or probabilities, depending on the last layer). All conv
-    /// layers execute out of `arena`; after the first pass at a given
-    /// batch size the hot path performs no tracked allocation.
+    /// (logits or probabilities, depending on the graph output). Conv
+    /// workspaces come out of `arena`; activations come out of a
+    /// transient [`ActivationArena`] (tracked, then released) — callers
+    /// on the serving path hold a persistent one via
+    /// [`Model::forward_with`] so steady state allocates nothing.
     pub fn forward(&self, ctx: &ConvContext, batch: &Tensor, arena: &mut Arena) -> Tensor {
-        let mut x = batch.clone();
-        for (i, layer) in self.layers.iter().enumerate() {
-            x = self.forward_layer(i, layer, ctx, x, arena, None);
-        }
-        x
+        let mut acts = ActivationArena::new();
+        self.forward_with(ctx, batch, arena, &mut acts, None)
     }
 
     /// [`Model::forward`] with a caller-owned [`PlanMemo`] in front of
     /// the model's `RwLock`ed plan cache: once the memo has seen a batch
     /// size, the pass resolves every conv plan with a plain `HashMap`
-    /// lookup — no locks on the hot path. This is what
-    /// [`Session`](crate::engine::Session) runs.
+    /// lookup — no locks on the hot path.
     pub fn forward_memo(
         &self,
         ctx: &ConvContext,
@@ -362,115 +441,75 @@ impl Model {
         arena: &mut Arena,
         memo: &mut PlanMemo,
     ) -> Tensor {
-        let mut x = batch.clone();
-        for (i, layer) in self.layers.iter().enumerate() {
-            x = self.forward_layer(i, layer, ctx, x, arena, Some(&mut *memo));
-        }
-        x
+        let mut acts = ActivationArena::new();
+        self.forward_with(ctx, batch, arena, &mut acts, Some(memo))
     }
 
-    fn forward_layer(
+    /// The full-control forward: caller-owned workspace arena,
+    /// activation arena, and (optionally) plan memo. This is what
+    /// [`Session`](crate::engine::Session) runs — with all three
+    /// persistent, the steady-state hot path takes no locks and performs
+    /// zero tracked allocations.
+    pub fn forward_with(
         &self,
-        idx: usize,
-        layer: &Layer,
         ctx: &ConvContext,
-        x: Tensor,
+        batch: &Tensor,
         arena: &mut Arena,
+        acts: &mut ActivationArena,
         memo: Option<&mut PlanMemo>,
     ) -> Tensor {
-        match layer {
-            Layer::Conv {
-                kernel, bias, sh, sw, ph, pw,
-            } => {
-                let padded = if *ph > 0 || *pw > 0 {
-                    x.pad_spatial(*ph, *pw)
-                } else {
-                    x
-                };
-                let cs = ConvShape::new(padded.shape(), kernel.shape(), *sh, *sw);
-                let plan = match memo {
-                    Some(memo) => {
-                        // Same build precision plan_for would resolve,
-                        // so the memo key agrees with the model cache.
-                        let prec = self.planned_ctx.as_ref().unwrap_or(ctx).precision;
-                        match memo.map.get(&(idx, cs, prec)) {
-                            Some(p) => Arc::clone(p),
-                            None => {
-                                let p = self.plan_for(idx, &cs, ctx, kernel);
-                                // Same per-layer bound as the model cache:
-                                // odd batch sizes beyond it stay transient.
-                                if memo.map.keys().filter(|(i, _, _)| *i == idx).count()
-                                    < MAX_CACHED_GEOMETRIES_PER_LAYER
-                                {
-                                    memo.map.insert((idx, cs, prec), Arc::clone(&p));
-                                }
-                                p
+        self.run(ctx, batch, arena, acts, memo, None)
+    }
+
+    /// [`Model::forward_with`] that also hands every conv node's input
+    /// tensor to `observe` before it is lowered — the calibration hook
+    /// the engine builder uses to record per-node activation ranges.
+    pub fn forward_observing(
+        &self,
+        ctx: &ConvContext,
+        batch: &Tensor,
+        arena: &mut Arena,
+        acts: &mut ActivationArena,
+        observe: &mut dyn FnMut(NodeId, &Tensor),
+    ) -> Tensor {
+        self.run(ctx, batch, arena, acts, None, Some(observe))
+    }
+
+    fn run(
+        &self,
+        ctx: &ConvContext,
+        batch: &Tensor,
+        arena: &mut Arena,
+        acts: &mut ActivationArena,
+        mut memo: Option<&mut PlanMemo>,
+        observe: Option<&mut dyn FnMut(NodeId, &Tensor)>,
+    ) -> Tensor {
+        let prec = self.planned_ctx.as_ref().unwrap_or(ctx).precision;
+        let mut resolve = |idx: NodeId, cs: &ConvShape, kernel: &Kernel| -> Arc<dyn ConvPlan> {
+            match memo.as_deref_mut() {
+                Some(memo) => {
+                    // Same build precision plan_for would resolve, so the
+                    // memo key agrees with the model cache.
+                    match memo.map.get(&(idx, *cs, prec)) {
+                        Some(p) => Arc::clone(p),
+                        None => {
+                            let p = self.plan_for(idx, cs, ctx, kernel);
+                            // Same per-node bound as the model cache:
+                            // odd batch sizes beyond it stay transient.
+                            if memo.map.keys().filter(|(i, _, _)| *i == idx).count()
+                                < MAX_CACHED_GEOMETRIES_PER_LAYER
+                            {
+                                memo.map.insert((idx, *cs, prec), Arc::clone(&p));
                             }
+                            p
                         }
                     }
-                    None => self.plan_for(idx, &cs, ctx, kernel),
-                };
-                let mut out = Tensor::zeros(cs.output());
-                plan.execute(&padded, arena, &mut out);
-                // Bias add (per output channel).
-                let kc = kernel.shape().kc;
-                for chunk in out.data_mut().chunks_exact_mut(kc) {
-                    for (v, b) in chunk.iter_mut().zip(bias) {
-                        *v += b;
-                    }
                 }
-                out
+                None => self.plan_for(idx, cs, ctx, kernel),
             }
-            Layer::Relu => {
-                let mut out = x;
-                for v in out.data_mut() {
-                    if *v < 0.0 {
-                        *v = 0.0;
-                    }
-                }
-                out
-            }
-            Layer::MaxPool { k, s } => max_pool(&x, *k, *s),
-            Layer::Flatten => {
-                let sh = x.shape();
-                Tensor::from_vec(
-                    Nhwc::new(sh.n, 1, 1, sh.h * sh.w * sh.c),
-                    x.into_vec(),
-                )
-            }
-            Layer::Dense { w, bias, d_in, d_out } => {
-                let sh = x.shape();
-                let n = sh.n;
-                assert_eq!(sh.h * sh.w * sh.c, *d_in);
-                let mut out = Tensor::zeros(Nhwc::new(n, 1, 1, *d_out));
-                let a = MatRef::new(x.data(), n, *d_in);
-                let b = MatRef::new(w, *d_in, *d_out);
-                let mut c = MatMut::new(out.data_mut(), n, *d_out);
-                gemm_ex(a, b, &mut c, 1.0, 0.0, ctx.threads, ctx.blocks);
-                for row in out.data_mut().chunks_exact_mut(*d_out) {
-                    for (v, bb) in row.iter_mut().zip(bias) {
-                        *v += bb;
-                    }
-                }
-                out
-            }
-            Layer::Softmax => {
-                let mut out = x;
-                let c = out.shape().c;
-                for row in out.data_mut().chunks_exact_mut(c) {
-                    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                    let mut sum = 0.0;
-                    for v in row.iter_mut() {
-                        *v = (*v - m).exp();
-                        sum += *v;
-                    }
-                    for v in row.iter_mut() {
-                        *v /= sum;
-                    }
-                }
-                out
-            }
-        }
+        };
+        self.exec
+            .run(&self.graph, ctx, batch, arena, acts, &mut resolve, observe)
     }
 
     /// Argmax class per sample of the final activation.
@@ -490,33 +529,10 @@ impl Model {
     }
 }
 
-fn max_pool(x: &Tensor, k: usize, s: usize) -> Tensor {
-    let sh = x.shape();
-    let oh = (sh.h - k) / s + 1;
-    let ow = (sh.w - k) / s + 1;
-    let out_shape = Nhwc::new(sh.n, oh, ow, sh.c);
-    let mut out = Tensor::zeros(out_shape);
-    for n in 0..sh.n {
-        for y in 0..oh {
-            for x0 in 0..ow {
-                for c in 0..sh.c {
-                    let mut m = f32::NEG_INFINITY;
-                    for dy in 0..k {
-                        for dx in 0..k {
-                            m = m.max(x.at(n, y * s + dy, x0 * s + dx, c));
-                        }
-                    }
-                    *out.at_mut(n, y, x0, c) = m;
-                }
-            }
-        }
-    }
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::graph_ir::GraphBuilder;
     use crate::tensor::{Kernel, KernelShape};
     use crate::util::Rng;
 
@@ -612,15 +628,7 @@ mod tests {
     }
 
     #[test]
-    fn max_pool_values() {
-        let x = Tensor::from_fn(Nhwc::new(1, 4, 4, 1), |_, h, w, _| (h * 4 + w) as f32);
-        let p = max_pool(&x, 2, 2);
-        assert_eq!(p.shape(), Nhwc::new(1, 2, 2, 1));
-        assert_eq!(p.data(), &[5.0, 7.0, 13.0, 15.0]);
-    }
-
-    #[test]
-    fn plan_assigns_conv_layers_only() {
+    fn plan_assigns_conv_nodes_only() {
         let mut m = tiny_model();
         m.plan(
             &Planner::new(),
@@ -631,7 +639,7 @@ mod tests {
         let summary = m.plan_summary();
         assert_eq!(summary.len(), 1);
         assert_eq!(summary[0].0, 0);
-        // The conv layer's plan is prepared eagerly and sizes the arena.
+        // The conv node's plan is prepared eagerly and sizes the arena.
         assert_eq!(m.planned_layer_workspaces().len(), 1);
         assert_eq!(
             m.planned_workspace_bytes(),
@@ -641,7 +649,7 @@ mod tests {
 
     #[test]
     fn per_batch_plans_share_one_kernel_prepack() {
-        // Two geometries of the same layer (planned batch + a dynamic
+        // Two geometries of the same node (planned batch + a dynamic
         // batching remainder) must hold the SAME prepacked kernel
         // allocation — pointer equality, not just equal bytes.
         let mut m = tiny_model();
@@ -655,7 +663,7 @@ mod tests {
         let _ = m.forward(&ctx, &remainder, &mut arena); // lazily plans n=3
         let plans = m.cached_plans_for_layer(0);
         assert_eq!(plans.len(), 2, "expected planned + lazily-built geometry");
-        assert_eq!(m.cached_prepacks(), 1, "one prepack per conv layer");
+        assert_eq!(m.cached_prepacks(), 1, "one prepack per conv node");
         let a = plans[0].shared_prepack().expect("plan exposes its prepack");
         let b = plans[1].shared_prepack().expect("plan exposes its prepack");
         assert!(Arc::ptr_eq(&a, &b), "prepack duplicated across batch sizes");
@@ -702,7 +710,7 @@ mod tests {
         let mut memo = PlanMemo::new();
         assert!(memo.is_empty());
         let a = m.forward_memo(&ctx, &batch, &mut arena, &mut memo);
-        assert_eq!(memo.len(), 1, "one conv layer memoized");
+        assert_eq!(memo.len(), 1, "one conv node memoized");
         // Second pass resolves through the memo alone (same plan, so
         // bitwise-identical again).
         let b = m.forward_memo(&ctx, &batch, &mut arena, &mut memo);
@@ -775,5 +783,113 @@ mod tests {
         assert!(m.planned_layer_workspaces().is_empty());
         let b = m.forward(&ctx, &batch, &mut arena);
         crate::util::assert_allclose(a.data(), b.data(), 1e-4, "repin equivalence");
+    }
+
+    #[test]
+    fn residual_graph_plans_and_executes() {
+        // conv → {conv branch, identity} → add → relu: the diamond the
+        // sequential API could never express.
+        let mut rng = Rng::new(41);
+        let mut b = GraphBuilder::new("residual", (6, 6, 2));
+        let x = b.input();
+        let trunk = b.conv(
+            x,
+            Kernel::random(KernelShape::new(3, 3, 2, 4), &mut rng),
+            vec![0.1; 4],
+            1,
+            1,
+            1,
+            1,
+        );
+        let branch = b.conv(
+            trunk,
+            Kernel::random(KernelShape::new(3, 3, 4, 4), &mut rng),
+            vec![0.0; 4],
+            1,
+            1,
+            1,
+            1,
+        );
+        let sum = b.add(&[branch, trunk]);
+        let out = b.relu(sum);
+        let mut m = Model::from_graph(b.finish(out));
+        m.plan(
+            &Planner::new(),
+            &Budget::unlimited(),
+            &ConvContext::default(),
+            2,
+        );
+        assert_eq!(m.plan_summary().len(), 2, "both convs planned");
+        let batch = Tensor::random(Nhwc::new(2, 6, 6, 2), &mut rng);
+        let mut arena = m.sized_arena();
+        let got = m.forward(&ConvContext::default(), &batch, &mut arena);
+        assert_eq!(got.shape(), Nhwc::new(2, 6, 6, 4));
+        assert!(got.data().iter().all(|&v| v >= 0.0), "relu output");
+        // The residual actually fed through: output != branch alone.
+        assert!(got.data().iter().any(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn dead_nodes_are_eliminated_from_execution() {
+        let mut rng = Rng::new(43);
+        let mut b = GraphBuilder::new("dce", (5, 5, 1));
+        let x = b.input();
+        let live = b.conv(
+            x,
+            Kernel::random(KernelShape::new(3, 3, 1, 2), &mut rng),
+            vec![0.0; 2],
+            1,
+            1,
+            0,
+            0,
+        );
+        // A dead branch: built, validated, never executed.
+        let _dead = b.conv(
+            x,
+            Kernel::random(KernelShape::new(5, 5, 1, 8), &mut rng),
+            vec![0.0; 8],
+            1,
+            1,
+            0,
+            0,
+        );
+        let m = Model::from_graph(b.finish(live));
+        assert_eq!(m.exec().steps().len(), 1, "dead conv got a step");
+        assert_eq!(m.conv_shapes(1).len(), 1, "dead conv got planned");
+    }
+
+    #[test]
+    fn fused_conv_relu_matches_unfused_reference() {
+        // Same weights through (a) conv+relu as separate graph nodes
+        // (fusion absorbs the relu) and (b) conv then a relu forced to
+        // stay separate by a second consumer of the conv value.
+        let mut rng = Rng::new(47);
+        let kernel = Kernel::random(KernelShape::new(3, 3, 1, 3), &mut rng);
+        let bias = vec![-0.2, 0.1, 0.0];
+
+        let mut fused_b = GraphBuilder::new("fused", (7, 7, 1));
+        let x = fused_b.input();
+        let c = fused_b.conv(x, kernel.clone(), bias.clone(), 1, 1, 1, 1);
+        let r = fused_b.relu(c);
+        let fused = Model::from_graph(fused_b.finish(r));
+        assert_eq!(fused.exec().steps().len(), 1, "relu absorbed into conv");
+
+        let mut plain_b = GraphBuilder::new("plain", (7, 7, 1));
+        let x = plain_b.input();
+        let c = plain_b.conv(x, kernel, bias, 1, 1, 1, 1);
+        let _r = plain_b.relu(c);
+        // Second consumer of the conv value blocks fusion; add(relu,
+        // 0·conv)… simpler: concat is unnecessary — just verify the
+        // unfused path via a model whose output is the conv itself run
+        // through a manual relu.
+        let plain = Model::from_graph(plain_b.finish(c));
+        let batch = Tensor::random(Nhwc::new(2, 7, 7, 1), &mut rng);
+        let mut arena = Arena::new();
+        let a = fused.forward(&ConvContext::default(), &batch, &mut arena);
+        let mut want = plain.forward(&ConvContext::default(), &batch, &mut arena);
+        for v in want.data_mut() {
+            *v = v.max(0.0);
+        }
+        assert_eq!(a.data(), want.data(), "fused epilogue must be bitwise relu∘conv");
     }
 }

@@ -1,0 +1,1089 @@
+//! Graph IR — the DAG core of the model layer.
+//!
+//! The sequential `Vec<Layer>` executor could only express straight-line
+//! networks and allocated every activation per request. This module
+//! replaces that core with a typed DAG plus an explicit pass pipeline,
+//! extending the paper's planning thesis — workspace footprints are a
+//! *plan-time* quantity, sized by a max over live buffers rather than a
+//! sum over allocations (§3.4) — from lowering buffers to activations:
+//!
+//! * [`Graph`] / [`GraphBuilder`] — `NodeId`-addressed ops ([`Op`]):
+//!   every [`Layer`] op plus [`Op::Add`] and [`Op::Concat`] for
+//!   residual / branching topologies. [`Graph::sequential`] is the
+//!   compatibility constructor: every `Vec<Layer>` call site builds the
+//!   same chain it always did, with node ids equal to the old layer
+//!   indices (the graph input is a [`Src`], not a node).
+//! * Pass pipeline, run once by [`Graph::compile`]: shape inference
+//!   (validates every edge), conv+bias+relu fusion (a conv whose sole
+//!   consumer is a relu absorbs it into its bias epilogue), dead-node
+//!   elimination, then the **liveness pass**.
+//! * The liveness pass assigns every intermediate activation a slot in
+//!   the shared [`ActivationArena`](crate::memory::ActivationArena) by
+//!   interval coloring: values interfere only while both are live, so
+//!   the arena's footprint is the max over live sets — not the sum over
+//!   node outputs — mirroring the max-over-layers workspace rule.
+//! * [`ExecGraph::run`] executes the compiled steps with **zero tracked
+//!   allocations** in steady state: activations come out of the arena's
+//!   slots (moved into [`Tensor`]s and back without copying), conv
+//!   padding is written into a planned pad slot instead of a fresh
+//!   tensor, and workspaces come from the caller's [`Arena`].
+
+use crate::conv::{ConvContext, ConvPlan};
+use crate::gemm::{gemm_ex, MatMut, MatRef};
+use crate::memory::{ActivationArena, Arena};
+use crate::model::layer::Layer;
+use crate::tensor::{ConvShape, Kernel, Nhwc, Tensor};
+use std::sync::Arc;
+
+/// Index of a node in its [`Graph`]. For graphs built by
+/// [`Graph::sequential`] this equals the historical layer index.
+pub type NodeId = usize;
+
+/// A value source: the graph's external input batch, or another node's
+/// output. Keeping the input out of the node table preserves the old
+/// layer numbering for every sequential call site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Src {
+    /// The external NHWC input batch.
+    Input,
+    /// The output of node `NodeId`.
+    Node(NodeId),
+}
+
+/// One graph operation. Every sequential [`Layer`] is an op; `Add` and
+/// `Concat` are the multi-input ops that make residual and branching
+/// topologies expressible.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// A classic layer (conv / relu / maxpool / flatten / dense /
+    /// softmax) with exactly one input edge.
+    Layer(Layer),
+    /// Elementwise sum of ≥ 2 same-shaped inputs (residual connections).
+    Add,
+    /// Channel-axis concatenation of ≥ 2 inputs sharing (h, w)
+    /// (Inception/DenseNet-style branching).
+    Concat,
+}
+
+impl Op {
+    /// Short tag for display/metrics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Op::Layer(l) => l.kind(),
+            Op::Add => "add",
+            Op::Concat => "concat",
+        }
+    }
+
+    /// Parameter count (weights + biases).
+    pub fn param_count(&self) -> usize {
+        match self {
+            Op::Layer(l) => l.param_count(),
+            Op::Add | Op::Concat => 0,
+        }
+    }
+
+    /// Output shape from the input shapes. Panics on arity or geometry
+    /// mismatch (caught at [`GraphBuilder::finish`]; the model loader
+    /// goes through [`Op::try_output_shape`] instead).
+    pub fn output_shape(&self, inputs: &[Nhwc]) -> Nhwc {
+        self.try_output_shape(inputs).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`Op::output_shape`] with mismatches reported as `Err` instead of
+    /// a panic — a corrupt `.mecw` file must error, never abort.
+    pub fn try_output_shape(&self, inputs: &[Nhwc]) -> Result<Nhwc, String> {
+        match self {
+            Op::Layer(l) => {
+                if inputs.len() != 1 {
+                    return Err(format!("{} takes one input", self.kind()));
+                }
+                l.try_output_shape(inputs[0])
+            }
+            Op::Add => {
+                if inputs.len() < 2 {
+                    return Err("add needs >= 2 inputs".to_string());
+                }
+                for s in &inputs[1..] {
+                    if *s != inputs[0] {
+                        return Err(format!(
+                            "add inputs must share a shape ({} vs {})",
+                            s, inputs[0]
+                        ));
+                    }
+                }
+                Ok(inputs[0])
+            }
+            Op::Concat => {
+                if inputs.len() < 2 {
+                    return Err("concat needs >= 2 inputs".to_string());
+                }
+                let first = inputs[0];
+                let mut c = 0;
+                for s in inputs {
+                    if (s.n, s.h, s.w) != (first.n, first.h, first.w) {
+                        return Err(format!(
+                            "concat inputs must share (n, h, w) ({} vs {})",
+                            s, first
+                        ));
+                    }
+                    c += s.c;
+                }
+                Ok(Nhwc::new(first.n, first.h, first.w, c))
+            }
+        }
+    }
+}
+
+/// One node: an op plus its input edges.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub op: Op,
+    pub srcs: Vec<Src>,
+}
+
+/// A typed DAG of ops over one external input. Construct with
+/// [`GraphBuilder`] (or [`Graph::sequential`] for chains); node order is
+/// topological by construction, and [`Graph::compile`] runs the pass
+/// pipeline producing an [`ExecGraph`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Graph {
+    pub name: String,
+    /// Per-sample input shape (h, w, c); batch dim comes from requests.
+    pub input_hwc: (usize, usize, usize),
+    nodes: Vec<Node>,
+    output: Src,
+}
+
+impl Graph {
+    /// Compatibility constructor: chain `layers` input → L0 → L1 → … so
+    /// node ids equal the historical layer indices.
+    pub fn sequential(name: &str, input_hwc: (usize, usize, usize), layers: Vec<Layer>) -> Graph {
+        Graph::try_sequential(name, input_hwc, layers).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`Graph::sequential`] with chaining mismatches reported as `Err`
+    /// instead of a panic (the v1 loader path).
+    pub fn try_sequential(
+        name: &str,
+        input_hwc: (usize, usize, usize),
+        layers: Vec<Layer>,
+    ) -> Result<Graph, String> {
+        let mut b = GraphBuilder::new(name, input_hwc);
+        let mut at = b.input();
+        for layer in layers {
+            at = b.layer(at, layer);
+        }
+        b.try_finish(at)
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// The value the graph returns.
+    pub fn output(&self) -> Src {
+        self.output
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.nodes.iter().map(|n| n.op.param_count()).sum()
+    }
+
+    /// If the graph is a pure chain of single-input layer ops ending at
+    /// the output, the layers in order — what the `.mecw` v1 writer and
+    /// the AOT weight-order path consume. `None` for branching graphs.
+    pub fn as_sequential_layers(&self) -> Option<Vec<Layer>> {
+        let mut layers = Vec::with_capacity(self.nodes.len());
+        for (i, node) in self.nodes.iter().enumerate() {
+            let want = if i == 0 { Src::Input } else { Src::Node(i - 1) };
+            if node.srcs.as_slice() != [want] {
+                return None;
+            }
+            match &node.op {
+                Op::Layer(l) => layers.push(l.clone()),
+                _ => return None,
+            }
+        }
+        let last_ok = match self.output {
+            Src::Node(v) => v + 1 == self.nodes.len(),
+            Src::Input => self.nodes.is_empty(),
+        };
+        if last_ok {
+            Some(layers)
+        } else {
+            None
+        }
+    }
+
+    /// Per-node output shapes at batch size `batch`, in node order.
+    /// Panics on any edge mismatch — this *is* the shape-inference pass.
+    pub fn infer_shapes(&self, batch: usize) -> Vec<Nhwc> {
+        self.try_infer_shapes(batch).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`Graph::infer_shapes`] with mismatches as `Err` (loader path).
+    pub fn try_infer_shapes(&self, batch: usize) -> Result<Vec<Nhwc>, String> {
+        let (h, w, c) = self.input_hwc;
+        let input = Nhwc::new(batch.max(1), h, w, c);
+        let mut shapes: Vec<Nhwc> = Vec::with_capacity(self.nodes.len());
+        for (i, node) in self.nodes.iter().enumerate() {
+            let ins: Vec<Nhwc> = node
+                .srcs
+                .iter()
+                .map(|s| match s {
+                    Src::Input => input,
+                    Src::Node(v) => shapes[*v],
+                })
+                .collect();
+            let shape = node
+                .op
+                .try_output_shape(&ins)
+                .map_err(|e| format!("node {i}: {e}"))?;
+            shapes.push(shape);
+        }
+        Ok(shapes)
+    }
+
+    /// Validate every edge by propagating a batch-1 shape; returns the
+    /// output shape.
+    pub fn validate(&self) -> Nhwc {
+        let shapes = self.infer_shapes(1);
+        match self.output {
+            Src::Input => {
+                let (h, w, c) = self.input_hwc;
+                Nhwc::new(1, h, w, c)
+            }
+            Src::Node(v) => shapes[v],
+        }
+    }
+
+    /// Run the pass pipeline: shape inference → conv+bias+relu fusion →
+    /// dead-node elimination → liveness slot assignment.
+    pub fn compile(&self) -> ExecGraph {
+        compile(self)
+    }
+}
+
+/// Builder for a [`Graph`]. Sources must refer to the input or to
+/// already-built nodes, so node order is topological by construction.
+pub struct GraphBuilder {
+    name: String,
+    input_hwc: (usize, usize, usize),
+    nodes: Vec<Node>,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str, input_hwc: (usize, usize, usize)) -> GraphBuilder {
+        GraphBuilder {
+            name: name.to_string(),
+            input_hwc,
+            nodes: Vec::new(),
+        }
+    }
+
+    /// The graph's external input.
+    pub fn input(&self) -> Src {
+        Src::Input
+    }
+
+    fn push(&mut self, op: Op, srcs: Vec<Src>) -> Src {
+        for s in &srcs {
+            if let Src::Node(v) = s {
+                assert!(*v < self.nodes.len(), "source node {v} not built yet");
+            }
+        }
+        self.nodes.push(Node { op, srcs });
+        Src::Node(self.nodes.len() - 1)
+    }
+
+    /// Append any single-input layer op.
+    pub fn layer(&mut self, src: Src, layer: Layer) -> Src {
+        self.push(Op::Layer(layer), vec![src])
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        &mut self,
+        src: Src,
+        kernel: Kernel,
+        bias: Vec<f32>,
+        sh: usize,
+        sw: usize,
+        ph: usize,
+        pw: usize,
+    ) -> Src {
+        self.layer(src, Layer::Conv { kernel, bias, sh, sw, ph, pw })
+    }
+
+    pub fn relu(&mut self, src: Src) -> Src {
+        self.layer(src, Layer::Relu)
+    }
+
+    pub fn max_pool(&mut self, src: Src, k: usize, s: usize) -> Src {
+        self.layer(src, Layer::MaxPool { k, s })
+    }
+
+    pub fn flatten(&mut self, src: Src) -> Src {
+        self.layer(src, Layer::Flatten)
+    }
+
+    pub fn dense(
+        &mut self,
+        src: Src,
+        w: Vec<f32>,
+        bias: Vec<f32>,
+        d_in: usize,
+        d_out: usize,
+    ) -> Src {
+        self.layer(src, Layer::Dense { w, bias, d_in, d_out })
+    }
+
+    pub fn softmax(&mut self, src: Src) -> Src {
+        self.layer(src, Layer::Softmax)
+    }
+
+    /// Elementwise sum (residual connection).
+    #[allow(clippy::should_implement_trait)]
+    pub fn add(&mut self, srcs: &[Src]) -> Src {
+        assert!(srcs.len() >= 2, "add needs >= 2 inputs");
+        self.push(Op::Add, srcs.to_vec())
+    }
+
+    /// Channel-axis concatenation.
+    pub fn concat(&mut self, srcs: &[Src]) -> Src {
+        assert!(srcs.len() >= 2, "concat needs >= 2 inputs");
+        self.push(Op::Concat, srcs.to_vec())
+    }
+
+    /// Seal the graph with `output` as its returned value; validates
+    /// every edge via shape inference. Panics on mismatch (the in-memory
+    /// construction path; the loader uses [`GraphBuilder::try_finish`]).
+    pub fn finish(self, output: Src) -> Graph {
+        self.try_finish(output).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`GraphBuilder::finish`] with validation failures as `Err`
+    /// instead of a panic — a corrupt `.mecw` file must error, never
+    /// abort the loading process.
+    pub fn try_finish(self, output: Src) -> Result<Graph, String> {
+        if let Src::Node(v) = output {
+            if v >= self.nodes.len() {
+                return Err(format!("output node {v} not built"));
+            }
+        }
+        let g = Graph {
+            name: self.name,
+            input_hwc: self.input_hwc,
+            nodes: self.nodes,
+            output,
+        };
+        g.try_infer_shapes(1)?;
+        Ok(g)
+    }
+}
+
+/// One executable step of a compiled graph.
+#[derive(Debug, Clone)]
+pub struct Step {
+    /// The node whose op this step runs (for fused conv+relu this is the
+    /// conv; the absorbed relu has no step).
+    pub node: NodeId,
+    /// Input values, post-fusion.
+    pub srcs: Vec<Src>,
+    /// The value this step produces (the relu's id when fused, else
+    /// `node`) — what downstream `srcs` refer to.
+    pub out_value: NodeId,
+    /// Arena slot holding the produced value.
+    pub out_slot: usize,
+    /// Conv only: slot the padded input is written into (`None` when the
+    /// conv is unpadded).
+    pub pad_slot: Option<usize>,
+    /// Conv only: apply `max(0, ·)` in the bias epilogue (fusion pass).
+    pub fused_relu: bool,
+}
+
+/// A compiled graph: the executable step list plus the liveness pass's
+/// activation-slot plan. All sizes are per sample; they scale linearly
+/// with the batch dimension.
+#[derive(Debug, Clone)]
+pub struct ExecGraph {
+    steps: Vec<Step>,
+    /// Per-sample (batch-1) output shape per node id.
+    shapes: Vec<Nhwc>,
+    /// Per-sample slot sizes — Σ is the activation arena requirement.
+    slot_elems: Vec<usize>,
+    /// Slot of each live value (indexed by value/node id).
+    value_slot: Vec<Option<usize>>,
+    /// Per-sample max over step live sets (the interval-coloring lower
+    /// bound the slot packing is asserted against).
+    max_live_elems: usize,
+    output: Src,
+}
+
+impl ExecGraph {
+    pub fn steps(&self) -> &[Step] {
+        &self.steps
+    }
+
+    /// Per-sample activation slot sizes (floats).
+    pub fn slot_elems(&self) -> &[usize] {
+        &self.slot_elems
+    }
+
+    /// Activation-arena floats required at `batch` (Σ over slots).
+    pub fn arena_elems(&self, batch: usize) -> usize {
+        self.slot_elems.iter().sum::<usize>() * batch.max(1)
+    }
+
+    /// Max live-set floats at `batch` — what the arena footprint is
+    /// asserted equal to on packing-friendly graphs (and can never be
+    /// beaten by any allocator).
+    pub fn max_live_elems(&self, batch: usize) -> usize {
+        self.max_live_elems * batch.max(1)
+    }
+
+    /// Per-sample output shape of `node` (n = 1).
+    pub fn shape_of(&self, node: NodeId) -> Nhwc {
+        self.shapes[node]
+    }
+
+    /// The conv geometry each compiled conv step plans on at `batch`
+    /// (padding applied), in execution order.
+    pub fn conv_shapes(&self, graph: &Graph, batch: usize) -> Vec<(NodeId, ConvShape)> {
+        let mut out = Vec::new();
+        for step in &self.steps {
+            if let Op::Layer(Layer::Conv { kernel, sh, sw, ph, pw, .. }) = &graph.node(step.node).op
+            {
+                let in_shape = self.src_shape(graph, step.srcs[0], batch.max(1));
+                let padded =
+                    Nhwc::new(in_shape.n, in_shape.h + 2 * ph, in_shape.w + 2 * pw, in_shape.c);
+                out.push((step.node, ConvShape::new(padded, kernel.shape(), *sh, *sw)));
+            }
+        }
+        out
+    }
+
+    fn src_shape(&self, graph: &Graph, src: Src, n: usize) -> Nhwc {
+        match src {
+            Src::Input => {
+                let (h, w, c) = graph.input_hwc;
+                Nhwc::new(n, h, w, c)
+            }
+            Src::Node(v) => at_batch(self.shapes[v], n),
+        }
+    }
+
+    /// Execute the compiled steps on `batch`. Workspaces come from `ws`,
+    /// activations from `acts` (grown — tracked — on first sight of a
+    /// batch size, then reused); `resolve` maps a conv node + geometry to
+    /// its prepared plan; `observe` (calibration) sees every conv input
+    /// before it is lowered.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        graph: &Graph,
+        ctx: &ConvContext,
+        batch: &Tensor,
+        ws: &mut Arena,
+        acts: &mut ActivationArena,
+        resolve: &mut dyn FnMut(NodeId, &ConvShape, &Kernel) -> Arc<dyn ConvPlan>,
+        mut observe: Option<&mut dyn FnMut(NodeId, &Tensor)>,
+    ) -> Tensor {
+        let n = batch.shape().n;
+        // Grow every slot to this batch's requirement up front (tracked
+        // once; later passes at ≤ this batch size are allocation-free).
+        for (i, &elems) in self.slot_elems.iter().enumerate() {
+            acts.ensure(i, elems * n);
+        }
+        for step in &self.steps {
+            self.run_step(step, graph, ctx, batch, ws, acts, resolve, &mut observe, n);
+        }
+        match self.output {
+            Src::Input => batch.clone(),
+            Src::Node(v) => {
+                let shape = at_batch(self.shapes[v], n);
+                let slot = self.value_slot[v].expect("output value has a slot");
+                Tensor::from_vec(shape, acts.data(slot)[..shape.len()].to_vec())
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_step(
+        &self,
+        step: &Step,
+        graph: &Graph,
+        ctx: &ConvContext,
+        batch: &Tensor,
+        ws: &mut Arena,
+        acts: &mut ActivationArena,
+        resolve: &mut dyn FnMut(NodeId, &ConvShape, &Kernel) -> Arc<dyn ConvPlan>,
+        observe: &mut Option<&mut dyn FnMut(NodeId, &Tensor)>,
+        n: usize,
+    ) {
+        let out_shape = at_batch(self.shapes[step.out_value], n);
+        match &graph.node(step.node).op {
+            Op::Layer(Layer::Conv { kernel, bias, sh, sw, ph, pw }) => {
+                let src = step.srcs[0];
+                let in_shape = self.src_shape(graph, src, n);
+                // Move the producing slot's buffer into a Tensor (no
+                // copy); `Src::Input` reads the caller's batch directly.
+                let src_t = self.take_src(acts, src, in_shape, batch);
+                let pad_t = step.pad_slot.map(|ps| {
+                    let padded_shape =
+                        Nhwc::new(n, in_shape.h + 2 * ph, in_shape.w + 2 * pw, in_shape.c);
+                    let mut t = take_tensor(acts, ps, padded_shape);
+                    pad_into(src_t.tensor(), *ph, *pw, &mut t);
+                    t
+                });
+                let conv_in: &Tensor = pad_t.as_ref().unwrap_or_else(|| src_t.tensor());
+                let cs = ConvShape::new(conv_in.shape(), kernel.shape(), *sh, *sw);
+                let plan = resolve(step.node, &cs, kernel);
+                if let Some(obs) = observe.as_mut() {
+                    obs(step.node, conv_in);
+                }
+                let mut out = take_tensor(acts, step.out_slot, out_shape);
+                plan.execute(conv_in, ws, &mut out);
+                // Bias (+ fused relu) epilogue: one pass over the output.
+                let kc = kernel.shape().kc;
+                if step.fused_relu {
+                    for chunk in out.data_mut().chunks_exact_mut(kc) {
+                        for (v, b) in chunk.iter_mut().zip(bias) {
+                            *v = (*v + b).max(0.0);
+                        }
+                    }
+                } else {
+                    for chunk in out.data_mut().chunks_exact_mut(kc) {
+                        for (v, b) in chunk.iter_mut().zip(bias) {
+                            *v += b;
+                        }
+                    }
+                }
+                put_tensor(acts, step.out_slot, out);
+                if let Some(t) = pad_t {
+                    put_tensor(acts, step.pad_slot.unwrap(), t);
+                }
+                src_t.put_back(acts);
+            }
+            Op::Layer(Layer::Relu) => {
+                self.unary_map(step, acts, batch, n, |v| v.max(0.0));
+            }
+            Op::Layer(Layer::Softmax) => {
+                let c = out_shape.c;
+                self.unary_rows(step, acts, batch, n, c, |row| {
+                    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let mut sum = 0.0;
+                    for v in row.iter_mut() {
+                        *v = (*v - m).exp();
+                        sum += *v;
+                    }
+                    for v in row.iter_mut() {
+                        *v /= sum;
+                    }
+                });
+            }
+            Op::Layer(Layer::MaxPool { k, s }) => {
+                let src = step.srcs[0];
+                let in_shape = self.src_shape(graph, src, n);
+                let src_t = self.take_src(acts, src, in_shape, batch);
+                let mut out = take_tensor(acts, step.out_slot, out_shape);
+                max_pool_into(src_t.tensor(), *k, *s, &mut out);
+                put_tensor(acts, step.out_slot, out);
+                src_t.put_back(acts);
+            }
+            Op::Layer(Layer::Flatten) => {
+                match step.srcs[0] {
+                    // Aliased: the data is already in `out_slot`; the
+                    // reshape lives in the value's recorded shape.
+                    Src::Node(v) if self.value_slot[v] == Some(step.out_slot) => {}
+                    src => {
+                        let in_shape = self.src_shape(graph, src, n);
+                        let src_t = self.take_src(acts, src, in_shape, batch);
+                        let mut out = take_tensor(acts, step.out_slot, out_shape);
+                        out.data_mut().copy_from_slice(src_t.tensor().data());
+                        put_tensor(acts, step.out_slot, out);
+                        src_t.put_back(acts);
+                    }
+                }
+            }
+            Op::Layer(Layer::Dense { w, bias, d_in, d_out }) => {
+                let src = step.srcs[0];
+                let in_shape = self.src_shape(graph, src, n);
+                assert_eq!(in_shape.h * in_shape.w * in_shape.c, *d_in);
+                let src_t = self.take_src(acts, src, in_shape, batch);
+                let mut out = take_tensor(acts, step.out_slot, out_shape);
+                let a = MatRef::new(src_t.tensor().data(), n, *d_in);
+                let b = MatRef::new(w, *d_in, *d_out);
+                let mut c = MatMut::new(out.data_mut(), n, *d_out);
+                gemm_ex(a, b, &mut c, 1.0, 0.0, ctx.threads, ctx.blocks);
+                for row in out.data_mut().chunks_exact_mut(*d_out) {
+                    for (v, bb) in row.iter_mut().zip(bias) {
+                        *v += bb;
+                    }
+                }
+                put_tensor(acts, step.out_slot, out);
+                src_t.put_back(acts);
+            }
+            Op::Add => {
+                let srcs = &step.srcs;
+                let mut out = take_tensor(acts, step.out_slot, out_shape);
+                let first = self.take_src(acts, srcs[0], out_shape, batch);
+                out.data_mut().copy_from_slice(first.tensor().data());
+                first.put_back(acts);
+                for &src in &srcs[1..] {
+                    let t = self.take_src(acts, src, out_shape, batch);
+                    for (o, v) in out.data_mut().iter_mut().zip(t.tensor().data()) {
+                        *o += v;
+                    }
+                    t.put_back(acts);
+                }
+                put_tensor(acts, step.out_slot, out);
+            }
+            Op::Concat => {
+                let mut out = take_tensor(acts, step.out_slot, out_shape);
+                let rows = out_shape.n * out_shape.h * out_shape.w;
+                let total_c = out_shape.c;
+                let mut off = 0;
+                for &src in &step.srcs {
+                    let in_shape = self.src_shape(graph, src, n);
+                    let ci = in_shape.c;
+                    let t = self.take_src(acts, src, in_shape, batch);
+                    let data = t.tensor().data();
+                    for r in 0..rows {
+                        out.data_mut()[r * total_c + off..r * total_c + off + ci]
+                            .copy_from_slice(&data[r * ci..(r + 1) * ci]);
+                    }
+                    t.put_back(acts);
+                    off += ci;
+                }
+                put_tensor(acts, step.out_slot, out);
+            }
+        }
+    }
+
+    /// Elementwise unary op, in-place when the liveness pass aliased the
+    /// output onto its (dying) input slot.
+    fn unary_map(
+        &self,
+        step: &Step,
+        acts: &mut ActivationArena,
+        batch: &Tensor,
+        n: usize,
+        f: impl Fn(f32) -> f32,
+    ) {
+        let out_shape = at_batch(self.shapes[step.out_value], n);
+        match step.srcs[0] {
+            Src::Node(v) if self.value_slot[v] == Some(step.out_slot) => {
+                let mut t = take_tensor(acts, step.out_slot, out_shape);
+                for v in t.data_mut() {
+                    *v = f(*v);
+                }
+                put_tensor(acts, step.out_slot, t);
+            }
+            src => {
+                let src_t = self.take_src(acts, src, out_shape, batch);
+                let mut out = take_tensor(acts, step.out_slot, out_shape);
+                for (o, v) in out.data_mut().iter_mut().zip(src_t.tensor().data()) {
+                    *o = f(*v);
+                }
+                put_tensor(acts, step.out_slot, out);
+                src_t.put_back(acts);
+            }
+        }
+    }
+
+    /// Row-wise unary op (softmax), with the same in-place rule.
+    fn unary_rows(
+        &self,
+        step: &Step,
+        acts: &mut ActivationArena,
+        batch: &Tensor,
+        n: usize,
+        c: usize,
+        f: impl Fn(&mut [f32]),
+    ) {
+        let out_shape = at_batch(self.shapes[step.out_value], n);
+        match step.srcs[0] {
+            Src::Node(v) if self.value_slot[v] == Some(step.out_slot) => {
+                let mut t = take_tensor(acts, step.out_slot, out_shape);
+                for row in t.data_mut().chunks_exact_mut(c) {
+                    f(row);
+                }
+                put_tensor(acts, step.out_slot, t);
+            }
+            src => {
+                let src_t = self.take_src(acts, src, out_shape, batch);
+                let mut out = take_tensor(acts, step.out_slot, out_shape);
+                out.data_mut().copy_from_slice(src_t.tensor().data());
+                for row in out.data_mut().chunks_exact_mut(c) {
+                    f(row);
+                }
+                put_tensor(acts, step.out_slot, out);
+                src_t.put_back(acts);
+            }
+        }
+    }
+
+    fn take_src<'a>(
+        &self,
+        acts: &mut ActivationArena,
+        src: Src,
+        shape: Nhwc,
+        batch: &'a Tensor,
+    ) -> SrcTensor<'a> {
+        match src {
+            Src::Input => SrcTensor::External(batch),
+            Src::Node(v) => {
+                let slot = self.value_slot[v].expect("live value has a slot");
+                SrcTensor::Slot(slot, take_tensor(acts, slot, shape))
+            }
+        }
+    }
+}
+
+/// A step input: either the caller's batch (borrowed) or a slot buffer
+/// moved into a Tensor for the duration of the step.
+enum SrcTensor<'a> {
+    External(&'a Tensor),
+    Slot(usize, Tensor),
+}
+
+impl SrcTensor<'_> {
+    fn tensor(&self) -> &Tensor {
+        match self {
+            SrcTensor::External(t) => t,
+            SrcTensor::Slot(_, t) => t,
+        }
+    }
+
+    fn put_back(self, acts: &mut ActivationArena) {
+        if let SrcTensor::Slot(slot, t) = self {
+            put_tensor(acts, slot, t);
+        }
+    }
+}
+
+fn at_batch(per_sample: Nhwc, n: usize) -> Nhwc {
+    Nhwc::new(n, per_sample.h, per_sample.w, per_sample.c)
+}
+
+/// Move slot `slot`'s buffer out of the arena and into a Tensor of
+/// `shape` — no copy; the length is adjusted within the slot's reserved
+/// capacity (no allocation once the arena has seen the batch size).
+fn take_tensor(acts: &mut ActivationArena, slot: usize, shape: Nhwc) -> Tensor {
+    let mut v = acts.take(slot);
+    debug_assert!(v.capacity() >= shape.len(), "slot under-reserved");
+    v.resize(shape.len(), 0.0);
+    Tensor::from_vec(shape, v)
+}
+
+/// Return a slot buffer taken by [`take_tensor`].
+fn put_tensor(acts: &mut ActivationArena, slot: usize, t: Tensor) {
+    acts.put(slot, t.into_vec());
+}
+
+/// Write `src` zero-padded by (`ph`, `pw`) into `dst` (shape checked).
+fn pad_into(src: &Tensor, ph: usize, pw: usize, dst: &mut Tensor) {
+    let s = src.shape();
+    let d = dst.shape();
+    assert_eq!((d.n, d.h, d.w, d.c), (s.n, s.h + 2 * ph, s.w + 2 * pw, s.c));
+    // The slot may hold stale bytes from a previous owner: zero the halo
+    // rows/cols, then copy the interior rows contiguously.
+    dst.data_mut().fill(0.0);
+    let row = s.w * s.c;
+    let drow = d.w * d.c;
+    for n in 0..s.n {
+        for h in 0..s.h {
+            let src_off = (n * s.h + h) * row;
+            let dst_off = (n * d.h + h + ph) * drow + pw * s.c;
+            dst.data_mut()[dst_off..dst_off + row]
+                .copy_from_slice(&src.data()[src_off..src_off + row]);
+        }
+    }
+}
+
+/// Max-pool `src` into `dst` over `k × k` windows with stride `s`.
+fn max_pool_into(src: &Tensor, k: usize, s: usize, dst: &mut Tensor) {
+    let sh = src.shape();
+    let d = dst.shape();
+    assert_eq!((d.h, d.w), ((sh.h - k) / s + 1, (sh.w - k) / s + 1));
+    for n in 0..sh.n {
+        for y in 0..d.h {
+            for x0 in 0..d.w {
+                for c in 0..sh.c {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            m = m.max(src.at(n, y * s + dy, x0 * s + dx, c));
+                        }
+                    }
+                    *dst.at_mut(n, y, x0, c) = m;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The pass pipeline.
+// ---------------------------------------------------------------------
+
+/// Best-fit slot allocation for the liveness pass: the smallest free
+/// slot that already fits `elems`; else grow the largest free slot;
+/// else open a new one.
+fn alloc_slot(
+    elems: usize,
+    slot_elems: &mut Vec<usize>,
+    free: &mut Vec<usize>,
+    slot_live: &mut Vec<usize>,
+) -> usize {
+    let fit = free
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| slot_elems[**s] >= elems)
+        .min_by_key(|(_, s)| slot_elems[**s])
+        .map(|(i, _)| i);
+    let pick = fit.or_else(|| {
+        free.iter()
+            .enumerate()
+            .max_by_key(|(_, s)| slot_elems[**s])
+            .map(|(i, _)| i)
+    });
+    match pick {
+        Some(i) => {
+            let s = free.swap_remove(i);
+            slot_elems[s] = slot_elems[s].max(elems);
+            slot_live[s] += 1;
+            s
+        }
+        None => {
+            slot_elems.push(elems);
+            slot_live.push(1);
+            slot_elems.len() - 1
+        }
+    }
+}
+
+fn compile(graph: &Graph) -> ExecGraph {
+    let shapes = graph.infer_shapes(1);
+    let n_nodes = graph.node_count();
+
+    // -- dead-node elimination: walk back from the output --------------
+    let mut live = vec![false; n_nodes];
+    let mut stack: Vec<NodeId> = Vec::new();
+    if let Src::Node(v) = graph.output() {
+        stack.push(v);
+    }
+    while let Some(v) = stack.pop() {
+        if live[v] {
+            continue;
+        }
+        live[v] = true;
+        for s in &graph.node(v).srcs {
+            if let Src::Node(u) = s {
+                stack.push(*u);
+            }
+        }
+    }
+
+    // -- fusion: conv absorbed into its sole relu consumer -------------
+    // consumers[v] = total consumptions of v among live nodes (+1 if v is
+    // the graph output).
+    let mut consumers = vec![0usize; n_nodes];
+    for (i, node) in graph.nodes().iter().enumerate() {
+        if !live[i] {
+            continue;
+        }
+        for s in &node.srcs {
+            if let Src::Node(u) = s {
+                consumers[*u] += 1;
+            }
+        }
+    }
+    if let Src::Node(v) = graph.output() {
+        consumers[v] += 1;
+    }
+    // fused_into[relu_id] = conv_id, absorbed_by[conv_id] = relu_id for
+    // every absorbed relu (two directions of the same pairing).
+    let mut fused_into: Vec<Option<NodeId>> = vec![None; n_nodes];
+    let mut absorbed_by: Vec<Option<NodeId>> = vec![None; n_nodes];
+    for (r, node) in graph.nodes().iter().enumerate() {
+        if !live[r] || !matches!(node.op, Op::Layer(Layer::Relu)) {
+            continue;
+        }
+        if let [Src::Node(c)] = node.srcs.as_slice() {
+            let is_conv = matches!(graph.node(*c).op, Op::Layer(Layer::Conv { .. }));
+            if is_conv && consumers[*c] == 1 {
+                fused_into[r] = Some(*c);
+                absorbed_by[*c] = Some(r);
+            }
+        }
+    }
+
+    // -- build the step list (node order is already topological) -------
+    struct ProtoStep {
+        node: NodeId,
+        srcs: Vec<Src>,
+        out_value: NodeId,
+        fused_relu: bool,
+        pad: Option<usize>, // per-sample padded elems
+    }
+    let mut protos: Vec<ProtoStep> = Vec::new();
+    for (i, node) in graph.nodes().iter().enumerate() {
+        if !live[i] || fused_into[i].is_some() {
+            continue;
+        }
+        // A conv step may carry an absorbed relu.
+        let absorbed = absorbed_by[i];
+        let out_value = absorbed.unwrap_or(i);
+        let pad = match &node.op {
+            Op::Layer(Layer::Conv { ph, pw, .. }) if *ph > 0 || *pw > 0 => {
+                let in_shape = match node.srcs[0] {
+                    Src::Input => {
+                        let (h, w, c) = graph.input_hwc;
+                        Nhwc::new(1, h, w, c)
+                    }
+                    Src::Node(v) => shapes[v],
+                };
+                Some(Nhwc::new(1, in_shape.h + 2 * ph, in_shape.w + 2 * pw, in_shape.c).len())
+            }
+            _ => None,
+        };
+        protos.push(ProtoStep {
+            node: i,
+            srcs: node.srcs.clone(),
+            out_value,
+            fused_relu: absorbed.is_some(),
+            pad,
+        });
+    }
+
+    // -- liveness: remaining-use counts per value ----------------------
+    let mut uses = vec![0usize; n_nodes];
+    for p in &protos {
+        for s in &p.srcs {
+            if let Src::Node(v) = s {
+                uses[*v] += 1;
+            }
+        }
+    }
+    let output = graph.output();
+    let out_value_id = match output {
+        Src::Node(v) => Some(v),
+        Src::Input => None,
+    };
+
+    // -- slot assignment: best-fit interval coloring -------------------
+    let mut slot_elems: Vec<usize> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    // How many live values currently share each slot (aliases share).
+    let mut slot_live: Vec<usize> = Vec::new();
+    let mut value_slot: Vec<Option<usize>> = vec![None; n_nodes];
+
+    // Independent live-set accounting (values, alias groups counted
+    // once) — the lower bound the packing is compared against.
+    let mut live_elems = 0usize;
+    let mut max_live = 0usize;
+    // alias_root[v] = the value whose storage v shares (itself usually).
+    let mut alias_root: Vec<NodeId> = (0..n_nodes).collect();
+    let mut root_live: std::collections::HashMap<NodeId, usize> = std::collections::HashMap::new();
+
+    let mut steps: Vec<Step> = Vec::new();
+    let mut remaining = uses.clone();
+    for p in &protos {
+        let node = graph.node(p.node);
+        let out_elems = shapes[p.out_value].len();
+        // Pad buffer lives only during this step.
+        let pad_slot = p.pad.map(|elems| {
+            live_elems += elems;
+            alloc_slot(elems, &mut slot_elems, &mut free, &mut slot_live)
+        });
+        // Alias / in-place decisions:
+        //  * flatten over a node value is a pure reshape — share the slot
+        //    (read-only, so sharing is always safe);
+        //  * relu/softmax run in place only when their input dies here
+        //    AND no other live value (e.g. a flatten alias) shares the
+        //    slot — an in-place write would clobber that value.
+        let alias_src = match (&node.op, p.srcs.as_slice()) {
+            (Op::Layer(Layer::Flatten), [Src::Node(v)]) => Some(*v),
+            (Op::Layer(Layer::Relu | Layer::Softmax), [Src::Node(v)])
+                if remaining[*v] == 1
+                    && Some(*v) != out_value_id
+                    && slot_live[value_slot[*v].expect("live value has a slot")] == 1 =>
+            {
+                Some(*v)
+            }
+            _ => None,
+        };
+        let out_slot = match alias_src {
+            Some(v) => {
+                let s = value_slot[v].expect("alias source is live");
+                slot_live[s] += 1;
+                alias_root[p.out_value] = alias_root[v];
+                s
+            }
+            None => {
+                live_elems += out_elems;
+                alloc_slot(out_elems, &mut slot_elems, &mut free, &mut slot_live)
+            }
+        };
+        value_slot[p.out_value] = Some(out_slot);
+        *root_live.entry(alias_root[p.out_value]).or_insert(0) += 1;
+        max_live = max_live.max(live_elems);
+
+        steps.push(Step {
+            node: p.node,
+            srcs: p.srcs.clone(),
+            out_value: p.out_value,
+            out_slot,
+            pad_slot,
+            fused_relu: p.fused_relu,
+        });
+
+        // Deaths after the step: consumed values whose uses hit zero
+        // (the output value never dies), and the pad buffer.
+        if let Some(ps) = pad_slot {
+            live_elems -= p.pad.unwrap();
+            slot_live[ps] -= 1;
+            if slot_live[ps] == 0 {
+                free.push(ps);
+            }
+        }
+        for s in &p.srcs {
+            if let Src::Node(v) = s {
+                remaining[*v] -= 1;
+                if remaining[*v] == 0 && Some(*v) != out_value_id {
+                    let slot = value_slot[*v].expect("dying value had a slot");
+                    slot_live[slot] -= 1;
+                    if slot_live[slot] == 0 {
+                        free.push(slot);
+                    }
+                    let root = alias_root[*v];
+                    let rc = root_live.get_mut(&root).expect("root accounted");
+                    *rc -= 1;
+                    if *rc == 0 {
+                        live_elems -= shapes[root].len();
+                    }
+                }
+            }
+        }
+    }
+
+    ExecGraph {
+        steps,
+        shapes,
+        slot_elems,
+        value_slot,
+        max_live_elems: max_live,
+        output,
+    }
+}

@@ -47,16 +47,31 @@ impl Layer {
     }
 
     /// Output shape for a given input shape. Panics on geometry mismatch
-    /// (caught at model load by [`super::Model::validate`]).
+    /// (the in-memory construction path; the model loader goes through
+    /// [`Layer::try_output_shape`] so a corrupt file errors instead).
     pub fn output_shape(&self, input: Nhwc) -> Nhwc {
-        match self {
+        self.try_output_shape(input).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`Layer::output_shape`] with geometry mismatches reported as
+    /// `Err` instead of a panic — what file loading validates with.
+    pub fn try_output_shape(&self, input: Nhwc) -> Result<Nhwc, String> {
+        Ok(match self {
             Layer::Conv {
                 kernel, sh, sw, ph, pw, ..
             } => {
                 let ks: KernelShape = kernel.shape();
-                assert_eq!(input.c, ks.ic, "conv expects {} channels, got {}", ks.ic, input.c);
+                if input.c != ks.ic {
+                    return Err(format!("conv expects {} channels, got {}", ks.ic, input.c));
+                }
                 let h = input.h + 2 * ph;
                 let w = input.w + 2 * pw;
+                if h < ks.kh || w < ks.kw || *sh == 0 || *sw == 0 {
+                    return Err(format!(
+                        "conv kernel {}x{} stride {}x{} does not fit a {h}x{w} input",
+                        ks.kh, ks.kw, sh, sw
+                    ));
+                }
                 Nhwc::new(
                     input.n,
                     (h - ks.kh) / sh + 1,
@@ -65,23 +80,28 @@ impl Layer {
                 )
             }
             Layer::Relu | Layer::Softmax => input,
-            Layer::MaxPool { k, s } => Nhwc::new(
-                input.n,
-                (input.h - k) / s + 1,
-                (input.w - k) / s + 1,
-                input.c,
-            ),
+            Layer::MaxPool { k, s } => {
+                if input.h < *k || input.w < *k || *k == 0 || *s == 0 {
+                    return Err(format!(
+                        "maxpool {k}x{k}/{s} does not fit a {}x{} input",
+                        input.h, input.w
+                    ));
+                }
+                Nhwc::new(
+                    input.n,
+                    (input.h - k) / s + 1,
+                    (input.w - k) / s + 1,
+                    input.c,
+                )
+            }
             Layer::Flatten => Nhwc::new(input.n, 1, 1, input.h * input.w * input.c),
             Layer::Dense { d_in, d_out, .. } => {
-                assert_eq!(
-                    input.h * input.w * input.c,
-                    *d_in,
-                    "dense expects {} features",
-                    d_in
-                );
+                if input.h * input.w * input.c != *d_in {
+                    return Err(format!("dense expects {d_in} features"));
+                }
                 Nhwc::new(input.n, 1, 1, *d_out)
             }
-        }
+        })
     }
 
     /// Parameter count (weights + biases).

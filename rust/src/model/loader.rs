@@ -3,18 +3,40 @@
 //! is not in the offline registry), with a mirrored writer in
 //! `python/compile/trainer.py`.
 //!
+//! Two wire versions share the reader:
+//!
+//! * **v1** (`MECW0001`) — the historical sequential format. Loading
+//!   builds the same chain through [`Graph::sequential`], so v1 files
+//!   keep working unchanged, and [`save_mecw`] still emits v1 bytes for
+//!   purely sequential models (byte-identical round trips with old
+//!   files).
+//! * **v2** (`MECW0002`) — the graph format: nodes carry explicit input
+//!   edges, so residual/branching topologies (`Add`, `Concat`)
+//!   serialize. Saving picks v2 automatically whenever the graph is not
+//!   a chain.
+//!
 //! ```text
-//! magic   8 B   "MECW0001"
-//! name    u32 len + utf-8 bytes
-//! input   u32 h, u32 w, u32 c
-//! layers  u32 count, then per layer:
-//!   tag u32: 0=conv 1=relu 2=maxpool 3=flatten 4=dense 5=softmax
-//!   conv:    u32 kh,kw,ic,kc,sh,sw,ph,pw; f32[kh·kw·ic·kc] weights
-//!            (row-major khkwic×kc, exactly the GEMM layout); f32[kc] bias
-//!   maxpool: u32 k, s
-//!   dense:   u32 d_in, d_out; f32[d_in·d_out] (row-major); f32[d_out]
+//! v1: magic   8 B   "MECW0001"
+//!     name    u32 len + utf-8 bytes
+//!     input   u32 h, u32 w, u32 c
+//!     layers  u32 count, then per layer:
+//!       tag u32: 0=conv 1=relu 2=maxpool 3=flatten 4=dense 5=softmax
+//!       conv:    u32 kh,kw,ic,kc,sh,sw,ph,pw; f32[kh·kw·ic·kc] weights
+//!                (row-major khkwic×kc, exactly the GEMM layout); f32[kc] bias
+//!       maxpool: u32 k, s
+//!       dense:   u32 d_in, d_out; f32[d_in·d_out] (row-major); f32[d_out]
+//!
+//! v2: magic   8 B   "MECW0002"
+//!     name, input as v1
+//!     nodes   u32 count, then per node:
+//!       tag u32: v1 tags, plus 6=add 7=concat
+//!       srcs    u32 count, then u32 each (0xFFFF_FFFF = graph input,
+//!               else node id — must be < this node's id)
+//!       payload as v1 per tag (add/concat carry none)
+//!     output  u32 (0xFFFF_FFFF = graph input, else node id)
 //! ```
 
+use crate::model::graph_ir::{Graph, GraphBuilder, Node, Op, Src};
 use crate::model::layer::Layer;
 use crate::model::Model;
 use crate::tensor::{Kernel, KernelShape};
@@ -22,6 +44,10 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 pub const MAGIC: &[u8; 8] = b"MECW0001";
+pub const MAGIC_V2: &[u8; 8] = b"MECW0002";
+
+/// Wire encoding of [`Src::Input`].
+const SRC_INPUT: u32 = u32::MAX;
 
 #[derive(Debug)]
 pub enum LoadError {
@@ -90,35 +116,16 @@ impl<R: Read> Reader<R> {
         self.r.read_exact(&mut b)?;
         String::from_utf8(b).map_err(|e| LoadError::Malformed(e.to_string()))
     }
-}
 
-/// Load a model from a `.mecw` file.
-pub fn load_mecw(path: impl AsRef<Path>) -> Result<Model, LoadError> {
-    let f = std::fs::File::open(path)?;
-    let mut r = Reader {
-        r: std::io::BufReader::new(f),
-    };
-    let mut magic = [0u8; 8];
-    r.r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(LoadError::BadMagic);
-    }
-    let name = r.string()?;
-    let (h, w, c) = (r.usize()?, r.usize()?, r.usize()?);
-    let n_layers = r.usize()?;
-    if n_layers > 10_000 {
-        return Err(LoadError::Malformed(format!("{n_layers} layers")));
-    }
-    let mut layers = Vec::with_capacity(n_layers);
-    for _ in 0..n_layers {
-        let tag = r.u32()?;
-        layers.push(match tag {
+    /// The per-tag payload shared by both wire versions.
+    fn layer(&mut self, tag: u32) -> Result<Layer, LoadError> {
+        Ok(match tag {
             0 => {
-                let (kh, kw, ic, kc) = (r.usize()?, r.usize()?, r.usize()?, r.usize()?);
-                let (sh, sw, ph, pw) = (r.usize()?, r.usize()?, r.usize()?, r.usize()?);
+                let (kh, kw, ic, kc) = (self.usize()?, self.usize()?, self.usize()?, self.usize()?);
+                let (sh, sw, ph, pw) = (self.usize()?, self.usize()?, self.usize()?, self.usize()?);
                 let shape = KernelShape::new(kh, kw, ic, kc);
-                let weights = r.f32_vec(shape.len())?;
-                let bias = r.f32_vec(kc)?;
+                let weights = self.f32_vec(shape.len())?;
+                let bias = self.f32_vec(kc)?;
                 Layer::Conv {
                     kernel: Kernel::from_vec(shape, weights),
                     bias,
@@ -130,65 +137,215 @@ pub fn load_mecw(path: impl AsRef<Path>) -> Result<Model, LoadError> {
             }
             1 => Layer::Relu,
             2 => {
-                let (k, s) = (r.usize()?, r.usize()?);
+                let (k, s) = (self.usize()?, self.usize()?);
                 Layer::MaxPool { k, s }
             }
             3 => Layer::Flatten,
             4 => {
-                let (d_in, d_out) = (r.usize()?, r.usize()?);
-                let w = r.f32_vec(d_in * d_out)?;
-                let bias = r.f32_vec(d_out)?;
+                let (d_in, d_out) = (self.usize()?, self.usize()?);
+                let w = self.f32_vec(d_in * d_out)?;
+                let bias = self.f32_vec(d_out)?;
                 Layer::Dense { w, bias, d_in, d_out }
             }
             5 => Layer::Softmax,
             t => return Err(LoadError::UnknownTag(t)),
-        });
+        })
     }
-    let model = Model::new(&name, (h, w, c), layers);
-    model.validate(); // panics on inconsistent chaining — fail fast at load
-    Ok(model)
 }
 
-/// Save a model to `.mecw` (round-trip testing; the production writer is
-/// the python trainer).
+fn decode_src(raw: u32, before: usize) -> Result<Src, LoadError> {
+    if raw == SRC_INPUT {
+        Ok(Src::Input)
+    } else if (raw as usize) < before {
+        Ok(Src::Node(raw as usize))
+    } else {
+        Err(LoadError::Malformed(format!(
+            "source {raw} is not an earlier node (building node {before})"
+        )))
+    }
+}
+
+/// Load a model from a `.mecw` file (either wire version).
+pub fn load_mecw(path: impl AsRef<Path>) -> Result<Model, LoadError> {
+    let f = std::fs::File::open(path)?;
+    let mut r = Reader {
+        r: std::io::BufReader::new(f),
+    };
+    let mut magic = [0u8; 8];
+    r.r.read_exact(&mut magic)?;
+    let v2 = match &magic {
+        m if m == MAGIC => false,
+        m if m == MAGIC_V2 => true,
+        _ => return Err(LoadError::BadMagic),
+    };
+    let name = r.string()?;
+    let (h, w, c) = (r.usize()?, r.usize()?, r.usize()?);
+    let n_nodes = r.usize()?;
+    if n_nodes > 10_000 {
+        return Err(LoadError::Malformed(format!("{n_nodes} nodes")));
+    }
+    let graph = if v2 {
+        let mut b = GraphBuilder::new(&name, (h, w, c));
+        for i in 0..n_nodes {
+            let tag = r.u32()?;
+            let n_srcs = r.usize()?;
+            // Sources may repeat (add(&[x, x]) is legal), so bound by a
+            // hard cap rather than the node count.
+            if n_srcs > 10_000 {
+                return Err(LoadError::Malformed(format!("{n_srcs} sources")));
+            }
+            let mut srcs = Vec::with_capacity(n_srcs);
+            for _ in 0..n_srcs {
+                srcs.push(decode_src(r.u32()?, i)?);
+            }
+            match tag {
+                6 => {
+                    if srcs.len() < 2 {
+                        return Err(LoadError::Malformed("add with < 2 inputs".into()));
+                    }
+                    b.add(&srcs);
+                }
+                7 => {
+                    if srcs.len() < 2 {
+                        return Err(LoadError::Malformed("concat with < 2 inputs".into()));
+                    }
+                    b.concat(&srcs);
+                }
+                t => {
+                    let layer = r.layer(t)?;
+                    if srcs.len() != 1 {
+                        return Err(LoadError::Malformed(format!(
+                            "layer tag {t} with {} inputs",
+                            srcs.len()
+                        )));
+                    }
+                    b.layer(srcs[0], layer);
+                }
+            }
+        }
+        let output = decode_src(r.u32()?, n_nodes)?;
+        // Shape inference over the decoded edges: a geometry-inconsistent
+        // file is a typed error, never an abort.
+        b.try_finish(output).map_err(LoadError::Malformed)?
+    } else {
+        let mut layers = Vec::with_capacity(n_nodes);
+        for _ in 0..n_nodes {
+            let tag = r.u32()?;
+            layers.push(r.layer(tag)?);
+        }
+        Graph::try_sequential(&name, (h, w, c), layers).map_err(LoadError::Malformed)?
+    };
+    Ok(Model::from_graph(graph))
+}
+
+/// Save a model to `.mecw`. Sequential chains keep emitting the v1 wire
+/// format (byte-identical with historical files); branching graphs emit
+/// v2 with explicit edges.
 pub fn save_mecw(model: &Model, path: impl AsRef<Path>) -> Result<(), LoadError> {
     let f = std::fs::File::create(path)?;
     let mut w = std::io::BufWriter::new(f);
+    let graph = model.graph();
+    match graph.as_sequential_layers() {
+        Some(layers) => write_v1(&mut w, &model.name, model.input_hwc, &layers)?,
+        None => write_v2(&mut w, graph)?,
+    }
+    Ok(())
+}
+
+fn write_v1<W: Write>(
+    w: &mut W,
+    name: &str,
+    (h, ww, c): (usize, usize, usize),
+    layers: &[Layer],
+) -> std::io::Result<()> {
     w.write_all(MAGIC)?;
-    write_str(&mut w, &model.name)?;
-    let (h, ww, c) = model.input_hwc;
-    for v in [h, ww, c, model.layers.len()] {
+    write_str(w, name)?;
+    for v in [h, ww, c, layers.len()] {
         w.write_all(&(v as u32).to_le_bytes())?;
     }
-    for layer in &model.layers {
-        match layer {
-            Layer::Conv {
-                kernel, bias, sh, sw, ph, pw,
-            } => {
-                w.write_all(&0u32.to_le_bytes())?;
-                let ks = kernel.shape();
-                for v in [ks.kh, ks.kw, ks.ic, ks.kc, *sh, *sw, *ph, *pw] {
-                    w.write_all(&(v as u32).to_le_bytes())?;
-                }
-                write_f32s(&mut w, kernel.data())?;
-                write_f32s(&mut w, bias)?;
-            }
-            Layer::Relu => w.write_all(&1u32.to_le_bytes())?,
-            Layer::MaxPool { k, s } => {
-                w.write_all(&2u32.to_le_bytes())?;
-                w.write_all(&(*k as u32).to_le_bytes())?;
-                w.write_all(&(*s as u32).to_le_bytes())?;
-            }
-            Layer::Flatten => w.write_all(&3u32.to_le_bytes())?,
-            Layer::Dense { w: dw, bias, d_in, d_out } => {
-                w.write_all(&4u32.to_le_bytes())?;
-                w.write_all(&(*d_in as u32).to_le_bytes())?;
-                w.write_all(&(*d_out as u32).to_le_bytes())?;
-                write_f32s(&mut w, dw)?;
-                write_f32s(&mut w, bias)?;
-            }
-            Layer::Softmax => w.write_all(&5u32.to_le_bytes())?,
+    for layer in layers {
+        write_layer(w, layer)?;
+    }
+    Ok(())
+}
+
+fn write_v2<W: Write>(w: &mut W, graph: &Graph) -> std::io::Result<()> {
+    w.write_all(MAGIC_V2)?;
+    write_str(w, &graph.name)?;
+    let (h, ww, c) = graph.input_hwc;
+    for v in [h, ww, c, graph.node_count()] {
+        w.write_all(&(v as u32).to_le_bytes())?;
+    }
+    for Node { op, srcs } in graph.nodes() {
+        let tag: u32 = match op {
+            Op::Layer(l) => layer_tag(l),
+            Op::Add => 6,
+            Op::Concat => 7,
+        };
+        w.write_all(&tag.to_le_bytes())?;
+        w.write_all(&(srcs.len() as u32).to_le_bytes())?;
+        for s in srcs {
+            w.write_all(&encode_src(*s).to_le_bytes())?;
         }
+        match op {
+            Op::Layer(l) => write_layer_payload(w, l)?,
+            Op::Add | Op::Concat => {}
+        }
+    }
+    w.write_all(&encode_src(graph.output()).to_le_bytes())?;
+    Ok(())
+}
+
+fn encode_src(s: Src) -> u32 {
+    match s {
+        Src::Input => SRC_INPUT,
+        Src::Node(v) => v as u32,
+    }
+}
+
+/// The one wire-tag table (shared by the v1 and v2 writers; the reader
+/// mirrors it in `Reader::layer`).
+fn layer_tag(layer: &Layer) -> u32 {
+    match layer {
+        Layer::Conv { .. } => 0,
+        Layer::Relu => 1,
+        Layer::MaxPool { .. } => 2,
+        Layer::Flatten => 3,
+        Layer::Dense { .. } => 4,
+        Layer::Softmax => 5,
+    }
+}
+
+/// v1 layer record: tag + payload.
+fn write_layer<W: Write>(w: &mut W, layer: &Layer) -> std::io::Result<()> {
+    w.write_all(&layer_tag(layer).to_le_bytes())?;
+    write_layer_payload(w, layer)
+}
+
+/// The tag-specific payload shared by v1 and v2 records.
+fn write_layer_payload<W: Write>(w: &mut W, layer: &Layer) -> std::io::Result<()> {
+    match layer {
+        Layer::Conv {
+            kernel, bias, sh, sw, ph, pw,
+        } => {
+            let ks = kernel.shape();
+            for v in [ks.kh, ks.kw, ks.ic, ks.kc, *sh, *sw, *ph, *pw] {
+                w.write_all(&(v as u32).to_le_bytes())?;
+            }
+            write_f32s(w, kernel.data())?;
+            write_f32s(w, bias)?;
+        }
+        Layer::MaxPool { k, s } => {
+            w.write_all(&(*k as u32).to_le_bytes())?;
+            w.write_all(&(*s as u32).to_le_bytes())?;
+        }
+        Layer::Dense { w: dw, bias, d_in, d_out } => {
+            w.write_all(&(*d_in as u32).to_le_bytes())?;
+            w.write_all(&(*d_out as u32).to_le_bytes())?;
+            write_f32s(w, dw)?;
+            write_f32s(w, bias)?;
+        }
+        Layer::Relu | Layer::Flatten | Layer::Softmax => {}
     }
     Ok(())
 }
@@ -248,7 +405,18 @@ mod tests {
         let loaded = load_mecw(&path).unwrap();
         assert_eq!(loaded.name, "roundtrip");
         assert_eq!(loaded.input_hwc, (6, 6, 2));
-        assert_eq!(loaded.layers, m.layers);
+        assert_eq!(loaded.graph(), m.graph());
+    }
+
+    #[test]
+    fn sequential_models_still_write_v1_bytes() {
+        let m = sample_model();
+        let dir = std::env::temp_dir().join("mecw_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.mecw");
+        save_mecw(&m, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], MAGIC, "sequential graphs keep the v1 magic");
     }
 
     #[test]

@@ -1,20 +1,24 @@
-//! CNN model graph: layers, forward executor, and the `.mecw` weight
-//! format produced by the build-time JAX trainer
-//! (`python/compile/trainer.py`).
+//! CNN model layer: the graph IR ([`graph_ir`]), the planned forward
+//! executor ([`graph`]), and the `.mecw` weight format produced by the
+//! build-time JAX trainer (`python/compile/trainer.py`).
 //!
-//! The executor is the library's deployment story: every convolution goes
-//! through the [`planner`](crate::planner) under the device's memory
-//! budget, workspaces are reused across layers and requests, and the same
-//! graph can also be executed through the PJRT path
-//! ([`runtime`](crate::runtime)) for cross-checking against the JAX
-//! artifacts.
+//! The executor is the library's deployment story: the graph compiles
+//! once through a pass pipeline (shape inference, conv+bias+relu
+//! fusion, dead-node elimination, activation liveness), every
+//! convolution goes through the [`planner`](crate::planner) under the
+//! device's memory budget, workspaces *and* activations are reused
+//! across nodes and requests, and the same graph can also be executed
+//! through the PJRT path ([`runtime`](crate::runtime)) for
+//! cross-checking against the JAX artifacts.
 
 pub mod evalset;
 pub mod graph;
+pub mod graph_ir;
 pub mod layer;
 pub mod loader;
 
 pub use evalset::EvalSet;
 pub use graph::{Model, PlanMemo, MAX_CACHED_GEOMETRIES_PER_LAYER};
+pub use graph_ir::{ExecGraph, Graph, GraphBuilder, Node, NodeId, Op, Src};
 pub use layer::Layer;
 pub use loader::{load_mecw, save_mecw, LoadError};

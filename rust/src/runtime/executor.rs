@@ -66,16 +66,16 @@ impl Executor for NativeExecutor {
 }
 
 /// Extract weight tensors from a loaded model in the AOT `weight_order`:
-/// per conv layer (kernel, bias), then dense (w, bias).
+/// per conv node (kernel, bias), then dense (w, bias), in node order.
 pub fn model_weight_inputs(model: &Model) -> Vec<Vec<f32>> {
     let mut out = Vec::new();
-    for layer in &model.layers {
-        match layer {
-            crate::model::Layer::Conv { kernel, bias, .. } => {
+    for node in model.graph().nodes() {
+        match &node.op {
+            crate::model::Op::Layer(crate::model::Layer::Conv { kernel, bias, .. }) => {
                 out.push(kernel.data().to_vec());
                 out.push(bias.clone());
             }
-            crate::model::Layer::Dense { w, bias, .. } => {
+            crate::model::Op::Layer(crate::model::Layer::Dense { w, bias, .. }) => {
                 out.push(w.clone());
                 out.push(bias.clone());
             }

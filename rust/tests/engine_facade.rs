@@ -220,6 +220,113 @@ fn autotuned_engine_matches_cost_model_engine_numerically() {
 }
 
 #[test]
+fn override_on_a_dead_conv_node_is_a_typed_build_error() {
+    // A conv branch the pass pipeline eliminates as dead would pass the
+    // is-it-a-conv check yet never be validated or applied — that must
+    // be a build error, not a silent no-op.
+    use mec::model::{GraphBuilder, Model};
+    let mut rng = Rng::new(0xdead);
+    let mut b = GraphBuilder::new("dead-override", (6, 6, 1));
+    let x = b.input();
+    let live = b.conv(
+        x,
+        Kernel::random(KernelShape::new(3, 3, 1, 2), &mut rng),
+        vec![0.0; 2],
+        1,
+        1,
+        0,
+        0,
+    );
+    let _dead = b.conv(
+        x,
+        Kernel::random(KernelShape::new(3, 3, 1, 4), &mut rng),
+        vec![0.0; 4],
+        1,
+        1,
+        0,
+        0,
+    );
+    let model = Model::from_graph(b.finish(live));
+    let err = Engine::builder(model)
+        .algo_override(1, AlgoKind::Mec) // node 1 is the dead conv
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, EngineError::InvalidConfig(_)), "{err:?}");
+}
+
+#[test]
+fn calibrated_q16_engine_uses_static_activation_scales() {
+    use mec::model::EvalSet;
+    let mut rng = Rng::new(0xca1);
+    let mut sample = vec![0.0f32; 64];
+    rng.fill_uniform(&mut sample, -1.0, 1.0);
+    let eval = EvalSet {
+        h: 8,
+        w: 8,
+        c: 1,
+        samples: vec![sample.clone()],
+        labels: vec![0],
+    };
+
+    // q16 + calibration: the build records a static scale per conv node.
+    let calibrated = Engine::builder(classifier_model(8))
+        .precision(Precision::Q16)
+        .calibration(eval.clone())
+        .build()
+        .unwrap();
+    let report = &calibrated.plan_report()[0];
+    let qp = report
+        .act_qparams
+        .expect("calibrated q16 build bakes an activation scale");
+    assert!(qp.scale > 0.0);
+    assert_eq!(
+        calibrated.model().activation_qparams(report.layer),
+        Some(qp)
+    );
+
+    // On the calibration sample itself the static scale equals the
+    // dynamic abs-max, so the two engines agree bitwise.
+    let dynamic = Engine::builder(classifier_model(8))
+        .precision(Precision::Q16)
+        .build()
+        .unwrap();
+    assert!(dynamic.plan_report()[0].act_qparams.is_none());
+    let a = calibrated.session().infer(&sample).unwrap();
+    let b = dynamic.session().infer(&sample).unwrap();
+    assert_eq!(a.scores, b.scores, "static scale diverged on its own sample");
+
+    // Other inputs stay within the q16 grid of each other (the scales
+    // differ only by the inputs' abs-max ratio).
+    let mut other = vec![0.0f32; 64];
+    rng.fill_uniform(&mut other, -0.9, 0.9);
+    let a = calibrated.session().infer(&other).unwrap();
+    let b = dynamic.session().infer(&other).unwrap();
+    mec::util::assert_allclose(&a.scores, &b.scores, 5e-2, "calibrated vs dynamic");
+
+    // f32 builds ignore calibration (the scale is meaningless there)...
+    let f32_engine = Engine::builder(classifier_model(8))
+        .calibration(eval)
+        .build()
+        .unwrap();
+    assert!(f32_engine.plan_report()[0].act_qparams.is_none());
+
+    // ...and a shape-mismatched calibration set is a typed config error.
+    let bad = EvalSet {
+        h: 4,
+        w: 4,
+        c: 1,
+        samples: vec![vec![0.0; 16]],
+        labels: vec![0],
+    };
+    let err = Engine::builder(classifier_model(8))
+        .precision(Precision::Q16)
+        .calibration(bad)
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, EngineError::InvalidConfig(_)), "{err:?}");
+}
+
+#[test]
 fn engine_is_immutable_and_shareable_across_threads() {
     // Engine: Send + Sync by construction (compile-time check), and the
     // same Arc serves sessions from many threads at once.

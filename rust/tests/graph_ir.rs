@@ -1,0 +1,415 @@
+//! Graph IR contract tests — the acceptance criteria of the DAG + pass
+//! pipeline redesign:
+//!
+//! * a `Graph::sequential` model is **bitwise identical** to a
+//!   hand-rolled per-layer reference interpreter (same weights, same
+//!   input), across random layer stacks and batch sizes — fusion,
+//!   slot reuse, and in-place execution must never change a bit;
+//! * conv+bias+relu fusion equals the unfused reference exactly;
+//! * `Add`/`Concat` compute what they say;
+//! * on a diamond (residual) graph the activation arena's tracked peak
+//!   equals the liveness plan's **max live set** — not the sum of node
+//!   outputs — and an `Engine`/`Session` serves the graph with zero
+//!   tracked allocations in steady state.
+
+use mec::conv::{convolve, AlgoKind, ConvContext};
+use mec::gemm::{gemm_ex, MatMut, MatRef};
+use mec::memory::{self, measure_peak};
+use mec::model::{GraphBuilder, Layer, Model};
+use mec::tensor::{ConvShape, Kernel, KernelShape, Nhwc, Tensor};
+use mec::util::Rng;
+
+/// Reference interpreter: evaluate `layers` sequentially with the
+/// one-shot primitives (no graph, no fusion, no arena). Bitwise ground
+/// truth for the compiled executor when the model pins `algo`.
+fn reference_forward(
+    layers: &[Layer],
+    algo: AlgoKind,
+    ctx: &ConvContext,
+    input: &Tensor,
+) -> Tensor {
+    let mut x = input.clone();
+    for layer in layers {
+        x = match layer {
+            Layer::Conv { kernel, bias, sh, sw, ph, pw } => {
+                let padded = if *ph > 0 || *pw > 0 {
+                    x.pad_spatial(*ph, *pw)
+                } else {
+                    x
+                };
+                let cs = ConvShape::new(padded.shape(), kernel.shape(), *sh, *sw);
+                let mut out = convolve(algo, ctx, &cs, &padded, kernel);
+                let kc = kernel.shape().kc;
+                for chunk in out.data_mut().chunks_exact_mut(kc) {
+                    for (v, b) in chunk.iter_mut().zip(bias) {
+                        *v += b;
+                    }
+                }
+                out
+            }
+            Layer::Relu => {
+                let mut out = x;
+                for v in out.data_mut() {
+                    *v = v.max(0.0);
+                }
+                out
+            }
+            Layer::MaxPool { k, s } => {
+                let sh = x.shape();
+                let (oh, ow) = ((sh.h - k) / s + 1, (sh.w - k) / s + 1);
+                let mut out = Tensor::zeros(Nhwc::new(sh.n, oh, ow, sh.c));
+                for n in 0..sh.n {
+                    for y in 0..oh {
+                        for x0 in 0..ow {
+                            for c in 0..sh.c {
+                                let mut m = f32::NEG_INFINITY;
+                                for dy in 0..*k {
+                                    for dx in 0..*k {
+                                        m = m.max(x.at(n, y * s + dy, x0 * s + dx, c));
+                                    }
+                                }
+                                *out.at_mut(n, y, x0, c) = m;
+                            }
+                        }
+                    }
+                }
+                out
+            }
+            Layer::Flatten => {
+                let sh = x.shape();
+                Tensor::from_vec(Nhwc::new(sh.n, 1, 1, sh.h * sh.w * sh.c), x.into_vec())
+            }
+            Layer::Dense { w, bias, d_in, d_out } => {
+                let n = x.shape().n;
+                let mut out = Tensor::zeros(Nhwc::new(n, 1, 1, *d_out));
+                let a = MatRef::new(x.data(), n, *d_in);
+                let b = MatRef::new(w, *d_in, *d_out);
+                let mut c = MatMut::new(out.data_mut(), n, *d_out);
+                gemm_ex(a, b, &mut c, 1.0, 0.0, ctx.threads, ctx.blocks);
+                for row in out.data_mut().chunks_exact_mut(*d_out) {
+                    for (v, bb) in row.iter_mut().zip(bias) {
+                        *v += bb;
+                    }
+                }
+                out
+            }
+            Layer::Softmax => {
+                let mut out = x;
+                let c = out.shape().c;
+                for row in out.data_mut().chunks_exact_mut(c) {
+                    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let mut sum = 0.0;
+                    for v in row.iter_mut() {
+                        *v = (*v - m).exp();
+                        sum += *v;
+                    }
+                    for v in row.iter_mut() {
+                        *v /= sum;
+                    }
+                }
+                out
+            }
+        };
+    }
+    x
+}
+
+fn classifier_layers(rng: &mut Rng, ic: usize, hw: usize) -> Vec<Layer> {
+    let kc = rng.range(2, 5);
+    let pooled = hw / 2;
+    let d_in = pooled * pooled * kc;
+    let d_out = rng.range(2, 5);
+    vec![
+        Layer::Conv {
+            kernel: Kernel::random(KernelShape::new(3, 3, ic, kc), rng),
+            bias: {
+                let mut b = vec![0.0; kc];
+                rng.fill_uniform(&mut b, -0.2, 0.2);
+                b
+            },
+            sh: 1,
+            sw: 1,
+            ph: 1,
+            pw: 1,
+        },
+        Layer::Relu,
+        Layer::MaxPool { k: 2, s: 2 },
+        Layer::Flatten,
+        Layer::Dense {
+            w: {
+                let mut w = vec![0.0; d_in * d_out];
+                rng.fill_uniform(&mut w, -0.4, 0.4);
+                w
+            },
+            bias: vec![0.1; d_out],
+            d_in,
+            d_out,
+        },
+        Layer::Softmax,
+    ]
+}
+
+#[test]
+fn sequential_graph_is_bitwise_identical_to_reference_interpreter() {
+    let mut rng = Rng::new(0x6a1);
+    let ctx = ConvContext::default();
+    for case in 0..6 {
+        let hw = [6usize, 8, 10][case % 3];
+        let ic = rng.range(1, 4);
+        let layers = classifier_layers(&mut rng, ic, hw);
+        for algo in [AlgoKind::Direct, AlgoKind::Im2col, AlgoKind::Mec] {
+            let mut m = Model::new("prop", (hw, hw, ic), layers.clone());
+            m.pin_algo(algo);
+            for batch in [1usize, 3] {
+                let input = Tensor::random(Nhwc::new(batch, hw, hw, ic), &mut rng);
+                let want = reference_forward(&layers, algo, &ctx, &input);
+                let mut arena = mec::memory::Arena::new();
+                let got = m.forward(&ctx, &input, &mut arena);
+                assert_eq!(got.shape(), want.shape());
+                assert_eq!(
+                    got.data(),
+                    want.data(),
+                    "case {case} {} batch {batch}: graph executor diverged bitwise",
+                    algo.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_conv_relu_equals_unfused_reference() {
+    // Fused (conv→relu absorbed into the epilogue) vs the same conv
+    // model followed by a standalone relu-only model: bitwise equality
+    // — comfortably inside any f32 ulp bound.
+    let mut rng = Rng::new(0xf5e);
+    let kernel = Kernel::random(KernelShape::new(3, 3, 2, 5), &mut rng);
+    let bias = vec![-0.3, 0.2, 0.0, 0.1, -0.05];
+    let conv = Layer::Conv {
+        kernel,
+        bias,
+        sh: 1,
+        sw: 1,
+        ph: 1,
+        pw: 1,
+    };
+    let fused = Model::new("fused", (9, 9, 2), vec![conv.clone(), Layer::Relu]);
+    assert_eq!(
+        fused.exec().steps().len(),
+        1,
+        "fusion pass should absorb the relu"
+    );
+    let conv_only = Model::new("conv", (9, 9, 2), vec![conv]);
+    let relu_only = Model::new("relu", (9, 9, 5), vec![Layer::Relu]);
+    assert_eq!(relu_only.exec().steps().len(), 1, "standalone relu executes");
+    let ctx = ConvContext::default();
+    let mut arena = mec::memory::Arena::new();
+    let input = Tensor::random(Nhwc::new(2, 9, 9, 2), &mut rng);
+    let a = fused.forward(&ctx, &input, &mut arena);
+    let mid = conv_only.forward(&ctx, &input, &mut arena);
+    let b = relu_only.forward(&ctx, &mid, &mut arena);
+    assert_eq!(a.shape(), b.shape());
+    assert_eq!(a.data(), b.data(), "fused epilogue diverged from relu∘conv");
+}
+
+#[test]
+fn add_and_concat_compute_reference_values() {
+    let mut rng = Rng::new(0xadc);
+    let k1 = Kernel::random(KernelShape::new(1, 1, 2, 3), &mut rng);
+    let k2 = Kernel::random(KernelShape::new(1, 1, 2, 3), &mut rng);
+
+    // add(conv1(x), conv2(x)) — both 1×1 so shapes trivially agree.
+    let mut b = GraphBuilder::new("add", (4, 4, 2));
+    let x = b.input();
+    let c1 = b.conv(x, k1.clone(), vec![0.0; 3], 1, 1, 0, 0);
+    let c2 = b.conv(x, k2.clone(), vec![0.0; 3], 1, 1, 0, 0);
+    let sum = b.add(&[c1, c2]);
+    let m = Model::from_graph(b.finish(sum));
+    let input = Tensor::random(Nhwc::new(2, 4, 4, 2), &mut rng);
+    let ctx = ConvContext::default();
+    let mut arena = mec::memory::Arena::new();
+    let got = m.forward(&ctx, &input, &mut arena);
+    let ref1 = reference_forward(
+        &[Layer::Conv { kernel: k1.clone(), bias: vec![0.0; 3], sh: 1, sw: 1, ph: 0, pw: 0 }],
+        AlgoKind::Mec,
+        &ctx,
+        &input,
+    );
+    let ref2 = reference_forward(
+        &[Layer::Conv { kernel: k2.clone(), bias: vec![0.0; 3], sh: 1, sw: 1, ph: 0, pw: 0 }],
+        AlgoKind::Mec,
+        &ctx,
+        &input,
+    );
+    let want: Vec<f32> = ref1
+        .data()
+        .iter()
+        .zip(ref2.data())
+        .map(|(a, b)| a + b)
+        .collect();
+    assert_eq!(got.data(), &want[..], "add mismatch");
+
+    // concat(conv1(x), conv2(x)) interleaves channels per (n, h, w).
+    let mut b = GraphBuilder::new("concat", (4, 4, 2));
+    let x = b.input();
+    let c1 = b.conv(x, k1, vec![0.0; 3], 1, 1, 0, 0);
+    let c2 = b.conv(x, k2, vec![0.0; 3], 1, 1, 0, 0);
+    let cat = b.concat(&[c1, c2]);
+    let m = Model::from_graph(b.finish(cat));
+    assert_eq!(m.validate(), Nhwc::new(1, 4, 4, 6));
+    let got = m.forward(&ctx, &input, &mut arena);
+    for r in 0..2 * 4 * 4 {
+        assert_eq!(&got.data()[r * 6..r * 6 + 3], &ref1.data()[r * 3..r * 3 + 3]);
+        assert_eq!(&got.data()[r * 6 + 3..r * 6 + 6], &ref2.data()[r * 3..r * 3 + 3]);
+    }
+}
+
+/// The diamond of the acceptance criteria: conv → relu → {branch conv,
+/// identity} → add → relu, through the bench workload helper.
+fn diamond() -> Model {
+    let w = mec::bench::workload::by_name("cv10").unwrap();
+    mec::bench::workload::residual_block_model(&w, 16, 0x1e5)
+}
+
+#[test]
+fn diamond_activation_arena_peak_equals_max_live_set() {
+    let m = diamond();
+    let batch = 2;
+    // Analytic: the packing hit the interval-coloring lower bound, and
+    // that bound is strictly below the sum of node outputs (what the
+    // old per-node allocation paid).
+    assert_eq!(m.activation_bytes(batch), m.max_live_bytes(batch));
+    let sum_of_outputs: usize = (0..m.node_count())
+        .map(|i| m.exec().shape_of(i).len() * batch * 4)
+        .sum();
+    assert!(
+        m.activation_bytes(batch) < sum_of_outputs,
+        "liveness plan ({}) should beat sum-over-nodes ({})",
+        m.activation_bytes(batch),
+        sum_of_outputs
+    );
+    // Measured: a forward's tracked activation peak equals the plan.
+    let mut m = m;
+    m.plan(
+        &mec::planner::Planner::new(),
+        &mec::memory::Budget::unlimited(),
+        &ConvContext::default(),
+        batch,
+    );
+    let (h, w, c) = m.input_hwc;
+    let mut rng = Rng::new(5);
+    let input = Tensor::random(Nhwc::new(batch, h, w, c), &mut rng);
+    let ((), peak) = measure_peak(|| {
+        let mut arena = m.sized_arena();
+        let _ = m.forward(&ConvContext::default(), &input, &mut arena);
+    });
+    assert_eq!(
+        peak,
+        m.planned_workspace_bytes() + m.activation_bytes(batch),
+        "tracked peak must be workspace max + max-live activations"
+    );
+}
+
+#[test]
+fn diamond_serves_through_engine_with_zero_steady_state_allocations() {
+    let m = diamond();
+    let batch = 2;
+    let engine = mec::engine::Engine::builder(m)
+        .pin_batch_sizes(&[1, batch])
+        .build()
+        .expect("residual graph builds through the facade");
+    assert_eq!(
+        engine.activation_bytes(),
+        engine.model().max_live_bytes(batch),
+        "engine sizes sessions at the liveness plan's max live set"
+    );
+    let (h, w, c) = engine.input_hwc();
+    let mut rng = Rng::new(9);
+    let input = Tensor::random(Nhwc::new(batch, h, w, c), &mut rng);
+    let mut sample = vec![0.0f32; h * w * c];
+    rng.fill_uniform(&mut sample, -1.0, 1.0);
+    // Hold the tracker lock (via measure_peak) so parallel tests don't
+    // interfere with the steady-state deltas.
+    let ((), _peak) = measure_peak(|| {
+        let mut session = engine.session();
+        let want_batch = session.infer_batch(&input).unwrap();
+        let want_one = session.infer(&sample).unwrap();
+        let before = memory::current_bytes();
+        for rep in 0..3 {
+            let got = session.infer_batch(&input).unwrap();
+            assert_eq!(got.data(), want_batch.data(), "rep {rep}: batch diverged");
+            let got = session.infer(&sample).unwrap();
+            assert_eq!(got, want_one, "rep {rep}: single-sample diverged");
+            assert_eq!(
+                memory::current_bytes(),
+                before,
+                "rep {rep}: tracked allocation in steady state"
+            );
+        }
+        assert_eq!(session.activation_bytes(), engine.activation_bytes());
+        assert_eq!(session.workspace_bytes(), engine.workspace_bytes());
+    });
+}
+
+#[test]
+fn in_place_relu_does_not_clobber_a_live_flatten_alias() {
+    // c = conv(x); f = flatten(c); r = relu(c); out = add(f, flatten(r)).
+    // The flatten aliases c's slot, so the relu must NOT run in place on
+    // that slot even though c dies at the relu — an in-place write would
+    // corrupt f's data before the add reads it.
+    let mut rng = Rng::new(0xc10b);
+    let mut b = GraphBuilder::new("alias-hazard", (4, 4, 1));
+    let x = b.input();
+    let kernel = Kernel::random(KernelShape::new(1, 1, 1, 2), &mut rng);
+    let c = b.conv(x, kernel.clone(), vec![0.0; 2], 1, 1, 0, 0);
+    let f = b.flatten(c);
+    let r = b.relu(c);
+    let fr = b.flatten(r);
+    let sum = b.add(&[f, fr]);
+    let m = Model::from_graph(b.finish(sum));
+    let ctx = ConvContext::default();
+    let input = Tensor::random(Nhwc::new(2, 4, 4, 1), &mut rng);
+    let mut arena = mec::memory::Arena::new();
+    let got = m.forward(&ctx, &input, &mut arena);
+    // Reference: conv once, then c + relu(c) elementwise.
+    let conv = reference_forward(
+        &[Layer::Conv { kernel, bias: vec![0.0; 2], sh: 1, sw: 1, ph: 0, pw: 0 }],
+        AlgoKind::Mec,
+        &ctx,
+        &input,
+    );
+    let want: Vec<f32> = conv.data().iter().map(|&v| v + v.max(0.0)).collect();
+    assert_eq!(got.data(), &want[..], "in-place relu clobbered the alias");
+}
+
+#[test]
+fn graph_builder_rejects_bad_shapes() {
+    // Residual add across mismatched channel counts must fail at finish
+    // (shape inference), not at execute.
+    let result = std::panic::catch_unwind(|| {
+        let mut rng = Rng::new(1);
+        let mut b = GraphBuilder::new("bad", (4, 4, 2));
+        let x = b.input();
+        let c1 = b.conv(
+            x,
+            Kernel::random(KernelShape::new(1, 1, 2, 3), &mut rng),
+            vec![0.0; 3],
+            1,
+            1,
+            0,
+            0,
+        );
+        let c2 = b.conv(
+            x,
+            Kernel::random(KernelShape::new(1, 1, 2, 4), &mut rng),
+            vec![0.0; 4],
+            1,
+            1,
+            0,
+            0,
+        );
+        let s = b.add(&[c1, c2]);
+        b.finish(s)
+    });
+    assert!(result.is_err(), "mismatched add shapes must be rejected");
+}

@@ -1,0 +1,159 @@
+//! `.mecw` wire-format compatibility tests:
+//!
+//! * a **v1 sequential fixture** (checked into `rust/tests/fixtures/`,
+//!   written by the historical format) loads, executes, and — because
+//!   sequential graphs still save as v1 — round-trips **byte-identically**;
+//! * a branching graph saves as **v2** (edges on the wire) and
+//!   round-trips with its topology, weights, and numerics intact.
+
+use mec::conv::{AlgoKind, ConvContext};
+use mec::memory::Arena;
+use mec::model::{load_mecw, save_mecw, GraphBuilder, Model, Src};
+use mec::tensor::{Kernel, KernelShape, Nhwc, Tensor};
+use mec::util::Rng;
+use std::path::PathBuf;
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/v1_sequential.mecw")
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("mecw_v2_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn v1_fixture_loads_and_roundtrips_byte_identically() {
+    let fixture = std::fs::read(fixture_path()).expect("fixture checked in");
+    assert_eq!(&fixture[..8], b"MECW0001");
+    let model = load_mecw(fixture_path()).expect("v1 file loads via the compatibility path");
+    assert_eq!(model.name, "v1fix");
+    assert_eq!(model.input_hwc, (4, 4, 1));
+    assert_eq!(model.node_count(), 5, "conv, relu, flatten, dense, softmax");
+    assert_eq!(model.param_count(), 8 + 2 + 36 + 2);
+    // It executes: conv(2×2, 2ch) → relu → flatten(18) → dense(2) → softmax.
+    let input = Tensor::from_fn(Nhwc::new(1, 4, 4, 1), |_, h, w, _| (h * 4 + w) as f32 * 0.1);
+    let out = model.forward(&ConvContext::default(), &input, &mut Arena::new());
+    assert_eq!(out.shape(), Nhwc::new(1, 1, 1, 2));
+    let sum: f32 = out.data().iter().sum();
+    assert!((sum - 1.0).abs() < 1e-5, "softmax row sums to {sum}");
+    // Sequential models keep writing v1 — byte-identical with the old
+    // writer's output.
+    let path = tmp("v1_roundtrip.mecw");
+    save_mecw(&model, &path).unwrap();
+    let rewritten = std::fs::read(&path).unwrap();
+    assert_eq!(rewritten, fixture, "v1 round trip must be byte-identical");
+}
+
+fn branching_model(seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new("branchy", (6, 6, 2));
+    let x = b.input();
+    let trunk = b.conv(
+        x,
+        Kernel::random(KernelShape::new(3, 3, 2, 4), &mut rng),
+        vec![0.1; 4],
+        1,
+        1,
+        1,
+        1,
+    );
+    let trunk = b.relu(trunk);
+    let left = b.conv(
+        trunk,
+        Kernel::random(KernelShape::new(3, 3, 4, 4), &mut rng),
+        vec![0.0; 4],
+        1,
+        1,
+        1,
+        1,
+    );
+    let right = b.max_pool(trunk, 1, 1); // identity-shaped pool branch
+    let merged = b.add(&[left, right]);
+    let cat = b.concat(&[merged, trunk]);
+    let out = b.relu(cat);
+    Model::from_graph(b.finish(out))
+}
+
+#[test]
+fn branching_graph_roundtrips_through_v2() {
+    let m = branching_model(0xb2a);
+    let path = tmp("branchy.mecw");
+    save_mecw(&m, &path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    assert_eq!(&bytes[..8], b"MECW0002", "branching graphs use the v2 wire");
+
+    let loaded = load_mecw(&path).expect("v2 file loads");
+    assert_eq!(loaded.name, m.name);
+    assert_eq!(loaded.input_hwc, m.input_hwc);
+    // Topology preserved exactly: ops, edges, and the output value.
+    assert_eq!(loaded.graph(), m.graph());
+    assert_eq!(loaded.graph().output(), m.graph().output());
+    assert!(matches!(loaded.graph().node(4).srcs[0], Src::Node(2)));
+
+    // Numerics preserved: same weights ⇒ bitwise-identical forwards.
+    let mut rng = Rng::new(3);
+    let input = Tensor::random(Nhwc::new(2, 6, 6, 2), &mut rng);
+    let ctx = ConvContext::default();
+    let mut a_model = m;
+    let mut b_model = loaded;
+    a_model.pin_algo(AlgoKind::Mec);
+    b_model.pin_algo(AlgoKind::Mec);
+    let mut arena = Arena::new();
+    let a = a_model.forward(&ctx, &input, &mut arena);
+    let b = b_model.forward(&ctx, &input, &mut arena);
+    assert_eq!(a.data(), b.data(), "v2 round trip changed the numerics");
+}
+
+#[test]
+fn v2_shape_inconsistent_graph_errors_instead_of_aborting() {
+    // An Add whose sources have different channel counts is trivially
+    // encodable on the v2 wire; loading must return a typed error — a
+    // serving binary must never abort on a corrupt model file.
+    let m = branching_model(0xbad);
+    let path = tmp("bad_geometry.mecw");
+    save_mecw(&m, &path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    // Node 4 is add([Node(2), Node(3)]); rewire its second source to the
+    // graph input (6×6×2), which cannot match the 6×6×4 left branch.
+    // The add record is `tag=6, n_srcs=2, src0, src1`; find it by its
+    // unique prefix and patch src1 to SRC_INPUT.
+    let needle: Vec<u8> = [6u32, 2, 2, 3]
+        .iter()
+        .flat_map(|v| v.to_le_bytes())
+        .collect();
+    let pos = bytes
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .expect("add record on the wire");
+    bytes[pos + 12..pos + 16].copy_from_slice(&u32::MAX.to_le_bytes());
+    let bad = tmp("bad_geometry_patched.mecw");
+    std::fs::write(&bad, &bytes).unwrap();
+    match load_mecw(&bad) {
+        Err(mec::model::LoadError::Malformed(msg)) => {
+            assert!(msg.contains("add"), "unexpected message: {msg}")
+        }
+        Err(other) => panic!("expected Malformed, got {other:?}"),
+        Ok(_) => panic!("shape-inconsistent file loaded successfully"),
+    }
+}
+
+#[test]
+fn v2_rejects_malformed_edges() {
+    // A v2 file whose node references a later node must error cleanly.
+    let path = tmp("bad_edge.mecw");
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"MECW0002");
+    bytes.extend_from_slice(&2u32.to_le_bytes()); // name len
+    bytes.extend_from_slice(b"xx");
+    for v in [4u32, 4, 1, 1] {
+        bytes.extend_from_slice(&v.to_le_bytes()); // h, w, c, node count
+    }
+    bytes.extend_from_slice(&1u32.to_le_bytes()); // tag: relu
+    bytes.extend_from_slice(&1u32.to_le_bytes()); // 1 src
+    bytes.extend_from_slice(&7u32.to_le_bytes()); // forward reference!
+    bytes.extend_from_slice(&0u32.to_le_bytes()); // output
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(load_mecw(&path).is_err(), "forward edge must be rejected");
+}

@@ -256,8 +256,9 @@ fn model_arena_peak_is_max_not_sum_of_layer_workspaces() {
         "layers should differ so max ({max}) < sum ({sum}) is meaningful"
     );
 
-    // Tracker assertion: a forward pass through the planner-sized arena
-    // peaks at exactly the max, never the sum.
+    // Tracker assertion: a forward pass peaks at exactly the workspace
+    // max plus the liveness plan's activation arena — never the sum of
+    // per-layer workspaces, and never the sum of node outputs.
     let mut rng = Rng::new(7);
     let input = Tensor::random(Nhwc::new(batch, 12, 12, 2), &mut rng);
     let (out, peak) = measure_peak(|| {
@@ -265,7 +266,13 @@ fn model_arena_peak_is_max_not_sum_of_layer_workspaces() {
         m.forward(&ctx, &input, &mut arena)
     });
     assert_eq!(out.shape().c, 4);
-    assert_eq!(peak, max, "arena peak must equal max over planned layers");
+    assert_eq!(
+        peak,
+        max + m.activation_bytes(batch),
+        "peak must equal workspace max + planned activation arena"
+    );
+    // And the activation arena itself hit the liveness lower bound.
+    assert_eq!(m.activation_bytes(batch), m.max_live_bytes(batch));
 }
 
 #[test]
