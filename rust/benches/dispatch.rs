@@ -1,0 +1,113 @@
+//! Dispatch microbench: what one parallel loop costs on each substrate —
+//! the persistent parked pool, the old spawn-per-call scoped baseline,
+//! and a plain inline loop — across grain sizes from "far too small to
+//! parallelize" to "clearly worth it".
+//!
+//! This is the measurement behind the pool refactor: MEC's per-row GEMMs
+//! (Solution B issues `i_n·o_h` of them) put tens of microseconds of work
+//! behind every dispatch, so the spawn+join cost of `std::thread::scope`
+//! dominated at exactly the sizes the paper cares about. Expected shape:
+//! pool dispatch is several times cheaper than scoped spawn at small
+//! grains and converges with it as the body grows; inline wins below the
+//! grain cutoff, which is why `Parallelism`'s cost-model heuristic
+//! exists.
+//!
+//! Run: `cargo bench --bench dispatch`
+//! (env: MEC_THREADS pins the width, MEC_BENCH_FAST caps reps)
+
+use mec::bench::harness::{bench_fn, bench_threads, print_table, threads_label, BenchOpts};
+use mec::threadpool::{os_threads_spawned, scoped_parallel_for, Parallelism};
+use std::hint::black_box;
+
+/// A compute body of tunable size (~`work` FMAs), opaque to the
+/// optimizer.
+fn busy(work: usize, seed: usize) -> f32 {
+    let mut acc = seed as f32 * 0.001;
+    for i in 0..work {
+        acc = acc.mul_add(0.999_9, (i & 7) as f32 * 0.125);
+    }
+    acc
+}
+
+fn main() {
+    let threads = bench_threads()
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4));
+    let par = Parallelism::new(threads);
+    let opts = BenchOpts::default();
+    println!(
+        "Dispatch microbench: pool vs scoped-spawn vs inline, {}",
+        threads_label(threads)
+    );
+    println!(
+        "pool: {} parked workers (spawned once); scoped: {} spawns per loop",
+        par.pool().map(|p| p.workers()).unwrap_or(0),
+        threads
+    );
+
+    // (items, FMAs per item): spans MEC's tiny o_w-row GEMMs (first rows)
+    // up to comfortably-parallel bodies (last rows).
+    let grains: &[(usize, usize)] = &[
+        (8, 100),
+        (64, 100),
+        (64, 1_000),
+        (256, 1_000),
+        (256, 10_000),
+        (1024, 10_000),
+    ];
+
+    let mut rows = Vec::new();
+    let mut small_grain_ratio = None;
+    for &(n, work) in grains {
+        let inline = bench_fn(&format!("inline-{n}x{work}"), &opts, || {
+            let mut acc = 0.0f32;
+            for i in 0..n {
+                acc += busy(work, i);
+            }
+            black_box(acc);
+        });
+        // `parallel_for` (not the grained variant): measures raw pool
+        // dispatch even below the cutoff the production paths would
+        // inline at.
+        let pool = bench_fn(&format!("pool-{n}x{work}"), &opts, || {
+            par.parallel_for(n, |i| {
+                black_box(busy(work, i));
+            });
+        });
+        let scoped = bench_fn(&format!("scoped-{n}x{work}"), &opts, || {
+            scoped_parallel_for(threads, n, |i| {
+                black_box(busy(work, i));
+            });
+        });
+        // Dispatch overhead proxy at the smallest grain: scoped / pool.
+        if small_grain_ratio.is_none() {
+            small_grain_ratio = Some(scoped.median_ns() / pool.median_ns().max(1.0));
+        }
+        rows.push(vec![
+            n.to_string(),
+            work.to_string(),
+            format!("{:.1}", inline.median_ns() / 1e3),
+            format!("{:.1}", pool.median_ns() / 1e3),
+            format!("{:.1}", scoped.median_ns() / 1e3),
+            format!("{:.2}", scoped.median_ns() / pool.median_ns().max(1.0)),
+            if par.should_inline((n * work) as f64 * par.grain().ns_per_mac) {
+                "inline".to_string()
+            } else {
+                "pool".to_string()
+            },
+        ]);
+    }
+    print_table(
+        "Dispatch cost by grain (µs median)",
+        &["items", "work/item", "inline µs", "pool µs", "scoped µs", "scoped/pool", "heuristic"],
+        &rows,
+    );
+    println!(
+        "\nsmallest-grain dispatch advantage (scoped / pool): {:.1}x \
+         (acceptance target: >= 5x)",
+        small_grain_ratio.unwrap_or(f64::NAN)
+    );
+    println!(
+        "OS threads spawned this run: {} (pool workers once + scoped baseline per loop)",
+        os_threads_spawned()
+    );
+}

@@ -6,7 +6,9 @@
 //! Run: `cargo bench --bench fig4a` (env: MEC_BENCH_FAST, MEC_BENCH_SCALE)
 
 use mec::bench::bench_conv;
-use mec::bench::harness::{bench_mode, bench_precision, bench_scale, print_table, BenchOpts};
+use mec::bench::harness::{
+    bench_mode, bench_precision, bench_scale, print_table, threads_label, BenchOpts,
+};
 use mec::bench::workload::by_name;
 use mec::conv::{AlgoKind, ConvContext, Convolution};
 use mec::tensor::{ConvShape, Kernel, KernelShape, Nhwc, Tensor};
@@ -20,8 +22,8 @@ fn main() {
     let mut rng = Rng::new(41);
     let mut rows = Vec::new();
     println!(
-        "Figure 4(a) reproduction: cv1, k=11x11 fixed, stride 1..10, {} threads, scale={scale}",
-        ctx.threads
+        "Figure 4(a) reproduction: cv1, k=11x11 fixed, stride 1..10, {}, scale={scale}",
+        threads_label(ctx.threads())
     );
     println!("timing mode: {}", bench_mode().label());
     println!(

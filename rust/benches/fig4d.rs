@@ -27,7 +27,7 @@ fn main() {
     let mut sums = [0.0f64; 3];
     println!(
         "Figure 4(d) reproduction: Server-CPU ({} threads), batch={batch}, scale={scale}",
-        ctx.threads
+        ctx.threads()
     );
     println!("timing mode: {}", bench_mode().label());
     for w in suite() {

@@ -7,7 +7,9 @@
 //! ratio is the shape target (ARM7 vs this host).
 
 use mec::bench::bench_conv;
-use mec::bench::harness::{bench_mode, bench_precision, bench_scale, print_table, BenchOpts};
+use mec::bench::harness::{
+    bench_mode, bench_precision, bench_scale, bench_threads, print_table, threads_label, BenchOpts,
+};
 use mec::bench::workload::resnet101_table3;
 use mec::conv::{AlgoKind, ConvContext, Convolution};
 use mec::tensor::{Kernel, Tensor};
@@ -15,12 +17,18 @@ use mec::util::Rng;
 
 fn main() {
     let scale = bench_scale();
-    let ctx = ConvContext::mobile().with_precision(bench_precision());
+    let mut ctx = ConvContext::mobile().with_precision(bench_precision());
+    if let Some(t) = bench_threads() {
+        ctx = ctx.with_threads(t);
+    }
     let opts = BenchOpts::default();
     let mut rng = Rng::new(101);
     let mut rows = Vec::new();
     let mut tot = [0.0f64; 4]; // conv_mb, conv_ms, mec_mb, mec_ms
-    println!("Table 3 reproduction: ResNet-101 weighted conv layers, Mobile, scale={scale}");
+    println!(
+        "Table 3 reproduction: ResNet-101 weighted conv layers, Mobile ({}), scale={scale}",
+        threads_label(ctx.threads())
+    );
     println!("timing mode: {}", bench_mode().label());
     println!(
         "precision: {} (set MEC_BENCH_PRECISION=q16 for the paper's fixed-point grid)",

@@ -143,6 +143,35 @@ pub fn bench_precision() -> Precision {
     }
 }
 
+/// The env-var thread pin (`MEC_THREADS`): when set (≥ 1), the paper
+/// benches run at exactly this thread budget instead of their platform
+/// default ([`ConvContext::server`](crate::conv::ConvContext::server)
+/// honors it directly; Mobile-platform benches apply it explicitly).
+/// Warns on stderr for unparsable values instead of silently ignoring
+/// them.
+pub fn bench_threads() -> Option<usize> {
+    let parsed = crate::conv::threads_env();
+    if parsed.is_none() {
+        if let Ok(v) = std::env::var("MEC_THREADS") {
+            eprintln!(
+                "warning: unrecognized MEC_THREADS={v:?} (expected an integer >= 1); \
+                 using the platform default"
+            );
+        }
+    }
+    parsed
+}
+
+/// Bench-header line describing the thread pinning in force (parses
+/// silently — the consumer that actually applied the pin already warned
+/// about invalid values).
+pub fn threads_label(threads: usize) -> String {
+    match crate::conv::threads_env() {
+        Some(_) => format!("{threads} threads (pinned via MEC_THREADS)"),
+        None => format!("{threads} threads (platform default; set MEC_THREADS to pin)"),
+    }
+}
+
 /// The env-var bench mode (`MEC_BENCH_MODE`, default amortized).
 /// Case-insensitive; warns on stderr for unrecognized values instead of
 /// silently falling back.

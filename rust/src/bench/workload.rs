@@ -166,10 +166,15 @@ impl Platform {
         }
     }
 
+    /// Server platforms honor the `MEC_THREADS` pin (see
+    /// [`bench_threads`](crate::bench::harness::bench_threads)); Mobile
+    /// is the paper's single-core configuration and stays at 1.
     pub fn threads(&self) -> usize {
         match self {
             Platform::Mobile => 1,
-            _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            _ => crate::bench::harness::bench_threads().unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            }),
         }
     }
 

@@ -6,7 +6,6 @@
 use super::{downcast_prepack, AlgoKind, ConvContext, ConvPlan, Convolution, KernelPrepack};
 use crate::memory::WorkspaceLayout;
 use crate::tensor::{ConvShape, Kernel, Tensor};
-use crate::threadpool::parallel_for;
 use std::any::Any;
 use std::sync::Arc;
 
@@ -113,8 +112,10 @@ impl ConvPlan for DirectPlan {
         let k_data = self.prepack.kernel.data();
         let out = crate::threadpool::SharedSlice::new(output.data_mut());
 
-        // Parallelize over (n, oh): each task writes a disjoint output row.
-        parallel_for(self.ctx.threads, ish.n * oh, |t| {
+        // Parallelize over (n, oh): each task writes a disjoint output
+        // row. Grain: o_w·k_h·k_w·i_c·k_c MACs per row.
+        let row_macs = ow * k.kh * k.kw * k.ic * k.kc;
+        self.ctx.par.parallel_for_macs(ish.n * oh, row_macs, |t| {
             let n = t / oh;
             let y = t % oh;
             let out_data: &mut [f32] = out.slice();

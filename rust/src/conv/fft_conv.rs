@@ -29,7 +29,7 @@ use super::{downcast_prepack, AlgoKind, ConvContext, ConvPlan, Convolution, Kern
 use crate::fft::{fft2d, next_pow2, pointwise_mul_acc, C32};
 use crate::memory::WorkspaceLayout;
 use crate::tensor::{ConvShape, Kernel, Tensor};
-use crate::threadpool::{parallel_for_with_id, SharedSlice};
+use crate::threadpool::SharedSlice;
 use std::any::Any;
 use std::sync::Arc;
 
@@ -122,13 +122,12 @@ impl Convolution for FftConv {
         assert_eq!(kernel.shape(), shape.kernel);
         let sp = spectrum_len(shape);
         let (ic, kc) = (shape.kernel.ic, shape.kernel.kc);
-        let threads = ctx.threads.max(1);
         let mode = if uses_cache(ctx, shape) {
             // ---- plan-time: every kernel spectrum, once ----
             let mut kspec = vec![0.0f32; 2 * sp * ic * kc];
             {
                 let kshared = SharedSlice::new(&mut kspec);
-                parallel_for_with_id(threads, ic * kc, |_, t| {
+                ctx.par.parallel_for(ic * kc, |t| {
                     let kb = kshared.slice();
                     let (i, o) = (t / kc, t % kc);
                     let spec = as_c32(&mut kb[2 * sp * t..2 * sp * (t + 1)]);
@@ -170,7 +169,7 @@ impl Convolution for FftConv {
                 "fft: shared prepack built for a different kernel geometry"
             ),
         }
-        let threads = ctx.threads.max(1);
+        let threads = ctx.threads();
         let mut layout = WorkspaceLayout::new();
         layout.push("input-spectra", 2 * sp * ic);
         match &prepack.mode {
@@ -304,7 +303,7 @@ fn run_cached(
     let sp = spectrum_len(s);
     let (ic, kc) = (s.kernel.ic, s.kernel.kc);
     let n = s.input.n;
-    let threads = ctx.threads.max(1);
+    let threads = ctx.threads();
 
     let (xbuf, accbuf) = scratch[..2 * sp * (ic + threads)].split_at_mut(2 * sp * ic);
 
@@ -312,7 +311,7 @@ fn run_cached(
         // Input spectra for this sample.
         {
             let xshared = SharedSlice::new(xbuf);
-            parallel_for_with_id(threads, ic, |_, i| {
+            ctx.par.parallel_for(ic, |i| {
                 let xb = xshared.slice();
                 let spec = as_c32(&mut xb[2 * sp * i..2 * sp * (i + 1)]);
                 input_spectrum(s, input, nn, i, spec);
@@ -323,7 +322,7 @@ fn run_cached(
         let xref: &[f32] = xbuf;
         let acc_shared = SharedSlice::new(accbuf);
         let out_shared = SharedSlice::new(output.data_mut());
-        parallel_for_with_id(threads, kc, |tid, o| {
+        ctx.par.parallel_for_with_id(kc, |tid, o| {
             let accb = acc_shared.slice();
             let acc = as_c32(&mut accb[2 * sp * tid..2 * sp * (tid + 1)]);
             acc.fill(C32::ZERO);
@@ -364,7 +363,7 @@ fn run_streaming(
     let sp = spectrum_len(s);
     let (ic, kc) = (s.kernel.ic, s.kernel.kc);
     let n = s.input.n;
-    let threads = ctx.threads.max(1);
+    let threads = ctx.threads();
 
     let (xbuf, lanes) = scratch[..2 * sp * (ic + 2 * threads)].split_at_mut(2 * sp * ic);
 
@@ -372,7 +371,7 @@ fn run_streaming(
     for nn in 0..n {
         {
             let xshared = SharedSlice::new(xbuf);
-            parallel_for_with_id(threads, ic, |_, i| {
+            ctx.par.parallel_for(ic, |i| {
                 let xb = xshared.slice();
                 let spec = as_c32(&mut xb[2 * sp * i..2 * sp * (i + 1)]);
                 input_spectrum(s, input, nn, i, spec);
@@ -381,7 +380,7 @@ fn run_streaming(
         let xref: &[f32] = xbuf;
         let scratch_shared = SharedSlice::new(lanes);
         let out_shared = SharedSlice::new(output.data_mut());
-        parallel_for_with_id(threads, kc, |tid, o| {
+        ctx.par.parallel_for_with_id(kc, |tid, o| {
             let sb = scratch_shared.slice();
             let lane = &mut sb[2 * sp * 2 * tid..2 * sp * 2 * (tid + 1)];
             let (acc_f, kf_f) = lane.split_at_mut(2 * sp);

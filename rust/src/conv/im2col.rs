@@ -26,7 +26,6 @@ use crate::gemm::{gemm_prepacked_ex, gemm_prepacked_ex_i16, MatMut, MatRef, MatR
 use crate::memory::WorkspaceLayout;
 use crate::tensor::quant::{f32_as_i16_mut, i16_slots, Precision, QParams};
 use crate::tensor::{ConvShape, Kernel, Tensor};
-use crate::threadpool::parallel_for;
 use std::sync::Arc;
 
 pub struct Im2col;
@@ -46,8 +45,9 @@ impl Im2col {
         let lp = crate::threadpool::SharedSlice::new(l);
 
         // One task per lowered row (= one output position): rows are
-        // disjoint, copies are k_w·i_c contiguous runs.
-        parallel_for(ctx.threads, ish.n * oh * ow, |r| {
+        // disjoint, copies are k_w·i_c contiguous runs. Grain: each row
+        // moves row_len floats (read + write).
+        ctx.par.parallel_for_bytes(ish.n * oh * ow, row_len * 8, |r| {
             let l_data: &mut [f32] = lp.slice();
             let n = r / (oh * ow);
             let y = (r / ow) % oh;
@@ -82,7 +82,8 @@ impl Im2col {
         let in_data = input.data();
         let lp = crate::threadpool::SharedSlice::new(l);
 
-        parallel_for(ctx.threads, ish.n * oh * ow, |r| {
+        // Grain: each row reads row_len f32 and writes row_len i16.
+        ctx.par.parallel_for_bytes(ish.n * oh * ow, row_len * 6, |r| {
             let l_data: &mut [i16] = lp.slice();
             let n = r / (oh * ow);
             let y = (r / ow) % oh;
@@ -208,7 +209,7 @@ impl ConvPlan for Im2colPlan {
                 // matrix) = L (rows × row_len) × K (row_len × k_c).
                 let a = MatRef::new(l, rows, row_len);
                 let mut c = MatMut::new(output.data_mut(), rows, k.kc);
-                gemm_prepacked_ex(a, pk, &mut c, self.ctx.threads);
+                gemm_prepacked_ex(a, pk, &mut c, &self.ctx.par);
             }
             PackedKernel::Q16 { packed, qk } => {
                 // Calibrated static activation scale when available (the
@@ -227,7 +228,7 @@ impl ConvPlan for Im2colPlan {
                 let a = MatRefI16::new(l, rows, row_len);
                 let mut c = MatMut::new(output.data_mut(), rows, k.kc);
                 let scale = qa.scale * qk.scale * 32768.0;
-                gemm_prepacked_ex_i16(a, packed, &mut c, scale, self.ctx.threads);
+                gemm_prepacked_ex_i16(a, packed, &mut c, scale, &self.ctx.par);
             }
         }
     }

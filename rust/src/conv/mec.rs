@@ -44,7 +44,6 @@ use crate::gemm::{
 use crate::memory::WorkspaceLayout;
 use crate::tensor::quant::{f32_as_i16_mut, i16_slots, Precision, QParams};
 use crate::tensor::{ConvShape, Kernel, Tensor};
-use crate::threadpool::parallel_for;
 use std::sync::Arc;
 
 /// Which mini-batch schedule to use.
@@ -108,7 +107,8 @@ impl Mec {
         let lp = crate::threadpool::SharedSlice::new(l);
 
         // One task per (n, w) pair; h loop inside for cache-friendly runs.
-        parallel_for(ctx.threads, ish.n * ow, |t| {
+        // Grain: each task moves row_len floats (read + write).
+        ctx.par.parallel_for_bytes(ish.n * ow, row_len * 8, |t| {
             let l_data: &mut [f32] = lp.slice();
             let n = t / ow;
             let w = t % ow;
@@ -142,7 +142,8 @@ impl Mec {
         let in_data = input.data();
         let lp = crate::threadpool::SharedSlice::new(l);
 
-        parallel_for(ctx.threads, ish.n * ow, |t| {
+        // Grain: each task reads row_len f32 and writes row_len i16.
+        ctx.par.parallel_for_bytes(ish.n * ow, row_len * 6, |t| {
             let l_data: &mut [i16] = lp.slice();
             let n = t / ow;
             let w = t % ow;
@@ -408,7 +409,7 @@ fn run_solution_a(
     // from BLAS keeping its packing internal, and it roughly halved MEC
     // runtime on cv6.
     let out_row = n * ow * k.kc;
-    if ctx.threads <= 1 {
+    if ctx.threads() <= 1 {
         // Mobile path (§Perf iteration 3): fuse the o_h gemms so each
         // packed-K tile is streamed once and reused across partitions —
         // K traffic dominates when m = i_n·o_w is small (cv11/cv12).
@@ -425,8 +426,9 @@ fn run_solution_a(
     } else {
         let out = crate::threadpool::SharedSlice::new(output.data_mut());
         let l_ref: &[f32] = l;
-        // Each h writes a disjoint row of the h-n-w-c output.
-        parallel_for(ctx.threads.min(oh), oh, |h| {
+        // Each h writes a disjoint row of the h-n-w-c output; grain =
+        // one (i_n·o_w × k_h·k_w·i_c × k_c) GEMM per row.
+        ctx.par.parallel_for_macs(oh, l_rows * kdim * k.kc, |h| {
             let out_data: &mut [f32] = out.slice();
             let a = MatRef::strided(&l_ref[step * h..], l_rows, kdim, l_cols);
             let mut c = MatMut::new(&mut out_data[h * out_row..(h + 1) * out_row], l_rows, k.kc);
@@ -460,7 +462,7 @@ fn run_gemms_a_q16(
     let kdim = k.kh * k.kw * k.ic;
     let step = s.sh * k.kw * k.ic;
     let out_row = n * ow * k.kc;
-    if ctx.threads <= 1 {
+    if ctx.threads() <= 1 {
         let a_views: Vec<MatRefI16<'_>> = (0..oh)
             .map(|h| MatRefI16::strided(&l[step * h..], l_rows, kdim, l_cols))
             .collect();
@@ -472,7 +474,7 @@ fn run_gemms_a_q16(
         gemm_prepacked_batch_i16(&a_views, packed_k, &mut c_views, scale);
     } else {
         let out = crate::threadpool::SharedSlice::new(output.data_mut());
-        parallel_for(ctx.threads.min(oh), oh, |h| {
+        ctx.par.parallel_for_macs(oh, l_rows * kdim * k.kc, |h| {
             let out_data: &mut [f32] = out.slice();
             let a = MatRefI16::strided(&l[step * h..], l_rows, kdim, l_cols);
             let mut c = MatMut::new(&mut out_data[h * out_row..(h + 1) * out_row], l_rows, k.kc);
@@ -493,7 +495,8 @@ fn repack_hnwc_to_nhwc(ctx: &ConvContext, s: &ConvShape, aux: &mut [f32], output
     let chunk = ow * k.kc; // o_w·k_c contiguous run per (n,h)
     let out = crate::threadpool::SharedSlice::new(output.data_mut());
     let aux_ref: &[f32] = aux;
-    parallel_for(ctx.threads, n * oh, |t| {
+    // Grain: each task copies one o_w·k_c run (read + write).
+    ctx.par.parallel_for_bytes(n * oh, chunk * 8, |t| {
         let out_data: &mut [f32] = out.slice();
         let nn = t / oh;
         let h = t % oh;
@@ -528,7 +531,7 @@ fn run_solution_b(
     // gemms (the cublasSgemmBatched analogue: one kernel image, many
     // activations).
     let chunk = ow * k.kc;
-    if ctx.threads <= 1 {
+    if ctx.threads() <= 1 {
         // Mobile path: fused batch order keeps each K tile cache-warm
         // across all i_n·o_h partitions (§Perf iteration 3).
         let l_ref: &[f32] = l;
@@ -549,8 +552,11 @@ fn run_solution_b(
         let out = crate::threadpool::SharedSlice::new(output.data_mut());
         let l_ref: &[f32] = l;
         // The paper's "i_n·o_h parallel/batched gemm calls with smaller
-        // inputs" — each writes the contiguous O[n][h] row block.
-        parallel_for(ctx.threads, n * oh, |t| {
+        // inputs" — each writes the contiguous O[n][h] row block. Grain:
+        // one o_w × k_h·k_w·i_c × k_c GEMM per task (tens of µs or far
+        // less on cv11/cv12-like shapes — exactly the loops the inline
+        // cutoff exists for).
+        ctx.par.parallel_for_macs(n * oh, ow * kdim * k.kc, |t| {
             let out_data: &mut [f32] = out.slice();
             let nn = t / oh;
             let h = t % oh;
@@ -580,7 +586,7 @@ fn run_gemms_b_q16(
     let step = s.sh * k.kw * k.ic;
     let sample_l = ow * l_cols;
     let chunk = ow * k.kc;
-    if ctx.threads <= 1 {
+    if ctx.threads() <= 1 {
         let a_views: Vec<MatRefI16<'_>> = (0..n * oh)
             .map(|t| {
                 let nn = t / oh;
@@ -596,7 +602,7 @@ fn run_gemms_b_q16(
         gemm_prepacked_batch_i16(&a_views, packed_k, &mut c_views, scale);
     } else {
         let out = crate::threadpool::SharedSlice::new(output.data_mut());
-        parallel_for(ctx.threads, n * oh, |t| {
+        ctx.par.parallel_for_macs(n * oh, ow * kdim * k.kc, |t| {
             let out_data: &mut [f32] = out.slice();
             let nn = t / oh;
             let h = t % oh;

@@ -43,15 +43,21 @@ use crate::gemm::{BlockSizes, MatRef, MatRefI16, PackedB, PackedBI16};
 use crate::memory::{Arena, Workspace, WorkspaceLayout};
 use crate::tensor::quant::{Precision, QParams};
 use crate::tensor::{ConvShape, Kernel, Tensor};
+use crate::threadpool::Parallelism;
 use std::any::Any;
 use std::sync::Arc;
 
 /// Execution environment for a convolution call.
 #[derive(Debug, Clone)]
 pub struct ConvContext {
-    /// Worker threads for the parallel loops (paper: OpenMP threads /
-    /// GPU blocks). `1` models the paper's Mobile platform.
-    pub threads: usize,
+    /// Parallel-execution handle for the loops (paper: OpenMP threads /
+    /// GPU blocks): a shared persistent [`Pool`](crate::threadpool::Pool)
+    /// plus a thread budget. A budget of 1 (no pool, no workers) models
+    /// the paper's Mobile platform. Contexts cloned from one another —
+    /// e.g. every [`Session`](crate::engine::Session) of an engine —
+    /// share the same pool; steady-state execution never spawns OS
+    /// threads.
+    pub par: Parallelism,
     /// GEMM cache-blocking parameters (ablation_gemm sweeps these).
     pub blocks: BlockSizes,
     /// MEC's Solution A/B dispatch threshold `T` (Algorithm 2 line 8).
@@ -78,7 +84,7 @@ pub struct ConvContext {
 impl Default for ConvContext {
     fn default() -> Self {
         ConvContext {
-            threads: 1,
+            par: Parallelism::inline(),
             blocks: BlockSizes::default(),
             mec_t: 100,
             fft_cache_cap_bytes: 256 << 20,
@@ -94,16 +100,33 @@ impl ConvContext {
         ConvContext::default()
     }
 
-    /// Paper "Server" platform: all cores.
+    /// Paper "Server" platform: all cores (or the `MEC_THREADS` env
+    /// override, so bench/CI runs can pin the thread count).
     pub fn server() -> ConvContext {
-        ConvContext {
-            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
-            ..ConvContext::default()
-        }
+        let t = threads_env().unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+        ConvContext::default().with_threads(t)
     }
 
+    /// The thread budget of the parallel loops (≥ 1; 1 = fully inline).
+    pub fn threads(&self) -> usize {
+        self.par.threads()
+    }
+
+    /// Set the thread budget, spawning a persistent worker pool for
+    /// budgets > 1. The pool's inline-vs-dispatch grain is sized from
+    /// the planner's calibrated [`CostModel`](crate::planner::CostModel)
+    /// so loops too small to pay a pool wake-up run on the caller.
     pub fn with_threads(mut self, t: usize) -> ConvContext {
-        self.threads = t;
+        self.par = Parallelism::with_grain(t, crate::planner::CostModel::default().grain_model());
+        self
+    }
+
+    /// Replace the parallelism handle wholesale (e.g. a budget-capped
+    /// clone sharing an existing pool).
+    pub fn with_parallelism(mut self, par: Parallelism) -> ConvContext {
+        self.par = par;
         self
     }
 
@@ -123,6 +146,18 @@ impl ConvContext {
         self.act_qparams = Some(q);
         self
     }
+}
+
+/// The ONE parser of the `MEC_THREADS` thread-pin env var (`Some(t)` for
+/// a valid integer ≥ 1, `None` otherwise): [`ConvContext::server`], the
+/// bench harness ([`bench_threads`](crate::bench::harness::bench_threads),
+/// which adds a warning for set-but-invalid values), and the dispatch
+/// microbench all read it through here so the parse cannot drift.
+pub fn threads_env() -> Option<usize> {
+    std::env::var("MEC_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&t| t >= 1)
 }
 
 /// A batch-independent kernel-side precomputation: the prepacked GEMM
@@ -528,8 +563,11 @@ mod tests {
 
     #[test]
     fn contexts() {
-        assert_eq!(ConvContext::mobile().threads, 1);
-        assert!(ConvContext::server().threads >= 1);
+        assert_eq!(ConvContext::mobile().threads(), 1);
+        assert!(ConvContext::server().threads() >= 1);
+        // Budgets > 1 carry a shared pool; budget 1 spawns nothing.
+        assert!(ConvContext::default().with_threads(3).par.pool().is_some());
+        assert!(ConvContext::mobile().par.pool().is_none());
         assert_eq!(ConvContext::default().mec_t, 100);
         assert_eq!(ConvContext::default().precision, Precision::F32);
         assert_eq!(

@@ -27,7 +27,7 @@ use super::{downcast_prepack, AlgoKind, ConvContext, ConvPlan, Convolution, Kern
 use crate::gemm::{gemm_ex, MatMut, MatRef};
 use crate::memory::WorkspaceLayout;
 use crate::tensor::{ConvShape, Kernel, Tensor};
-use crate::threadpool::{parallel_for, SharedSlice};
+use crate::threadpool::SharedSlice;
 use std::any::Any;
 use std::sync::Arc;
 
@@ -178,13 +178,16 @@ impl ConvPlan for WinogradPlan {
             let m_shared = SharedSlice::new(m);
             let u_ref: &[f32] = &self.prepack.u;
             let v_ref: &[f32] = v;
-            let inner = if ctx.threads >= 16 { 1 } else { ctx.threads };
-            parallel_for(ctx.threads.min(16), 16, |xy| {
+            // Outer loop over the 16 point-wise GEMMs; a nested gemm_ex
+            // finds the pool busy and runs inline, so there is no
+            // oversubscription at any budget (and when the outer loop is
+            // below the grain cutoff, the inner GEMMs get the pool).
+            ctx.par.parallel_for_macs(16, kc * ic * p, |xy| {
                 let m_data = m_shared.slice();
                 let a = MatRef::new(&u_ref[xy * kc * ic..(xy + 1) * kc * ic], kc, ic);
                 let b = MatRef::new(&v_ref[xy * ic * p..(xy + 1) * ic * p], ic, p);
                 let mut c = MatMut::new(&mut m_data[xy * kc * p..(xy + 1) * kc * p], kc, p);
-                gemm_ex(a, b, &mut c, 1.0, 0.0, inner, ctx.blocks);
+                gemm_ex(a, b, &mut c, 1.0, 0.0, &ctx.par, ctx.blocks);
             });
         }
 
@@ -203,7 +206,8 @@ pub(super) fn kernel_transform(
     u: &mut [f32],
 ) {
     let u_shared = SharedSlice::new(u);
-    parallel_for(ctx.threads, kc * ic, |t| {
+    // Plan-time only; ~32 MACs + 16 stores per (o, i).
+    ctx.par.parallel_for_macs(kc * ic, 48, |t| {
         let u_data = u_shared.slice();
         let o = t / ic;
         let i = t % ic;
@@ -254,7 +258,8 @@ fn input_transform(
     let p = ish.n * th * tw;
     let v_shared = SharedSlice::new(v);
     let in_data = input.data();
-    parallel_for(ctx.threads, p, |tile| {
+    // Grain: ~16 loads + 16 stores + 32 adds per (tile, channel).
+    ctx.par.parallel_for_bytes(p, ic * 160, |tile| {
         let v_data = v_shared.slice();
         let n = tile / (th * tw);
         let ty = (tile / tw) % th;
@@ -313,7 +318,7 @@ fn output_transform(
     let kc = s.kernel.kc;
     let p = s.input.n * th * tw;
     let out_shared = SharedSlice::new(output.data_mut());
-    parallel_for(ctx.threads, p, |tile| {
+    ctx.par.parallel_for_bytes(p, kc * 160, |tile| {
         let out_data = out_shared.slice();
         let n = tile / (th * tw);
         let ty = (tile / tw) % th;

@@ -21,7 +21,7 @@ use super::{downcast_prepack, AlgoKind, ConvContext, ConvPlan, Convolution, Kern
 use crate::gemm::{gemm_prepacked, MatMut, MatRef, PackedB};
 use crate::memory::WorkspaceLayout;
 use crate::tensor::{ConvShape, Kernel, Tensor};
-use crate::threadpool::{parallel_for, SharedSlice};
+use crate::threadpool::SharedSlice;
 use std::any::Any;
 use std::sync::Arc;
 
@@ -198,7 +198,7 @@ impl ConvPlan for WinogradChunkedPlan {
             let len = chunk.min(p_total - start);
             // ---- input transform for tiles [start, start+len) ----
             {
-                parallel_for(ctx.threads, len, |t| {
+                ctx.par.parallel_for_bytes(len, ic * 160, |t| {
                     let v_data = v_shared.slice();
                     let tile = start + t;
                     let n = tile / (th * tw);
@@ -245,7 +245,7 @@ impl ConvPlan for WinogradChunkedPlan {
             // ---- 16 gemms: M[xy] (len×kc) = V[xy] (len×ic) × U (ic×kc) ----
             {
                 let v_ref: &[f32] = v_shared.slice();
-                parallel_for(ctx.threads.min(16), 16, |xy| {
+                ctx.par.parallel_for_macs(16, len * ic * kc, |xy| {
                     let m_data = m_shared.slice();
                     // Gather V rows for this xy: strided view with
                     // rs = 16·ic starting at xy·ic.
@@ -262,7 +262,7 @@ impl ConvPlan for WinogradChunkedPlan {
             // ---- output transform for this chunk ----
             {
                 let m_ref: &[f32] = m_shared.slice();
-                parallel_for(ctx.threads, len, |t| {
+                ctx.par.parallel_for_bytes(len, kc * 160, |t| {
                     let out_data = out_shared.slice();
                     let tile = start + t;
                     let n = tile / (th * tw);

@@ -99,12 +99,22 @@ pub struct Server {
 impl Server {
     /// Start worker threads; each owns a [`Session`](crate::engine::Session)
     /// of `engine`.
+    ///
+    /// Intra-op parallelism is divided, not multiplied: the engine's
+    /// thread budget is split across the workers
+    /// (`engine threads / workers`, min 1), and every session shares the
+    /// engine's one persistent pool — `workers × per-session threads`
+    /// never exceeds the pool the engine was built with, where each
+    /// worker session previously defaulted to `available_parallelism`
+    /// of its own.
     pub fn start(engine: Arc<Engine>, cfg: ServerConfig) -> Server {
         let queue = Arc::new(RequestQueue::new(cfg.queue_capacity));
         let metrics = Arc::new(Metrics::new());
         let hwc = engine.input_hwc();
+        let n_workers = cfg.workers.max(1);
+        let per_worker_threads = (engine.context().threads() / n_workers).max(1);
         let mut workers = Vec::new();
-        for wid in 0..cfg.workers.max(1) {
+        for wid in 0..n_workers {
             let queue = Arc::clone(&queue);
             let metrics = Arc::clone(&metrics);
             let engine = Arc::clone(&engine);
@@ -113,7 +123,7 @@ impl Server {
                 std::thread::Builder::new()
                     .name(format!("mec-serve-{wid}"))
                     .spawn(move || {
-                        worker_loop(&queue, &metrics, &engine, policy);
+                        worker_loop(&queue, &metrics, &engine, policy, per_worker_threads);
                     })
                     .expect("spawn server worker"),
             );
@@ -150,10 +160,17 @@ impl Server {
     }
 }
 
-fn worker_loop(queue: &RequestQueue, metrics: &Metrics, engine: &Engine, policy: BatchPolicy) {
+fn worker_loop(
+    queue: &RequestQueue,
+    metrics: &Metrics,
+    engine: &Engine,
+    policy: BatchPolicy,
+    threads: usize,
+) {
+    // Per-worker session: engine-sized arena, lock-free steady state,
+    // thread budget = its share of the engine's pool.
     let batcher = Batcher::new(queue, policy);
-    // Per-worker session: engine-sized arena, lock-free steady state.
-    let mut session = engine.session();
+    let mut session = engine.session_with_threads(threads);
     let (h, w, c) = engine.input_hwc();
     let per = h * w * c;
     while let Some(batch) = batcher.next_batch() {
@@ -398,6 +415,43 @@ mod tests {
             batch_sizes.iter().any(|&b| b > 1),
             "expected dynamic batching to form a multi-request batch, got {batch_sizes:?}"
         );
+    }
+
+    #[test]
+    fn workers_share_one_engine_pool_and_spawn_nothing_in_steady_state() {
+        // Oversubscription fix: a 4-thread engine serving through 2
+        // workers gives each session a 2-thread share of the ONE engine
+        // pool, and serving traffic never spawns OS threads beyond the
+        // pool built at engine build time.
+        let engine = Arc::new(
+            Engine::builder(tiny_model())
+                .algo_override(0, AlgoKind::Mec)
+                .threads(4)
+                .build()
+                .expect("tiny model builds"),
+        );
+        assert_eq!(engine.pool_threads_spawned(), 3, "pool = threads - 1");
+        let server = Server::start(
+            Arc::clone(&engine),
+            ServerConfig {
+                workers: 2,
+                ..ServerConfig::default()
+            },
+        );
+        let client = server.client();
+        for _ in 0..4 {
+            assert!(client.infer(vec![0.3; 36]).unwrap().result.is_ok());
+        }
+        let spawned = engine.pool_threads_spawned();
+        for _ in 0..8 {
+            assert!(client.infer(vec![0.3; 36]).unwrap().result.is_ok());
+        }
+        assert_eq!(
+            engine.pool_threads_spawned(),
+            spawned,
+            "steady-state serving must not spawn OS threads"
+        );
+        server.shutdown();
     }
 
     #[test]

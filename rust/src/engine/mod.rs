@@ -101,7 +101,9 @@ impl Engine {
 
     /// A new per-thread session: its workspace arena and activation
     /// slots are pre-sized to this engine's requirements, its plan memo
-    /// starts empty and warms on first use.
+    /// starts empty and warms on first use. Sessions share the engine's
+    /// persistent worker pool — steady-state inference never spawns OS
+    /// threads.
     pub fn session(&self) -> Session {
         Session::new(
             Arc::clone(&self.model),
@@ -109,6 +111,26 @@ impl Engine {
             self.ws_elems,
             &self.act_slots,
         )
+    }
+
+    /// Like [`Engine::session`] but capped at `threads` loop
+    /// participants (clamped to `1..=self.context().threads()`), still
+    /// sharing the engine's pool. The serving coordinator uses this to
+    /// divide the pool across its workers instead of multiplying
+    /// worker-count × intra-op threads.
+    pub fn session_with_threads(&self, threads: usize) -> Session {
+        let ctx = self
+            .ctx
+            .clone()
+            .with_parallelism(self.ctx.par.with_budget(threads));
+        Session::new(Arc::clone(&self.model), ctx, self.ws_elems, &self.act_slots)
+    }
+
+    /// OS threads the engine's pool has spawned so far — constant after
+    /// `build()`; the steady-state tests assert it stays flat across
+    /// inference (the threading analogue of zero tracked allocation).
+    pub fn pool_threads_spawned(&self) -> usize {
+        self.ctx.par.pool().map(|p| p.threads_spawned()).unwrap_or(0)
     }
 
     /// The planned model (read-only; shared by every session).
@@ -195,7 +217,8 @@ mod tests {
     fn builder_defaults_produce_a_working_engine() {
         let engine = Engine::builder(conv_model(1)).build().unwrap();
         assert_eq!(engine.pinned_batch_sizes(), &[1]);
-        assert_eq!(engine.context().threads, 1);
+        assert_eq!(engine.context().threads(), 1);
+        assert_eq!(engine.pool_threads_spawned(), 0, "threads(1) spawns no pool");
         assert_eq!(engine.context().precision, Precision::F32);
         assert_eq!(engine.plan_report().len(), 1);
         assert!(engine.workspace_bytes() > 0);
@@ -244,6 +267,24 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(matches!(err, EngineError::InvalidConfig(_)), "{err:?}");
+    }
+
+    #[test]
+    fn session_with_threads_clamps_and_shares_the_engine_pool() {
+        let engine = Engine::builder(conv_model(5)).threads(4).build().unwrap();
+        assert_eq!(engine.pool_threads_spawned(), 3, "pool = threads - 1");
+        let s = engine.session_with_threads(2);
+        assert_eq!(s.context().threads(), 2);
+        assert!(
+            std::sync::Arc::ptr_eq(
+                engine.context().par.pool().unwrap(),
+                s.context().par.pool().unwrap()
+            ),
+            "capped session must share the engine pool, not spawn its own"
+        );
+        assert_eq!(engine.session_with_threads(0).context().threads(), 1);
+        assert_eq!(engine.session_with_threads(99).context().threads(), 4);
+        assert_eq!(engine.pool_threads_spawned(), 3, "sessions spawn nothing");
     }
 
     #[test]

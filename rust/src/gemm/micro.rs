@@ -50,12 +50,19 @@ fn kernel_rows<const R: usize>(ap: &[f32], bp: &[f32], kb: usize, acc: &mut [f32
     debug_assert!(bp.len() >= kb * NR);
     // Local accumulators: LLVM keeps these in vector registers.
     let mut c = [[0.0f32; NR]; R];
-    let mut k = 0;
-    // 4-way K unroll: fewer loop-carried dependencies, better ILP.
-    while k + 4 <= kb {
+    // Fixed-size array windows (`&[f32; MR]`/`&[f32; NR]`) over slices
+    // pre-cut to exactly kb: the iterators carry the trip count and the
+    // window length checks fold away, leaving the inner loops with no
+    // bounds checks at all. 4-way K unroll kept: fewer loop-carried
+    // dependencies, better ILP.
+    let kb4 = kb - kb % 4;
+    for (a, b) in ap[..kb4 * MR]
+        .chunks_exact(4 * MR)
+        .zip(bp[..kb4 * NR].chunks_exact(4 * NR))
+    {
         for kk in 0..4 {
-            let a = &ap[(k + kk) * MR..(k + kk) * MR + MR];
-            let b = &bp[(k + kk) * NR..(k + kk) * NR + NR];
+            let a: &[f32; MR] = a[kk * MR..(kk + 1) * MR].try_into().unwrap();
+            let b: &[f32; NR] = b[kk * NR..(kk + 1) * NR].try_into().unwrap();
             for r in 0..R {
                 let ar = a[r];
                 for j in 0..NR {
@@ -63,21 +70,22 @@ fn kernel_rows<const R: usize>(ap: &[f32], bp: &[f32], kb: usize, acc: &mut [f32
                 }
             }
         }
-        k += 4;
     }
-    while k < kb {
-        let a = &ap[k * MR..k * MR + MR];
-        let b = &bp[k * NR..k * NR + NR];
+    for (a, b) in ap[kb4 * MR..kb * MR]
+        .chunks_exact(MR)
+        .zip(bp[kb4 * NR..kb * NR].chunks_exact(NR))
+    {
+        let a: &[f32; MR] = a.try_into().unwrap();
+        let b: &[f32; NR] = b.try_into().unwrap();
         for r in 0..R {
             let ar = a[r];
             for j in 0..NR {
                 c[r][j] += ar * b[j];
             }
         }
-        k += 1;
     }
-    for r in 0..R {
-        acc[r * NR..r * NR + NR].copy_from_slice(&c[r]);
+    for (dst, src) in acc.chunks_exact_mut(NR).zip(c.iter()) {
+        dst.copy_from_slice(src);
     }
 }
 
@@ -119,11 +127,15 @@ fn kernel_rows_i16<const R: usize>(ap: &[i16], bp: &[i16], kb: usize, acc: &mut 
     debug_assert!(ap.len() >= kb * MR);
     debug_assert!(bp.len() >= kb * NR);
     let mut c = [[0i32; NR]; R];
-    let mut k = 0;
-    while k + 4 <= kb {
+    // Same bounds-check-free array-window shape as the f32 kernel.
+    let kb4 = kb - kb % 4;
+    for (a, b) in ap[..kb4 * MR]
+        .chunks_exact(4 * MR)
+        .zip(bp[..kb4 * NR].chunks_exact(4 * NR))
+    {
         for kk in 0..4 {
-            let a = &ap[(k + kk) * MR..(k + kk) * MR + MR];
-            let b = &bp[(k + kk) * NR..(k + kk) * NR + NR];
+            let a: &[i16; MR] = a[kk * MR..(kk + 1) * MR].try_into().unwrap();
+            let b: &[i16; NR] = b[kk * NR..(kk + 1) * NR].try_into().unwrap();
             for r in 0..R {
                 let ar = a[r] as i32;
                 for j in 0..NR {
@@ -131,21 +143,22 @@ fn kernel_rows_i16<const R: usize>(ap: &[i16], bp: &[i16], kb: usize, acc: &mut 
                 }
             }
         }
-        k += 4;
     }
-    while k < kb {
-        let a = &ap[k * MR..k * MR + MR];
-        let b = &bp[k * NR..k * NR + NR];
+    for (a, b) in ap[kb4 * MR..kb * MR]
+        .chunks_exact(MR)
+        .zip(bp[kb4 * NR..kb * NR].chunks_exact(NR))
+    {
+        let a: &[i16; MR] = a.try_into().unwrap();
+        let b: &[i16; NR] = b.try_into().unwrap();
         for r in 0..R {
             let ar = a[r] as i32;
             for j in 0..NR {
                 c[r][j] += (ar * b[j] as i32 + (1 << 14)) >> 15;
             }
         }
-        k += 1;
     }
-    for r in 0..R {
-        acc[r * NR..r * NR + NR].copy_from_slice(&c[r]);
+    for (dst, src) in acc.chunks_exact_mut(NR).zip(c.iter()) {
+        dst.copy_from_slice(src);
     }
 }
 

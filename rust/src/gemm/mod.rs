@@ -9,8 +9,10 @@
 //!
 //! Implementation: classic Goto-style blocking (KC×MC×NC panels, packed A
 //! and B, an MR×NR register micro-kernel that LLVM auto-vectorizes), with
-//! the MC loop parallelized over the caller-provided thread count — the
-//! same structure OpenBLAS uses, scaled down.
+//! the MC loop parallelized through the caller's
+//! [`Parallelism`](crate::threadpool::Parallelism) handle (persistent
+//! pool workers; tiny GEMMs stay inline) — the same structure OpenBLAS
+//! uses, scaled down.
 
 pub mod micro;
 pub mod pack;
@@ -20,7 +22,7 @@ pub use q16::{
     gemm_prepacked_batch_i16, gemm_prepacked_ex_i16, gemm_prepacked_i16, MatRefI16, PackedBI16,
 };
 
-use crate::threadpool::parallel_for;
+use crate::threadpool::Parallelism;
 use micro::{MR, NR};
 
 /// Immutable matrix view: `rows × cols` with row stride `rs`
@@ -127,22 +129,25 @@ impl Default for BlockSizes {
 
 /// `C = A × B` (beta = 0), single-threaded, default blocking.
 pub fn gemm(a: MatRef<'_>, b: MatRef<'_>, c: &mut MatMut<'_>) {
-    gemm_ex(a, b, c, 1.0, 0.0, 1, BlockSizes::default());
+    gemm_ex(a, b, c, 1.0, 0.0, &Parallelism::inline(), BlockSizes::default());
 }
 
-/// `C = alpha·A×B + beta·C` with explicit thread count and blocking.
+/// `C = alpha·A×B + beta·C` with an explicit parallelism handle and
+/// blocking.
 ///
 /// Dimensions: A is m×k, B is k×n, C is m×n (all row-major views).
-/// Parallelism: the M dimension is split across threads (row panels are
-/// independent); each thread packs its own A panels, B panels are packed
-/// once per (KC,NC) tile and shared read-only.
+/// Parallelism: the M dimension is split across the handle's thread
+/// budget (row panels are independent); each participant packs its own A
+/// panels, B panels are packed once per (KC,NC) tile and shared
+/// read-only. Loops too small to pay a pool wake-up run inline (grain
+/// heuristic), with identical partitioning either way.
 pub fn gemm_ex(
     a: MatRef<'_>,
     b: MatRef<'_>,
     c: &mut MatMut<'_>,
     alpha: f32,
     beta: f32,
-    threads: usize,
+    par: &Parallelism,
     bs: BlockSizes,
 ) {
     let (m, k) = (a.rows, a.cols);
@@ -166,7 +171,7 @@ pub fn gemm_ex(
     // rebuilt from a SharedSlice (see threadpool docs for the contract).
     let c_shared = crate::threadpool::SharedSlice::new(c.data);
 
-    let row_panels: Vec<(usize, usize)> = split_ranges(m, threads.max(1));
+    let row_panels: Vec<(usize, usize)> = split_ranges(m, par.threads());
     let nthreads = row_panels.len();
 
     // Pack B once per (pc, jc) tile, shared across row panels. To keep the
@@ -174,7 +179,8 @@ pub fn gemm_ex(
     // running multi-threaded would contend; measurement (§Perf) showed
     // per-thread packing of B is cheap relative to the FLOPs at the sizes
     // the conv layers produce, and it avoids a barrier.
-    parallel_for(nthreads, nthreads, |t| {
+    let panel_macs = m.div_ceil(nthreads) * k * n;
+    par.parallel_for_macs(nthreads, panel_macs, |t| {
         let (r0, r1) = row_panels[t];
         if r0 == r1 {
             return;
@@ -276,11 +282,11 @@ pub fn gemm_prepacked(a: MatRef<'_>, pb: &PackedB, c: &mut MatMut<'_>) {
 /// once at plan time). Thread partitioning matches [`gemm_ex`] exactly
 /// (same row panels, same tile walk), so results are bit-identical to
 /// the raw-B path at any thread count.
-pub fn gemm_prepacked_ex(a: MatRef<'_>, pb: &PackedB, c: &mut MatMut<'_>, threads: usize) {
+pub fn gemm_prepacked_ex(a: MatRef<'_>, pb: &PackedB, c: &mut MatMut<'_>, par: &Parallelism) {
     assert_eq!(a.cols, pb.k, "gemm_prepacked_ex: A cols vs packed B rows");
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, pb.n);
-    if threads <= 1 {
+    if par.threads() <= 1 {
         gemm_prepacked(a, pb, c);
         return;
     }
@@ -292,9 +298,10 @@ pub fn gemm_prepacked_ex(a: MatRef<'_>, pb: &PackedB, c: &mut MatMut<'_>, thread
     scale_c(c, 0.0);
     let crs = c.rs;
     let c_shared = crate::threadpool::SharedSlice::new(c.data);
-    let row_panels: Vec<(usize, usize)> = split_ranges(m, threads);
+    let row_panels: Vec<(usize, usize)> = split_ranges(m, par.threads());
     let nthreads = row_panels.len();
-    parallel_for(nthreads, nthreads, |t| {
+    let panel_macs = m.div_ceil(nthreads) * k * n;
+    par.parallel_for_macs(nthreads, panel_macs, |t| {
         let (r0, r1) = row_panels[t];
         if r0 == r1 {
             return;
@@ -539,7 +546,7 @@ pub fn gemm_batched_shared_b(
     a: &[MatRef<'_>],
     b: MatRef<'_>,
     c: &mut [MatMut<'_>],
-    threads: usize,
+    par: &Parallelism,
     bs: BlockSizes,
 ) {
     assert_eq!(a.len(), c.len());
@@ -552,7 +559,12 @@ pub fn gemm_batched_shared_b(
         .iter()
         .map(|m| (m.rows, m.cols, m.rs, m.data.len()))
         .collect();
-    parallel_for(threads, n, |i| {
+    let entry_macs = a
+        .iter()
+        .map(|ai| ai.rows * ai.cols * b.cols)
+        .max()
+        .unwrap_or(0);
+    par.parallel_for_macs(n, entry_macs, |i| {
         scale_and_mul(a[i], b, &c_cell[i], metas[i], bs);
     });
 }
@@ -602,7 +614,7 @@ mod tests {
             &mut MatMut::new(&mut c1, m, n),
             1.0,
             0.0,
-            threads,
+            &Parallelism::new(threads),
             bs,
         );
         gemm_reference(
@@ -669,7 +681,7 @@ mod tests {
             &mut MatMut::new(&mut c, 2, 2),
             2.0,
             0.5,
-            1,
+            &Parallelism::inline(),
             BlockSizes::default(),
         );
         assert_eq!(c, [7.0, 14.0, 21.0, 28.0]);
@@ -698,7 +710,13 @@ mod tests {
             let a_refs: Vec<MatRef<'_>> = a_bufs.iter().map(|v| MatRef::new(v, 5, 9)).collect();
             let mut c_refs: Vec<MatMut<'_>> =
                 c_bufs.iter_mut().map(|v| MatMut::new(v, 5, 4)).collect();
-            gemm_batched_shared_b(&a_refs, bref, &mut c_refs, 3, BlockSizes::default());
+            gemm_batched_shared_b(
+                &a_refs,
+                bref,
+                &mut c_refs,
+                &Parallelism::new(3),
+                BlockSizes::default(),
+            );
         }
         for (got, want) in c_bufs.iter().zip(&expected) {
             assert_allclose(got, want, 1e-4, "batched");
@@ -721,7 +739,7 @@ mod tests {
             &mut MatMut::new(&mut want, m, n),
             1.0,
             0.0,
-            1,
+            &Parallelism::inline(),
             bs,
         );
         let pb = PackedB::pack(MatRef::new(&b, k, n), bs);
@@ -731,7 +749,7 @@ mod tests {
                 MatRef::new(&a, m, k),
                 &pb,
                 &mut MatMut::new(&mut got, m, n),
-                threads,
+                &Parallelism::new(threads),
             );
             assert_eq!(got, want, "threads={threads}");
         }
@@ -763,7 +781,7 @@ mod tests {
             &mut MatMut::new(&mut c, 2, 1),
             1.0,
             0.0,
-            1,
+            &Parallelism::inline(),
             BlockSizes::default(),
         );
         assert_eq!(c, [0.0, 0.0]);

@@ -24,7 +24,7 @@
 
 use super::micro::{self, MR, NR};
 use super::{scale_c, split_ranges, BlockSizes, MatMut};
-use crate::threadpool::{parallel_for, SharedSlice};
+use crate::threadpool::{Parallelism, SharedSlice};
 
 /// Immutable i16 matrix view: `rows × cols` with row stride `rs`
 /// (`rs >= cols`; `rs > cols` expresses BLAS `ld` sub-matrices — MEC's
@@ -198,12 +198,12 @@ pub fn gemm_prepacked_ex_i16(
     pb: &PackedBI16,
     c: &mut MatMut<'_>,
     scale: f32,
-    threads: usize,
+    par: &Parallelism,
 ) {
     assert_eq!(a.cols, pb.k, "gemm_prepacked_ex_i16: A cols vs packed B rows");
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, pb.n);
-    if threads <= 1 {
+    if par.threads() <= 1 {
         gemm_prepacked_i16(a, pb, c, scale);
         return;
     }
@@ -215,9 +215,10 @@ pub fn gemm_prepacked_ex_i16(
     scale_c(c, 0.0);
     let crs = c.rs;
     let c_shared = SharedSlice::new(c.data);
-    let row_panels: Vec<(usize, usize)> = split_ranges(m, threads);
+    let row_panels: Vec<(usize, usize)> = split_ranges(m, par.threads());
     let nthreads = row_panels.len();
-    parallel_for(nthreads, nthreads, |t| {
+    let panel_macs = m.div_ceil(nthreads) * k * n;
+    par.parallel_for_macs(nthreads, panel_macs, |t| {
         let (r0, r1) = row_panels[t];
         if r0 == r1 {
             return;
@@ -451,7 +452,7 @@ mod tests {
                 &pb,
                 &mut MatMut::new(&mut got, m, n),
                 scale,
-                threads,
+                &Parallelism::new(threads),
             );
             assert_eq!(got, want, "threads={threads}");
         }

@@ -258,7 +258,11 @@ fn cmd_serve(args: &mut Args) {
     let max_batch = args.opt_usize("max-batch", 32, "dynamic batch cap");
     let delay_ms = args.opt_usize("max-delay-ms", 2, "dynamic batch delay");
     let budget = budget_arg(args, "conv workspace budget");
-    let threads = args.opt_usize("threads", 1, "engine threads per worker");
+    let threads = args.opt_usize(
+        "threads",
+        1,
+        "engine thread budget (one shared pool, divided across workers)",
+    );
     let precision = precision_arg(args);
     args.finish();
 

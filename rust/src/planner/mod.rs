@@ -20,6 +20,7 @@ use crate::conv::{AlgoKind, ConvContext, ConvPlan, Convolution};
 use crate::memory::Budget;
 use crate::tensor::quant::Precision;
 use crate::tensor::{ConvShape, Kernel};
+use crate::threadpool::GrainModel;
 
 /// The outcome of planning one convolution.
 #[derive(Debug, Clone, PartialEq)]
@@ -108,6 +109,21 @@ impl Default for CostModel {
 }
 
 impl CostModel {
+    /// The threading grain derived from this cost model: the same
+    /// calibrated coefficients that rank algorithms also decide when a
+    /// parallel loop is too small to pay a pool wake-up
+    /// ([`Parallelism`](crate::threadpool::Parallelism)'s inline fast
+    /// path). The dispatch figure models publish + wake + completion
+    /// barrier of the parked pool — a few GEMM-call overheads, far below
+    /// a thread spawn.
+    pub fn grain_model(&self) -> GrainModel {
+        GrainModel {
+            ns_per_mac: self.ns_per_mac,
+            ns_per_byte: self.ns_per_byte_moved,
+            dispatch_ns: 5.0 * self.ns_per_gemm_call,
+        }
+    }
+
     /// One-time plan cost of `algo` on `shape`: kernel packing, filter
     /// transforms, kernel spectra. Paid at model load, amortized across
     /// every `execute` — the planner ranks by [`Self::estimate_ns`]
@@ -266,7 +282,7 @@ impl Planner {
         let mut best: Option<Plan> = None;
         for mut p in self.admissible(shape, budget, ctx) {
             // Thread scaling with a 75% parallel-efficiency discount.
-            let t = ctx.threads.max(1) as f64;
+            let t = ctx.threads() as f64;
             p.est_ns /= 1.0 + 0.75 * (t - 1.0);
             match &best {
                 Some(b) if b.est_ns <= p.est_ns => {}
@@ -541,6 +557,18 @@ mod tests {
         assert!(matches!(err, PlanError::UnsupportedGeometry { .. }), "{err:?}");
         // Errors render human-readable reasons.
         assert!(err.to_string().contains("winograd"));
+    }
+
+    #[test]
+    fn grain_model_tracks_cost_model_coefficients() {
+        // threadpool::GrainModel::default() delegates here; pin the
+        // derivation so the grain always follows the calibrated model.
+        let cm = CostModel::default();
+        let g = cm.grain_model();
+        assert_eq!(g.ns_per_mac, cm.ns_per_mac);
+        assert_eq!(g.ns_per_byte, cm.ns_per_byte_moved);
+        assert!(g.dispatch_ns > 0.0);
+        assert_eq!(crate::threadpool::GrainModel::default(), g);
     }
 
     #[test]

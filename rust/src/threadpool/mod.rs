@@ -1,58 +1,616 @@
-//! Scoped thread pool + `parallel_for` — our stand-in for the paper's
-//! OpenMP parallel loops (rayon is unavailable offline).
+//! Persistent parked worker pool + `parallel_for` — our stand-in for the
+//! paper's OpenMP parallel loops (rayon is unavailable offline).
 //!
-//! Design: a fixed set of worker threads parked on a shared injector;
-//! `scope()` lets callers borrow stack data (like OpenMP), implemented with
-//! `std::thread::scope` under the hood for the borrowed case, and a
-//! long-lived pool for the serving path where tasks are `'static`.
+//! # Why a persistent pool
 //!
-//! The "Mobile" configuration of the paper (single ARM core) is modelled by
-//! constructing a pool with 1 thread: `parallel_for` then degenerates to a
-//! sequential loop with no thread overhead.
+//! MEC's headline schedule executes *many small* matrix multiplications
+//! per convolution (§3, Fig. 4): `o_h` (Solution A) or `i_n·o_h`
+//! (Solution B) GEMMs whose bodies often run tens of microseconds. The
+//! original substrate spawned and joined fresh OS threads via
+//! `std::thread::scope` on **every** parallel loop, so a 5-layer model at
+//! batch 1 paid ~40+ thread spawns per inference — dispatch cost, not
+//! FLOPs, decided the benchmark. [`Pool`] replaces that with long-lived
+//! workers that spin briefly and then park between jobs; dispatching a
+//! loop is an epoch bump + condvar wake instead of clone+spawn+join.
+//!
+//! # Shape of the API
+//!
+//! * [`Pool`] — the workers. Created once (per [`Parallelism`] handle /
+//!   per engine), joined on drop. Borrowed-stack closures are supported
+//!   the way rayon's scope does it: the closure reference is
+//!   lifetime-erased into the job slot, and the submitting thread cannot
+//!   return until every registered worker has left the job (completion
+//!   barrier), so the borrow is live for exactly as long as any worker
+//!   can touch it.
+//! * [`Parallelism`] — what the rest of the stack carries (inside
+//!   [`ConvContext`](crate::conv::ConvContext)): an optional shared
+//!   `Arc<Pool>` plus a *thread budget*, so many sessions can share one
+//!   pool while each is capped at its own width, plus the
+//!   [`GrainModel`] used to decide when a loop is too small to pay even
+//!   a pool wake-up and should run inline.
+//! * [`scoped_parallel_for`] — the old spawn-per-call implementation,
+//!   kept only as the baseline the dispatch microbench compares against.
+//!
+//! The "Mobile" configuration of the paper (single ARM core) is modelled
+//! by a budget of 1: every loop degenerates to a sequential run with no
+//! pool, no spawns, no atomics.
+//!
+//! # Observability
+//!
+//! Every OS thread this module ever spawns (pool workers and the scoped
+//! baseline) bumps [`os_threads_spawned`]; live pool workers are gauged
+//! by [`live_pool_workers`]. A pool additionally counts its own spawns
+//! ([`Pool::threads_spawned`]), which is what the steady-state tests
+//! assert stays flat across repeated `Session::infer` calls — the
+//! threading analogue of the zero-tracked-alloc invariant.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
-/// A chunked parallel for-loop over `0..n` with `threads` workers that may
-/// borrow from the caller's stack. Each worker receives disjoint index
-/// ranges; `body(i)` is called exactly once per index.
-///
-/// With `threads <= 1` (or tiny `n`) it runs inline — this is the paper's
-/// Mobile configuration and also keeps nested parallelism cheap.
-pub fn parallel_for<F>(threads: usize, n: usize, body: F)
+/// Total OS threads ever spawned by this module (pool workers + the
+/// scoped-spawn baseline), process-wide.
+static OS_THREADS_SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+/// Currently-alive pool workers, process-wide (decremented as workers
+/// exit during shutdown — the no-leak tests watch this return to its
+/// baseline).
+static LIVE_POOL_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Total OS threads ever spawned by this module, process-wide.
+pub fn os_threads_spawned() -> usize {
+    OS_THREADS_SPAWNED.load(Ordering::Acquire)
+}
+
+/// Pool workers currently alive, process-wide.
+pub fn live_pool_workers() -> usize {
+    LIVE_POOL_WORKERS.load(Ordering::Acquire)
+}
+
+/// Spins on the epoch ticker before parking on the condvar: long enough
+/// to catch the back-to-back loops of one conv layer without a syscall,
+/// short enough not to burn a core while a server sits idle.
+const SPIN_ROUNDS: u32 = 1 << 12;
+
+/// A parallel-loop job, lifetime-erased into the pool's slot. The
+/// submitting thread keeps `func`/`next`/`slots` alive until every
+/// registered worker has deregistered (see `CloseGuard`), which is what
+/// makes the borrowed-stack closure sound.
+#[derive(Clone, Copy)]
+struct JobDesc {
+    /// `(worker_slot, index)` body; worker slots are `0..threads` with
+    /// slot 0 reserved for the submitting thread.
+    func: *const (dyn Fn(usize, usize) + Sync),
+    /// Shared chunk cursor over `0..n`.
+    next: *const AtomicUsize,
+    /// Worker-slot allocator (starts at 1; slot 0 is the submitter).
+    slots: *const AtomicUsize,
+    n: usize,
+    chunk: usize,
+    /// Max participants including the submitter; late workers that draw
+    /// a slot `>= threads` do no work.
+    threads: usize,
+}
+
+// Safety: the raw pointers reference stack data of the submitting
+// thread, which blocks until every worker that could dereference them
+// has deregistered from the job (the completion barrier in `CloseGuard`).
+unsafe impl Send for JobDesc {}
+
+struct JobState {
+    job: Option<JobDesc>,
+    /// Bumped once per published job; workers snapshot it to tell a new
+    /// job from the one they just finished.
+    epoch: u64,
+    /// Workers currently registered on the published job.
+    active: usize,
+}
+
+struct Shared {
+    state: Mutex<JobState>,
+    /// Workers park here between jobs.
+    work_cv: Condvar,
+    /// The submitter parks here waiting for stragglers.
+    done_cv: Condvar,
+    /// Mirror of `state.epoch` for the workers' lock-free spin phase.
+    epoch: AtomicU64,
+    shutdown: AtomicBool,
+    /// A worker body panicked; re-raised on the submitting thread.
+    panicked: AtomicBool,
+    /// Workers of THIS pool currently alive (decremented as they exit).
+    live: AtomicUsize,
+}
+
+/// Persistent parked worker pool. One `parallel_for` dispatch is an
+/// epoch bump + wake; no OS threads are created after construction.
+pub struct Pool {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Serializes dispatch: a second submitter (another session sharing
+    /// the pool, or a nested loop) finds it held and runs inline.
+    submit: Mutex<()>,
+    workers: usize,
+    spawned: AtomicUsize,
+}
+
+impl Pool {
+    /// Spawn `workers` parked workers (min 1). A pool serving a thread
+    /// budget of `t` wants `t - 1` workers: the submitting thread is
+    /// always participant 0.
+    pub fn new(workers: usize) -> Pool {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(JobState {
+                job: None,
+                epoch: 0,
+                active: 0,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            epoch: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            panicked: AtomicBool::new(false),
+            live: AtomicUsize::new(0),
+        });
+        let pool = Pool {
+            shared: Arc::clone(&shared),
+            handles: Mutex::new(Vec::with_capacity(workers)),
+            submit: Mutex::new(()),
+            workers,
+            spawned: AtomicUsize::new(0),
+        };
+        let mut handles = pool.handles.lock().unwrap();
+        for id in 0..workers {
+            let shared = Arc::clone(&shared);
+            OS_THREADS_SPAWNED.fetch_add(1, Ordering::AcqRel);
+            LIVE_POOL_WORKERS.fetch_add(1, Ordering::AcqRel);
+            pool.shared.live.fetch_add(1, Ordering::AcqRel);
+            pool.spawned.fetch_add(1, Ordering::AcqRel);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("mec-pool-{id}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker"),
+            );
+        }
+        drop(handles);
+        pool
+    }
+
+    /// Worker threads parked in this pool (excludes the submitter).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// OS threads this pool has ever spawned — flat after construction;
+    /// the steady-state tests assert exactly that.
+    pub fn threads_spawned(&self) -> usize {
+        self.spawned.load(Ordering::Acquire)
+    }
+
+    /// Workers of this pool currently alive; `workers()` while running,
+    /// 0 after [`Pool::shutdown`] returns (it joins them).
+    pub fn live_workers(&self) -> usize {
+        self.shared.live.load(Ordering::Acquire)
+    }
+
+    /// Run `body(worker_slot, i)` for every `i in 0..n` using up to
+    /// `threads` participants (the calling thread is slot 0). Falls back
+    /// to an inline loop when the pool is already running a job — which
+    /// both serializes concurrent sessions safely and makes nested
+    /// parallel loops degenerate instead of deadlocking or
+    /// oversubscribing.
+    pub fn run(&self, threads: usize, n: usize, body: &(dyn Fn(usize, usize) + Sync)) {
+        let threads = threads.min(self.workers + 1).min(n.max(1));
+        if threads <= 1 || n <= 1 {
+            for i in 0..n {
+                body(0, i);
+            }
+            return;
+        }
+        let Ok(_submit) = self.submit.try_lock() else {
+            for i in 0..n {
+                body(0, i);
+            }
+            return;
+        };
+        let next = AtomicUsize::new(0);
+        let slots = AtomicUsize::new(1);
+        // Chunk size balances scheduling overhead vs. load balance; the
+        // conv loops have fairly uniform bodies so a modest chunk works.
+        let chunk = (n / (threads * 4)).max(1);
+        let desc = JobDesc {
+            // Lifetime erasure: sound because `CloseGuard` below keeps
+            // this frame alive until every registered worker is done.
+            func: unsafe {
+                std::mem::transmute::<
+                    &(dyn Fn(usize, usize) + Sync),
+                    &'static (dyn Fn(usize, usize) + Sync),
+                >(body)
+            },
+            next: &next,
+            slots: &slots,
+            n,
+            chunk,
+            threads,
+        };
+        // A stale flag can survive a submitter-side panic in a previous
+        // job; clear it so this job cannot be blamed for it.
+        self.shared.panicked.store(false, Ordering::Release);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.job = Some(desc);
+            self.shared.epoch.store(st.epoch, Ordering::Release);
+        }
+        // Wake only as many parked workers as the job can seat (the
+        // submitter is participant 0). Spinning workers join on their
+        // own via the epoch ticker; latecomers find the slots taken and
+        // skip without registering, so a budget-capped job on a big
+        // pool never pays wake-ups or barrier waits for idle workers.
+        let extra = threads - 1;
+        if extra >= self.workers {
+            self.shared.work_cv.notify_all();
+        } else {
+            for _ in 0..extra {
+                self.shared.work_cv.notify_one();
+            }
+        }
+        // Close the job and drain stragglers even if `body` panics on
+        // this thread — workers may still hold the erased borrow.
+        let guard = CloseGuard { shared: &self.shared };
+        run_chunks(&next, n, chunk, 0, body);
+        drop(guard);
+        if self.shared.panicked.swap(false, Ordering::AcqRel) {
+            panic!("mec::threadpool: a pool worker panicked inside parallel_for");
+        }
+    }
+
+    /// Park-free check used by tests: true when no job is published.
+    pub fn is_idle(&self) -> bool {
+        self.shared.state.lock().unwrap().job.is_none()
+    }
+
+    /// Ask every worker to exit and join them. Idempotent; called by
+    /// `Drop`. A pool used after shutdown still computes correctly —
+    /// every loop just runs on the submitting thread.
+    pub fn shutdown(&self) {
+        {
+            let _st = self.shared.state.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::Release);
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool").field("workers", &self.workers).finish()
+    }
+}
+
+/// Closes the published job and blocks until every registered worker has
+/// deregistered — the completion barrier that makes the lifetime erasure
+/// in [`Pool::run`] sound (runs in `Drop` so a panicking submitter still
+/// waits for its workers).
+struct CloseGuard<'p> {
+    shared: &'p Shared,
+}
+
+impl Drop for CloseGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.job = None;
+        while st.active > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+    }
+}
+
+fn run_chunks(
+    next: &AtomicUsize,
+    n: usize,
+    chunk: usize,
+    slot: usize,
+    body: &(dyn Fn(usize, usize) + Sync),
+) {
+    loop {
+        let start = next.fetch_add(chunk, Ordering::Relaxed);
+        if start >= n {
+            break;
+        }
+        let end = (start + chunk).min(n);
+        for i in start..end {
+            body(slot, i);
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen: u64 = 0;
+    'outer: loop {
+        // Spin-then-park: watch the epoch ticker lock-free for a while
+        // (catches back-to-back layer loops), then block on the condvar.
+        let mut spins = 0u32;
+        while shared.epoch.load(Ordering::Acquire) == seen
+            && !shared.shutdown.load(Ordering::Acquire)
+            && spins < SPIN_ROUNDS
+        {
+            spins += 1;
+            std::hint::spin_loop();
+        }
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break 'outer;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    match st.job {
+                        // Register while holding the lock: the submitter
+                        // cannot finish closing until we are counted.
+                        // (Deref of the erased job pointers is sound
+                        // here: `job` is still Some under the mutex, so
+                        // the submitter has not passed its close.)
+                        Some(d) => {
+                            let taken = unsafe { (*d.slots).load(Ordering::Relaxed) };
+                            if taken >= d.threads {
+                                // Fully seated: skip without registering
+                                // so the barrier never waits on us.
+                                break None;
+                            }
+                            st.active += 1;
+                            break Some(d);
+                        }
+                        // Job already closed before we woke: skip it.
+                        None => break None,
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        let Some(d) = job else { continue };
+        let slot = unsafe { (*d.slots).fetch_add(1, Ordering::Relaxed) };
+        if slot < d.threads {
+            let body = unsafe { &*d.func };
+            let next = unsafe { &*d.next };
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run_chunks(next, d.n, d.chunk, slot, body);
+            }));
+            if result.is_err() {
+                shared.panicked.store(true, Ordering::Release);
+            }
+        }
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+    shared.live.fetch_sub(1, Ordering::AcqRel);
+    LIVE_POOL_WORKERS.fetch_sub(1, Ordering::AcqRel);
+}
+
+/// Coefficients for the inline-vs-dispatch decision: what one unit of
+/// loop work costs and what waking the parked pool costs. The canonical
+/// instance is derived from the planner's calibrated
+/// [`CostModel`](crate::planner::CostModel) via
+/// [`CostModel::grain_model`](crate::planner::CostModel::grain_model),
+/// so the same coefficients that rank algorithms also size the grain —
+/// MEC's tiny `o_w`-row GEMMs stay inline instead of paying a wake-up.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GrainModel {
+    /// ns per multiply-add through the blocked GEMM.
+    pub ns_per_mac: f64,
+    /// ns per byte moved by lowering/repack/copy loops.
+    pub ns_per_byte: f64,
+    /// Estimated cost of one pool dispatch (publish + wake + completion
+    /// barrier). A loop goes parallel only when the time it stands to
+    /// save clears this.
+    pub dispatch_ns: f64,
+}
+
+impl Default for GrainModel {
+    fn default() -> GrainModel {
+        // Delegate to the calibrated cost model (same crate, no cycle:
+        // CostModel's own Default is a plain literal) so recalibrating
+        // the planner automatically retunes the grain.
+        crate::planner::CostModel::default().grain_model()
+    }
+}
+
+/// The parallel-execution handle the whole stack carries (inside
+/// [`ConvContext`](crate::conv::ConvContext)): a shared [`Pool`] plus a
+/// per-holder thread budget and the [`GrainModel`] for the inline fast
+/// path. Cloning shares the pool; [`Parallelism::with_budget`] caps a
+/// clone's width without touching the pool (how serving workers split
+/// one engine pool without oversubscribing).
+#[derive(Clone)]
+pub struct Parallelism {
+    budget: usize,
+    pool: Option<Arc<Pool>>,
+    grain: GrainModel,
+}
+
+impl Parallelism {
+    /// Budget 1, no pool, no worker threads — the paper's Mobile
+    /// configuration; every loop runs sequentially on the caller.
+    pub fn inline() -> Parallelism {
+        Parallelism {
+            budget: 1,
+            pool: None,
+            grain: GrainModel::default(),
+        }
+    }
+
+    /// A budget of `threads` with the default grain coefficients;
+    /// spawns a pool of `threads - 1` parked workers when `threads > 1`.
+    pub fn new(threads: usize) -> Parallelism {
+        Parallelism::with_grain(threads, GrainModel::default())
+    }
+
+    /// Like [`Parallelism::new`] with explicit grain coefficients (the
+    /// planner's [`CostModel`](crate::planner::CostModel) provides the
+    /// calibrated instance).
+    pub fn with_grain(threads: usize, grain: GrainModel) -> Parallelism {
+        let budget = threads.max(1);
+        Parallelism {
+            budget,
+            pool: if budget > 1 {
+                Some(Arc::new(Pool::new(budget - 1)))
+            } else {
+                None
+            },
+            grain,
+        }
+    }
+
+    /// A clone sharing this pool, capped at `budget` participants
+    /// (clamped to `1..=self.threads()`). Serving workers use this to
+    /// divide one engine pool: worker-count × per-session budget stays
+    /// at the pool size instead of multiplying.
+    pub fn with_budget(&self, budget: usize) -> Parallelism {
+        Parallelism {
+            budget: budget.clamp(1, self.budget),
+            pool: self.pool.clone(),
+            grain: self.grain,
+        }
+    }
+
+    /// The thread budget (≥ 1): max participants per loop, caller
+    /// included.
+    pub fn threads(&self) -> usize {
+        self.budget
+    }
+
+    /// The shared pool, if this handle is pooled (budget > 1).
+    pub fn pool(&self) -> Option<&Arc<Pool>> {
+        self.pool.as_ref()
+    }
+
+    /// The grain coefficients in force.
+    pub fn grain(&self) -> GrainModel {
+        self.grain
+    }
+
+    /// A chunked parallel for-loop over `0..n`; `body(i)` is called
+    /// exactly once per index, from this thread and/or pool workers.
+    /// Runs inline when the budget or `n` is 1, when there is no pool,
+    /// or when the pool is busy with another session's loop.
+    pub fn parallel_for<F>(&self, n: usize, body: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.dispatch(n, &|_, i| body(i));
+    }
+
+    /// Like [`Parallelism::parallel_for`] but the body also receives a
+    /// worker slot in `0..self.threads()` (slot 0 is the caller), for
+    /// per-thread scratch lanes.
+    pub fn parallel_for_with_id<F>(&self, n: usize, body: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        self.dispatch(n, &body);
+    }
+
+    /// Grain-aware loop: `macs_per_item` estimates each index's GEMM
+    /// work; the whole loop runs inline when the estimated saving from
+    /// going parallel does not clear one pool dispatch.
+    pub fn parallel_for_macs<F>(&self, n: usize, macs_per_item: usize, body: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let est_ns = (n * macs_per_item) as f64 * self.grain.ns_per_mac;
+        if self.should_inline(est_ns) {
+            for i in 0..n {
+                body(i);
+            }
+            return;
+        }
+        self.dispatch(n, &|_, i| body(i));
+    }
+
+    /// Grain-aware loop for copy/lowering bodies: `bytes_per_item`
+    /// estimates each index's moved bytes (reads + writes).
+    pub fn parallel_for_bytes<F>(&self, n: usize, bytes_per_item: usize, body: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let est_ns = (n * bytes_per_item) as f64 * self.grain.ns_per_byte;
+        if self.should_inline(est_ns) {
+            for i in 0..n {
+                body(i);
+            }
+            return;
+        }
+        self.dispatch(n, &|_, i| body(i));
+    }
+
+    /// True when `est_ns` of loop work is too small to pay a pool
+    /// wake-up: parallel saves at most `est·(1 − 1/budget)`, which must
+    /// clear the dispatch cost.
+    pub fn should_inline(&self, est_ns: f64) -> bool {
+        if self.budget <= 1 || self.pool.is_none() {
+            return true;
+        }
+        let saved = est_ns * (1.0 - 1.0 / self.budget as f64);
+        saved < self.grain.dispatch_ns
+    }
+
+    fn dispatch(&self, n: usize, body: &(dyn Fn(usize, usize) + Sync)) {
+        let t = self.budget.min(n.max(1));
+        if t <= 1 || n <= 1 {
+            for i in 0..n {
+                body(0, i);
+            }
+            return;
+        }
+        match &self.pool {
+            Some(pool) => pool.run(t, n, body),
+            // A multi-thread budget without a pool never spawns: it runs
+            // inline (construction via `new`/`with_grain` always pairs a
+            // budget > 1 with a pool, so this is a defensive path).
+            None => {
+                for i in 0..n {
+                    body(0, i);
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Parallelism {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Parallelism")
+            .field("budget", &self.budget)
+            .field("pooled", &self.pool.is_some())
+            .finish()
+    }
+}
+
+/// The pre-pool implementation: spawn + join fresh scoped threads on
+/// every call. Kept **only** as the baseline the dispatch microbench
+/// (`cargo bench --bench dispatch`) compares the pool against; no
+/// production path calls this.
+pub fn scoped_parallel_for<F>(threads: usize, n: usize, body: F)
 where
     F: Fn(usize) + Sync,
 {
-    let threads = threads.max(1).min(n.max(1));
-    if threads == 1 || n <= 1 {
-        for i in 0..n {
-            body(i);
-        }
-        return;
-    }
-    let next = AtomicUsize::new(0);
-    // Chunk size balances scheduling overhead vs. load balance; the conv
-    // loops have fairly uniform bodies so a modest chunk works well.
-    let chunk = (n / (threads * 4)).max(1);
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let start = next.fetch_add(chunk, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                let end = (start + chunk).min(n);
-                for i in start..end {
-                    body(i);
-                }
-            });
-        }
-    });
+    scoped_parallel_for_with_id(threads, n, |_, i| body(i));
 }
 
-/// Like [`parallel_for`] but the body gets `(worker_id, index)` so workers
-/// can keep per-thread scratch.
-pub fn parallel_for_with_id<F>(threads: usize, n: usize, body: F)
+/// `(worker_id, index)` variant of [`scoped_parallel_for`].
+pub fn scoped_parallel_for_with_id<F>(threads: usize, n: usize, body: F)
 where
     F: Fn(usize, usize) + Sync,
 {
@@ -65,6 +623,7 @@ where
     }
     let next = AtomicUsize::new(0);
     let chunk = (n / (threads * 4)).max(1);
+    OS_THREADS_SPAWNED.fetch_add(threads, Ordering::AcqRel);
     std::thread::scope(|s| {
         for t in 0..threads {
             let next = &next;
@@ -91,7 +650,9 @@ where
 ///
 /// Safety contract: callers must ensure tasks write non-overlapping index
 /// ranges; the paper's parallel loops (over output rows / lowered-matrix
-/// rows / batch entries) all have this property by construction.
+/// rows / batch entries) all have this property by construction. The
+/// pool's completion barrier guarantees the wrapped borrow outlives every
+/// worker that can reach it.
 pub struct SharedSlice<T = f32> {
     ptr: *mut T,
     len: usize,
@@ -124,82 +685,17 @@ impl<T> SharedSlice<T> {
     }
 }
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
-
-/// Long-lived pool for `'static` jobs (the coordinator's workers).
-pub struct ThreadPool {
-    tx: Option<mpsc::Sender<Job>>,
-    handles: Vec<std::thread::JoinHandle<()>>,
-    size: usize,
-}
-
-impl ThreadPool {
-    /// Spawn `size` workers (min 1).
-    pub fn new(size: usize) -> ThreadPool {
-        let size = size.max(1);
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let mut handles = Vec::with_capacity(size);
-        for id in 0..size {
-            let rx = Arc::clone(&rx);
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("mec-worker-{id}"))
-                    .spawn(move || loop {
-                        let job = { rx.lock().unwrap().recv() };
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break, // sender dropped -> shut down
-                        }
-                    })
-                    .expect("spawn worker"),
-            );
-        }
-        ThreadPool {
-            tx: Some(tx),
-            handles,
-            size,
-        }
-    }
-
-    pub fn size(&self) -> usize {
-        self.size
-    }
-
-    /// Submit a job.
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(f))
-            .expect("worker channel closed");
-    }
-
-    /// Drop the sender and join all workers.
-    pub fn shutdown(&mut self) {
-        self.tx.take();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
-impl Drop for ThreadPool {
-    fn drop(&mut self) {
-        self.shutdown();
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
     #[test]
-    fn parallel_for_covers_all_indices_once() {
+    fn pooled_parallel_for_covers_all_indices_once() {
         for threads in [1, 2, 4] {
+            let par = Parallelism::new(threads);
             let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
-            parallel_for(threads, 1000, |i| {
+            par.parallel_for(1000, |i| {
                 hits[i].fetch_add(1, Ordering::Relaxed);
             });
             assert!(
@@ -210,23 +706,40 @@ mod tests {
     }
 
     #[test]
-    fn parallel_for_empty() {
-        parallel_for(4, 0, |_| panic!("must not run"));
-    }
-
-    #[test]
-    fn parallel_sum_matches_serial() {
+    fn pool_is_reused_across_many_loops() {
+        let par = Parallelism::new(4);
+        let spawned = par.pool().unwrap().threads_spawned();
+        assert_eq!(spawned, 3, "budget 4 = caller + 3 workers");
         let total = AtomicU64::new(0);
-        parallel_for(3, 10_000, |i| {
-            total.fetch_add(i as u64, Ordering::Relaxed);
-        });
-        assert_eq!(total.load(Ordering::Relaxed), 10_000u64 * 9_999 / 2);
+        for _ in 0..50 {
+            par.parallel_for(10_000, |i| {
+                total.fetch_add(i as u64, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 50 * (10_000u64 * 9_999 / 2));
+        assert_eq!(
+            par.pool().unwrap().threads_spawned(),
+            spawned,
+            "steady-state loops must not spawn OS threads"
+        );
     }
 
     #[test]
-    fn with_id_ids_in_range() {
+    fn parallel_for_empty_and_single() {
+        let par = Parallelism::new(4);
+        par.parallel_for(0, |_| panic!("must not run"));
+        let hits = AtomicUsize::new(0);
+        par.parallel_for(1, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn with_id_ids_in_budget_range() {
+        let par = Parallelism::new(3);
         let bad = AtomicUsize::new(0);
-        parallel_for_with_id(3, 500, |t, _| {
+        par.parallel_for_with_id(500, |t, _| {
             if t >= 3 {
                 bad.fetch_add(1, Ordering::Relaxed);
             }
@@ -235,28 +748,121 @@ mod tests {
     }
 
     #[test]
-    fn pool_runs_jobs_and_shuts_down() {
-        let counter = Arc::new(AtomicUsize::new(0));
-        let mut pool = ThreadPool::new(2);
-        let (tx, rx) = mpsc::channel();
-        for _ in 0..64 {
-            let c = Arc::clone(&counter);
-            let tx = tx.clone();
-            pool.execute(move || {
-                c.fetch_add(1, Ordering::Relaxed);
-                let _ = tx.send(());
-            });
-        }
-        for _ in 0..64 {
-            rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
-        }
-        pool.shutdown();
-        assert_eq!(counter.load(Ordering::Relaxed), 64);
+    fn with_budget_caps_worker_ids_and_shares_pool() {
+        let par = Parallelism::new(8);
+        let capped = par.with_budget(2);
+        assert_eq!(capped.threads(), 2);
+        assert!(Arc::ptr_eq(par.pool().unwrap(), capped.pool().unwrap()));
+        let bad = AtomicUsize::new(0);
+        capped.parallel_for_with_id(400, |t, _| {
+            if t >= 2 {
+                bad.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(bad.load(Ordering::Relaxed), 0);
+        // Budgets clamp into 1..=parent.
+        assert_eq!(par.with_budget(0).threads(), 1);
+        assert_eq!(par.with_budget(99).threads(), 8);
     }
 
     #[test]
-    fn pool_size_min_one() {
-        let pool = ThreadPool::new(0);
-        assert_eq!(pool.size(), 1);
+    fn nested_parallel_for_runs_inline_not_deadlocked() {
+        let par = Parallelism::new(4);
+        let total = AtomicUsize::new(0);
+        let inner = par.clone();
+        par.parallel_for(8, |_| {
+            inner.parallel_for(8, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn grain_cutoff_keeps_tiny_loops_inline() {
+        let par = Parallelism::new(4);
+        // 8 items × 10 MACs ≈ 36 ns of work: far under any dispatch cost.
+        assert!(par.should_inline(8.0 * 10.0 * par.grain().ns_per_mac));
+        let hits = AtomicUsize::new(0);
+        par.parallel_for_macs(8, 10, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 8);
+        // A big loop clears the cutoff.
+        assert!(!par.should_inline(1e9));
+        // Budget 1 is always inline.
+        assert!(Parallelism::inline().should_inline(1e12));
+    }
+
+    #[test]
+    fn pool_shutdown_joins_all_workers() {
+        // Pool-local gauge (the global one races with other tests'
+        // pools in this parallel-test binary).
+        let par = Parallelism::new(6);
+        let pool = par.pool().unwrap();
+        assert_eq!(pool.workers(), 5);
+        assert_eq!(pool.live_workers(), 5);
+        pool.shutdown();
+        assert_eq!(pool.live_workers(), 0, "shutdown must join every worker");
+        // Shutdown pools still compute (inline) — and shutdown is
+        // idempotent, so the eventual Drop is a no-op.
+        let hits = AtomicUsize::new(0);
+        par.parallel_for(10, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_submitter() {
+        let par = Parallelism::new(4);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            par.parallel_for(1000, |i| {
+                if i == 997 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must not be swallowed");
+        // The pool is still usable afterwards.
+        let hits = AtomicUsize::new(0);
+        par.parallel_for(100, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn scoped_baseline_still_correct_and_counted() {
+        let before = os_threads_spawned();
+        let total = AtomicU64::new(0);
+        scoped_parallel_for(3, 10_000, |i| {
+            total.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 10_000u64 * 9_999 / 2);
+        assert!(
+            os_threads_spawned() >= before + 3,
+            "baseline spawns are counted"
+        );
+    }
+
+    #[test]
+    fn concurrent_submitters_share_one_pool_safely() {
+        let par = Parallelism::new(4);
+        let total = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let par = par.clone();
+                let total = Arc::clone(&total);
+                s.spawn(move || {
+                    for _ in 0..20 {
+                        par.parallel_for(1000, |i| {
+                            total.fetch_add(i as u64, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 20 * (1000u64 * 999 / 2));
     }
 }

@@ -340,7 +340,7 @@ fn engine_is_immutable_and_shareable_across_threads() {
             .unwrap(),
     );
     assert_eq!(engine.pinned_batch_sizes(), &[1, 3]);
-    assert_eq!(engine.context().threads, 2);
+    assert_eq!(engine.context().threads(), 2);
     let mut rng = Rng::new(29);
     let sample = {
         let mut s = vec![0.0f32; 64];

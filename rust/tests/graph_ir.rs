@@ -85,7 +85,7 @@ fn reference_forward(
                 let a = MatRef::new(x.data(), n, *d_in);
                 let b = MatRef::new(w, *d_in, *d_out);
                 let mut c = MatMut::new(out.data_mut(), n, *d_out);
-                gemm_ex(a, b, &mut c, 1.0, 0.0, ctx.threads, ctx.blocks);
+                gemm_ex(a, b, &mut c, 1.0, 0.0, &ctx.par, ctx.blocks);
                 for row in out.data_mut().chunks_exact_mut(*d_out) {
                     for (v, bb) in row.iter_mut().zip(bias) {
                         *v += bb;

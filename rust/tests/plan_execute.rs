@@ -315,6 +315,48 @@ fn facade_session_steady_state_allocates_zero_tracked_bytes() {
 }
 
 #[test]
+fn facade_session_steady_state_spawns_zero_os_threads() {
+    // The threading analogue of the zero-tracked-alloc invariant: the
+    // engine's persistent pool is built once at `build()` (threads - 1
+    // workers), and repeated `Session::infer`/`infer_batch` calls in
+    // steady state spawn NO further OS threads — the pool spawn counter
+    // stays flat. (Per-engine counter, so parallel tests that build
+    // their own pools cannot perturb it.)
+    let engine = mec::engine::Engine::builder(two_conv_model())
+        .threads(4)
+        .pin_batch_sizes(&[1, 2])
+        .build()
+        .expect("facade builds");
+    assert_eq!(
+        engine.pool_threads_spawned(),
+        3,
+        "pool workers spawned once, at engine build"
+    );
+    let mut rng = Rng::new(0x5541);
+    let input = Tensor::random(Nhwc::new(2, 12, 12, 2), &mut rng);
+    let mut sample = vec![0.0f32; 12 * 12 * 2];
+    rng.fill_uniform(&mut sample, -1.0, 1.0);
+    let mut session = engine.session();
+    // Warm both entry points (plan memo + arena growth happen here).
+    let _ = session.infer_batch(&input).unwrap();
+    let _ = session.infer(&sample).unwrap();
+    let spawned = engine.pool_threads_spawned();
+    for rep in 0..5 {
+        let _ = session.infer_batch(&input).unwrap();
+        let _ = session.infer(&sample).unwrap();
+        assert_eq!(
+            engine.pool_threads_spawned(),
+            spawned,
+            "rep {rep}: steady-state inference spawned an OS thread"
+        );
+    }
+    // A second session shares the same pool: still no spawns.
+    let mut other = engine.session();
+    let _ = other.infer(&sample).unwrap();
+    assert_eq!(engine.pool_threads_spawned(), spawned);
+}
+
+#[test]
 fn planned_model_forward_does_not_grow_arena() {
     let mut m = two_conv_model();
     let ctx = ConvContext::default();

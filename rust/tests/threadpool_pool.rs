@@ -1,0 +1,201 @@
+//! Persistent-pool contract tests — the acceptance criteria of the
+//! parked-worker-pool refactor:
+//!
+//! * **Pooled vs. inline bitwise identity**: every algorithm, at thread
+//!   budgets {1, 2, 8} and in both precisions, produces bit-identical
+//!   outputs whether its loops run on pool workers or inline. (Each
+//!   output element's accumulation order is independent of the loop
+//!   partitioning by construction; this pins that.)
+//! * **Concurrent sessions share one pool**: simultaneous sessions of
+//!   one engine agree with a solo session and never spawn OS threads
+//!   beyond the pool built at `Engine::build`.
+//! * **No leaks**: dropping the last handle to a pool joins every
+//!   worker.
+
+use mec::conv::{convolve, AlgoKind, ConvContext, ConvPlan, Convolution};
+use mec::engine::Engine;
+use mec::memory::Arena;
+use mec::model::{Layer, Model};
+use mec::tensor::{ConvShape, Kernel, KernelShape, Nhwc, Precision, Tensor};
+use mec::util::{assert_allclose, Rng};
+use std::sync::Arc;
+
+fn test_shapes() -> Vec<ConvShape> {
+    vec![
+        // 3x3/s1: every algorithm (incl. Winograd) supports it.
+        ConvShape::new(Nhwc::new(2, 12, 11, 3), KernelShape::new(3, 3, 3, 5), 1, 1),
+        // Strided + rectangular kernel: GEMM family + direct + FFT.
+        ConvShape::new(Nhwc::new(1, 10, 13, 2), KernelShape::new(5, 3, 2, 4), 2, 1),
+    ]
+}
+
+#[test]
+fn pooled_execution_is_bitwise_identical_to_inline() {
+    let mut rng = Rng::new(0x9001);
+    for precision in [Precision::F32, Precision::Q16] {
+        for shape in test_shapes() {
+            let input = Tensor::random(shape.input, &mut rng);
+            let kernel = Kernel::random(shape.kernel, &mut rng);
+            for kind in AlgoKind::ALL {
+                if !kind.supports_precision(precision) {
+                    continue;
+                }
+                let algo = kind.build();
+                if !algo.supports(&shape) {
+                    continue;
+                }
+                // Budget 1 = fully inline, no pool: the reference.
+                let ctx1 = ConvContext::default().with_precision(precision);
+                let plan1 = algo.plan(&ctx1, &shape, &kernel);
+                let mut want = Tensor::zeros(shape.output());
+                let mut scratch = vec![0.0f32; plan1.workspace_elems()];
+                plan1.execute_in(&input, &mut scratch, &mut want);
+                for threads in [2usize, 8] {
+                    let ctx =
+                        ConvContext::default().with_precision(precision).with_threads(threads);
+                    let plan = algo.plan(&ctx, &shape, &kernel);
+                    let mut got = Tensor::zeros(shape.output());
+                    let mut scratch = vec![0.0f32; plan.workspace_elems()];
+                    for rep in 0..2 {
+                        plan.execute_in(&input, &mut scratch, &mut got);
+                        assert_eq!(
+                            got.data(),
+                            want.data(),
+                            "{} {precision} t={threads} rep={rep} on {}: pooled \
+                             execution must be bitwise identical to inline",
+                            kind.name(),
+                            shape.describe()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pooled_one_shot_convolve_matches_plan_path() {
+    // The one-shot path under a pooled context stays on the same code as
+    // plan/execute (regression guard for the context plumbing).
+    let mut rng = Rng::new(0x77aa);
+    let shape = ConvShape::new(Nhwc::new(2, 9, 9, 2), KernelShape::new(3, 3, 2, 4), 1, 1);
+    let input = Tensor::random(shape.input, &mut rng);
+    let kernel = Kernel::random(shape.kernel, &mut rng);
+    let ctx = ConvContext::default().with_threads(4);
+    for kind in AlgoKind::ALL {
+        let algo = kind.build();
+        if !algo.supports(&shape) {
+            continue;
+        }
+        let oneshot = convolve(kind, &ctx, &shape, &input, &kernel);
+        let plan = algo.plan(&ctx, &shape, &kernel);
+        let mut arena = Arena::new();
+        let mut out = Tensor::zeros(shape.output());
+        plan.execute(&input, &mut arena, &mut out);
+        assert_eq!(out.data(), oneshot.data(), "{} pooled", kind.name());
+    }
+}
+
+fn engine_model(seed: u64) -> Model {
+    let mut rng = Rng::new(seed);
+    Model::new(
+        "pool-test",
+        (10, 10, 2),
+        vec![
+            Layer::Conv {
+                kernel: Kernel::random(KernelShape::new(3, 3, 2, 6), &mut rng),
+                bias: vec![0.05; 6],
+                sh: 1,
+                sw: 1,
+                ph: 1,
+                pw: 1,
+            },
+            Layer::Relu,
+            Layer::Conv {
+                kernel: Kernel::random(KernelShape::new(3, 3, 6, 4), &mut rng),
+                bias: vec![0.0; 4],
+                sh: 1,
+                sw: 1,
+                ph: 0,
+                pw: 0,
+            },
+            Layer::Flatten,
+            Layer::Dense {
+                w: {
+                    let mut w = vec![0.0; 8 * 8 * 4 * 3];
+                    rng.fill_uniform(&mut w, -0.2, 0.2);
+                    w
+                },
+                bias: vec![0.0; 3],
+                d_in: 8 * 8 * 4,
+                d_out: 3,
+            },
+            Layer::Softmax,
+        ],
+    )
+}
+
+#[test]
+fn concurrent_sessions_share_one_pool_and_agree_with_solo() {
+    let engine =
+        Arc::new(Engine::builder(engine_model(0xc0)).threads(4).build().expect("engine builds"));
+    assert_eq!(engine.pool_threads_spawned(), 3, "pool = threads - 1");
+    let mut rng = Rng::new(0xc1);
+    let samples: Vec<Vec<f32>> = (0..6)
+        .map(|_| {
+            let mut s = vec![0.0f32; 10 * 10 * 2];
+            rng.fill_uniform(&mut s, -1.0, 1.0);
+            s
+        })
+        .collect();
+    let solo: Vec<_> = {
+        let mut session = engine.session();
+        samples.iter().map(|s| session.infer(s).unwrap()).collect()
+    };
+    let spawned = engine.pool_threads_spawned();
+    // 4 sessions hammer the shared pool at once; each must agree with
+    // the solo pass exactly (a busy pool degrades to inline, which is
+    // bitwise identical).
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let engine = Arc::clone(&engine);
+            let samples = &samples;
+            let solo = &solo;
+            scope.spawn(move || {
+                let mut session = engine.session();
+                for _ in 0..5 {
+                    for (s, want) in samples.iter().zip(solo) {
+                        let got = session.infer(s).unwrap();
+                        assert_eq!(got.class, want.class);
+                        assert_allclose(&got.scores, &want.scores, 1e-6, "shared pool");
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(
+        engine.pool_threads_spawned(),
+        spawned,
+        "concurrent serving must not spawn OS threads"
+    );
+}
+
+#[test]
+fn dropping_the_engine_joins_its_pool_workers() {
+    let engine = Engine::builder(engine_model(0xd0)).threads(6).build().expect("engine builds");
+    let pool = Arc::clone(engine.context().par.pool().expect("pooled"));
+    assert_eq!(pool.live_workers(), 5);
+    let mut session = engine.session();
+    let sample = vec![0.1f32; 10 * 10 * 2];
+    let _ = session.infer(&sample).unwrap();
+    // Sessions hold context clones -> the pool outlives the engine until
+    // the last session is gone.
+    drop(engine);
+    let _ = session.infer(&sample).unwrap();
+    drop(session);
+    // Our Arc is now the only handle keeping the Pool struct alive, but
+    // engine/session drops don't shut it down until the last ctx clone
+    // goes; shutting down explicitly must join every worker.
+    pool.shutdown();
+    assert_eq!(pool.live_workers(), 0, "shutdown leaked workers");
+}
