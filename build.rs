@@ -1,0 +1,37 @@
+//! Build probe: enable the AVX-512 microkernel module only on toolchains
+//! where the `_mm512_*` intrinsics are stable (Rust 1.89+).
+//!
+//! The repo pins no toolchain, so `gemm::micro::avx512` is compiled
+//! behind a `mec_avx512` cfg that this script emits after asking the
+//! active `rustc` for its version. On older compilers the module simply
+//! does not exist and `KernelBackend::Avx512.available()` reports false;
+//! dispatch falls back to AVX2/scalar. Any probe failure (missing rustc,
+//! unparseable version) conservatively disables the module.
+
+use std::env;
+use std::process::Command;
+
+fn rustc_minor() -> Option<(u32, u32)> {
+    let rustc = env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.89.0 (hash date)" — take the second whitespace field.
+    let ver = text.split_whitespace().nth(1)?;
+    let mut parts = ver.split(['.', '-', '+']);
+    let major = parts.next()?.parse().ok()?;
+    let minor = parts.next()?.parse().ok()?;
+    Some((major, minor))
+}
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    println!("cargo:rerun-if-env-changed=RUSTC");
+    // Declare the cfg so `unexpected_cfgs` (cargo >= 1.80) stays quiet on
+    // builds where it is not set.
+    println!("cargo:rustc-check-cfg=cfg(mec_avx512)");
+    if let Some((major, minor)) = rustc_minor() {
+        if major > 1 || (major == 1 && minor >= 89) {
+            println!("cargo:rustc-cfg=mec_avx512");
+        }
+    }
+}

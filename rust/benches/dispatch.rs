@@ -12,12 +12,84 @@
 //! grain cutoff, which is why `Parallelism`'s cost-model heuristic
 //! exists.
 //!
+//! A second section sweeps the GEMM micro-kernel backends (scalar and
+//! every SIMD variant this host supports, × f32/q16) at an L2-resident
+//! size and records GFLOP/s to `BENCH_gemm.json` — the seed point for
+//! the kernel-dispatch perf trajectory.
+//!
 //! Run: `cargo bench --bench dispatch`
 //! (env: MEC_THREADS pins the width, MEC_BENCH_FAST caps reps)
 
-use mec::bench::harness::{bench_fn, bench_threads, print_table, threads_label, BenchOpts};
+use mec::bench::harness::{
+    bench_fn, bench_threads, kernel_label, print_table, threads_label, BenchOpts,
+};
+use mec::gemm::{
+    gemm_prepacked, gemm_prepacked_i16, BlockSizes, KernelBackend, MatMut, MatRef, MatRefI16,
+    PackedB, PackedBI16, Q16Epilogue,
+};
 use mec::threadpool::{os_threads_spawned, scoped_parallel_for, Parallelism};
+use mec::util::Rng;
 use std::hint::black_box;
+
+/// One backend × precision GEMM measurement at the L2-resident size.
+struct GemmRow {
+    backend: KernelBackend,
+    precision: &'static str,
+    median_ns: f64,
+    gflops: f64,
+}
+
+/// Time `m×k · k×n` on every detected backend in both precisions,
+/// single-threaded (isolates kernel throughput from pool dispatch —
+/// the first table already covers dispatch).
+fn gemm_backend_sweep(m: usize, k: usize, n: usize, opts: &BenchOpts) -> Vec<GemmRow> {
+    let flops = 2.0 * (m * k * n) as f64;
+    let mut rng = Rng::new(0x6ec);
+    let mut a = vec![0.0f32; m * k];
+    let mut b = vec![0.0f32; k * n];
+    rng.fill_uniform(&mut a, -1.0, 1.0);
+    rng.fill_uniform(&mut b, -1.0, 1.0);
+    // Q15 operands from the same values (unit scale keeps it simple —
+    // throughput, not accuracy, is under test here).
+    let ai: Vec<i16> = a.iter().map(|&v| (v * 16384.0) as i16).collect();
+    let bi: Vec<i16> = b.iter().map(|&v| (v * 16384.0) as i16).collect();
+    let mut c = vec![0.0f32; m * n];
+    let bs = BlockSizes::default();
+    let mut rows = Vec::new();
+    for backend in KernelBackend::all_available() {
+        // Prepacked B carries the backend: the dispatch follows the pack,
+        // not the process-wide active() choice, so each backend is
+        // measurable regardless of MEC_KERNEL.
+        let pb = PackedB::pack_with(MatRef::new(&b, k, n), bs, backend);
+        let r = bench_fn(&format!("gemm-f32-{}", backend.name()), opts, || {
+            let av = MatRef::new(&a, m, k);
+            let mut cv = MatMut::new(&mut c, m, n);
+            gemm_prepacked(av, &pb, &mut cv);
+            black_box(cv.at(0, 0));
+        });
+        rows.push(GemmRow {
+            backend,
+            precision: "f32",
+            median_ns: r.median_ns(),
+            gflops: flops / r.median_ns(),
+        });
+        let pbq = PackedBI16::pack_with(MatRefI16::new(&bi, k, n), bs, backend);
+        let ep = Q16Epilogue::uniform(1.0 / (16384.0 * 16384.0));
+        let r = bench_fn(&format!("gemm-q16-{}", backend.name()), opts, || {
+            let av = MatRefI16::new(&ai, m, k);
+            let mut cv = MatMut::new(&mut c, m, n);
+            gemm_prepacked_i16(av, &pbq, &mut cv, ep);
+            black_box(cv.at(0, 0));
+        });
+        rows.push(GemmRow {
+            backend,
+            precision: "q16",
+            median_ns: r.median_ns(),
+            gflops: flops / r.median_ns(),
+        });
+    }
+    rows
+}
 
 /// A compute body of tunable size (~`work` FMAs), opaque to the
 /// optimizer.
@@ -110,4 +182,61 @@ fn main() {
         "OS threads spawned this run: {} (pool workers once + scoped baseline per loop)",
         os_threads_spawned()
     );
+
+    // --- GEMM micro-kernel backends ---------------------------------
+    // L2-resident operands: 192³ keeps A+B+C ≈ 430 KB, so the kernel —
+    // not memory bandwidth — sets the rate.
+    let (m, k, n) = (192, 192, 192);
+    println!("\nGEMM backend sweep: {m}x{k}x{n}, 1 thread, active = {}", kernel_label());
+    let gemm_rows = gemm_backend_sweep(m, k, n, &opts);
+    let scalar_f32 = gemm_rows
+        .iter()
+        .find(|r| r.backend == KernelBackend::Scalar && r.precision == "f32")
+        .map(|r| r.median_ns);
+    let table: Vec<Vec<String>> = gemm_rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.backend.name().to_string(),
+                r.precision.to_string(),
+                format!("{}x{}", mec::gemm::micro::MR, r.backend.nr()),
+                format!("{:.1}", r.median_ns / 1e3),
+                format!("{:.2}", r.gflops),
+                match (r.precision, scalar_f32) {
+                    ("f32", Some(s)) => format!("{:.2}", s / r.median_ns),
+                    _ => "-".to_string(),
+                },
+            ]
+        })
+        .collect();
+    print_table(
+        "GEMM kernel throughput by backend (acceptance: SIMD f32 >= 1.3x scalar)",
+        &["backend", "precision", "tile", "µs", "GFLOP/s", "vs scalar"],
+        &table,
+    );
+
+    // Machine-readable seed point for the perf trajectory.
+    let mut json = format!(
+        "{{\"bench\":\"gemm\",\"threads\":1,\"m\":{m},\"k\":{k},\"n\":{n},\"results\":["
+    );
+    for (i, r) in gemm_rows.iter().enumerate() {
+        if i > 0 {
+            json.push(',');
+        }
+        json.push_str(&format!(
+            "{{\"backend\":\"{}\",\"precision\":\"{}\",\"mr\":{},\"nr\":{},\
+             \"median_ns\":{:.0},\"gflops\":{:.3}}}",
+            r.backend.name(),
+            r.precision,
+            mec::gemm::micro::MR,
+            r.backend.nr(),
+            r.median_ns,
+            r.gflops
+        ));
+    }
+    json.push_str("]}\n");
+    match std::fs::write("BENCH_gemm.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_gemm.json"),
+        Err(e) => eprintln!("\nwarning: could not write BENCH_gemm.json: {e}"),
+    }
 }

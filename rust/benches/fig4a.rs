@@ -7,7 +7,7 @@
 
 use mec::bench::bench_conv;
 use mec::bench::harness::{
-    bench_mode, bench_precision, bench_scale, print_table, threads_label, BenchOpts,
+    bench_mode, bench_precision, bench_scale, kernel_label, print_table, threads_label, BenchOpts,
 };
 use mec::bench::workload::by_name;
 use mec::conv::{AlgoKind, ConvContext, Convolution};
@@ -30,6 +30,7 @@ fn main() {
         "precision: {} (set MEC_BENCH_PRECISION=q16 for the paper's fixed-point grid)",
         ctx.precision
     );
+    println!("kernel: {}", kernel_label());
     for s in 1..=10usize {
         let ic = (base.ic / scale).max(1);
         let kc = (base.kc / scale).max(1);

@@ -8,7 +8,8 @@
 
 use mec::bench::bench_conv;
 use mec::bench::harness::{
-    bench_mode, bench_precision, bench_scale, bench_threads, print_table, threads_label, BenchOpts,
+    bench_mode, bench_precision, bench_scale, bench_threads, kernel_label, print_table,
+    threads_label, BenchOpts,
 };
 use mec::bench::workload::resnet101_table3;
 use mec::conv::{AlgoKind, ConvContext, Convolution};
@@ -34,6 +35,7 @@ fn main() {
         "precision: {} (set MEC_BENCH_PRECISION=q16 for the paper's fixed-point grid)",
         ctx.precision
     );
+    println!("kernel: {}", kernel_label());
     for (w, weight) in resnet101_table3() {
         let shape = w.shape(1, scale);
         let input = Tensor::random(shape.input, &mut rng);

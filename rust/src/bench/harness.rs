@@ -172,6 +172,19 @@ pub fn threads_label(threads: usize) -> String {
     }
 }
 
+/// Bench-header line describing the micro-kernel backend in force and
+/// its register tile (one-time detection; `MEC_KERNEL` forces a
+/// backend, see `gemm::micro`).
+pub fn kernel_label() -> String {
+    let b = crate::gemm::KernelBackend::active();
+    format!(
+        "{} ({}x{} tile; set MEC_KERNEL=scalar|avx2|avx512|neon to force)",
+        b.name(),
+        crate::gemm::micro::MR,
+        b.nr()
+    )
+}
+
 /// The env-var bench mode (`MEC_BENCH_MODE`, default amortized).
 /// Case-insensitive; warns on stderr for unrecognized values instead of
 /// silently falling back.

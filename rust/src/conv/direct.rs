@@ -6,6 +6,7 @@
 use super::{downcast_prepack, AlgoKind, ConvContext, ConvPlan, Convolution, KernelPrepack};
 use crate::memory::WorkspaceLayout;
 use crate::tensor::{ConvShape, Kernel, Tensor};
+use crate::threadpool::Parallelism;
 use std::any::Any;
 use std::sync::Arc;
 
@@ -100,6 +101,28 @@ impl ConvPlan for DirectPlan {
     }
 
     fn execute_in(&self, input: &Tensor, _scratch: &mut [f32], output: &mut Tensor) {
+        self.execute_with(&self.ctx, input, output);
+    }
+
+    fn execute_in_par(
+        &self,
+        input: &Tensor,
+        _scratch: &mut [f32],
+        output: &mut Tensor,
+        par: &Parallelism,
+    ) {
+        // Session thread cap: clamp into the plan-time budget, sharing
+        // the plan's pool (see MecPlan::execute_in_par).
+        let ctx = self
+            .ctx
+            .clone()
+            .with_parallelism(self.ctx.par.with_budget(par.threads()));
+        self.execute_with(&ctx, input, output);
+    }
+}
+
+impl DirectPlan {
+    fn execute_with(&self, ctx: &ConvContext, input: &Tensor, output: &mut Tensor) {
         let s = self.shape;
         let (oh, ow) = (s.oh(), s.ow());
         let out_shape = s.output();
@@ -115,7 +138,7 @@ impl ConvPlan for DirectPlan {
         // Parallelize over (n, oh): each task writes a disjoint output
         // row. Grain: o_w·k_h·k_w·i_c·k_c MACs per row.
         let row_macs = ow * k.kh * k.kw * k.ic * k.kc;
-        self.ctx.par.parallel_for_macs(ish.n * oh, row_macs, |t| {
+        ctx.par.parallel_for_macs(ish.n * oh, row_macs, |t| {
             let n = t / oh;
             let y = t % oh;
             let out_data: &mut [f32] = out.slice();

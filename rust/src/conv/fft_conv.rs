@@ -29,7 +29,7 @@ use super::{downcast_prepack, AlgoKind, ConvContext, ConvPlan, Convolution, Kern
 use crate::fft::{fft2d, next_pow2, pointwise_mul_acc, C32};
 use crate::memory::WorkspaceLayout;
 use crate::tensor::{ConvShape, Kernel, Tensor};
-use crate::threadpool::SharedSlice;
+use crate::threadpool::{Parallelism, SharedSlice};
 use std::any::Any;
 use std::sync::Arc;
 
@@ -236,15 +236,45 @@ impl ConvPlan for FftConvPlan {
     }
 
     fn execute_in(&self, input: &Tensor, scratch: &mut [f32], output: &mut Tensor) {
+        self.execute_with(&self.ctx, input, scratch, output);
+    }
+
+    fn execute_in_par(
+        &self,
+        input: &Tensor,
+        scratch: &mut [f32],
+        output: &mut Tensor,
+        par: &Parallelism,
+    ) {
+        // Session thread cap: clamp into the plan-time budget. The
+        // per-thread scratch lanes were sized for the plan budget, and the
+        // clamp only ever shrinks the thread count, so the capped execute
+        // uses a prefix of the laid-out lanes.
+        let ctx = self
+            .ctx
+            .clone()
+            .with_parallelism(self.ctx.par.with_budget(par.threads()));
+        self.execute_with(&ctx, input, scratch, output);
+    }
+}
+
+impl FftConvPlan {
+    fn execute_with(
+        &self,
+        ctx: &ConvContext,
+        input: &Tensor,
+        scratch: &mut [f32],
+        output: &mut Tensor,
+    ) {
         let s = self.shape;
         assert_eq!(output.shape(), s.output());
         assert_eq!(input.shape(), s.input);
         match &self.prepack.mode {
             Mode::Cached { kspec } => {
-                run_cached(&self.ctx, &s, input, kspec, scratch, output);
+                run_cached(ctx, &s, input, kspec, scratch, output);
             }
             Mode::Streaming { kernel } => {
-                run_streaming(&self.ctx, &s, input, kernel, scratch, output);
+                run_streaming(ctx, &s, input, kernel, scratch, output);
             }
         }
     }

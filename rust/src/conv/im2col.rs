@@ -22,8 +22,12 @@
 use super::{
     downcast_prepack, AlgoKind, ConvContext, ConvPlan, Convolution, KernelPrepack, PackedKernel,
 };
-use crate::gemm::{gemm_prepacked_ex, gemm_prepacked_ex_i16, MatMut, MatRef, MatRefI16};
+use crate::gemm::{
+    gemm_prepacked_ex, gemm_prepacked_ex_i16, KernelBackend, MatMut, MatRef, MatRefI16,
+    Q16Epilogue,
+};
 use crate::memory::WorkspaceLayout;
+use crate::threadpool::Parallelism;
 use crate::tensor::quant::{f32_as_i16_mut, i16_slots, Precision, QParams};
 use crate::tensor::{ConvShape, Kernel, Tensor};
 use std::sync::Arc;
@@ -192,7 +196,41 @@ impl ConvPlan for Im2colPlan {
         Some(Arc::clone(&self.packed_k) as Arc<dyn KernelPrepack>)
     }
 
+    fn kernel_backend(&self) -> Option<KernelBackend> {
+        Some(self.packed_k.backend())
+    }
+
     fn execute_in(&self, input: &Tensor, scratch: &mut [f32], output: &mut Tensor) {
+        self.execute_with(&self.ctx, input, scratch, output);
+    }
+
+    fn execute_in_par(
+        &self,
+        input: &Tensor,
+        scratch: &mut [f32],
+        output: &mut Tensor,
+        par: &Parallelism,
+    ) {
+        // Session thread cap: clamp into the plan-time budget, sharing
+        // the plan's pool (see MecPlan::execute_in_par).
+        let ctx = self
+            .ctx
+            .clone()
+            .with_parallelism(self.ctx.par.with_budget(par.threads()));
+        self.execute_with(&ctx, input, scratch, output);
+    }
+}
+
+impl Im2colPlan {
+    /// The execute body, parameterized on the context so per-session
+    /// thread caps reuse the same path as the plan-default execute.
+    fn execute_with(
+        &self,
+        ctx: &ConvContext,
+        input: &Tensor,
+        scratch: &mut [f32],
+        output: &mut Tensor,
+    ) {
         let s = self.shape;
         let k = s.kernel;
         let rows = s.input.n * s.oh() * s.ow();
@@ -203,32 +241,35 @@ impl ConvPlan for Im2colPlan {
         match &*self.packed_k {
             PackedKernel::F32(pk) => {
                 let l = &mut scratch[..rows * row_len];
-                Im2col::lower(&self.ctx, &s, input, l);
+                Im2col::lower(ctx, &s, input, l);
 
                 // O (i_n·o_h·o_w × k_c, row-major NHWC is exactly this
                 // matrix) = L (rows × row_len) × K (row_len × k_c).
                 let a = MatRef::new(l, rows, row_len);
                 let mut c = MatMut::new(output.data_mut(), rows, k.kc);
-                gemm_prepacked_ex(a, pk, &mut c, &self.ctx.par);
+                gemm_prepacked_ex(a, pk, &mut c, &ctx.par);
             }
-            PackedKernel::Q16 { packed, qk } => {
+            PackedKernel::Q16 { packed, col_scales } => {
                 // Calibrated static activation scale when available (the
                 // serving fast path), dynamic abs-max otherwise; then
                 // quantize-while-lowering into the halved i16 L and run
-                // the widening GEMM; the combined scale folds the Q15
-                // product shift back out.
-                let qa = self
-                    .ctx
+                // the widening GEMM. The epilogue folds the Q15 product
+                // shift back out globally and applies each output
+                // channel's own kernel scale per column.
+                let qa = ctx
                     .act_qparams
                     .unwrap_or_else(|| QParams::from_slice(input.data()));
                 let slots = i16_slots(rows * row_len);
                 let l = &mut f32_as_i16_mut(&mut scratch[..slots])[..rows * row_len];
-                Im2col::lower_q16(&self.ctx, &s, input, qa, l);
+                Im2col::lower_q16(ctx, &s, input, qa, l);
 
                 let a = MatRefI16::new(l, rows, row_len);
                 let mut c = MatMut::new(output.data_mut(), rows, k.kc);
-                let scale = qa.scale * qk.scale * 32768.0;
-                gemm_prepacked_ex_i16(a, packed, &mut c, scale, &self.ctx.par);
+                let ep = Q16Epilogue {
+                    global: qa.scale * 32768.0,
+                    per_col: Some(col_scales),
+                };
+                gemm_prepacked_ex_i16(a, packed, &mut c, ep, &ctx.par);
             }
         }
     }

@@ -38,10 +38,11 @@ use super::{
     downcast_prepack, AlgoKind, ConvContext, ConvPlan, Convolution, KernelPrepack, PackedKernel,
 };
 use crate::gemm::{
-    gemm_prepacked, gemm_prepacked_batch, gemm_prepacked_batch_i16, gemm_prepacked_i16, MatMut,
-    MatRef, MatRefI16, PackedB, PackedBI16,
+    gemm_prepacked, gemm_prepacked_batch, gemm_prepacked_batch_i16, gemm_prepacked_i16,
+    KernelBackend, MatMut, MatRef, MatRefI16, PackedB, PackedBI16, Q16Epilogue,
 };
 use crate::memory::WorkspaceLayout;
+use crate::threadpool::Parallelism;
 use crate::tensor::quant::{f32_as_i16_mut, i16_slots, Precision, QParams};
 use crate::tensor::{ConvShape, Kernel, Tensor};
 use std::sync::Arc;
@@ -326,7 +327,44 @@ impl ConvPlan for MecPlan {
         Some(Arc::clone(&self.packed_k) as Arc<dyn KernelPrepack>)
     }
 
+    fn kernel_backend(&self) -> Option<KernelBackend> {
+        Some(self.packed_k.backend())
+    }
+
     fn execute_in(&self, input: &Tensor, scratch: &mut [f32], output: &mut Tensor) {
+        self.execute_with(&self.ctx, input, scratch, output);
+    }
+
+    fn execute_in_par(
+        &self,
+        input: &Tensor,
+        scratch: &mut [f32],
+        output: &mut Tensor,
+        par: &Parallelism,
+    ) {
+        // Cap this execute at the session's thread budget without
+        // re-planning: the clamped handle shares the plan's pool, and the
+        // workspace layout (sized for the plan-time budget) stays valid
+        // because the budget only ever shrinks.
+        let ctx = self
+            .ctx
+            .clone()
+            .with_parallelism(self.ctx.par.with_budget(par.threads()));
+        self.execute_with(&ctx, input, scratch, output);
+    }
+}
+
+impl MecPlan {
+    /// The execute body, parameterized on the context so per-session
+    /// thread caps ([`ConvPlan::execute_in_par`]) reuse the exact same
+    /// code path as the plan-default [`ConvPlan::execute_in`].
+    fn execute_with(
+        &self,
+        ctx: &ConvContext,
+        input: &Tensor,
+        scratch: &mut [f32],
+        output: &mut Tensor,
+    ) {
         let s = self.shape;
         assert_eq!(output.shape(), s.output());
         assert_eq!(input.shape(), s.input);
@@ -342,34 +380,37 @@ impl ConvPlan for MecPlan {
                     } else {
                         (buf, None)
                     };
-                    run_solution_a(&self.ctx, &s, input, pk, l, aux, output);
+                    run_solution_a(ctx, &s, input, pk, l, aux, output);
                 }
-                Solution::B => run_solution_b(&self.ctx, &s, input, pk, buf, output),
+                Solution::B => run_solution_b(ctx, &s, input, pk, buf, output),
                 Solution::Auto => unreachable!("plan() always resolves the schedule"),
             },
-            PackedKernel::Q16 { packed, qk } => {
+            PackedKernel::Q16 { packed, col_scales } => {
                 // Activation scale: the calibrated static one when the
                 // plan was built from a calibrated model, else the
-                // dynamic per-execute abs-max; the combined dequant
-                // scale folds the Q15 product shift (2^15) back out.
-                let qa = self
-                    .ctx
+                // dynamic per-execute abs-max. The epilogue folds the
+                // Q15 product shift (2^15) back out globally and applies
+                // each output channel's own kernel scale per column.
+                let qa = ctx
                     .act_qparams
                     .unwrap_or_else(|| QParams::from_slice(input.data()));
-                let scale = qa.scale * qk.scale * 32768.0;
+                let ep = Q16Epilogue {
+                    global: qa.scale * 32768.0,
+                    per_col: Some(col_scales),
+                };
                 let l_slots = i16_slots(s.mec_lowered_elems());
                 match self.solution {
                     Solution::A => {
                         let (l_f32, aux) = buf.split_at_mut(l_slots);
                         let l = &mut f32_as_i16_mut(l_f32)[..s.mec_lowered_elems()];
-                        Mec::lower_q16(&self.ctx, &s, input, qa, l);
-                        run_gemms_a_q16(&self.ctx, &s, packed, scale, l, output);
-                        repack_hnwc_to_nhwc(&self.ctx, &s, aux, output);
+                        Mec::lower_q16(ctx, &s, input, qa, l);
+                        run_gemms_a_q16(ctx, &s, packed, ep, l, output);
+                        repack_hnwc_to_nhwc(ctx, &s, aux, output);
                     }
                     Solution::B => {
                         let l = &mut f32_as_i16_mut(&mut buf[..l_slots])[..s.mec_lowered_elems()];
-                        Mec::lower_q16(&self.ctx, &s, input, qa, l);
-                        run_gemms_b_q16(&self.ctx, &s, packed, scale, l, output);
+                        Mec::lower_q16(ctx, &s, input, qa, l);
+                        run_gemms_b_q16(ctx, &s, packed, ep, l, output);
                     }
                     Solution::Auto => unreachable!("plan() always resolves the schedule"),
                 }
@@ -450,7 +491,7 @@ fn run_gemms_a_q16(
     ctx: &ConvContext,
     s: &ConvShape,
     packed_k: &PackedBI16,
-    scale: f32,
+    ep: Q16Epilogue<'_>,
     l: &[i16],
     output: &mut Tensor,
 ) {
@@ -471,14 +512,14 @@ fn run_gemms_a_q16(
             .chunks_exact_mut(out_row)
             .map(|chunk| MatMut::new(chunk, l_rows, k.kc))
             .collect();
-        gemm_prepacked_batch_i16(&a_views, packed_k, &mut c_views, scale);
+        gemm_prepacked_batch_i16(&a_views, packed_k, &mut c_views, ep);
     } else {
         let out = crate::threadpool::SharedSlice::new(output.data_mut());
         ctx.par.parallel_for_macs(oh, l_rows * kdim * k.kc, |h| {
             let out_data: &mut [f32] = out.slice();
             let a = MatRefI16::strided(&l[step * h..], l_rows, kdim, l_cols);
             let mut c = MatMut::new(&mut out_data[h * out_row..(h + 1) * out_row], l_rows, k.kc);
-            gemm_prepacked_i16(a, packed_k, &mut c, scale);
+            gemm_prepacked_i16(a, packed_k, &mut c, ep);
         });
     }
 }
@@ -574,7 +615,7 @@ fn run_gemms_b_q16(
     ctx: &ConvContext,
     s: &ConvShape,
     packed_k: &PackedBI16,
-    scale: f32,
+    ep: Q16Epilogue<'_>,
     l: &[i16],
     output: &mut Tensor,
 ) {
@@ -599,7 +640,7 @@ fn run_gemms_b_q16(
             .chunks_exact_mut(chunk)
             .map(|ch| MatMut::new(ch, ow, k.kc))
             .collect();
-        gemm_prepacked_batch_i16(&a_views, packed_k, &mut c_views, scale);
+        gemm_prepacked_batch_i16(&a_views, packed_k, &mut c_views, ep);
     } else {
         let out = crate::threadpool::SharedSlice::new(output.data_mut());
         ctx.par.parallel_for_macs(n * oh, ow * kdim * k.kc, |t| {
@@ -609,7 +650,7 @@ fn run_gemms_b_q16(
             let a = MatRefI16::strided(&l[nn * sample_l + step * h..], ow, kdim, l_cols);
             let dst = (nn * oh + h) * chunk;
             let mut c = MatMut::new(&mut out_data[dst..dst + chunk], ow, k.kc);
-            gemm_prepacked_i16(a, packed_k, &mut c, scale);
+            gemm_prepacked_i16(a, packed_k, &mut c, ep);
         });
     }
 }

@@ -39,7 +39,7 @@ pub mod mec;
 pub mod winograd;
 pub mod winograd_chunked;
 
-use crate::gemm::{BlockSizes, MatRef, MatRefI16, PackedB, PackedBI16};
+use crate::gemm::{BlockSizes, KernelBackend, MatRef, MatRefI16, PackedB, PackedBI16};
 use crate::memory::{Arena, Workspace, WorkspaceLayout};
 use crate::tensor::quant::{Precision, QParams};
 use crate::tensor::{ConvShape, Kernel, Tensor};
@@ -191,11 +191,20 @@ pub(crate) fn downcast_prepack<T: Send + Sync + 'static>(
 /// The prepacked GEMM B-operand for the kernel matrix
 /// (`k_h·k_w·i_c × k_c`), in the planned precision — the shared prepack
 /// of both the im2col and MEC plans. Q16 quantizes the kernel once here
-/// (symmetric per-tensor scale, round-to-nearest) so execute never
-/// touches the f32 weights.
+/// with **per-output-channel** symmetric scales (column `c` of the kernel
+/// matrix is output channel `c`; each gets its own abs-max scale, so a
+/// channel of small weights is not crushed by one loud channel
+/// elsewhere), applied at execute time through the
+/// [`Q16Epilogue`](crate::gemm::Q16Epilogue)'s `per_col` table — execute
+/// never touches the f32 weights.
 pub enum PackedKernel {
     F32(PackedB),
-    Q16 { packed: PackedBI16, qk: QParams },
+    Q16 {
+        packed: PackedBI16,
+        /// Per-output-channel kernel scales, `shape.kernel.kc` entries;
+        /// borrowed by the epilogue (no per-execute allocation).
+        col_scales: Vec<f32>,
+    },
 }
 
 impl PackedKernel {
@@ -209,17 +218,31 @@ impl PackedKernel {
                 ctx.blocks,
             )),
             Precision::Q16 => {
-                let qk = QParams::from_slice(kernel.data());
-                let mut q = vec![0i16; kernel.data().len()];
-                qk.quantize_slice(kernel.data(), &mut q);
+                let data = kernel.data();
+                let mut q = vec![0i16; data.len()];
+                let mut col_scales = Vec::with_capacity(k.kc);
+                for c in 0..k.kc {
+                    let mut abs_max = 0f32;
+                    for r in 0..kdim {
+                        abs_max = abs_max.max(data[r * k.kc + c].abs());
+                    }
+                    let qc = QParams::from_abs_max(abs_max);
+                    for r in 0..kdim {
+                        q[r * k.kc + c] = qc.quantize(data[r * k.kc + c]);
+                    }
+                    col_scales.push(qc.scale);
+                }
                 PackedKernel::Q16 {
                     packed: PackedBI16::pack(MatRefI16::new(&q, kdim, k.kc), ctx.blocks),
-                    qk,
+                    col_scales,
                 }
             }
         }
     }
 
+    /// Bytes of the packed operand itself (the per-channel scale table is
+    /// bookkeeping, not operand storage — the exact-halving tests compare
+    /// operand bytes against the f32 pack).
     pub fn bytes(&self) -> usize {
         match self {
             PackedKernel::F32(p) => p.bytes(),
@@ -231,6 +254,14 @@ impl PackedKernel {
         match self {
             PackedKernel::F32(_) => Precision::F32,
             PackedKernel::Q16 { .. } => Precision::Q16,
+        }
+    }
+
+    /// The micro-kernel backend the operand was packed for.
+    pub fn backend(&self) -> KernelBackend {
+        match self {
+            PackedKernel::F32(p) => p.backend(),
+            PackedKernel::Q16 { packed, .. } => packed.backend(),
         }
     }
 }
@@ -290,11 +321,38 @@ pub trait ConvPlan: Send + Sync {
         None
     }
 
+    /// The micro-kernel backend this plan's GEMMs dispatch to, when the
+    /// algorithm runs through the GEMM substrate (`None` for direct /
+    /// FFT, whose inner loops are not micro-kernel shaped). Reported per
+    /// layer by the engine so serving logs say which ISA actually ran.
+    fn kernel_backend(&self) -> Option<KernelBackend> {
+        None
+    }
+
     /// Core entry point: run the convolution with caller-provided scratch
     /// of at least [`Self::workspace_elems`] floats. Writes every output
     /// element; reads no stale scratch. Performs no allocation and no
     /// kernel repacking/transforms.
     fn execute_in(&self, input: &Tensor, scratch: &mut [f32], output: &mut Tensor);
+
+    /// [`execute_in`](Self::execute_in) under a caller thread cap: run
+    /// with at most `par.threads()` threads (clamped to the plan's own
+    /// budget — a cap can shrink parallelism, never grow it past what the
+    /// plan's workspace was sized for). This is how per-session budgets
+    /// (`Engine::session_with_threads`) reach the inner loops exactly
+    /// instead of only capping session-side batch loops. The default
+    /// ignores the cap — correct for serial plans; every parallel
+    /// algorithm overrides it.
+    fn execute_in_par(
+        &self,
+        input: &Tensor,
+        scratch: &mut [f32],
+        output: &mut Tensor,
+        par: &Parallelism,
+    ) {
+        let _ = par;
+        self.execute_in(input, scratch, output);
+    }
 
     /// Run the convolution against a shared [`Arena`]. The arena grows to
     /// the layout total on first use (tracked); after that, repeated
@@ -302,6 +360,19 @@ pub trait ConvPlan: Send + Sync {
     fn execute(&self, input: &Tensor, arena: &mut Arena, output: &mut Tensor) {
         let elems = self.workspace_elems();
         self.execute_in(input, arena.slice(elems), output);
+    }
+
+    /// [`execute`](Self::execute) under a caller thread cap (see
+    /// [`execute_in_par`](Self::execute_in_par)).
+    fn execute_par(
+        &self,
+        input: &Tensor,
+        arena: &mut Arena,
+        output: &mut Tensor,
+        par: &Parallelism,
+    ) {
+        let elems = self.workspace_elems();
+        self.execute_in_par(input, arena.slice(elems), output, par);
     }
 }
 

@@ -24,10 +24,10 @@
 //! and execute performs no filter transforms.
 
 use super::{downcast_prepack, AlgoKind, ConvContext, ConvPlan, Convolution, KernelPrepack};
-use crate::gemm::{gemm_ex, MatMut, MatRef};
+use crate::gemm::{gemm_ex, KernelBackend, MatMut, MatRef};
 use crate::memory::WorkspaceLayout;
 use crate::tensor::{ConvShape, Kernel, Tensor};
-use crate::threadpool::SharedSlice;
+use crate::threadpool::{Parallelism, SharedSlice};
 use std::any::Any;
 use std::sync::Arc;
 
@@ -123,6 +123,7 @@ impl Convolution for Winograd {
             shape: *shape,
             prepack,
             layout,
+            backend: KernelBackend::active(),
         })
     }
 }
@@ -135,6 +136,9 @@ pub struct WinogradPlan {
     /// Transformed filters, 16 matrices of k_c×i_c ([xy][o][i]).
     prepack: Arc<WinogradPrepack>,
     layout: WorkspaceLayout,
+    /// The micro-kernel backend the 16 point-wise GEMMs dispatch to,
+    /// frozen at plan time (observability: engine report, benches).
+    backend: KernelBackend,
 }
 
 impl ConvPlan for WinogradPlan {
@@ -158,11 +162,42 @@ impl ConvPlan for WinogradPlan {
         Some(Arc::clone(&self.prepack) as Arc<dyn KernelPrepack>)
     }
 
+    fn kernel_backend(&self) -> Option<KernelBackend> {
+        Some(self.backend)
+    }
+
     fn execute_in(&self, input: &Tensor, scratch: &mut [f32], output: &mut Tensor) {
+        self.execute_with(&self.ctx, input, scratch, output);
+    }
+
+    fn execute_in_par(
+        &self,
+        input: &Tensor,
+        scratch: &mut [f32],
+        output: &mut Tensor,
+        par: &Parallelism,
+    ) {
+        // Session thread cap: clamp into the plan-time budget, sharing
+        // the plan's pool (see MecPlan::execute_in_par).
+        let ctx = self
+            .ctx
+            .clone()
+            .with_parallelism(self.ctx.par.with_budget(par.threads()));
+        self.execute_with(&ctx, input, scratch, output);
+    }
+}
+
+impl WinogradPlan {
+    fn execute_with(
+        &self,
+        ctx: &ConvContext,
+        input: &Tensor,
+        scratch: &mut [f32],
+        output: &mut Tensor,
+    ) {
         let s = self.shape;
         assert_eq!(output.shape(), s.output());
         assert_eq!(input.shape(), s.input);
-        let ctx = &self.ctx;
         let (ic, kc) = (s.kernel.ic, s.kernel.kc);
         let (oh, ow) = (s.oh(), s.ow());
         let (th, tw) = (tiles(oh), tiles(ow));

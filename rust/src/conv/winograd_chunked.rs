@@ -18,10 +18,10 @@
 
 use super::winograd::{kernel_transform, tile_count};
 use super::{downcast_prepack, AlgoKind, ConvContext, ConvPlan, Convolution, KernelPrepack};
-use crate::gemm::{gemm_prepacked, MatMut, MatRef, PackedB};
+use crate::gemm::{gemm_prepacked, KernelBackend, MatMut, MatRef, PackedB};
 use crate::memory::WorkspaceLayout;
 use crate::tensor::{ConvShape, Kernel, Tensor};
-use crate::threadpool::SharedSlice;
+use crate::threadpool::{Parallelism, SharedSlice};
 use std::any::Any;
 use std::sync::Arc;
 
@@ -173,11 +173,44 @@ impl ConvPlan for WinogradChunkedPlan {
         Some(Arc::clone(&self.prepack) as Arc<dyn KernelPrepack>)
     }
 
+    fn kernel_backend(&self) -> Option<KernelBackend> {
+        // The 16 per-xy filter packs carry the backend their strips were
+        // packed for; all share it, so report the first.
+        Some(self.prepack.packed_u[0].backend())
+    }
+
     fn execute_in(&self, input: &Tensor, scratch: &mut [f32], output: &mut Tensor) {
+        self.execute_with(&self.ctx, input, scratch, output);
+    }
+
+    fn execute_in_par(
+        &self,
+        input: &Tensor,
+        scratch: &mut [f32],
+        output: &mut Tensor,
+        par: &Parallelism,
+    ) {
+        // Session thread cap: clamp into the plan-time budget, sharing
+        // the plan's pool (see MecPlan::execute_in_par).
+        let ctx = self
+            .ctx
+            .clone()
+            .with_parallelism(self.ctx.par.with_budget(par.threads()));
+        self.execute_with(&ctx, input, scratch, output);
+    }
+}
+
+impl WinogradChunkedPlan {
+    fn execute_with(
+        &self,
+        ctx: &ConvContext,
+        input: &Tensor,
+        scratch: &mut [f32],
+        output: &mut Tensor,
+    ) {
         let s = self.shape;
         assert_eq!(output.shape(), s.output());
         assert_eq!(input.shape(), s.input);
-        let ctx = &self.ctx;
         let (ic, kc) = (s.kernel.ic, s.kernel.kc);
         let (oh, ow) = (s.oh(), s.ow());
         let (th, tw) = (oh.div_ceil(2), ow.div_ceil(2));

@@ -8,6 +8,7 @@
 
 use super::{Engine, EngineError, LayerPlan};
 use crate::conv::{AlgoKind, ConvContext};
+use crate::gemm::KernelBackend;
 use crate::memory::Budget;
 use crate::model::{load_mecw, EvalSet, Model};
 use crate::planner::{AutoTuner, Plan, Planner};
@@ -245,6 +246,7 @@ impl EngineBuilder {
                 candidates: planner.admissible(&cs, &self.budget, &ctx),
                 measurements,
                 act_qparams: None,
+                backend: KernelBackend::active(),
             });
         }
         // Every override must have reached the loop above: a conv node
@@ -275,6 +277,19 @@ impl EngineBuilder {
                 for lp in &mut report {
                     lp.act_qparams = model.activation_qparams(lp.layer);
                 }
+            }
+        }
+
+        // Record the backend each built plan's GEMMs actually dispatch
+        // to (the packed kernel knows; plans without a packed operand
+        // keep the host-detected default set above).
+        for lp in &mut report {
+            if let Some(b) = model
+                .cached_plans_for_layer(lp.layer)
+                .iter()
+                .find_map(|p| p.kernel_backend())
+            {
+                lp.backend = b;
             }
         }
 

@@ -44,6 +44,7 @@ pub use error::EngineError;
 pub use session::{Prediction, Session};
 
 use crate::conv::{AlgoKind, ConvContext};
+use crate::gemm::KernelBackend;
 use crate::memory::Budget;
 use crate::model::Model;
 use crate::planner::{Measurement, Plan};
@@ -74,6 +75,10 @@ pub struct LayerPlan {
     /// Calibrated static activation scale (q16 engines built with a
     /// [`EngineBuilder::calibration`] set); `None` → dynamic abs-max.
     pub act_qparams: Option<QParams>,
+    /// The micro-kernel backend the built plan's GEMMs dispatch to
+    /// (from the plan's packed kernel where it has one, else the
+    /// host-detected [`KernelBackend::active`]).
+    pub backend: KernelBackend,
 }
 
 /// An immutable, fully-planned inference engine. Build with

@@ -1,0 +1,99 @@
+//! AVX2 + FMA micro-kernels: 8×8 f32 tiles on `_mm256_fmadd_ps`, 8×8
+//! Q15 tiles on `_mm_mulhrs_epi16`.
+//!
+//! `mulhrs` computes `((a·b >> 14) + 1) >> 1` per lane — algebraically
+//! identical to the scalar path's `(a·b + 2¹⁴) >> 15` for every operand
+//! pair except `(−32768)²`, which the quantizer never produces
+//! (`QParams::QMAX` clamps to ±32767). The i16 backend is therefore
+//! bitwise-compatible with scalar.
+
+use super::{MR, NR_MAX};
+
+#[cfg(target_arch = "x86")]
+use std::arch::x86::*;
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// Strip width of the AVX2 backend (`KernelBackend::Avx2.nr()`).
+const NR: usize = 8;
+
+/// First `mr` rows of the 8×8 f32 tile; rows at stride `NR` in `acc`.
+///
+/// # Safety
+/// The CPU must support AVX2 and FMA (`KernelBackend::Avx2.available()`).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn kernel_f32(ap: &[f32], bp: &[f32], kb: usize, acc: &mut [f32; MR * NR_MAX], mr: usize) {
+    match mr {
+        1 => rows_f32::<1>(ap, bp, kb, acc),
+        2 => rows_f32::<2>(ap, bp, kb, acc),
+        3 => rows_f32::<3>(ap, bp, kb, acc),
+        4 => rows_f32::<4>(ap, bp, kb, acc),
+        5 => rows_f32::<5>(ap, bp, kb, acc),
+        6 => rows_f32::<6>(ap, bp, kb, acc),
+        7 => rows_f32::<7>(ap, bp, kb, acc),
+        _ => rows_f32::<MR>(ap, bp, kb, acc),
+    }
+}
+
+/// Inlined into the `#[target_feature]` caller, so the intrinsics compile
+/// with AVX2+FMA enabled (`#[inline(always)]` and `#[target_feature]` are
+/// mutually exclusive on the same fn).
+#[inline(always)]
+unsafe fn rows_f32<const R: usize>(ap: &[f32], bp: &[f32], kb: usize, acc: &mut [f32; MR * NR_MAX]) {
+    debug_assert!(ap.len() >= kb * MR);
+    debug_assert!(bp.len() >= kb * NR);
+    let mut c = [_mm256_setzero_ps(); R];
+    let a = ap.as_ptr();
+    let b = bp.as_ptr();
+    for k in 0..kb {
+        let bv = _mm256_loadu_ps(b.add(k * NR));
+        for r in 0..R {
+            let av = _mm256_set1_ps(*a.add(k * MR + r));
+            c[r] = _mm256_fmadd_ps(av, bv, c[r]);
+        }
+    }
+    for (r, &v) in c.iter().enumerate() {
+        _mm256_storeu_ps(acc.as_mut_ptr().add(r * NR), v);
+    }
+}
+
+/// First `mr` rows of the 8×8 Q15 tile; rows at stride `NR` in `acc`.
+///
+/// # Safety
+/// The CPU must support AVX2 (`KernelBackend::Avx2.available()`).
+#[target_feature(enable = "avx2")]
+pub unsafe fn kernel_i16(ap: &[i16], bp: &[i16], kb: usize, acc: &mut [i32; MR * NR_MAX], mr: usize) {
+    match mr {
+        1 => rows_i16::<1>(ap, bp, kb, acc),
+        2 => rows_i16::<2>(ap, bp, kb, acc),
+        3 => rows_i16::<3>(ap, bp, kb, acc),
+        4 => rows_i16::<4>(ap, bp, kb, acc),
+        5 => rows_i16::<5>(ap, bp, kb, acc),
+        6 => rows_i16::<6>(ap, bp, kb, acc),
+        7 => rows_i16::<7>(ap, bp, kb, acc),
+        _ => rows_i16::<MR>(ap, bp, kb, acc),
+    }
+}
+
+#[inline(always)]
+unsafe fn rows_i16<const R: usize>(ap: &[i16], bp: &[i16], kb: usize, acc: &mut [i32; MR * NR_MAX]) {
+    debug_assert!(ap.len() >= kb * MR);
+    debug_assert!(bp.len() >= kb * NR);
+    let mut c = [_mm256_setzero_si256(); R];
+    let a = ap.as_ptr();
+    let b = bp.as_ptr();
+    for k in 0..kb {
+        let bv = _mm_loadu_si128(b.add(k * NR) as *const __m128i);
+        for r in 0..R {
+            let av = _mm_set1_epi16(*a.add(k * MR + r));
+            // Rounded Q15 product per i16 lane, widened to i32 lanes and
+            // accumulated — the FMA-shaped loop the scalar rounding shift
+            // used to block.
+            let p = _mm_mulhrs_epi16(av, bv);
+            c[r] = _mm256_add_epi32(c[r], _mm256_cvtepi16_epi32(p));
+        }
+    }
+    for (r, &v) in c.iter().enumerate() {
+        _mm256_storeu_si256(acc.as_mut_ptr().add(r * NR) as *mut __m256i, v);
+    }
+}

@@ -1,0 +1,98 @@
+//! aarch64 NEON micro-kernels: 8×8 f32 tiles on `vfmaq_f32` (two q-regs
+//! per row), 8×8 Q15 tiles on `vqrdmulhq_s16`.
+//!
+//! `vqrdmulh` computes `sat((2·a·b + 2¹⁵) >> 16)` per lane — equal to the
+//! scalar `(a·b + 2¹⁴) >> 15` for every operand pair except `(−32768)²`,
+//! which the quantizer never produces (`QParams::QMAX` clamps to
+//! ±32767). The i16 backend is therefore bitwise-compatible with scalar.
+
+use super::{MR, NR_MAX};
+
+use std::arch::aarch64::*;
+
+/// Strip width of the NEON backend (`KernelBackend::Neon.nr()`).
+const NR: usize = 8;
+
+/// First `mr` rows of the 8×8 f32 tile; rows at stride `NR` in `acc`.
+///
+/// # Safety
+/// The CPU must support NEON (`KernelBackend::Neon.available()`).
+#[target_feature(enable = "neon")]
+pub unsafe fn kernel_f32(ap: &[f32], bp: &[f32], kb: usize, acc: &mut [f32; MR * NR_MAX], mr: usize) {
+    match mr {
+        1 => rows_f32::<1>(ap, bp, kb, acc),
+        2 => rows_f32::<2>(ap, bp, kb, acc),
+        3 => rows_f32::<3>(ap, bp, kb, acc),
+        4 => rows_f32::<4>(ap, bp, kb, acc),
+        5 => rows_f32::<5>(ap, bp, kb, acc),
+        6 => rows_f32::<6>(ap, bp, kb, acc),
+        7 => rows_f32::<7>(ap, bp, kb, acc),
+        _ => rows_f32::<MR>(ap, bp, kb, acc),
+    }
+}
+
+#[inline(always)]
+unsafe fn rows_f32<const R: usize>(ap: &[f32], bp: &[f32], kb: usize, acc: &mut [f32; MR * NR_MAX]) {
+    debug_assert!(ap.len() >= kb * MR);
+    debug_assert!(bp.len() >= kb * NR);
+    // Two 128-bit accumulators per row (8 f32 columns).
+    let mut lo = [vdupq_n_f32(0.0); R];
+    let mut hi = [vdupq_n_f32(0.0); R];
+    let a = ap.as_ptr();
+    let b = bp.as_ptr();
+    for k in 0..kb {
+        let b_lo = vld1q_f32(b.add(k * NR));
+        let b_hi = vld1q_f32(b.add(k * NR + 4));
+        for r in 0..R {
+            let av = vdupq_n_f32(*a.add(k * MR + r));
+            lo[r] = vfmaq_f32(lo[r], av, b_lo);
+            hi[r] = vfmaq_f32(hi[r], av, b_hi);
+        }
+    }
+    for r in 0..R {
+        vst1q_f32(acc.as_mut_ptr().add(r * NR), lo[r]);
+        vst1q_f32(acc.as_mut_ptr().add(r * NR + 4), hi[r]);
+    }
+}
+
+/// First `mr` rows of the 8×8 Q15 tile; rows at stride `NR` in `acc`.
+///
+/// # Safety
+/// The CPU must support NEON (`KernelBackend::Neon.available()`).
+#[target_feature(enable = "neon")]
+pub unsafe fn kernel_i16(ap: &[i16], bp: &[i16], kb: usize, acc: &mut [i32; MR * NR_MAX], mr: usize) {
+    match mr {
+        1 => rows_i16::<1>(ap, bp, kb, acc),
+        2 => rows_i16::<2>(ap, bp, kb, acc),
+        3 => rows_i16::<3>(ap, bp, kb, acc),
+        4 => rows_i16::<4>(ap, bp, kb, acc),
+        5 => rows_i16::<5>(ap, bp, kb, acc),
+        6 => rows_i16::<6>(ap, bp, kb, acc),
+        7 => rows_i16::<7>(ap, bp, kb, acc),
+        _ => rows_i16::<MR>(ap, bp, kb, acc),
+    }
+}
+
+#[inline(always)]
+unsafe fn rows_i16<const R: usize>(ap: &[i16], bp: &[i16], kb: usize, acc: &mut [i32; MR * NR_MAX]) {
+    debug_assert!(ap.len() >= kb * MR);
+    debug_assert!(bp.len() >= kb * NR);
+    let mut lo = [vdupq_n_s32(0); R];
+    let mut hi = [vdupq_n_s32(0); R];
+    let a = ap.as_ptr();
+    let b = bp.as_ptr();
+    for k in 0..kb {
+        let bv = vld1q_s16(b.add(k * NR));
+        for r in 0..R {
+            let av = vdupq_n_s16(*a.add(k * MR + r));
+            // Rounded Q15 product per i16 lane, widened and accumulated.
+            let p = vqrdmulhq_s16(av, bv);
+            lo[r] = vaddq_s32(lo[r], vmovl_s16(vget_low_s16(p)));
+            hi[r] = vaddq_s32(hi[r], vmovl_high_s16(p));
+        }
+    }
+    for r in 0..R {
+        vst1q_s32(acc.as_mut_ptr().add(r * NR), lo[r]);
+        vst1q_s32(acc.as_mut_ptr().add(r * NR + 4), hi[r]);
+    }
+}

@@ -1,0 +1,130 @@
+//! Portable micro-kernels — the autovectorized fallback and the
+//! reference implementation every SIMD backend is tested against.
+//!
+//! Written so LLVM auto-vectorizes the inner NR-wide loop into SIMD f32
+//! lanes; MR×NR accumulators live in registers across the whole K loop.
+
+use super::{MR, NR_MAX};
+
+/// Strip width of the scalar backend (`KernelBackend::Scalar.nr()`).
+const NR: usize = 8;
+
+/// First `mr` rows of the 8×8 f32 tile; rows at stride `NR` in `acc`.
+#[inline(always)]
+pub fn kernel_f32(ap: &[f32], bp: &[f32], kb: usize, acc: &mut [f32; MR * NR_MAX], mr: usize) {
+    match mr {
+        1 => kernel_rows::<1>(ap, bp, kb, acc),
+        2 => kernel_rows::<2>(ap, bp, kb, acc),
+        3 => kernel_rows::<3>(ap, bp, kb, acc),
+        4 => kernel_rows::<4>(ap, bp, kb, acc),
+        5 => kernel_rows::<5>(ap, bp, kb, acc),
+        6 => kernel_rows::<6>(ap, bp, kb, acc),
+        7 => kernel_rows::<7>(ap, bp, kb, acc),
+        _ => kernel_rows::<MR>(ap, bp, kb, acc),
+    }
+}
+
+#[inline(always)]
+fn kernel_rows<const R: usize>(ap: &[f32], bp: &[f32], kb: usize, acc: &mut [f32; MR * NR_MAX]) {
+    debug_assert!(ap.len() >= kb * MR);
+    debug_assert!(bp.len() >= kb * NR);
+    // Local accumulators: LLVM keeps these in vector registers.
+    let mut c = [[0.0f32; NR]; R];
+    // Fixed-size array windows (`&[f32; MR]`/`&[f32; NR]`) over slices
+    // pre-cut to exactly kb: the iterators carry the trip count and the
+    // window length checks fold away, leaving the inner loops with no
+    // bounds checks at all. 4-way K unroll kept: fewer loop-carried
+    // dependencies, better ILP.
+    let kb4 = kb - kb % 4;
+    for (a, b) in ap[..kb4 * MR]
+        .chunks_exact(4 * MR)
+        .zip(bp[..kb4 * NR].chunks_exact(4 * NR))
+    {
+        for kk in 0..4 {
+            let a: &[f32; MR] = a[kk * MR..(kk + 1) * MR].try_into().unwrap();
+            let b: &[f32; NR] = b[kk * NR..(kk + 1) * NR].try_into().unwrap();
+            for r in 0..R {
+                let ar = a[r];
+                for j in 0..NR {
+                    c[r][j] += ar * b[j];
+                }
+            }
+        }
+    }
+    for (a, b) in ap[kb4 * MR..kb * MR]
+        .chunks_exact(MR)
+        .zip(bp[kb4 * NR..kb * NR].chunks_exact(NR))
+    {
+        let a: &[f32; MR] = a.try_into().unwrap();
+        let b: &[f32; NR] = b.try_into().unwrap();
+        for r in 0..R {
+            let ar = a[r];
+            for j in 0..NR {
+                c[r][j] += ar * b[j];
+            }
+        }
+    }
+    for (row, src) in c.iter().enumerate() {
+        acc[row * NR..row * NR + NR].copy_from_slice(src);
+    }
+}
+
+/// First `mr` rows of the 8×8 Q15 tile; rows at stride `NR` in `acc`.
+#[inline(always)]
+pub fn kernel_i16(ap: &[i16], bp: &[i16], kb: usize, acc: &mut [i32; MR * NR_MAX], mr: usize) {
+    match mr {
+        1 => kernel_rows_i16::<1>(ap, bp, kb, acc),
+        2 => kernel_rows_i16::<2>(ap, bp, kb, acc),
+        3 => kernel_rows_i16::<3>(ap, bp, kb, acc),
+        4 => kernel_rows_i16::<4>(ap, bp, kb, acc),
+        5 => kernel_rows_i16::<5>(ap, bp, kb, acc),
+        6 => kernel_rows_i16::<6>(ap, bp, kb, acc),
+        7 => kernel_rows_i16::<7>(ap, bp, kb, acc),
+        _ => kernel_rows_i16::<MR>(ap, bp, kb, acc),
+    }
+}
+
+#[inline(always)]
+fn kernel_rows_i16<const R: usize>(
+    ap: &[i16],
+    bp: &[i16],
+    kb: usize,
+    acc: &mut [i32; MR * NR_MAX],
+) {
+    debug_assert!(ap.len() >= kb * MR);
+    debug_assert!(bp.len() >= kb * NR);
+    let mut c = [[0i32; NR]; R];
+    // Same bounds-check-free array-window shape as the f32 kernel.
+    let kb4 = kb - kb % 4;
+    for (a, b) in ap[..kb4 * MR]
+        .chunks_exact(4 * MR)
+        .zip(bp[..kb4 * NR].chunks_exact(4 * NR))
+    {
+        for kk in 0..4 {
+            let a: &[i16; MR] = a[kk * MR..(kk + 1) * MR].try_into().unwrap();
+            let b: &[i16; NR] = b[kk * NR..(kk + 1) * NR].try_into().unwrap();
+            for r in 0..R {
+                let ar = a[r] as i32;
+                for j in 0..NR {
+                    c[r][j] += (ar * b[j] as i32 + (1 << 14)) >> 15;
+                }
+            }
+        }
+    }
+    for (a, b) in ap[kb4 * MR..kb * MR]
+        .chunks_exact(MR)
+        .zip(bp[kb4 * NR..kb * NR].chunks_exact(NR))
+    {
+        let a: &[i16; MR] = a.try_into().unwrap();
+        let b: &[i16; NR] = b.try_into().unwrap();
+        for r in 0..R {
+            let ar = a[r] as i32;
+            for j in 0..NR {
+                c[r][j] += (ar * b[j] as i32 + (1 << 14)) >> 15;
+            }
+        }
+    }
+    for (row, src) in c.iter().enumerate() {
+        acc[row * NR..row * NR + NR].copy_from_slice(src);
+    }
+}

@@ -8,8 +8,9 @@
 //! supporting **row stride ≠ row length** on all of A, B, C.
 //!
 //! Implementation: classic Goto-style blocking (KC×MC×NC panels, packed A
-//! and B, an MR×NR register micro-kernel that LLVM auto-vectorizes), with
-//! the MC loop parallelized through the caller's
+//! and B, an MR×nr register micro-kernel dispatched at runtime to the
+//! best `std::arch` backend — see [`micro`]), with the MC loop
+//! parallelized through the caller's
 //! [`Parallelism`](crate::threadpool::Parallelism) handle (persistent
 //! pool workers; tiny GEMMs stay inline) — the same structure OpenBLAS
 //! uses, scaled down.
@@ -18,12 +19,15 @@ pub mod micro;
 pub mod pack;
 pub mod q16;
 
+pub use micro::KernelBackend;
 pub use q16::{
     gemm_prepacked_batch_i16, gemm_prepacked_ex_i16, gemm_prepacked_i16, MatRefI16, PackedBI16,
+    Q16Epilogue,
 };
 
+use crate::memory::aligned::{AlignedVec, ALIGN};
 use crate::threadpool::Parallelism;
-use micro::{MR, NR};
+use micro::{MR, NR_MAX};
 
 /// Immutable matrix view: `rows × cols` with row stride `rs`
 /// (`rs >= cols`; `rs > cols` expresses BLAS `ld` sub-matrices).
@@ -205,25 +209,37 @@ pub fn gemm_ex(
 /// shapes (§Perf); packing once removes that entirely.
 ///
 /// Layout: tiles in (pc, jc) loop order; tile (pc, jc) holds the
-/// `kb × nb` block packed into NR-column strips (see [`pack::pack_b`]).
+/// `kb × nb` block packed into nr-column strips for the recorded
+/// [`KernelBackend`] (see [`pack::pack_b`]), each tile starting on a
+/// 64-byte boundary.
 #[derive(Debug, Clone)]
 pub struct PackedB {
     pub k: usize,
     pub n: usize,
     pub bs: BlockSizes,
-    data: Vec<f32>,
+    backend: KernelBackend,
+    data: AlignedVec<f32>,
     /// Start offset of each (pc-block, jc-block) tile.
     tile_offsets: Vec<usize>,
     n_blocks: usize,
 }
 
 impl PackedB {
-    /// Pack the whole of B.
+    /// Pack the whole of B for the process-wide active backend.
     pub fn pack(b: MatRef<'_>, bs: BlockSizes) -> PackedB {
+        Self::pack_with(b, bs, KernelBackend::active())
+    }
+
+    /// Pack the whole of B into `backend`-width strips. Consumers
+    /// dispatch on [`backend()`](Self::backend), so buffer layout and
+    /// kernel always agree — this is also how the equivalence tests
+    /// force a specific backend without touching the environment.
+    pub fn pack_with(b: MatRef<'_>, bs: BlockSizes, backend: KernelBackend) -> PackedB {
+        let nr = backend.nr();
         let (k, n) = (b.rows, b.cols);
         let k_blocks = k.div_ceil(bs.kc).max(1);
         let n_blocks = n.div_ceil(bs.nc).max(1);
-        let mut data = Vec::new();
+        let mut data = AlignedVec::new();
         let mut tile_offsets = Vec::with_capacity(k_blocks * n_blocks);
         for pb in 0..k_blocks {
             let pc = pb * bs.kc;
@@ -231,11 +247,12 @@ impl PackedB {
             for jb in 0..n_blocks {
                 let jc = jb * bs.nc;
                 let nb = bs.nc.min(n - jc);
-                tile_offsets.push(data.len());
-                let tile_len = nb.div_ceil(NR) * kb * NR;
-                let start = data.len();
+                // Keep every tile cache-line aligned, not just the base.
+                let start = data.len().next_multiple_of(ALIGN / 4);
+                tile_offsets.push(start);
+                let tile_len = nb.div_ceil(nr) * kb * nr;
                 data.resize(start + tile_len, 0.0);
-                pack::pack_b(b.sub(pc, kb, jc, nb), &mut data[start..]);
+                pack::pack_b(b.sub(pc, kb, jc, nb), &mut data[start..], nr);
             }
         }
         let _ = k_blocks; // implicit in tile_offsets length
@@ -243,10 +260,16 @@ impl PackedB {
             k,
             n,
             bs,
+            backend,
             data,
             tile_offsets,
             n_blocks,
         }
+    }
+
+    /// The kernel backend these strips were packed for.
+    pub fn backend(&self) -> KernelBackend {
+        self.backend
     }
 
     fn tile(&self, pb: usize, jb: usize) -> &[f32] {
@@ -257,7 +280,12 @@ impl PackedB {
             .get(idx + 1)
             .copied()
             .unwrap_or(self.data.len());
-        &self.data[start..end]
+        let t = &self.data[start..end];
+        debug_assert!(
+            t.is_empty() || t.as_ptr() as usize % ALIGN == 0,
+            "PackedB tile lost {ALIGN}-byte alignment"
+        );
+        t
     }
 
     /// Bytes held by the packed copy.
@@ -274,7 +302,7 @@ pub fn gemm_prepacked(a: MatRef<'_>, pb: &PackedB, c: &mut MatMut<'_>) {
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, pb.n);
     scale_c(c, 0.0);
-    gemm_serial_inner(a, BSource::Packed(pb), c, 1.0, pb.bs);
+    gemm_serial_inner(a, BSource::Packed(pb), c, 1.0, pb.bs, pb.backend);
 }
 
 /// `C = A × pb` with B pre-packed, parallelized over row panels of C —
@@ -309,7 +337,7 @@ pub fn gemm_prepacked_ex(a: MatRef<'_>, pb: &PackedB, c: &mut MatMut<'_>, par: &
         let c_data: &mut [f32] = c_shared.slice();
         let mut c_panel = MatMut::strided(&mut c_data[r0 * crs..], r1 - r0, n, crs);
         let a_panel = a.sub(r0, r1 - r0, 0, k);
-        gemm_serial_inner(a_panel, BSource::Packed(pb), &mut c_panel, 1.0, pb.bs);
+        gemm_serial_inner(a_panel, BSource::Packed(pb), &mut c_panel, 1.0, pb.bs, pb.backend);
     });
 }
 
@@ -333,6 +361,8 @@ pub fn gemm_prepacked_batch(a: &[MatRef<'_>], pb: &PackedB, c: &mut [MatMut<'_>]
     let bs = pb.bs;
     let k = pb.k;
     let n = pb.n;
+    let backend = pb.backend;
+    let nrw = backend.nr();
     SCRATCH.with(|scratch| {
         let mut guard = scratch.borrow_mut();
         let (packed_a, _) = &mut *guard;
@@ -341,7 +371,7 @@ pub fn gemm_prepacked_batch(a: &[MatRef<'_>], pb: &PackedB, c: &mut [MatMut<'_>]
         if packed_a.len() < pa_len {
             packed_a.resize(pa_len, 0.0);
         }
-        let mut acc = [0.0f32; MR * NR];
+        let mut acc = [0.0f32; MR * NR_MAX];
         let mut pc = 0;
         let mut pb_idx = 0;
         while pc < k {
@@ -357,30 +387,30 @@ pub fn gemm_prepacked_batch(a: &[MatRef<'_>], pb: &PackedB, c: &mut [MatMut<'_>]
                     let mut ic = 0;
                     while ic < m {
                         let mb = bs.mc.min(m - ic);
-                        pack::pack_a(ai.sub(ic, mb, pc, kb), packed_a);
+                        pack::pack_a(ai.sub(ic, mb, pc, kb), &mut packed_a[..]);
                         let mut jr = 0;
                         while jr < nb {
-                            let nr = NR.min(nb - jr);
-                            let bp = &b_tile[(jr / NR) * kb * NR..(jr / NR + 1) * kb * NR];
+                            let nr = nrw.min(nb - jr);
+                            let bp = &b_tile[(jr / nrw) * kb * nrw..(jr / nrw + 1) * kb * nrw];
                             let mut ir = 0;
                             while ir < mb {
                                 let mr = MR.min(mb - ir);
                                 let ap =
                                     &packed_a[(ir / MR) * kb * MR..(ir / MR + 1) * kb * MR];
                                 if mr == MR {
-                                    micro::kernel(ap, bp, kb, &mut acc);
+                                    micro::kernel(backend, ap, bp, kb, &mut acc);
                                 } else {
-                                    micro::kernel_edge(ap, bp, kb, &mut acc, mr);
+                                    micro::kernel_edge(backend, ap, bp, kb, &mut acc, mr);
                                 }
                                 for r in 0..mr {
                                     let crow = (ic + ir + r) * ci.rs + jc + jr;
                                     for col in 0..nr {
-                                        ci.data[crow + col] += acc[r * NR + col];
+                                        ci.data[crow + col] += acc[r * nrw + col];
                                     }
                                 }
                                 ir += MR;
                             }
-                            jr += NR;
+                            jr += nrw;
                         }
                         ic += bs.mc;
                     }
@@ -395,9 +425,10 @@ pub fn gemm_prepacked_batch(a: &[MatRef<'_>], pb: &PackedB, c: &mut [MatMut<'_>]
 }
 
 /// Serial blocked gemm over one row panel: C += alpha·A×B (beta already
-/// applied by the caller). B is packed per (pc, jc) tile.
+/// applied by the caller). B is packed per (pc, jc) tile for the
+/// process-wide active backend.
 fn gemm_serial(a: MatRef<'_>, b: MatRef<'_>, c: &mut MatMut<'_>, alpha: f32, bs: BlockSizes) {
-    gemm_serial_inner(a, BSource::Raw(b), c, alpha, bs);
+    gemm_serial_inner(a, BSource::Raw(b), c, alpha, bs, KernelBackend::active());
 }
 
 enum BSource<'a> {
@@ -406,9 +437,10 @@ enum BSource<'a> {
 }
 
 thread_local! {
-    /// Reused packing scratch (A always; B when not prepacked).
-    static SCRATCH: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
-        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+    /// Reused packing scratch (A always; B when not prepacked), 64-byte
+    /// aligned for the SIMD kernels.
+    static SCRATCH: std::cell::RefCell<(AlignedVec<f32>, AlignedVec<f32>)> =
+        const { std::cell::RefCell::new((AlignedVec::new(), AlignedVec::new())) };
 }
 
 fn gemm_serial_inner(
@@ -417,9 +449,11 @@ fn gemm_serial_inner(
     c: &mut MatMut<'_>,
     alpha: f32,
     bs: BlockSizes,
+    backend: KernelBackend,
 ) {
     let (m, k) = (a.rows, a.cols);
     let n = c.cols;
+    let nrw = backend.nr();
     SCRATCH.with(|scratch| {
         let mut guard = scratch.borrow_mut();
         let (packed_a, packed_b) = &mut *guard;
@@ -427,11 +461,11 @@ fn gemm_serial_inner(
         if packed_a.len() < pa_len {
             packed_a.resize(pa_len, 0.0);
         }
-        let pb_len = bs.kc.min(k) * bs.nc.min(n).next_multiple_of(NR);
+        let pb_len = bs.kc.min(k) * bs.nc.min(n).next_multiple_of(nrw);
         if matches!(b, BSource::Raw(_)) && packed_b.len() < pb_len {
             packed_b.resize(pb_len, 0.0);
         }
-        let mut acc = [0.0f32; MR * NR];
+        let mut acc = [0.0f32; MR * NR_MAX];
 
         let mut pc = 0;
         let mut pb_idx = 0;
@@ -443,7 +477,7 @@ fn gemm_serial_inner(
                 let nb = bs.nc.min(n - jc);
                 let b_tile: &[f32] = match &b {
                     BSource::Raw(braw) => {
-                        pack::pack_b(braw.sub(pc, kb, jc, nb), packed_b);
+                        pack::pack_b(braw.sub(pc, kb, jc, nb), &mut packed_b[..], nrw);
                         &packed_b[..]
                     }
                     BSource::Packed(p) => p.tile(pb_idx, jb_idx),
@@ -451,34 +485,34 @@ fn gemm_serial_inner(
                 let mut ic = 0;
                 while ic < m {
                     let mb = bs.mc.min(m - ic);
-                    pack::pack_a(a.sub(ic, mb, pc, kb), packed_a);
+                    pack::pack_a(a.sub(ic, mb, pc, kb), &mut packed_a[..]);
                     // Macro-kernel: packed A (mb×kb) times packed B (kb×nb).
                     // Packed layouts (see pack.rs): A strips of MR rows at
-                    // offset (ir/MR)·kb·MR, B strips of NR cols at
-                    // offset (jr/NR)·kb·NR; both zero-padded at the edges.
+                    // offset (ir/MR)·kb·MR, B strips of nr cols at
+                    // offset (jr/nr)·kb·nr; both zero-padded at the edges.
                     let mut jr = 0;
                     while jr < nb {
-                        let nr = NR.min(nb - jr);
-                        let bp = &b_tile[(jr / NR) * kb * NR..(jr / NR + 1) * kb * NR];
+                        let nr = nrw.min(nb - jr);
+                        let bp = &b_tile[(jr / nrw) * kb * nrw..(jr / nrw + 1) * kb * nrw];
                         let mut ir = 0;
                         while ir < mb {
                             let mr = MR.min(mb - ir);
                             let ap = &packed_a[(ir / MR) * kb * MR..(ir / MR + 1) * kb * MR];
                             if mr == MR {
-                                micro::kernel(ap, bp, kb, &mut acc);
+                                micro::kernel(backend, ap, bp, kb, &mut acc);
                             } else {
-                                micro::kernel_edge(ap, bp, kb, &mut acc, mr);
+                                micro::kernel_edge(backend, ap, bp, kb, &mut acc, mr);
                             }
                             // Accumulate into C with alpha.
                             for r in 0..mr {
                                 let crow = (ic + ir + r) * c.rs + jc + jr;
                                 for col in 0..nr {
-                                    c.data[crow + col] += alpha * acc[r * NR + col];
+                                    c.data[crow + col] += alpha * acc[r * nrw + col];
                                 }
                             }
                             ir += MR;
                         }
-                        jr += NR;
+                        jr += nrw;
                     }
                     ic += bs.mc;
                 }

@@ -5,8 +5,13 @@
 //! unit-stride memory. Crucially for MEC, packing reads *strided* views —
 //! this is where the BLAS `ld` trick (overlapping partitions of the
 //! lowered matrix L, paper §3.2) meets the hardware.
+//!
+//! A strips are always MR rows (shared by every kernel backend); B strip
+//! width is the dispatching backend's `nr` (8, or 16 on AVX-512), passed
+//! explicitly so a packed buffer and the kernel that consumes it always
+//! agree.
 
-use super::micro::{MR, NR};
+use super::micro::MR;
 use super::MatRef;
 
 /// Pack an A block (`mb × kb`, arbitrary row stride) into strips of MR
@@ -38,25 +43,26 @@ pub fn pack_a(a: MatRef<'_>, out: &mut [f32]) {
     }
 }
 
-/// Pack a B block (`kb × nb`) into strips of NR columns: strip `j`
-/// occupies `kb·NR` floats at offset `j·kb·NR`, laid out k-major
-/// (`[k][c]`), zero-padded when `nb % NR != 0`.
-pub fn pack_b(b: MatRef<'_>, out: &mut [f32]) {
+/// Pack a B block (`kb × nb`) into strips of `nr` columns: strip `j`
+/// occupies `kb·nr` floats at offset `j·kb·nr`, laid out k-major
+/// (`[k][c]`), zero-padded when `nb % nr != 0`. `nr` is the consuming
+/// backend's strip width ([`KernelBackend::nr`](super::KernelBackend::nr)).
+pub fn pack_b(b: MatRef<'_>, out: &mut [f32], nr: usize) {
     let (kb, nb) = (b.rows, b.cols);
-    let strips = nb.div_ceil(NR);
-    assert!(out.len() >= strips * kb * NR, "pack_b buffer too small");
+    let strips = nb.div_ceil(nr);
+    assert!(out.len() >= strips * kb * nr, "pack_b buffer too small");
     for s in 0..strips {
-        let c0 = s * NR;
-        let cols = NR.min(nb - c0);
-        let dst = &mut out[s * kb * NR..(s + 1) * kb * NR];
-        if cols == NR {
+        let c0 = s * nr;
+        let cols = nr.min(nb - c0);
+        let dst = &mut out[s * kb * nr..(s + 1) * kb * nr];
+        if cols == nr {
             for k in 0..kb {
-                let src = &b.data[k * b.rs + c0..k * b.rs + c0 + NR];
-                dst[k * NR..k * NR + NR].copy_from_slice(src);
+                let src = &b.data[k * b.rs + c0..k * b.rs + c0 + nr];
+                dst[k * nr..k * nr + nr].copy_from_slice(src);
             }
         } else {
             for k in 0..kb {
-                let d = &mut dst[k * NR..k * NR + NR];
+                let d = &mut dst[k * nr..k * nr + nr];
                 for (c, slot) in d.iter_mut().enumerate() {
                     *slot = if c < cols { b.data[k * b.rs + c0 + c] } else { 0.0 };
                 }
@@ -68,6 +74,8 @@ pub fn pack_b(b: MatRef<'_>, out: &mut [f32]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    const NR: usize = 8;
 
     #[test]
     fn pack_a_layout_and_padding() {
@@ -88,11 +96,23 @@ mod tests {
         let buf: Vec<f32> = (0..10).map(|x| x as f32).collect();
         let b = MatRef::strided(&buf, 2, 3, 5);
         let mut out = vec![-1.0; 2 * NR];
-        pack_b(b, &mut out);
+        pack_b(b, &mut out, NR);
         // k=0 row: 0,1,2 then zero pad.
         assert_eq!(&out[0..NR], &[0.0, 1.0, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
         // k=1 row: 5,6,7.
         assert_eq!(&out[NR..2 * NR], &[5.0, 6.0, 7.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn pack_b_wide_strip() {
+        // nr=16 (the AVX-512 width): one strip, zero-padded past col 2.
+        let buf: Vec<f32> = (0..8).map(|x| x as f32).collect();
+        let b = MatRef::new(&buf, 4, 2);
+        let mut out = vec![-1.0; 4 * 16];
+        pack_b(b, &mut out, 16);
+        assert_eq!(&out[0..3], &[0.0, 1.0, 0.0]);
+        assert!(out[2..16].iter().all(|&v| v == 0.0));
+        assert_eq!(&out[16..18], &[2.0, 3.0]);
     }
 
     #[test]

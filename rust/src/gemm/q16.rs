@@ -10,20 +10,24 @@
 //! * [`MatRefI16`] — strided i16 views (the BLAS `ld` trick works
 //!   unchanged on the quantized L).
 //! * [`pack_a_i16`] / [`pack_b_i16`] — the panel packers, i16 lanes.
-//! * [`PackedBI16`] — plan-time prepacked kernel matrices.
+//! * [`PackedBI16`] — plan-time prepacked kernel matrices, recording the
+//!   [`KernelBackend`] whose strip width they were packed for.
 //! * [`gemm_prepacked_i16`] / [`gemm_prepacked_ex_i16`] /
 //!   [`gemm_prepacked_batch_i16`] — the prepacked GEMMs, writing
-//!   dequantized f32 into C.
+//!   dequantized f32 into C through a [`Q16Epilogue`] that supports
+//!   per-output-column (per-output-channel) kernel scales.
 //!
 //! Arithmetic: i16 × i16 widened to i32, each product rounded-shifted
 //! back to Q15 before accumulation (see
-//! [`micro::kernel_i16`](super::micro::kernel_i16)), so i32 accumulators
-//! cannot overflow for any `K ≤ 2¹⁵` (asserted at pack time). The caller
-//! supplies `scale = scale_a · scale_b · 32768` to map accumulator units
-//! back to f32.
+//! [`micro::kernel_i16`](super::micro::kernel_i16) — `mulhrs` on AVX2,
+//! `vqrdmulh` on NEON, a rounding shift on scalar; bitwise-identical
+//! across backends), so i32 accumulators cannot overflow for any
+//! `K ≤ 2¹⁵` (asserted at pack time). The epilogue's `global` scale must
+//! fold in the Q15 product shift: `scale_a · scale_b · 32768`.
 
-use super::micro::{self, MR, NR};
+use super::micro::{self, KernelBackend, MR, NR_MAX};
 use super::{scale_c, split_ranges, BlockSizes, MatMut};
+use crate::memory::aligned::{AlignedVec, ALIGN};
 use crate::threadpool::{Parallelism, SharedSlice};
 
 /// Immutable i16 matrix view: `rows × cols` with row stride `rs`
@@ -66,6 +70,37 @@ impl<'a> MatRefI16<'a> {
     }
 }
 
+/// Dequantization applied as the i32 accumulators are written back to
+/// f32 C. `global` carries the activation scale and the Q15 product
+/// shift (`scale_a · 32768`, times the kernel's per-tensor scale when
+/// `per_col` is absent); `per_col[j]` is output column `j`'s kernel
+/// scale. Borrowing the plan-resident scale table keeps the execute hot
+/// path allocation-free.
+#[derive(Debug, Clone, Copy)]
+pub struct Q16Epilogue<'a> {
+    pub global: f32,
+    pub per_col: Option<&'a [f32]>,
+}
+
+impl Q16Epilogue<'_> {
+    /// A single per-tensor scale for every output column.
+    pub fn uniform(scale: f32) -> Q16Epilogue<'static> {
+        Q16Epilogue {
+            global: scale,
+            per_col: None,
+        }
+    }
+
+    /// The dequantization factor for output column `col` of C.
+    #[inline(always)]
+    pub fn at(&self, col: usize) -> f32 {
+        match self.per_col {
+            Some(s) => self.global * s[col],
+            None => self.global,
+        }
+    }
+}
+
 /// Pack an i16 A block into MR-row strips, k-major, zero-padded — the
 /// exact layout of [`pack::pack_a`](super::pack::pack_a) in i16 lanes.
 pub fn pack_a_i16(a: MatRefI16<'_>, out: &mut [i16]) {
@@ -85,18 +120,19 @@ pub fn pack_a_i16(a: MatRefI16<'_>, out: &mut [i16]) {
     }
 }
 
-/// Pack an i16 B block into NR-column strips, k-major, zero-padded — the
-/// exact layout of [`pack::pack_b`](super::pack::pack_b) in i16 lanes.
-pub fn pack_b_i16(b: MatRefI16<'_>, out: &mut [i16]) {
+/// Pack an i16 B block into `nr`-column strips, k-major, zero-padded —
+/// the exact layout of [`pack::pack_b`](super::pack::pack_b) in i16
+/// lanes. `nr` is the consuming backend's strip width.
+pub fn pack_b_i16(b: MatRefI16<'_>, out: &mut [i16], nr: usize) {
     let (kb, nb) = (b.rows, b.cols);
-    let strips = nb.div_ceil(NR);
-    assert!(out.len() >= strips * kb * NR, "pack_b_i16 buffer too small");
+    let strips = nb.div_ceil(nr);
+    assert!(out.len() >= strips * kb * nr, "pack_b_i16 buffer too small");
     for s in 0..strips {
-        let c0 = s * NR;
-        let cols = NR.min(nb - c0);
-        let dst = &mut out[s * kb * NR..(s + 1) * kb * NR];
+        let c0 = s * nr;
+        let cols = nr.min(nb - c0);
+        let dst = &mut out[s * kb * nr..(s + 1) * kb * nr];
         for k in 0..kb {
-            let d = &mut dst[k * NR..k * NR + NR];
+            let d = &mut dst[k * nr..k * nr + nr];
             for (c, slot) in d.iter_mut().enumerate() {
                 *slot = if c < cols { b.data[k * b.rs + c0 + c] } else { 0 };
             }
@@ -106,21 +142,30 @@ pub fn pack_b_i16(b: MatRefI16<'_>, out: &mut [i16]) {
 
 /// A quantized B operand packed once for reuse — the q16 twin of
 /// [`PackedB`](super::PackedB), holding i16 tiles in the same
-/// (pc, jc) order.
+/// (pc, jc) order, each tile starting on a 64-byte boundary.
 #[derive(Debug, Clone)]
 pub struct PackedBI16 {
     pub k: usize,
     pub n: usize,
     pub bs: BlockSizes,
-    data: Vec<i16>,
+    backend: KernelBackend,
+    data: AlignedVec<i16>,
     tile_offsets: Vec<usize>,
     n_blocks: usize,
 }
 
 impl PackedBI16 {
-    /// Pack the whole of B. Asserts the Q15 accumulator depth bound
-    /// (`k ≤ 2¹⁵` — far above any cv-layer `k_h·k_w·i_c`).
+    /// Pack the whole of B for the process-wide active backend. Asserts
+    /// the Q15 accumulator depth bound (`k ≤ 2¹⁵` — far above any
+    /// cv-layer `k_h·k_w·i_c`).
     pub fn pack(b: MatRefI16<'_>, bs: BlockSizes) -> PackedBI16 {
+        Self::pack_with(b, bs, KernelBackend::active())
+    }
+
+    /// Pack the whole of B into `backend`-width strips (see
+    /// [`PackedB::pack_with`](super::PackedB::pack_with)).
+    pub fn pack_with(b: MatRefI16<'_>, bs: BlockSizes, backend: KernelBackend) -> PackedBI16 {
+        let nr = backend.nr();
         let (k, n) = (b.rows, b.cols);
         assert!(
             k <= 1 << 15,
@@ -128,7 +173,7 @@ impl PackedBI16 {
         );
         let k_blocks = k.div_ceil(bs.kc).max(1);
         let n_blocks = n.div_ceil(bs.nc).max(1);
-        let mut data = Vec::new();
+        let mut data = AlignedVec::new();
         let mut tile_offsets = Vec::with_capacity(k_blocks * n_blocks);
         for pb in 0..k_blocks {
             let pc = pb * bs.kc;
@@ -136,21 +181,28 @@ impl PackedBI16 {
             for jb in 0..n_blocks {
                 let jc = jb * bs.nc;
                 let nb = bs.nc.min(n - jc);
-                tile_offsets.push(data.len());
-                let tile_len = nb.div_ceil(NR) * kb * NR;
-                let start = data.len();
+                // Keep every tile cache-line aligned, not just the base.
+                let start = data.len().next_multiple_of(ALIGN / 2);
+                tile_offsets.push(start);
+                let tile_len = nb.div_ceil(nr) * kb * nr;
                 data.resize(start + tile_len, 0);
-                pack_b_i16(b.sub(pc, kb, jc, nb), &mut data[start..]);
+                pack_b_i16(b.sub(pc, kb, jc, nb), &mut data[start..], nr);
             }
         }
         PackedBI16 {
             k,
             n,
             bs,
+            backend,
             data,
             tile_offsets,
             n_blocks,
         }
+    }
+
+    /// The kernel backend these strips were packed for.
+    pub fn backend(&self) -> KernelBackend {
+        self.backend
     }
 
     fn tile(&self, pb: usize, jb: usize) -> &[i16] {
@@ -161,7 +213,12 @@ impl PackedBI16 {
             .get(idx + 1)
             .copied()
             .unwrap_or(self.data.len());
-        &self.data[start..end]
+        let t = &self.data[start..end];
+        debug_assert!(
+            t.is_empty() || t.as_ptr() as usize % ALIGN == 0,
+            "PackedBI16 tile lost {ALIGN}-byte alignment"
+        );
+        t
     }
 
     /// Bytes held by the packed copy — half the f32 pack's for the same
@@ -173,20 +230,25 @@ impl PackedBI16 {
 
 thread_local! {
     /// Reused i16 A-packing scratch (B is always prepacked on the q16
-    /// path, so there is no raw-B scratch).
-    static SCRATCH_I16: std::cell::RefCell<Vec<i16>> =
-        const { std::cell::RefCell::new(Vec::new()) };
+    /// path, so there is no raw-B scratch), 64-byte aligned.
+    static SCRATCH_I16: std::cell::RefCell<AlignedVec<i16>> =
+        const { std::cell::RefCell::new(AlignedVec::new()) };
 }
 
-/// `C = scale · (Aq × PBq)` with B pre-packed (beta = 0), serial: i16
-/// operands, i32 accumulation, f32 writeback. `scale` must be
-/// `scale_a · scale_b · 32768` (the Q15 product shift folded in).
-pub fn gemm_prepacked_i16(a: MatRefI16<'_>, pb: &PackedBI16, c: &mut MatMut<'_>, scale: f32) {
+/// `C = ep · (Aq × PBq)` with B pre-packed (beta = 0), serial: i16
+/// operands, i32 accumulation, f32 writeback through the epilogue.
+pub fn gemm_prepacked_i16(
+    a: MatRefI16<'_>,
+    pb: &PackedBI16,
+    c: &mut MatMut<'_>,
+    ep: Q16Epilogue<'_>,
+) {
     assert_eq!(a.cols, pb.k, "gemm_prepacked_i16: A cols vs packed B rows");
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, pb.n);
+    debug_assert!(ep.per_col.is_none_or(|s| s.len() >= pb.n));
     scale_c(c, 0.0);
-    gemm_serial_prepacked_i16(a, pb, c, scale);
+    gemm_serial_prepacked_i16(a, pb, c, ep);
 }
 
 /// Threaded [`gemm_prepacked_i16`], parallelized over row panels of C —
@@ -197,14 +259,14 @@ pub fn gemm_prepacked_ex_i16(
     a: MatRefI16<'_>,
     pb: &PackedBI16,
     c: &mut MatMut<'_>,
-    scale: f32,
+    ep: Q16Epilogue<'_>,
     par: &Parallelism,
 ) {
     assert_eq!(a.cols, pb.k, "gemm_prepacked_ex_i16: A cols vs packed B rows");
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, pb.n);
     if par.threads() <= 1 {
-        gemm_prepacked_i16(a, pb, c, scale);
+        gemm_prepacked_i16(a, pb, c, ep);
         return;
     }
     let (m, k) = (a.rows, a.cols);
@@ -212,6 +274,7 @@ pub fn gemm_prepacked_ex_i16(
     if m == 0 || n == 0 {
         return;
     }
+    debug_assert!(ep.per_col.is_none_or(|s| s.len() >= n));
     scale_c(c, 0.0);
     let crs = c.rs;
     let c_shared = SharedSlice::new(c.data);
@@ -226,11 +289,11 @@ pub fn gemm_prepacked_ex_i16(
         let c_data: &mut [f32] = c_shared.slice();
         let mut c_panel = MatMut::strided(&mut c_data[r0 * crs..], r1 - r0, n, crs);
         let a_panel = a.sub(r0, r1 - r0, 0, k);
-        gemm_serial_prepacked_i16(a_panel, pb, &mut c_panel, scale);
+        gemm_serial_prepacked_i16(a_panel, pb, &mut c_panel, ep);
     });
 }
 
-/// Batched `C[i] = scale · (Aq[i] × PBq)` with the batch loop inside the
+/// Batched `C[i] = ep · (Aq[i] × PBq)` with the batch loop inside the
 /// (pc, jc) tile loops — the q16 twin of
 /// [`gemm_prepacked_batch`](super::gemm_prepacked_batch) (MEC's mobile
 /// path: each packed-K tile streams from memory once across all
@@ -239,7 +302,7 @@ pub fn gemm_prepacked_batch_i16(
     a: &[MatRefI16<'_>],
     pb: &PackedBI16,
     c: &mut [MatMut<'_>],
-    scale: f32,
+    ep: Q16Epilogue<'_>,
 ) {
     assert_eq!(a.len(), c.len());
     for (ai, ci) in a.iter().zip(c.iter_mut()) {
@@ -248,9 +311,12 @@ pub fn gemm_prepacked_batch_i16(
         assert_eq!(ci.cols, pb.n);
         scale_c(ci, 0.0);
     }
+    debug_assert!(ep.per_col.is_none_or(|s| s.len() >= pb.n));
     let bs = pb.bs;
     let k = pb.k;
     let n = pb.n;
+    let backend = pb.backend;
+    let nrw = backend.nr();
     SCRATCH_I16.with(|scratch| {
         let packed_a = &mut *scratch.borrow_mut();
         let max_m = a.iter().map(|x| x.rows).max().unwrap_or(0);
@@ -258,7 +324,7 @@ pub fn gemm_prepacked_batch_i16(
         if packed_a.len() < pa_len {
             packed_a.resize(pa_len, 0);
         }
-        let mut acc = [0i32; MR * NR];
+        let mut acc = [0i32; MR * NR_MAX];
         let mut pc = 0;
         let mut pb_idx = 0;
         while pc < k {
@@ -273,30 +339,31 @@ pub fn gemm_prepacked_batch_i16(
                     let mut ic = 0;
                     while ic < m {
                         let mb = bs.mc.min(m - ic);
-                        pack_a_i16(ai.sub(ic, mb, pc, kb), packed_a);
+                        pack_a_i16(ai.sub(ic, mb, pc, kb), &mut packed_a[..]);
                         let mut jr = 0;
                         while jr < nb {
-                            let nr = NR.min(nb - jr);
-                            let bp = &b_tile[(jr / NR) * kb * NR..(jr / NR + 1) * kb * NR];
+                            let nr = nrw.min(nb - jr);
+                            let bp = &b_tile[(jr / nrw) * kb * nrw..(jr / nrw + 1) * kb * nrw];
                             let mut ir = 0;
                             while ir < mb {
                                 let mr = MR.min(mb - ir);
                                 let ap =
                                     &packed_a[(ir / MR) * kb * MR..(ir / MR + 1) * kb * MR];
                                 if mr == MR {
-                                    micro::kernel_i16(ap, bp, kb, &mut acc);
+                                    micro::kernel_i16(backend, ap, bp, kb, &mut acc);
                                 } else {
-                                    micro::kernel_edge_i16(ap, bp, kb, &mut acc, mr);
+                                    micro::kernel_edge_i16(backend, ap, bp, kb, &mut acc, mr);
                                 }
                                 for r in 0..mr {
                                     let crow = (ic + ir + r) * ci.rs + jc + jr;
                                     for col in 0..nr {
-                                        ci.data[crow + col] += scale * acc[r * NR + col] as f32;
+                                        ci.data[crow + col] +=
+                                            ep.at(jc + jr + col) * acc[r * nrw + col] as f32;
                                     }
                                 }
                                 ir += MR;
                             }
-                            jr += NR;
+                            jr += nrw;
                         }
                         ic += bs.mc;
                     }
@@ -310,22 +377,29 @@ pub fn gemm_prepacked_batch_i16(
     });
 }
 
-/// Serial blocked q16 gemm over one row panel: C += scale·(Aq × tiles of
+/// Serial blocked q16 gemm over one row panel: C += ep·(Aq × tiles of
 /// PBq); beta already applied by the caller.
-fn gemm_serial_prepacked_i16(a: MatRefI16<'_>, pb: &PackedBI16, c: &mut MatMut<'_>, scale: f32) {
+fn gemm_serial_prepacked_i16(
+    a: MatRefI16<'_>,
+    pb: &PackedBI16,
+    c: &mut MatMut<'_>,
+    ep: Q16Epilogue<'_>,
+) {
     let (m, k) = (a.rows, a.cols);
     let n = c.cols;
     if m == 0 || n == 0 || k == 0 {
         return;
     }
     let bs = pb.bs;
+    let backend = pb.backend;
+    let nrw = backend.nr();
     SCRATCH_I16.with(|scratch| {
         let packed_a = &mut *scratch.borrow_mut();
         let pa_len = bs.mc.min(m).next_multiple_of(MR) * bs.kc.min(k);
         if packed_a.len() < pa_len {
             packed_a.resize(pa_len, 0);
         }
-        let mut acc = [0i32; MR * NR];
+        let mut acc = [0i32; MR * NR_MAX];
         let mut pc = 0;
         let mut pb_idx = 0;
         while pc < k {
@@ -338,29 +412,30 @@ fn gemm_serial_prepacked_i16(a: MatRefI16<'_>, pb: &PackedBI16, c: &mut MatMut<'
                 let mut ic = 0;
                 while ic < m {
                     let mb = bs.mc.min(m - ic);
-                    pack_a_i16(a.sub(ic, mb, pc, kb), packed_a);
+                    pack_a_i16(a.sub(ic, mb, pc, kb), &mut packed_a[..]);
                     let mut jr = 0;
                     while jr < nb {
-                        let nr = NR.min(nb - jr);
-                        let bp = &b_tile[(jr / NR) * kb * NR..(jr / NR + 1) * kb * NR];
+                        let nr = nrw.min(nb - jr);
+                        let bp = &b_tile[(jr / nrw) * kb * nrw..(jr / nrw + 1) * kb * nrw];
                         let mut ir = 0;
                         while ir < mb {
                             let mr = MR.min(mb - ir);
                             let ap = &packed_a[(ir / MR) * kb * MR..(ir / MR + 1) * kb * MR];
                             if mr == MR {
-                                micro::kernel_i16(ap, bp, kb, &mut acc);
+                                micro::kernel_i16(backend, ap, bp, kb, &mut acc);
                             } else {
-                                micro::kernel_edge_i16(ap, bp, kb, &mut acc, mr);
+                                micro::kernel_edge_i16(backend, ap, bp, kb, &mut acc, mr);
                             }
                             for r in 0..mr {
                                 let crow = (ic + ir + r) * c.rs + jc + jr;
                                 for col in 0..nr {
-                                    c.data[crow + col] += scale * acc[r * NR + col] as f32;
+                                    c.data[crow + col] +=
+                                        ep.at(jc + jr + col) * acc[r * nrw + col] as f32;
                                 }
                             }
                             ir += MR;
                         }
-                        jr += NR;
+                        jr += nrw;
                     }
                     ic += bs.mc;
                 }
@@ -412,7 +487,7 @@ mod tests {
                 MatRefI16::new(&a, m, k),
                 &pb,
                 &mut MatMut::new(&mut got, m, n),
-                scale,
+                Q16Epilogue::uniform(scale),
             );
             let mut want = vec![0.0f32; m * n];
             reference_q15(&MatRefI16::new(&a, m, k), &b, n, &mut want, scale);
@@ -443,7 +518,7 @@ mod tests {
             MatRefI16::new(&a, m, k),
             &pb,
             &mut MatMut::new(&mut want, m, n),
-            scale,
+            Q16Epilogue::uniform(scale),
         );
         for threads in [2usize, 3, 8] {
             let mut got = vec![0.25f32; m * n];
@@ -451,7 +526,7 @@ mod tests {
                 MatRefI16::new(&a, m, k),
                 &pb,
                 &mut MatMut::new(&mut got, m, n),
-                scale,
+                Q16Epilogue::uniform(scale),
                 &Parallelism::new(threads),
             );
             assert_eq!(got, want, "threads={threads}");
@@ -474,7 +549,7 @@ mod tests {
                 MatRefI16::new(abuf, m, k),
                 &pb,
                 &mut MatMut::new(&mut c, m, n),
-                scale,
+                Q16Epilogue::uniform(scale),
             );
             expected.push(c);
         }
@@ -484,11 +559,71 @@ mod tests {
                 a_bufs.iter().map(|v| MatRefI16::new(v, m, k)).collect();
             let mut c_refs: Vec<MatMut<'_>> =
                 c_bufs.iter_mut().map(|v| MatMut::new(v, m, n)).collect();
-            gemm_prepacked_batch_i16(&a_refs, &pb, &mut c_refs, scale);
+            gemm_prepacked_batch_i16(&a_refs, &pb, &mut c_refs, Q16Epilogue::uniform(scale));
         }
         for (got, want) in c_bufs.iter().zip(&expected) {
             assert_eq!(got, want);
         }
+    }
+
+    #[test]
+    fn per_column_scales_apply_to_the_matching_output_column() {
+        // One distinct scale per output column; every path (serial,
+        // threaded, batched) must multiply column j by per_col[j].
+        let mut rng = Rng::new(0x91a);
+        let (m, k, n) = (9, 11, 5);
+        let a = random_q(&mut rng, m * k);
+        let b = random_q(&mut rng, k * n);
+        let bs = BlockSizes { mc: 4, kc: 4, nc: 3 };
+        let pb = PackedBI16::pack(MatRefI16::new(&b, k, n), bs);
+        let global = 2.0e-9f32;
+        let per_col: Vec<f32> = (0..n).map(|j| 1.0 + j as f32 * 0.5).collect();
+        let ep = Q16Epilogue {
+            global,
+            per_col: Some(&per_col),
+        };
+        // Reference: uniform gemm at scale `global`, scaled per column.
+        let mut base = vec![0.0f32; m * n];
+        gemm_prepacked_i16(
+            MatRefI16::new(&a, m, k),
+            &pb,
+            &mut MatMut::new(&mut base, m, n),
+            Q16Epilogue::uniform(global),
+        );
+        let want: Vec<f32> = base
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| v * per_col[i % n])
+            .collect();
+        let mut got = vec![0.0f32; m * n];
+        gemm_prepacked_i16(
+            MatRefI16::new(&a, m, k),
+            &pb,
+            &mut MatMut::new(&mut got, m, n),
+            ep,
+        );
+        for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= w.abs() * 1e-5 + 1e-12,
+                "serial elem {i}: {g} vs {w}"
+            );
+        }
+        let mut got_t = vec![0.0f32; m * n];
+        gemm_prepacked_ex_i16(
+            MatRefI16::new(&a, m, k),
+            &pb,
+            &mut MatMut::new(&mut got_t, m, n),
+            ep,
+            &Parallelism::new(3),
+        );
+        assert_eq!(got_t, got, "threaded per-col path");
+        let mut got_b = vec![1.0f32; m * n];
+        {
+            let a_refs = [MatRefI16::new(&a, m, k)];
+            let mut c_refs = [MatMut::new(&mut got_b, m, n)];
+            gemm_prepacked_batch_i16(&a_refs, &pb, &mut c_refs, ep);
+        }
+        assert_eq!(got_b, got, "batched per-col path");
     }
 
     #[test]
@@ -501,7 +636,12 @@ mod tests {
         let pb = PackedBI16::pack(MatRefI16::new(&b, 7, 4), BlockSizes::default());
         let scale = 1e-9f32;
         let mut got = vec![0.0f32; 6 * 4];
-        gemm_prepacked_i16(a, &pb, &mut MatMut::new(&mut got, 6, 4), scale);
+        gemm_prepacked_i16(
+            a,
+            &pb,
+            &mut MatMut::new(&mut got, 6, 4),
+            Q16Epilogue::uniform(scale),
+        );
         let mut want = vec![0.0f32; 6 * 4];
         reference_q15(&a, &b, 4, &mut want, scale);
         for (&g, &w) in got.iter().zip(&want) {
@@ -511,6 +651,7 @@ mod tests {
 
     #[test]
     fn pack_layouts_mirror_f32_packers() {
+        const NR: usize = 8;
         // pack_a_i16: 3x2 inside rs=4.
         let buf: Vec<i16> = (0..12).collect();
         let a = MatRefI16::strided(&buf, 3, 2, 4);
@@ -522,13 +663,15 @@ mod tests {
         let buf: Vec<i16> = (0..10).collect();
         let b = MatRefI16::strided(&buf, 2, 3, 5);
         let mut out = vec![-1i16; 2 * NR];
-        pack_b_i16(b, &mut out);
+        pack_b_i16(b, &mut out, NR);
         assert_eq!(&out[0..NR], &[0, 1, 2, 0, 0, 0, 0, 0]);
         assert_eq!(&out[NR..2 * NR], &[5, 6, 7, 0, 0, 0, 0, 0]);
     }
 
     #[test]
     fn packed_b_bytes_halve_f32() {
+        // Both packs use the active backend, so strip widths match and
+        // the i16 copy is exactly half the bytes.
         let b: Vec<i16> = vec![1; 16 * 24];
         let pb = PackedBI16::pack(MatRefI16::new(&b, 16, 24), BlockSizes::default());
         let bf: Vec<f32> = vec![1.0; 16 * 24];
@@ -537,6 +680,7 @@ mod tests {
             BlockSizes::default(),
         );
         assert_eq!(pb.bytes() * 2, pf.bytes());
+        assert_eq!(pb.backend(), pf.backend());
     }
 
     #[test]

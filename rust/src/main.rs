@@ -168,6 +168,12 @@ fn cmd_run(args: &mut Args) {
     println!("algorithm: {}", kind.name());
     println!("precision: {precision}");
     println!(
+        "kernel   : {} ({}x{})",
+        report.backend.name(),
+        mec::gemm::micro::MR,
+        report.backend.nr()
+    );
+    println!(
         "build    : {} (one-time: validate + plan + kernel prepack)",
         fmt_ns(build_ns)
     );
@@ -199,6 +205,12 @@ fn cmd_plan(args: &mut Args) {
     let report = &engine.plan_report()[0];
     println!("layer: {}", report.shape.describe());
     println!("precision: {precision}");
+    println!(
+        "kernel: {} ({}x{})",
+        report.backend.name(),
+        mec::gemm::micro::MR,
+        report.backend.nr()
+    );
     println!("budget: {}", fmt_budget(&budget));
     println!("\nadmissible plans:");
     for p in &report.candidates {
@@ -223,8 +235,11 @@ fn cmd_tune(args: &mut Args) {
     let precision = precision_arg(args);
     args.finish();
     println!(
-        "measuring on {} ({precision}, plan-amortized) ...",
-        w.shape(batch, scale).describe()
+        "measuring on {} ({precision}, {} {}x{} kernel, plan-amortized) ...",
+        w.shape(batch, scale).describe(),
+        mec::gemm::KernelBackend::active().name(),
+        mec::gemm::micro::MR,
+        mec::gemm::KernelBackend::active().nr()
     );
     let engine = layer_builder(&w, batch, scale)
         .threads(threads)

@@ -1,0 +1,238 @@
+//! 64-byte-aligned growable buffers for arena and packed-operand storage.
+//!
+//! The SIMD micro-kernels (`gemm::micro`) stream packed A/B strips with
+//! 256/512-bit loads; cache-line alignment keeps every vector load inside
+//! one line and makes the strips friendly to whatever wider ISA the
+//! dispatcher picked. `Vec<f32>` only guarantees 4-byte alignment, so the
+//! arena, workspace, and packed buffers use [`AlignedVec`] instead — a
+//! minimal `Vec` replacement (length + capacity + geometric `resize`)
+//! whose allocation is always [`ALIGN`]-byte aligned.
+//!
+//! Restricted to `T: Copy` element types (`f32`, `i16`): no drop glue, so
+//! truncation and reallocation are plain memcpys.
+
+use std::alloc::{alloc, dealloc, handle_alloc_error, Layout};
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::ptr::NonNull;
+
+/// Allocation alignment: one x86 cache line, and ≥ the widest vector
+/// (64 B = one AVX-512 zmm row).
+pub const ALIGN: usize = 64;
+
+/// A growable, always-[`ALIGN`]-aligned buffer of plain-old-data.
+///
+/// Supports exactly what the memory layer needs — `resize`, slice
+/// access via `Deref`, `Clone` — and nothing else. Capacity never
+/// shrinks; `resize` down is a length change only (same contract the
+/// arena relied on with `Vec`).
+pub struct AlignedVec<T: Copy> {
+    ptr: NonNull<T>,
+    len: usize,
+    cap: usize,
+}
+
+// SAFETY: AlignedVec owns its allocation exclusively (no interior
+// sharing), so it is Send/Sync exactly when the element type is.
+unsafe impl<T: Copy + Send> Send for AlignedVec<T> {}
+unsafe impl<T: Copy + Sync> Sync for AlignedVec<T> {}
+
+impl<T: Copy> AlignedVec<T> {
+    /// An empty buffer; does not allocate.
+    pub const fn new() -> AlignedVec<T> {
+        AlignedVec {
+            ptr: NonNull::dangling(),
+            len: 0,
+            cap: 0,
+        }
+    }
+
+    /// A `value`-filled buffer of `len` elements (the `vec![v; n]`
+    /// shape).
+    pub fn filled(len: usize, value: T) -> AlignedVec<T> {
+        let mut v = AlignedVec::new();
+        v.resize(len, value);
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn layout(cap: usize) -> Layout {
+        // 64 exceeds align_of::<T>() for every element type the crate
+        // stores (f32/i16/i32); Layout checks size overflow for us.
+        Layout::from_size_align(cap * std::mem::size_of::<T>(), ALIGN.max(std::mem::align_of::<T>()))
+            .expect("AlignedVec: layout overflow")
+    }
+
+    /// Grow the allocation to hold at least `needed` elements, copying
+    /// the live prefix. Geometric growth so repeated small `resize`s
+    /// stay amortized-O(1), like `Vec`.
+    fn grow(&mut self, needed: usize) {
+        let new_cap = needed.max(self.cap * 2).max(8);
+        let layout = Self::layout(new_cap);
+        // SAFETY: layout has non-zero size — new_cap >= 8 and `resize`
+        // short-circuits zero-sized element types before calling grow.
+        let new_ptr = unsafe { alloc(layout) as *mut T };
+        let Some(new_nn) = NonNull::new(new_ptr) else {
+            handle_alloc_error(layout);
+        };
+        if self.cap > 0 {
+            // SAFETY: both regions are valid for `self.len` elements and
+            // distinct allocations.
+            unsafe {
+                std::ptr::copy_nonoverlapping(self.ptr.as_ptr(), new_nn.as_ptr(), self.len);
+                dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.cap));
+            }
+        }
+        self.ptr = new_nn;
+        self.cap = new_cap;
+    }
+
+    /// Set the length to `new_len`, filling any newly exposed tail with
+    /// `value`. Never shrinks capacity.
+    pub fn resize(&mut self, new_len: usize, value: T) {
+        if std::mem::size_of::<T>() == 0 {
+            self.len = new_len;
+            return;
+        }
+        if new_len > self.cap {
+            self.grow(new_len);
+        }
+        if new_len > self.len {
+            // SAFETY: capacity covers new_len; the tail is owned,
+            // uninitialized-or-stale POD memory.
+            unsafe {
+                let base = self.ptr.as_ptr();
+                for i in self.len..new_len {
+                    base.add(i).write(value);
+                }
+            }
+        }
+        self.len = new_len;
+        debug_assert!(
+            self.cap == 0 || (self.ptr.as_ptr() as usize) % ALIGN == 0,
+            "AlignedVec: allocation lost {ALIGN}-byte alignment"
+        );
+    }
+
+    /// Drop all elements (length 0; capacity retained).
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+}
+
+impl<T: Copy> Drop for AlignedVec<T> {
+    fn drop(&mut self) {
+        if self.cap > 0 && std::mem::size_of::<T>() > 0 {
+            // SAFETY: allocated in grow() with the same layout recipe.
+            unsafe { dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.cap)) }
+        }
+    }
+}
+
+impl<T: Copy> Deref for AlignedVec<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        // SAFETY: ptr is valid for len initialized elements (dangling
+        // only when len == 0, where a zero-length slice is fine).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl<T: Copy> DerefMut for AlignedVec<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        // SAFETY: as Deref, plus exclusive access through &mut self.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl<T: Copy> Clone for AlignedVec<T> {
+    fn clone(&self) -> AlignedVec<T> {
+        let mut v = AlignedVec::new();
+        if self.len > 0 {
+            v.grow(self.len);
+            // SAFETY: both buffers hold at least len elements.
+            unsafe {
+                std::ptr::copy_nonoverlapping(self.ptr.as_ptr(), v.ptr.as_ptr(), self.len);
+            }
+            v.len = self.len;
+        }
+        v
+    }
+}
+
+impl<T: Copy> Default for AlignedVec<T> {
+    fn default() -> Self {
+        AlignedVec::new()
+    }
+}
+
+impl<T: Copy + fmt::Debug> fmt::Debug for AlignedVec<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_list().entries(self.iter()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_does_not_allocate_and_derefs_to_empty_slice() {
+        let v: AlignedVec<f32> = AlignedVec::new();
+        assert!(v.is_empty());
+        assert_eq!(v.len(), 0);
+        assert_eq!(&v[..], &[] as &[f32]);
+    }
+
+    #[test]
+    fn resize_fills_grows_and_is_cacheline_aligned() {
+        let mut v: AlignedVec<f32> = AlignedVec::new();
+        v.resize(5, 1.5);
+        assert_eq!(&v[..], &[1.5; 5]);
+        assert_eq!(v.as_ptr() as usize % ALIGN, 0);
+        // Grow across several reallocations; prefix survives.
+        v[0] = -2.0;
+        v.resize(1000, 0.25);
+        assert_eq!(v[0], -2.0);
+        assert_eq!(v[1], 1.5);
+        assert_eq!(v[999], 0.25);
+        assert_eq!(v.as_ptr() as usize % ALIGN, 0);
+        // Shrink is a length change; regrow re-exposes filled values.
+        v.resize(2, 9.0);
+        assert_eq!(v.len(), 2);
+        v.resize(3, 7.0);
+        assert_eq!(&v[..], &[-2.0, 1.5, 7.0]);
+    }
+
+    #[test]
+    fn i16_storage_aligns_too() {
+        let mut v: AlignedVec<i16> = AlignedVec::filled(77, -3);
+        assert_eq!(v.len(), 77);
+        assert!(v.iter().all(|&x| x == -3));
+        assert_eq!(v.as_ptr() as usize % ALIGN, 0);
+        v.clear();
+        assert!(v.is_empty());
+        v.resize(4, 2);
+        assert_eq!(&v[..], &[2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn clone_copies_contents_into_a_fresh_aligned_allocation() {
+        let mut v: AlignedVec<f32> = AlignedVec::new();
+        v.resize(9, 3.0);
+        v[4] = -1.0;
+        let w = v.clone();
+        assert_eq!(&w[..], &v[..]);
+        assert_eq!(w.as_ptr() as usize % ALIGN, 0);
+        assert_ne!(w.as_ptr(), v.as_ptr());
+        let empty: AlignedVec<f32> = AlignedVec::new();
+        assert!(empty.clone().is_empty());
+    }
+}

@@ -13,6 +13,7 @@
 //! the global [`tracker`](super::tracker), so tests and benches can assert
 //! the whole-model peak equals the analytic max.
 
+use super::aligned::{AlignedVec, ALIGN};
 use super::tracker;
 
 /// One named region inside a workspace buffer.
@@ -104,15 +105,18 @@ impl WorkspaceLayout {
 /// A tracked, growable scratch buffer shared by every planned layer of a
 /// model. Sized once (high-water) by the planner; the serving hot path
 /// never grows it. Growth and release are recorded in the global tracker.
+/// Storage is 64-byte aligned ([`AlignedVec`]) for the SIMD micro-kernels.
 #[derive(Debug, Default)]
 pub struct Arena {
-    buf: Vec<f32>,
+    buf: AlignedVec<f32>,
 }
 
 impl Arena {
     /// Empty arena (no tracked bytes).
     pub fn new() -> Arena {
-        Arena { buf: Vec::new() }
+        Arena {
+            buf: AlignedVec::new(),
+        }
     }
 
     /// Arena pre-sized to `elems` floats (the planner's sizing path).
@@ -130,6 +134,10 @@ impl Arena {
             tracker::track_alloc(grow * 4);
             self.buf.resize(elems, 0.0);
         }
+        debug_assert!(
+            self.buf.is_empty() || self.buf.as_ptr() as usize % ALIGN == 0,
+            "Arena buffer lost {ALIGN}-byte alignment"
+        );
     }
 
     /// Borrow the first `elems` floats. Contents are stale (whatever the

@@ -19,10 +19,12 @@
 //!   whose workspace would exceed the device budget.
 
 pub mod activation;
+pub mod aligned;
 pub mod arena;
 pub mod tracker;
 
 pub use activation::ActivationArena;
+pub use aligned::{AlignedVec, ALIGN};
 pub use arena::{Arena, Region, WorkspaceLayout};
 pub use tracker::{current_bytes, peak_bytes, MeasureScope};
 
@@ -30,16 +32,20 @@ use std::sync::atomic::Ordering;
 
 /// A tracked scratch buffer of `f32`s. Allocation and release are recorded
 /// in the global [`tracker`]; the buffer is reusable across calls (the
-/// serving hot path allocates once per worker, then reuses).
+/// serving hot path allocates once per worker, then reuses). Storage is
+/// 64-byte aligned ([`AlignedVec`]) so the SIMD micro-kernels get aligned
+/// loads from lowering buffers carved out of it.
 #[derive(Debug)]
 pub struct Workspace {
-    buf: Vec<f32>,
+    buf: AlignedVec<f32>,
 }
 
 impl Workspace {
     /// Empty workspace (no tracked bytes).
     pub fn new() -> Workspace {
-        Workspace { buf: Vec::new() }
+        Workspace {
+            buf: AlignedVec::new(),
+        }
     }
 
     /// Workspace pre-sized to `elems` floats.
@@ -58,6 +64,10 @@ impl Workspace {
             tracker::track_alloc(grow * 4);
             self.buf.resize(elems, 0.0);
         }
+        debug_assert!(
+            self.buf.is_empty() || self.buf.as_ptr() as usize % ALIGN == 0,
+            "Workspace buffer lost {ALIGN}-byte alignment"
+        );
     }
 
     /// Borrow the first `elems` floats (must be reserved), zeroed.

@@ -552,7 +552,9 @@ impl ExecGraph {
                     obs(step.node, conv_in);
                 }
                 let mut out = take_tensor(acts, step.out_slot, out_shape);
-                plan.execute(conv_in, ws, &mut out);
+                // Route the session's (possibly capped) thread budget to
+                // the plan, so `Engine::session_with_threads` is exact.
+                plan.execute_par(conv_in, ws, &mut out, &ctx.par);
                 // Bias (+ fused relu) epilogue: one pass over the output.
                 let kc = kernel.shape().kc;
                 if step.fused_relu {

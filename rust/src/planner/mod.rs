@@ -17,6 +17,7 @@ pub mod autotune;
 pub use autotune::{AutoTuner, Measurement};
 
 use crate::conv::{AlgoKind, ConvContext, ConvPlan, Convolution};
+use crate::gemm::KernelBackend;
 use crate::memory::Budget;
 use crate::tensor::quant::Precision;
 use crate::tensor::{ConvShape, Kernel};
@@ -94,21 +95,45 @@ pub struct CostModel {
     pub ns_per_gemm_call: f64,
     /// ns per complex butterfly in FFT transforms.
     pub ns_per_butterfly: f64,
+    /// The micro-kernel register-tile rows the estimates assume — per
+    /// backend ([`CostModel::for_backend`]), observability for the engine
+    /// report and benches.
+    pub tile_mr: usize,
+    /// The micro-kernel register-tile columns (backend strip width).
+    pub tile_nr: usize,
 }
 
 impl Default for CostModel {
+    /// Calibrated for the micro-kernel backend the runtime dispatch
+    /// selected on this host ([`KernelBackend::active`], overridable via
+    /// `MEC_KERNEL`).
     fn default() -> Self {
-        CostModel {
-            ns_per_mac: 0.45,
-            ns_per_mac_direct: 2.8,
-            ns_per_byte_moved: 0.25,
-            ns_per_gemm_call: 800.0,
-            ns_per_butterfly: 4.0,
-        }
+        CostModel::for_backend(KernelBackend::active())
     }
 }
 
 impl CostModel {
+    /// Coefficients for a specific micro-kernel backend. The scalar base
+    /// (0.45 ns/MAC) was calibrated on the dev host; the explicit SIMD
+    /// tiles multiply GEMM throughput without touching the byte-traffic
+    /// or dispatch terms (lowering is scalar copies either way), so only
+    /// `ns_per_mac` and the advertised tile shape vary per backend.
+    pub fn for_backend(backend: KernelBackend) -> CostModel {
+        let simd = match backend {
+            KernelBackend::Scalar => 1.0,
+            KernelBackend::Avx2 | KernelBackend::Neon => 1.6,
+            KernelBackend::Avx512 => 2.4,
+        };
+        CostModel {
+            ns_per_mac: 0.45 / simd,
+            ns_per_mac_direct: 2.8,
+            ns_per_byte_moved: 0.25,
+            ns_per_gemm_call: 800.0,
+            ns_per_butterfly: 4.0,
+            tile_mr: crate::gemm::micro::MR,
+            tile_nr: backend.nr(),
+        }
+    }
     /// The threading grain derived from this cost model: the same
     /// calibrated coefficients that rank algorithms also decide when a
     /// parallel loop is too small to pay a pool wake-up

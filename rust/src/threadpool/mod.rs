@@ -422,8 +422,9 @@ pub struct GrainModel {
 impl Default for GrainModel {
     fn default() -> GrainModel {
         // Delegate to the calibrated cost model (same crate, no cycle:
-        // CostModel's own Default is a plain literal) so recalibrating
-        // the planner automatically retunes the grain.
+        // CostModel's Default only consults the one-time backend
+        // detection) so recalibrating the planner automatically retunes
+        // the grain.
         crate::planner::CostModel::default().grain_model()
     }
 }

@@ -1,0 +1,272 @@
+//! Cross-backend equivalence suite for the runtime-dispatched GEMM
+//! micro-kernels.
+//!
+//! Every SIMD backend the host can run (`KernelBackend::all_available`,
+//! always including the portable scalar fallback) must agree with the
+//! scalar reference through the full prepacked-GEMM stack — serial,
+//! threaded, and batched — over randomized geometries that exercise
+//! every edge-tile height (`mr` in `1..=MR`) and both strip widths.
+//!
+//! Tolerances:
+//! * **f32: ≤ 4 ULP.** Every backend walks K in the same order, so the
+//!   only divergence is FMA (one rounding) vs mul+add (two). Operands
+//!   are drawn non-negative so the reduction stays well-conditioned and
+//!   that difference is a few ULP of the result, not of a cancelled
+//!   residual.
+//! * **i16: bitwise.** The rounded-Q15 product `(a·b + 2¹⁴) >> 15` is
+//!   exactly what `mulhrs`/`vqrdmulh` compute for operands ≥ −32767, and
+//!   the i32 accumulation is exact — so f32 outputs must be identical
+//!   down to the bit, per-column epilogue included.
+//!
+//! Forcing a backend via `MEC_KERNEL` is process-global (one-time
+//! detection), so that path is covered by the CI leg that reruns the
+//! whole suite under `MEC_KERNEL=scalar` rather than by an in-process
+//! test.
+
+use mec::gemm::micro::MR;
+use mec::gemm::{
+    gemm_prepacked, gemm_prepacked_batch, gemm_prepacked_batch_i16, gemm_prepacked_ex,
+    gemm_prepacked_ex_i16, gemm_prepacked_i16, BlockSizes, KernelBackend, MatMut, MatRef,
+    MatRefI16, PackedB, PackedBI16, Q16Epilogue,
+};
+use mec::threadpool::Parallelism;
+use mec::util::Rng;
+
+/// Geometries spanning the interesting structure: every edge-tile height
+/// (m % MR over 0..MR), sub-strip and multi-strip n for both nr widths
+/// (8 and 16), and K crossing the KC=256 cache-block boundary.
+fn geometries(rng: &mut Rng) -> Vec<(usize, usize, usize)> {
+    let mut gs: Vec<(usize, usize, usize)> = (1..=MR).map(|m| (m, 17, 19)).collect();
+    gs.extend_from_slice(&[
+        (13, 1, 1),
+        (29, 7, 8),
+        (21, 300, 33), // K spans two KC blocks
+        (64, 96, 16),
+    ]);
+    for _ in 0..4 {
+        gs.push((rng.range(1, 70), rng.range(1, 130), rng.range(1, 50)));
+    }
+    gs
+}
+
+fn fill_f32(rng: &mut Rng, len: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; len];
+    // Non-negative: see the module docs on conditioning.
+    rng.fill_uniform(&mut v, 0.05, 1.0);
+    v
+}
+
+fn fill_i16(rng: &mut Rng, len: usize) -> Vec<i16> {
+    let mut f = vec![0.0f32; len];
+    rng.fill_uniform(&mut f, -1.0, 1.0);
+    f.into_iter().map(|x| (x * 32767.0) as i16).collect()
+}
+
+/// Distance in representable-float steps (monotone order-preserving map
+/// of the IEEE-754 bit patterns; finite inputs only).
+fn ulp_diff(a: f32, b: f32) -> u64 {
+    fn ordered(x: f32) -> i64 {
+        let bits = x.to_bits() as i64;
+        if bits & 0x8000_0000 != 0 {
+            0x8000_0000 - bits
+        } else {
+            bits
+        }
+    }
+    (ordered(a) - ordered(b)).unsigned_abs()
+}
+
+fn assert_ulp_close(got: &[f32], want: &[f32], max_ulp: u64, tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: length");
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.is_finite() && w.is_finite(),
+            "{tag}: non-finite at {i}: {g} vs {w}"
+        );
+        let d = ulp_diff(g, w);
+        assert!(d <= max_ulp, "{tag}: elem {i}: {g} vs {w} differ by {d} ULP");
+    }
+}
+
+/// Scalar-packed serial result — the reference every backend is held to.
+fn scalar_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let pb = PackedB::pack_with(MatRef::new(b, k, n), BlockSizes::default(), KernelBackend::Scalar);
+    let mut c = vec![0.0f32; m * n];
+    gemm_prepacked(MatRef::new(a, m, k), &pb, &mut MatMut::new(&mut c, m, n));
+    c
+}
+
+fn scalar_i16(a: &[i16], b: &[i16], m: usize, k: usize, n: usize, ep: Q16Epilogue<'_>) -> Vec<f32> {
+    let pb =
+        PackedBI16::pack_with(MatRefI16::new(b, k, n), BlockSizes::default(), KernelBackend::Scalar);
+    let mut c = vec![0.0f32; m * n];
+    gemm_prepacked_i16(MatRefI16::new(a, m, k), &pb, &mut MatMut::new(&mut c, m, n), ep);
+    c
+}
+
+#[test]
+fn f32_serial_matches_scalar_within_4_ulp_on_every_backend() {
+    let mut rng = Rng::new(0xbac ^ 0x6ec);
+    for (m, k, n) in geometries(&mut rng) {
+        let a = fill_f32(&mut rng, m * k);
+        let b = fill_f32(&mut rng, k * n);
+        let want = scalar_f32(&a, &b, m, k, n);
+        // Sanity-pin the reference itself to an f64 oracle so a bug
+        // shared by every f32 backend cannot self-certify.
+        for r in 0..m {
+            for c in 0..n {
+                let exact: f64 =
+                    (0..k).map(|p| a[r * k + p] as f64 * b[p * n + c] as f64).sum();
+                let got = want[r * n + c] as f64;
+                assert!(
+                    (got - exact).abs() <= 1e-4 * exact.abs().max(1.0),
+                    "scalar reference off f64 oracle at ({r},{c}): {got} vs {exact}"
+                );
+            }
+        }
+        for backend in KernelBackend::all_available() {
+            let pb = PackedB::pack_with(MatRef::new(&b, k, n), BlockSizes::default(), backend);
+            let mut c = vec![0.0f32; m * n];
+            gemm_prepacked(MatRef::new(&a, m, k), &pb, &mut MatMut::new(&mut c, m, n));
+            assert_ulp_close(&c, &want, 4, &format!("{backend} serial {m}x{k}x{n}"));
+        }
+    }
+}
+
+#[test]
+fn f32_threaded_and_batched_match_scalar_within_4_ulp() {
+    let mut rng = Rng::new(0x517);
+    let par = Parallelism::new(3);
+    for (m, k, n) in geometries(&mut rng) {
+        let b = fill_f32(&mut rng, k * n);
+        let batch: Vec<Vec<f32>> = (0..3).map(|_| fill_f32(&mut rng, m * k)).collect();
+        let want: Vec<Vec<f32>> =
+            batch.iter().map(|a| scalar_f32(a, &b, m, k, n)).collect();
+        for backend in KernelBackend::all_available() {
+            let pb = PackedB::pack_with(MatRef::new(&b, k, n), BlockSizes::default(), backend);
+            // Threaded: row panels must partition identically to serial.
+            let mut c = vec![0.0f32; m * n];
+            gemm_prepacked_ex(
+                MatRef::new(&batch[0], m, k),
+                &pb,
+                &mut MatMut::new(&mut c, m, n),
+                &par,
+            );
+            assert_ulp_close(&c, &want[0], 4, &format!("{backend} threaded {m}x{k}x{n}"));
+            // Batched: the batch loop rides inside the tile loops.
+            let mut outs = vec![vec![0.0f32; m * n]; 3];
+            {
+                let avs: Vec<MatRef<'_>> =
+                    batch.iter().map(|a| MatRef::new(a, m, k)).collect();
+                let mut cvs: Vec<MatMut<'_>> =
+                    outs.iter_mut().map(|o| MatMut::new(o, m, n)).collect();
+                gemm_prepacked_batch(&avs, &pb, &mut cvs);
+            }
+            for (i, o) in outs.iter().enumerate() {
+                assert_ulp_close(o, &want[i], 4, &format!("{backend} batch[{i}] {m}x{k}x{n}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn i16_serial_is_bitwise_identical_across_backends() {
+    let mut rng = Rng::new(0x161);
+    for (m, k, n) in geometries(&mut rng) {
+        let a = fill_i16(&mut rng, m * k);
+        let b = fill_i16(&mut rng, k * n);
+        // Per-column epilogue scales: the per-output-channel kernel
+        // scales the conv layer folds in ride this exact path.
+        let col_scales: Vec<f32> = (0..n).map(|c| 0.5 + 0.01 * c as f32).collect();
+        for ep in [
+            Q16Epilogue::uniform(3.7e-4),
+            Q16Epilogue { global: 2.1e-4, per_col: Some(&col_scales) },
+        ] {
+            let want = scalar_i16(&a, &b, m, k, n, ep);
+            for backend in KernelBackend::all_available() {
+                let pb = PackedBI16::pack_with(
+                    MatRefI16::new(&b, k, n),
+                    BlockSizes::default(),
+                    backend,
+                );
+                let mut c = vec![0.0f32; m * n];
+                gemm_prepacked_i16(
+                    MatRefI16::new(&a, m, k),
+                    &pb,
+                    &mut MatMut::new(&mut c, m, n),
+                    ep,
+                );
+                assert_eq!(c, want, "{backend} i16 serial {m}x{k}x{n} not bitwise");
+            }
+        }
+    }
+}
+
+#[test]
+fn i16_threaded_and_batched_are_bitwise_identical_across_backends() {
+    let mut rng = Rng::new(0x171);
+    let par = Parallelism::new(3);
+    for (m, k, n) in geometries(&mut rng) {
+        let b = fill_i16(&mut rng, k * n);
+        let batch: Vec<Vec<i16>> = (0..2).map(|_| fill_i16(&mut rng, m * k)).collect();
+        let ep = Q16Epilogue::uniform(2.9e-4);
+        let want: Vec<Vec<f32>> =
+            batch.iter().map(|a| scalar_i16(a, &b, m, k, n, ep)).collect();
+        for backend in KernelBackend::all_available() {
+            let pb =
+                PackedBI16::pack_with(MatRefI16::new(&b, k, n), BlockSizes::default(), backend);
+            let mut c = vec![0.0f32; m * n];
+            gemm_prepacked_ex_i16(
+                MatRefI16::new(&batch[0], m, k),
+                &pb,
+                &mut MatMut::new(&mut c, m, n),
+                ep,
+                &par,
+            );
+            assert_eq!(c, want[0], "{backend} i16 threaded {m}x{k}x{n} not bitwise");
+            let mut outs = vec![vec![0.0f32; m * n]; 2];
+            {
+                let avs: Vec<MatRefI16<'_>> =
+                    batch.iter().map(|a| MatRefI16::new(a, m, k)).collect();
+                let mut cvs: Vec<MatMut<'_>> =
+                    outs.iter_mut().map(|o| MatMut::new(o, m, n)).collect();
+                gemm_prepacked_batch_i16(&avs, &pb, &mut cvs, ep);
+            }
+            for (i, o) in outs.iter().enumerate() {
+                assert_eq!(o, &want[i], "{backend} i16 batch[{i}] {m}x{k}x{n} not bitwise");
+            }
+        }
+    }
+}
+
+#[test]
+fn conv_plans_carry_the_backend_their_pack_was_built_for() {
+    use mec::conv::{AlgoKind, ConvContext, Convolution};
+    use mec::tensor::{ConvShape, Kernel, KernelShape, Nhwc, Precision, Tensor};
+    let shape = ConvShape::new(
+        Nhwc::new(1, 12, 12, 3),
+        KernelShape::new(3, 3, 3, 8),
+        1,
+        1,
+    );
+    let mut rng = Rng::new(9);
+    let input = Tensor::random(shape.input, &mut rng);
+    let kernel = Kernel::random(shape.kernel, &mut rng);
+    for precision in [Precision::F32, Precision::Q16] {
+        let ctx = ConvContext::server().with_precision(precision);
+        for kind in [AlgoKind::Mec, AlgoKind::Im2col] {
+            let plan = kind.build().plan(&ctx, &shape, &kernel);
+            assert_eq!(
+                plan.kernel_backend(),
+                Some(KernelBackend::active()),
+                "{kind:?}/{precision} plan backend"
+            );
+            // And the plan still computes: smoke-execute through the
+            // public path so a backend/pack mismatch would assert.
+            let mut arena = mec::memory::Arena::new();
+            let mut out = Tensor::zeros(shape.output());
+            plan.execute(&input, &mut arena, &mut out);
+            assert!(out.data().iter().all(|v| v.is_finite()));
+        }
+    }
+}
