@@ -1,0 +1,73 @@
+//! Algorithm-menu sweep: every [`AlgoKind::MENU`] entry on a contrasting
+//! set of fixture geometries — the big-image/strided layer indirect is
+//! built for (cv1), a mid 3×3 layer (cv6), and the pointwise anchors
+//! (pw1/pw2) where kn2row's decomposition degenerates to a single
+//! unshifted GEMM.
+//!
+//! Prints per (layer, algorithm): median execute time, the analytic
+//! workspace, and what the cost-model planner would have picked for the
+//! layer under an unlimited budget — eyeballable cost-model honesty (the
+//! `algo_differential` suite asserts the 1.5× version of the same claim).
+//!
+//! Honors `MEC_BENCH_SCALE`, `MEC_BENCH_FAST`, `MEC_BENCH_MODE`,
+//! `MEC_THREADS` like the fig4 benches.
+
+use mec::bench::bench_conv;
+use mec::bench::harness::{bench_mode, bench_scale, bench_threads, kernel_label, print_table};
+use mec::bench::workload::by_name;
+use mec::bench::BenchOpts;
+use mec::conv::{AlgoKind, ConvContext, Convolution};
+use mec::memory::Budget;
+use mec::planner::Planner;
+use mec::tensor::{Kernel, Tensor};
+use mec::util::Rng;
+
+fn main() {
+    let scale = bench_scale();
+    let mut ctx = ConvContext::mobile();
+    if let Some(t) = bench_threads() {
+        ctx = ctx.with_threads(t);
+    }
+    let opts = BenchOpts::default();
+    let planner = Planner::new();
+    let mut rng = Rng::new(0xa190);
+    println!(
+        "Algorithm menu sweep: {} algorithms, scale={scale}, mode={}, kernel: {}",
+        AlgoKind::MENU.len(),
+        bench_mode().label(),
+        kernel_label()
+    );
+    let mut rows = Vec::new();
+    for name in ["cv1", "cv6", "pw1", "pw2"] {
+        let w = by_name(name).expect("fixture workload");
+        let shape = w.shape(1, scale);
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let mut out = Tensor::zeros(shape.output());
+        let planned = planner.plan(&shape, &Budget::unlimited(), &ctx).algo;
+        for kind in AlgoKind::MENU {
+            let algo = kind.build();
+            if !algo.supports(&shape) {
+                continue;
+            }
+            let label = format!("{name}-{kind}");
+            let r = bench_conv(&label, &opts, &*algo, &ctx, &shape, &input, &kernel, &mut out);
+            rows.push(vec![
+                name.to_string(),
+                kind.to_string(),
+                format!("{:.2}", r.median_ms()),
+                format!("{:.2}", algo.workspace_bytes(&shape) as f64 / 1e6),
+                if kind == planned {
+                    "◀ planned".into()
+                } else {
+                    String::new()
+                },
+            ]);
+        }
+    }
+    print_table(
+        "Menu — median execute (ms) and workspace (MB) per algorithm",
+        &["layer", "algo", "ms", "ws MB", "planner"],
+        &rows,
+    );
+}

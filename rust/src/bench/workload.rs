@@ -129,9 +129,26 @@ pub fn suite() -> Vec<Workload> {
     ]
 }
 
-/// Look up one workload by name.
+/// Non-paper fixtures where the related-work algorithms should win —
+/// kept outside [`suite`] so the Table 2 artifacts stay paper-exact.
+/// These anchor the cost model the way cv1–cv12 anchor Eq. 2/3: if the
+/// planner stops picking the expected winner here, an entry went stale.
+///
+/// * `pw1` — a GoogLeNet-style 1×1 channel-reduction layer: kn2row's
+///   decomposition degenerates to a single unshifted GEMM, so it gets
+///   im2col's compute with zero lowered copy.
+/// * `pw2` — a ResNet-style 1×1 expansion (cv12's grid, 4× channel
+///   growth): same story at a heavier channel count.
+pub fn extras() -> Vec<Workload> {
+    vec![
+        Workload { name: "pw1", ih: 28, iw: 28, ic: 512, kh: 1, kw: 1, kc: 128, s: 1 },
+        Workload { name: "pw2", ih: 7, iw: 7, ic: 512, kh: 1, kw: 1, kc: 2048, s: 1 },
+    ]
+}
+
+/// Look up one workload by name — the paper suite plus [`extras`].
 pub fn by_name(name: &str) -> Option<Workload> {
-    suite().into_iter().find(|w| w.name == name)
+    suite().into_iter().chain(extras()).find(|w| w.name == name)
 }
 
 /// Paper Table 3: ResNet-101 layers with occurrence weights.
@@ -227,6 +244,19 @@ mod tests {
         assert_eq!(full.input.h, s4.input.h);
         assert_eq!(s4.input.c, 64);
         assert_eq!(s4.kernel.kc, 128);
+    }
+
+    #[test]
+    fn extras_stay_out_of_the_paper_suite() {
+        // Table 2 artifacts iterate suite(); the related-work fixtures
+        // must not leak into them.
+        assert_eq!(suite().len(), 12);
+        assert!(suite().iter().all(|w| !w.name.starts_with("pw")));
+        let pw1 = by_name("pw1").unwrap();
+        assert_eq!((pw1.kh, pw1.kw), (1, 1));
+        let shape = pw1.shape(1, 1);
+        assert_eq!((shape.oh(), shape.ow()), (28, 28));
+        assert!(by_name("pw2").is_some());
     }
 
     #[test]

@@ -1,0 +1,404 @@
+//! Indirect convolution (Dukhan, "The Indirect Convolution Algorithm")
+//! — im2col's GEMM without im2col's lowered matrix.
+//!
+//! The plan builds an **indirection buffer**: one input offset per
+//! `(o_h, k_h, k_w)` triple, pointing at the `i_c`-channel input pixel
+//! that output row `y`'s receptive field reads at kernel position
+//! `(u, v)` when `x = 0` (the `x` dimension is a fixed `+x·s_w·i_c`
+//! displacement, and the batch dimension a fixed sample stride, so
+//! neither needs its own entries). That is `O(k_h·k_w·o_h)` pointer
+//! memory — independent of batch, width, and of Eq. 2's lowering size.
+//!
+//! Execute gathers one output row's receptive field at a time through
+//! the offset table into a small strip (at most [`GATHER_LANES`] strips
+//! ride in the arena, one per parallel task) and runs the same prepacked
+//! kernel GEMM as im2col over it. Workspace is `lanes·o_w·k_h·k_w·i_c`
+//! — versus im2col's `i_n·o_h·o_w·k_h·k_w·i_c` — while keeping im2col's
+//! arithmetic intensity per row. Under q16 the gather quantizes in the
+//! same pass (exactly like im2col's quantize-while-lowering), halving
+//! the strip bytes.
+
+use super::{
+    downcast_prepack, AlgoKind, ConvContext, ConvPlan, Convolution, KernelPrepack, PackedKernel,
+};
+use crate::gemm::{
+    gemm_prepacked, gemm_prepacked_i16, split_ranges, KernelBackend, MatMut, MatRef, MatRefI16,
+    Q16Epilogue,
+};
+use crate::memory::WorkspaceLayout;
+use crate::tensor::quant::{f32_as_i16_mut, i16_slots, Precision, QParams};
+use crate::tensor::{ConvShape, Kernel, Tensor};
+use crate::threadpool::{Parallelism, SharedSlice};
+use std::sync::Arc;
+
+/// Upper bound on concurrent gather strips (and thus on the tasks the
+/// row loop splits into). Fixed at plan time — not derived from the
+/// context's thread budget — so the workspace layout, and the
+/// task-to-row partitioning that makes results bitwise identical at any
+/// thread count, never change under a session thread cap.
+pub const GATHER_LANES: usize = 8;
+
+pub struct IndirectConv;
+
+/// Strips (= parallel tasks) for a geometry: one per output row up to
+/// the cap.
+fn lanes(shape: &ConvShape) -> usize {
+    GATHER_LANES.min(shape.input.n * shape.oh()).max(1)
+}
+
+/// Elements of one gather strip: a full lowered row block for one
+/// output row (`o_w` GEMM rows of `k_h·k_w·i_c`).
+fn strip_elems(shape: &ConvShape) -> usize {
+    let k = shape.kernel;
+    shape.ow() * k.kh * k.kw * k.ic
+}
+
+/// The indirection buffer: `offsets[(y·k_h + u)·k_w + v]` is the
+/// sample-relative element offset of input pixel `(y·s_h + u, v)` —
+/// output row `y`'s read at kernel position `(u, v)`, output column 0.
+fn offset_table(shape: &ConvShape) -> Vec<usize> {
+    let k = shape.kernel;
+    let ish = shape.input;
+    let mut offsets = Vec::with_capacity(shape.oh() * k.kh * k.kw);
+    for y in 0..shape.oh() {
+        for u in 0..k.kh {
+            for v in 0..k.kw {
+                offsets.push(((y * shape.sh + u) * ish.w + v) * ish.c);
+            }
+        }
+    }
+    offsets
+}
+
+impl Convolution for IndirectConv {
+    fn name(&self) -> &'static str {
+        "indirect"
+    }
+
+    fn supports(&self, _shape: &ConvShape) -> bool {
+        true
+    }
+
+    /// `lanes · o_w · k_h·k_w·i_c` floats — one lowered row block per
+    /// concurrent task, constant in `i_n·o_h` once past the lane cap
+    /// (≤ im2col's Eq. 2 by construction, equal only when the whole
+    /// image has ≤ [`GATHER_LANES`] output rows).
+    fn workspace_elems(&self, shape: &ConvShape) -> usize {
+        lanes(shape) * strip_elems(shape)
+    }
+
+    /// q16 gathers into i16 lanes: half the strip bytes, like im2col's
+    /// halved lowered matrix.
+    fn workspace_bytes_prec(&self, shape: &ConvShape, precision: Precision) -> usize {
+        match precision {
+            Precision::F32 => self.workspace_bytes(shape),
+            Precision::Q16 => i16_slots(self.workspace_elems(shape)) * 4,
+        }
+    }
+
+    fn prepack(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        kernel: &Kernel,
+    ) -> Arc<dyn KernelPrepack> {
+        // Same GEMM B-operand as im2col (the kernel matrix is identical);
+        // the indirection buffer is geometry-, not kernel-side, and lives
+        // in the plan so batch-size sharing stays exact.
+        Arc::new(PackedKernel::pack(ctx, shape, kernel))
+    }
+
+    fn plan_shared(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        prepack: Arc<dyn KernelPrepack>,
+    ) -> Box<dyn ConvPlan> {
+        let packed_k: Arc<PackedKernel> = downcast_prepack(prepack, "indirect");
+        let mut layout = WorkspaceLayout::new();
+        match &*packed_k {
+            PackedKernel::F32(_) => {
+                layout.push("gather", lanes(shape) * strip_elems(shape));
+            }
+            PackedKernel::Q16 { .. } => {
+                layout.push_i16("gather", lanes(shape) * strip_elems(shape));
+            }
+        }
+        Box::new(IndirectPlan {
+            ctx: ctx.clone(),
+            shape: *shape,
+            offsets: offset_table(shape),
+            packed_k,
+            layout,
+        })
+    }
+}
+
+/// Plan for indirect convolution: the shared prepacked kernel matrix +
+/// the plan-resident indirection buffer + per-lane gather strips.
+pub struct IndirectPlan {
+    ctx: ConvContext,
+    shape: ConvShape,
+    /// The indirection buffer (see [`offset_table`]): `o_h·k_h·k_w`
+    /// entries, plan-resident — the pointer memory the algorithm trades
+    /// for im2col's lowering.
+    offsets: Vec<usize>,
+    packed_k: Arc<PackedKernel>,
+    layout: WorkspaceLayout,
+}
+
+impl ConvPlan for IndirectPlan {
+    fn algo(&self) -> AlgoKind {
+        AlgoKind::Indirect
+    }
+
+    fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+
+    fn layout(&self) -> &WorkspaceLayout {
+        &self.layout
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.packed_k.bytes() + self.offsets.len() * std::mem::size_of::<usize>()
+    }
+
+    fn shared_prepack(&self) -> Option<Arc<dyn KernelPrepack>> {
+        Some(Arc::clone(&self.packed_k) as Arc<dyn KernelPrepack>)
+    }
+
+    fn kernel_backend(&self) -> Option<KernelBackend> {
+        Some(self.packed_k.backend())
+    }
+
+    fn execute_in(&self, input: &Tensor, scratch: &mut [f32], output: &mut Tensor) {
+        self.execute_with(&self.ctx, input, scratch, output);
+    }
+
+    fn execute_in_par(
+        &self,
+        input: &Tensor,
+        scratch: &mut [f32],
+        output: &mut Tensor,
+        par: &Parallelism,
+    ) {
+        // Session thread cap: clamp into the plan-time budget, sharing
+        // the plan's pool (see MecPlan::execute_in_par).
+        let ctx = self
+            .ctx
+            .clone()
+            .with_parallelism(self.ctx.par.with_budget(par.threads()));
+        self.execute_with(&ctx, input, scratch, output);
+    }
+}
+
+impl IndirectPlan {
+    fn execute_with(
+        &self,
+        ctx: &ConvContext,
+        input: &Tensor,
+        scratch: &mut [f32],
+        output: &mut Tensor,
+    ) {
+        let s = self.shape;
+        let k = s.kernel;
+        let (oh, ow) = (s.oh(), s.ow());
+        let ish = s.input;
+        assert_eq!(output.shape(), s.output());
+        assert_eq!(input.shape(), ish);
+        let rows = ish.n * oh;
+        let row_len = k.kh * k.kw * k.ic;
+        let strip = strip_elems(&s);
+        let nlanes = lanes(&s);
+        let sample = ish.h * ish.w * ish.c;
+
+        let in_data = input.data();
+        let offsets = &self.offsets;
+        let out = SharedSlice::new(output.data_mut());
+        // Fixed task-per-lane partitioning (not per-thread): lane `t`
+        // owns a contiguous range of (n, y) output rows and strip `t`,
+        // so results are bitwise identical at any thread count.
+        let ranges = split_ranges(rows, nlanes);
+        let lane_macs = rows.div_ceil(nlanes) * ow * row_len * k.kc;
+
+        match &*self.packed_k {
+            PackedKernel::F32(pk) => {
+                let gp = SharedSlice::new(&mut scratch[..nlanes * strip]);
+                ctx.par.parallel_for_macs(ranges.len(), lane_macs, |t| {
+                    let (r0, r1) = ranges[t];
+                    let g: &mut [f32] = gp.slice();
+                    let lane = &mut g[t * strip..(t + 1) * strip];
+                    let out_data: &mut [f32] = out.slice();
+                    for r in r0..r1 {
+                        let (n, y) = (r / oh, r % oh);
+                        let base = n * sample;
+                        let otab = &offsets[y * k.kh * k.kw..(y + 1) * k.kh * k.kw];
+                        for x in 0..ow {
+                            let dst = &mut lane[x * row_len..(x + 1) * row_len];
+                            let dx = x * s.sw * ish.c;
+                            for (j, &off) in otab.iter().enumerate() {
+                                let src = base + off + dx;
+                                dst[j * k.ic..(j + 1) * k.ic]
+                                    .copy_from_slice(&in_data[src..src + k.ic]);
+                            }
+                        }
+                        let a = MatRef::new(lane, ow, row_len);
+                        let c_rows = &mut out_data[r * ow * k.kc..(r + 1) * ow * k.kc];
+                        let mut c = MatMut::new(c_rows, ow, k.kc);
+                        gemm_prepacked(a, pk, &mut c);
+                    }
+                });
+            }
+            PackedKernel::Q16 { packed, col_scales } => {
+                let qa = ctx
+                    .act_qparams
+                    .unwrap_or_else(|| QParams::from_slice(input.data()));
+                let ep = Q16Epilogue {
+                    global: qa.scale * 32768.0,
+                    per_col: Some(col_scales),
+                };
+                let slots = i16_slots(nlanes * strip);
+                let g16 = &mut f32_as_i16_mut(&mut scratch[..slots])[..nlanes * strip];
+                let gp = SharedSlice::new(g16);
+                ctx.par.parallel_for_macs(ranges.len(), lane_macs, |t| {
+                    let (r0, r1) = ranges[t];
+                    let g: &mut [i16] = gp.slice();
+                    let lane = &mut g[t * strip..(t + 1) * strip];
+                    let out_data: &mut [f32] = out.slice();
+                    for r in r0..r1 {
+                        let (n, y) = (r / oh, r % oh);
+                        let base = n * sample;
+                        let otab = &offsets[y * k.kh * k.kw..(y + 1) * k.kh * k.kw];
+                        for x in 0..ow {
+                            let dst = &mut lane[x * row_len..(x + 1) * row_len];
+                            let dx = x * s.sw * ish.c;
+                            for (j, &off) in otab.iter().enumerate() {
+                                let src = base + off + dx;
+                                for (d, &v) in dst[j * k.ic..(j + 1) * k.ic]
+                                    .iter_mut()
+                                    .zip(&in_data[src..src + k.ic])
+                                {
+                                    *d = qa.quantize(v);
+                                }
+                            }
+                        }
+                        let a = MatRefI16::new(lane, ow, row_len);
+                        let c_rows = &mut out_data[r * ow * k.kc..(r + 1) * ow * k.kc];
+                        let mut c = MatMut::new(c_rows, ow, k.kc);
+                        gemm_prepacked_i16(a, packed, &mut c, ep);
+                    }
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct::Direct;
+    use crate::memory::Workspace;
+    use crate::tensor::{KernelShape, Nhwc};
+    use crate::util::{assert_allclose, Rng};
+
+    #[test]
+    fn offset_table_is_oh_khkw_and_points_at_receptive_fields() {
+        let shape = ConvShape::new(Nhwc::new(1, 9, 8, 3), KernelShape::new(3, 2, 3, 4), 2, 1);
+        let t = offset_table(&shape);
+        assert_eq!(t.len(), shape.oh() * 3 * 2);
+        // Entry (y, u, v) points at input pixel (y·s_h + u, v) of an
+        // 8-wide, 3-channel image.
+        let (y, u, v) = (1usize, 2usize, 1usize);
+        assert_eq!(t[(y * 3 + u) * 2 + v], ((y * 2 + u) * 8 + v) * 3);
+    }
+
+    #[test]
+    fn workspace_is_lane_strips_not_eq2() {
+        // cv1 geometry: the lowering would be 55·55 rows; indirect keeps 8.
+        let shape = ConvShape::new(
+            Nhwc::new(1, 227, 227, 3),
+            KernelShape::new(11, 11, 3, 96),
+            4,
+            4,
+        );
+        assert_eq!(
+            IndirectConv.workspace_elems(&shape),
+            8 * 55 * 11 * 11 * 3
+        );
+        assert!(IndirectConv.workspace_elems(&shape) < shape.im2col_lowered_elems());
+        // Tiny images degrade to im2col's footprint, never above it.
+        let tiny = ConvShape::new(Nhwc::new(1, 4, 4, 2), KernelShape::new(3, 3, 2, 2), 1, 1);
+        assert_eq!(
+            IndirectConv.workspace_elems(&tiny),
+            tiny.im2col_lowered_elems()
+        );
+    }
+
+    #[test]
+    fn matches_direct_on_random_geometries() {
+        let mut rng = Rng::new(31);
+        for (n, ih, iw, ic, kh, kw, kc, sh, sw) in [
+            (1usize, 7, 7, 1, 3, 3, 1, 1, 1),
+            (2, 9, 8, 3, 3, 2, 4, 2, 1),
+            (1, 12, 12, 2, 5, 5, 3, 2, 2),
+            (3, 6, 6, 4, 1, 1, 8, 1, 1),
+            (1, 11, 5, 2, 4, 3, 2, 3, 2),
+        ] {
+            let shape = ConvShape::new(
+                Nhwc::new(n, ih, iw, ic),
+                KernelShape::new(kh, kw, ic, kc),
+                sh,
+                sw,
+            );
+            let input = Tensor::random(shape.input, &mut rng);
+            let kernel = Kernel::random(shape.kernel, &mut rng);
+            let ctx = ConvContext::default().with_threads(2);
+            let mut want = Tensor::zeros(shape.output());
+            let mut got = Tensor::zeros(shape.output());
+            let mut ws = Workspace::new();
+            Direct.run(&ctx, &shape, &input, &kernel, &mut ws, &mut want);
+            IndirectConv.run(&ctx, &shape, &input, &kernel, &mut ws, &mut got);
+            assert_allclose(got.data(), want.data(), 1e-4, &shape.describe());
+        }
+    }
+
+    #[test]
+    fn q16_matches_direct_within_quantization_noise() {
+        let shape = ConvShape::new(Nhwc::new(2, 10, 9, 3), KernelShape::new(3, 3, 3, 5), 1, 2);
+        let mut rng = Rng::new(0x71);
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let mut want = Tensor::zeros(shape.output());
+        Direct.run(
+            &ConvContext::default(),
+            &shape,
+            &input,
+            &kernel,
+            &mut Workspace::new(),
+            &mut want,
+        );
+        for threads in [1usize, 3] {
+            let ctx = ConvContext::default()
+                .with_threads(threads)
+                .with_precision(Precision::Q16);
+            let plan = IndirectConv.plan(&ctx, &shape, &kernel);
+            // Plain Vec scratch (not a tracked Arena): unit tests must not
+            // perturb the global tracker the memory tests assert against.
+            let mut scratch = vec![0.0f32; plan.workspace_elems()];
+            let mut got = Tensor::zeros(shape.output());
+            plan.execute_in(&input, &mut scratch, &mut got);
+            assert_allclose(got.data(), want.data(), 1e-3, &format!("q16 t={threads}"));
+        }
+    }
+
+    #[test]
+    fn plan_reports_offset_table_in_resident_bytes() {
+        let shape = ConvShape::new(Nhwc::new(1, 9, 9, 2), KernelShape::new(3, 3, 2, 4), 1, 1);
+        let kernel = Kernel::zeros(shape.kernel);
+        let plan = IndirectConv.plan(&ConvContext::default(), &shape, &kernel);
+        let table_bytes = shape.oh() * 3 * 3 * std::mem::size_of::<usize>();
+        assert!(plan.resident_bytes() >= table_bytes);
+        assert_eq!(plan.workspace_elems(), IndirectConv.workspace_elems(&shape));
+    }
+}

@@ -1,0 +1,284 @@
+//! kn2row convolution (Anderson et al., "Low-memory GEMM-based
+//! convolution algorithms for deep neural networks") — the accumulating
+//! variant.
+//!
+//! A k_h×k_w convolution is k_h·k_w pointwise (1×1) convolutions whose
+//! outputs land shifted by (u, v). Each pointwise conv is a GEMM with
+//! the input pixels as A (`o_w × i_c`, row stride `s_w·i_c`) and kernel
+//! position (u, v)'s `i_c × k_c` slice as B — in NHWC that slice is a
+//! contiguous block of the kernel tensor, so all k_h·k_w B-operands are
+//! prepacked at plan time with no rearrangement. Execute accumulates
+//! the shifted products **directly into the output rows**
+//! ([`gemm_prepacked_beta`]: beta=0 on the first position, 1 after), so
+//! the algorithm's workspace is exactly zero — the limiting case of the
+//! family's "near-zero workspace" claim, with the accumulator being the
+//! output itself rather than an arena region.
+//!
+//! Where it wins: 1×1-heavy geometries (the decomposition is a single
+//! unshifted GEMM — im2col's result without im2col's lowered copy of
+//! the input) and any tight-budget geometry where direct would
+//! otherwise be the only admissible choice. f32-only: the i16 GEMM
+//! substrate has no accumulating epilogue (requantizing partial sums
+//! per kernel position would compound rounding), so the planner
+//! excludes it under q16.
+
+use super::{downcast_prepack, AlgoKind, ConvContext, ConvPlan, Convolution, KernelPrepack};
+use crate::gemm::{gemm_prepacked_beta, KernelBackend, MatMut, MatRef, PackedB};
+use crate::memory::WorkspaceLayout;
+use crate::tensor::{ConvShape, Kernel, Tensor};
+use crate::threadpool::{Parallelism, SharedSlice};
+use std::any::Any;
+use std::sync::Arc;
+
+pub struct Kn2row;
+
+/// kn2row's prepack: kernel position (u, v) ↦ packed `i_c × k_c` GEMM
+/// B-operand, in (u·k_w + v) order. Batch-independent, Arc-shared across
+/// per-batch-size plans like every other prepack.
+pub struct Kn2rowPrepack {
+    pub slices: Vec<PackedB>,
+}
+
+impl KernelPrepack for Kn2rowPrepack {
+    fn bytes(&self) -> usize {
+        self.slices.iter().map(|p| p.bytes()).sum()
+    }
+
+    fn into_any_arc(self: Arc<Self>) -> Arc<dyn Any + Send + Sync> {
+        self
+    }
+}
+
+impl Convolution for Kn2row {
+    fn name(&self) -> &'static str {
+        "kn2row"
+    }
+
+    fn supports(&self, _shape: &ConvShape) -> bool {
+        true
+    }
+
+    /// Zero: the shifted 1×1 products accumulate in the output tensor
+    /// itself (see module docs) — kn2row shares direct's end of the
+    /// paper's memory/performance trade-off while keeping GEMM compute.
+    fn workspace_elems(&self, _shape: &ConvShape) -> usize {
+        0
+    }
+
+    fn prepack(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        kernel: &Kernel,
+    ) -> Arc<dyn KernelPrepack> {
+        assert_eq!(kernel.shape(), shape.kernel);
+        let k = shape.kernel;
+        let data = kernel.data();
+        let block = k.ic * k.kc;
+        let slices = (0..k.kh * k.kw)
+            .map(|p| {
+                // NHWC kernel layout: position (u, v)'s i_c×k_c slice is
+                // the contiguous block starting at index (u·k_w+v)·i_c·k_c.
+                PackedB::pack(MatRef::new(&data[p * block..(p + 1) * block], k.ic, k.kc), ctx.blocks)
+            })
+            .collect();
+        Arc::new(Kn2rowPrepack { slices })
+    }
+
+    fn plan_shared(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        prepack: Arc<dyn KernelPrepack>,
+    ) -> Box<dyn ConvPlan> {
+        let prepack: Arc<Kn2rowPrepack> = downcast_prepack(prepack, "kn2row");
+        let k = shape.kernel;
+        assert_eq!(prepack.slices.len(), k.kh * k.kw);
+        assert!(prepack.slices.iter().all(|p| p.k == k.ic && p.n == k.kc));
+        Box::new(Kn2rowPlan {
+            ctx: ctx.clone(),
+            shape: *shape,
+            prepack,
+            layout: WorkspaceLayout::new(),
+        })
+    }
+}
+
+/// Plan for kn2row: k_h·k_w prepacked pointwise B-operands; empty
+/// workspace layout (the output is the accumulator).
+pub struct Kn2rowPlan {
+    ctx: ConvContext,
+    shape: ConvShape,
+    prepack: Arc<Kn2rowPrepack>,
+    layout: WorkspaceLayout,
+}
+
+impl ConvPlan for Kn2rowPlan {
+    fn algo(&self) -> AlgoKind {
+        AlgoKind::Kn2row
+    }
+
+    fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+
+    fn layout(&self) -> &WorkspaceLayout {
+        &self.layout
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.prepack.bytes()
+    }
+
+    fn shared_prepack(&self) -> Option<Arc<dyn KernelPrepack>> {
+        Some(Arc::clone(&self.prepack) as Arc<dyn KernelPrepack>)
+    }
+
+    fn kernel_backend(&self) -> Option<KernelBackend> {
+        self.prepack.slices.first().map(|p| p.backend())
+    }
+
+    fn execute_in(&self, input: &Tensor, _scratch: &mut [f32], output: &mut Tensor) {
+        self.execute_with(&self.ctx, input, output);
+    }
+
+    fn execute_in_par(
+        &self,
+        input: &Tensor,
+        _scratch: &mut [f32],
+        output: &mut Tensor,
+        par: &Parallelism,
+    ) {
+        // Session thread cap: clamp into the plan-time budget, sharing
+        // the plan's pool (see MecPlan::execute_in_par).
+        let ctx = self
+            .ctx
+            .clone()
+            .with_parallelism(self.ctx.par.with_budget(par.threads()));
+        self.execute_with(&ctx, input, output);
+    }
+}
+
+impl Kn2rowPlan {
+    fn execute_with(&self, ctx: &ConvContext, input: &Tensor, output: &mut Tensor) {
+        let s = self.shape;
+        let k = s.kernel;
+        let (oh, ow) = (s.oh(), s.ow());
+        let ish = s.input;
+        assert_eq!(output.shape(), s.output());
+        assert_eq!(input.shape(), ish);
+
+        let in_data = input.data();
+        let slices = &self.prepack.slices;
+        let out = SharedSlice::new(output.data_mut());
+
+        // Parallelize over (n, o_h): each task owns a disjoint output
+        // row and runs its k_h·k_w accumulating pointwise GEMMs in a
+        // fixed (u, v) order, so results are bitwise identical at any
+        // thread count. Grain: the full row's MACs.
+        let row_macs = ow * k.kh * k.kw * k.ic * k.kc;
+        ctx.par.parallel_for_macs(ish.n * oh, row_macs, |r| {
+            let (n, y) = (r / oh, r % oh);
+            let out_data: &mut [f32] = out.slice();
+            let c_rows = &mut out_data[r * ow * k.kc..(r + 1) * ow * k.kc];
+            for u in 0..k.kh {
+                for v in 0..k.kw {
+                    // A = the o_w input pixels this row reads at kernel
+                    // position (u, v): row stride s_w·i_c walks x.
+                    let a0 = ish.index(n, y * s.sh + u, v, 0);
+                    let a = MatRef::strided(&in_data[a0..], ow, k.ic, s.sw * ish.c);
+                    let mut c = MatMut::new(c_rows, ow, k.kc);
+                    // First position overwrites (stale output is never
+                    // read), the rest accumulate the shifted products.
+                    let beta = if u == 0 && v == 0 { 0.0 } else { 1.0 };
+                    gemm_prepacked_beta(a, &slices[u * k.kw + v], &mut c, beta);
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct::Direct;
+    use crate::memory::Workspace;
+    use crate::tensor::{KernelShape, Nhwc};
+    use crate::util::{assert_allclose, Rng};
+
+    #[test]
+    fn zero_workspace_like_direct() {
+        let shape = ConvShape::new(Nhwc::new(1, 9, 9, 4), KernelShape::new(3, 3, 4, 8), 1, 1);
+        assert_eq!(Convolution::workspace_elems(&Kn2row, &shape), 0);
+        let kernel = Kernel::zeros(shape.kernel);
+        let plan = Kn2row.plan(&ConvContext::default(), &shape, &kernel);
+        assert_eq!(plan.workspace_elems(), 0);
+        assert!(plan.layout().regions().is_empty());
+        // The resident prepack is the k_h·k_w pointwise slices — same
+        // operand count as the kernel itself, just re-blocked.
+        assert!(plan.resident_bytes() >= shape.kernel.len() * 4);
+    }
+
+    #[test]
+    fn one_by_one_kernel_is_a_single_unshifted_gemm() {
+        // The decomposition's best case: 1×1 conv = exactly one GEMM and
+        // the shifted-accumulation loop degenerates to beta=0.
+        let shape = ConvShape::new(Nhwc::new(2, 6, 6, 4), KernelShape::new(1, 1, 4, 8), 1, 1);
+        let mut rng = Rng::new(41);
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let ctx = ConvContext::default();
+        let mut want = Tensor::zeros(shape.output());
+        let mut got = Tensor::zeros(shape.output());
+        let mut ws = Workspace::new();
+        Direct.run(&ctx, &shape, &input, &kernel, &mut ws, &mut want);
+        Kn2row.run(&ctx, &shape, &input, &kernel, &mut ws, &mut got);
+        assert_allclose(got.data(), want.data(), 1e-4, &shape.describe());
+    }
+
+    #[test]
+    fn matches_direct_on_random_geometries() {
+        let mut rng = Rng::new(42);
+        for (n, ih, iw, ic, kh, kw, kc, sh, sw) in [
+            (1usize, 7, 7, 1, 3, 3, 1, 1, 1),
+            (2, 9, 8, 3, 3, 2, 4, 2, 1),
+            (1, 12, 12, 2, 5, 5, 3, 2, 2),
+            (3, 6, 6, 4, 1, 1, 8, 1, 1),
+            (1, 11, 5, 2, 4, 3, 2, 3, 2),
+        ] {
+            let shape = ConvShape::new(
+                Nhwc::new(n, ih, iw, ic),
+                KernelShape::new(kh, kw, ic, kc),
+                sh,
+                sw,
+            );
+            let input = Tensor::random(shape.input, &mut rng);
+            let kernel = Kernel::random(shape.kernel, &mut rng);
+            let ctx = ConvContext::default().with_threads(2);
+            let mut want = Tensor::zeros(shape.output());
+            let mut got = Tensor::zeros(shape.output());
+            let mut ws = Workspace::new();
+            Direct.run(&ctx, &shape, &input, &kernel, &mut ws, &mut want);
+            Kn2row.run(&ctx, &shape, &input, &kernel, &mut ws, &mut got);
+            assert_allclose(got.data(), want.data(), 1e-4, &shape.describe());
+        }
+    }
+
+    #[test]
+    fn stale_output_is_never_read() {
+        // beta=0 on the first kernel position must overwrite whatever the
+        // output tensor held — accumulating into garbage would only show
+        // up on reuse, not first run.
+        let shape = ConvShape::new(Nhwc::new(1, 7, 7, 2), KernelShape::new(3, 3, 2, 3), 2, 2);
+        let mut rng = Rng::new(43);
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let ctx = ConvContext::default();
+        let plan = Kn2row.plan(&ctx, &shape, &kernel);
+        let mut first = Tensor::zeros(shape.output());
+        plan.execute_in(&input, &mut [], &mut first);
+        let mut dirty = Tensor::from_fn(shape.output(), |_, _, _, _| 1e6);
+        plan.execute_in(&input, &mut [], &mut dirty);
+        assert_eq!(first, dirty);
+    }
+}

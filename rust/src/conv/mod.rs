@@ -10,6 +10,15 @@
 //! | [`winograd`]| Wino.cpu / Wino.gpu   | F(2×2, 3×3) baseline |
 //! | [`fft_conv`]| FFT.gpu               | frequency-domain baseline |
 //!
+//! Beyond the paper's own systems, the menu carries the related-work
+//! lowering strategies the planner chooses among per geometry:
+//!
+//! | module      | origin                               | role |
+//! |-------------|--------------------------------------|------|
+//! | [`indirect`]| Indirect Convolution (Dukhan)        | pointer-buffer gather, O(k²·o_h) plan memory |
+//! | [`kn2row`]  | kn2row (Anderson et al.)             | 1×1-decomposed accumulating GEMM, zero workspace |
+//! | [`smm`]     | SMM-Conv-style scalar streaming      | zero-packing scalar×row accumulation |
+//!
 //! # Plan / execute split
 //!
 //! The API is two-phase, cuDNN-graph style (see `ARCHITECTURE.md`):
@@ -35,7 +44,10 @@
 pub mod direct;
 pub mod fft_conv;
 pub mod im2col;
+pub mod indirect;
+pub mod kn2row;
 pub mod mec;
+pub mod smm;
 pub mod winograd;
 pub mod winograd_chunked;
 
@@ -468,6 +480,18 @@ pub enum AlgoKind {
     /// Tile-chunked F(2×2,3×3) — the paper's memory-optimized Wino.cpu.
     WinogradChunked,
     Fft,
+    /// Indirect Convolution (Dukhan): plan-time offset buffer into the
+    /// input replaces im2col's lowered matrix; execute gathers one
+    /// fixed-size row strip per task and GEMMs it against the shared
+    /// prepacked kernel. Pointer memory is O(k_h·k_w·o_h), independent of
+    /// batch and lowering size.
+    Indirect,
+    /// kn2row (Anderson et al.): the k×k conv as k² accumulating 1×1
+    /// GEMMs shifted into the output — near-zero workspace.
+    Kn2row,
+    /// SMM-Conv-style scalar-matrix accumulation: zero packing, zero
+    /// workspace, streaming over kernel positions.
+    SmmConv,
 }
 
 /// Error for [`AlgoKind::from_str`]: the offending input plus the list of
@@ -479,7 +503,7 @@ impl std::fmt::Display for ParseAlgoError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "unknown algorithm {:?} (expected one of: direct, im2col, mec, mec-a, mec-b, winograd, winograd-chunked, fft)",
+            "unknown algorithm {:?} (expected one of: direct, im2col, mec, mec-a, mec-b, winograd, winograd-chunked, fft, indirect, kn2row, smm)",
             self.0
         )
     }
@@ -488,7 +512,7 @@ impl std::fmt::Display for ParseAlgoError {
 impl std::error::Error for ParseAlgoError {}
 
 impl AlgoKind {
-    pub const ALL: [AlgoKind; 8] = [
+    pub const ALL: [AlgoKind; 11] = [
         AlgoKind::Direct,
         AlgoKind::Im2col,
         AlgoKind::Mec,
@@ -497,6 +521,9 @@ impl AlgoKind {
         AlgoKind::Winograd,
         AlgoKind::WinogradChunked,
         AlgoKind::Fft,
+        AlgoKind::Indirect,
+        AlgoKind::Kn2row,
+        AlgoKind::SmmConv,
     ];
 
     /// The subset benchmarked as distinct systems in the paper.
@@ -506,6 +533,21 @@ impl AlgoKind {
         AlgoKind::Mec,
         AlgoKind::Winograd,
         AlgoKind::Fft,
+    ];
+
+    /// The planner's full decision menu: the paper's five systems plus
+    /// the related-work lowerings (indirect, kn2row, SMM). MEC's pinned
+    /// A/B variants and the fully-materialized Winograd stay out — they
+    /// are ablation handles, dominated by their auto-dispatching parents.
+    pub const MENU: [AlgoKind; 8] = [
+        AlgoKind::Direct,
+        AlgoKind::Im2col,
+        AlgoKind::Mec,
+        AlgoKind::Winograd,
+        AlgoKind::Fft,
+        AlgoKind::Indirect,
+        AlgoKind::Kn2row,
+        AlgoKind::SmmConv,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -518,6 +560,9 @@ impl AlgoKind {
             AlgoKind::Winograd => "winograd",
             AlgoKind::WinogradChunked => "winograd-chunked",
             AlgoKind::Fft => "fft",
+            AlgoKind::Indirect => "indirect",
+            AlgoKind::Kn2row => "kn2row",
+            AlgoKind::SmmConv => "smm",
         }
     }
 
@@ -534,15 +579,21 @@ impl AlgoKind {
             "winograd" | "wino" => AlgoKind::Winograd,
             "winograd-chunked" | "wino-cpu" => AlgoKind::WinogradChunked,
             "fft" => AlgoKind::Fft,
+            "indirect" | "indirect-conv" => AlgoKind::Indirect,
+            "kn2row" | "kn2row-as" => AlgoKind::Kn2row,
+            "smm" | "smm-conv" | "smmconv" => AlgoKind::SmmConv,
             _ => return None,
         })
     }
 
     /// Whether the algorithm has an execution path for precision `p`.
-    /// The GEMM-lowering family (im2col, every MEC variant) runs q16;
-    /// `direct` stays the f32 reference; Winograd and FFT are f32-only
-    /// (their transforms have no fixed-point formulation here), so a q16
-    /// planner treats them as unsupported and falls back.
+    /// The GEMM-lowering family (im2col, every MEC variant, indirect —
+    /// which quantizes while gathering exactly like im2col quantizes
+    /// while lowering) runs q16; `direct` stays the f32 reference;
+    /// Winograd and FFT are f32-only (their transforms have no
+    /// fixed-point formulation here), and kn2row/SMM accumulate straight
+    /// into the f32 output (no i16 accumulating GEMM exists), so a q16
+    /// planner treats those as unsupported and falls back.
     pub fn supports_precision(&self, p: Precision) -> bool {
         match p {
             Precision::F32 => true,
@@ -553,6 +604,7 @@ impl AlgoKind {
                     | AlgoKind::Mec
                     | AlgoKind::MecSolutionA
                     | AlgoKind::MecSolutionB
+                    | AlgoKind::Indirect
             ),
         }
     }
@@ -568,7 +620,19 @@ impl AlgoKind {
             AlgoKind::Winograd => Box::new(winograd::Winograd),
             AlgoKind::WinogradChunked => Box::new(winograd_chunked::WinogradChunked::default()),
             AlgoKind::Fft => Box::new(fft_conv::FftConv),
+            AlgoKind::Indirect => Box::new(indirect::IndirectConv),
+            AlgoKind::Kn2row => Box::new(kn2row::Kn2row),
+            AlgoKind::SmmConv => Box::new(smm::SmmConv),
         }
+    }
+}
+
+impl std::fmt::Display for AlgoKind {
+    /// The canonical CLI name — guaranteed to round-trip through
+    /// [`AlgoKind::parse`] (asserted for every variant in the unit
+    /// tests), so `--algo {k}` always works.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
     }
 }
 
@@ -611,6 +675,11 @@ mod tests {
     fn algo_names_roundtrip() {
         for k in AlgoKind::ALL {
             assert_eq!(AlgoKind::parse(k.name()), Some(k));
+            // Display is the CLI spelling: parse(display(k)) == k for
+            // every variant, so new menu entries can't silently break
+            // the `--algo` flag.
+            assert_eq!(AlgoKind::parse(&k.to_string()), Some(k), "{k}");
+            assert_eq!(k.to_string().parse::<AlgoKind>(), Ok(k), "{k}");
         }
         assert_eq!(AlgoKind::parse("nope"), None);
     }
@@ -658,10 +727,17 @@ mod tests {
             AlgoKind::Mec,
             AlgoKind::MecSolutionA,
             AlgoKind::MecSolutionB,
+            AlgoKind::Indirect,
         ] {
             assert!(k.supports_precision(Precision::Q16), "{}", k.name());
         }
-        for k in [AlgoKind::Winograd, AlgoKind::WinogradChunked, AlgoKind::Fft] {
+        for k in [
+            AlgoKind::Winograd,
+            AlgoKind::WinogradChunked,
+            AlgoKind::Fft,
+            AlgoKind::Kn2row,
+            AlgoKind::SmmConv,
+        ] {
             assert!(!k.supports_precision(Precision::Q16), "{}", k.name());
         }
     }

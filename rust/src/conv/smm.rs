@@ -1,0 +1,240 @@
+//! SMM-Conv-style convolution: scalar-matrix accumulation with **zero
+//! packing** and zero workspace, streaming over kernel positions.
+//!
+//! For each kernel position (u, v) and input channel i, the input
+//! pixels an output row reads form a strided scalar sequence, and the
+//! kernel holds one contiguous `k_c`-vector `K[u, v, i, :]`. The
+//! product is a scalar × row-vector multiply accumulated into the
+//! output row — a rank-1 update streamed over `k_h·k_w·i_c` positions
+//! with no lowering, no im2col copy, and no GEMM-panel packing at all
+//! (the "SMM" in SMM-Conv: scalar-matrix multiplication).
+//!
+//! Relative to `direct` (the same MACs, per-pixel loop order) the
+//! kernel-position-outer order keeps one `i_c·k_c` kernel block hot
+//! across the whole output row, and the innermost `k_c` loop
+//! autovectorizes over contiguous memory on both operands. Relative to
+//! the GEMM family it trades micro-kernel register blocking for zero
+//! memory traffic beyond I/K/O — the cost model prices it between
+//! `direct` and the packed lowerings, which is exactly where it lands.
+//!
+//! Per output element the accumulation order over (u, v, i) is
+//! identical to `direct`'s, so the two produce bitwise-equal f32
+//! results — handy for the differential oracle's tolerance table (0 for
+//! both). f32-only: like `direct`, accumulation happens in the f32
+//! output with no i16 partial-sum path.
+
+use super::{downcast_prepack, AlgoKind, ConvContext, ConvPlan, Convolution, KernelPrepack};
+use crate::memory::WorkspaceLayout;
+use crate::tensor::{ConvShape, Kernel, Tensor};
+use crate::threadpool::{Parallelism, SharedSlice};
+use std::any::Any;
+use std::sync::Arc;
+
+pub struct SmmConv;
+
+/// SMM's "prepack" is an owned kernel copy (self-contained plans, like
+/// direct's) — zero packing is the algorithm's defining property.
+pub struct SmmPrepack {
+    pub kernel: Kernel,
+}
+
+impl KernelPrepack for SmmPrepack {
+    fn bytes(&self) -> usize {
+        self.kernel.bytes()
+    }
+
+    fn into_any_arc(self: Arc<Self>) -> Arc<dyn Any + Send + Sync> {
+        self
+    }
+}
+
+impl Convolution for SmmConv {
+    fn name(&self) -> &'static str {
+        "smm"
+    }
+
+    fn supports(&self, _shape: &ConvShape) -> bool {
+        true
+    }
+
+    fn workspace_elems(&self, _shape: &ConvShape) -> usize {
+        0 // zero packing, zero lowering — nothing beyond I/K/O
+    }
+
+    fn prepack(
+        &self,
+        _ctx: &ConvContext,
+        shape: &ConvShape,
+        kernel: &Kernel,
+    ) -> Arc<dyn KernelPrepack> {
+        assert_eq!(kernel.shape(), shape.kernel);
+        Arc::new(SmmPrepack {
+            kernel: kernel.clone(),
+        })
+    }
+
+    fn plan_shared(
+        &self,
+        ctx: &ConvContext,
+        shape: &ConvShape,
+        prepack: Arc<dyn KernelPrepack>,
+    ) -> Box<dyn ConvPlan> {
+        let prepack: Arc<SmmPrepack> = downcast_prepack(prepack, "smm");
+        assert_eq!(prepack.kernel.shape(), shape.kernel);
+        Box::new(SmmPlan {
+            ctx: ctx.clone(),
+            shape: *shape,
+            prepack,
+            layout: WorkspaceLayout::new(),
+        })
+    }
+}
+
+/// Plan for SMM-Conv: shared kernel copy, empty layout.
+pub struct SmmPlan {
+    ctx: ConvContext,
+    shape: ConvShape,
+    prepack: Arc<SmmPrepack>,
+    layout: WorkspaceLayout,
+}
+
+impl ConvPlan for SmmPlan {
+    fn algo(&self) -> AlgoKind {
+        AlgoKind::SmmConv
+    }
+
+    fn shape(&self) -> &ConvShape {
+        &self.shape
+    }
+
+    fn layout(&self) -> &WorkspaceLayout {
+        &self.layout
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.prepack.bytes()
+    }
+
+    fn shared_prepack(&self) -> Option<Arc<dyn KernelPrepack>> {
+        Some(Arc::clone(&self.prepack) as Arc<dyn KernelPrepack>)
+    }
+
+    fn execute_in(&self, input: &Tensor, _scratch: &mut [f32], output: &mut Tensor) {
+        self.execute_with(&self.ctx, input, output);
+    }
+
+    fn execute_in_par(
+        &self,
+        input: &Tensor,
+        _scratch: &mut [f32],
+        output: &mut Tensor,
+        par: &Parallelism,
+    ) {
+        // Session thread cap: clamp into the plan-time budget, sharing
+        // the plan's pool (see MecPlan::execute_in_par).
+        let ctx = self
+            .ctx
+            .clone()
+            .with_parallelism(self.ctx.par.with_budget(par.threads()));
+        self.execute_with(&ctx, input, output);
+    }
+}
+
+impl SmmPlan {
+    fn execute_with(&self, ctx: &ConvContext, input: &Tensor, output: &mut Tensor) {
+        let s = self.shape;
+        let k = s.kernel;
+        let (oh, ow) = (s.oh(), s.ow());
+        let ish = s.input;
+        assert_eq!(output.shape(), s.output());
+        assert_eq!(input.shape(), ish);
+
+        let in_data = input.data();
+        let k_data = self.prepack.kernel.data();
+        let out = SharedSlice::new(output.data_mut());
+
+        // Parallelize over (n, o_h): disjoint output rows, fixed
+        // partitioning — bitwise identical at any thread count.
+        let row_macs = ow * k.kh * k.kw * k.ic * k.kc;
+        ctx.par.parallel_for_macs(ish.n * oh, row_macs, |r| {
+            let (n, y) = (r / oh, r % oh);
+            let out_data: &mut [f32] = out.slice();
+            let row = &mut out_data[r * ow * k.kc..(r + 1) * ow * k.kc];
+            row.fill(0.0);
+            // Stream kernel positions: the i_c×k_c block for (u, v)
+            // stays hot while the whole output row accumulates its
+            // rank-1 updates. Per output element the (u, v, i) term
+            // order matches direct's loop nest exactly (bitwise-equal
+            // results).
+            for u in 0..k.kh {
+                for v in 0..k.kw {
+                    let in_row = &in_data[ish.index(n, y * s.sh + u, v, 0)..];
+                    let k_blk = &k_data[k.index(u, v, 0, 0)..k.index(u, v, 0, 0) + k.ic * k.kc];
+                    for x in 0..ow {
+                        let px = &in_row[x * s.sw * ish.c..x * s.sw * ish.c + k.ic];
+                        let acc = &mut row[x * k.kc..(x + 1) * k.kc];
+                        for (i, &sc) in px.iter().enumerate() {
+                            // Scalar × kernel-row-vector, both contiguous.
+                            let k_row = &k_blk[i * k.kc..(i + 1) * k.kc];
+                            for (a, &kv) in acc.iter_mut().zip(k_row) {
+                                *a += sc * kv;
+                            }
+                        }
+                    }
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct::Direct;
+    use crate::memory::Workspace;
+    use crate::tensor::{KernelShape, Nhwc};
+    use crate::util::Rng;
+
+    #[test]
+    fn zero_workspace_and_no_packing() {
+        let shape = ConvShape::new(Nhwc::new(1, 8, 8, 3), KernelShape::new(3, 3, 3, 8), 1, 1);
+        assert_eq!(Convolution::workspace_elems(&SmmConv, &shape), 0);
+        let kernel = Kernel::zeros(shape.kernel);
+        let plan = SmmConv.plan(&ConvContext::default(), &shape, &kernel);
+        assert_eq!(plan.workspace_elems(), 0);
+        assert!(plan.layout().regions().is_empty());
+        // Resident = the kernel copy, byte for byte: nothing was packed.
+        assert_eq!(plan.resident_bytes(), shape.kernel.len() * 4);
+        assert!(plan.kernel_backend().is_none());
+    }
+
+    #[test]
+    fn bitwise_equals_direct() {
+        // Same per-element (u, v, i) accumulation order as direct's loop
+        // nest ⇒ exactly equal outputs, not just allclose.
+        let mut rng = Rng::new(51);
+        for (n, ih, iw, ic, kh, kw, kc, sh, sw) in [
+            (1usize, 7, 7, 1, 3, 3, 1, 1, 1),
+            (2, 9, 8, 3, 3, 2, 4, 2, 1),
+            (1, 12, 12, 2, 5, 5, 3, 2, 2),
+            (3, 6, 6, 4, 1, 1, 8, 1, 1),
+            (1, 11, 5, 2, 4, 3, 2, 3, 2),
+        ] {
+            let shape = ConvShape::new(
+                Nhwc::new(n, ih, iw, ic),
+                KernelShape::new(kh, kw, ic, kc),
+                sh,
+                sw,
+            );
+            let input = Tensor::random(shape.input, &mut rng);
+            let kernel = Kernel::random(shape.kernel, &mut rng);
+            let ctx = ConvContext::default().with_threads(2);
+            let mut want = Tensor::zeros(shape.output());
+            let mut got = Tensor::zeros(shape.output());
+            let mut ws = Workspace::new();
+            Direct.run(&ctx, &shape, &input, &kernel, &mut ws, &mut want);
+            SmmConv.run(&ctx, &shape, &input, &kernel, &mut ws, &mut got);
+            assert_eq!(want, got, "{}", shape.describe());
+        }
+    }
+}

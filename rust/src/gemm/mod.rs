@@ -305,6 +305,19 @@ pub fn gemm_prepacked(a: MatRef<'_>, pb: &PackedB, c: &mut MatMut<'_>) {
     gemm_serial_inner(a, BSource::Packed(pb), c, 1.0, pb.bs, pb.backend);
 }
 
+/// `C = A × pb + beta·C` with B pre-packed, serial — the accumulating
+/// twin of [`gemm_prepacked`]. kn2row's shifted 1×1 products sum
+/// directly into the output through this (beta=0 on the first kernel
+/// position overwrites, beta=1 afterwards accumulates), which is what
+/// lets that algorithm run with zero workspace.
+pub fn gemm_prepacked_beta(a: MatRef<'_>, pb: &PackedB, c: &mut MatMut<'_>, beta: f32) {
+    assert_eq!(a.cols, pb.k, "gemm_prepacked_beta: A cols vs packed B rows");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, pb.n);
+    scale_c(c, beta);
+    gemm_serial_inner(a, BSource::Packed(pb), c, 1.0, pb.bs, pb.backend);
+}
+
 /// `C = A × pb` with B pre-packed, parallelized over row panels of C —
 /// the plan-execute path of im2col (one big GEMM, kernel matrix packed
 /// once at plan time). Thread partitioning matches [`gemm_ex`] exactly

@@ -65,7 +65,8 @@ fn cmd_info() {
             fmt_bytes(s.mec_lowered_elems() * 4),
         );
     }
-    println!("\nalgorithms: direct im2col mec mec-a mec-b winograd fft");
+    println!("\nalgorithms: direct im2col mec mec-a mec-b winograd fft indirect kn2row smm");
+    println!("extra workloads (non-paper, cost-model anchors): pw1 pw2");
     println!(
         "host threads: {}",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -96,13 +97,13 @@ fn budget_arg(args: &mut Args, help: &str) -> Budget {
 
 /// `--layer/--batch/--scale` → the named paper workload.
 fn workload_args(args: &mut Args) -> (Workload, usize, usize) {
-    let layer = args.opt("layer", "cv6", "benchmark layer (cv1..cv12)");
+    let layer = args.opt("layer", "cv6", "benchmark layer (cv1..cv12, pw1, pw2)");
     let batch = args.opt_usize("batch", 1, "mini-batch size");
     let scale = args.opt_usize("scale", 1, "channel divisor (1 = paper-exact)");
     match by_name(&layer) {
         Some(w) => (w, batch.max(1), scale),
         None => {
-            eprintln!("unknown layer {layer:?} (cv1..cv12)");
+            eprintln!("unknown layer {layer:?} (cv1..cv12, pw1, pw2)");
             std::process::exit(2);
         }
     }
@@ -123,7 +124,11 @@ fn exit_engine_err<T>(e: EngineError) -> T {
 
 fn cmd_run(args: &mut Args) {
     let (w, batch, scale) = workload_args(args);
-    let algo_s = args.opt("algo", "mec", "algorithm (direct|im2col|mec|mec-a|mec-b|winograd|fft)");
+    let algo_s = args.opt(
+        "algo",
+        "mec",
+        "algorithm (direct|im2col|mec|mec-a|mec-b|winograd|fft|indirect|kn2row|smm)",
+    );
     let threads = args.opt_usize("threads", 1, "worker threads");
     let reps = args.opt_usize("reps", 3, "timed repetitions");
     let precision = precision_arg(args);

@@ -128,8 +128,9 @@ mod tests {
     fn measures_all_admissible() {
         let tuner = AutoTuner::new();
         let ms = tuner.measure_all(&small_shape(), &Budget::unlimited(), &ConvContext::default());
-        // direct, im2col, mec, winograd, fft all support this shape.
-        assert_eq!(ms.len(), 5);
+        // direct, im2col, mec, winograd, fft, indirect, kn2row, smm all
+        // support this shape.
+        assert_eq!(ms.len(), 8);
         assert!(ms.iter().all(|m| m.median_ns > 0.0));
         // Plan time is measured for every candidate (zero-work plans like
         // direct may round to ~0, but the field must be populated ≥ 0).
@@ -152,7 +153,12 @@ mod tests {
         let mut tuner = AutoTuner::new();
         let ctx = ConvContext::default();
         let plan = tuner.tune(&small_shape(), &Budget::new(0), &ctx);
-        assert_eq!(plan.algo, AlgoKind::Direct);
+        // Budget 0 admits the zero-workspace family (direct, kn2row,
+        // smm); whichever measured fastest, it must cost no workspace.
+        assert!(matches!(
+            plan.algo,
+            AlgoKind::Direct | AlgoKind::Kn2row | AlgoKind::SmmConv
+        ));
         assert_eq!(plan.workspace_bytes, 0);
     }
 
@@ -162,8 +168,9 @@ mod tests {
         let tuner = AutoTuner::new();
         let ctx = ConvContext::default().with_precision(Precision::Q16);
         let ms = tuner.measure_all(&small_shape(), &Budget::unlimited(), &ctx);
-        // direct, im2col, mec — winograd/fft excluded under q16.
-        assert_eq!(ms.len(), 3);
+        // direct, im2col, mec, indirect — winograd/fft/kn2row/smm
+        // excluded under q16.
+        assert_eq!(ms.len(), 4);
         assert!(ms.iter().all(|m| m.algo.supports_precision(Precision::Q16)));
     }
 }

@@ -60,7 +60,7 @@ impl std::fmt::Display for PlanError {
             }
             PlanError::UnsupportedPrecision { algo, precision } => write!(
                 f,
-                "{} has no {precision} path (q16 covers direct/im2col/mec)",
+                "{} has no {precision} path (q16 covers direct/im2col/mec/indirect)",
                 algo.name()
             ),
             PlanError::BudgetExceeded {
@@ -88,6 +88,13 @@ pub struct CostModel {
     /// ns per multiply-add through the direct loop nest (no blocking,
     /// poor locality — empirically ~6-10x worse than GEMM).
     pub ns_per_mac_direct: f64,
+    /// ns per multiply-add through SMM-Conv's zero-packing scalar-matrix
+    /// stream: contiguous autovectorized `k_c` runs but no register
+    /// blocking, so it lands between the micro-kernel GEMM and the
+    /// direct nest, and scales with the backend only partially (the
+    /// compiler vectorizes the inner loop, the outer stream stays
+    /// scalar).
+    pub ns_per_mac_smm: f64,
     /// ns per byte moved by lowering/transform/repack loops.
     pub ns_per_byte_moved: f64,
     /// Fixed overhead per GEMM call (matters for MEC Solution B's
@@ -127,6 +134,7 @@ impl CostModel {
         CostModel {
             ns_per_mac: 0.45 / simd,
             ns_per_mac_direct: 2.8,
+            ns_per_mac_smm: 1.4 / (0.5 + 0.5 * simd),
             ns_per_byte_moved: 0.25,
             ns_per_gemm_call: 800.0,
             ns_per_butterfly: 4.0,
@@ -176,6 +184,17 @@ impl CostModel {
                 let grid = (ph * pw) as f64;
                 (k.ic * k.kc) as f64 * grid * grid.log2().max(1.0) * self.ns_per_butterfly
             }
+            // PackedB::pack of the same kernel matrix as im2col, plus
+            // writing the o_h·k_h·k_w indirection buffer.
+            AlgoKind::Indirect => {
+                let table_bytes = (shape.oh() * k.kh * k.kw * 8) as f64;
+                (2.0 * kernel_bytes + table_bytes) * self.ns_per_byte_moved
+            }
+            // k_h·k_w pointwise PackedB::packs — the same total kernel
+            // bytes, re-blocked per position.
+            AlgoKind::Kn2row => 2.0 * kernel_bytes * self.ns_per_byte_moved,
+            // Zero packing: the plan only clones the kernel.
+            AlgoKind::SmmConv => 2.0 * kernel_bytes * self.ns_per_byte_moved,
         }
     }
 
@@ -254,6 +273,37 @@ impl CostModel {
                 transforms * grid * log2 * self.ns_per_butterfly
                     + pointwise * self.ns_per_mac * 4.0
             }
+            AlgoKind::Indirect => {
+                // The gather moves the same bytes as im2col's lowering
+                // (every receptive-field element copied once, operand
+                // width included), but through cache-resident lane
+                // strips; then one prepacked GEMM per output row.
+                let gathered = shape.im2col_lowered_elems() as f64 * bpe;
+                let rows = (shape.input.n * shape.oh()) as f64;
+                gathered * self.ns_per_byte_moved
+                    + macs * self.ns_per_mac
+                    + rows * self.ns_per_gemm_call
+            }
+            AlgoKind::Kn2row => {
+                // No lowering at all: k_h·k_w accumulating pointwise
+                // GEMMs per output row. The output row is written once
+                // and re-touched per extra kernel position, but it stays
+                // cache-resident across positions — charge the first
+                // write/read full and each re-touch a quarter.
+                let k = shape.kernel;
+                let positions = (k.kh * k.kw) as f64;
+                let rows = (shape.input.n * shape.oh()) as f64;
+                macs * self.ns_per_mac
+                    + rows * positions * self.ns_per_gemm_call
+                    + out_bytes * (2.0 + 0.25 * (positions - 1.0)) * self.ns_per_byte_moved
+            }
+            AlgoKind::SmmConv => {
+                // Zero packing, zero workspace: every MAC through the
+                // scalar-matrix stream, plus one streaming pass over
+                // input and output.
+                let in_bytes = (shape.input.len() * 4) as f64;
+                macs * self.ns_per_mac_smm + (in_bytes + out_bytes) * self.ns_per_byte_moved
+            }
         }
     }
 }
@@ -270,13 +320,15 @@ impl Planner {
     }
 
     /// Algorithms admissible for `shape` under `budget` in the context's
-    /// precision: supported geometry, workspace within budget, and an
-    /// execution path for `ctx.precision` (under q16 Winograd/FFT report
+    /// precision, drawn from the full decision menu ([`AlgoKind::MENU`]:
+    /// the paper's five systems plus indirect/kn2row/SMM): supported
+    /// geometry, workspace within budget, and an execution path for
+    /// `ctx.precision` (under q16 Winograd/FFT/kn2row/SMM report
     /// unsupported and the planner falls back to the quantized GEMM
     /// family — `direct` keeps the fallback non-empty).
     pub fn admissible(&self, shape: &ConvShape, budget: &Budget, ctx: &ConvContext) -> Vec<Plan> {
         let mut out = Vec::new();
-        for kind in AlgoKind::PAPER {
+        for kind in AlgoKind::MENU {
             if !kind.supports_precision(ctx.precision) {
                 continue;
             }
@@ -387,12 +439,23 @@ mod tests {
     }
 
     #[test]
-    fn direct_always_admissible() {
+    fn zero_workspace_family_admissible_at_budget_zero() {
+        // A zero budget used to leave only direct; kn2row and SMM share
+        // its end of the memory axis now, so tight-budget fallback no
+        // longer means the slowest loop nest.
         let p = Planner::new();
         let plans = p.admissible(&cv6(), &Budget::new(0), &ConvContext::default());
-        assert_eq!(plans.len(), 1);
-        assert_eq!(plans[0].algo, AlgoKind::Direct);
-        assert_eq!(plans[0].workspace_bytes, 0);
+        let algos: Vec<AlgoKind> = plans.iter().map(|pl| pl.algo).collect();
+        assert_eq!(
+            algos,
+            vec![AlgoKind::Direct, AlgoKind::Kn2row, AlgoKind::SmmConv]
+        );
+        assert!(plans.iter().all(|pl| pl.workspace_bytes == 0));
+        // direct stays the universal floor in every precision.
+        let q16 = ConvContext::default().with_precision(crate::tensor::Precision::Q16);
+        let q16_plans = p.admissible(&cv6(), &Budget::new(0), &q16);
+        assert_eq!(q16_plans.len(), 1);
+        assert_eq!(q16_plans[0].algo, AlgoKind::Direct);
     }
 
     #[test]
@@ -460,7 +523,12 @@ mod tests {
         let f32_mec = AlgoKind::Mec.build().workspace_bytes(&shape);
         let budget = Budget::new(f32_mec / 2 + f32_mec / 8);
         let f32_plan = p.plan(&shape, &budget, &ConvContext::default());
-        assert_eq!(f32_plan.algo, AlgoKind::Direct, "{f32_plan:?}");
+        // The f32 planner loses the whole lowering family to the budget
+        // (its best remaining option is the zero-workspace tier) ...
+        assert!(
+            !matches!(f32_plan.algo, AlgoKind::Mec | AlgoKind::Im2col | AlgoKind::Indirect),
+            "{f32_plan:?}"
+        );
         let q16_ctx = ConvContext::default().with_precision(crate::tensor::Precision::Q16);
         let q16_plan = p.plan(&shape, &budget, &q16_ctx);
         assert!(
@@ -522,7 +590,15 @@ mod tests {
         // Direct has nothing to prepack; everyone else pays something,
         // and plan cost must be far below a single execute.
         assert_eq!(cm.estimate_plan_ns(AlgoKind::Direct, &shape), 0.0);
-        for algo in [AlgoKind::Im2col, AlgoKind::Mec, AlgoKind::Winograd, AlgoKind::Fft] {
+        for algo in [
+            AlgoKind::Im2col,
+            AlgoKind::Mec,
+            AlgoKind::Winograd,
+            AlgoKind::Fft,
+            AlgoKind::Indirect,
+            AlgoKind::Kn2row,
+            AlgoKind::SmmConv,
+        ] {
             let plan_ns = cm.estimate_plan_ns(algo, &shape);
             assert!(plan_ns > 0.0, "{algo:?}");
             assert!(
@@ -594,6 +670,64 @@ mod tests {
         assert_eq!(g.ns_per_byte, cm.ns_per_byte_moved);
         assert!(g.dispatch_ns > 0.0);
         assert_eq!(crate::threadpool::GrainModel::default(), g);
+    }
+
+    #[test]
+    fn indirect_wins_cv1_under_a_tight_budget() {
+        // The acceptance fixture for the indirect algorithm: cv1's big
+        // image + stride 4 make im2col's lowering 4.4 MB and MEC's
+        // 1.6 MB, while indirect's lane strips stay under 0.7 MB. Under
+        // a 1 MB budget the lowering family is inadmissible and indirect
+        // beats the zero-workspace tier on time.
+        let p = Planner::new();
+        let shape = crate::bench::workload::by_name("cv1").unwrap().shape(1, 1);
+        let budget = Budget::new(1 << 20);
+        let ws = |k: AlgoKind| k.build().workspace_bytes(&shape);
+        assert!(ws(AlgoKind::Indirect) < budget.limit());
+        assert!(ws(AlgoKind::Mec) > budget.limit());
+        assert!(ws(AlgoKind::Im2col) > budget.limit());
+        let plan = p.plan(&shape, &budget, &ConvContext::default());
+        assert_eq!(plan.algo, AlgoKind::Indirect, "{plan:?}");
+        // And the memory win that put it there: an order of magnitude
+        // under Eq. 2 on this geometry.
+        assert!(ws(AlgoKind::Indirect) * 6 < ws(AlgoKind::Im2col));
+    }
+
+    #[test]
+    fn kn2row_wins_the_pointwise_fixture() {
+        // The acceptance fixture for kn2row: on a 1×1-kernel layer the
+        // decomposition is a single unshifted GEMM, so it gets im2col's
+        // compute without any lowered copy — the estimate must prefer it
+        // over every lowering (which all pay Eq. 2/3 traffic for nothing)
+        // even with no budget pressure.
+        let p = Planner::new();
+        let shape = crate::bench::workload::by_name("pw1").unwrap().shape(1, 1);
+        assert_eq!(shape.kernel.kh * shape.kernel.kw, 1);
+        let plan = p.plan(&shape, &Budget::unlimited(), &ConvContext::default());
+        assert_eq!(plan.algo, AlgoKind::Kn2row, "{plan:?}");
+        assert_eq!(plan.workspace_bytes, 0);
+    }
+
+    #[test]
+    fn smm_prices_between_gemm_and_direct_and_scales_per_backend() {
+        // for_backend honesty for the new entries: SMM's ns/MAC must sit
+        // strictly between the micro-kernel GEMM's and the direct
+        // nest's on every backend, and improve with wider backends
+        // (partially — the stream is only compiler-vectorized).
+        for b in [KernelBackend::Scalar, KernelBackend::Avx2, KernelBackend::Avx512] {
+            let cm = CostModel::for_backend(b);
+            assert!(cm.ns_per_mac < cm.ns_per_mac_smm, "{b:?}");
+            assert!(cm.ns_per_mac_smm < cm.ns_per_mac_direct, "{b:?}");
+        }
+        let scalar = CostModel::for_backend(KernelBackend::Scalar);
+        let wide = CostModel::for_backend(KernelBackend::Avx512);
+        assert!(wide.ns_per_mac_smm < scalar.ns_per_mac_smm);
+        // The backend gap must be milder than the GEMM family's: zero
+        // packing means SMM keeps more of its cost scalar.
+        assert!(
+            scalar.ns_per_mac_smm / wide.ns_per_mac_smm
+                < scalar.ns_per_mac / wide.ns_per_mac
+        );
     }
 
     #[test]

@@ -1,0 +1,358 @@
+//! Cross-algorithm differential fuzz oracle.
+//!
+//! Every concrete [`AlgoKind`] — the paper's five systems, MEC's pinned
+//! A/B variants, and the related-work menu (indirect, kn2row, SMM) — is
+//! driven over ~200 seeded random geometries and compared against ONE
+//! reference: a locally written direct convolution that accumulates in
+//! f64. Each algorithm runs in f32 serial, f32 threaded, and (where it
+//! has a fixed-point path) q16 serial + threaded, so a single failing
+//! geometry pins down *which* lowering diverges, not just that two of
+//! them disagree.
+//!
+//! # Tolerance table (THE single source — do not scatter bounds)
+//!
+//! f32 comparisons assert `rel_l2(got, ref₆₄) ≤ rtol` (`util::diff`'s
+//! reference-normalized L2, the same metric `conv_correctness.rs` has
+//! always used, so these numbers carry its precedent). Per algorithm:
+//!
+//! | algorithm                               | rtol  | why                                    |
+//! |-----------------------------------------|-------|----------------------------------------|
+//! | direct, smm                             | 1e-4  | plain f32 accumulation; smm is
+//! |                                         |       | additionally asserted **bitwise** equal
+//! |                                         |       | to direct (same term order by design)  |
+//! | im2col, mec, mec-a, mec-b, indirect,    | 1e-4  | blocked-GEMM reassociation only        |
+//! | kn2row                                  |       |                                        |
+//! | winograd, winograd-chunked              | 2e-3  | 4×4 tile transform conditioning        |
+//! | fft                                     | 2e-3  | padded spectral round-trip — error
+//! |                                         |       | scales with image area, which rel_l2's
+//! |                                         |       | normalization absorbs                  |
+//!
+//! q16 comparisons reuse the analytic max-abs quantization bound derived
+//! in `q16_properties.rs` (operand rounding + Q15 product shift + 1.5×
+//! accumulation headroom).
+//!
+//! # Reproducing a failure
+//!
+//! Each case derives its RNG from `base_seed ⊕ splitmix(case)`, so one
+//! index replays standalone. Failures print a ready-to-paste line:
+//!
+//! ```text
+//! replay: MEC_FUZZ_SEED=0x... MEC_FUZZ_CASE=N cargo test --test algo_differential
+//! ```
+//!
+//! Knobs: `MEC_FUZZ_SEED` (u64, `0x` hex accepted), `MEC_FUZZ_CASES`
+//! (default 200), `MEC_FUZZ_CASE` (run exactly one index).
+
+use mec::bench::harness::bench_fn;
+use mec::bench::BenchOpts;
+use mec::conv::{AlgoKind, ConvContext, ConvPlan, Convolution};
+use mec::memory::{Arena, Budget};
+use mec::planner::Planner;
+use mec::tensor::quant::QParams;
+use mec::tensor::{ConvShape, Kernel, KernelShape, Nhwc, Precision, Tensor};
+use mec::util::{diff, Rng};
+use std::time::Duration;
+
+/// f32 rel_l2 tolerance per algorithm — see the module-level table.
+fn f32_rtol(kind: AlgoKind) -> f64 {
+    match kind {
+        AlgoKind::Direct
+        | AlgoKind::SmmConv
+        | AlgoKind::Im2col
+        | AlgoKind::Mec
+        | AlgoKind::MecSolutionA
+        | AlgoKind::MecSolutionB
+        | AlgoKind::Indirect
+        | AlgoKind::Kn2row => 1e-4,
+        AlgoKind::Winograd | AlgoKind::WinogradChunked | AlgoKind::Fft => 2e-3,
+    }
+}
+
+/// The q16 analytic bound (derived and unit-tested in
+/// `q16_properties.rs`; duplicated here because test binaries cannot
+/// share items).
+fn q16_bound(shape: &ConvShape, input: &Tensor, kernel: &Kernel) -> f64 {
+    let qa = QParams::from_slice(input.data());
+    let qk = QParams::from_slice(kernel.data());
+    let amax = max_abs(input.data());
+    let kmax = max_abs(kernel.data());
+    let (sa, sk) = (qa.scale as f64, qk.scale as f64);
+    let kdim = (shape.kernel.kh * shape.kernel.kw * shape.kernel.ic) as f64;
+    1.5 * kdim * (amax * sk * 0.5 + kmax * sa * 0.5 + sa * sk * 0.25 + sa * sk * 16384.0) + 1e-6
+}
+
+fn max_abs(v: &[f32]) -> f64 {
+    v.iter().fold(0.0f64, |m, &x| m.max(x.abs() as f64))
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x as f64 - y as f64).abs())
+        .fold(0.0, f64::max)
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| {
+            let t = s.trim();
+            match t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+                Some(hex) => u64::from_str_radix(hex, 16).ok(),
+                None => t.parse().ok(),
+            }
+        })
+        .unwrap_or(default)
+}
+
+/// Random geometry for case `case`. Buckets guarantee the degenerate
+/// corners show up deterministically instead of by luck:
+/// * `case % 8 == 0` — pointwise 1×1 kernels (kn2row's single-GEMM
+///   degeneration, indirect's trivial offset table), strides up to 2;
+/// * `case % 8 == 1` — kernel spans the whole image (`k_h = i_h`,
+///   `k_w = i_w`, so `o_h = o_w = 1` — the k≥h corner where MEC's
+///   partition logic and the gather strips collapse);
+/// * `case % 8 == 2` — 3×3 stride-1 with padding, so both Winograd
+///   variants are exercised on a fixed fraction of cases;
+/// * otherwise — free-form (same distribution the q16 grid uses):
+///   rectangular kernels, strides 1–3, zero padding 0–2 per side.
+///
+/// Returns (unpadded input shape, ph, pw, ConvShape over padded input) —
+/// the stack's pre-applied-padding convention (paper §2.1).
+fn gen_geometry(case: usize, r: &mut Rng) -> (Nhwc, usize, usize, ConvShape) {
+    match case % 8 {
+        0 => {
+            let (ih, iw) = (r.range(2, 10), r.range(2, 10));
+            let ic = r.range(1, 7);
+            let shape = ConvShape::new(
+                Nhwc::new(r.range(1, 4), ih, iw, ic),
+                KernelShape::new(1, 1, ic, r.range(1, 9)),
+                r.range(1, 3),
+                r.range(1, 3),
+            );
+            (shape.input, 0, 0, shape)
+        }
+        1 => {
+            let (h, w) = (r.range(2, 8), r.range(2, 8));
+            let ic = r.range(1, 5);
+            let shape = ConvShape::new(
+                Nhwc::new(r.range(1, 3), h, w, ic),
+                KernelShape::new(h, w, ic, r.range(1, 6)),
+                1,
+                1,
+            );
+            (shape.input, 0, 0, shape)
+        }
+        2 => {
+            let (ih, iw) = (r.range(3, 12), r.range(3, 12));
+            let ic = r.range(1, 5);
+            let (ph, pw) = (r.range(0, 2), r.range(0, 2));
+            let shape = ConvShape::new(
+                Nhwc::new(r.range(1, 3), ih + 2 * ph, iw + 2 * pw, ic),
+                KernelShape::new(3, 3, ic, r.range(1, 7)),
+                1,
+                1,
+            );
+            (Nhwc::new(shape.input.n, ih, iw, ic), ph, pw, shape)
+        }
+        _ => {
+            let (ih, iw) = (r.range(3, 13), r.range(3, 13));
+            let ic = r.range(1, 5);
+            let (ph, pw) = (r.range(0, 3), r.range(0, 3));
+            let (h, w) = (ih + 2 * ph, iw + 2 * pw);
+            let kh = r.range(1, h.min(5) + 1);
+            let kw = r.range(1, w.min(5) + 1);
+            let shape = ConvShape::new(
+                Nhwc::new(r.range(1, 4), h, w, ic),
+                KernelShape::new(kh, kw, ic, r.range(1, 6)),
+                r.range(1, 4),
+                r.range(1, 4),
+            );
+            (Nhwc::new(shape.input.n, ih, iw, ic), ph, pw, shape)
+        }
+    }
+}
+
+/// The oracle: direct convolution with f64 accumulation, written from
+/// the definition with no shared code paths (no GEMM, no packing), so a
+/// systematic bug in the library's substrate cannot cancel out.
+fn direct_f64(shape: &ConvShape, input: &Tensor, kernel: &Kernel) -> Vec<f32> {
+    let (ish, k) = (shape.input, shape.kernel);
+    let (oh, ow) = (shape.oh(), shape.ow());
+    let (ind, kd) = (input.data(), kernel.data());
+    let mut out = Vec::with_capacity(ish.n * oh * ow * k.kc);
+    for n in 0..ish.n {
+        for y in 0..oh {
+            for x in 0..ow {
+                for o in 0..k.kc {
+                    let mut acc = 0.0f64;
+                    for u in 0..k.kh {
+                        for v in 0..k.kw {
+                            for i in 0..k.ic {
+                                let a = ind[ish.index(n, y * shape.sh + u, x * shape.sw + v, i)];
+                                acc += a as f64 * kd[k.index(u, v, i, o)] as f64;
+                            }
+                        }
+                    }
+                    out.push(acc as f32);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn differential_fuzz_oracle() {
+    let seed = env_u64("MEC_FUZZ_SEED", 0x6ec_d1ff);
+    let cases = env_u64("MEC_FUZZ_CASES", 200) as usize;
+    let only = std::env::var("MEC_FUZZ_CASE")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok());
+    for case in 0..cases {
+        if only.is_some_and(|c| c != case) {
+            continue;
+        }
+        let mut rng = Rng::new(seed ^ 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(case as u64 + 1));
+        let (raw_shape, ph, pw, shape) = gen_geometry(case, &mut rng);
+        let raw = Tensor::random(raw_shape, &mut rng);
+        let input = if ph > 0 || pw > 0 {
+            raw.pad_spatial(ph, pw)
+        } else {
+            raw
+        };
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let want = direct_f64(&shape, &input, &kernel);
+        let replay = format!(
+            "replay: MEC_FUZZ_SEED={seed:#x} MEC_FUZZ_CASE={case} \
+             cargo test --test algo_differential differential_fuzz_oracle"
+        );
+
+        // Library f32 direct, kept for the smm bitwise-identity row.
+        let mut direct_f32 = Tensor::zeros(shape.output());
+        AlgoKind::Direct
+            .build()
+            .plan(&ConvContext::default(), &shape, &kernel)
+            .execute(&input, &mut Arena::new(), &mut direct_f32);
+
+        for kind in AlgoKind::ALL {
+            let algo = kind.build();
+            if !algo.supports(&shape) {
+                continue;
+            }
+            for threads in [1usize, 2] {
+                let ctx = ConvContext::default().with_threads(threads);
+                let mut got = Tensor::zeros(shape.output());
+                algo.plan(&ctx, &shape, &kernel)
+                    .execute(&input, &mut Arena::new(), &mut got);
+                let d = diff(got.data(), &want);
+                assert!(
+                    d.rel_l2 <= f32_rtol(kind),
+                    "case {case}: {} f32 t={threads} on {} (pad {ph},{pw}): \
+                     rel_l2={:.3e} > rtol={:.1e} (max_abs={:.3e})\n{replay}",
+                    kind.name(),
+                    shape.describe(),
+                    d.rel_l2,
+                    f32_rtol(kind),
+                    d.max_abs
+                );
+                if kind == AlgoKind::SmmConv {
+                    assert_eq!(
+                        got.data(),
+                        direct_f32.data(),
+                        "case {case}: smm t={threads} not bitwise-equal to direct\n{replay}"
+                    );
+                }
+                if kind.supports_precision(Precision::Q16) && kind != AlgoKind::Direct {
+                    let qctx = ConvContext::default()
+                        .with_threads(threads)
+                        .with_precision(Precision::Q16);
+                    let mut q = Tensor::zeros(shape.output());
+                    algo.plan(&qctx, &shape, &kernel)
+                        .execute(&input, &mut Arena::new(), &mut q);
+                    let qb = q16_bound(&shape, &input, &kernel);
+                    let qd = max_abs_diff(q.data(), &want);
+                    assert!(
+                        qd <= qb,
+                        "case {case}: {} q16 t={threads} on {}: \
+                         max_abs={qd:.3e} > bound={qb:.3e}\n{replay}",
+                        kind.name(),
+                        shape.describe()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Cost-model honesty: on fixtures spanning the menu's regimes, the
+/// algorithm `Auto` (the planner under an unlimited budget) selects must
+/// measure within 1.5× of the measured-fastest menu entry. Debug builds
+/// skew constant factors the release-tuned model cannot see (and tier-1
+/// runs tests unoptimized), so the contract is enforced at 1.5× in
+/// release and relaxed to 4× under `debug_assertions` — the release CI
+/// leg (`cargo test --release --test algo_differential`) is the
+/// authoritative run. 3×3 stride-1 fixtures are deliberately absent:
+/// there Winograd's asymptotic win is real but tile-count-sensitive, and
+/// the paper's own Fig. 4 treats it as a separate system.
+#[test]
+fn auto_selection_is_near_the_measured_fastest() {
+    let slack = if cfg!(debug_assertions) { 4.0 } else { 1.5 };
+    let opts = BenchOpts {
+        warmup: 1,
+        min_reps: 3,
+        max_reps: 8,
+        target_time: Duration::from_millis(30),
+    };
+    let ctx = ConvContext::default();
+    let planner = Planner::new();
+    let mut rng = Rng::new(0xfa57);
+    let fixtures = [
+        (
+            "gemm-heavy-5x5",
+            ConvShape::new(Nhwc::new(1, 32, 32, 8), KernelShape::new(5, 5, 8, 16), 1, 1),
+        ),
+        (
+            "pointwise",
+            ConvShape::new(Nhwc::new(1, 20, 20, 32), KernelShape::new(1, 1, 32, 64), 1, 1),
+        ),
+        (
+            "strided-7x7",
+            ConvShape::new(Nhwc::new(1, 40, 40, 4), KernelShape::new(7, 7, 4, 8), 2, 2),
+        ),
+    ];
+    for (name, shape) in fixtures {
+        let input = Tensor::random(shape.input, &mut rng);
+        let kernel = Kernel::random(shape.kernel, &mut rng);
+        let chosen = planner.plan(&shape, &Budget::unlimited(), &ctx).algo;
+        let mut best = f64::INFINITY;
+        let mut fastest = AlgoKind::Direct;
+        let mut chosen_ns = None;
+        for kind in AlgoKind::MENU {
+            let algo = kind.build();
+            if !algo.supports(&shape) {
+                continue;
+            }
+            let plan = algo.plan(&ctx, &shape, &kernel);
+            let mut arena = Arena::new();
+            let mut out = Tensor::zeros(shape.output());
+            plan.execute(&input, &mut arena, &mut out); // pre-size the arena
+            let r = bench_fn(kind.name(), &opts, || {
+                plan.execute(&input, &mut arena, &mut out)
+            });
+            if kind == chosen {
+                chosen_ns = Some(r.median_ns());
+            }
+            if r.median_ns() < best {
+                best = r.median_ns();
+                fastest = kind;
+            }
+        }
+        let chosen_ns = chosen_ns.expect("planner chose an algorithm outside AlgoKind::MENU");
+        assert!(
+            chosen_ns <= slack * best,
+            "{name}: Auto picked {chosen} at {chosen_ns:.0} ns but {fastest} \
+             measured {best:.0} ns — off by more than {slack:.1}x"
+        );
+    }
+}

@@ -92,6 +92,66 @@ fn table3_weighted_memory_ratio_reproduces() {
 }
 
 #[test]
+fn algorithm_menu_workspace_relations_hold_across_fixtures() {
+    // The expanded menu's memory claims, pinned per fixture geometry
+    // (cv1–cv12 plus the pointwise anchors):
+    //  * indirect's lane strips never exceed im2col's Eq. 2 lowering —
+    //    they are at most GATHER_LANES of its i_n·o_h row blocks;
+    //  * kn2row and SMM-Conv are exactly zero-workspace, like direct;
+    //  * under q16 the indirect gather strips halve (to the f32-slot
+    //    granularity of the arena), like im2col's lowered matrix.
+    use mec::bench::workload::extras;
+    use mec::tensor::Precision;
+    for w in suite().into_iter().chain(extras()) {
+        let shape = w.shape(1, 1);
+        let ind = AlgoKind::Indirect.build().workspace_bytes(&shape);
+        let i2c = AlgoKind::Im2col.build().workspace_bytes(&shape);
+        assert!(ind <= i2c, "{}: indirect {ind} > im2col {i2c}", w.name);
+        assert_eq!(AlgoKind::Kn2row.build().workspace_bytes(&shape), 0, "{}", w.name);
+        assert_eq!(AlgoKind::SmmConv.build().workspace_bytes(&shape), 0, "{}", w.name);
+        let ind_q16 = AlgoKind::Indirect
+            .build()
+            .workspace_bytes_prec(&shape, Precision::Q16);
+        assert!(
+            ind_q16 <= ind / 2 + 4,
+            "{}: q16 gather {ind_q16} not halved vs f32 {ind}",
+            w.name
+        );
+    }
+    // And the sharpest contrast, on cv1's big-image geometry: the
+    // indirection buffer bounds gather memory far below the lowering
+    // family (the acceptance fixture of the planner's indirect pick).
+    let cv1 = by_name("cv1").unwrap().shape(1, 1);
+    let ind = AlgoKind::Indirect.build().workspace_bytes(&cv1);
+    assert!(ind * 6 < AlgoKind::Im2col.build().workspace_bytes(&cv1));
+    assert!(ind * 2 < AlgoKind::Mec.build().workspace_bytes(&cv1));
+}
+
+#[test]
+fn kn2row_resident_prepack_is_kernel_sized() {
+    // kn2row trades workspace for k_h·k_w prepacked pointwise operands:
+    // the plan's resident bytes must stay within a small blocking-padding
+    // factor of the kernel itself (O(k²·i_c·k_c) — no hidden lowering).
+    use mec::conv::{ConvContext, ConvPlan};
+    use mec::tensor::Kernel;
+    for name in ["cv2", "cv6", "pw1"] {
+        let shape = by_name(name).unwrap().shape(1, 4);
+        let kernel = Kernel::zeros(shape.kernel);
+        let plan = AlgoKind::Kn2row
+            .build()
+            .plan(&ConvContext::default(), &shape, &kernel);
+        let kernel_bytes = shape.kernel.len() * 4;
+        assert!(plan.resident_bytes() >= kernel_bytes, "{name}");
+        assert!(
+            plan.resident_bytes() <= 4 * kernel_bytes,
+            "{name}: resident {} vs kernel {kernel_bytes}",
+            plan.resident_bytes()
+        );
+        assert_eq!(plan.workspace_bytes(), 0, "{name}");
+    }
+}
+
+#[test]
 fn tracker_balances_after_workspace_churn() {
     let before = tracker::current_bytes();
     for _ in 0..10 {

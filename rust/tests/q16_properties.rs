@@ -34,11 +34,14 @@ use mec::tensor::{ConvShape, Kernel, KernelShape, Nhwc, Precision, Tensor};
 use mec::util::Rng;
 
 /// The q16 algorithms under test (direct is the oracle, not a subject).
-const Q16_ALGOS: [AlgoKind; 4] = [
+/// Indirect quantizes while gathering exactly like im2col quantizes
+/// while lowering, so the analytic bound below covers it unchanged.
+const Q16_ALGOS: [AlgoKind; 5] = [
     AlgoKind::Mec,
     AlgoKind::MecSolutionA,
     AlgoKind::MecSolutionB,
     AlgoKind::Im2col,
+    AlgoKind::Indirect,
 ];
 
 /// Run `f` holding the tracker's global lock (via `measure_peak`): tests
