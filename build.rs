@@ -29,6 +29,10 @@ fn main() {
     // Declare the cfg so `unexpected_cfgs` (cargo >= 1.80) stays quiet on
     // builds where it is not set.
     println!("cargo:rustc-check-cfg=cfg(mec_avx512)");
+    // The loom leg (`RUSTFLAGS="--cfg loom" cargo test --lib -- loom`)
+    // swaps the threadpool's sync primitives for the in-tree model
+    // checker; declare the cfg so normal builds don't warn about it.
+    println!("cargo:rustc-check-cfg=cfg(loom)");
     if let Some((major, minor)) = rustc_minor() {
         if major > 1 || (major == 1 && minor >= 89) {
             println!("cargo:rustc-cfg=mec_avx512");

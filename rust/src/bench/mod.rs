@@ -2,6 +2,10 @@
 //! (criterion is unavailable offline), and paper-style report printing.
 //! One binary per paper artifact lives in `rust/benches/`.
 
+// Measurement code must not need unsafe: no unsafe, ever (enforced —
+// see the crate-level unsafe policy and tools/unsafe-audit).
+#![forbid(unsafe_code)]
+
 pub mod harness;
 pub mod workload;
 

@@ -21,6 +21,10 @@
 //! reaches a worker anyway (e.g. pushed onto the queue directly) is
 //! answered with an error [`Response`] instead of panicking.
 
+// Serving plumbing is safe Rust only: no unsafe, ever (enforced — see
+// the crate-level unsafe policy and tools/unsafe-audit).
+#![forbid(unsafe_code)]
+
 pub mod batcher;
 pub mod metrics;
 pub mod queue;

@@ -35,6 +35,10 @@
 //! let pred = session.infer(&sample)?;          // -> Prediction
 //! ```
 
+// The front door is safe Rust only: no unsafe, ever (enforced — see
+// the crate-level unsafe policy and tools/unsafe-audit).
+#![forbid(unsafe_code)]
+
 mod builder;
 mod error;
 mod session;

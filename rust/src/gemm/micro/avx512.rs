@@ -21,34 +21,52 @@ const NR: usize = 16;
 /// (`KernelBackend::Avx512.available()`).
 #[target_feature(enable = "avx2,avx512f,avx512bw")]
 pub unsafe fn kernel_f32(ap: &[f32], bp: &[f32], kb: usize, acc: &mut [f32; MR * NR_MAX], mr: usize) {
-    match mr {
-        1 => rows_f32::<1>(ap, bp, kb, acc),
-        2 => rows_f32::<2>(ap, bp, kb, acc),
-        3 => rows_f32::<3>(ap, bp, kb, acc),
-        4 => rows_f32::<4>(ap, bp, kb, acc),
-        5 => rows_f32::<5>(ap, bp, kb, acc),
-        6 => rows_f32::<6>(ap, bp, kb, acc),
-        7 => rows_f32::<7>(ap, bp, kb, acc),
-        _ => rows_f32::<MR>(ap, bp, kb, acc),
+    // SAFETY: `rows_f32` is `#[inline(always)]`, so its intrinsics compile
+    // inside this fn's AVX-512 window; its bounds requirements (`ap` ≥
+    // kb·MR, `bp` ≥ kb·NR) are exactly this fn's own documented contract.
+    unsafe {
+        match mr {
+            1 => rows_f32::<1>(ap, bp, kb, acc),
+            2 => rows_f32::<2>(ap, bp, kb, acc),
+            3 => rows_f32::<3>(ap, bp, kb, acc),
+            4 => rows_f32::<4>(ap, bp, kb, acc),
+            5 => rows_f32::<5>(ap, bp, kb, acc),
+            6 => rows_f32::<6>(ap, bp, kb, acc),
+            7 => rows_f32::<7>(ap, bp, kb, acc),
+            _ => rows_f32::<MR>(ap, bp, kb, acc),
+        }
     }
 }
 
+/// # Safety
+/// Caller must have AVX-512F/BW enabled and `ap`/`bp` packed as
+/// documented on [`kernel_f32`].
 #[inline(always)]
 unsafe fn rows_f32<const R: usize>(ap: &[f32], bp: &[f32], kb: usize, acc: &mut [f32; MR * NR_MAX]) {
     debug_assert!(ap.len() >= kb * MR);
     debug_assert!(bp.len() >= kb * NR);
-    let mut c = [_mm512_setzero_ps(); R];
+    // SAFETY: register-only zeroing; the feature window comes from the
+    // `#[target_feature]` caller this fn is always inlined into.
+    let mut c = [unsafe { _mm512_setzero_ps() }; R];
     let a = ap.as_ptr();
     let b = bp.as_ptr();
     for k in 0..kb {
-        let bv = _mm512_loadu_ps(b.add(k * NR));
+        // SAFETY: k < kb and `bp` holds kb strips of NR floats
+        // (debug-asserted above), so the unaligned 16-lane load reads
+        // b[k·NR .. k·NR+16] fully in bounds.
+        let bv = unsafe { _mm512_loadu_ps(b.add(k * NR)) };
         for r in 0..R {
-            let av = _mm512_set1_ps(*a.add(k * MR + r));
-            c[r] = _mm512_fmadd_ps(av, bv, c[r]);
+            // SAFETY: r < R ≤ MR and k < kb, and `ap` holds kb columns of
+            // MR floats, so a + k·MR + r points at a readable f32.
+            let av = unsafe { _mm512_set1_ps(*a.add(k * MR + r)) };
+            // SAFETY: FMA on register operands only.
+            c[r] = unsafe { _mm512_fmadd_ps(av, bv, c[r]) };
         }
     }
     for (r, &v) in c.iter().enumerate() {
-        _mm512_storeu_ps(acc.as_mut_ptr().add(r * NR), v);
+        // SAFETY: r ≤ MR−1 and NR == NR_MAX, so the 16-lane store ends at
+        // r·NR + 16 ≤ (MR−1)·NR + NR = MR·NR_MAX, inside `acc`.
+        unsafe { _mm512_storeu_ps(acc.as_mut_ptr().add(r * NR), v) };
     }
 }
 
@@ -59,36 +77,54 @@ unsafe fn rows_f32<const R: usize>(ap: &[f32], bp: &[f32], kb: usize, acc: &mut 
 /// (`KernelBackend::Avx512.available()`).
 #[target_feature(enable = "avx2,avx512f,avx512bw")]
 pub unsafe fn kernel_i16(ap: &[i16], bp: &[i16], kb: usize, acc: &mut [i32; MR * NR_MAX], mr: usize) {
-    match mr {
-        1 => rows_i16::<1>(ap, bp, kb, acc),
-        2 => rows_i16::<2>(ap, bp, kb, acc),
-        3 => rows_i16::<3>(ap, bp, kb, acc),
-        4 => rows_i16::<4>(ap, bp, kb, acc),
-        5 => rows_i16::<5>(ap, bp, kb, acc),
-        6 => rows_i16::<6>(ap, bp, kb, acc),
-        7 => rows_i16::<7>(ap, bp, kb, acc),
-        _ => rows_i16::<MR>(ap, bp, kb, acc),
+    // SAFETY: `rows_i16` is `#[inline(always)]`, so its intrinsics compile
+    // inside this fn's AVX2+AVX-512 window; its bounds requirements are
+    // exactly this fn's own documented contract.
+    unsafe {
+        match mr {
+            1 => rows_i16::<1>(ap, bp, kb, acc),
+            2 => rows_i16::<2>(ap, bp, kb, acc),
+            3 => rows_i16::<3>(ap, bp, kb, acc),
+            4 => rows_i16::<4>(ap, bp, kb, acc),
+            5 => rows_i16::<5>(ap, bp, kb, acc),
+            6 => rows_i16::<6>(ap, bp, kb, acc),
+            7 => rows_i16::<7>(ap, bp, kb, acc),
+            _ => rows_i16::<MR>(ap, bp, kb, acc),
+        }
     }
 }
 
+/// # Safety
+/// Caller must have AVX2 and AVX-512F/BW enabled and `ap`/`bp` packed as
+/// documented on [`kernel_i16`].
 #[inline(always)]
 unsafe fn rows_i16<const R: usize>(ap: &[i16], bp: &[i16], kb: usize, acc: &mut [i32; MR * NR_MAX]) {
     debug_assert!(ap.len() >= kb * MR);
     debug_assert!(bp.len() >= kb * NR);
-    let mut c = [_mm512_setzero_si512(); R];
+    // SAFETY: register-only zeroing inside the caller's AVX-512 window.
+    let mut c = [unsafe { _mm512_setzero_si512() }; R];
     let a = ap.as_ptr();
     let b = bp.as_ptr();
     for k in 0..kb {
-        let bv = _mm256_loadu_si256(b.add(k * NR) as *const __m256i);
+        // SAFETY: k < kb and `bp` holds kb strips of NR i16s
+        // (debug-asserted above), so the unaligned 32-byte load reads
+        // b[k·NR .. k·NR+16] fully in bounds.
+        let bv = unsafe { _mm256_loadu_si256(b.add(k * NR) as *const __m256i) };
         for r in 0..R {
-            let av = _mm256_set1_epi16(*a.add(k * MR + r));
+            // SAFETY: r < R ≤ MR and k < kb, and `ap` holds kb columns of
+            // MR i16s, so a + k·MR + r points at a readable i16.
+            let av = unsafe { _mm256_set1_epi16(*a.add(k * MR + r)) };
             // 16 rounded Q15 products (AVX2 mulhrs), widened to one zmm
             // of i32 lanes (AVX-512F) and accumulated.
-            let p = _mm256_mulhrs_epi16(av, bv);
-            c[r] = _mm512_add_epi32(c[r], _mm512_cvtepi16_epi32(p));
+            // SAFETY: register-only arithmetic.
+            let p = unsafe { _mm256_mulhrs_epi16(av, bv) };
+            // SAFETY: register-only arithmetic (widen + add).
+            c[r] = unsafe { _mm512_add_epi32(c[r], _mm512_cvtepi16_epi32(p)) };
         }
     }
     for (r, &v) in c.iter().enumerate() {
-        _mm512_storeu_si512(acc.as_mut_ptr().add(r * NR) as *mut __m512i, v);
+        // SAFETY: r ≤ MR−1 and NR == NR_MAX, so the 16-lane i32 store ends
+        // at r·NR + 16 ≤ (MR−1)·NR + NR = MR·NR_MAX, inside `acc`.
+        unsafe { _mm512_storeu_si512(acc.as_mut_ptr().add(r * NR) as *mut __m512i, v) };
     }
 }

@@ -121,7 +121,19 @@ impl KernelBackend {
 
     /// Whether this backend is both compiled into the binary and
     /// supported by the CPU we are running on.
+    ///
+    /// Under Miri only [`Scalar`](Self::Scalar) reports available:
+    /// `is_x86_feature_detected!` is unsupported by the interpreter, and
+    /// the `std::arch` intrinsic bodies could not be executed anyway —
+    /// the `cargo +nightly miri test` leg checks the portable kernels
+    /// plus all the surrounding unsafe plumbing (packing, arenas,
+    /// threadpool) with the scalar backend forced here.
     pub fn available(self) -> bool {
+        #[cfg(miri)]
+        {
+            return self == KernelBackend::Scalar;
+        }
+        #[cfg_attr(miri, allow(unreachable_code))]
         match self {
             KernelBackend::Scalar => true,
             #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]

@@ -19,39 +19,61 @@ const NR: usize = 8;
 /// The CPU must support NEON (`KernelBackend::Neon.available()`).
 #[target_feature(enable = "neon")]
 pub unsafe fn kernel_f32(ap: &[f32], bp: &[f32], kb: usize, acc: &mut [f32; MR * NR_MAX], mr: usize) {
-    match mr {
-        1 => rows_f32::<1>(ap, bp, kb, acc),
-        2 => rows_f32::<2>(ap, bp, kb, acc),
-        3 => rows_f32::<3>(ap, bp, kb, acc),
-        4 => rows_f32::<4>(ap, bp, kb, acc),
-        5 => rows_f32::<5>(ap, bp, kb, acc),
-        6 => rows_f32::<6>(ap, bp, kb, acc),
-        7 => rows_f32::<7>(ap, bp, kb, acc),
-        _ => rows_f32::<MR>(ap, bp, kb, acc),
+    // SAFETY: `rows_f32` is `#[inline(always)]`, so its intrinsics compile
+    // inside this fn's NEON window; its bounds requirements (`ap` ≥ kb·MR,
+    // `bp` ≥ kb·NR) are exactly this fn's own documented contract.
+    unsafe {
+        match mr {
+            1 => rows_f32::<1>(ap, bp, kb, acc),
+            2 => rows_f32::<2>(ap, bp, kb, acc),
+            3 => rows_f32::<3>(ap, bp, kb, acc),
+            4 => rows_f32::<4>(ap, bp, kb, acc),
+            5 => rows_f32::<5>(ap, bp, kb, acc),
+            6 => rows_f32::<6>(ap, bp, kb, acc),
+            7 => rows_f32::<7>(ap, bp, kb, acc),
+            _ => rows_f32::<MR>(ap, bp, kb, acc),
+        }
     }
 }
 
+/// # Safety
+/// Caller must have NEON enabled and `ap`/`bp` packed as documented on
+/// [`kernel_f32`].
 #[inline(always)]
 unsafe fn rows_f32<const R: usize>(ap: &[f32], bp: &[f32], kb: usize, acc: &mut [f32; MR * NR_MAX]) {
     debug_assert!(ap.len() >= kb * MR);
     debug_assert!(bp.len() >= kb * NR);
     // Two 128-bit accumulators per row (8 f32 columns).
-    let mut lo = [vdupq_n_f32(0.0); R];
-    let mut hi = [vdupq_n_f32(0.0); R];
+    // SAFETY: register-only zeroing; the feature window comes from the
+    // `#[target_feature]` caller this fn is always inlined into.
+    let mut lo = [unsafe { vdupq_n_f32(0.0) }; R];
+    // SAFETY: as above.
+    let mut hi = [unsafe { vdupq_n_f32(0.0) }; R];
     let a = ap.as_ptr();
     let b = bp.as_ptr();
     for k in 0..kb {
-        let b_lo = vld1q_f32(b.add(k * NR));
-        let b_hi = vld1q_f32(b.add(k * NR + 4));
+        // SAFETY: k < kb and `bp` holds kb strips of NR floats
+        // (debug-asserted above), so both 4-lane loads read
+        // b[k·NR .. k·NR+8] fully in bounds.
+        let b_lo = unsafe { vld1q_f32(b.add(k * NR)) };
+        // SAFETY: as above (upper half of the same strip).
+        let b_hi = unsafe { vld1q_f32(b.add(k * NR + 4)) };
         for r in 0..R {
-            let av = vdupq_n_f32(*a.add(k * MR + r));
-            lo[r] = vfmaq_f32(lo[r], av, b_lo);
-            hi[r] = vfmaq_f32(hi[r], av, b_hi);
+            // SAFETY: r < R ≤ MR and k < kb, and `ap` holds kb columns of
+            // MR floats, so a + k·MR + r points at a readable f32.
+            let av = unsafe { vdupq_n_f32(*a.add(k * MR + r)) };
+            // SAFETY: FMA on register operands only.
+            lo[r] = unsafe { vfmaq_f32(lo[r], av, b_lo) };
+            // SAFETY: as above.
+            hi[r] = unsafe { vfmaq_f32(hi[r], av, b_hi) };
         }
     }
     for r in 0..R {
-        vst1q_f32(acc.as_mut_ptr().add(r * NR), lo[r]);
-        vst1q_f32(acc.as_mut_ptr().add(r * NR + 4), hi[r]);
+        // SAFETY: r ≤ MR−1 and NR < NR_MAX, so the pair of 4-lane stores
+        // ends at r·NR + 8 ≤ (MR−1)·NR + 8 < MR·NR_MAX, inside `acc`.
+        unsafe { vst1q_f32(acc.as_mut_ptr().add(r * NR), lo[r]) };
+        // SAFETY: as above.
+        unsafe { vst1q_f32(acc.as_mut_ptr().add(r * NR + 4), hi[r]) };
     }
 }
 
@@ -61,38 +83,60 @@ unsafe fn rows_f32<const R: usize>(ap: &[f32], bp: &[f32], kb: usize, acc: &mut 
 /// The CPU must support NEON (`KernelBackend::Neon.available()`).
 #[target_feature(enable = "neon")]
 pub unsafe fn kernel_i16(ap: &[i16], bp: &[i16], kb: usize, acc: &mut [i32; MR * NR_MAX], mr: usize) {
-    match mr {
-        1 => rows_i16::<1>(ap, bp, kb, acc),
-        2 => rows_i16::<2>(ap, bp, kb, acc),
-        3 => rows_i16::<3>(ap, bp, kb, acc),
-        4 => rows_i16::<4>(ap, bp, kb, acc),
-        5 => rows_i16::<5>(ap, bp, kb, acc),
-        6 => rows_i16::<6>(ap, bp, kb, acc),
-        7 => rows_i16::<7>(ap, bp, kb, acc),
-        _ => rows_i16::<MR>(ap, bp, kb, acc),
+    // SAFETY: `rows_i16` is `#[inline(always)]`, so its intrinsics compile
+    // inside this fn's NEON window; its bounds requirements are exactly
+    // this fn's own documented contract.
+    unsafe {
+        match mr {
+            1 => rows_i16::<1>(ap, bp, kb, acc),
+            2 => rows_i16::<2>(ap, bp, kb, acc),
+            3 => rows_i16::<3>(ap, bp, kb, acc),
+            4 => rows_i16::<4>(ap, bp, kb, acc),
+            5 => rows_i16::<5>(ap, bp, kb, acc),
+            6 => rows_i16::<6>(ap, bp, kb, acc),
+            7 => rows_i16::<7>(ap, bp, kb, acc),
+            _ => rows_i16::<MR>(ap, bp, kb, acc),
+        }
     }
 }
 
+/// # Safety
+/// Caller must have NEON enabled and `ap`/`bp` packed as documented on
+/// [`kernel_i16`].
 #[inline(always)]
 unsafe fn rows_i16<const R: usize>(ap: &[i16], bp: &[i16], kb: usize, acc: &mut [i32; MR * NR_MAX]) {
     debug_assert!(ap.len() >= kb * MR);
     debug_assert!(bp.len() >= kb * NR);
-    let mut lo = [vdupq_n_s32(0); R];
-    let mut hi = [vdupq_n_s32(0); R];
+    // SAFETY: register-only zeroing inside the caller's NEON window.
+    let mut lo = [unsafe { vdupq_n_s32(0) }; R];
+    // SAFETY: as above.
+    let mut hi = [unsafe { vdupq_n_s32(0) }; R];
     let a = ap.as_ptr();
     let b = bp.as_ptr();
     for k in 0..kb {
-        let bv = vld1q_s16(b.add(k * NR));
+        // SAFETY: k < kb and `bp` holds kb strips of NR i16s
+        // (debug-asserted above), so the 8-lane load reads
+        // b[k·NR .. k·NR+8] fully in bounds.
+        let bv = unsafe { vld1q_s16(b.add(k * NR)) };
         for r in 0..R {
-            let av = vdupq_n_s16(*a.add(k * MR + r));
+            // SAFETY: r < R ≤ MR and k < kb, and `ap` holds kb columns of
+            // MR i16s, so a + k·MR + r points at a readable i16.
+            let av = unsafe { vdupq_n_s16(*a.add(k * MR + r)) };
             // Rounded Q15 product per i16 lane, widened and accumulated.
-            let p = vqrdmulhq_s16(av, bv);
-            lo[r] = vaddq_s32(lo[r], vmovl_s16(vget_low_s16(p)));
-            hi[r] = vaddq_s32(hi[r], vmovl_high_s16(p));
+            // SAFETY: register-only arithmetic.
+            let p = unsafe { vqrdmulhq_s16(av, bv) };
+            // SAFETY: register-only arithmetic (widen low half + add).
+            lo[r] = unsafe { vaddq_s32(lo[r], vmovl_s16(vget_low_s16(p))) };
+            // SAFETY: register-only arithmetic (widen high half + add).
+            hi[r] = unsafe { vaddq_s32(hi[r], vmovl_high_s16(p)) };
         }
     }
     for r in 0..R {
-        vst1q_s32(acc.as_mut_ptr().add(r * NR), lo[r]);
-        vst1q_s32(acc.as_mut_ptr().add(r * NR + 4), hi[r]);
+        // SAFETY: r ≤ MR−1 and NR < NR_MAX, so the pair of 4-lane i32
+        // stores ends at r·NR + 8 ≤ (MR−1)·NR + 8 < MR·NR_MAX, inside
+        // `acc`.
+        unsafe { vst1q_s32(acc.as_mut_ptr().add(r * NR), lo[r]) };
+        // SAFETY: as above.
+        unsafe { vst1q_s32(acc.as_mut_ptr().add(r * NR + 4), hi[r]) };
     }
 }

@@ -624,6 +624,11 @@ fn scale_and_mul(
     bs: BlockSizes,
 ) {
     let (rows, cols, rs, len) = meta;
+    // SAFETY: `cptr` was taken from a live `MatMut` whose buffer holds
+    // exactly `len` f32s (meta carries that matrix's own dimensions), and
+    // `gemm_batch` hands each batch entry's pointer to exactly one
+    // `parallel_for_macs` task — no aliasing across workers; the scoped
+    // dispatch keeps the borrowed `c` slice alive until every task joins.
     let data: &mut [f32] = unsafe { std::slice::from_raw_parts_mut(cptr.0, len) };
     let mut c = MatMut::strided(data, rows, cols, rs);
     scale_c(&mut c, 0.0);
@@ -631,11 +636,15 @@ fn scale_and_mul(
 }
 
 /// Raw pointer wrapper that asserts Send; used to hand disjoint C panels to
-/// scoped worker threads. Safety argument: all call sites partition C into
-/// non-overlapping row ranges or distinct batch entries.
+/// scoped worker threads.
 #[derive(Clone, Copy)]
 struct SendPtr(*mut f32);
+// SAFETY: all call sites partition C into non-overlapping row ranges or
+// distinct batch entries, so no two threads ever touch the same element,
+// and the scoped dispatch joins every worker before the borrow ends.
 unsafe impl Send for SendPtr {}
+// SAFETY: as above — a shared `&SendPtr` only ever copies the pointer
+// value out; element access stays partitioned per worker.
 unsafe impl Sync for SendPtr {}
 
 #[cfg(test)]

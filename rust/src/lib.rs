@@ -26,6 +26,21 @@
 //! configuration (precision, budget, threads, pinned batch sizes,
 //! autotune, overrides) into an immutable, `Arc`-shareable [`Engine`];
 //! per-thread work goes through [`Engine::session`] → [`Session`].
+//!
+//! # Unsafe policy
+//!
+//! `unsafe` is confined to an allowlisted set of leaf modules
+//! (threadpool, memory, gemm, the `std::arch` microkernels, the FFT
+//! complex reinterpret, and the q16 buffer reinterpret), every block
+//! carries a `// SAFETY:` comment, and the in-tree `unsafe-audit` lint
+//! (`cargo run -p unsafe-audit`) enforces both. See ARCHITECTURE.md
+//! "Unsafe inventory & verification" for which tool (model checker /
+//! Miri / sanitizers / audit lint) checks which invariant.
+
+// Every `unsafe` operation inside an `unsafe fn` must be wrapped in its
+// own `unsafe {}` block with its own SAFETY justification — a blanket
+// "the fn is unsafe" is not an audit trail.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod bench;
 pub mod conv;

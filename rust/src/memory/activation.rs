@@ -19,12 +19,23 @@ use super::tracker;
 
 /// A tracked set of reusable activation slots, owned by whoever runs
 /// forwards (a `Session`, an executor, a test). Capacity only grows.
+///
+/// Debug builds add two misuse guards (both compile out in release):
+/// * newly grown slot storage is exposed as
+///   [`POISON_BITS`](super::POISON_BITS) NaNs, so an op that reads a
+///   fresh slot before writing it fails loudly in the numerics suites;
+/// * [`take`](ActivationArena::take)/[`put`](ActivationArena::put)
+///   pairing is asserted per slot — double-takes and unmatched puts are
+///   exactly the bugs that silently alias two live activations.
 #[derive(Debug, Default)]
 pub struct ActivationArena {
     slots: Vec<Vec<f32>>,
     /// Tracked capacity (floats) per slot — kept outside the Vecs so a
     /// taken (empty) slot still accounts for its buffer.
     caps: Vec<usize>,
+    /// Debug-only: which slots are currently taken.
+    #[cfg(debug_assertions)]
+    taken: Vec<bool>,
 }
 
 impl ActivationArena {
@@ -54,25 +65,58 @@ impl ActivationArena {
         while self.slots.len() <= slot {
             self.slots.push(Vec::new());
             self.caps.push(0);
+            #[cfg(debug_assertions)]
+            self.taken.push(false);
         }
         if elems > self.caps[slot] {
             let grow = elems - self.caps[slot];
             tracker::track_alloc(grow * 4);
             self.slots[slot].reserve_exact(elems - self.slots[slot].len());
             self.caps[slot] = elems;
+            // Debug canary: expose the newly grown tail as poison NaNs
+            // (live contents below the old length are preserved). The
+            // executor resizes after `take`, so the release build never
+            // sees this length change.
+            #[cfg(debug_assertions)]
+            {
+                debug_assert!(
+                    !self.taken[slot],
+                    "ActivationArena::ensure({slot}): slot is currently taken"
+                );
+                self.slots[slot].resize(elems, super::poison());
+            }
         }
     }
 
     /// Move slot `slot`'s buffer out (zero-copy). Must be paired with
     /// [`ActivationArena::put`]; the slot accounts for its capacity even
-    /// while taken.
+    /// while taken. Debug builds panic on a double-take — the symptom of
+    /// two live values coloured into one slot.
     pub fn take(&mut self, slot: usize) -> Vec<f32> {
+        #[cfg(debug_assertions)]
+        {
+            assert!(
+                !self.taken[slot],
+                "ActivationArena::take({slot}): slot already taken (missing put?)"
+            );
+            self.taken[slot] = true;
+        }
         std::mem::take(&mut self.slots[slot])
     }
 
     /// Return a buffer taken from `slot`. If an op grew it beyond the
-    /// reserved capacity (it should not), the growth is recorded.
+    /// reserved capacity (it should not), the growth is recorded. Debug
+    /// builds panic when the slot was not taken — an unmatched `put`
+    /// overwrites a buffer some other owner may still expect to hold.
     pub fn put(&mut self, slot: usize, buf: Vec<f32>) {
+        #[cfg(debug_assertions)]
+        {
+            assert!(
+                self.taken[slot],
+                "ActivationArena::put({slot}): slot was not taken"
+            );
+            self.taken[slot] = false;
+        }
         if buf.capacity() > self.caps[slot] {
             tracker::track_alloc((buf.capacity() - self.caps[slot]) * 4);
             self.caps[slot] = buf.capacity();
@@ -116,6 +160,7 @@ mod tests {
             assert_eq!(a.bytes(), 60);
             let mut v = a.take(0);
             assert_eq!(current_bytes(), before + 60, "taken slot still tracked");
+            v.clear();
             v.resize(10, 1.0);
             a.put(0, v);
             assert_eq!(a.data(0), &[1.0; 10]);
@@ -129,5 +174,45 @@ mod tests {
         let a = ActivationArena::with_slots(&[4, 0, 2]);
         assert_eq!(a.slot_count(), 3);
         assert_eq!(a.bytes(), 24);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn ensure_growth_is_poisoned_in_debug() {
+        let mut a = ActivationArena::new();
+        a.ensure(0, 3);
+        assert!(
+            a.data(0)
+                .iter()
+                .all(|v| v.to_bits() == crate::memory::POISON_BITS),
+            "fresh slot storage must carry the poison canary"
+        );
+        // Live contents below the old length survive growth; only the
+        // newly exposed tail is poisoned.
+        let mut v = a.take(0);
+        v.fill(2.0);
+        a.put(0, v);
+        a.ensure(0, 5);
+        assert_eq!(&a.data(0)[..3], &[2.0; 3]);
+        assert!(a.data(0)[3..]
+            .iter()
+            .all(|v| v.to_bits() == crate::memory::POISON_BITS));
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "already taken")]
+    fn double_take_panics_in_debug() {
+        let mut a = ActivationArena::with_slots(&[4]);
+        let _v = a.take(0);
+        let _w = a.take(0);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "was not taken")]
+    fn unmatched_put_panics_in_debug() {
+        let mut a = ActivationArena::with_slots(&[4]);
+        a.put(0, vec![0.0; 4]);
     }
 }

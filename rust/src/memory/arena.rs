@@ -142,10 +142,14 @@ impl Arena {
 
     /// Borrow the first `elems` floats. Contents are stale (whatever the
     /// previous frame left) — plans fully overwrite what they read, which
-    /// is why this is not zero-filled.
+    /// is why this is not zero-filled. Debug builds poison the slice with
+    /// [`POISON_BITS`](super::POISON_BITS) NaNs so a plan that reads a
+    /// region before writing it fails loudly in the correctness suites.
     pub fn slice(&mut self, elems: usize) -> &mut [f32] {
         self.reserve(elems);
-        &mut self.buf[..elems]
+        let s = &mut self.buf[..elems];
+        super::poison_fill(s);
+        s
     }
 
     /// Current capacity in floats.
@@ -233,10 +237,21 @@ mod tests {
     }
 
     #[test]
-    fn arena_slice_preserves_contents() {
+    fn arena_slice_is_stale_in_release_and_poisoned_in_debug() {
         let mut a = Arena::new();
         a.slice(4).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
-        // Not zeroed on re-borrow: plans rely on overwrite semantics.
-        assert_eq!(a.slice(4), &[1.0, 2.0, 3.0, 4.0]);
+        let s = a.slice(4);
+        if cfg!(debug_assertions) {
+            // Debug builds poison fresh borrows so read-before-write
+            // plans surface as NaNs instead of silently reusing frames.
+            assert!(
+                s.iter().all(|v| v.to_bits() == crate::memory::POISON_BITS),
+                "Arena::slice must poison in debug builds, got {s:?}"
+            );
+        } else {
+            // Release: not zeroed on re-borrow — plans rely on overwrite
+            // semantics and the borrow stays zero-cost.
+            assert_eq!(s, &[1.0, 2.0, 3.0, 4.0]);
+        }
     }
 }

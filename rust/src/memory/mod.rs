@@ -30,6 +30,28 @@ pub use tracker::{current_bytes, peak_bytes, MeasureScope};
 
 use std::sync::atomic::Ordering;
 
+/// Bit pattern of the debug-build poison sentinel: a quiet NaN with a
+/// recognizable `DEAD` payload. Freshly taken non-zeroed scratch
+/// ([`Workspace::take_uninit`], [`Workspace::take_split`],
+/// [`Arena::slice`]) is filled with this value in debug builds, so any
+/// consumer that reads scratch before writing it produces NaNs that
+/// propagate straight into the correctness suites instead of silently
+/// reusing stale data. Release builds skip the fill — the non-zeroing
+/// fast path is the whole point of these accessors.
+pub const POISON_BITS: u32 = 0x7FC0_DEAD;
+
+/// The poison sentinel as an `f32` (see [`POISON_BITS`]).
+pub fn poison() -> f32 {
+    f32::from_bits(POISON_BITS)
+}
+
+/// Fill `s` with the poison sentinel in debug builds; no-op in release.
+pub(crate) fn poison_fill(s: &mut [f32]) {
+    if cfg!(debug_assertions) {
+        s.fill(poison());
+    }
+}
+
 /// A tracked scratch buffer of `f32`s. Allocation and release are recorded
 /// in the global [`tracker`]; the buffer is reusable across calls (the
 /// serving hot path allocates once per worker, then reuses). Storage is
@@ -90,16 +112,27 @@ impl Workspace {
     /// buffers and all plan workspaces, and worth it: `take_zeroed` on
     /// cv4's lowered matrix would write ~150 MB of zeros per call for
     /// nothing.
+    ///
+    /// Debug builds poison the returned slice with [`POISON_BITS`] NaNs
+    /// so a read-before-write consumer fails loudly (release keeps the
+    /// zero-cost contract).
     pub fn take_uninit(&mut self, elems: usize) -> &mut [f32] {
         self.reserve(elems);
-        &mut self.buf[..elems]
+        let s = &mut self.buf[..elems];
+        poison_fill(s);
+        s
     }
 
     /// Split into two disjoint tracked slices (e.g. lowered matrix + aux).
+    /// Non-zeroing like [`Workspace::take_uninit`], with the same
+    /// debug-build poison canary on both halves.
     pub fn take_split(&mut self, a: usize, b: usize) -> (&mut [f32], &mut [f32]) {
         self.reserve(a + b);
         let (x, rest) = self.buf.split_at_mut(a);
-        (x, &mut rest[..b])
+        let y = &mut rest[..b];
+        poison_fill(x);
+        poison_fill(y);
+        (x, y)
     }
 
     /// Current capacity in floats.
@@ -273,12 +306,35 @@ mod tests {
     }
 
     #[test]
-    fn take_uninit_does_not_zero() {
+    fn take_uninit_does_not_zero_and_poisons_in_debug() {
         let mut w = Workspace::new();
         w.take_uninit(4).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
-        // Stale contents survive — the full-overwrite contract.
-        assert_eq!(w.take_uninit(4), &[1.0, 2.0, 3.0, 4.0]);
-        assert_eq!(w.take(2), &[1.0, 2.0]);
+        let s = w.take_uninit(4);
+        if cfg!(debug_assertions) {
+            // Debug builds overwrite fresh scratch with the recognizable
+            // poison NaN so read-before-write bugs surface immediately.
+            assert!(
+                s.iter().all(|v| v.to_bits() == POISON_BITS),
+                "take_uninit must poison in debug builds, got {s:?}"
+            );
+        } else {
+            // Release: stale contents survive — the zero-cost
+            // full-overwrite contract.
+            assert_eq!(s, &[1.0, 2.0, 3.0, 4.0]);
+        }
+    }
+
+    #[test]
+    fn take_split_poisons_both_halves_in_debug() {
+        let mut w = Workspace::new();
+        w.take_uninit(5).fill(7.0);
+        let (a, b) = w.take_split(3, 2);
+        if cfg!(debug_assertions) {
+            assert!(a.iter().chain(b.iter()).all(|v| v.to_bits() == POISON_BITS));
+        } else {
+            assert_eq!(a, &[7.0; 3]);
+            assert_eq!(b, &[7.0; 2]);
+        }
     }
 
     #[test]

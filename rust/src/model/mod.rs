@@ -11,6 +11,10 @@
 //! through the PJRT path ([`runtime`](crate::runtime)) for
 //! cross-checking against the JAX artifacts.
 
+// The model/graph layer builds on safe substrates only: no unsafe, ever
+// (enforced — see the crate-level unsafe policy and tools/unsafe-audit).
+#![forbid(unsafe_code)]
+
 pub mod evalset;
 pub mod graph;
 pub mod graph_ir;

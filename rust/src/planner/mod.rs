@@ -12,6 +12,10 @@
 //!   real geometry once and cache the winner (what production frameworks
 //!   do at model-load time).
 
+// Planning is pure computation over shapes and costs: no unsafe, ever
+// (enforced — see the crate-level unsafe policy and tools/unsafe-audit).
+#![forbid(unsafe_code)]
+
 pub mod autotune;
 
 pub use autotune::{AutoTuner, Measurement};

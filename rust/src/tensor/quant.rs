@@ -124,10 +124,12 @@ pub fn i16_slots(elems: usize) -> usize {
 }
 
 /// Reinterpret an f32 scratch region as i16 storage (`2 · len` values).
-/// Sound: `f32` is 4-byte aligned ≥ `i16`'s 2, both are plain-old-data,
-/// and the q16 consumers fully overwrite before reading (the same
-/// contract the f32 lowering buffers already rely on).
 pub fn f32_as_i16_mut(buf: &mut [f32]) -> &mut [i16] {
+    // SAFETY: `f32` is 4-byte aligned ≥ `i16`'s 2, both are plain-old-data
+    // with no invalid bit patterns, the new length 2·len covers exactly the
+    // same bytes, and the borrow of `buf` pins the region for the returned
+    // lifetime. The q16 consumers fully overwrite before reading (the same
+    // contract the f32 lowering buffers already rely on).
     unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut i16, buf.len() * 2) }
 }
 

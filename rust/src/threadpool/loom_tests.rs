@@ -1,0 +1,121 @@
+//! Exhaustive-interleaving tests of the real pool protocol, compiled
+//! and run only under `RUSTFLAGS="--cfg loom"` (CI's `loom` job):
+//!
+//! ```text
+//! LOOM_MAX_PREEMPTIONS=2 RUSTFLAGS="--cfg loom" cargo test --lib -- loom
+//! ```
+//!
+//! These drive the exact production `Pool` — dispatch (epoch bump +
+//! condvar wake), `fetch_add` slot claiming, the completion-barrier
+//! drop guard, and panic propagation — through [`super::model`]'s
+//! bounded scheduler. Configurations are deliberately tiny (1–2
+//! workers, 2–3 indices): the protocol's states are all reachable at
+//! this size, and each extra thread multiplies the schedule space.
+//!
+//! What each property means when it fails:
+//! * an index hit 0 or 2+ times → chunk claiming raced,
+//! * a deadlock report → a lost park/unpark wakeup,
+//! * a stale read after `run` returns → the completion barrier let the
+//!   borrow go before a worker was done,
+//! * `catch_unwind` seeing `Ok` → a worker panic was swallowed.
+
+use super::model::model;
+use super::sync::atomic::{AtomicUsize, Ordering};
+use super::{Pool, SharedSlice};
+
+#[test]
+fn loom_every_index_claimed_exactly_once() {
+    model(|| {
+        let pool = Pool::new(1);
+        let hits: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(2, 3, &|_slot, i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} not claimed exactly once");
+        }
+    });
+}
+
+#[test]
+fn loom_slot_ids_stay_under_thread_cap() {
+    model(|| {
+        let pool = Pool::new(2);
+        let bad = AtomicUsize::new(0);
+        pool.run(3, 3, &|slot, _i| {
+            if slot >= 3 {
+                bad.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(bad.load(Ordering::Relaxed), 0, "a worker claimed a slot past the cap");
+    });
+}
+
+#[test]
+fn loom_back_to_back_jobs_never_lose_a_wakeup() {
+    // Two dispatches in a row: a worker that parked after (or during)
+    // job 1 must observe job 2's epoch bump either on the spin ticker
+    // or via the condvar — every schedule must complete, and any lost
+    // wakeup surfaces as a deadlock violation.
+    model(|| {
+        let pool = Pool::new(1);
+        let total = AtomicUsize::new(0);
+        pool.run(2, 2, &|_, _| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.run(2, 2, &|_, _| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4);
+    });
+}
+
+#[test]
+fn loom_barrier_releases_borrow_only_after_workers_finish() {
+    // Workers write disjoint SharedSlice lanes with plain stores; the
+    // submitter reads the buffer immediately after `run` returns. If
+    // the completion barrier could release the borrow early in any
+    // schedule, some lane would still read 0 here (and the leaked
+    // worker would additionally fail the end-of-execution check).
+    model(|| {
+        let pool = Pool::new(1);
+        let mut buf = [0usize; 2];
+        {
+            let sh = SharedSlice::new(&mut buf);
+            pool.run(2, 2, &|_, i| {
+                sh.range(i, 1)[0] = i + 1;
+            });
+        }
+        assert_eq!(buf, [1, 2], "disjoint writes must all be visible after the barrier");
+    });
+}
+
+#[test]
+fn loom_worker_panic_is_delivered_to_the_submitter() {
+    model(|| {
+        let pool = Pool::new(1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(2, 2, &|_, i| {
+                if i == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "a body panic must re-raise on the submitting thread");
+        // The pool must stay usable after a propagated panic.
+        let ok = AtomicUsize::new(0);
+        pool.run(2, 2, &|_, _| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 2);
+    });
+}
+
+#[test]
+fn loom_shutdown_joins_every_worker() {
+    model(|| {
+        let pool = Pool::new(2);
+        pool.shutdown();
+        assert_eq!(pool.live_workers(), 0, "shutdown must join every worker");
+    });
+}

@@ -44,32 +44,47 @@
 //! assert stays flat across repeated `Session::infer` calls — the
 //! threading analogue of the zero-tracked-alloc invariant.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+pub mod model;
+pub mod sync;
+
+#[cfg(all(loom, test))]
+mod loom_tests;
+
+use self::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use self::sync::{Arc, Condvar, Mutex};
 
 /// Total OS threads ever spawned by this module (pool workers + the
-/// scoped-spawn baseline), process-wide.
-static OS_THREADS_SPAWNED: AtomicUsize = AtomicUsize::new(0);
+/// scoped-spawn baseline), process-wide. Monitoring only — deliberately
+/// a real `std` atomic even under `--cfg loom` (not part of the
+/// dispatch protocol; modelling it would only inflate the state space).
+static OS_THREADS_SPAWNED: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
 
 /// Currently-alive pool workers, process-wide (decremented as workers
 /// exit during shutdown — the no-leak tests watch this return to its
-/// baseline).
-static LIVE_POOL_WORKERS: AtomicUsize = AtomicUsize::new(0);
+/// baseline). Monitoring only; real `std` atomic (see above).
+static LIVE_POOL_WORKERS: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
 
 /// Total OS threads ever spawned by this module, process-wide.
 pub fn os_threads_spawned() -> usize {
-    OS_THREADS_SPAWNED.load(Ordering::Acquire)
+    OS_THREADS_SPAWNED.load(std::sync::atomic::Ordering::Acquire)
 }
 
 /// Pool workers currently alive, process-wide.
 pub fn live_pool_workers() -> usize {
-    LIVE_POOL_WORKERS.load(Ordering::Acquire)
+    LIVE_POOL_WORKERS.load(std::sync::atomic::Ordering::Acquire)
 }
 
 /// Spins on the epoch ticker before parking on the condvar: long enough
 /// to catch the back-to-back loops of one conv layer without a syscall,
 /// short enough not to burn a core while a server sits idle.
+#[cfg(not(loom))]
 const SPIN_ROUNDS: u32 = 1 << 12;
+
+/// Under the model checker every spin iteration is a scheduling point;
+/// one round keeps the "ticker observed during spin" path in the
+/// explored space without exploding it.
+#[cfg(loom)]
+const SPIN_ROUNDS: u32 = 1;
 
 /// A parallel-loop job, lifetime-erased into the pool's slot. The
 /// submitting thread keeps `func`/`next`/`slots` alive until every
@@ -91,7 +106,7 @@ struct JobDesc {
     threads: usize,
 }
 
-// Safety: the raw pointers reference stack data of the submitting
+// SAFETY: the raw pointers reference stack data of the submitting
 // thread, which blocks until every worker that could dereference them
 // has deregistered from the job (the completion barrier in `CloseGuard`).
 unsafe impl Send for JobDesc {}
@@ -124,7 +139,7 @@ struct Shared {
 /// epoch bump + wake; no OS threads are created after construction.
 pub struct Pool {
     shared: Arc<Shared>,
-    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    handles: Mutex<Vec<sync::thread::JoinHandle<()>>>,
     /// Serializes dispatch: a second submitter (another session sharing
     /// the pool, or a nested loop) finds it held and runs inline.
     submit: Mutex<()>,
@@ -161,12 +176,12 @@ impl Pool {
         let mut handles = pool.handles.lock().unwrap();
         for id in 0..workers {
             let shared = Arc::clone(&shared);
-            OS_THREADS_SPAWNED.fetch_add(1, Ordering::AcqRel);
-            LIVE_POOL_WORKERS.fetch_add(1, Ordering::AcqRel);
+            OS_THREADS_SPAWNED.fetch_add(1, std::sync::atomic::Ordering::AcqRel);
+            LIVE_POOL_WORKERS.fetch_add(1, std::sync::atomic::Ordering::AcqRel);
             pool.shared.live.fetch_add(1, Ordering::AcqRel);
             pool.spawned.fetch_add(1, Ordering::AcqRel);
             handles.push(
-                std::thread::Builder::new()
+                sync::thread::Builder::new()
                     .name(format!("mec-pool-{id}"))
                     .spawn(move || worker_loop(&shared))
                     .expect("spawn pool worker"),
@@ -219,8 +234,10 @@ impl Pool {
         // conv loops have fairly uniform bodies so a modest chunk works.
         let chunk = (n / (threads * 4)).max(1);
         let desc = JobDesc {
-            // Lifetime erasure: sound because `CloseGuard` below keeps
-            // this frame alive until every registered worker is done.
+            // SAFETY: lifetime erasure is sound because `CloseGuard`
+            // below keeps this frame alive until every registered worker
+            // has deregistered — no worker can hold the erased reference
+            // past this function's return.
             func: unsafe {
                 std::mem::transmute::<
                     &(dyn Fn(usize, usize) + Sync),
@@ -345,7 +362,7 @@ fn worker_loop(shared: &Shared) {
             && spins < SPIN_ROUNDS
         {
             spins += 1;
-            std::hint::spin_loop();
+            sync::spin_loop();
         }
         let job = {
             let mut st = shared.state.lock().unwrap();
@@ -358,10 +375,11 @@ fn worker_loop(shared: &Shared) {
                     match st.job {
                         // Register while holding the lock: the submitter
                         // cannot finish closing until we are counted.
-                        // (Deref of the erased job pointers is sound
-                        // here: `job` is still Some under the mutex, so
-                        // the submitter has not passed its close.)
                         Some(d) => {
+                            // SAFETY: `job` is still `Some` under the
+                            // state mutex, so the submitter has not yet
+                            // passed its close barrier and the stack
+                            // frame holding `slots` is alive.
                             let taken = unsafe { (*d.slots).load(Ordering::Relaxed) };
                             if taken >= d.threads {
                                 // Fully seated: skip without registering
@@ -379,9 +397,17 @@ fn worker_loop(shared: &Shared) {
             }
         };
         let Some(d) = job else { continue };
+        // SAFETY: this worker is registered on the job (`st.active` was
+        // incremented under the lock above), so the submitter's
+        // completion barrier keeps the frame owning `slots` alive until
+        // we deregister below.
         let slot = unsafe { (*d.slots).fetch_add(1, Ordering::Relaxed) };
         if slot < d.threads {
+            // SAFETY: same barrier argument as `slots` above — the
+            // erased closure reference outlives our registration.
             let body = unsafe { &*d.func };
+            // SAFETY: same barrier argument; `next` lives in the same
+            // submitter frame.
             let next = unsafe { &*d.next };
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 run_chunks(next, d.n, d.chunk, slot, body);
@@ -397,7 +423,7 @@ fn worker_loop(shared: &Shared) {
         }
     }
     shared.live.fetch_sub(1, Ordering::AcqRel);
-    LIVE_POOL_WORKERS.fetch_sub(1, Ordering::AcqRel);
+    LIVE_POOL_WORKERS.fetch_sub(1, std::sync::atomic::Ordering::AcqRel);
 }
 
 /// Coefficients for the inline-vs-dispatch decision: what one unit of
@@ -622,15 +648,17 @@ where
         }
         return;
     }
-    let next = AtomicUsize::new(0);
+    // The scoped baseline is not part of the modelled protocol: it uses
+    // real `std` atomics and scoped threads even under `--cfg loom`.
+    let next = std::sync::atomic::AtomicUsize::new(0);
     let chunk = (n / (threads * 4)).max(1);
-    OS_THREADS_SPAWNED.fetch_add(threads, Ordering::AcqRel);
+    OS_THREADS_SPAWNED.fetch_add(threads, std::sync::atomic::Ordering::AcqRel);
     std::thread::scope(|s| {
         for t in 0..threads {
             let next = &next;
             let body = &body;
             s.spawn(move || loop {
-                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                let start = next.fetch_add(chunk, std::sync::atomic::Ordering::Relaxed);
                 if start >= n {
                     break;
                 }
@@ -659,7 +687,13 @@ pub struct SharedSlice<T = f32> {
     len: usize,
 }
 
+// SAFETY: the wrapped `&mut [T]` outlives the wrapper by construction
+// (the pool's completion barrier — or scope, for the baseline — keeps
+// the borrow alive for as long as any worker can reach it), and the
+// documented contract requires workers to write disjoint regions only.
 unsafe impl<T: Send> Send for SharedSlice<T> {}
+// SAFETY: see the Send impl above; `Sync` is what lets `&SharedSlice`
+// be captured by the `Fn(usize, usize) + Sync` job body.
 unsafe impl<T: Send> Sync for SharedSlice<T> {}
 
 impl<T> SharedSlice<T> {
@@ -671,10 +705,46 @@ impl<T> SharedSlice<T> {
     }
 
     /// Reconstruct the full slice. Each caller must touch only its own
-    /// disjoint region (see type docs).
+    /// disjoint region (see type docs). Prefer [`SharedSlice::range`],
+    /// which bounds-checks the caller's window.
     #[allow(clippy::mut_from_ref)]
     pub fn slice(&self) -> &mut [T] {
+        // SAFETY: `ptr`/`len` came from a live `&mut [T]` (see `new`);
+        // the type's Send/Sync contract makes the holder responsible for
+        // disjointness, and the pool barrier for liveness.
         unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+
+    /// The caller's disjoint window `start..start + len`, bounds-checked
+    /// against the wrapped slice. Panics (rather than aliasing memory
+    /// off the end of the allocation) when the window does not fit —
+    /// the misuse guard for hand-computed worker ranges.
+    #[allow(clippy::mut_from_ref)]
+    pub fn range(&self, start: usize, len: usize) -> &mut [T] {
+        let end = start
+            .checked_add(len)
+            .expect("SharedSlice::range: start + len overflows");
+        assert!(
+            end <= self.len,
+            "SharedSlice::range out of bounds: {start}..{end} exceeds len {}",
+            self.len
+        );
+        // SAFETY: the window was just checked to lie inside the wrapped
+        // slice; liveness and cross-worker disjointness are the type's
+        // documented contract (see `slice`).
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), len) }
+    }
+
+    /// Two disjoint windows split at `mid` (panics if `mid > len`) —
+    /// the checked way to hand two workers non-overlapping halves.
+    #[allow(clippy::mut_from_ref)]
+    pub fn split_at(&self, mid: usize) -> (&mut [T], &mut [T]) {
+        assert!(
+            mid <= self.len,
+            "SharedSlice::split_at out of bounds: mid {mid} exceeds len {}",
+            self.len
+        );
+        (self.range(0, mid), self.range(mid, self.len - mid))
     }
 
     pub fn len(&self) -> usize {
@@ -686,7 +756,10 @@ impl<T> SharedSlice<T> {
     }
 }
 
-#[cfg(test)]
+// The concrete-execution tests exercise real threads and timing; under
+// `--cfg loom` the facade swaps in the serializing model shims, where
+// the interleaving tests in `loom_tests` take over instead.
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -845,6 +918,58 @@ mod tests {
             os_threads_spawned() >= before + 3,
             "baseline spawns are counted"
         );
+    }
+
+    #[test]
+    fn shared_slice_range_and_split_cover_exactly() {
+        let mut buf = vec![0u32; 10];
+        let sh = SharedSlice::new(&mut buf);
+        assert_eq!(sh.len(), 10);
+        assert!(!sh.is_empty());
+        sh.range(0, 4).fill(1);
+        sh.range(4, 6).fill(2);
+        let (a, b) = sh.split_at(7);
+        assert_eq!(a.len(), 7);
+        assert_eq!(b.len(), 3);
+        // Degenerate but legal windows.
+        assert_eq!(sh.range(10, 0).len(), 0);
+        assert_eq!(sh.split_at(0).0.len(), 0);
+        drop(sh);
+        assert_eq!(buf, [1, 1, 1, 1, 2, 2, 2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn shared_slice_out_of_bounds_range_panics() {
+        let mut buf = vec![0.0f32; 8];
+        let sh = SharedSlice::new(&mut buf);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = sh.range(4, 5);
+        }));
+        assert!(r.is_err(), "window past the end must panic, not alias");
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = sh.range(usize::MAX, 2);
+        }));
+        assert!(r.is_err(), "start+len overflow must panic");
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = sh.split_at(9);
+        }));
+        assert!(r.is_err(), "split point past the end must panic");
+    }
+
+    #[test]
+    fn shared_slice_disjoint_parallel_writes_land() {
+        let par = Parallelism::new(4);
+        let mut buf = vec![0usize; 64];
+        let sh = SharedSlice::new(&mut buf);
+        par.parallel_for(8, |i| {
+            let lane = sh.range(i * 8, 8);
+            for (k, v) in lane.iter_mut().enumerate() {
+                *v = i * 8 + k;
+            }
+        });
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v, i);
+        }
     }
 
     #[test]

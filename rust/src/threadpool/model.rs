@@ -1,0 +1,1104 @@
+//! An in-tree bounded model checker for the pool's sync protocol — the
+//! `loom::sync` role behind [`super::sync`] (the real `loom` crate is
+//! not vendorable offline).
+//!
+//! # How it works (CHESS-style systematic concurrency testing)
+//!
+//! [`model`] runs a test closure many times. Each run spawns real OS
+//! threads, but a scheduler serializes them completely: exactly one
+//! thread holds the "active" token at a time, and every visible
+//! operation on a model sync primitive (atomic load/store/RMW, mutex
+//! lock, condvar wait/notify, join) is a *scheduling point* where the
+//! checker may hand the token to another runnable thread. The sequence
+//! of scheduling decisions is recorded; after each run the checker
+//! backtracks depth-first to the deepest decision with an unexplored
+//! alternative and replays, until the bounded space is exhausted.
+//!
+//! Bounds, tuned by environment variables (names follow loom's):
+//!
+//! * `LOOM_MAX_PREEMPTIONS` (default 2) — max *preemptive* context
+//!   switches per execution (switching away from a thread that could
+//!   have continued). Switches at blocking points are free. Two
+//!   preemptions find the overwhelming majority of real schedule bugs
+//!   (the CHESS result) while keeping the space polynomial.
+//! * `LOOM_MAX_ITERATIONS` (default 200k) — execution-count cap; hitting
+//!   it prints a truncation warning rather than failing.
+//! * `LOOM_MAX_STEPS` (default 200k) — per-execution scheduling-point
+//!   cap; exceeding it is reported as a livelock violation.
+//!
+//! # What a violation looks like
+//!
+//! Deadlock (no runnable thread while some are blocked), livelock (step
+//! cap), a leaked thread at closure end, or any panic from the closure
+//! body (assertion failures included) fails the test with a panic. On a
+//! violation the checker deliberately *leaks* the other parked threads
+//! for that execution instead of unwinding through them — unwinding
+//! foreign stacks from inside `Drop` impls would risk a double-panic
+//! abort and hide the report.
+//!
+//! # Model fidelity
+//!
+//! This checker explores *sequentially consistent* executions only:
+//! `Ordering` arguments are accepted and ignored. It will therefore not
+//! find bugs that require observing relaxed/reordered memory (loom's
+//! extra power); it does find lost wakeups, lost updates, double claims,
+//! barrier misuse, and deadlocks — the failure classes the pool protocol
+//! actually risks. Condvars never wake spuriously in the model, and
+//! `notify_one` wakes the longest-waiting thread deterministically.
+
+use std::any::Any;
+use std::cell::{RefCell, UnsafeCell};
+use std::marker::PhantomData;
+use std::ops::{Deref, DerefMut};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc as StdArc, Condvar as StdCondvar, Mutex as StdMutex};
+
+type ThreadResult = Result<Box<dyn Any + Send>, Box<dyn Any + Send>>;
+
+// ---------------------------------------------------------------------------
+// Scheduler core
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum TState {
+    Runnable,
+    Blocked,
+    Finished,
+}
+
+struct ThreadRec {
+    state: TState,
+    joiners: Vec<usize>,
+    result: Option<ThreadResult>,
+}
+
+impl ThreadRec {
+    fn new() -> ThreadRec {
+        ThreadRec {
+            state: TState::Runnable,
+            joiners: Vec::new(),
+            result: None,
+        }
+    }
+}
+
+/// One recorded scheduling decision: which of `options` legal successor
+/// threads was chosen. Only points with more than one legal option are
+/// recorded (single-option points cannot branch).
+#[derive(Clone, Copy)]
+struct ChoicePoint {
+    chosen: usize,
+    options: usize,
+}
+
+struct SchedState {
+    /// Thread currently holding the run token.
+    active: usize,
+    threads: Vec<ThreadRec>,
+    preemptions: usize,
+    bound: usize,
+    /// Forced decision prefix for this execution (from backtracking).
+    replay: Vec<usize>,
+    /// Decisions taken so far (index into `replay` while it lasts).
+    decided: usize,
+    path: Vec<ChoicePoint>,
+    steps: usize,
+    max_steps: usize,
+    failed: Option<String>,
+}
+
+struct Sched {
+    m: StdMutex<SchedState>,
+    cv: StdCondvar,
+    /// Real OS handles of this execution's model threads, joined at the
+    /// end of a clean execution (leaked on violation — see module docs).
+    real: StdMutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+#[derive(Clone)]
+struct Ctx {
+    sched: StdArc<Sched>,
+    tid: usize,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+fn ctx() -> Option<Ctx> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+/// Clears the thread-local execution context on drop, so a violation
+/// panic unwinding out of the test closure leaves no stale scheduler
+/// behind on the harness thread.
+struct CtxGuard;
+
+impl CtxGuard {
+    fn set(sched: StdArc<Sched>, tid: usize) -> CtxGuard {
+        CTX.with(|c| *c.borrow_mut() = Some(Ctx { sched, tid }));
+        CtxGuard
+    }
+}
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        CTX.with(|c| *c.borrow_mut() = None);
+    }
+}
+
+impl Sched {
+    fn new(replay: Vec<usize>, bound: usize, max_steps: usize) -> Sched {
+        Sched {
+            m: StdMutex::new(SchedState {
+                active: 0,
+                threads: vec![ThreadRec::new()],
+                preemptions: 0,
+                bound,
+                replay,
+                decided: 0,
+                path: Vec::new(),
+                steps: 0,
+                max_steps,
+                failed: None,
+            }),
+            cv: StdCondvar::new(),
+            real: StdMutex::new(Vec::new()),
+        }
+    }
+
+    /// Record the violation, wake every parked thread so each can raise
+    /// it, and raise it here. Never returns.
+    fn fail_locked(&self, mut st: std::sync::MutexGuard<'_, SchedState>, msg: &str) -> ! {
+        let full = format!("mec model checker: {msg}");
+        st.failed = Some(full.clone());
+        self.cv.notify_all();
+        drop(st);
+        panic!("{full}");
+    }
+
+    /// Scheduling point for the active thread. `runnable` says whether
+    /// the caller may keep the token (false = it just blocked and its
+    /// `ThreadRec` state is already non-runnable). Returns once the
+    /// caller is active again.
+    fn reschedule_locked(&self, mut st: std::sync::MutexGuard<'_, SchedState>, me: usize, runnable: bool) {
+        if let Some(msg) = st.failed.clone() {
+            drop(st);
+            if std::thread::panicking() {
+                return;
+            }
+            panic!("{msg}");
+        }
+        st.steps += 1;
+        if st.steps > st.max_steps {
+            let cap = st.max_steps;
+            self.fail_locked(st, &format!("step cap ({cap}) exceeded: livelock or unbounded loop"));
+        }
+        let mut options: Vec<usize> = Vec::new();
+        if runnable {
+            options.push(me);
+        }
+        // Switching away from a still-runnable thread is a preemption
+        // and only legal under the bound; switching off a blocked
+        // thread is free.
+        if !runnable || st.preemptions < st.bound {
+            for (tid, rec) in st.threads.iter().enumerate() {
+                if tid != me && rec.state == TState::Runnable {
+                    options.push(tid);
+                }
+            }
+        }
+        if options.is_empty() {
+            if st.threads.iter().all(|t| t.state == TState::Finished) {
+                return;
+            }
+            self.fail_locked(st, "deadlock: every live thread is blocked");
+        }
+        let chosen = Self::choose_locked(&mut st, &options);
+        if chosen == me {
+            return;
+        }
+        if runnable {
+            st.preemptions += 1;
+        }
+        st.active = chosen;
+        self.cv.notify_all();
+        while st.active != me {
+            if let Some(msg) = st.failed.clone() {
+                drop(st);
+                panic!("{msg}");
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Pick the next thread among `options` (preferred-first order),
+    /// consuming the replay prefix and recording branchable decisions.
+    fn choose_locked(st: &mut SchedState, options: &[usize]) -> usize {
+        if options.len() == 1 {
+            return options[0];
+        }
+        let idx = if st.decided < st.replay.len() {
+            st.replay[st.decided].min(options.len() - 1)
+        } else {
+            0
+        };
+        st.decided += 1;
+        st.path.push(ChoicePoint {
+            chosen: idx,
+            options: options.len(),
+        });
+        options[idx]
+    }
+
+    /// Interleaving point before a visible operation.
+    fn yield_active(&self, me: usize) {
+        let st = self.m.lock().unwrap();
+        self.reschedule_locked(st, me, true);
+    }
+
+    fn register_thread(&self) -> usize {
+        let mut st = self.m.lock().unwrap();
+        st.threads.push(ThreadRec::new());
+        st.threads.len() - 1
+    }
+
+    /// Park a freshly spawned model thread until first scheduled.
+    fn wait_first_schedule(&self, me: usize) {
+        let mut st = self.m.lock().unwrap();
+        while st.active != me {
+            if let Some(msg) = st.failed.clone() {
+                drop(st);
+                panic!("{msg}");
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// A model thread's closure returned (or panicked, caught): record
+    /// the result, wake joiners, and hand the token onward.
+    fn finish_thread(&self, me: usize, result: ThreadResult) {
+        let mut st = self.m.lock().unwrap();
+        st.threads[me].state = TState::Finished;
+        st.threads[me].result = Some(result);
+        let joiners = std::mem::take(&mut st.threads[me].joiners);
+        for j in joiners {
+            st.threads[j].state = TState::Runnable;
+        }
+        if st.failed.is_some() {
+            // Execution already condemned; just let this thread exit.
+            return;
+        }
+        let options: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.state == TState::Runnable)
+            .map(|(tid, _)| tid)
+            .collect();
+        if options.is_empty() {
+            if st.threads.iter().all(|t| t.state == TState::Finished) {
+                return;
+            }
+            self.fail_locked(st, "deadlock: every live thread is blocked");
+        }
+        let chosen = Self::choose_locked(&mut st, &options);
+        st.active = chosen;
+        self.cv.notify_all();
+    }
+
+    fn join_thread(&self, me: usize, target: usize) -> ThreadResult {
+        self.yield_active(me);
+        loop {
+            let mut st = self.m.lock().unwrap();
+            if let Some(msg) = st.failed.clone() {
+                if std::thread::panicking() {
+                    return Err(Box::new("model join passthrough during failure unwind"));
+                }
+                drop(st);
+                panic!("{msg}");
+            }
+            if st.threads[target].state == TState::Finished {
+                return st
+                    .threads[target]
+                    .result
+                    .take()
+                    .unwrap_or_else(|| Err(Box::new("model thread joined twice")));
+            }
+            st.threads[target].joiners.push(me);
+            st.threads[me].state = TState::Blocked;
+            self.reschedule_locked(st, me, false);
+        }
+    }
+
+    /// Try to take `mx` for thread `me`; on contention, block and
+    /// return `false` once rescheduled (caller retries).
+    fn mutex_acquire(&self, me: usize, mx: &UnsafeCell<MxState>) -> bool {
+        let mut st = self.m.lock().unwrap();
+        if let Some(msg) = st.failed.clone() {
+            if std::thread::panicking() {
+                return true;
+            }
+            drop(st);
+            panic!("{msg}");
+        }
+        // SAFETY: mutex protocol state is only touched while holding the
+        // scheduler lock, and only one model thread runs at a time, so
+        // this &mut is exclusive.
+        let s = unsafe { &mut *mx.get() };
+        if !s.locked {
+            s.locked = true;
+            return true;
+        }
+        s.waiters.push(me);
+        st.threads[me].state = TState::Blocked;
+        self.reschedule_locked(st, me, false);
+        false
+    }
+
+    fn mutex_try_acquire(&self, mx: &UnsafeCell<MxState>) -> bool {
+        let st = self.m.lock().unwrap();
+        if st.failed.is_some() && std::thread::panicking() {
+            return true;
+        }
+        // SAFETY: scheduler lock held; single active thread (see
+        // `mutex_acquire`).
+        let s = unsafe { &mut *mx.get() };
+        if s.locked {
+            false
+        } else {
+            s.locked = true;
+            true
+        }
+    }
+
+    fn mutex_release(&self, mx: &UnsafeCell<MxState>) {
+        let mut st = self.m.lock().unwrap();
+        // SAFETY: scheduler lock held; single active thread (see
+        // `mutex_acquire`).
+        let s = unsafe { &mut *mx.get() };
+        s.locked = false;
+        if st.failed.is_some() {
+            return;
+        }
+        let waiters = std::mem::take(&mut s.waiters);
+        for w in waiters {
+            st.threads[w].state = TState::Runnable;
+        }
+    }
+
+    /// Atomically: register on the condvar, release the mutex, block.
+    /// The atomicity (one scheduler critical section) is exactly what
+    /// rules out the lost-wakeup window between unlock and sleep.
+    fn condvar_wait(&self, me: usize, cv: &UnsafeCell<Vec<usize>>, mx: &UnsafeCell<MxState>) {
+        let mut st = self.m.lock().unwrap();
+        if let Some(msg) = st.failed.clone() {
+            if std::thread::panicking() {
+                // SAFETY: scheduler lock held; single active thread.
+                let s = unsafe { &mut *mx.get() };
+                s.locked = false;
+                return;
+            }
+            drop(st);
+            panic!("{msg}");
+        }
+        // SAFETY: condvar waiter list is only touched while holding the
+        // scheduler lock; single active thread.
+        let w = unsafe { &mut *cv.get() };
+        w.push(me);
+        // SAFETY: scheduler lock held; single active thread (see
+        // `mutex_acquire`).
+        let s = unsafe { &mut *mx.get() };
+        s.locked = false;
+        let waiters = std::mem::take(&mut s.waiters);
+        for t in waiters {
+            st.threads[t].state = TState::Runnable;
+        }
+        st.threads[me].state = TState::Blocked;
+        self.reschedule_locked(st, me, false);
+    }
+
+    /// Wake up to `n` waiters, FIFO.
+    fn condvar_notify(&self, cv: &UnsafeCell<Vec<usize>>, n: usize) {
+        let mut st = self.m.lock().unwrap();
+        if st.failed.is_some() {
+            return;
+        }
+        // SAFETY: scheduler lock held; single active thread.
+        let w = unsafe { &mut *cv.get() };
+        let take = w.len().min(n);
+        for t in w.drain(..take) {
+            st.threads[t].state = TState::Runnable;
+        }
+    }
+
+    /// The test closure returned on thread 0: every spawned thread must
+    /// have finished (the pool joins its workers on drop).
+    fn finish_main(&self) {
+        let mut st = self.m.lock().unwrap();
+        if let Some(msg) = st.failed.clone() {
+            drop(st);
+            if std::thread::panicking() {
+                return;
+            }
+            panic!("{msg}");
+        }
+        st.threads[0].state = TState::Finished;
+        if st.threads.iter().any(|t| t.state != TState::Finished) {
+            self.fail_locked(st, "threads leaked at end of execution: join every spawned thread");
+        }
+    }
+}
+
+/// Scheduling point usable by the active thread (no-op outside a model
+/// execution). The `--cfg loom` spin hint maps here.
+pub fn yield_now() {
+    if let Some(c) = ctx() {
+        c.sched.yield_active(c.tid);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exploration driver
+// ---------------------------------------------------------------------------
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(default)
+}
+
+/// Programmatic knobs for one exploration (env-independent, so tests can
+/// pin bounds without racing on process environment).
+#[derive(Debug, Clone, Copy)]
+pub struct Builder {
+    /// Max preemptive context switches per execution.
+    pub preemption_bound: usize,
+    /// Max executions before truncating the search.
+    pub max_iterations: usize,
+    /// Max scheduling points per execution (livelock guard).
+    pub max_steps: usize,
+}
+
+impl Builder {
+    /// Bounds from `LOOM_MAX_PREEMPTIONS` / `LOOM_MAX_ITERATIONS` /
+    /// `LOOM_MAX_STEPS`, with the module-level defaults.
+    pub fn from_env() -> Builder {
+        Builder {
+            preemption_bound: env_usize("LOOM_MAX_PREEMPTIONS", 2),
+            max_iterations: env_usize("LOOM_MAX_ITERATIONS", 200_000),
+            max_steps: env_usize("LOOM_MAX_STEPS", 200_000),
+        }
+    }
+
+    /// Exhaustively (within bounds) explore interleavings of `f`,
+    /// returning how many executions ran. Panics on the first violation.
+    pub fn check<F: Fn()>(&self, f: F) -> usize {
+        let mut replay: Vec<usize> = Vec::new();
+        let mut iterations = 0usize;
+        loop {
+            iterations += 1;
+            let sched = StdArc::new(Sched::new(replay.clone(), self.preemption_bound, self.max_steps));
+            {
+                let _guard = CtxGuard::set(StdArc::clone(&sched), 0);
+                f();
+                sched.finish_main();
+            }
+            // Clean execution: the model threads have all finished;
+            // reap their OS handles before the next iteration.
+            for h in sched.real.lock().unwrap().drain(..) {
+                let _ = h.join();
+            }
+            let path = sched.m.lock().unwrap().path.clone();
+            match next_replay(&path) {
+                None => break,
+                Some(_) if iterations >= self.max_iterations => {
+                    eprintln!(
+                        "mec model checker: iteration cap ({}) hit; exploration truncated",
+                        self.max_iterations
+                    );
+                    break;
+                }
+                Some(r) => replay = r,
+            }
+        }
+        iterations
+    }
+}
+
+impl Default for Builder {
+    fn default() -> Builder {
+        Builder::from_env()
+    }
+}
+
+/// Depth-first backtracking: advance the deepest decision that still has
+/// an unexplored alternative; `None` when the bounded space is done.
+fn next_replay(path: &[ChoicePoint]) -> Option<Vec<usize>> {
+    for i in (0..path.len()).rev() {
+        if path[i].chosen + 1 < path[i].options {
+            let mut r: Vec<usize> = path[..i].iter().map(|c| c.chosen).collect();
+            r.push(path[i].chosen + 1);
+            return Some(r);
+        }
+    }
+    None
+}
+
+/// Explore every bounded interleaving of `f` (bounds from the
+/// environment — see module docs). Returns the execution count; panics
+/// on the first violation. The entry point `--cfg loom` tests use.
+pub fn model<F: Fn()>(f: F) -> usize {
+    Builder::from_env().check(f)
+}
+
+// ---------------------------------------------------------------------------
+// Sync shims
+// ---------------------------------------------------------------------------
+
+struct MxState {
+    locked: bool,
+    waiters: Vec<usize>,
+}
+
+/// Model mutex: same shape as `std::sync::Mutex` (lock / try_lock /
+/// guard), checked blocking semantics, no poisoning (lock results are
+/// always `Ok`, so `.lock().unwrap()` code compiles against both).
+pub struct Mutex<T> {
+    state: UnsafeCell<MxState>,
+    data: UnsafeCell<T>,
+}
+
+// SAFETY: the scheduler serializes all access — exactly one model thread
+// runs at a time, and token handoffs synchronize through a real mutex,
+// so sending/sharing the cells across model threads cannot race.
+unsafe impl<T: Send> Send for Mutex<T> {}
+// SAFETY: see the Send impl above.
+unsafe impl<T: Send> Sync for Mutex<T> {}
+
+/// `try_lock` contention marker (stands in for `std`'s `TryLockError`).
+#[derive(Debug)]
+pub struct WouldBlock;
+
+impl<T> Mutex<T> {
+    pub fn new(data: T) -> Mutex<T> {
+        Mutex {
+            state: UnsafeCell::new(MxState {
+                locked: false,
+                waiters: Vec::new(),
+            }),
+            data: UnsafeCell::new(data),
+        }
+    }
+
+    pub fn lock(&self) -> Result<MutexGuard<'_, T>, std::convert::Infallible> {
+        match ctx() {
+            Some(c) => {
+                c.sched.yield_active(c.tid);
+                while !c.sched.mutex_acquire(c.tid, &self.state) {}
+            }
+            None => {
+                // Outside a model execution (single-threaded passthrough).
+                // SAFETY: no concurrent model threads exist without a
+                // scheduler context, so this access is exclusive.
+                let s = unsafe { &mut *self.state.get() };
+                debug_assert!(!s.locked, "model Mutex relocked outside a model execution");
+                s.locked = true;
+            }
+        }
+        Ok(MutexGuard { lock: self })
+    }
+
+    pub fn try_lock(&self) -> Result<MutexGuard<'_, T>, WouldBlock> {
+        let ok = match ctx() {
+            Some(c) => {
+                c.sched.yield_active(c.tid);
+                c.sched.mutex_try_acquire(&self.state)
+            }
+            None => {
+                // SAFETY: single-threaded passthrough (see `lock`).
+                let s = unsafe { &mut *self.state.get() };
+                if s.locked {
+                    false
+                } else {
+                    s.locked = true;
+                    true
+                }
+            }
+        };
+        if ok {
+            Ok(MutexGuard { lock: self })
+        } else {
+            Err(WouldBlock)
+        }
+    }
+}
+
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        // SAFETY: the guard exists, so this thread holds the model lock;
+        // lock acquisition is serialized by the scheduler.
+        unsafe { &*self.lock.data.get() }
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        // SAFETY: see `Deref` — exclusive while the guard lives.
+        unsafe { &mut *self.lock.data.get() }
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        match ctx() {
+            Some(c) => c.sched.mutex_release(&self.lock.state),
+            None => {
+                // SAFETY: single-threaded passthrough (see `Mutex::lock`).
+                let s = unsafe { &mut *self.lock.state.get() };
+                s.locked = false;
+            }
+        }
+    }
+}
+
+/// Model condvar: FIFO wakeups, no spurious wakes, and the
+/// register-unlock-block step is one atomic scheduler action (the exact
+/// property that makes real condvars lose no wakeups).
+#[derive(Default)]
+pub struct Condvar {
+    waiters: UnsafeCell<Vec<usize>>,
+}
+
+// SAFETY: the waiter list is only touched under the scheduler lock by
+// the single active thread (see `Mutex`'s Send/Sync note).
+unsafe impl Send for Condvar {}
+// SAFETY: see the Send impl above.
+unsafe impl Sync for Condvar {}
+
+impl Condvar {
+    pub fn new() -> Condvar {
+        Condvar::default()
+    }
+
+    pub fn wait<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+    ) -> Result<MutexGuard<'a, T>, std::convert::Infallible> {
+        let lock = guard.lock;
+        let c = ctx().expect("model Condvar::wait outside a model execution");
+        c.sched.condvar_wait(c.tid, &self.waiters, &lock.state);
+        // The scheduler already released the mutex inside condvar_wait;
+        // skip the guard's unlock and re-acquire fresh.
+        std::mem::forget(guard);
+        lock.lock()
+    }
+
+    pub fn notify_one(&self) {
+        if let Some(c) = ctx() {
+            c.sched.yield_active(c.tid);
+            c.sched.condvar_notify(&self.waiters, 1);
+        }
+    }
+
+    pub fn notify_all(&self) {
+        if let Some(c) = ctx() {
+            c.sched.yield_active(c.tid);
+            c.sched.condvar_notify(&self.waiters, usize::MAX);
+        }
+    }
+}
+
+macro_rules! model_atomic {
+    ($(#[$doc:meta])* $name:ident, $ty:ty) => {
+        $(#[$doc])*
+        pub struct $name {
+            v: UnsafeCell<$ty>,
+        }
+
+        // SAFETY: only the single active model thread dereferences `v`
+        // between scheduler handoffs, and handoffs synchronize through a
+        // real mutex — accesses are serialized with happens-before edges.
+        unsafe impl Send for $name {}
+        // SAFETY: see the Send impl above.
+        unsafe impl Sync for $name {}
+
+        impl $name {
+            pub const fn new(v: $ty) -> $name {
+                $name { v: UnsafeCell::new(v) }
+            }
+
+            pub fn load(&self, _order: Ordering) -> $ty {
+                yield_now();
+                // SAFETY: serialized by the scheduler (see Send impl).
+                unsafe { *self.v.get() }
+            }
+
+            pub fn store(&self, val: $ty, _order: Ordering) {
+                yield_now();
+                // SAFETY: serialized by the scheduler (see Send impl).
+                unsafe { *self.v.get() = val }
+            }
+
+            pub fn swap(&self, val: $ty, _order: Ordering) -> $ty {
+                yield_now();
+                // SAFETY: serialized by the scheduler (see Send impl).
+                unsafe { std::mem::replace(&mut *self.v.get(), val) }
+            }
+
+            pub fn fetch_add(&self, val: $ty, _order: Ordering) -> $ty {
+                yield_now();
+                // SAFETY: serialized by the scheduler (see Send impl).
+                unsafe {
+                    let p = self.v.get();
+                    let old = *p;
+                    *p = old.wrapping_add(val);
+                    old
+                }
+            }
+
+            pub fn fetch_sub(&self, val: $ty, _order: Ordering) -> $ty {
+                yield_now();
+                // SAFETY: serialized by the scheduler (see Send impl).
+                unsafe {
+                    let p = self.v.get();
+                    let old = *p;
+                    *p = old.wrapping_sub(val);
+                    old
+                }
+            }
+        }
+    };
+}
+
+model_atomic!(
+    /// Model `AtomicUsize`: every op is a scheduling point; `Ordering`
+    /// is accepted and ignored (sequential consistency only).
+    AtomicUsize,
+    usize
+);
+model_atomic!(
+    /// Model `AtomicU64` (see [`AtomicUsize`]).
+    AtomicU64,
+    u64
+);
+
+/// Model `AtomicBool` (see [`AtomicUsize`]).
+pub struct AtomicBool {
+    v: UnsafeCell<bool>,
+}
+
+// SAFETY: serialized by the scheduler (see the model_atomic note).
+unsafe impl Send for AtomicBool {}
+// SAFETY: see the Send impl above.
+unsafe impl Sync for AtomicBool {}
+
+impl AtomicBool {
+    pub const fn new(v: bool) -> AtomicBool {
+        AtomicBool { v: UnsafeCell::new(v) }
+    }
+
+    pub fn load(&self, _order: Ordering) -> bool {
+        yield_now();
+        // SAFETY: serialized by the scheduler.
+        unsafe { *self.v.get() }
+    }
+
+    pub fn store(&self, val: bool, _order: Ordering) {
+        yield_now();
+        // SAFETY: serialized by the scheduler.
+        unsafe { *self.v.get() = val }
+    }
+
+    pub fn swap(&self, val: bool, _order: Ordering) -> bool {
+        yield_now();
+        // SAFETY: serialized by the scheduler.
+        unsafe { std::mem::replace(&mut *self.v.get(), val) }
+    }
+}
+
+/// Model threads: real OS threads fully serialized by the scheduler.
+pub mod thread {
+    use super::*;
+
+    /// Mirror of `std::thread::Builder` (the name is kept for log
+    /// readability but the model assigns its own thread names).
+    #[derive(Default)]
+    pub struct Builder {
+        name: Option<String>,
+    }
+
+    impl Builder {
+        pub fn new() -> Builder {
+            Builder::default()
+        }
+
+        pub fn name(mut self, name: String) -> Builder {
+            self.name = Some(name);
+            self
+        }
+
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            Ok(spawn_named(self.name, f))
+        }
+    }
+
+    pub struct JoinHandle<T> {
+        tid: usize,
+        _result: PhantomData<T>,
+    }
+
+    impl<T: 'static> JoinHandle<T> {
+        /// Block (in model time) until the target finishes; a panic in
+        /// the target is returned as `Err(payload)`, like std.
+        pub fn join(self) -> Result<T, Box<dyn Any + Send>> {
+            let c = ctx().expect("model join outside a model execution");
+            match c.sched.join_thread(c.tid, self.tid) {
+                Ok(v) => match v.downcast::<T>() {
+                    Ok(b) => Ok(*b),
+                    Err(_) => Err(Box::new("model join: unexpected result type")
+                        as Box<dyn Any + Send>),
+                },
+                Err(e) => Err(e),
+            }
+        }
+    }
+
+    /// Spawn a model thread (runnable, parked until first scheduled).
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        spawn_named(None, f)
+    }
+
+    fn spawn_named<F, T>(name: Option<String>, f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let c = ctx().expect("model thread::spawn outside a model execution");
+        let tid = c.sched.register_thread();
+        let sched = StdArc::clone(&c.sched);
+        let real = std::thread::Builder::new()
+            .name(name.unwrap_or_else(|| format!("mec-model-{tid}")))
+            .spawn(move || {
+                let _guard = CtxGuard::set(StdArc::clone(&sched), tid);
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    sched.wait_first_schedule(tid);
+                    f()
+                }));
+                let boxed: ThreadResult = match result {
+                    Ok(v) => Ok(Box::new(v)),
+                    Err(e) => Err(e),
+                };
+                sched.finish_thread(tid, boxed);
+            })
+            .expect("spawn model OS thread");
+        c.sched.real.lock().unwrap().push(real);
+        JoinHandle {
+            tid,
+            _result: PhantomData,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Self-tests: these run in ordinary (non-loom) tier-1 builds, so the
+// checker itself is covered by `cargo test` before CI trusts it to
+// check the pool.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::thread;
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::Ordering::SeqCst;
+
+    fn small() -> Builder {
+        Builder {
+            preemption_bound: 2,
+            max_iterations: 50_000,
+            max_steps: 50_000,
+        }
+    }
+
+    #[test]
+    fn model_single_thread_program_runs_exactly_once() {
+        let n = small().check(|| {
+            let a = AtomicUsize::new(0);
+            a.store(3, SeqCst);
+            assert_eq!(a.load(SeqCst), 3);
+        });
+        assert_eq!(n, 1, "no concurrency, no branching");
+    }
+
+    #[test]
+    fn model_explores_multiple_interleavings() {
+        let n = small().check(|| {
+            let a = StdArc::new(AtomicUsize::new(0));
+            let a2 = StdArc::clone(&a);
+            let t = thread::spawn(move || {
+                a2.fetch_add(1, SeqCst);
+            });
+            a.fetch_add(1, SeqCst);
+            t.join().unwrap();
+            // fetch_add is atomic in the model: never a lost update.
+            assert_eq!(a.load(SeqCst), 2);
+        });
+        assert!(n > 1, "two racing threads must branch, got {n} execution(s)");
+    }
+
+    #[test]
+    fn model_catches_lost_update() {
+        // Non-atomic read-modify-write: some interleaving loses an
+        // update, and the checker must find it within 2 preemptions.
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            small().check(|| {
+                let a = StdArc::new(AtomicUsize::new(0));
+                let a2 = StdArc::clone(&a);
+                let t = thread::spawn(move || {
+                    let v = a2.load(SeqCst);
+                    a2.store(v + 1, SeqCst);
+                });
+                let v = a.load(SeqCst);
+                a.store(v + 1, SeqCst);
+                t.join().unwrap();
+                assert_eq!(a.load(SeqCst), 2, "lost update");
+            });
+        }));
+        assert!(r.is_err(), "the racy schedule must be found and reported");
+    }
+
+    #[test]
+    fn model_mutex_preserves_read_modify_write() {
+        // The same read-modify-write, now under the model mutex: every
+        // interleaving must keep both increments.
+        small().check(|| {
+            let m = StdArc::new(Mutex::new(0usize));
+            let m2 = StdArc::clone(&m);
+            let t = thread::spawn(move || {
+                let mut g = m2.lock().unwrap();
+                let v = *g;
+                yield_now();
+                *g = v + 1;
+            });
+            {
+                let mut g = m.lock().unwrap();
+                let v = *g;
+                yield_now();
+                *g = v + 1;
+            }
+            t.join().unwrap();
+            assert_eq!(*m.lock().unwrap(), 2);
+        });
+    }
+
+    #[test]
+    fn model_detects_deadlock() {
+        // Classic lock-order inversion: thread 0 takes b then a, the
+        // spawned thread takes a then b.
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            small().check(|| {
+                let a = StdArc::new(Mutex::new(()));
+                let b = StdArc::new(Mutex::new(()));
+                let (a2, b2) = (StdArc::clone(&a), StdArc::clone(&b));
+                let t = thread::spawn(move || {
+                    let _x = a2.lock().unwrap();
+                    let _y = b2.lock().unwrap();
+                });
+                {
+                    let _y = b.lock().unwrap();
+                    let _x = a.lock().unwrap();
+                }
+                t.join().unwrap();
+            });
+        }));
+        assert!(r.is_err(), "the deadlocking schedule must be reported");
+    }
+
+    #[test]
+    fn model_condvar_never_loses_the_wakeup() {
+        // Exhaustive check of the flag+condvar handoff: if any schedule
+        // could lose the notify, the blocked waiter would be reported as
+        // a deadlock. Completing without panic is the proof.
+        small().check(|| {
+            let pair = StdArc::new((Mutex::new(false), Condvar::new()));
+            let p2 = StdArc::clone(&pair);
+            let t = thread::spawn(move || {
+                let (m, cv) = &*p2;
+                let mut g = m.lock().unwrap();
+                *g = true;
+                cv.notify_one();
+            });
+            let (m, cv) = &*pair;
+            let mut g = m.lock().unwrap();
+            while !*g {
+                g = cv.wait(g).unwrap();
+            }
+            drop(g);
+            t.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn model_preemption_bound_zero_runs_threads_sequentially() {
+        // With no preemptions allowed, the only switches happen at
+        // blocking points — a two-thread program has exactly one
+        // schedule.
+        let n = Builder {
+            preemption_bound: 0,
+            max_iterations: 100,
+            max_steps: 10_000,
+        }
+        .check(|| {
+            let a = StdArc::new(AtomicUsize::new(0));
+            let a2 = StdArc::clone(&a);
+            let t = thread::spawn(move || {
+                a2.fetch_add(1, SeqCst);
+            });
+            a.fetch_add(1, SeqCst);
+            t.join().unwrap();
+            assert_eq!(a.load(SeqCst), 2);
+        });
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn model_panic_in_spawned_thread_is_delivered_at_join() {
+        small().check(|| {
+            let t = thread::spawn(|| panic!("boom"));
+            let r = t.join();
+            assert!(r.is_err(), "panic payload must reach join");
+        });
+    }
+
+    #[test]
+    fn model_reports_leaked_threads() {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            Builder {
+                preemption_bound: 0,
+                max_iterations: 100,
+                max_steps: 10_000,
+            }
+            .check(|| {
+                // Spawn and never join: the execution must be rejected.
+                let _t = thread::spawn(|| {});
+            });
+        }));
+        assert!(r.is_err(), "leaked threads must fail the execution");
+    }
+}

@@ -1,0 +1,65 @@
+//! Sync facade for the threadpool: `std::sync` in normal builds, the
+//! in-tree bounded model checker ([`super::model`]) under
+//! `RUSTFLAGS="--cfg loom"`.
+//!
+//! Everything concurrency-relevant in [`super`] (the pool's mutex,
+//! condvars, protocol atomics, worker threads, and the spin hint) is
+//! imported from here rather than from `std` directly, so the exact
+//! production dispatch/claim/barrier/panic protocol can be compiled
+//! against the model checker's serializing shims and explored
+//! exhaustively. Monitoring-only counters (spawn gauges) intentionally
+//! stay on real `std` atomics even under `--cfg loom`: they are not part
+//! of the protocol, and modelling them would only inflate the
+//! interleaving space.
+//!
+//! The name `loom` is kept for the cfg switch because it is the
+//! ecosystem's conventional flag for "compile the sync facade against a
+//! model checker" (the `loom` crate popularized it); vendoring the real
+//! crate is not possible offline, so [`super::model`] provides the same
+//! role: serialized threads, exhaustive bounded interleaving search,
+//! deadlock detection.
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(not(loom))]
+pub mod atomic {
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+#[cfg(not(loom))]
+pub mod thread {
+    pub use std::thread::{Builder, JoinHandle};
+}
+
+/// CPU relax hint in the workers' lock-free spin phase. Under the model
+/// this is an explicit scheduling point instead, so the checker can
+/// interleave other threads where real hardware would.
+#[cfg(not(loom))]
+#[inline]
+pub fn spin_loop() {
+    std::hint::spin_loop();
+}
+
+#[cfg(loom)]
+pub use std::sync::Arc;
+
+#[cfg(loom)]
+pub use super::model::{Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub mod atomic {
+    pub use crate::threadpool::model::{AtomicBool, AtomicU64, AtomicUsize};
+    pub use std::sync::atomic::Ordering;
+}
+
+#[cfg(loom)]
+pub mod thread {
+    pub use crate::threadpool::model::thread::{Builder, JoinHandle};
+}
+
+#[cfg(loom)]
+#[inline]
+pub fn spin_loop() {
+    super::model::yield_now();
+}

@@ -2,6 +2,10 @@
 //! statistics, CLI parsing, logging. All substrates the offline build
 //! cannot pull from crates.io (rand/proptest/clap/env_logger/criterion).
 
+// Utilities stay on safe Rust: no unsafe, ever (enforced — see the
+// crate-level unsafe policy and tools/unsafe-audit).
+#![forbid(unsafe_code)]
+
 pub mod cli;
 pub mod error;
 pub mod logging;

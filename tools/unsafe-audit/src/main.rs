@@ -1,0 +1,585 @@
+//! In-tree unsafe-code auditor for the `mec` crate.
+//!
+//! Scans every `.rs` file under `rust/src` with a small comment/string-aware
+//! lexer (no rustc, no syn — the tool must build with zero dependencies)
+//! and enforces the crate's unsafe policy:
+//!
+//! 1. **Justification** — every `unsafe` occurrence (block, `unsafe fn`,
+//!    `unsafe impl`) must be immediately preceded by a comment run that
+//!    contains `SAFETY` (conventional `// SAFETY: …`) or a `# Safety` doc
+//!    section. A comment run may be shared by consecutive `unsafe impl`
+//!    lines (the usual `Send`/`Sync` pairing) and may be interleaved with
+//!    attributes.
+//! 2. **Containment** — `unsafe` may appear only in the allowlisted
+//!    modules: `threadpool`, `memory`, `gemm` (including `gemm::micro`),
+//!    `conv::fft_conv`, and `tensor::quant`. Everything else is safe Rust
+//!    by policy (most of it additionally carries `#![forbid(unsafe_code)]`;
+//!    this tool is the guard for the files that cannot).
+//!
+//! Output: an inventory table of every unsafe site, per-module counts, and
+//! a non-zero exit code listing each violation. CI runs this in the `lint`
+//! job (`cargo run -p unsafe-audit`); the scanner itself is unit-tested,
+//! including the "deleting a SAFETY comment makes the audit fail" case.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Path prefixes (relative to `rust/src`, `/`-separated) where unsafe code
+/// is permitted. A plain name allows the whole module directory; a `.rs`
+/// entry allows exactly that file.
+const ALLOWLIST: &[&str] = &[
+    "threadpool/",
+    "threadpool.rs",
+    "memory/",
+    "memory.rs",
+    "gemm/",
+    "gemm.rs",
+    "conv/fft_conv.rs",
+    "tensor/quant.rs",
+];
+
+/// What kind of unsafe site a line contains (first occurrence wins).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SiteKind {
+    /// `unsafe impl Trait for Type`
+    Impl,
+    /// `unsafe fn name(...)`
+    Fn,
+    /// `unsafe { ... }` expression/statement block
+    Block,
+}
+
+impl SiteKind {
+    fn label(self) -> &'static str {
+        match self {
+            SiteKind::Impl => "impl",
+            SiteKind::Fn => "fn",
+            SiteKind::Block => "block",
+        }
+    }
+}
+
+/// One `unsafe` occurrence found by the scanner.
+#[derive(Debug)]
+struct Site {
+    /// Path relative to `rust/src`, `/`-separated.
+    file: String,
+    /// 1-based line number.
+    line: usize,
+    kind: SiteKind,
+    /// Trimmed source line, for the inventory table.
+    snippet: String,
+    /// Whether a SAFETY justification precedes the site.
+    justified: bool,
+}
+
+/// A source line split into its code part and its comment part by the
+/// lexer. String-literal contents are blanked out of `code` so that
+/// `"unsafe"` in a string never counts as a site.
+#[derive(Debug, Default)]
+struct LineInfo {
+    code: String,
+    comment: String,
+}
+
+/// Split `content` into per-line code/comment parts, tracking line
+/// comments, (nested) block comments, string literals, raw strings, and
+/// char literals.
+fn lex(content: &str) -> Vec<LineInfo> {
+    #[derive(PartialEq)]
+    enum State {
+        Code,
+        LineComment,
+        /// Nesting depth — Rust block comments nest.
+        BlockComment(usize),
+        Str,
+        /// Number of `#` marks that close the raw string.
+        RawStr(usize),
+    }
+    let mut lines = Vec::new();
+    let mut cur = LineInfo::default();
+    let mut state = State::Code;
+    let chars: Vec<char> = content.chars().collect();
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        let next = chars.get(i + 1).copied();
+        if c == '\n' {
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => match c {
+                '/' if next == Some('/') => {
+                    state = State::LineComment;
+                    cur.comment.push_str("//");
+                    i += 2;
+                }
+                '/' if next == Some('*') => {
+                    state = State::BlockComment(1);
+                    i += 2;
+                }
+                '"' => {
+                    state = State::Str;
+                    cur.code.push(' ');
+                    i += 1;
+                }
+                'r' if next == Some('"') || next == Some('#') => {
+                    // Possible raw string r"…" / r#"…"# (also covers
+                    // r##…). If the #-run is not followed by a quote this
+                    // is ordinary code (e.g. `r#fn` raw identifiers).
+                    let mut j = i + 1;
+                    let mut hashes = 0;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        state = State::RawStr(hashes);
+                        cur.code.push(' ');
+                        i = j + 1;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                }
+                '\'' => {
+                    // Char literal vs lifetime. Escaped char ('\n', '\'')
+                    // or one-char literal ('x') is consumed wholesale;
+                    // anything else is a lifetime and passes through.
+                    if next == Some('\\') {
+                        let mut j = i + 2;
+                        // Skip the escape body up to the closing quote.
+                        while j < chars.len() && chars[j] != '\'' && chars[j] != '\n' {
+                            j += 1;
+                        }
+                        cur.code.push(' ');
+                        i = (j + 1).min(chars.len());
+                    } else if chars.get(i + 2) == Some(&'\'') {
+                        cur.code.push(' ');
+                        i += 3;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                }
+                _ => {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            },
+            State::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '*' && next == Some('/') {
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = State::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    let mut ok = true;
+                    for k in 0..hashes {
+                        if chars.get(i + 1 + k) != Some(&'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        state = State::Code;
+                        i += 1 + hashes;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines.push(cur);
+    lines
+}
+
+/// Whether `code` contains `unsafe` as a standalone token (not part of an
+/// identifier like `unsafe_op_in_unsafe_fn`). Returns the byte offset of
+/// the first occurrence.
+fn find_unsafe_token(code: &str) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("unsafe") {
+        let start = from + pos;
+        let end = start + "unsafe".len();
+        let before_ok = start == 0 || {
+            let b = bytes[start - 1];
+            !(b.is_ascii_alphanumeric() || b == b'_')
+        };
+        let after_ok = end == code.len() || {
+            let b = bytes[end];
+            !(b.is_ascii_alphanumeric() || b == b'_')
+        };
+        if before_ok && after_ok {
+            return Some(start);
+        }
+        from = end;
+    }
+    None
+}
+
+/// Classify the unsafe site on a code line by what follows the token.
+fn classify(code: &str, at: usize) -> SiteKind {
+    let rest = code[at + "unsafe".len()..].trim_start();
+    if rest.starts_with("impl") {
+        SiteKind::Impl
+    } else if rest.starts_with("fn") {
+        SiteKind::Fn
+    } else {
+        SiteKind::Block
+    }
+}
+
+/// Whether a comment string carries a safety justification: the
+/// conventional `SAFETY` marker or a rustdoc `# Safety` section heading.
+fn comment_justifies(comment: &str) -> bool {
+    comment.contains("SAFETY") || comment.contains("# Safety")
+}
+
+/// Scan one file's content; `rel` is its path relative to `rust/src`.
+fn audit_file(rel: &str, content: &str) -> Vec<Site> {
+    let lines = lex(content);
+    let raw: Vec<&str> = content.lines().collect();
+    let mut sites = Vec::new();
+    for (i, li) in lines.iter().enumerate() {
+        let Some(at) = find_unsafe_token(&li.code) else {
+            continue;
+        };
+        let kind = classify(&li.code, at);
+        // Same-line trailing comment counts…
+        let mut justified = comment_justifies(&li.comment);
+        // …otherwise walk the preamble run directly above: pure-comment
+        // lines, attributes, and earlier `unsafe impl` lines (so one
+        // SAFETY note covers a Send/Sync pair). Stop at anything else —
+        // adjacency is the point of the rule.
+        let mut j = i;
+        while !justified && j > 0 {
+            j -= 1;
+            let p = &lines[j];
+            let code_trim = p.code.trim();
+            let is_comment_only = code_trim.is_empty() && !p.comment.is_empty();
+            let is_attr = code_trim.starts_with("#[") || code_trim.starts_with("#![");
+            let is_chained_impl = find_unsafe_token(&p.code)
+                .map(|a| classify(&p.code, a) == SiteKind::Impl)
+                .unwrap_or(false);
+            if is_comment_only {
+                justified = comment_justifies(&p.comment);
+                if justified {
+                    break;
+                }
+            } else if !(is_attr || is_chained_impl) {
+                break;
+            }
+        }
+        sites.push(Site {
+            file: rel.to_string(),
+            line: i + 1,
+            kind,
+            snippet: raw.get(i).map_or("", |s| s.trim()).to_string(),
+            justified,
+        });
+    }
+    sites
+}
+
+/// Whether a file (path relative to `rust/src`) may contain unsafe code.
+fn allowlisted(rel: &str) -> bool {
+    ALLOWLIST
+        .iter()
+        .any(|p| if p.ends_with('/') { rel.starts_with(p) } else { rel == *p })
+}
+
+/// Collect every `.rs` file under `dir`, sorted for stable output.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// The workspace root: two levels above this tool's manifest, with a
+/// cwd fallback so `./target/…/unsafe-audit` from the root also works.
+fn workspace_root() -> PathBuf {
+    if let Ok(md) = std::env::var("CARGO_MANIFEST_DIR") {
+        let root = Path::new(&md).join("../..");
+        if root.join("rust/src").is_dir() {
+            return root;
+        }
+    }
+    PathBuf::from(".")
+}
+
+fn main() -> ExitCode {
+    let src = workspace_root().join("rust/src");
+    if !src.is_dir() {
+        eprintln!("unsafe-audit: cannot find rust/src (run from the workspace)");
+        return ExitCode::from(2);
+    }
+    let mut files = Vec::new();
+    if let Err(e) = collect_rs(&src, &mut files) {
+        eprintln!("unsafe-audit: walking {}: {e}", src.display());
+        return ExitCode::from(2);
+    }
+
+    let mut sites = Vec::new();
+    let mut violations: Vec<String> = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let content = match std::fs::read_to_string(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("unsafe-audit: reading {rel}: {e}");
+                return ExitCode::from(2);
+            }
+        };
+        let file_sites = audit_file(&rel, &content);
+        if !file_sites.is_empty() && !allowlisted(&rel) {
+            violations.push(format!(
+                "{rel}:{}: unsafe outside the allowlisted modules ({} site{})",
+                file_sites[0].line,
+                file_sites.len(),
+                if file_sites.len() == 1 { "" } else { "s" }
+            ));
+        }
+        for s in &file_sites {
+            if !s.justified {
+                violations.push(format!(
+                    "{}:{}: unsafe {} without a preceding SAFETY comment",
+                    s.file,
+                    s.line,
+                    s.kind.label()
+                ));
+            }
+        }
+        sites.extend(file_sites);
+    }
+
+    // Inventory table.
+    println!("unsafe inventory ({} sites across {} files)", sites.len(), {
+        let mut fs: Vec<&str> = sites.iter().map(|s| s.file.as_str()).collect();
+        fs.dedup();
+        fs.len()
+    });
+    let loc_w = sites
+        .iter()
+        .map(|s| s.file.len() + 1 + s.line.to_string().len())
+        .max()
+        .unwrap_or(8);
+    for s in &sites {
+        let loc = format!("{}:{}", s.file, s.line);
+        let snippet: String = s.snippet.chars().take(72).collect();
+        println!("  {loc:<loc_w$}  {:<5}  {snippet}", s.kind.label());
+    }
+    // Per-module counts (first path component, or the file itself).
+    let mut counts: Vec<(String, usize)> = Vec::new();
+    for s in &sites {
+        let module = s.file.split('/').next().unwrap_or(&s.file).to_string();
+        match counts.iter_mut().find(|(m, _)| *m == module) {
+            Some((_, n)) => *n += 1,
+            None => counts.push((module, 1)),
+        }
+    }
+    println!("per-module:");
+    for (m, n) in &counts {
+        println!("  {m:<12} {n}");
+    }
+
+    if violations.is_empty() {
+        println!("unsafe-audit: OK");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("unsafe-audit: {} violation(s):", violations.len());
+        for v in &violations {
+            eprintln!("  {v}");
+        }
+        ExitCode::FAILURE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn documented_unsafe_block_passes() {
+        let src = "fn f() {\n    // SAFETY: bounds checked above.\n    unsafe { g() }\n}\n";
+        let sites = audit_file("memory/x.rs", src);
+        assert_eq!(sites.len(), 1);
+        assert!(sites[0].justified);
+        assert_eq!(sites[0].kind, SiteKind::Block);
+        assert_eq!(sites[0].line, 3);
+    }
+
+    #[test]
+    fn deleting_the_safety_comment_flags_the_site() {
+        // The self-test the policy demands: the justified snippet above,
+        // minus its SAFETY line, must audit as a violation.
+        let src = "fn f() {\n    unsafe { g() }\n}\n";
+        let sites = audit_file("memory/x.rs", src);
+        assert_eq!(sites.len(), 1);
+        assert!(!sites[0].justified);
+    }
+
+    #[test]
+    fn same_line_trailing_safety_counts() {
+        let src = "let x = unsafe { p.read() }; // SAFETY: p is valid.\n";
+        let sites = audit_file("memory/x.rs", src);
+        assert_eq!(sites.len(), 1);
+        assert!(sites[0].justified);
+    }
+
+    #[test]
+    fn one_comment_covers_a_send_sync_pair_but_not_more() {
+        let src = "// SAFETY: exclusively owned.\nunsafe impl Send for T {}\nunsafe impl Sync for T {}\n\nunsafe impl Send for U {}\n";
+        let sites = audit_file("memory/x.rs", src);
+        assert_eq!(sites.len(), 3);
+        assert!(sites[0].justified);
+        assert!(sites[1].justified, "comment run must cover chained impls");
+        assert!(!sites[2].justified, "blank line breaks the run");
+    }
+
+    #[test]
+    fn unsafe_fn_with_doc_safety_section_passes() {
+        let src = "/// Does things.\n///\n/// # Safety\n/// Caller upholds X.\npub unsafe fn f() {}\n";
+        let sites = audit_file("gemm/x.rs", src);
+        assert_eq!(sites.len(), 1);
+        assert!(sites[0].justified);
+        assert_eq!(sites[0].kind, SiteKind::Fn);
+    }
+
+    #[test]
+    fn attributes_between_comment_and_site_are_transparent() {
+        let src = "// SAFETY: fine.\n#[inline(always)]\nunsafe fn f() {}\n";
+        let sites = audit_file("gemm/x.rs", src);
+        assert_eq!(sites.len(), 1);
+        assert!(sites[0].justified);
+    }
+
+    #[test]
+    fn strings_comments_and_lints_never_count_as_sites() {
+        let src = concat!(
+            "#![deny(unsafe_op_in_unsafe_fn)]\n",
+            "#![forbid(unsafe_code)]\n",
+            "// unsafe { in a comment }\n",
+            "/* unsafe in a /* nested */ block comment */\n",
+            "let a = \"unsafe\";\n",
+            "let b = r#\"unsafe { }\"#;\n",
+            "let c = '\"'; let d = \"unsafe\";\n",
+        );
+        assert!(audit_file("planner/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allowlist_matches_modules_and_exact_files() {
+        assert!(allowlisted("threadpool/mod.rs"));
+        assert!(allowlisted("memory/aligned.rs"));
+        assert!(allowlisted("gemm/micro/avx2.rs"));
+        assert!(allowlisted("conv/fft_conv.rs"));
+        assert!(allowlisted("tensor/quant.rs"));
+        assert!(!allowlisted("conv/mec.rs"));
+        assert!(!allowlisted("tensor/mod.rs"));
+        assert!(!allowlisted("planner/mod.rs"));
+        assert!(!allowlisted("engine/mod.rs"));
+    }
+
+    #[test]
+    fn real_tree_audits_clean_and_fails_when_a_safety_comment_is_removed() {
+        // End-to-end self-test against the actual crate sources: the tree
+        // must be clean, and deleting any one SAFETY comment from a real
+        // file must produce a violation.
+        let src_root = workspace_root().join("rust/src");
+        assert!(src_root.is_dir(), "rust/src not found from the tool manifest");
+        let mut files = Vec::new();
+        collect_rs(&src_root, &mut files).unwrap();
+        assert!(!files.is_empty());
+        let mut total_sites = 0;
+        for path in &files {
+            let rel = path
+                .strip_prefix(&src_root)
+                .unwrap()
+                .to_string_lossy()
+                .replace('\\', "/");
+            let content = std::fs::read_to_string(path).unwrap();
+            let sites = audit_file(&rel, &content);
+            if !sites.is_empty() {
+                assert!(allowlisted(&rel), "{rel}: unsafe outside allowlist");
+            }
+            for s in &sites {
+                assert!(s.justified, "{}:{} lacks a SAFETY comment", s.file, s.line);
+            }
+            total_sites += sites.len();
+        }
+        assert!(total_sites > 0, "expected unsafe sites in the tree");
+
+        // Mutation leg: strip the first pure `// SAFETY:` comment line
+        // from the threadpool and re-audit — the uncovered site must now
+        // be reported.
+        let victim = src_root.join("threadpool/mod.rs");
+        let content = std::fs::read_to_string(&victim).unwrap();
+        let mutated: Vec<&str> = content
+            .lines()
+            .filter({
+                let mut dropped = false;
+                move |l| {
+                    let hit = !dropped && l.trim_start().starts_with("// SAFETY:");
+                    if hit {
+                        dropped = true;
+                    }
+                    !hit
+                }
+            })
+            .collect();
+        assert_eq!(mutated.len() + 1, content.lines().count());
+        let sites = audit_file("threadpool/mod.rs", &mutated.join("\n"));
+        assert!(
+            sites.iter().any(|s| !s.justified),
+            "removing a SAFETY comment must surface an unjustified site"
+        );
+    }
+}
