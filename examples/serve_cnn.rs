@@ -21,7 +21,7 @@
 //! make artifacts && cargo run --release --example serve_cnn
 //! ```
 
-use mec::coordinator::{BatchPolicy, Server, ServerConfig};
+use mec::coordinator::{Server, ServerConfig};
 use mec::engine::Engine;
 use mec::ensure;
 use mec::memory::Budget;
@@ -42,7 +42,10 @@ fn main() -> Result<()> {
     // ---- 1. build the engine under a mobile-ish budget ----------------
     let engine = Engine::builder(dir.join("model.mecw"))
         .budget(Budget::new(2 << 20)) // 2 MB workspace — phone territory
-        .pin_batch_sizes(&[1, 32])
+        // A power-of-two ladder up to 32: the adaptive batcher only
+        // dispatches pinned shapes, so the tail of the eval set runs as
+        // 16/8/4/2/1 chunks instead of degenerating to singles.
+        .pin_batch_sizes(&[1, 2, 4, 8, 16, 32])
         .build()
         .map_err(|e| mec::format_err!("{e}"))?;
     let eval = EvalSet::load(dir.join("eval.bin"))?;
@@ -76,10 +79,12 @@ fn main() -> Result<()> {
         Arc::clone(&engine),
         ServerConfig {
             workers: 1,
-            queue_capacity: 512,
-            policy: BatchPolicy::new(32, Duration::from_millis(2)),
+            queue_depth: 512,
+            max_wait: Duration::from_millis(2),
+            ..ServerConfig::default()
         },
-    );
+    )
+    .map_err(|e| mec::format_err!("{e}"))?;
     let client = server.client();
     let t0 = Instant::now();
     let rxs: Vec<_> = eval

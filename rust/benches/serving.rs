@@ -1,0 +1,151 @@
+//! Serving bench: the throughput / tail-latency / shed trade-off of the
+//! SLO-aware serving layer, recorded as the `BENCH_serving.json`
+//! trajectory.
+//!
+//! Two sweeps over one engine (paper layer cv6 behind the coordinator):
+//!
+//! * **closed loop** — N clients in submit-wait loops. Offered load
+//!   self-regulates to capacity, so this measures how throughput climbs
+//!   with concurrency (the adaptive batcher coalescing singles into the
+//!   pinned shapes) and where p99 crosses the SLO.
+//! * **open loop** — fixed-rate submission at fractions of the measured
+//!   closed-loop capacity. Past saturation the honest failure mode
+//!   appears: shed rate and tail latency blow up instead of throughput
+//!   politely flattening (no coordinated omission — percentiles come
+//!   from server-side histograms).
+//!
+//! Headline figure: best closed-loop throughput whose p99 still meets
+//! the SLO ("throughput at fixed p99").
+//!
+//! Run: `cargo bench --bench serving`
+//! (env: MEC_BENCH_FAST = smoke sweep, MEC_BENCH_SCALE shrinks channels,
+//!  MEC_THREADS pins the engine pool width)
+
+use mec::bench::harness::{bench_scale, bench_threads, print_table, threads_label};
+use mec::bench::workload;
+use mec::coordinator::{Server, ServerConfig};
+use mec::engine::Engine;
+use mec::serving::loadgen::{self, LoadConfig, LoadMode, LoadReport};
+use std::sync::Arc;
+use std::time::Duration;
+
+const SLO_MS: f64 = 50.0;
+const PINNED: &[usize] = &[1, 2, 4, 8];
+
+fn run_point(engine: &Arc<Engine>, workers: usize, cfg: &LoadConfig) -> LoadReport {
+    // Fresh server per point: shed/served counters and queue state
+    // start clean, so each report stands alone (the engine — the
+    // expensive part — is shared).
+    let server = Server::start(
+        Arc::clone(engine),
+        ServerConfig {
+            workers,
+            queue_depth: 1024,
+            max_wait: Duration::from_millis(2),
+            ..ServerConfig::default()
+        },
+    )
+    .expect("server starts");
+    let sample = {
+        let (h, w, c) = engine.input_hwc();
+        vec![0.2f32; h * w * c]
+    };
+    let report = loadgen::run(&server, &sample, cfg);
+    server.shutdown();
+    report
+}
+
+fn main() {
+    let fast = std::env::var_os("MEC_BENCH_FAST").is_some();
+    let scale = bench_scale();
+    let threads = bench_threads()
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
+        .max(2);
+    let workers = 2;
+    let w = workload::by_name("cv6").expect("cv6 in the paper suite");
+    let engine = Arc::new(
+        Engine::builder(w.model(scale, 0x6ec))
+            .pin_batch_sizes(PINNED)
+            .threads(threads)
+            .build()
+            .expect("cv6 engine builds"),
+    );
+    let slo = Some(Duration::from_secs_f64(SLO_MS / 1e3));
+    let requests = if fast { 60 } else { 400 };
+    println!(
+        "Serving bench: cv6 (scale {scale}), {}, {workers} workers, \
+         pinned {PINNED:?}, SLO {SLO_MS} ms, {requests} requests/point{}",
+        threads_label(threads),
+        if fast { " [smoke]" } else { "" }
+    );
+
+    // --- closed loop: capacity vs concurrency -----------------------
+    let client_counts: &[usize] = if fast { &[1, 2, 4] } else { &[1, 2, 4, 8, 16] };
+    let mut reports: Vec<LoadReport> = client_counts
+        .iter()
+        .map(|&clients| {
+            run_point(
+                &engine,
+                workers,
+                &LoadConfig { mode: LoadMode::Closed { clients }, requests, slo },
+            )
+        })
+        .collect();
+
+    // --- open loop: fixed rates around the measured capacity --------
+    // Rates are fractions of the best closed-loop throughput, so the
+    // sweep brackets saturation on any machine at any scale.
+    let capacity = reports
+        .iter()
+        .map(|r| r.throughput_rps)
+        .fold(1.0f64, f64::max);
+    let fractions: &[f64] = if fast { &[0.5, 1.25] } else { &[0.25, 0.5, 0.75, 1.0, 1.5] };
+    for &frac in fractions {
+        reports.push(run_point(
+            &engine,
+            workers,
+            &LoadConfig { mode: LoadMode::Open { rps: capacity * frac }, requests, slo },
+        ));
+    }
+
+    // --- report -----------------------------------------------------
+    let rows: Vec<Vec<String>> = reports
+        .iter()
+        .map(|r| {
+            vec![
+                r.label.clone(),
+                format!("{:.1}", r.offered_rps),
+                format!("{:.1}", r.throughput_rps),
+                format!("{:.2}", r.p50_ms),
+                format!("{:.2}", r.p90_ms),
+                format!("{:.2}", r.p99_ms),
+                format!("{:.1}%", 100.0 * r.shed_rate),
+                format!("{:.3}", r.slo_attainment),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!("Serving sweep (SLO {SLO_MS} ms; latency = server-side histogram)"),
+        &["load", "offered/s", "served/s", "p50 ms", "p90 ms", "p99 ms", "shed", "attain"],
+        &rows,
+    );
+    match reports
+        .iter()
+        .filter(|r| r.label.starts_with("closed") && r.p99_ms <= SLO_MS)
+        .max_by(|a, b| a.throughput_rps.total_cmp(&b.throughput_rps))
+    {
+        Some(best) => println!(
+            "\nthroughput at p99 <= {SLO_MS} ms: {:.1} req/s ({})",
+            best.throughput_rps, best.label
+        ),
+        None => println!("\nno closed-loop point met p99 <= {SLO_MS} ms on this machine"),
+    }
+
+    // Machine-readable trajectory point (same writer as the smoke
+    // regeneration in tests/serving_slo.rs).
+    let json = loadgen::render_json(SLO_MS, workers, PINNED, &reports);
+    match std::fs::write("BENCH_serving.json", &json) {
+        Ok(()) => println!("wrote BENCH_serving.json"),
+        Err(e) => eprintln!("warning: could not write BENCH_serving.json: {e}"),
+    }
+}

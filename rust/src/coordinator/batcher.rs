@@ -1,9 +1,15 @@
-//! Dynamic batching policy.
+//! Dynamic batching policy (legacy static variant).
 //!
 //! Classic serving trade-off: larger batches amortize per-call overhead
 //! (and steer MEC toward its Solution A regime), smaller batches cut
 //! tail latency. The batcher waits at most `max_delay` for up to
 //! `max_batch` requests — whichever fills first wins.
+//!
+//! The server path has moved to the deadline-driven
+//! [`AdaptiveBatcher`](crate::serving::AdaptiveBatcher), which replaces
+//! the fixed `max_batch`/`max_delay` pair with per-request deadlines
+//! and the engine's pinned batch shapes. This static batcher stays as
+//! the policy-free baseline for stress and property tests.
 
 use super::queue::RequestQueue;
 use super::Request;
@@ -95,6 +101,7 @@ mod tests {
             id,
             sample: vec![],
             enqueued_at: Instant::now(),
+            deadline: None,
             reply: tx,
         }
     }

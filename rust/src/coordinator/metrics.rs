@@ -1,8 +1,23 @@
-//! Serving metrics: counters + latency histograms, shared across workers.
+//! Serving metrics: lock-free counters + per-worker latency histograms.
+//!
+//! The record path is wait-free end to end: global counters are relaxed
+//! atomics, the global latency/forward histograms are
+//! [`AtomicHistogram`]s (the old `Mutex<Histogram>` serialized every
+//! reply across all workers), and each worker additionally owns a
+//! [`WorkerMetrics`] recording queue-wait / compute / total separately.
+//! Readers merge everything into a [`RawSnapshot`] /
+//! [`ServingSnapshot`].
+//!
+//! Conservation invariant: `requests == responses + rejected` once the
+//! server has drained — submit-time sheds count as `rejected`,
+//! dispatch-time sheds get an error reply and count as `responses`.
 
-use crate::util::stats::{fmt_ns, Histogram};
+use crate::serving::histogram::AtomicHistogram;
+use crate::serving::metrics::{RawSnapshot, ServingSnapshot, WorkerMetrics};
+use crate::serving::ShedReason;
+use crate::util::stats::fmt_ns;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::Arc;
 
 /// Thread-safe serving metrics.
 pub struct Metrics {
@@ -10,38 +25,80 @@ pub struct Metrics {
     pub responses: AtomicU64,
     pub rejected: AtomicU64,
     pub batches: AtomicU64,
+    /// Requests shed with [`ShedReason::QueueFull`].
+    pub shed_queue_full: AtomicU64,
+    /// Requests shed with [`ShedReason::DeadlineInfeasible`] (at submit
+    /// or at dispatch).
+    pub shed_deadline: AtomicU64,
     batch_size_sum: AtomicU64,
     /// End-to-end latency (enqueue -> reply), ns.
-    latency: Mutex<Histogram>,
+    latency: AtomicHistogram,
     /// Model forward time per batch, ns.
-    forward: Mutex<Histogram>,
+    forward: AtomicHistogram,
+    /// One per worker thread (empty for bare `Metrics::new()`).
+    workers: Vec<Arc<WorkerMetrics>>,
     started: std::time::Instant,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
+        Metrics::with_workers(0)
+    }
+
+    /// Metrics surface for a server with `workers` worker threads.
+    pub fn with_workers(workers: usize) -> Metrics {
         Metrics {
             requests: AtomicU64::new(0),
             responses: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             batches: AtomicU64::new(0),
+            shed_queue_full: AtomicU64::new(0),
+            shed_deadline: AtomicU64::new(0),
             batch_size_sum: AtomicU64::new(0),
-            latency: Mutex::new(Histogram::latency_ns()),
-            forward: Mutex::new(Histogram::latency_ns()),
+            latency: AtomicHistogram::new(),
+            forward: AtomicHistogram::new(),
+            workers: (0..workers).map(|_| Arc::new(WorkerMetrics::new())).collect(),
             started: std::time::Instant::now(),
         }
+    }
+
+    /// Worker `wid`'s private recording surface.
+    pub fn worker(&self, wid: usize) -> Arc<WorkerMetrics> {
+        Arc::clone(&self.workers[wid])
     }
 
     pub fn record_batch(&self, batch_size: usize, forward_ns: f64) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batch_size_sum
             .fetch_add(batch_size as u64, Ordering::Relaxed);
-        self.forward.lock().unwrap().record(forward_ns);
+        self.forward.record(forward_ns.max(0.0) as u64);
     }
 
     pub fn record_latency(&self, ns: f64) {
         self.responses.fetch_add(1, Ordering::Relaxed);
-        self.latency.lock().unwrap().record(ns);
+        self.latency.record(ns.max(0.0) as u64);
+    }
+
+    /// A request shed at submit: it never entered the queue, so it
+    /// counts as `rejected` (conservation: not a response).
+    pub fn record_submit_shed(&self, reason: ShedReason) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+        self.shed_counter(reason).fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request shed at dispatch (admitted, then its deadline died in
+    /// the queue): the worker replies with a typed error, so it counts
+    /// as a response.
+    pub fn record_shed_response(&self, reason: ShedReason) {
+        self.responses.fetch_add(1, Ordering::Relaxed);
+        self.shed_counter(reason).fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn shed_counter(&self, reason: ShedReason) -> &AtomicU64 {
+        match reason {
+            ShedReason::QueueFull { .. } => &self.shed_queue_full,
+            ShedReason::DeadlineInfeasible { .. } => &self.shed_deadline,
+        }
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -54,11 +111,11 @@ impl Metrics {
     }
 
     pub fn latency_percentile(&self, p: f64) -> f64 {
-        self.latency.lock().unwrap().percentile(p)
+        self.latency.snapshot().percentile(p) as f64
     }
 
     pub fn forward_percentile(&self, p: f64) -> f64 {
-        self.forward.lock().unwrap().percentile(p)
+        self.forward.snapshot().percentile(p) as f64
     }
 
     /// Served requests per second since start.
@@ -67,10 +124,30 @@ impl Metrics {
         served / self.started.elapsed().as_secs_f64().max(1e-9)
     }
 
+    /// Merge all workers' histograms + the shed counters into one
+    /// full-resolution snapshot. Baseline-subtractable — the load
+    /// generator diffs two of these per sweep point.
+    pub fn raw_snapshot(&self) -> RawSnapshot {
+        let mut raw = RawSnapshot::empty();
+        for w in &self.workers {
+            raw.merge(&w.snapshot());
+        }
+        raw.shed_queue_full = self.shed_queue_full.load(Ordering::Relaxed);
+        raw.shed_deadline = self.shed_deadline.load(Ordering::Relaxed);
+        raw
+    }
+
+    /// Percentile summary of [`raw_snapshot`](Metrics::raw_snapshot) —
+    /// what the CLI prints.
+    pub fn snapshot(&self) -> ServingSnapshot {
+        ServingSnapshot::from_raw(&self.raw_snapshot())
+    }
+
     /// Multi-line human-readable report.
     pub fn report(&self) -> String {
         format!(
             "requests={} responses={} rejected={} batches={} mean_batch={:.2}\n\
+             shed: queue-full={} deadline={}\n\
              latency p50={} p95={} p99={} | forward p50={} p95={}\n\
              throughput={:.1} req/s",
             self.requests.load(Ordering::Relaxed),
@@ -78,6 +155,8 @@ impl Metrics {
             self.rejected.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
+            self.shed_queue_full.load(Ordering::Relaxed),
+            self.shed_deadline.load(Ordering::Relaxed),
             fmt_ns(self.latency_percentile(50.0)),
             fmt_ns(self.latency_percentile(95.0)),
             fmt_ns(self.latency_percentile(99.0)),
@@ -97,6 +176,7 @@ impl Default for Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     #[test]
     fn batch_accounting() {
@@ -126,5 +206,45 @@ mod tests {
         let r = m.report();
         assert!(r.contains("mean_batch=2.00"));
         assert!(r.contains("latency"));
+    }
+
+    #[test]
+    fn shed_accounting_keeps_conservation() {
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.record_submit_shed(ShedReason::QueueFull { depth: 1, capacity: 1 });
+        m.record_shed_response(ShedReason::DeadlineInfeasible { needed_ns: 2, budget_ns: 1 });
+        m.record_latency(1e6);
+        assert_eq!(m.shed_queue_full.load(Ordering::Relaxed), 1);
+        assert_eq!(m.shed_deadline.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            m.requests.load(Ordering::Relaxed),
+            m.responses.load(Ordering::Relaxed) + m.rejected.load(Ordering::Relaxed)
+        );
+        let snap = m.snapshot();
+        assert_eq!(snap.shed_queue_full, 1);
+        assert_eq!(snap.shed_deadline, 1);
+    }
+
+    #[test]
+    fn worker_histograms_merge_into_snapshot() {
+        let m = Metrics::with_workers(2);
+        m.worker(0).record_served(
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+            Duration::from_millis(3),
+            Some(true),
+        );
+        m.worker(1).record_served(
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+            Duration::from_millis(3),
+            Some(false),
+        );
+        let raw = m.raw_snapshot();
+        assert_eq!(raw.served, 2);
+        assert_eq!(raw.total.count(), 2);
+        let snap = m.snapshot();
+        assert!((snap.slo_attainment - 0.5).abs() < 1e-9);
     }
 }

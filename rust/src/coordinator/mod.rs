@@ -8,13 +8,20 @@
 //! shared [`Engine`](crate::engine::Engine), and reports
 //! latency/throughput.
 //!
+//! This module owns the *mechanism* — queue, worker threads, reply
+//! channels; the scheduling *policy* (deadline-driven batching,
+//! admission control, latency histograms) lives in
+//! [`serving`](crate::serving) and is wired in by [`server`].
+//!
 //! Pieces:
 //! * [`queue`]  — bounded MPSC request queue with backpressure.
-//! * [`batcher`] — dynamic batching: wait up to `max_delay` to fill a
-//!   batch of `max_batch` (vLLM/Triton-style).
-//! * [`server`] — worker threads draining batches through per-worker
-//!   engine sessions (shared plans/prepacks, private arenas).
-//! * [`metrics`] — latency histograms + counters.
+//! * [`server`] — worker threads draining deadline-aware batches
+//!   through per-worker engine sessions (shared plans/prepacks, private
+//!   arenas), with admission control at submit.
+//! * [`metrics`] — lock-free counters + per-worker latency histograms.
+//! * [`batcher`] — the legacy static batcher (fixed `max_batch` /
+//!   `max_delay`), kept for stress tests; the server path uses
+//!   [`AdaptiveBatcher`](crate::serving::AdaptiveBatcher).
 //!
 //! Malformed requests never abort a worker: [`Client::submit`] validates
 //! at enqueue ([`SubmitError::Invalid`]), and anything malformed that
@@ -33,18 +40,24 @@ pub mod server;
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::Metrics;
 pub use queue::{QueueError, RequestQueue};
-pub use server::{Client, Server, ServerConfig};
+pub use server::{Client, Server, ServerConfig, ServerError};
 
 use crate::engine::{EngineError, Prediction};
+use crate::serving::ShedReason;
 use crate::tensor::Tensor;
 use std::sync::mpsc;
+use std::time::Instant;
 
-/// A single inference request: one sample (h·w·c floats) plus a oneshot
-/// channel for the reply.
+/// A single inference request: one sample (h·w·c floats), an optional
+/// completion deadline, and a oneshot channel for the reply.
 pub struct Request {
     pub id: u64,
     pub sample: Vec<f32>,
-    pub enqueued_at: std::time::Instant,
+    pub enqueued_at: Instant,
+    /// Absolute completion deadline (submit time + SLO). `None` =
+    /// best-effort; the batcher never dispatches early for it and the
+    /// server never sheds it on time grounds.
+    pub deadline: Option<Instant>,
     pub reply: mpsc::Sender<Response>,
 }
 
@@ -56,7 +69,7 @@ pub struct Response {
     /// Batch this request was served in (observability; 0 when the
     /// request never reached a forward pass).
     pub batch_size: usize,
-    pub result: Result<Prediction, EngineError>,
+    pub result: Result<Prediction, ServeError>,
 }
 
 impl Response {
@@ -66,11 +79,36 @@ impl Response {
     }
 }
 
+/// Why an *admitted* request came back without a prediction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// The engine refused or failed the forward pass.
+    Engine(EngineError),
+    /// Shed after admission: the queue wait consumed the deadline
+    /// budget, so the worker dropped the request at dispatch instead of
+    /// serving it late (always [`ShedReason::DeadlineInfeasible`]).
+    Shed(ShedReason),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Engine(e) => write!(f, "{e}"),
+            ServeError::Shed(r) => write!(f, "{r}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 /// Why [`Client::submit`] refused a request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum SubmitError {
-    /// Queue-level backpressure (`Full`) or shutdown (`Closed`).
-    Queue(QueueError),
+    /// Admission control refused the request: queue at capacity, or the
+    /// deadline cannot be met given estimated queue wait + compute.
+    Shed(ShedReason),
+    /// The server is draining; no new work is accepted.
+    ShuttingDown,
     /// The sample does not match the engine input — caught at enqueue,
     /// before a worker thread ever sees it.
     Invalid(EngineError),
@@ -79,19 +117,14 @@ pub enum SubmitError {
 impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            SubmitError::Queue(e) => write!(f, "{e}"),
+            SubmitError::Shed(r) => write!(f, "{r}"),
+            SubmitError::ShuttingDown => write!(f, "server is shutting down"),
             SubmitError::Invalid(e) => write!(f, "invalid request: {e}"),
         }
     }
 }
 
 impl std::error::Error for SubmitError {}
-
-impl From<QueueError> for SubmitError {
-    fn from(e: QueueError) -> SubmitError {
-        SubmitError::Queue(e)
-    }
-}
 
 /// Assemble a batch tensor from requests (NHWC, n = requests.len()).
 /// Every request must carry exactly h·w·c floats; the first mismatch is
@@ -123,7 +156,6 @@ pub fn assemble_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Instant;
 
     fn req(id: u64, sample: Vec<f32>) -> (Request, mpsc::Receiver<Response>) {
         let (tx, rx) = mpsc::channel();
@@ -132,6 +164,7 @@ mod tests {
                 id,
                 sample,
                 enqueued_at: Instant::now(),
+                deadline: None,
                 reply: tx,
             },
             rx,

@@ -136,6 +136,7 @@ mod tests {
             id,
             sample: vec![],
             enqueued_at: Instant::now(),
+            deadline: None,
             reply: tx,
         }
     }

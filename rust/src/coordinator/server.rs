@@ -9,35 +9,80 @@
 //! memo makes the steady state lock-free: the hot path allocates
 //! nothing but activations — no kernel repacking, no workspace growth,
 //! no plan-cache lock.
+//!
+//! Scheduling policy comes from [`serving`](crate::serving): admission
+//! control at [`Client::submit`] (typed [`ShedReason`] rejection when
+//! the queue is full or a deadline is infeasible), the deadline-driven
+//! [`AdaptiveBatcher`] in each worker, and a padding-free split of each
+//! collected batch into the engine's pinned shapes.
 
-use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use super::queue::{QueueError, RequestQueue};
-use super::{assemble_batch, Request, Response, SubmitError};
+use super::{assemble_batch, Request, Response, ServeError, SubmitError};
 use crate::engine::{Engine, EngineError};
+use crate::serving::batcher::{infeasible, split_into_pinned, AdaptiveBatcher, SloPolicy};
+use crate::serving::{AdmissionPolicy, BatchCosts, ShedReason};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Server configuration. The execution context (threads, precision,
 /// budget) lives in the [`Engine`] — the server only decides how
-/// requests are queued and batched.
+/// requests are queued, admitted, and batched. The maximum batch size
+/// is not configured here: it is the engine's largest pinned batch
+/// (serving never dispatches a shape the engine didn't pre-plan).
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub workers: usize,
-    pub queue_capacity: usize,
-    pub policy: BatchPolicy,
+    /// Bounded queue capacity; at capacity, submits shed with
+    /// [`ShedReason::QueueFull`].
+    pub queue_depth: usize,
+    /// Default latency objective: submits without an explicit deadline
+    /// get `now + slo`. `None` = best-effort serving, no deadlines.
+    pub slo: Option<Duration>,
+    /// Batcher collect window when no deadline presses.
+    pub max_wait: Duration,
+    /// Scheduling slack subtracted from deadline-driven decisions.
+    pub margin: Duration,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             workers: 1,
-            queue_capacity: 256,
-            policy: BatchPolicy::default(),
+            queue_depth: 256,
+            slo: None,
+            max_wait: Duration::from_millis(2),
+            margin: Duration::from_micros(200),
         }
     }
 }
+
+/// Why [`Server::start`] refused a configuration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServerError {
+    /// `workers == 0` — nothing would ever drain the queue.
+    NoWorkers,
+    /// More workers than engine threads: at least one worker would get
+    /// a zero-thread share of the pool. Build the engine with
+    /// `.threads(>= workers)` or reduce `workers`.
+    InsufficientThreads { workers: usize, threads: usize },
+}
+
+impl std::fmt::Display for ServerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServerError::NoWorkers => write!(f, "server config has zero workers"),
+            ServerError::InsufficientThreads { workers, threads } => write!(
+                f,
+                "{workers} workers cannot share a {threads}-thread engine \
+                 (each worker needs at least one thread)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServerError {}
 
 /// Handle for submitting requests to a running server.
 #[derive(Clone)]
@@ -46,14 +91,33 @@ pub struct Client {
     metrics: Arc<Metrics>,
     next_id: Arc<AtomicU64>,
     hwc: (usize, usize, usize),
+    costs: Arc<BatchCosts>,
+    admission: AdmissionPolicy,
+    workers: usize,
+    slo: Option<Duration>,
 }
 
 impl Client {
     /// Submit one sample; returns a receiver for the response. Sample
     /// size is validated here, at enqueue — a malformed request is
     /// rejected with [`SubmitError::Invalid`] instead of ever reaching
-    /// (and formerly aborting) a worker thread.
+    /// (and formerly aborting) a worker thread. The server's default
+    /// SLO (if any) becomes the request deadline.
     pub fn submit(&self, sample: Vec<f32>) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        let deadline = self.slo.map(|s| Instant::now() + s);
+        self.submit_with_deadline(sample, deadline)
+    }
+
+    /// Submit with an explicit completion deadline (overrides the
+    /// server SLO; `None` = best-effort). Admission control runs here:
+    /// a request the scheduler already knows it cannot serve in time is
+    /// refused immediately with a typed [`ShedReason`] instead of
+    /// burning queue capacity and dying later.
+    pub fn submit_with_deadline(
+        &self,
+        sample: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
         let (h, w, c) = self.hwc;
         let expected = h * w * c;
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
@@ -64,18 +128,39 @@ impl Client {
                 got: sample.len(),
             }));
         }
+        if let Err(reason) = self.admission.admit(
+            self.queue.len(),
+            self.workers,
+            &self.costs,
+            Instant::now(),
+            deadline,
+        ) {
+            self.metrics.record_submit_shed(reason);
+            return Err(SubmitError::Shed(reason));
+        }
         let (tx, rx) = mpsc::channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             sample,
             enqueued_at: Instant::now(),
+            deadline,
             reply: tx,
         };
         match self.queue.push(req) {
             Ok(()) => Ok(rx),
-            Err(e) => {
+            // The admission check raced a fill-up: same typed shed as if
+            // admission had caught it.
+            Err(QueueError::Full(capacity)) => {
+                let reason = ShedReason::QueueFull {
+                    depth: self.queue.len(),
+                    capacity,
+                };
+                self.metrics.record_submit_shed(reason);
+                Err(SubmitError::Shed(reason))
+            }
+            Err(QueueError::Closed) => {
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(SubmitError::Queue(e))
+                Err(SubmitError::ShuttingDown)
             }
         }
     }
@@ -83,7 +168,7 @@ impl Client {
     /// Submit and block for the answer.
     pub fn infer(&self, sample: Vec<f32>) -> Result<Response, SubmitError> {
         let rx = self.submit(sample)?;
-        rx.recv().map_err(|_| SubmitError::Queue(QueueError::Closed))
+        rx.recv().map_err(|_| SubmitError::ShuttingDown)
     }
 }
 
@@ -94,6 +179,10 @@ pub struct Server {
     workers: Vec<std::thread::JoinHandle<()>>,
     hwc: (usize, usize, usize),
     next_id: Arc<AtomicU64>,
+    costs: Arc<BatchCosts>,
+    admission: AdmissionPolicy,
+    n_workers: usize,
+    slo: Option<Duration>,
 }
 
 impl Server {
@@ -101,40 +190,63 @@ impl Server {
     /// of `engine`.
     ///
     /// Intra-op parallelism is divided, not multiplied: the engine's
-    /// thread budget is split across the workers
-    /// (`engine threads / workers`, min 1), and every session shares the
-    /// engine's one persistent pool — `workers × per-session threads`
-    /// never exceeds the pool the engine was built with, where each
-    /// worker session previously defaulted to `available_parallelism`
-    /// of its own.
-    pub fn start(engine: Arc<Engine>, cfg: ServerConfig) -> Server {
-        let queue = Arc::new(RequestQueue::new(cfg.queue_capacity));
-        let metrics = Arc::new(Metrics::new());
+    /// thread budget is split across the workers (rounding *up*, so the
+    /// pool stays fully subscribed when the division is uneven), and
+    /// every session shares the engine's one persistent pool. A config
+    /// that would hand any worker a zero-thread share is refused with a
+    /// typed [`ServerError`] instead of being silently clamped.
+    pub fn start(engine: Arc<Engine>, cfg: ServerConfig) -> Result<Server, ServerError> {
+        if cfg.workers == 0 {
+            return Err(ServerError::NoWorkers);
+        }
+        let threads = engine.context().threads();
+        if threads < cfg.workers {
+            return Err(ServerError::InsufficientThreads {
+                workers: cfg.workers,
+                threads,
+            });
+        }
+        let per_worker_threads = threads.div_ceil(cfg.workers);
+        let queue = Arc::new(RequestQueue::new(cfg.queue_depth));
+        let metrics = Arc::new(Metrics::with_workers(cfg.workers));
+        let costs = Arc::new(BatchCosts::from_engine(&engine));
+        let admission = AdmissionPolicy {
+            margin: cfg.margin,
+            ..AdmissionPolicy::for_capacity(cfg.queue_depth)
+        };
+        let policy = SloPolicy {
+            slo: cfg.slo,
+            max_wait: cfg.max_wait,
+            margin: cfg.margin,
+        };
         let hwc = engine.input_hwc();
-        let n_workers = cfg.workers.max(1);
-        let per_worker_threads = (engine.context().threads() / n_workers).max(1);
         let mut workers = Vec::new();
-        for wid in 0..n_workers {
+        for wid in 0..cfg.workers {
             let queue = Arc::clone(&queue);
             let metrics = Arc::clone(&metrics);
             let engine = Arc::clone(&engine);
-            let policy = cfg.policy.clone();
+            let costs = Arc::clone(&costs);
+            let policy = policy.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("mec-serve-{wid}"))
                     .spawn(move || {
-                        worker_loop(&queue, &metrics, &engine, policy, per_worker_threads);
+                        worker_loop(&queue, &metrics, &engine, costs, policy, per_worker_threads, wid);
                     })
                     .expect("spawn server worker"),
             );
         }
-        Server {
+        Ok(Server {
             queue,
             metrics,
             workers,
             hwc,
             next_id: Arc::new(AtomicU64::new(0)),
-        }
+            costs,
+            admission,
+            n_workers: cfg.workers,
+            slo: cfg.slo,
+        })
     }
 
     pub fn client(&self) -> Client {
@@ -143,6 +255,10 @@ impl Server {
             metrics: Arc::clone(&self.metrics),
             next_id: Arc::clone(&self.next_id),
             hwc: self.hwc,
+            costs: Arc::clone(&self.costs),
+            admission: self.admission.clone(),
+            workers: self.n_workers,
+            slo: self.slo,
         }
     }
 
@@ -150,7 +266,9 @@ impl Server {
         Arc::clone(&self.metrics)
     }
 
-    /// Stop accepting, drain, and join workers.
+    /// Graceful drain: stop accepting (subsequent submits get
+    /// [`SubmitError::ShuttingDown`]), serve everything already
+    /// admitted, join workers.
     pub fn shutdown(mut self) -> Arc<Metrics> {
         self.queue.close();
         for h in self.workers.drain(..) {
@@ -160,16 +278,20 @@ impl Server {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     queue: &RequestQueue,
     metrics: &Metrics,
     engine: &Engine,
-    policy: BatchPolicy,
+    costs: Arc<BatchCosts>,
+    policy: SloPolicy,
     threads: usize,
+    wid: usize,
 ) {
     // Per-worker session: engine-sized arena, lock-free steady state,
     // thread budget = its share of the engine's pool.
-    let batcher = Batcher::new(queue, policy);
+    let wm = metrics.worker(wid);
+    let batcher = AdaptiveBatcher::new(queue, Arc::clone(&costs), policy);
     let mut session = engine.session_with_threads(threads);
     let (h, w, c) = engine.input_hwc();
     let per = h * w * c;
@@ -187,10 +309,10 @@ fn worker_loop(
                 let resp = Response {
                     id: req.id,
                     batch_size: 0,
-                    result: Err(EngineError::SampleSize {
+                    result: Err(ServeError::Engine(EngineError::SampleSize {
                         expected: per,
                         got: req.sample.len(),
-                    }),
+                    })),
                 };
                 // This request bypassed Client::submit (which would have
                 // rejected it at enqueue), so the client-side counters
@@ -205,37 +327,78 @@ fn worker_loop(
                 valid.push(req);
             }
         }
-        if valid.is_empty() {
+        // Dispatch-time shedding: a deadline that was feasible at
+        // admission can die waiting in the queue. Running it anyway
+        // would be compute spent on a reply nobody can use — shed with
+        // the same typed reason admission uses.
+        let now = Instant::now();
+        let est =
+            Duration::from_nanos(costs.estimate_ns(costs.covering(valid.len())).max(0.0) as u64);
+        let mut feasible = Vec::with_capacity(valid.len());
+        for req in valid {
+            if infeasible(now, req.deadline, est) {
+                let budget_ns = req
+                    .deadline
+                    .map(|d| d.saturating_duration_since(now).as_nanos() as u64)
+                    .unwrap_or(0);
+                let reason = ShedReason::DeadlineInfeasible {
+                    needed_ns: est.as_nanos() as u64,
+                    budget_ns,
+                };
+                metrics.record_shed_response(reason);
+                let _ = req.reply.send(Response {
+                    id: req.id,
+                    batch_size: 0,
+                    result: Err(ServeError::Shed(reason)),
+                });
+            } else {
+                feasible.push(req);
+            }
+        }
+        if feasible.is_empty() {
             continue;
         }
-        let t0 = Instant::now();
-        let outcome = assemble_batch((h, w, c), &valid)
-            .and_then(|input| session.predict_batch(&input));
-        match outcome {
-            Ok(preds) => {
-                let forward_ns = t0.elapsed().as_nanos() as f64;
-                metrics.record_batch(valid.len(), forward_ns);
-                for (req, pred) in valid.iter().zip(preds) {
-                    let resp = Response {
-                        id: req.id,
-                        batch_size: valid.len(),
-                        result: Ok(pred),
-                    };
-                    metrics.record_latency(req.enqueued_at.elapsed().as_nanos() as f64);
-                    let _ = req.reply.send(resp); // receiver may have given up
+        // Padding-free dispatch: cut the collected batch into the
+        // engine's pinned shapes (largest first) so every forward runs
+        // a pre-planned geometry.
+        let mut remaining = feasible;
+        for chunk_len in split_into_pinned(remaining.len(), costs.sizes()) {
+            let chunk: Vec<Request> = remaining.drain(..chunk_len).collect();
+            let dispatch_start = Instant::now();
+            let outcome = assemble_batch((h, w, c), &chunk)
+                .and_then(|input| session.predict_batch(&input));
+            match outcome {
+                Ok(preds) => {
+                    let compute = dispatch_start.elapsed();
+                    let forward_ns = compute.as_nanos() as f64;
+                    metrics.record_batch(chunk_len, forward_ns);
+                    // Refine the scheduler's estimate with reality.
+                    costs.observe(chunk_len, forward_ns);
+                    for (req, pred) in chunk.iter().zip(preds) {
+                        let queue_wait =
+                            dispatch_start.saturating_duration_since(req.enqueued_at);
+                        let total = req.enqueued_at.elapsed();
+                        let met = req.deadline.map(|d| Instant::now() <= d);
+                        wm.record_served(queue_wait, compute, total, met);
+                        metrics.record_latency(total.as_nanos() as f64);
+                        let _ = req.reply.send(Response {
+                            id: req.id,
+                            batch_size: chunk_len,
+                            result: Ok(pred),
+                        }); // receiver may have given up
+                    }
                 }
-            }
-            // Unreachable after the per-request validation above, but a
-            // worker must survive anything: reply the typed error.
-            Err(e) => {
-                for req in &valid {
-                    let resp = Response {
-                        id: req.id,
-                        batch_size: 0,
-                        result: Err(e.clone()),
-                    };
-                    metrics.record_latency(req.enqueued_at.elapsed().as_nanos() as f64);
-                    let _ = req.reply.send(resp);
+                // Unreachable after the per-request validation above, but
+                // a worker must survive anything: reply the typed error.
+                Err(e) => {
+                    for req in &chunk {
+                        metrics.record_latency(req.enqueued_at.elapsed().as_nanos() as f64);
+                        let _ = req.reply.send(Response {
+                            id: req.id,
+                            batch_size: 0,
+                            result: Err(ServeError::Engine(e.clone())),
+                        });
+                    }
                 }
             }
         }
@@ -249,7 +412,6 @@ mod tests {
     use crate::model::{Layer, Model};
     use crate::tensor::{Kernel, KernelShape};
     use crate::util::Rng;
-    use std::time::Duration;
 
     fn tiny_model() -> Model {
         let mut rng = Rng::new(77);
@@ -286,6 +448,7 @@ mod tests {
         Arc::new(
             Engine::builder(tiny_model())
                 .algo_override(0, AlgoKind::Mec)
+                .pin_batch_sizes(&[1, 2, 4, 8])
                 .build()
                 .expect("tiny model builds"),
         )
@@ -293,7 +456,7 @@ mod tests {
 
     #[test]
     fn serves_and_answers() {
-        let server = Server::start(tiny_engine(), ServerConfig::default());
+        let server = Server::start(tiny_engine(), ServerConfig::default()).expect("server starts");
         let client = server.client();
         let mut rng = Rng::new(1);
         let mut sample = vec![0.0; 36];
@@ -307,16 +470,40 @@ mod tests {
     }
 
     #[test]
+    fn zero_workers_is_a_typed_error() {
+        let err = Server::start(
+            tiny_engine(),
+            ServerConfig { workers: 0, ..ServerConfig::default() },
+        )
+        .unwrap_err();
+        assert_eq!(err, ServerError::NoWorkers);
+    }
+
+    #[test]
+    fn more_workers_than_threads_is_a_typed_error() {
+        // A 1-thread engine cannot give 4 workers a thread each — the
+        // old behaviour silently clamped every worker to 1 thread and
+        // oversubscribed the pool 4×.
+        let err = Server::start(
+            tiny_engine(),
+            ServerConfig { workers: 4, ..ServerConfig::default() },
+        )
+        .unwrap_err();
+        assert_eq!(err, ServerError::InsufficientThreads { workers: 4, threads: 1 });
+    }
+
+    #[test]
     fn batch_answers_match_standalone_session() {
         // Responses through the server must equal a solo session.
         let engine = tiny_engine();
         let server = Server::start(
             Arc::clone(&engine),
             ServerConfig {
-                policy: BatchPolicy::new(8, Duration::from_millis(20)),
+                max_wait: Duration::from_millis(20),
                 ..ServerConfig::default()
             },
-        );
+        )
+        .expect("server starts");
         let client = server.client();
         let mut rng = Rng::new(5);
         let samples: Vec<Vec<f32>> = (0..6)
@@ -342,7 +529,7 @@ mod tests {
 
     #[test]
     fn malformed_submit_is_rejected_at_enqueue() {
-        let server = Server::start(tiny_engine(), ServerConfig::default());
+        let server = Server::start(tiny_engine(), ServerConfig::default()).expect("server starts");
         let client = server.client();
         let err = client.submit(vec![0.0; 7]).unwrap_err();
         assert_eq!(
@@ -363,7 +550,7 @@ mod tests {
         // Bypass the client's validation by pushing onto the queue
         // directly: the worker must answer with an error Response (not
         // abort) and keep serving valid requests afterwards.
-        let server = Server::start(tiny_engine(), ServerConfig::default());
+        let server = Server::start(tiny_engine(), ServerConfig::default()).expect("server starts");
         let (tx, rx) = mpsc::channel();
         server
             .queue
@@ -371,6 +558,7 @@ mod tests {
                 id: 999,
                 sample: vec![0.0; 5],
                 enqueued_at: Instant::now(),
+                deadline: None,
                 reply: tx,
             })
             .unwrap();
@@ -379,7 +567,7 @@ mod tests {
         assert_eq!(resp.batch_size, 0);
         assert_eq!(
             resp.result,
-            Err(EngineError::SampleSize { expected: 36, got: 5 })
+            Err(ServeError::Engine(EngineError::SampleSize { expected: 36, got: 5 }))
         );
         // The worker thread is alive and serving.
         let client = server.client();
@@ -398,10 +586,11 @@ mod tests {
         let server = Server::start(
             tiny_engine(),
             ServerConfig {
-                policy: BatchPolicy::new(16, Duration::from_millis(50)),
+                max_wait: Duration::from_millis(50),
                 ..ServerConfig::default()
             },
-        );
+        )
+        .expect("server starts");
         let client = server.client();
         let rxs: Vec<_> = (0..8)
             .map(|_| client.submit(vec![0.5; 36]).unwrap())
@@ -415,6 +604,11 @@ mod tests {
             batch_sizes.iter().any(|&b| b > 1),
             "expected dynamic batching to form a multi-request batch, got {batch_sizes:?}"
         );
+        // Every batch size the server dispatched is a pinned shape.
+        assert!(
+            batch_sizes.iter().all(|b| [1, 2, 4, 8].contains(b)),
+            "non-pinned dispatch shape in {batch_sizes:?}"
+        );
     }
 
     #[test]
@@ -426,6 +620,7 @@ mod tests {
         let engine = Arc::new(
             Engine::builder(tiny_model())
                 .algo_override(0, AlgoKind::Mec)
+                .pin_batch_sizes(&[1, 2, 4, 8])
                 .threads(4)
                 .build()
                 .expect("tiny model builds"),
@@ -437,7 +632,8 @@ mod tests {
                 workers: 2,
                 ..ServerConfig::default()
             },
-        );
+        )
+        .expect("server starts");
         let client = server.client();
         for _ in 0..4 {
             assert!(client.infer(vec![0.3; 36]).unwrap().result.is_ok());
@@ -456,7 +652,7 @@ mod tests {
 
     #[test]
     fn shutdown_is_clean_under_load() {
-        let server = Server::start(tiny_engine(), ServerConfig::default());
+        let server = Server::start(tiny_engine(), ServerConfig::default()).expect("server starts");
         let client = server.client();
         for _ in 0..20 {
             let _ = client.submit(vec![0.1; 36]);
@@ -468,5 +664,35 @@ mod tests {
                 + metrics.rejected.load(Ordering::Relaxed),
             metrics.requests.load(Ordering::Relaxed)
         );
+    }
+
+    #[test]
+    fn submit_after_shutdown_says_shutting_down() {
+        let server = Server::start(tiny_engine(), ServerConfig::default()).expect("server starts");
+        let client = server.client();
+        server.shutdown();
+        assert_eq!(
+            client.submit(vec![0.1; 36]).unwrap_err(),
+            SubmitError::ShuttingDown
+        );
+    }
+
+    #[test]
+    fn hopeless_deadline_is_shed_at_submit() {
+        let server = Server::start(tiny_engine(), ServerConfig::default()).expect("server starts");
+        let client = server.client();
+        // A deadline already in the past can never be met: admission
+        // must shed it deterministically (the margin alone exceeds the
+        // zero budget).
+        let err = client
+            .submit_with_deadline(vec![0.1; 36], Some(Instant::now()))
+            .unwrap_err();
+        assert!(
+            matches!(err, SubmitError::Shed(ShedReason::DeadlineInfeasible { .. })),
+            "got {err:?}"
+        );
+        let metrics = server.shutdown();
+        assert_eq!(metrics.shed_deadline.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.rejected.load(Ordering::Relaxed), 1);
     }
 }

@@ -307,6 +307,20 @@ impl EngineBuilder {
             .map(|e| e * max_batch)
             .collect();
 
+        // Seed the serving scheduler's per-pinned-batch compute
+        // estimates from the same cost model that just ranked the
+        // algorithms, with the planner's thread discount applied so the
+        // figures are comparable to wall-clock on this engine.
+        let discount = 1.0 + 0.75 * (self.threads as f64 - 1.0);
+        let mut batch_costs = Vec::with_capacity(pinned.len());
+        for &b in &pinned {
+            let mut total = 0.0;
+            for (i, cs) in model.conv_shapes(b) {
+                total += planner.cost.estimate_ns_prec(chosen[&i], &cs, self.precision);
+            }
+            batch_costs.push((b, total / discount));
+        }
+
         Ok(Engine {
             model: Arc::new(model),
             ctx,
@@ -315,6 +329,7 @@ impl EngineBuilder {
             act_slots,
             pinned,
             report,
+            batch_costs,
         })
     }
 }

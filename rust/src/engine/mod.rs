@@ -99,6 +99,9 @@ pub struct Engine {
     act_slots: Vec<usize>,
     pinned: Vec<usize>,
     report: Vec<LayerPlan>,
+    /// Cost-model compute estimate (ns) per pinned batch size, thread
+    /// discount applied — the serving scheduler's seed figures.
+    batch_costs: Vec<(usize, f64)>,
 }
 
 impl Engine {
@@ -193,6 +196,32 @@ impl Engine {
     /// Chosen algorithm per conv layer (delegates to the model).
     pub fn plan_summary(&self) -> Vec<(usize, AlgoKind)> {
         self.model.plan_summary()
+    }
+
+    /// Cost-model compute estimate (ns) for each pinned batch size,
+    /// ascending, with the planner's thread discount applied. The
+    /// serving layer seeds its
+    /// [`BatchCosts`](crate::serving::BatchCosts) from this and refines
+    /// online from measured forwards.
+    pub fn batch_cost_estimates(&self) -> &[(usize, f64)] {
+        &self.batch_costs
+    }
+
+    /// Estimated forward ns for a batch of `n`: exact for pinned sizes,
+    /// linearly scaled from the nearest pinned size otherwise.
+    pub fn estimate_batch_ns(&self, n: usize) -> f64 {
+        let n = n.max(1);
+        if let Some(&(_, ns)) = self.batch_costs.iter().find(|&&(b, _)| b == n) {
+            return ns;
+        }
+        match self
+            .batch_costs
+            .iter()
+            .min_by_key(|&&(b, _)| b.abs_diff(n))
+        {
+            Some(&(b, ns)) => ns * n as f64 / b.max(1) as f64,
+            None => 0.0,
+        }
     }
 }
 
@@ -294,6 +323,32 @@ mod tests {
         assert_eq!(engine.session_with_threads(0).context().threads(), 1);
         assert_eq!(engine.session_with_threads(99).context().threads(), 4);
         assert_eq!(engine.pool_threads_spawned(), 3, "sessions spawn nothing");
+    }
+
+    #[test]
+    fn batch_cost_estimates_cover_pinned_sizes_and_interpolate() {
+        let engine = Engine::builder(conv_model(6))
+            .pin_batch_sizes(&[1, 4])
+            .build()
+            .unwrap();
+        let costs = engine.batch_cost_estimates();
+        assert_eq!(costs.len(), 2);
+        assert_eq!(costs[0].0, 1);
+        assert_eq!(costs[1].0, 4);
+        let one = engine.estimate_batch_ns(1);
+        let four = engine.estimate_batch_ns(4);
+        assert!(one > 0.0, "conv model must cost something: {one}");
+        assert!(four > one, "larger batch costs more: {four} vs {one}");
+        // Non-pinned sizes scale linearly from the nearest pinned one.
+        let two = engine.estimate_batch_ns(2);
+        assert!((two - one * 2.0).abs() < 1e-6, "2 scales from 1: {two}");
+        // More threads discount the estimate.
+        let mt = Engine::builder(conv_model(6))
+            .pin_batch_sizes(&[1, 4])
+            .threads(4)
+            .build()
+            .unwrap();
+        assert!(mt.estimate_batch_ns(4) < four);
     }
 
     #[test]

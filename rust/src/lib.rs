@@ -17,9 +17,12 @@
 //!   arena slots at max-live-set footprint — loading weights trained by
 //!   the build-time JAX pipeline.
 //! * **Coordinator + runtime** — an inference-serving front end
-//!   ([`coordinator`]: queue, dynamic batcher, workers, metrics) and a
-//!   PJRT path ([`runtime`]) that executes the AOT-lowered JAX/Pallas
-//!   artifacts through the `xla` crate.
+//!   ([`coordinator`]: queue, workers, metrics) scheduled by the
+//!   SLO-aware [`serving`] layer (deadline-driven adaptive batching,
+//!   admission control with typed load shedding, lock-free latency
+//!   histograms, load generators), and a PJRT path ([`runtime`]) that
+//!   executes the AOT-lowered JAX/Pallas artifacts through the `xla`
+//!   crate.
 //!
 //! The front door tying the layers together is [`engine`]:
 //! [`Engine::builder`] assembles and validates the whole serving
@@ -52,6 +55,7 @@ pub mod memory;
 pub mod model;
 pub mod planner;
 pub mod runtime;
+pub mod serving;
 pub mod tensor;
 pub mod threadpool;
 pub mod util;

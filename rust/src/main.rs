@@ -17,9 +17,10 @@
 use mec::bench::harness::layer_builder;
 use mec::bench::workload::{by_name, suite, Workload};
 use mec::conv::AlgoKind;
-use mec::coordinator::{BatchPolicy, Server, ServerConfig};
+use mec::coordinator::{Server, ServerConfig};
 use mec::engine::{Engine, EngineError};
 use mec::memory::{measure_peak, Budget};
+use mec::serving::SloMs;
 use mec::tensor::{Precision, Tensor};
 use mec::util::cli::Args;
 use mec::util::stats::{fmt_bytes, fmt_ns};
@@ -275,8 +276,14 @@ fn cmd_serve(args: &mut Args) {
     let model_path = args.opt("model", "artifacts/model.mecw", "path to .mecw weights");
     let requests = args.opt_usize("requests", 256, "synthetic requests to send");
     let workers = args.opt_usize("workers", 1, "server worker threads");
-    let max_batch = args.opt_usize("max-batch", 32, "dynamic batch cap");
-    let delay_ms = args.opt_usize("max-delay-ms", 2, "dynamic batch delay");
+    let max_batch = args.opt_usize("max-batch", 32, "largest pinned batch size");
+    let delay_ms = args.opt_usize("max-delay-ms", 2, "batcher collect window");
+    let slo = args.opt(
+        "slo-ms",
+        "none",
+        "latency SLO in ms (deadline per request; \"none\" = best-effort)",
+    );
+    let queue_depth = args.opt_usize("queue-depth", 1024, "bounded request-queue capacity");
     let budget = budget_arg(args, "conv workspace budget");
     let threads = args.opt_usize(
         "threads",
@@ -285,12 +292,28 @@ fn cmd_serve(args: &mut Args) {
     );
     let precision = precision_arg(args);
     args.finish();
+    let slo: SloMs = slo.parse().unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
 
+    // Pin powers of two up to the batch cap: the adaptive batcher only
+    // dispatches pinned shapes, so a denser ladder means less work runs
+    // at size 1 when a collect lands between powers.
+    let mut pinned = vec![1usize];
+    while *pinned.last().unwrap() < max_batch.max(1) {
+        pinned.push((pinned.last().unwrap() * 2).min(max_batch.max(1)));
+    }
+    // The engine caches at most 8 pinned geometries per layer; thin the
+    // ladder from the small end (keeping 1 for padding-free splits).
+    while pinned.len() > 8 {
+        pinned.remove(1);
+    }
     let engine = Engine::builder(model_path)
         .budget(budget)
         .threads(threads)
         .precision(precision)
-        .pin_batch_sizes(&[1, max_batch.max(1)])
+        .pin_batch_sizes(&pinned)
         .build()
         .unwrap_or_else(|e| {
             if matches!(e, EngineError::ModelLoad { .. }) {
@@ -316,22 +339,36 @@ fn cmd_serve(args: &mut Args) {
         fmt_bytes(engine.workspace_bytes())
     );
     let (h, w, c) = engine.input_hwc();
+    if let Some(d) = slo.duration() {
+        println!("slo: {slo} ms (deadline {d:?} per request)");
+    }
     let server = Server::start(
         Arc::new(engine),
         ServerConfig {
             workers,
-            queue_capacity: 1024,
-            policy: BatchPolicy::new(max_batch, Duration::from_millis(delay_ms as u64)),
+            queue_depth,
+            slo: slo.duration(),
+            max_wait: Duration::from_millis(delay_ms as u64),
+            ..ServerConfig::default()
         },
-    );
+    )
+    .unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
     let client = server.client();
     let mut rng = Rng::new(7);
     let mut pending = Vec::new();
+    let mut shed = 0usize;
     for _ in 0..requests {
         let mut sample = vec![0.0f32; h * w * c];
         rng.fill_uniform(&mut sample, 0.0, 1.0);
         match client.submit(sample) {
             Ok(rx) => pending.push(rx),
+            Err(mec::coordinator::SubmitError::Shed(reason)) => {
+                shed += 1;
+                mec::log_warn!("request shed: {reason}");
+            }
             Err(e) => mec::log_warn!("request rejected: {e}"),
         }
     }
@@ -344,6 +381,7 @@ fn cmd_serve(args: &mut Args) {
         }
     }
     let metrics = server.shutdown();
-    println!("\nserved {served}/{requests}");
+    println!("\nserved {served}/{requests} (shed at submit: {shed})");
+    println!("{}", metrics.snapshot().render());
     println!("{}", metrics.report());
 }

@@ -1,0 +1,167 @@
+//! Admission control: typed load shedding at the front door.
+//!
+//! Rejecting a request that cannot make its deadline *at enqueue* is
+//! strictly better than serving it late: the client learns immediately
+//! (and can retry elsewhere), and the queue capacity it would have
+//! burned goes to a request that can still win. The policy here is the
+//! standard one: a hard capacity bound, a high watermark above which
+//! deadline checks get a 2× safety factor (shed earlier as the queue
+//! saturates), and a feasibility test comparing the deadline budget
+//! against estimated queue wait + compute from [`BatchCosts`].
+//!
+//! Pure decision logic over explicit `Instant`s — the unit tests drive
+//! it with a virtual clock.
+
+use super::cost::BatchCosts;
+use super::ShedReason;
+use std::time::{Duration, Instant};
+
+/// Enqueue-time shedding policy.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AdmissionPolicy {
+    /// Hard queue bound; depth at capacity ⇒ [`ShedReason::QueueFull`].
+    pub capacity: usize,
+    /// Depth at/above which the deadline feasibility check applies a 2×
+    /// safety factor (requests with thin slack shed before the queue is
+    /// hard-full, protecting the deadlines already admitted).
+    pub high_watermark: usize,
+    /// Fixed scheduling margin added to every feasibility estimate
+    /// (covers batcher collect windows and wake-up jitter).
+    pub margin: Duration,
+}
+
+impl AdmissionPolicy {
+    /// Policy for a queue of `capacity`: watermark at 3/4 depth, 200 µs
+    /// margin.
+    pub fn for_capacity(capacity: usize) -> AdmissionPolicy {
+        let capacity = capacity.max(1);
+        AdmissionPolicy {
+            capacity,
+            high_watermark: (capacity * 3 / 4).max(1),
+            margin: Duration::from_micros(200),
+        }
+    }
+
+    /// Estimated queue wait + compute (ns) for a request arriving at
+    /// queue depth `depth`, served by `workers` workers dispatching at
+    /// the largest pinned batch. The request's own batch is included,
+    /// so the figure is "submit → reply" — directly comparable to a
+    /// deadline budget.
+    pub fn estimated_turnaround_ns(
+        &self,
+        depth: usize,
+        workers: usize,
+        costs: &BatchCosts,
+    ) -> f64 {
+        let largest = costs.largest().max(1);
+        let batches_ahead = (depth + 1).div_ceil(largest);
+        batches_ahead as f64 * costs.estimate_ns(largest) / workers.max(1) as f64
+    }
+
+    /// Admit or shed a request arriving `now` at queue `depth` with an
+    /// optional `deadline`. No deadline ⇒ only the capacity bound
+    /// applies (plain bounded-queue backpressure, the pre-SLO
+    /// behaviour).
+    pub fn admit(
+        &self,
+        depth: usize,
+        workers: usize,
+        costs: &BatchCosts,
+        now: Instant,
+        deadline: Option<Instant>,
+    ) -> Result<(), ShedReason> {
+        if depth >= self.capacity {
+            return Err(ShedReason::QueueFull { depth, capacity: self.capacity });
+        }
+        let Some(deadline) = deadline else {
+            return Ok(());
+        };
+        let factor = if depth >= self.high_watermark { 2.0 } else { 1.0 };
+        let needed_ns = (factor * self.estimated_turnaround_ns(depth, workers, costs)
+            + self.margin.as_nanos() as f64) as u64;
+        let budget_ns = deadline.saturating_duration_since(now).as_nanos() as u64;
+        if needed_ns > budget_ns {
+            return Err(ShedReason::DeadlineInfeasible { needed_ns, budget_ns });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs() -> BatchCosts {
+        // 1 ms per unit batch, 4 ms per batch of 8.
+        BatchCosts::new(&[(1, 1_000_000.0), (8, 4_000_000.0)])
+    }
+
+    #[test]
+    fn full_queue_sheds_typed() {
+        let p = AdmissionPolicy::for_capacity(4);
+        let now = Instant::now();
+        let err = p.admit(4, 1, &costs(), now, None).unwrap_err();
+        assert_eq!(err, ShedReason::QueueFull { depth: 4, capacity: 4 });
+        // Below capacity, a deadline-free request always gets in.
+        assert!(p.admit(3, 1, &costs(), now, None).is_ok());
+    }
+
+    #[test]
+    fn infeasible_deadline_sheds_with_budget_figures() {
+        let p = AdmissionPolicy::for_capacity(64);
+        let now = Instant::now();
+        // Empty queue: turnaround ≈ one 8-batch ≈ 4 ms. A 1 ms deadline
+        // cannot be met; a 100 ms deadline can.
+        let err = p
+            .admit(0, 1, &costs(), now, Some(now + Duration::from_millis(1)))
+            .unwrap_err();
+        match err {
+            ShedReason::DeadlineInfeasible { needed_ns, budget_ns } => {
+                assert!(needed_ns > budget_ns);
+                assert!(needed_ns >= 4_000_000, "includes the compute estimate");
+            }
+            other => panic!("expected DeadlineInfeasible, got {other:?}"),
+        }
+        assert!(p
+            .admit(0, 1, &costs(), now, Some(now + Duration::from_millis(100)))
+            .is_ok());
+    }
+
+    #[test]
+    fn queue_wait_scales_with_depth_and_workers() {
+        let p = AdmissionPolicy::for_capacity(1024);
+        let c = costs();
+        // 31 ahead + self = 4 batches of 8 ⇒ 16 ms on one worker.
+        let one = p.estimated_turnaround_ns(31, 1, &c);
+        assert!((one - 16_000_000.0).abs() < 1.0, "{one}");
+        // Two workers halve it.
+        let two = p.estimated_turnaround_ns(31, 2, &c);
+        assert!((two - 8_000_000.0).abs() < 1.0, "{two}");
+        // A deadline feasible at depth 0 becomes infeasible deep in the
+        // queue.
+        let now = Instant::now();
+        let d = Some(now + Duration::from_millis(6));
+        assert!(p.admit(0, 1, &c, now, d).is_ok());
+        assert!(matches!(
+            p.admit(31, 1, &c, now, d),
+            Err(ShedReason::DeadlineInfeasible { .. })
+        ));
+    }
+
+    #[test]
+    fn watermark_doubles_the_required_slack() {
+        let mut p = AdmissionPolicy::for_capacity(16);
+        p.high_watermark = 8;
+        p.margin = Duration::ZERO;
+        let c = BatchCosts::new(&[(1, 1_000_000.0)]);
+        let now = Instant::now();
+        // Depth 7 (< watermark): 8 batches ⇒ 8 ms needed; 10 ms budget ok.
+        let d = Some(now + Duration::from_millis(10));
+        assert!(p.admit(7, 1, &c, now, d).is_ok());
+        // Depth 8 (>= watermark): 9 batches × 2 ⇒ 18 ms needed; shed.
+        assert!(matches!(
+            p.admit(8, 1, &c, now, d),
+            Err(ShedReason::DeadlineInfeasible { .. })
+        ));
+    }
+}

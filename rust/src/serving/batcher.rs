@@ -1,0 +1,319 @@
+//! Deadline-driven adaptive batching.
+//!
+//! The static batcher's trade-off (wait `max_delay`, cap at
+//! `max_batch`) ignores what the requests themselves need. This one
+//! collects until
+//! `min(batch_full, oldest_deadline − est_compute − margin)`: a batch
+//! under deadline pressure dispatches exactly early enough to make its
+//! tightest deadline, while deadline-free traffic still gets the full
+//! collect window. Dispatch shapes are the engine's pinned batch sizes
+//! only — [`split_into_pinned`] cuts an oversized collect into
+//! padding-free pinned chunks (largest-first), so steady-state serving
+//! never touches a lazily-planned geometry and stays zero-alloc.
+//!
+//! The decision logic ([`dispatch_deadline`], [`infeasible`],
+//! [`split_into_pinned`]) is pure functions over explicit `Instant`s —
+//! unit-tested with a virtual clock, no sleeps.
+
+use super::cost::BatchCosts;
+use crate::coordinator::queue::RequestQueue;
+use crate::coordinator::Request;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Scheduling knobs for the adaptive batcher.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SloPolicy {
+    /// Default latency objective applied at submit (requests without an
+    /// explicit deadline get `now + slo`); `None` = no deadlines.
+    pub slo: Option<Duration>,
+    /// Collect window when no deadline presses (the static batcher's
+    /// `max_delay` role).
+    pub max_wait: Duration,
+    /// Safety margin subtracted from deadline-driven dispatch times
+    /// (scheduling jitter, reply-path cost).
+    pub margin: Duration,
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        SloPolicy {
+            slo: None,
+            max_wait: Duration::from_millis(2),
+            margin: Duration::from_micros(200),
+        }
+    }
+}
+
+/// Cut `n` collected requests into padding-free pinned batch shapes,
+/// largest-first (`sizes` ascending, as
+/// [`Engine::pinned_batch_sizes`](crate::engine::Engine::pinned_batch_sizes)
+/// returns them). Greedy is optimal for the chain-of-multiples sizes
+/// serving pins in practice (1,2,4,8,…); for arbitrary sets it is still
+/// correct (a unit batch is always pinned — the server enforces that at
+/// start) and at worst dispatches a few extra small chunks.
+pub fn split_into_pinned(n: usize, sizes: &[usize]) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut left = n;
+    while left > 0 {
+        let take = sizes
+            .iter()
+            .rev()
+            .copied()
+            .find(|&b| b <= left)
+            .unwrap_or_else(|| sizes.first().copied().unwrap_or(1));
+        // A smallest-pinned size larger than the remainder would pad;
+        // the server rejects engines without a unit pin, so `take <=
+        // left` always holds here. Defend anyway (degenerate sizes in
+        // tests): dispatch the remainder as-is rather than loop.
+        if take > left {
+            out.push(left);
+            break;
+        }
+        out.push(take);
+        left -= take;
+    }
+    out
+}
+
+/// The earliest deadline in a batch (`None` when no request carries
+/// one).
+pub fn earliest_deadline(batch: &[Request]) -> Option<Instant> {
+    batch.iter().filter_map(|r| r.deadline).min()
+}
+
+/// When to stop collecting and dispatch: the earlier of the collect
+/// window (`collect_start + max_wait`) and the deadline-driven point
+/// (`oldest_deadline − est_compute − margin`). A deadline already too
+/// close clamps to `collect_start` (dispatch immediately).
+pub fn dispatch_deadline(
+    collect_start: Instant,
+    oldest: Option<Instant>,
+    est_compute: Duration,
+    policy: &SloPolicy,
+) -> Instant {
+    let window = collect_start + policy.max_wait;
+    match oldest {
+        None => window,
+        Some(d) => {
+            let driven = d
+                .checked_sub(est_compute)
+                .and_then(|t| t.checked_sub(policy.margin))
+                .unwrap_or(collect_start);
+            window.min(driven.max(collect_start))
+        }
+    }
+}
+
+/// Is a request already doomed at dispatch time? (`now + est_compute`
+/// past the deadline ⇒ running it wastes compute that on-time requests
+/// could use — shed with a typed reason instead.)
+pub fn infeasible(now: Instant, deadline: Option<Instant>, est_compute: Duration) -> bool {
+    match deadline {
+        None => false,
+        Some(d) => now + est_compute > d,
+    }
+}
+
+/// Pulls deadline-aware batches off the coordinator queue. One per
+/// worker thread; the shared [`BatchCosts`] supplies compute estimates.
+pub struct AdaptiveBatcher<'q> {
+    queue: &'q RequestQueue,
+    costs: Arc<BatchCosts>,
+    policy: SloPolicy,
+}
+
+impl<'q> AdaptiveBatcher<'q> {
+    pub fn new(
+        queue: &'q RequestQueue,
+        costs: Arc<BatchCosts>,
+        policy: SloPolicy,
+    ) -> AdaptiveBatcher<'q> {
+        AdaptiveBatcher { queue, costs, policy }
+    }
+
+    pub fn policy(&self) -> &SloPolicy {
+        &self.policy
+    }
+
+    /// Form the next batch: long-poll for the first request(s), then
+    /// collect until the batch is full (largest pinned size) or the
+    /// dispatch deadline — whichever comes first. `None` = queue closed
+    /// and drained.
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        let max = self.costs.largest();
+        let mut batch = loop {
+            match self
+                .queue
+                .pop_up_to(max, Instant::now() + Duration::from_millis(50))
+            {
+                None => return None,
+                Some(v) if v.is_empty() => continue,
+                Some(v) => break v,
+            }
+        };
+        let collect_start = Instant::now();
+        while batch.len() < max {
+            // Estimate compute for the pinned shape the batch would
+            // dispatch as right now — the figure the tightest deadline
+            // must leave room for.
+            let est = Duration::from_nanos(
+                self.costs.estimate_ns(self.costs.covering(batch.len())).max(0.0) as u64,
+            );
+            let dd = dispatch_deadline(collect_start, earliest_deadline(&batch), est, &self.policy);
+            if Instant::now() >= dd {
+                break;
+            }
+            match self.queue.pop_up_to(max - batch.len(), dd) {
+                // Closed: dispatch what we have; the next call returns None.
+                None => break,
+                Some(v) if v.is_empty() => break, // dispatch deadline hit
+                Some(mut v) => batch.append(&mut v),
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(id: u64, deadline: Option<Instant>) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request {
+            id,
+            sample: vec![],
+            enqueued_at: Instant::now(),
+            deadline,
+            reply: tx,
+        }
+    }
+
+    fn costs() -> Arc<BatchCosts> {
+        Arc::new(BatchCosts::new(&[
+            (1, 1_000_000.0),
+            (4, 2_500_000.0),
+            (8, 4_000_000.0),
+        ]))
+    }
+
+    #[test]
+    fn split_is_padding_free_and_largest_first() {
+        let sizes = [1usize, 2, 4, 8];
+        assert_eq!(split_into_pinned(8, &sizes), vec![8]);
+        assert_eq!(split_into_pinned(13, &sizes), vec![8, 4, 1]);
+        assert_eq!(split_into_pinned(3, &sizes), vec![2, 1]);
+        assert_eq!(split_into_pinned(1, &sizes), vec![1]);
+        assert_eq!(split_into_pinned(0, &sizes), Vec::<usize>::new());
+        // Sparse pins still sum exactly (never pad).
+        assert_eq!(split_into_pinned(7, &[1, 8]), vec![1; 7]);
+        for n in 1..40 {
+            let total: usize = split_into_pinned(n, &sizes).iter().sum();
+            assert_eq!(total, n, "split must cover exactly {n}");
+        }
+    }
+
+    // -- virtual-clock tests of the dispatch decision -------------------
+
+    #[test]
+    fn deadline_triggers_early_dispatch_virtual_clock() {
+        let policy = SloPolicy {
+            slo: None,
+            max_wait: Duration::from_millis(100),
+            margin: Duration::from_micros(500),
+        };
+        let t0 = Instant::now();
+        let est = Duration::from_millis(4);
+        // No deadline: the full collect window applies.
+        assert_eq!(
+            dispatch_deadline(t0, None, est, &policy),
+            t0 + Duration::from_millis(100)
+        );
+        // Deadline at t0+10ms: dispatch at 10ms − 4ms − 0.5ms = 5.5ms,
+        // well before the window.
+        let dd = dispatch_deadline(t0, Some(t0 + Duration::from_millis(10)), est, &policy);
+        assert_eq!(dd, t0 + Duration::from_micros(5_500));
+        // A deadline tighter than est_compute clamps to "now" (dispatch
+        // immediately, don't wait at all).
+        let dd = dispatch_deadline(t0, Some(t0 + Duration::from_millis(2)), est, &policy);
+        assert_eq!(dd, t0);
+        // A lax deadline never extends past the collect window.
+        let dd = dispatch_deadline(t0, Some(t0 + Duration::from_secs(10)), est, &policy);
+        assert_eq!(dd, t0 + Duration::from_millis(100));
+    }
+
+    #[test]
+    fn infeasible_is_exactly_the_deadline_test_virtual_clock() {
+        let t0 = Instant::now();
+        let est = Duration::from_millis(4);
+        assert!(!infeasible(t0, None, est));
+        assert!(!infeasible(t0, Some(t0 + Duration::from_millis(5)), est));
+        assert!(infeasible(t0, Some(t0 + Duration::from_millis(3)), est));
+        assert!(infeasible(t0, Some(t0), est));
+    }
+
+    #[test]
+    fn earliest_deadline_ignores_none() {
+        let t0 = Instant::now();
+        let batch = vec![
+            req(0, None),
+            req(1, Some(t0 + Duration::from_millis(9))),
+            req(2, Some(t0 + Duration::from_millis(3))),
+        ];
+        assert_eq!(earliest_deadline(&batch), Some(t0 + Duration::from_millis(3)));
+        assert_eq!(earliest_deadline(&[req(0, None)]), None);
+    }
+
+    // -- driver tests against a real queue ------------------------------
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let q = RequestQueue::new(64);
+        for i in 0..10 {
+            q.push(req(i, None)).unwrap();
+        }
+        let b = AdaptiveBatcher::new(
+            &q,
+            costs(),
+            SloPolicy { max_wait: Duration::from_secs(10), ..SloPolicy::default() },
+        );
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 8, "largest pinned size caps the batch");
+        assert_eq!(batch[0].id, 0, "FIFO preserved");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "a full batch must not wait out the collect window"
+        );
+    }
+
+    #[test]
+    fn tight_deadline_cuts_the_collect_window_short() {
+        let q = RequestQueue::new(8);
+        // One request whose deadline leaves no room to wait (est compute
+        // for batch 1 is 1 ms, margin 200 µs).
+        q.push(req(0, Some(Instant::now() + Duration::from_millis(2)))).unwrap();
+        let b = AdaptiveBatcher::new(
+            &q,
+            costs(),
+            SloPolicy { max_wait: Duration::from_secs(30), ..SloPolicy::default() },
+        );
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "deadline-driven dispatch must beat the 30 s collect window"
+        );
+    }
+
+    #[test]
+    fn closed_queue_ends_batching() {
+        let q = RequestQueue::new(8);
+        q.close();
+        let b = AdaptiveBatcher::new(&q, costs(), SloPolicy::default());
+        assert!(b.next_batch().is_none());
+    }
+}

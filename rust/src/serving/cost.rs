@@ -1,0 +1,156 @@
+//! Per-pinned-batch compute estimates for the scheduler.
+//!
+//! The admission controller and the adaptive batcher both need "how
+//! long will a batch of n take?" answered in nanoseconds, cheaply and
+//! from any thread. Estimates are seeded from the planner cost model at
+//! engine build ([`Engine::batch_cost_estimates`]) — the same
+//! calibrated coefficients that rank algorithms — and refined online by
+//! an EWMA of the forward times workers actually measure, so the
+//! scheduler's notion of compute tracks the host it is running on, not
+//! the model's abstract-ns units.
+
+use crate::engine::Engine;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// EWMA weight of a new measurement (old estimates decay with 1 − α).
+const ALPHA: f64 = 0.25;
+
+/// Thread-safe per-pinned-batch compute estimates (f64 ns stored as
+/// bits in `AtomicU64` — updates are racy-by-design lost-update
+/// tolerant: the value is a smoothed estimate, not an invariant).
+pub struct BatchCosts {
+    /// Pinned batch sizes, ascending (mirrors
+    /// [`Engine::pinned_batch_sizes`]).
+    sizes: Vec<usize>,
+    /// Estimated forward ns per batch, same order as `sizes`.
+    est_ns: Vec<AtomicU64>,
+}
+
+impl BatchCosts {
+    /// Seed from explicit `(batch, ns)` pairs (ascending batch order is
+    /// established here).
+    pub fn new(seed: &[(usize, f64)]) -> BatchCosts {
+        let mut pairs: Vec<(usize, f64)> = seed.to_vec();
+        pairs.sort_by_key(|&(b, _)| b);
+        pairs.dedup_by_key(|&mut (b, _)| b);
+        if pairs.is_empty() {
+            pairs.push((1, 0.0));
+        }
+        BatchCosts {
+            sizes: pairs.iter().map(|&(b, _)| b).collect(),
+            est_ns: pairs
+                .iter()
+                .map(|&(_, ns)| AtomicU64::new(ns.max(0.0).to_bits()))
+                .collect(),
+        }
+    }
+
+    /// Seed from an engine's build-time cost-model estimates.
+    pub fn from_engine(engine: &Engine) -> BatchCosts {
+        BatchCosts::new(engine.batch_cost_estimates())
+    }
+
+    /// Pinned batch sizes, ascending.
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// The largest pinned batch — the adaptive batcher's collect cap.
+    pub fn largest(&self) -> usize {
+        *self.sizes.last().expect("sizes is non-empty")
+    }
+
+    /// The smallest pinned batch that covers `n` requests, or the
+    /// largest pinned size when `n` overflows every pinned shape.
+    pub fn covering(&self, n: usize) -> usize {
+        self.sizes
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| self.largest())
+    }
+
+    /// Estimated forward ns for a batch of `n`: exact for pinned sizes,
+    /// linearly scaled from the nearest pinned size otherwise.
+    pub fn estimate_ns(&self, n: usize) -> f64 {
+        let n = n.max(1);
+        if let Some(i) = self.sizes.iter().position(|&b| b == n) {
+            return f64::from_bits(self.est_ns[i].load(Relaxed));
+        }
+        let (i, &b) = self
+            .sizes
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, &b)| b.abs_diff(n))
+            .expect("sizes is non-empty");
+        f64::from_bits(self.est_ns[i].load(Relaxed)) * n as f64 / b.max(1) as f64
+    }
+
+    /// Fold a measured forward time for an exact pinned batch into the
+    /// estimate (EWMA; measurements for non-pinned sizes are ignored —
+    /// they only occur on the lazy-plan slow path). A zero seed (e.g. a
+    /// conv-free model the cost model prices at 0) is replaced outright
+    /// by the first measurement.
+    pub fn observe(&self, n: usize, measured_ns: f64) {
+        if !(measured_ns.is_finite() && measured_ns >= 0.0) {
+            return;
+        }
+        if let Some(i) = self.sizes.iter().position(|&b| b == n) {
+            let old = f64::from_bits(self.est_ns[i].load(Relaxed));
+            let new = if old == 0.0 {
+                measured_ns
+            } else {
+                (1.0 - ALPHA) * old + ALPHA * measured_ns
+            };
+            self.est_ns[i].store(new.to_bits(), Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_sorts_and_dedups() {
+        let c = BatchCosts::new(&[(8, 800.0), (1, 100.0), (8, 999.0)]);
+        assert_eq!(c.sizes(), &[1, 8]);
+        assert_eq!(c.largest(), 8);
+        assert!((c.estimate_ns(1) - 100.0).abs() < 1e-9);
+        assert!((c.estimate_ns(8) - 800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn covering_picks_smallest_fit() {
+        let c = BatchCosts::new(&[(1, 1.0), (4, 4.0), (8, 8.0)]);
+        assert_eq!(c.covering(1), 1);
+        assert_eq!(c.covering(3), 4);
+        assert_eq!(c.covering(8), 8);
+        assert_eq!(c.covering(50), 8, "overflow clamps to largest");
+    }
+
+    #[test]
+    fn estimate_scales_from_nearest_pinned() {
+        let c = BatchCosts::new(&[(1, 100.0), (8, 640.0)]);
+        // 2 is nearest to 1: 100 * 2/1.
+        assert!((c.estimate_ns(2) - 200.0).abs() < 1e-9);
+        // 6 is nearest to 8: 640 * 6/8.
+        assert!((c.estimate_ns(6) - 480.0).abs() < 1e-9);
+        assert!((c.estimate_ns(16) - 1280.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn observe_ewma_converges_and_replaces_zero_seed() {
+        let c = BatchCosts::new(&[(1, 0.0)]);
+        c.observe(1, 1000.0);
+        assert!((c.estimate_ns(1) - 1000.0).abs() < 1e-9, "zero seed replaced");
+        for _ in 0..64 {
+            c.observe(1, 2000.0);
+        }
+        assert!((c.estimate_ns(1) - 2000.0).abs() < 1.0, "EWMA converges");
+        // Non-pinned and garbage observations are ignored.
+        c.observe(7, 1e12);
+        c.observe(1, f64::NAN);
+        assert!((c.estimate_ns(1) - 2000.0).abs() < 1.0);
+    }
+}

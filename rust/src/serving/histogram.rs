@@ -1,0 +1,277 @@
+//! Lock-free HDR-style latency histogram.
+//!
+//! The coordinator's original histogram sat behind a `Mutex` — fine for
+//! one worker, a contention point the moment every reply on every
+//! worker records three durations. This one is an array of relaxed
+//! `AtomicU64` bucket counters: `record` is wait-free (one `fetch_add`
+//! per counter touched), readers take a [`snapshot`](AtomicHistogram::snapshot)
+//! and compute percentiles offline.
+//!
+//! Bucketing is the HDR scheme: within each power of two the range is
+//! cut into `2^SUB_BITS = 16` linear sub-buckets, so the relative
+//! quantization error is bounded by `2^-SUB_BITS` (6.25 %) at every
+//! magnitude — equally sharp at 3 µs and 3 s, unlike fixed-width or
+//! purely geometric buckets. Values are nanoseconds; the table spans
+//! 1 ns to ~2^40 ns (≈ 18 min), everything above clamps into the last
+//! bucket.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+/// Linear sub-buckets per power of two, as a bit count.
+pub const SUB_BITS: u32 = 4;
+const SUB: usize = 1 << SUB_BITS; // 16
+/// Powers of two above the linear range covered before clamping.
+const OCTAVES: usize = 36;
+/// Total bucket count.
+pub const BUCKETS: usize = SUB * (OCTAVES + 1);
+
+/// Bucket index for a nanosecond value (see module docs for the scheme).
+fn bucket_index(ns: u64) -> usize {
+    let v = ns.max(1);
+    let msb = 63 - v.leading_zeros();
+    let idx = if msb < SUB_BITS {
+        v as usize
+    } else {
+        let sub = ((v >> (msb - SUB_BITS)) as usize) - SUB;
+        ((msb - SUB_BITS + 1) as usize) * SUB + sub
+    };
+    idx.min(BUCKETS - 1)
+}
+
+/// Upper bound (inclusive, ns) of bucket `idx` — the value percentiles
+/// report, so quantization always errs pessimistic (never under-reports
+/// a latency).
+fn bucket_bound(idx: usize) -> u64 {
+    if idx < SUB {
+        idx as u64
+    } else {
+        let octave = idx / SUB; // >= 1
+        let sub = (idx % SUB) as u64;
+        ((SUB as u64 + sub + 1) << (octave - 1)) - 1
+    }
+}
+
+/// Wait-free concurrent histogram of nanosecond durations.
+pub struct AtomicHistogram {
+    counts: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl AtomicHistogram {
+    pub fn new() -> AtomicHistogram {
+        AtomicHistogram {
+            counts: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one duration. Wait-free; relaxed ordering (the counters
+    /// are monotone statistics, not synchronization).
+    pub fn record(&self, ns: u64) {
+        self.counts[bucket_index(ns)].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum_ns.fetch_add(ns, Relaxed);
+        self.max_ns.fetch_max(ns, Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    /// A point-in-time copy for offline percentile math. Concurrent
+    /// recording makes the copy *approximately* consistent (bucket
+    /// counts may straddle an in-flight record) — fine for monitoring,
+    /// which is the only consumer.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            counts: self.counts.iter().map(|c| c.load(Relaxed)).collect(),
+            count: self.count.load(Relaxed),
+            sum_ns: self.sum_ns.load(Relaxed),
+            max_ns: self.max_ns.load(Relaxed),
+        }
+    }
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        AtomicHistogram::new()
+    }
+}
+
+/// An owned copy of a histogram: mergeable across workers, subtractable
+/// against a baseline (interval measurements), percentile queries.
+#[derive(Debug, Clone)]
+pub struct HistSnapshot {
+    counts: Vec<u64>,
+    count: u64,
+    sum_ns: u64,
+    max_ns: u64,
+}
+
+impl HistSnapshot {
+    pub fn empty() -> HistSnapshot {
+        HistSnapshot {
+            counts: vec![0; BUCKETS],
+            count: 0,
+            sum_ns: 0,
+            max_ns: 0,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Fold another worker's snapshot into this one.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// `self − baseline`, bucket-wise: the distribution of everything
+    /// recorded *after* the baseline was taken. The load generator uses
+    /// this for per-sweep-point percentiles. `max_ns` keeps the later
+    /// snapshot's value (an upper bound for the interval).
+    pub fn diff(&self, baseline: &HistSnapshot) -> HistSnapshot {
+        HistSnapshot {
+            counts: self
+                .counts
+                .iter()
+                .zip(&baseline.counts)
+                .map(|(a, b)| a.saturating_sub(*b))
+                .collect(),
+            count: self.count.saturating_sub(baseline.count),
+            sum_ns: self.sum_ns.saturating_sub(baseline.sum_ns),
+            max_ns: self.max_ns,
+        }
+    }
+
+    /// Percentile in ns (`p` in 0..=100). Reports the upper bound of
+    /// the bucket holding the target rank — pessimistic by at most
+    /// `2^-SUB_BITS`. Empty snapshot → 0.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return bucket_bound(idx);
+            }
+        }
+        bucket_bound(BUCKETS - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_continuous() {
+        // Every value maps to a bucket whose bound is >= the value
+        // (pessimistic), and indices never decrease with the value.
+        let mut prev = 0usize;
+        for v in 1..4096u64 {
+            let idx = bucket_index(v);
+            assert!(idx >= prev, "index regressed at {v}");
+            assert!(bucket_bound(idx) >= v, "bound({idx}) < {v}");
+            prev = idx;
+        }
+        // Spot-check the bound error stays within 1/16 at large values.
+        for v in [1u64 << 20, (1u64 << 30) + 12345, 7_777_777_777] {
+            let b = bucket_bound(bucket_index(v));
+            assert!(b >= v);
+            assert!((b - v) as f64 <= v as f64 / 16.0 + 1.0, "v={v} bound={b}");
+        }
+    }
+
+    #[test]
+    fn huge_values_clamp_into_last_bucket() {
+        let idx = bucket_index(u64::MAX);
+        assert_eq!(idx, BUCKETS - 1);
+        let h = AtomicHistogram::new();
+        h.record(u64::MAX);
+        assert_eq!(h.snapshot().percentile(99.0), bucket_bound(BUCKETS - 1));
+    }
+
+    #[test]
+    fn percentiles_match_exact_within_bucket_error() {
+        let h = AtomicHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(i * 1000); // 1µs..1ms uniform
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 1000);
+        let p50 = s.percentile(50.0) as f64;
+        let p99 = s.percentile(99.0) as f64;
+        assert!((p50 - 500_000.0).abs() / 500_000.0 < 0.10, "p50={p50}");
+        assert!((p99 - 990_000.0).abs() / 990_000.0 < 0.10, "p99={p99}");
+        assert!(s.percentile(50.0) <= s.percentile(90.0));
+        assert!(s.percentile(90.0) <= s.percentile(99.0));
+        assert!(s.percentile(99.0) <= s.max_ns());
+        assert!((s.mean_ns() - 500_500.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn merge_and_diff_are_inverse_ish() {
+        let a = AtomicHistogram::new();
+        let b = AtomicHistogram::new();
+        for i in 0..100u64 {
+            a.record(1000 + i);
+            b.record(2_000_000 + i);
+        }
+        let sa = a.snapshot();
+        let sb = b.snapshot();
+        let mut merged = HistSnapshot::empty();
+        merged.merge(&sa);
+        merged.merge(&sb);
+        assert_eq!(merged.count(), 200);
+        let back = merged.diff(&sa);
+        assert_eq!(back.count(), 100);
+        // Everything left is from b's magnitude.
+        assert!(back.percentile(50.0) >= 1_000_000);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let h = std::sync::Arc::new(AtomicHistogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = std::sync::Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record((t + 1) * 1000 + i % 7);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 40_000);
+        assert_eq!(h.snapshot().count(), 40_000);
+    }
+}

@@ -1,0 +1,359 @@
+//! Closed-loop and open-loop load generation against a running
+//! [`Server`].
+//!
+//! The two loops answer different questions. A **closed** loop (N
+//! clients, each submit-wait-repeat) measures capacity: offered load
+//! self-regulates to what the server sustains, so throughput climbs
+//! with clients until compute saturates. An **open** loop submits on a
+//! fixed schedule regardless of completions — the honest model of
+//! internet traffic, and the one that exposes queueing collapse:
+//! past saturation, latency and shed rate blow up instead of the
+//! throughput figure politely flattening (coordinated omission).
+//!
+//! Latency percentiles come from the *server-side* per-worker
+//! histograms ([`Metrics::raw_snapshot`] diffed against a baseline
+//! taken before the run), not from client-side timing — an open-loop
+//! client that measures at drain time would overstate tail latency,
+//! and a closed-loop one understates offered load.
+
+use crate::coordinator::{Server, ServeError, SubmitError};
+use crate::serving::metrics::RawSnapshot;
+use std::time::{Duration, Instant};
+
+/// How traffic is offered.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LoadMode {
+    /// `clients` concurrent submit-wait loops.
+    Closed { clients: usize },
+    /// Fixed-rate submission, `rps` requests per second, independent of
+    /// completions.
+    Open { rps: f64 },
+}
+
+/// One load-generation run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadConfig {
+    pub mode: LoadMode,
+    /// Total requests to offer.
+    pub requests: usize,
+    /// Per-request deadline: submit time + `slo`. `None` = best-effort.
+    pub slo: Option<Duration>,
+}
+
+/// Outcome of one run. Counters are client-observed; percentiles and
+/// SLO attainment are server-side (histogram diff over the run
+/// interval).
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub label: String,
+    /// Requests/s actually offered (submitted / wall for closed, the
+    /// configured rate for open).
+    pub offered_rps: f64,
+    pub wall_s: f64,
+    pub submitted: u64,
+    /// Requests answered with a prediction.
+    pub served: u64,
+    /// Requests shed, at submit or at dispatch.
+    pub shed: u64,
+    /// Non-shed failures (engine errors, disconnects) — 0 in a healthy
+    /// run.
+    pub errors: u64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    pub throughput_rps: f64,
+    pub shed_rate: f64,
+    pub slo_attainment: f64,
+}
+
+/// Tally of one client loop's outcomes.
+#[derive(Default, Clone, Copy)]
+struct Tally {
+    submitted: u64,
+    served: u64,
+    shed: u64,
+    errors: u64,
+}
+
+impl Tally {
+    fn absorb(&mut self, o: Tally) {
+        self.submitted += o.submitted;
+        self.served += o.served;
+        self.shed += o.shed;
+        self.errors += o.errors;
+    }
+}
+
+/// Drive `cfg` worth of traffic at `server` and report.
+pub fn run(server: &Server, sample: &[f32], cfg: &LoadConfig) -> LoadReport {
+    let metrics = server.metrics();
+    let baseline = metrics.raw_snapshot();
+    let t0 = Instant::now();
+    let tally = match cfg.mode {
+        LoadMode::Closed { clients } => run_closed(server, sample, cfg, clients.max(1)),
+        LoadMode::Open { rps } => run_open(server, sample, cfg, rps),
+    };
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let interval = metrics.raw_snapshot().diff(&baseline);
+    report(cfg, tally, wall_s, &interval)
+}
+
+fn run_closed(server: &Server, sample: &[f32], cfg: &LoadConfig, clients: usize) -> Tally {
+    let mut total = Tally::default();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|i| {
+                // Spread the remainder so exactly cfg.requests go out.
+                let n = cfg.requests / clients + usize::from(i < cfg.requests % clients);
+                let client = server.client();
+                scope.spawn(move || {
+                    let mut t = Tally::default();
+                    for _ in 0..n {
+                        t.submitted += 1;
+                        let deadline = cfg.slo.map(|s| Instant::now() + s);
+                        match client.submit_with_deadline(sample.to_vec(), deadline) {
+                            Ok(rx) => absorb_reply(&mut t, rx.recv()),
+                            Err(SubmitError::Shed(_)) => t.shed += 1,
+                            Err(_) => t.errors += 1,
+                        }
+                    }
+                    t
+                })
+            })
+            .collect();
+        for h in handles {
+            total.absorb(h.join().expect("load client panicked"));
+        }
+    });
+    total
+}
+
+fn run_open(server: &Server, sample: &[f32], cfg: &LoadConfig, rps: f64) -> Tally {
+    let mut t = Tally::default();
+    let client = server.client();
+    let interval = Duration::from_secs_f64(1.0 / rps.max(1e-3));
+    let mut next = Instant::now();
+    let mut pending = Vec::with_capacity(cfg.requests);
+    for _ in 0..cfg.requests {
+        let now = Instant::now();
+        if next > now {
+            std::thread::sleep(next - now);
+        }
+        next += interval;
+        t.submitted += 1;
+        let deadline = cfg.slo.map(|s| Instant::now() + s);
+        match client.submit_with_deadline(sample.to_vec(), deadline) {
+            Ok(rx) => pending.push(rx),
+            Err(SubmitError::Shed(_)) => t.shed += 1,
+            Err(_) => t.errors += 1,
+        }
+    }
+    for rx in pending {
+        absorb_reply(&mut t, rx.recv());
+    }
+    t
+}
+
+fn absorb_reply(
+    t: &mut Tally,
+    reply: Result<crate::coordinator::Response, std::sync::mpsc::RecvError>,
+) {
+    match reply {
+        Ok(resp) => match resp.result {
+            Ok(_) => t.served += 1,
+            Err(ServeError::Shed(_)) => t.shed += 1,
+            Err(ServeError::Engine(_)) => t.errors += 1,
+        },
+        Err(_) => t.errors += 1,
+    }
+}
+
+fn report(cfg: &LoadConfig, t: Tally, wall_s: f64, interval: &RawSnapshot) -> LoadReport {
+    let (label, offered_rps) = match cfg.mode {
+        LoadMode::Closed { clients } => {
+            (format!("closed-{clients}"), t.submitted as f64 / wall_s)
+        }
+        LoadMode::Open { rps } => (format!("open-{rps:.0}"), rps),
+    };
+    let deadlined = interval.on_time + interval.late;
+    LoadReport {
+        label,
+        offered_rps,
+        wall_s,
+        submitted: t.submitted,
+        served: t.served,
+        shed: t.shed,
+        errors: t.errors,
+        p50_ms: interval.total.percentile(50.0) as f64 / 1e6,
+        p90_ms: interval.total.percentile(90.0) as f64 / 1e6,
+        p99_ms: interval.total.percentile(99.0) as f64 / 1e6,
+        throughput_rps: t.served as f64 / wall_s,
+        shed_rate: if t.submitted == 0 {
+            0.0
+        } else {
+            t.shed as f64 / t.submitted as f64
+        },
+        slo_attainment: if deadlined == 0 {
+            1.0
+        } else {
+            interval.on_time as f64 / deadlined as f64
+        },
+    }
+}
+
+/// Render a sweep of [`LoadReport`]s as the `BENCH_serving.json`
+/// document. Shared by `benches/serving.rs` and the seed-trajectory
+/// test in `serving_slo.rs`, so the file's schema has exactly one
+/// producer.
+pub fn render_json(
+    slo_ms: f64,
+    workers: usize,
+    pinned: &[usize],
+    reports: &[LoadReport],
+) -> String {
+    let mut json = format!(
+        "{{\"bench\":\"serving\",\"slo_ms\":{slo_ms},\"workers\":{workers},\"pinned\":["
+    );
+    for (i, p) in pinned.iter().enumerate() {
+        if i > 0 {
+            json.push(',');
+        }
+        json.push_str(&p.to_string());
+    }
+    json.push_str("],\"results\":[");
+    for (i, r) in reports.iter().enumerate() {
+        if i > 0 {
+            json.push(',');
+        }
+        json.push_str(&format!(
+            "{{\"label\":\"{}\",\"offered_rps\":{:.2},\"throughput_rps\":{:.2},\
+             \"p50_ms\":{:.4},\"p90_ms\":{:.4},\"p99_ms\":{:.4},\
+             \"shed_rate\":{:.4},\"slo_attainment\":{:.4},\
+             \"submitted\":{},\"served\":{},\"shed\":{},\"errors\":{},\
+             \"wall_s\":{:.3}}}",
+            r.label,
+            r.offered_rps,
+            r.throughput_rps,
+            r.p50_ms,
+            r.p90_ms,
+            r.p99_ms,
+            r.shed_rate,
+            r.slo_attainment,
+            r.submitted,
+            r.served,
+            r.shed,
+            r.errors,
+            r.wall_s
+        ));
+    }
+    json.push_str("]}\n");
+    json
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::AlgoKind;
+    use crate::coordinator::ServerConfig;
+    use crate::engine::Engine;
+    use crate::model::{Layer, Model};
+    use crate::tensor::{Kernel, KernelShape};
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    fn tiny_server() -> Server {
+        let mut rng = Rng::new(11);
+        let model = Model::new(
+            "loadgen-test",
+            (6, 6, 1),
+            vec![
+                Layer::Conv {
+                    kernel: Kernel::random(KernelShape::new(3, 3, 1, 2), &mut rng),
+                    bias: vec![0.0; 2],
+                    sh: 1,
+                    sw: 1,
+                    ph: 1,
+                    pw: 1,
+                },
+                Layer::Relu,
+            ],
+        );
+        let engine = Arc::new(
+            Engine::builder(model)
+                .algo_override(0, AlgoKind::Mec)
+                .pin_batch_sizes(&[1, 2, 4])
+                .build()
+                .expect("tiny model builds"),
+        );
+        Server::start(engine, ServerConfig::default()).expect("server starts")
+    }
+
+    #[test]
+    fn closed_loop_serves_everything_under_lax_slo() {
+        let server = tiny_server();
+        let report = run(
+            &server,
+            &[0.3; 36],
+            &LoadConfig {
+                mode: LoadMode::Closed { clients: 2 },
+                requests: 9,
+                slo: Some(Duration::from_secs(30)),
+            },
+        );
+        server.shutdown();
+        assert_eq!(report.submitted, 9, "remainder split covers all requests");
+        assert_eq!(report.served, 9);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.errors, 0);
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.p50_ms > 0.0 && report.p50_ms <= report.p99_ms);
+        assert!((report.slo_attainment - 1.0).abs() < 1e-9);
+        assert_eq!(report.label, "closed-2");
+    }
+
+    #[test]
+    fn open_loop_paces_and_drains() {
+        let server = tiny_server();
+        let report = run(
+            &server,
+            &[0.1; 36],
+            &LoadConfig {
+                mode: LoadMode::Open { rps: 200.0 },
+                requests: 10,
+                slo: None,
+            },
+        );
+        server.shutdown();
+        assert_eq!(report.submitted, 10);
+        assert_eq!(report.served + report.shed + report.errors, 10);
+        assert_eq!(report.errors, 0);
+        // Pacing: 10 requests at 200/s take at least ~45 ms of schedule.
+        assert!(report.wall_s >= 0.040, "wall={}", report.wall_s);
+        assert_eq!(report.label, "open-200");
+    }
+
+    #[test]
+    fn render_json_emits_every_report() {
+        let r = LoadReport {
+            label: "closed-2".to_string(),
+            offered_rps: 100.0,
+            wall_s: 1.0,
+            submitted: 100,
+            served: 98,
+            shed: 2,
+            errors: 0,
+            p50_ms: 1.5,
+            p90_ms: 2.5,
+            p99_ms: 4.0,
+            throughput_rps: 98.0,
+            shed_rate: 0.02,
+            slo_attainment: 0.98,
+        };
+        let json = render_json(50.0, 2, &[1, 2, 4], &[r.clone(), r]);
+        assert!(json.starts_with("{\"bench\":\"serving\""));
+        assert_eq!(json.matches("\"label\":\"closed-2\"").count(), 2);
+        assert!(json.contains("\"pinned\":[1,2,4]"));
+        assert!(json.contains("\"slo_ms\":50"));
+        assert!(json.ends_with("]}\n"));
+    }
+}

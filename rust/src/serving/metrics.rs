@@ -1,0 +1,306 @@
+//! Per-worker latency recording and mergeable serving snapshots.
+//!
+//! Each worker thread owns a [`WorkerMetrics`]: three lock-free
+//! histograms (queue wait, compute, total submit→reply) plus
+//! served/on-time/late counters. Nothing is shared between workers on
+//! the record path — a reply costs a handful of relaxed atomic adds.
+//! Readers merge all workers into a [`RawSnapshot`] (subtractable
+//! against a baseline for interval measurements — the load generator's
+//! per-sweep-point percentiles) and render a [`ServingSnapshot`] with
+//! p50/p90/p99 figures for humans and the bench JSON.
+
+use super::histogram::{AtomicHistogram, HistSnapshot};
+use crate::util::stats::fmt_ns;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::time::Duration;
+
+/// One worker thread's latency recording surface. Lock-free; the worker
+/// is the only writer, snapshot readers race benignly.
+pub struct WorkerMetrics {
+    /// Submit → dispatch (time spent waiting in the queue + collect).
+    pub queue_wait: AtomicHistogram,
+    /// Dispatch → forward done, amortized per request (batch forward
+    /// time is attributed to every request in the batch — it is the
+    /// latency each of them observed).
+    pub compute: AtomicHistogram,
+    /// Submit → reply, the figure SLOs are written against.
+    pub total: AtomicHistogram,
+    pub served: AtomicU64,
+    /// Served with a deadline, reply beat it.
+    pub on_time: AtomicU64,
+    /// Served with a deadline, reply missed it (admitted but late —
+    /// distinct from shed, which never ran).
+    pub late: AtomicU64,
+}
+
+impl WorkerMetrics {
+    pub fn new() -> WorkerMetrics {
+        WorkerMetrics {
+            queue_wait: AtomicHistogram::new(),
+            compute: AtomicHistogram::new(),
+            total: AtomicHistogram::new(),
+            served: AtomicU64::new(0),
+            on_time: AtomicU64::new(0),
+            late: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one served request. `met_deadline` is `None` for
+    /// deadline-free requests (they count toward neither on-time nor
+    /// late).
+    pub fn record_served(
+        &self,
+        queue_wait: Duration,
+        compute: Duration,
+        total: Duration,
+        met_deadline: Option<bool>,
+    ) {
+        self.queue_wait.record(queue_wait.as_nanos() as u64);
+        self.compute.record(compute.as_nanos() as u64);
+        self.total.record(total.as_nanos() as u64);
+        self.served.fetch_add(1, Relaxed);
+        match met_deadline {
+            Some(true) => {
+                self.on_time.fetch_add(1, Relaxed);
+            }
+            Some(false) => {
+                self.late.fetch_add(1, Relaxed);
+            }
+            None => {}
+        }
+    }
+
+    pub fn snapshot(&self) -> RawSnapshot {
+        RawSnapshot {
+            queue_wait: self.queue_wait.snapshot(),
+            compute: self.compute.snapshot(),
+            total: self.total.snapshot(),
+            served: self.served.load(Relaxed),
+            on_time: self.on_time.load(Relaxed),
+            late: self.late.load(Relaxed),
+            shed_queue_full: 0,
+            shed_deadline: 0,
+        }
+    }
+}
+
+impl Default for WorkerMetrics {
+    fn default() -> Self {
+        WorkerMetrics::new()
+    }
+}
+
+/// Full-resolution serving state: merged worker histograms plus
+/// counters. Subtract a baseline with [`diff`](RawSnapshot::diff) to
+/// measure an interval; summarize with
+/// [`ServingSnapshot::from_raw`].
+#[derive(Debug, Clone)]
+pub struct RawSnapshot {
+    pub queue_wait: HistSnapshot,
+    pub compute: HistSnapshot,
+    pub total: HistSnapshot,
+    pub served: u64,
+    pub on_time: u64,
+    pub late: u64,
+    pub shed_queue_full: u64,
+    pub shed_deadline: u64,
+}
+
+impl RawSnapshot {
+    pub fn empty() -> RawSnapshot {
+        RawSnapshot {
+            queue_wait: HistSnapshot::empty(),
+            compute: HistSnapshot::empty(),
+            total: HistSnapshot::empty(),
+            served: 0,
+            on_time: 0,
+            late: 0,
+            shed_queue_full: 0,
+            shed_deadline: 0,
+        }
+    }
+
+    /// Fold another snapshot (typically one worker's) into this one.
+    pub fn merge(&mut self, other: &RawSnapshot) {
+        self.queue_wait.merge(&other.queue_wait);
+        self.compute.merge(&other.compute);
+        self.total.merge(&other.total);
+        self.served += other.served;
+        self.on_time += other.on_time;
+        self.late += other.late;
+        self.shed_queue_full += other.shed_queue_full;
+        self.shed_deadline += other.shed_deadline;
+    }
+
+    /// Everything recorded after `baseline` was taken.
+    pub fn diff(&self, baseline: &RawSnapshot) -> RawSnapshot {
+        RawSnapshot {
+            queue_wait: self.queue_wait.diff(&baseline.queue_wait),
+            compute: self.compute.diff(&baseline.compute),
+            total: self.total.diff(&baseline.total),
+            served: self.served.saturating_sub(baseline.served),
+            on_time: self.on_time.saturating_sub(baseline.on_time),
+            late: self.late.saturating_sub(baseline.late),
+            shed_queue_full: self.shed_queue_full.saturating_sub(baseline.shed_queue_full),
+            shed_deadline: self.shed_deadline.saturating_sub(baseline.shed_deadline),
+        }
+    }
+}
+
+/// Summary statistics of one latency distribution (ns).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Dist {
+    pub count: u64,
+    pub p50_ns: u64,
+    pub p90_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+    pub mean_ns: f64,
+}
+
+impl Dist {
+    pub fn from_hist(h: &HistSnapshot) -> Dist {
+        Dist {
+            count: h.count(),
+            p50_ns: h.percentile(50.0),
+            p90_ns: h.percentile(90.0),
+            p99_ns: h.percentile(99.0),
+            max_ns: h.max_ns(),
+            mean_ns: h.mean_ns(),
+        }
+    }
+}
+
+/// The human/JSON-facing metrics surface: percentile summaries of the
+/// three latency components plus served/shed counters and SLO
+/// attainment.
+#[derive(Debug, Clone)]
+pub struct ServingSnapshot {
+    pub served: u64,
+    pub shed_queue_full: u64,
+    pub shed_deadline: u64,
+    /// on_time / (on_time + late); 1.0 when no request carried a
+    /// deadline (vacuously attained).
+    pub slo_attainment: f64,
+    pub queue_wait: Dist,
+    pub compute: Dist,
+    pub total: Dist,
+}
+
+impl ServingSnapshot {
+    pub fn from_raw(raw: &RawSnapshot) -> ServingSnapshot {
+        let deadlined = raw.on_time + raw.late;
+        ServingSnapshot {
+            served: raw.served,
+            shed_queue_full: raw.shed_queue_full,
+            shed_deadline: raw.shed_deadline,
+            slo_attainment: if deadlined == 0 {
+                1.0
+            } else {
+                raw.on_time as f64 / deadlined as f64
+            },
+            queue_wait: Dist::from_hist(&raw.queue_wait),
+            compute: Dist::from_hist(&raw.compute),
+            total: Dist::from_hist(&raw.total),
+        }
+    }
+
+    /// Render as an aligned table for the CLI.
+    pub fn render(&self) -> String {
+        let row = |name: &str, d: &Dist| {
+            format!(
+                "  {name:<11} p50 {:>10}  p90 {:>10}  p99 {:>10}  max {:>10}\n",
+                fmt_ns(d.p50_ns as f64),
+                fmt_ns(d.p90_ns as f64),
+                fmt_ns(d.p99_ns as f64),
+                fmt_ns(d.max_ns as f64),
+            )
+        };
+        let mut out = String::new();
+        out.push_str("serving metrics\n");
+        out.push_str(&format!(
+            "  served {}  shed(queue-full) {}  shed(deadline) {}  slo-attainment {:.4}\n",
+            self.served, self.shed_queue_full, self.shed_deadline, self.slo_attainment
+        ));
+        out.push_str(&row("queue-wait", &self.queue_wait));
+        out.push_str(&row("compute", &self.compute));
+        out.push_str(&row("total", &self.total));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    #[test]
+    fn record_and_snapshot_counts() {
+        let w = WorkerMetrics::new();
+        w.record_served(ms(1), ms(2), ms(3), Some(true));
+        w.record_served(ms(1), ms(2), ms(3), Some(false));
+        w.record_served(ms(1), ms(2), ms(3), None);
+        let s = w.snapshot();
+        assert_eq!(s.served, 3);
+        assert_eq!(s.on_time, 1);
+        assert_eq!(s.late, 1);
+        assert_eq!(s.total.count(), 3);
+        assert_eq!(s.queue_wait.count(), 3);
+        assert_eq!(s.compute.count(), 3);
+    }
+
+    #[test]
+    fn merge_and_diff_track_intervals() {
+        let a = WorkerMetrics::new();
+        a.record_served(ms(1), ms(1), ms(2), Some(true));
+        let baseline = a.snapshot();
+        a.record_served(ms(1), ms(1), ms(2), Some(false));
+        a.record_served(ms(1), ms(1), ms(2), Some(true));
+        let interval = a.snapshot().diff(&baseline);
+        assert_eq!(interval.served, 2);
+        assert_eq!(interval.on_time, 1);
+        assert_eq!(interval.late, 1);
+        assert_eq!(interval.total.count(), 2);
+
+        let mut merged = RawSnapshot::empty();
+        let b = WorkerMetrics::new();
+        b.record_served(ms(4), ms(4), ms(8), None);
+        merged.merge(&interval);
+        merged.merge(&b.snapshot());
+        assert_eq!(merged.served, 3);
+        assert_eq!(merged.total.count(), 3);
+    }
+
+    #[test]
+    fn snapshot_summarizes_attainment() {
+        let w = WorkerMetrics::new();
+        for i in 0..10 {
+            w.record_served(ms(1), ms(2), ms(3), Some(i < 9));
+        }
+        let mut raw = w.snapshot();
+        raw.shed_deadline = 5;
+        let s = ServingSnapshot::from_raw(&raw);
+        assert_eq!(s.served, 10);
+        assert_eq!(s.shed_deadline, 5);
+        assert!((s.slo_attainment - 0.9).abs() < 1e-9);
+        // ~3 ms total latency within the 6.25 % bucket error.
+        let p50 = s.total.p50_ns as f64;
+        assert!((p50 - 3.0e6).abs() / 3.0e6 < 0.10, "p50={p50}");
+        // No deadlines anywhere → vacuous attainment of 1.0.
+        let v = ServingSnapshot::from_raw(&WorkerMetrics::new().snapshot());
+        assert!((v.slo_attainment - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_mentions_all_sections() {
+        let w = WorkerMetrics::new();
+        w.record_served(ms(1), ms(2), ms(3), Some(true));
+        let text = ServingSnapshot::from_raw(&w.snapshot()).render();
+        for needle in ["served 1", "queue-wait", "compute", "total", "slo-attainment"] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+}

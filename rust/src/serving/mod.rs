@@ -1,0 +1,183 @@
+//! SLO-aware serving: the scheduling layer in front of the
+//! [`Engine`](crate::engine::Engine).
+//!
+//! MEC's memory win only turns into throughput if concurrent
+//! single-sample requests actually coalesce into the batch sizes the
+//! engine pre-planned. This module owns that policy; the
+//! [`coordinator`](crate::coordinator) owns the mechanism (queue,
+//! worker threads, reply channels) and is rewired on top of it.
+//!
+//! Pieces:
+//! * [`batcher`] — the deadline-driven adaptive batcher: collect until
+//!   `min(batch_full, oldest_deadline − est_compute − margin)`, then
+//!   dispatch as a padding-free split over the engine's pinned batch
+//!   sizes (largest-first). Decision logic is pure functions over
+//!   explicit `Instant`s, so it unit-tests with a virtual clock.
+//! * [`admission`] — typed load shedding at enqueue: a request is
+//!   rejected immediately ([`ShedReason::QueueFull`] /
+//!   [`ShedReason::DeadlineInfeasible`]) when the bounded queue is at
+//!   capacity or its deadline cannot be met given the estimated queue
+//!   wait plus the cost model's compute estimate.
+//! * [`cost`] — per-pinned-batch compute estimates, seeded from the
+//!   planner cost model at engine build and refined online by an EWMA
+//!   of measured forward times (lock-free, f64-in-AtomicU64).
+//! * [`histogram`] — lock-free HDR-style log-bucketed latency
+//!   histograms (16 linear sub-buckets per power of two, ≤ 6.25 %
+//!   relative error) — the recording side of the metrics surface.
+//! * [`metrics`] — per-worker queue-wait / compute / total recording
+//!   plus mergeable snapshots ([`ServingSnapshot`]: p50/p90/p99,
+//!   served/shed counters, SLO attainment).
+//! * [`loadgen`] — closed-loop and open-loop load generators driving a
+//!   [`Client`](crate::coordinator::Client); `benches/serving.rs` uses
+//!   them to record the `BENCH_serving.json` trajectory.
+
+// Scheduling policy is safe Rust only: no unsafe, ever (enforced — see
+// the crate-level unsafe policy and tools/unsafe-audit).
+#![forbid(unsafe_code)]
+
+pub mod admission;
+pub mod batcher;
+pub mod cost;
+pub mod histogram;
+pub mod loadgen;
+pub mod metrics;
+
+pub use admission::AdmissionPolicy;
+pub use batcher::{AdaptiveBatcher, SloPolicy};
+pub use cost::BatchCosts;
+pub use histogram::{AtomicHistogram, HistSnapshot};
+pub use loadgen::{LoadConfig, LoadMode, LoadReport};
+pub use metrics::{Dist, RawSnapshot, ServingSnapshot, WorkerMetrics};
+
+/// Why the serving layer refused to run a request. Carried by
+/// [`SubmitError::Shed`](crate::coordinator::SubmitError) when shed at
+/// enqueue, and by an error
+/// [`Response`](crate::coordinator::Response) when a worker sheds at
+/// dispatch time (the queue wait consumed the deadline after
+/// admission).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The bounded queue is at capacity — classic backpressure.
+    QueueFull { depth: usize, capacity: usize },
+    /// The deadline cannot be met: estimated queue wait + compute
+    /// (`needed_ns`) exceeds the time remaining until the deadline
+    /// (`budget_ns`).
+    DeadlineInfeasible { needed_ns: u64, budget_ns: u64 },
+}
+
+impl std::fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShedReason::QueueFull { depth, capacity } => {
+                write!(f, "shed: queue full ({depth}/{capacity})")
+            }
+            ShedReason::DeadlineInfeasible { needed_ns, budget_ns } => write!(
+                f,
+                "shed: deadline infeasible (need ~{needed_ns} ns, budget {budget_ns} ns)"
+            ),
+        }
+    }
+}
+
+/// `--slo-ms` knob: an optional latency objective in milliseconds with
+/// a `FromStr`/`Display` round trip (`"none"` ⇄ no SLO, `"8"` ⇄ 8 ms,
+/// `"2.5"` ⇄ 2.5 ms). Lives here — not in the CLI — so every front end
+/// parses the knob identically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloMs(pub Option<f64>);
+
+impl SloMs {
+    /// The objective as a [`Duration`](std::time::Duration), if set.
+    pub fn duration(&self) -> Option<std::time::Duration> {
+        self.0.map(|ms| std::time::Duration::from_secs_f64(ms / 1e3))
+    }
+}
+
+/// Typed parse failure for [`SloMs`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseSloError(pub String);
+
+impl std::fmt::Display for ParseSloError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "invalid SLO {:?} (expected a positive millisecond count or \"none\")",
+            self.0
+        )
+    }
+}
+
+impl std::error::Error for ParseSloError {}
+
+impl std::str::FromStr for SloMs {
+    type Err = ParseSloError;
+
+    fn from_str(s: &str) -> Result<SloMs, ParseSloError> {
+        let t = s.trim().to_ascii_lowercase();
+        if t == "none" || t == "off" {
+            return Ok(SloMs(None));
+        }
+        match t.parse::<f64>() {
+            Ok(v) if v.is_finite() && v > 0.0 => Ok(SloMs(Some(v))),
+            _ => Err(ParseSloError(s.to_string())),
+        }
+    }
+}
+
+impl std::fmt::Display for SloMs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.0 {
+            None => write!(f, "none"),
+            Some(v) if v.fract() == 0.0 => write!(f, "{v:.0}"),
+            Some(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn slo_ms_round_trips() {
+        for s in ["none", "8", "2.5", "250", "0.25"] {
+            let v: SloMs = s.parse().unwrap();
+            assert_eq!(v.to_string(), s, "round trip of {s:?}");
+            let v2: SloMs = v.to_string().parse().unwrap();
+            assert_eq!(v, v2);
+        }
+        // "off" normalizes to "none" (one canonical rendering).
+        let v: SloMs = "off".parse().unwrap();
+        assert_eq!(v, SloMs(None));
+        assert_eq!(v.to_string(), "none");
+    }
+
+    #[test]
+    fn slo_ms_rejects_garbage() {
+        for s in ["", "fast", "-3", "0", "nan", "inf"] {
+            assert!(s.parse::<SloMs>().is_err(), "{s:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn slo_ms_duration() {
+        assert_eq!(SloMs(None).duration(), None);
+        assert_eq!(
+            SloMs(Some(8.0)).duration(),
+            Some(Duration::from_millis(8))
+        );
+        assert_eq!(
+            SloMs(Some(0.5)).duration(),
+            Some(Duration::from_micros(500))
+        );
+    }
+
+    #[test]
+    fn shed_reason_displays() {
+        let s = ShedReason::QueueFull { depth: 4, capacity: 4 }.to_string();
+        assert!(s.contains("queue full"));
+        let s = ShedReason::DeadlineInfeasible { needed_ns: 10, budget_ns: 3 }.to_string();
+        assert!(s.contains("infeasible"));
+    }
+}

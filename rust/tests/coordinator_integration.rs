@@ -2,9 +2,10 @@
 //! invariants, backpressure, and property tests on the batcher.
 
 use mec::conv::AlgoKind;
-use mec::coordinator::{BatchPolicy, QueueError, RequestQueue, Server, ServerConfig, SubmitError};
+use mec::coordinator::{BatchPolicy, RequestQueue, Server, ServerConfig, SubmitError};
 use mec::engine::Engine;
 use mec::model::{Layer, Model};
+use mec::serving::ShedReason;
 use mec::tensor::{Kernel, KernelShape};
 use mec::util::prop::{check, Config};
 use mec::util::Rng;
@@ -49,6 +50,7 @@ fn tiny_engine() -> Arc<Engine> {
         Engine::builder(tiny_model())
             .algo_override(0, AlgoKind::Mec)
             .pin_batch_sizes(&[1, 8])
+            .threads(2)
             .build()
             .expect("tiny model builds"),
     )
@@ -60,10 +62,12 @@ fn concurrent_clients_all_served_consistently() {
         tiny_engine(),
         ServerConfig {
             workers: 2,
-            queue_capacity: 512,
-            policy: BatchPolicy::new(8, Duration::from_millis(5)),
+            queue_depth: 512,
+            max_wait: Duration::from_millis(5),
+            ..ServerConfig::default()
         },
-    );
+    )
+    .expect("server starts");
     let client = server.client();
     let n_threads = 4;
     let per_thread = 25;
@@ -84,7 +88,7 @@ fn concurrent_clients_all_served_consistently() {
                             assert!((sum - 1.0).abs() < 1e-4);
                             ok += 1;
                         }
-                        Err(SubmitError::Queue(QueueError::Full(_))) => {}
+                        Err(SubmitError::Shed(ShedReason::QueueFull { .. })) => {}
                         Err(e) => panic!("unexpected {e}"),
                     }
                 }
@@ -107,23 +111,31 @@ fn concurrent_clients_all_served_consistently() {
 }
 
 #[test]
-fn backpressure_rejects_when_queue_small() {
+fn backpressure_sheds_typed_when_queue_small() {
     let server = Server::start(
         tiny_engine(),
         ServerConfig {
             workers: 1,
-            queue_capacity: 2,
-            // Slow consumption: big batches with long delay.
-            policy: BatchPolicy::new(32, Duration::from_millis(30)),
+            queue_depth: 2,
+            // Slow consumption: a long collect window.
+            max_wait: Duration::from_millis(30),
+            ..ServerConfig::default()
         },
-    );
+    )
+    .expect("server starts");
     let client = server.client();
     let mut rejected = 0;
     let mut rxs = Vec::new();
     for _ in 0..64 {
         match client.submit(vec![0.2; 64]) {
             Ok(rx) => rxs.push(rx),
-            Err(SubmitError::Queue(QueueError::Full(_))) => rejected += 1,
+            Err(SubmitError::Shed(reason)) => {
+                assert!(
+                    matches!(reason, ShedReason::QueueFull { capacity: 2, .. }),
+                    "expected QueueFull at capacity 2, got {reason:?}"
+                );
+                rejected += 1;
+            }
             Err(e) => panic!("{e}"),
         }
     }
@@ -133,6 +145,10 @@ fn backpressure_rejects_when_queue_small() {
     let metrics = server.shutdown();
     assert!(rejected > 0, "tiny queue should shed load");
     assert_eq!(metrics.rejected.load(Ordering::Relaxed) as usize, rejected);
+    assert_eq!(
+        metrics.shed_queue_full.load(Ordering::Relaxed) as usize,
+        rejected
+    );
 }
 
 #[test]
@@ -149,6 +165,7 @@ fn prop_batcher_never_exceeds_max_batch_and_preserves_fifo() {
                     id: i,
                     sample: vec![],
                     enqueued_at: Instant::now(),
+                    deadline: None,
                     reply: tx.clone(),
                 })
                 .map_err(|e| e.to_string())?;
@@ -176,7 +193,8 @@ fn prop_batcher_never_exceeds_max_batch_and_preserves_fifo() {
 
 #[test]
 fn metrics_percentiles_are_monotone_under_load() {
-    let server = Server::start(tiny_engine(), ServerConfig::default());
+    let server =
+        Server::start(tiny_engine(), ServerConfig::default()).expect("server starts");
     let client = server.client();
     let mut rxs = Vec::new();
     for _ in 0..40 {
@@ -195,4 +213,8 @@ fn metrics_percentiles_are_monotone_under_load() {
     assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
     assert!(m.throughput_rps() > 0.0);
     assert!(m.mean_batch_size() >= 1.0);
+    // The serving snapshot agrees on volume and renders.
+    let snap = m.snapshot();
+    assert_eq!(snap.served, m.responses.load(Ordering::Relaxed));
+    assert!(snap.render().contains("serving metrics"));
 }

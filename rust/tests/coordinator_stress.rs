@@ -68,6 +68,7 @@ fn multi_producer_close_midstream_answers_exactly_once_or_rejects() {
                     id: (p * PER_PRODUCER + i) as u64,
                     sample: vec![],
                     enqueued_at: Instant::now(),
+                    deadline: None,
                     reply: tx,
                 };
                 match queue.push(req) {
@@ -139,6 +140,124 @@ fn multi_producer_close_midstream_answers_exactly_once_or_rejects() {
     assert!(accepted > 0, "close raced ahead of every producer");
     // Queue is fully drained.
     assert!(queue.is_empty());
+}
+
+#[test]
+fn graceful_drain_under_full_server_load() {
+    // The same exactly-once contract, end to end through the real
+    // Server: producers hammer `Client::submit` while the main thread
+    // shuts the server down mid-stream. Every accepted request must be
+    // answered (drain semantics), every post-shutdown submit must fail
+    // with `ShuttingDown` (or queue-full backpressure before the close
+    // lands), and the metrics conservation must hold.
+    use mec::conv::AlgoKind;
+    use mec::coordinator::{Server, ServerConfig, SubmitError};
+    use mec::engine::Engine;
+    use mec::model::{Layer, Model};
+    use mec::tensor::{Kernel, KernelShape};
+    use mec::util::Rng;
+
+    let mut rng = Rng::new(0x5EED);
+    let model = Model::new(
+        "drain-stress",
+        (6, 6, 1),
+        vec![
+            Layer::Conv {
+                kernel: Kernel::random(KernelShape::new(3, 3, 1, 2), &mut rng),
+                bias: vec![0.0; 2],
+                sh: 1,
+                sw: 1,
+                ph: 1,
+                pw: 1,
+            },
+            Layer::Relu,
+        ],
+    );
+    let engine = Arc::new(
+        Engine::builder(model)
+            .algo_override(0, AlgoKind::Mec)
+            .pin_batch_sizes(&[1, 4, 8])
+            .threads(2)
+            .build()
+            .expect("model builds"),
+    );
+    let server = Server::start(
+        engine,
+        ServerConfig {
+            workers: 2,
+            queue_depth: 64,
+            max_wait: Duration::from_millis(1),
+            ..ServerConfig::default()
+        },
+    )
+    .expect("server starts");
+    let client = server.client();
+
+    let accepted = Arc::new(AtomicUsize::new(0));
+    let shed = Arc::new(AtomicUsize::new(0));
+    let after_close = Arc::new(AtomicUsize::new(0));
+    let mut producers = Vec::new();
+    for _ in 0..4 {
+        let client = client.clone();
+        let accepted = Arc::clone(&accepted);
+        let shed = Arc::clone(&shed);
+        let after_close = Arc::clone(&after_close);
+        producers.push(std::thread::spawn(move || {
+            let mut receivers = Vec::new();
+            for i in 0..200 {
+                match client.submit(vec![0.4f32; 36]) {
+                    Ok(rx) => {
+                        accepted.fetch_add(1, Ordering::SeqCst);
+                        receivers.push(rx);
+                    }
+                    Err(SubmitError::Shed(_)) => {
+                        shed.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Err(SubmitError::ShuttingDown) => {
+                        after_close.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Err(e) => panic!("unexpected submit error: {e}"),
+                }
+                if i % 32 == 0 {
+                    std::thread::yield_now();
+                }
+            }
+            // Every accepted request gets exactly one reply, even though
+            // the server shut down mid-stream.
+            for rx in receivers {
+                let resp = rx
+                    .recv_timeout(Duration::from_secs(30))
+                    .expect("accepted request must be answered during drain");
+                assert!(resp.result.is_ok(), "valid sample must serve: {resp:?}");
+            }
+        }));
+    }
+
+    // Shut down while producers are mid-stream (gated on first accept).
+    while accepted.load(Ordering::SeqCst) == 0 {
+        std::thread::yield_now();
+    }
+    std::thread::sleep(Duration::from_millis(2));
+    let metrics = server.shutdown();
+
+    for h in producers {
+        h.join().expect("producer panicked");
+    }
+    // Post-shutdown submits fail fast with the typed shutdown error.
+    assert_eq!(
+        client.submit(vec![0.4f32; 36]).unwrap_err(),
+        SubmitError::ShuttingDown
+    );
+    let accepted = accepted.load(Ordering::SeqCst);
+    assert!(accepted > 0, "shutdown raced ahead of every producer");
+    // Conservation across the whole run (the one post-shutdown submit
+    // above is included: it counted requests+1 and rejected+1).
+    assert_eq!(
+        metrics.requests.load(Ordering::Relaxed),
+        metrics.responses.load(Ordering::Relaxed) + metrics.rejected.load(Ordering::Relaxed)
+    );
+    // Everything accepted was served.
+    assert_eq!(metrics.responses.load(Ordering::Relaxed) as usize, accepted);
 }
 
 #[test]

@@ -1,0 +1,269 @@
+//! SLO-serving integration contract: the acceptance criteria of the
+//! serving subsystem.
+//!
+//! * shedding is **typed** — a hopeless deadline and a full queue each
+//!   produce their own [`ShedReason`], never a panic or a silent drop;
+//! * under nominal load with a lax SLO, **everything** is served on
+//!   time (attainment 1.0, zero shed);
+//! * the steady-state serving path performs **zero tracked allocation**
+//!   and spawns **zero OS threads** — the engine's pre-sized arenas,
+//!   plan memos, and persistent pool absorb the whole hot path;
+//! * `BENCH_serving.json` carries real measurements: when the committed
+//!   seed still says `"status":"pending"`, a smoke sweep regenerates it
+//!   here so the trajectory file never ships fabricated numbers.
+//!
+//! Tracker-sensitive work runs inside `measure_peak`, which serializes
+//! on the tracker's global lock, so parallel test threads don't
+//! interfere. Every engine-building test in this binary takes the lock
+//! for that reason — tracked allocation anywhere in the process would
+//! perturb the zero-alloc assertion.
+
+use mec::conv::AlgoKind;
+use mec::coordinator::{Server, ServerConfig, SubmitError};
+use mec::engine::Engine;
+use mec::memory::{self, measure_peak};
+use mec::model::{Layer, Model};
+use mec::serving::{loadgen, LoadConfig, LoadMode, ShedReason};
+use mec::tensor::{Kernel, KernelShape};
+use mec::util::Rng;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Run `f` holding the tracker's global lock (via `measure_peak`), so
+/// tests in this binary never see each other's tracked allocations. Do
+/// NOT nest — the lock is not reentrant.
+fn with_tracker_lock<T>(f: impl FnOnce() -> T) -> T {
+    measure_peak(f).0
+}
+
+fn tiny_model() -> Model {
+    let mut rng = Rng::new(0x510);
+    Model::new(
+        "slo-test",
+        (6, 6, 1),
+        vec![
+            Layer::Conv {
+                kernel: Kernel::random(KernelShape::new(3, 3, 1, 2), &mut rng),
+                bias: vec![0.0; 2],
+                sh: 1,
+                sw: 1,
+                ph: 1,
+                pw: 1,
+            },
+            Layer::Relu,
+        ],
+    )
+}
+
+fn tiny_engine() -> Arc<Engine> {
+    Arc::new(
+        Engine::builder(tiny_model())
+            .algo_override(0, AlgoKind::Mec)
+            .pin_batch_sizes(&[1, 2, 4, 8])
+            .threads(2)
+            .build()
+            .expect("tiny model builds"),
+    )
+}
+
+#[test]
+fn hopeless_deadline_sheds_typed_feasible_deadline_serves() {
+    with_tracker_lock(|| {
+        let server =
+            Server::start(tiny_engine(), ServerConfig::default()).expect("server starts");
+        let client = server.client();
+        // A deadline already in the past can never be met — admission
+        // refuses it with the typed reason, before it burns queue space.
+        let err = client
+            .submit_with_deadline(vec![0.2; 36], Some(Instant::now()))
+            .unwrap_err();
+        match err {
+            SubmitError::Shed(ShedReason::DeadlineInfeasible { needed_ns, budget_ns }) => {
+                assert!(
+                    needed_ns > budget_ns,
+                    "shed payload must explain itself: need {needed_ns} > budget {budget_ns}"
+                );
+            }
+            other => panic!("expected DeadlineInfeasible, got {other:?}"),
+        }
+        // The same sample with a generous deadline serves fine.
+        let rx = client
+            .submit_with_deadline(vec![0.2; 36], Some(Instant::now() + Duration::from_secs(30)))
+            .expect("feasible deadline admits");
+        assert!(rx.recv().expect("answered").result.is_ok());
+        let metrics = server.shutdown();
+        assert_eq!(metrics.shed_deadline.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.responses.load(Ordering::Relaxed), 1);
+        // Conservation: requests = responses + rejected.
+        assert_eq!(metrics.requests.load(Ordering::Relaxed), 2);
+    });
+}
+
+#[test]
+fn full_queue_sheds_typed_with_capacity_in_payload() {
+    with_tracker_lock(|| {
+        let server = Server::start(
+            tiny_engine(),
+            ServerConfig {
+                workers: 1,
+                queue_depth: 2,
+                // Slow consumption: a long collect window.
+                max_wait: Duration::from_millis(30),
+                ..ServerConfig::default()
+            },
+        )
+        .expect("server starts");
+        let client = server.client();
+        let mut shed = 0u64;
+        let mut rxs = Vec::new();
+        for _ in 0..64 {
+            match client.submit(vec![0.1; 36]) {
+                Ok(rx) => rxs.push(rx),
+                Err(SubmitError::Shed(ShedReason::QueueFull { depth, capacity })) => {
+                    assert_eq!(capacity, 2, "payload carries the configured capacity");
+                    assert!(depth >= capacity, "shed at depth {depth} below cap {capacity}");
+                    shed += 1;
+                }
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        for rx in rxs {
+            assert!(rx.recv().expect("accepted request answered").result.is_ok());
+        }
+        let metrics = server.shutdown();
+        assert!(shed > 0, "a depth-2 queue under a 64-burst must shed");
+        assert_eq!(metrics.shed_queue_full.load(Ordering::Relaxed), shed);
+        assert_eq!(metrics.rejected.load(Ordering::Relaxed), shed);
+    });
+}
+
+#[test]
+fn nominal_load_meets_a_lax_slo_with_zero_shed() {
+    with_tracker_lock(|| {
+        let server = Server::start(
+            tiny_engine(),
+            ServerConfig {
+                workers: 2,
+                queue_depth: 256,
+                max_wait: Duration::from_millis(1),
+                ..ServerConfig::default()
+            },
+        )
+        .expect("server starts");
+        let report = loadgen::run(
+            &server,
+            &[0.3; 36],
+            &LoadConfig {
+                mode: LoadMode::Closed { clients: 4 },
+                requests: 80,
+                slo: Some(Duration::from_secs(2)),
+            },
+        );
+        server.shutdown();
+        // Closed-loop offered load self-regulates to capacity: with a
+        // 2 s deadline on a microsecond model, everything serves on
+        // time and nothing sheds.
+        assert_eq!(report.submitted, 80);
+        assert_eq!(report.served, 80, "nominal load must fully serve: {report:?}");
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.errors, 0);
+        assert!(
+            (report.slo_attainment - 1.0).abs() < 1e-9,
+            "attainment {} under a 2s SLO",
+            report.slo_attainment
+        );
+        assert!(report.p50_ms > 0.0 && report.p50_ms <= report.p99_ms);
+        assert!(report.p99_ms <= 2_000.0, "p99 {} ms blew the SLO", report.p99_ms);
+        assert!(report.throughput_rps > 0.0);
+    });
+}
+
+#[test]
+fn steady_state_serving_allocates_nothing_and_spawns_nothing() {
+    with_tracker_lock(|| {
+        let engine = tiny_engine();
+        let server = Server::start(
+            Arc::clone(&engine),
+            ServerConfig::default(),
+        )
+        .expect("server starts");
+        let client = server.client();
+        // Warm-up: grows the worker session's arena to its pre-sized
+        // bound and fills the plan memo for the batch-1 path.
+        for _ in 0..10 {
+            assert!(client.infer(vec![0.4; 36]).unwrap().result.is_ok());
+        }
+        // Steady state: the serving hot path (queue → batcher → session
+        // forward → histogram record → reply) must not touch the
+        // tracker or the pool. Each `infer` blocks until the reply, so
+        // the worker is quiescent at every gauge read.
+        let bytes_before = memory::current_bytes();
+        let spawned_before = engine.pool_threads_spawned();
+        for rep in 0..30 {
+            assert!(client.infer(vec![0.4; 36]).unwrap().result.is_ok());
+            assert_eq!(
+                memory::current_bytes(),
+                bytes_before,
+                "rep {rep}: tracked allocation in serving steady state"
+            );
+            assert_eq!(
+                engine.pool_threads_spawned(),
+                spawned_before,
+                "rep {rep}: steady-state serving spawned an OS thread"
+            );
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.responses.load(Ordering::Relaxed), 40);
+    });
+}
+
+/// Regenerate `BENCH_serving.json` with real measurements when the
+/// committed seed still says `"status":"pending"` (or the file is
+/// missing). The full sweep lives in `cargo bench --bench serving`;
+/// this smoke version keeps the trajectory file honest on any machine
+/// that only runs the test suite. Never overwrites real measurements.
+#[test]
+fn bench_serving_seed_carries_real_measurements() {
+    let path = std::path::Path::new("BENCH_serving.json");
+    let existing = std::fs::read_to_string(path).unwrap_or_default();
+    if !existing.is_empty() && !existing.contains("\"status\":\"pending\"") {
+        assert!(
+            existing.starts_with("{\"bench\":\"serving\""),
+            "BENCH_serving.json exists but is not the serving schema"
+        );
+        return;
+    }
+    let reports = with_tracker_lock(|| {
+        let engine = tiny_engine();
+        let slo = Some(Duration::from_millis(250));
+        let mut reports = Vec::new();
+        for cfg in [
+            LoadConfig { mode: LoadMode::Closed { clients: 1 }, requests: 40, slo },
+            LoadConfig { mode: LoadMode::Closed { clients: 2 }, requests: 40, slo },
+            LoadConfig { mode: LoadMode::Open { rps: 200.0 }, requests: 40, slo },
+            LoadConfig { mode: LoadMode::Open { rps: 400.0 }, requests: 40, slo },
+        ] {
+            let server = Server::start(
+                Arc::clone(&engine),
+                ServerConfig {
+                    workers: 2,
+                    queue_depth: 256,
+                    max_wait: Duration::from_millis(1),
+                    ..ServerConfig::default()
+                },
+            )
+            .expect("server starts");
+            reports.push(loadgen::run(&server, &[0.25; 36], &cfg));
+            server.shutdown();
+        }
+        reports
+    });
+    let json = loadgen::render_json(250.0, 2, &[1, 2, 4, 8], &reports);
+    std::fs::write(path, &json).expect("write BENCH_serving.json");
+    let written = std::fs::read_to_string(path).expect("read back");
+    assert!(written.starts_with("{\"bench\":\"serving\""));
+    assert!(!written.contains("\"status\":\"pending\""));
+    assert_eq!(written.matches("\"label\":").count(), 4);
+}
