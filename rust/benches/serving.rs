@@ -108,6 +108,35 @@ fn main() {
         ));
     }
 
+    // --- degraded mode: the ladder's bottom rung under load ----------
+    // A fresh engine (same config) forced down the degradation ladder
+    // (`Engine::degrade` — the same re-plan a refused workspace
+    // reservation triggers automatically): every conv layer on the
+    // zero-workspace family. The point quantifies what graceful
+    // degradation costs in throughput and tail latency at the same
+    // offered load, so the trajectory records the fallback with real
+    // numbers instead of a claim.
+    let degraded_engine = Arc::new(
+        Engine::builder(w.model(scale, 0x6ec))
+            .pin_batch_sizes(PINNED)
+            .threads(threads)
+            .build()
+            .expect("cv6 engine builds"),
+    );
+    let transitions = degraded_engine.degrade();
+    println!(
+        "\ndegraded point: {} conv layer(s) re-planned onto the zero-workspace family",
+        transitions.len()
+    );
+    let degraded_clients = *client_counts.last().unwrap();
+    let mut degraded = run_point(
+        &degraded_engine,
+        workers,
+        &LoadConfig { mode: LoadMode::Closed { clients: degraded_clients }, requests, slo },
+    );
+    degraded.label = format!("degraded-{}", degraded.label);
+    reports.push(degraded);
+
     // --- report -----------------------------------------------------
     let rows: Vec<Vec<String>> = reports
         .iter()

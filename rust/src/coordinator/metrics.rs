@@ -30,6 +30,11 @@ pub struct Metrics {
     /// Requests shed with [`ShedReason::DeadlineInfeasible`] (at submit
     /// or at dispatch).
     pub shed_deadline: AtomicU64,
+    /// Requests answered with [`ServeError::Panicked`](super::ServeError::Panicked)
+    /// — the forward pass panicked and containment converted the panic
+    /// into a typed reply. Counted inside `responses` (conservation
+    /// holds: a panicked request was still answered).
+    pub panicked: AtomicU64,
     batch_size_sum: AtomicU64,
     /// End-to-end latency (enqueue -> reply), ns.
     latency: AtomicHistogram,
@@ -54,6 +59,7 @@ impl Metrics {
             batches: AtomicU64::new(0),
             shed_queue_full: AtomicU64::new(0),
             shed_deadline: AtomicU64::new(0),
+            panicked: AtomicU64::new(0),
             batch_size_sum: AtomicU64::new(0),
             latency: AtomicHistogram::new(),
             forward: AtomicHistogram::new(),
@@ -92,6 +98,16 @@ impl Metrics {
     pub fn record_shed_response(&self, reason: ShedReason) {
         self.responses.fetch_add(1, Ordering::Relaxed);
         self.shed_counter(reason).fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request whose forward pass panicked: containment replied with
+    /// [`ServeError::Panicked`](super::ServeError::Panicked), so it
+    /// counts as a response (conservation) *and* bumps the dedicated
+    /// `panicked` counter (observability — `Server::health` surfaces
+    /// it).
+    pub fn record_panicked_response(&self) {
+        self.responses.fetch_add(1, Ordering::Relaxed);
+        self.panicked.fetch_add(1, Ordering::Relaxed);
     }
 
     fn shed_counter(&self, reason: ShedReason) -> &AtomicU64 {
@@ -147,7 +163,7 @@ impl Metrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} responses={} rejected={} batches={} mean_batch={:.2}\n\
-             shed: queue-full={} deadline={}\n\
+             shed: queue-full={} deadline={} | panicked={}\n\
              latency p50={} p95={} p99={} | forward p50={} p95={}\n\
              throughput={:.1} req/s",
             self.requests.load(Ordering::Relaxed),
@@ -157,6 +173,7 @@ impl Metrics {
             self.mean_batch_size(),
             self.shed_queue_full.load(Ordering::Relaxed),
             self.shed_deadline.load(Ordering::Relaxed),
+            self.panicked.load(Ordering::Relaxed),
             fmt_ns(self.latency_percentile(50.0)),
             fmt_ns(self.latency_percentile(95.0)),
             fmt_ns(self.latency_percentile(99.0)),

@@ -19,6 +19,8 @@
 //!   through per-worker engine sessions (shared plans/prepacks, private
 //!   arenas), with admission control at submit.
 //! * [`metrics`] — lock-free counters + per-worker latency histograms.
+//! * [`retry`]  — client-side jittered-backoff retry over retryable
+//!   submit rejections (queue-full backpressure).
 //! * [`batcher`] — the legacy static batcher (fixed `max_batch` /
 //!   `max_delay`), kept for stress tests; the server path uses
 //!   [`AdaptiveBatcher`](crate::serving::AdaptiveBatcher).
@@ -35,12 +37,14 @@
 pub mod batcher;
 pub mod metrics;
 pub mod queue;
+pub mod retry;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::Metrics;
 pub use queue::{QueueError, RequestQueue};
-pub use server::{Client, Server, ServerConfig, ServerError};
+pub use retry::{retryable, RetryPolicy};
+pub use server::{Client, HealthSnapshot, Server, ServerConfig, ServerError};
 
 use crate::engine::{EngineError, Prediction};
 use crate::serving::ShedReason;
@@ -88,6 +92,17 @@ pub enum ServeError {
     /// budget, so the worker dropped the request at dispatch instead of
     /// serving it late (always [`ShedReason::DeadlineInfeasible`]).
     Shed(ShedReason),
+    /// The forward pass panicked. Containment caught it at the session
+    /// boundary: every request of the batch gets this typed reply (it
+    /// still counts as a response for the conservation invariant), the
+    /// worker rebuilds its session and keeps serving.
+    Panicked {
+        /// Graph node the panic was attributed to, when the executor's
+        /// layer scope recorded one (`None` for panics outside a layer).
+        layer: Option<usize>,
+        /// The panic payload, stringified (`"..."` from `panic!`).
+        payload: String,
+    },
 }
 
 impl std::fmt::Display for ServeError {
@@ -95,6 +110,12 @@ impl std::fmt::Display for ServeError {
         match self {
             ServeError::Engine(e) => write!(f, "{e}"),
             ServeError::Shed(r) => write!(f, "{r}"),
+            ServeError::Panicked { layer: Some(l), payload } => {
+                write!(f, "forward panicked at layer {l}: {payload}")
+            }
+            ServeError::Panicked { layer: None, payload } => {
+                write!(f, "forward panicked: {payload}")
+            }
         }
     }
 }

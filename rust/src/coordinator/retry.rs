@@ -1,0 +1,125 @@
+//! Client-side retry: jittered exponential backoff over *retryable*
+//! submit failures.
+//!
+//! Classification — the only transient rejection is
+//! [`ShedReason::QueueFull`]: the queue drains as workers serve, so
+//! backing off and resubmitting is productive. Everything else is
+//! terminal: a deadline-infeasible rejection only gets *worse* with
+//! time (the budget shrinks while the estimate doesn't),
+//! [`SubmitError::Invalid`] is a caller bug no retry fixes, and
+//! [`SubmitError::ShuttingDown`] never reverses.
+//!
+//! Determinism — jitter draws from a seeded
+//! [`SplitMix64`](crate::util::Rng) stream owned by the retry call, not
+//! from the wall clock or a global RNG, so a test (or an incident
+//! replay) reproduces the exact delay schedule from the seed. The
+//! sleeps themselves are injectable
+//! ([`Client::submit_with_retry_using`](super::Client::submit_with_retry_using)),
+//! so the schedule is testable without ever sleeping.
+
+use super::SubmitError;
+use crate::serving::ShedReason;
+use crate::util::Rng;
+use std::time::Duration;
+
+/// Jittered exponential backoff: `delay(n) = min(base · 2ⁿ, cap)`
+/// scaled by a uniform factor in `[1 − jitter, 1 + jitter]`.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (`1` = no retries).
+    pub max_attempts: u32,
+    /// Delay before the first retry.
+    pub base: Duration,
+    /// Upper bound on any single (pre-jitter) delay.
+    pub cap: Duration,
+    /// Jitter fraction in `[0, 1]`: decorrelates clients that were all
+    /// shed by the same full queue, so they don't retry in lockstep and
+    /// re-create the spike that shed them.
+    pub jitter: f32,
+    /// Seed for the deterministic jitter stream.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base: Duration::from_millis(1),
+            cap: Duration::from_millis(50),
+            jitter: 0.5,
+            seed: 0x5eed,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The delay before retry number `attempt` (0-based), drawing the
+    /// jitter factor from `rng`.
+    pub fn delay(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let exp = self.base.saturating_mul(1u32 << attempt.min(20));
+        let capped = exp.min(self.cap);
+        let factor = 1.0 + self.jitter.clamp(0.0, 1.0) * (2.0 * rng.f32() - 1.0);
+        capped.mul_f64(factor.max(0.0) as f64)
+    }
+}
+
+/// Is this submit failure worth retrying? Only queue-full backpressure
+/// — see the module docs for why the rest are terminal.
+pub fn retryable(err: &SubmitError) -> bool {
+    matches!(err, SubmitError::Shed(ShedReason::QueueFull { .. }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineError;
+
+    #[test]
+    fn delays_grow_exponentially_and_cap() {
+        let p = RetryPolicy {
+            jitter: 0.0, // isolate the exponential schedule
+            ..RetryPolicy::default()
+        };
+        let mut rng = Rng::new(1);
+        assert_eq!(p.delay(0, &mut rng), Duration::from_millis(1));
+        assert_eq!(p.delay(1, &mut rng), Duration::from_millis(2));
+        assert_eq!(p.delay(2, &mut rng), Duration::from_millis(4));
+        // Past the cap, the schedule flattens.
+        assert_eq!(p.delay(9, &mut rng), p.cap);
+        assert_eq!(p.delay(63, &mut rng), p.cap, "huge attempt indices must not overflow");
+    }
+
+    #[test]
+    fn jitter_is_seed_deterministic_and_bounded() {
+        let p = RetryPolicy::default();
+        let seq = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            (0..8).map(|i| p.delay(i, &mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(seq(7), seq(7), "same seed, same schedule");
+        assert_ne!(seq(7), seq(8), "different seed, different schedule");
+        let mut rng = Rng::new(7);
+        for i in 0..8 {
+            let d = p.delay(i, &mut rng);
+            let nominal = p.base.saturating_mul(1 << i).min(p.cap);
+            assert!(d >= nominal.mul_f64(0.5) && d <= nominal.mul_f64(1.5), "jitter within ±50%");
+        }
+    }
+
+    #[test]
+    fn only_queue_full_is_retryable() {
+        assert!(retryable(&SubmitError::Shed(ShedReason::QueueFull {
+            depth: 4,
+            capacity: 4
+        })));
+        assert!(!retryable(&SubmitError::Shed(ShedReason::DeadlineInfeasible {
+            needed_ns: 10,
+            budget_ns: 1
+        })));
+        assert!(!retryable(&SubmitError::ShuttingDown));
+        assert!(!retryable(&SubmitError::Invalid(EngineError::SampleSize {
+            expected: 4,
+            got: 3
+        })));
+    }
+}

@@ -18,11 +18,12 @@
 
 use super::metrics::Metrics;
 use super::queue::{QueueError, RequestQueue};
+use super::retry::{retryable, RetryPolicy};
 use super::{assemble_batch, Request, Response, ServeError, SubmitError};
-use crate::engine::{Engine, EngineError};
+use crate::engine::{DegradedLayer, Engine, EngineError};
 use crate::serving::batcher::{infeasible, split_into_pinned, AdaptiveBatcher, SloPolicy};
 use crate::serving::{AdmissionPolicy, BatchCosts, ShedReason};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -170,19 +171,212 @@ impl Client {
         let rx = self.submit(sample)?;
         rx.recv().map_err(|_| SubmitError::ShuttingDown)
     }
+
+    /// Submit with retries under `policy`: *retryable* rejections
+    /// ([`ShedReason::QueueFull`] — transient backpressure that drains)
+    /// back off with deterministic jittered exponential delays and try
+    /// again; terminal ones (deadline-infeasible, invalid sample,
+    /// shutting down) return immediately. See
+    /// [`retry`](super::retry) for the classification rationale.
+    pub fn submit_with_retry(
+        &self,
+        sample: Vec<f32>,
+        policy: &RetryPolicy,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        self.submit_with_retry_using(sample, policy, std::thread::sleep)
+    }
+
+    /// [`submit_with_retry`](Client::submit_with_retry) with an
+    /// injectable sleep. Tests pass a recording closure (which may also
+    /// drain the queue to unblock the next attempt) so the full retry
+    /// schedule is exercised without ever touching the wall clock.
+    pub fn submit_with_retry_using(
+        &self,
+        sample: Vec<f32>,
+        policy: &RetryPolicy,
+        mut sleep: impl FnMut(Duration),
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        let mut rng = crate::util::Rng::new(policy.seed);
+        let mut attempt: u32 = 0;
+        loop {
+            match self.submit(sample.clone()) {
+                Ok(rx) => return Ok(rx),
+                Err(e) if retryable(&e) && attempt + 1 < policy.max_attempts => {
+                    sleep(policy.delay(attempt, &mut rng));
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+/// Everything a worker thread needs — cloneable so the supervisor can
+/// respawn a dead worker with the identical context.
+#[derive(Clone)]
+struct WorkerCtx {
+    queue: Arc<RequestQueue>,
+    metrics: Arc<Metrics>,
+    engine: Arc<Engine>,
+    costs: Arc<BatchCosts>,
+    policy: SloPolicy,
+    threads: usize,
+}
+
+/// Shared supervisor state: the live-worker gauge, the respawn counter,
+/// and the shutdown latch that stops respawning during drain.
+struct Supervision {
+    restarts: AtomicU64,
+    live: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+/// RAII live-worker gauge: armed at the top of the worker closure,
+/// decrements on *any* exit — clean drain or panic unwind — so
+/// [`Server::health`] always sees the true count.
+struct LiveGuard(Arc<Supervision>);
+
+impl LiveGuard {
+    fn arm(sup: &Arc<Supervision>) -> LiveGuard {
+        sup.live.fetch_add(1, Ordering::AcqRel);
+        LiveGuard(Arc::clone(sup))
+    }
+}
+
+impl Drop for LiveGuard {
+    fn drop(&mut self) {
+        self.0.live.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+fn spawn_worker(
+    ctx: &WorkerCtx,
+    sup: &Arc<Supervision>,
+    wid: usize,
+) -> std::thread::JoinHandle<()> {
+    let ctx = ctx.clone();
+    let sup = Arc::clone(sup);
+    std::thread::Builder::new()
+        .name(format!("mec-serve-{wid}"))
+        .spawn(move || {
+            let _live = LiveGuard::arm(&sup);
+            worker_loop(&ctx, wid);
+        })
+        .expect("spawn server worker")
+}
+
+/// How often the supervisor checks for dead workers.
+const SUPERVISOR_POLL: Duration = Duration::from_millis(2);
+/// First respawn delay; doubles per death up to [`BACKOFF_CAP`].
+const BACKOFF_BASE: Duration = Duration::from_millis(10);
+/// Restart-storm ceiling: a worker that dies on every spawn costs at
+/// most one respawn per second.
+const BACKOFF_CAP: Duration = Duration::from_secs(1);
+/// A death-free interval this long resets the backoff to
+/// [`BACKOFF_BASE`].
+const BACKOFF_QUIET: Duration = Duration::from_secs(5);
+
+/// Worker supervision: poll the handles, reap any worker that died (a
+/// panic that escaped per-request containment — e.g. an injected
+/// `serve.worker` fault between batches), and respawn it with
+/// exponential backoff so a crash loop cannot become a spawn storm.
+/// On shutdown, stop respawning and join everyone (drain semantics:
+/// the join blocks until the queue is served dry).
+fn supervisor_loop(
+    ctx: WorkerCtx,
+    sup: Arc<Supervision>,
+    mut handles: Vec<Option<std::thread::JoinHandle<()>>>,
+) {
+    let mut backoff = BACKOFF_BASE;
+    let mut last_death: Option<Instant> = None;
+    while !sup.shutdown.load(Ordering::Acquire) {
+        for wid in 0..handles.len() {
+            let dead = handles[wid].as_ref().is_some_and(|h| h.is_finished());
+            if !dead {
+                continue;
+            }
+            // Reap. The worker's own loop only exits on queue close, so
+            // death before shutdown means an un-contained panic; its
+            // payload already printed at the panic site.
+            let _ = handles[wid].take().unwrap().join();
+            if let Some(t) = last_death {
+                if t.elapsed() >= BACKOFF_QUIET {
+                    backoff = BACKOFF_BASE;
+                }
+            }
+            std::thread::sleep(backoff);
+            backoff = (backoff * 2).min(BACKOFF_CAP);
+            last_death = Some(Instant::now());
+            if sup.shutdown.load(Ordering::Acquire) {
+                // Drain began while we backed off: the remaining workers
+                // finish the queue; don't spawn into shutdown.
+                break;
+            }
+            sup.restarts.fetch_add(1, Ordering::AcqRel);
+            handles[wid] = Some(spawn_worker(&ctx, &sup, wid));
+        }
+        std::thread::sleep(SUPERVISOR_POLL);
+    }
+    for h in handles.iter_mut().filter_map(|h| h.take()) {
+        let _ = h.join();
+    }
+}
+
+/// Point-in-time fault-domain health, from [`Server::health`].
+#[derive(Debug, Clone)]
+pub struct HealthSnapshot {
+    /// Configured worker count.
+    pub workers: usize,
+    /// Workers alive right now (dips transiently while the supervisor
+    /// backs off before a respawn).
+    pub live_workers: usize,
+    /// Supervisor respawns since start.
+    pub restarts: u64,
+    /// Requests answered with [`ServeError::Panicked`].
+    pub panicked_requests: u64,
+    /// Has the engine taken the degradation ladder (replanned onto the
+    /// zero-workspace algorithm family after memory pressure)?
+    pub degraded: bool,
+    /// The per-layer algorithm transitions, when degraded.
+    pub degraded_layers: Vec<DegradedLayer>,
+    /// Requests currently queued.
+    pub queue_depth: usize,
+}
+
+impl std::fmt::Display for HealthSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "workers {}/{} live | restarts={} panicked={} queue_depth={} | ",
+            self.live_workers, self.workers, self.restarts, self.panicked_requests,
+            self.queue_depth,
+        )?;
+        if self.degraded {
+            let list: Vec<String> = self
+                .degraded_layers
+                .iter()
+                .map(|d| format!("layer{} {:?}->{:?}", d.layer, d.from, d.to))
+                .collect();
+            write!(f, "degraded [{}]", list.join(", "))
+        } else {
+            write!(f, "healthy")
+        }
+    }
 }
 
 /// A running inference server over a shared [`Engine`].
 pub struct Server {
     queue: Arc<RequestQueue>,
     metrics: Arc<Metrics>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    engine: Arc<Engine>,
     hwc: (usize, usize, usize),
     next_id: Arc<AtomicU64>,
     costs: Arc<BatchCosts>,
     admission: AdmissionPolicy,
     n_workers: usize,
     slo: Option<Duration>,
+    sup: Arc<Supervision>,
+    supervisor: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
@@ -220,32 +414,40 @@ impl Server {
             margin: cfg.margin,
         };
         let hwc = engine.input_hwc();
-        let mut workers = Vec::new();
-        for wid in 0..cfg.workers {
-            let queue = Arc::clone(&queue);
-            let metrics = Arc::clone(&metrics);
-            let engine = Arc::clone(&engine);
-            let costs = Arc::clone(&costs);
-            let policy = policy.clone();
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("mec-serve-{wid}"))
-                    .spawn(move || {
-                        worker_loop(&queue, &metrics, &engine, costs, policy, per_worker_threads, wid);
-                    })
-                    .expect("spawn server worker"),
-            );
-        }
+        let ctx = WorkerCtx {
+            queue: Arc::clone(&queue),
+            metrics: Arc::clone(&metrics),
+            engine: Arc::clone(&engine),
+            costs: Arc::clone(&costs),
+            policy,
+            threads: per_worker_threads,
+        };
+        let sup = Arc::new(Supervision {
+            restarts: AtomicU64::new(0),
+            live: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles: Vec<Option<std::thread::JoinHandle<()>>> =
+            (0..cfg.workers).map(|wid| Some(spawn_worker(&ctx, &sup, wid))).collect();
+        let supervisor = {
+            let sup = Arc::clone(&sup);
+            std::thread::Builder::new()
+                .name("mec-serve-supervisor".into())
+                .spawn(move || supervisor_loop(ctx, sup, handles))
+                .expect("spawn server supervisor")
+        };
         Ok(Server {
             queue,
             metrics,
-            workers,
+            engine,
             hwc,
             next_id: Arc::new(AtomicU64::new(0)),
             costs,
             admission,
             n_workers: cfg.workers,
             slo: cfg.slo,
+            sup,
+            supervisor: Some(supervisor),
         })
     }
 
@@ -266,36 +468,61 @@ impl Server {
         Arc::clone(&self.metrics)
     }
 
+    /// Fault-domain health: live/configured workers, respawn count,
+    /// panicked-request count, degradation state, queue depth.
+    pub fn health(&self) -> HealthSnapshot {
+        HealthSnapshot {
+            workers: self.n_workers,
+            live_workers: self.sup.live.load(Ordering::Acquire),
+            restarts: self.sup.restarts.load(Ordering::Acquire),
+            panicked_requests: self.metrics.panicked.load(Ordering::Relaxed),
+            degraded: self.engine.is_degraded(),
+            degraded_layers: self.engine.degraded_layers(),
+            queue_depth: self.queue.len(),
+        }
+    }
+
     /// Graceful drain: stop accepting (subsequent submits get
-    /// [`SubmitError::ShuttingDown`]), serve everything already
-    /// admitted, join workers.
+    /// [`SubmitError::ShuttingDown`]), stop respawning, serve everything
+    /// already admitted, join the supervisor (which joins the workers).
     pub fn shutdown(mut self) -> Arc<Metrics> {
+        self.sup.shutdown.store(true, Ordering::Release);
         self.queue.close();
-        for h in self.workers.drain(..) {
+        if let Some(h) = self.supervisor.take() {
             let _ = h.join();
         }
         Arc::clone(&self.metrics)
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
-    queue: &RequestQueue,
-    metrics: &Metrics,
-    engine: &Engine,
-    costs: Arc<BatchCosts>,
-    policy: SloPolicy,
-    threads: usize,
-    wid: usize,
-) {
+/// Stringify a caught panic payload (`&'static str` from `panic!(".."),`
+/// `String` from a formatted `panic!`, opaque otherwise).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn worker_loop(ctx: &WorkerCtx, wid: usize) {
+    let WorkerCtx { queue, metrics, engine, costs, policy, threads } = ctx;
     // Per-worker session: engine-sized arena, lock-free steady state,
     // thread budget = its share of the engine's pool.
     let wm = metrics.worker(wid);
-    let batcher = AdaptiveBatcher::new(queue, Arc::clone(&costs), policy);
-    let mut session = engine.session_with_threads(threads);
+    let batcher = AdaptiveBatcher::new(queue, Arc::clone(costs), policy.clone());
+    let mut session = engine.session_with_threads(*threads);
     let (h, w, c) = engine.input_hwc();
     let per = h * w * c;
-    while let Some(batch) = batcher.next_batch() {
+    loop {
+        // Fault site: a panic here kills the whole worker thread
+        // *between* batches — it holds no requests at this point, so
+        // conservation is untouched, and the supervisor observes a
+        // clean death to respawn from.
+        crate::faultpoint!("serve.worker");
+        let Some(batch) = batcher.next_batch() else { break };
         if batch.is_empty() {
             continue;
         }
@@ -364,11 +591,42 @@ fn worker_loop(
         let mut remaining = feasible;
         for chunk_len in split_into_pinned(remaining.len(), costs.sizes()) {
             let chunk: Vec<Request> = remaining.drain(..chunk_len).collect();
+            // Fault site: compute-delay injection just before dispatch
+            // (models a stalled worker without killing anything).
+            crate::faultpoint!("serve.dispatch");
             let dispatch_start = Instant::now();
-            let outcome = assemble_batch((h, w, c), &chunk)
-                .and_then(|input| session.predict_batch(&input));
+            // Per-request panic containment: the forward pass runs under
+            // `catch_unwind`, so a panicking layer (a kernel bug, or an
+            // injected `engine.forward` fault) costs exactly this chunk —
+            // every request of it still gets a typed reply, and the
+            // worker rebuilds its session and keeps serving. The engine's
+            // thread pool survives the unwind un-wedged (its submit path
+            // re-raises only after releasing the dispatch lock).
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                assemble_batch((h, w, c), &chunk).and_then(|input| session.predict_batch(&input))
+            }));
             match outcome {
-                Ok(preds) => {
+                Err(payload) => {
+                    let layer = crate::fault::take_panic_layer();
+                    let msg = panic_message(payload.as_ref());
+                    for req in &chunk {
+                        metrics.record_panicked_response();
+                        let _ = req.reply.send(Response {
+                            id: req.id,
+                            batch_size: 0,
+                            result: Err(ServeError::Panicked {
+                                layer,
+                                payload: msg.clone(),
+                            }),
+                        });
+                    }
+                    // The unwind may have left activation slots checked
+                    // out of the session's arena (take/put is not
+                    // unwind-safe by design); a fresh session is cheap —
+                    // plans and prepacks are shared via the engine.
+                    session = engine.session_with_threads(*threads);
+                }
+                Ok(Ok(preds)) => {
                     let compute = dispatch_start.elapsed();
                     let forward_ns = compute.as_nanos() as f64;
                     metrics.record_batch(chunk_len, forward_ns);
@@ -390,7 +648,7 @@ fn worker_loop(
                 }
                 // Unreachable after the per-request validation above, but
                 // a worker must survive anything: reply the typed error.
-                Err(e) => {
+                Ok(Err(e)) => {
                     for req in &chunk {
                         metrics.record_latency(req.enqueued_at.elapsed().as_nanos() as f64);
                         let _ = req.reply.send(Response {

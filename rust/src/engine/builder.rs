@@ -321,15 +321,22 @@ impl EngineBuilder {
             batch_costs.push((b, total / discount));
         }
 
+        let model = Arc::new(model);
+        let degrade = Arc::new(super::DegradeCtl::new(
+            Arc::clone(&model),
+            ctx.clone(),
+            pinned.clone(),
+            ws_elems,
+        ));
         Ok(Engine {
-            model: Arc::new(model),
+            model,
             ctx,
             budget: self.budget,
-            ws_elems,
             act_slots,
             pinned,
             report,
             batch_costs,
+            degrade,
         })
     }
 }

@@ -36,6 +36,13 @@ pub enum EngineError {
         expected: (usize, usize, usize),
         got: (usize, usize, usize),
     },
+    /// A workspace or activation growth was refused (real memory
+    /// pressure, or the fault-injection harness). Workspace refusals are
+    /// normally absorbed by the degradation ladder
+    /// ([`Engine::degrade`](crate::engine::Engine::degrade)) and retried;
+    /// this surfaces only when degradation cannot help (activation
+    /// growth, or a second refusal after degrading).
+    Alloc(crate::memory::AllocError),
 }
 
 impl fmt::Display for EngineError {
@@ -64,6 +71,7 @@ impl fmt::Display for EngineError {
                 "batch samples are {}x{}x{}, engine input is {}x{}x{}",
                 got.0, got.1, got.2, expected.0, expected.1, expected.2
             ),
+            EngineError::Alloc(e) => write!(f, "memory pressure: {e}"),
         }
     }
 }

@@ -51,10 +51,12 @@ use crate::conv::{AlgoKind, ConvContext};
 use crate::gemm::KernelBackend;
 use crate::memory::Budget;
 use crate::model::Model;
-use crate::planner::{Measurement, Plan};
+use crate::planner::{Measurement, Plan, Planner};
 use crate::tensor::quant::QParams;
 use crate::tensor::ConvShape;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 /// One conv node's planning outcome, recorded by
 /// [`EngineBuilder::build`] — what the CLI `plan`/`tune` subcommands and
@@ -85,15 +87,121 @@ pub struct LayerPlan {
     pub backend: KernelBackend,
 }
 
+/// One conv layer's transition onto the zero-workspace family, recorded
+/// when the engine degrades (see [`Engine::degrade`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DegradedLayer {
+    /// Node id in the model graph.
+    pub layer: usize,
+    /// Algorithm the layer was built with.
+    pub from: AlgoKind,
+    /// Zero-workspace algorithm it now runs.
+    pub to: AlgoKind,
+}
+
+/// Engine-wide degradation state, shared by every [`Session`].
+///
+/// The fault-domain contract (ARCHITECTURE.md, "Fault domains & the
+/// degradation ladder"): when a session's workspace reservation is
+/// refused — real memory pressure or the `memory.arena.grow` /
+/// `memory.workspace.grow` fault sites — the engine re-plans every conv
+/// layer under a **zero** workspace budget. The planner then only
+/// considers the zero-workspace family (kn2row, smm, direct; "direct is
+/// always admissible"), whose arena demand is 0 floats, so the retry
+/// cannot need the refused bytes. Sessions observe the transition
+/// through `epoch`: one atomic load per forward, memo cleared on change.
+pub(crate) struct DegradeCtl {
+    model: Arc<Model>,
+    ctx: ConvContext,
+    pinned: Vec<usize>,
+    /// Bumped once per completed re-plan (0 = never degraded).
+    epoch: AtomicU64,
+    /// Current per-session workspace requirement in floats — the build
+    /// figure until a degrade drops it.
+    ws_elems: AtomicUsize,
+    /// Transitions recorded by the re-plan (empty until degraded).
+    degraded: RwLock<Vec<DegradedLayer>>,
+    /// Serializes the re-plan so concurrently failing sessions degrade
+    /// the model once, not once each.
+    replan: Mutex<()>,
+}
+
+impl DegradeCtl {
+    fn new(model: Arc<Model>, ctx: ConvContext, pinned: Vec<usize>, ws_elems: usize) -> DegradeCtl {
+        DegradeCtl {
+            model,
+            ctx,
+            pinned,
+            epoch: AtomicU64::new(0),
+            ws_elems: AtomicUsize::new(ws_elems),
+            degraded: RwLock::new(Vec::new()),
+            replan: Mutex::new(()),
+        }
+    }
+
+    pub(crate) fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    pub(crate) fn ws_elems(&self) -> usize {
+        self.ws_elems.load(Ordering::Acquire)
+    }
+
+    pub(crate) fn is_degraded(&self) -> bool {
+        self.epoch() > 0
+    }
+
+    pub(crate) fn degraded_layers(&self) -> Vec<DegradedLayer> {
+        self.degraded.read().unwrap().clone()
+    }
+
+    /// Re-plan every conv layer under a zero workspace budget and
+    /// publish the new epoch. Idempotent: once degraded, later calls
+    /// (other sessions racing on the same refusal) return the recorded
+    /// transitions without touching the model again.
+    pub(crate) fn degrade(&self) -> Vec<DegradedLayer> {
+        // A panic mid-replan (fault injection) must not wedge every
+        // future degrade behind a poisoned mutex; replan_with republishes
+        // plans atomically, so recovering the guard is sound.
+        let _g = self
+            .replan
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        if self.is_degraded() {
+            return self.degraded_layers();
+        }
+        let before: HashMap<usize, AlgoKind> = self.model.plan_summary().into_iter().collect();
+        let planner = Planner::new();
+        let zero = Budget::new(0);
+        let plan_batch = self.pinned.last().copied().unwrap_or(1);
+        let mut ws = self
+            .model
+            .replan_with(plan_batch, |_, cs| planner.plan(cs, &zero, &self.ctx).algo);
+        for &b in self.pinned.iter().filter(|&&b| b != plan_batch) {
+            ws = ws.max(self.model.prepare_batch(b));
+        }
+        let transitions: Vec<DegradedLayer> = self
+            .model
+            .plan_summary()
+            .into_iter()
+            .filter_map(|(layer, to)| {
+                let from = before.get(&layer).copied()?;
+                (from != to).then_some(DegradedLayer { layer, from, to })
+            })
+            .collect();
+        *self.degraded.write().unwrap() = transitions.clone();
+        self.ws_elems.store(ws, Ordering::Release);
+        self.epoch.fetch_add(1, Ordering::Release);
+        transitions
+    }
+}
+
 /// An immutable, fully-planned inference engine. Build with
 /// [`Engine::builder`]; execute through [`Engine::session`].
 pub struct Engine {
     model: Arc<Model>,
     ctx: ConvContext,
     budget: Budget,
-    /// Arena floats a session needs: max over conv nodes and pinned
-    /// batch sizes.
-    ws_elems: usize,
     /// Activation-slot floats per session (liveness plan at the largest
     /// pinned batch).
     act_slots: Vec<usize>,
@@ -102,6 +210,10 @@ pub struct Engine {
     /// Cost-model compute estimate (ns) per pinned batch size, thread
     /// discount applied — the serving scheduler's seed figures.
     batch_costs: Vec<(usize, f64)>,
+    /// Degradation ladder state shared with every session (holds the
+    /// current workspace target: the build-time max over conv nodes and
+    /// pinned batches, dropping to zero after a degrade).
+    degrade: Arc<DegradeCtl>,
 }
 
 impl Engine {
@@ -120,8 +232,8 @@ impl Engine {
         Session::new(
             Arc::clone(&self.model),
             self.ctx.clone(),
-            self.ws_elems,
             &self.act_slots,
+            Arc::clone(&self.degrade),
         )
     }
 
@@ -135,7 +247,7 @@ impl Engine {
             .ctx
             .clone()
             .with_parallelism(self.ctx.par.with_budget(threads));
-        Session::new(Arc::clone(&self.model), ctx, self.ws_elems, &self.act_slots)
+        Session::new(Arc::clone(&self.model), ctx, &self.act_slots, Arc::clone(&self.degrade))
     }
 
     /// OS threads the engine's pool has spawned so far — constant after
@@ -171,14 +283,16 @@ impl Engine {
         &self.pinned
     }
 
-    /// Workspace floats each session's arena is pre-sized to.
+    /// Workspace floats each session's arena is pre-sized to — the
+    /// build-time max over conv nodes and pinned batches, dropping to
+    /// zero once the engine has degraded onto the zero-workspace family.
     pub fn workspace_elems(&self) -> usize {
-        self.ws_elems
+        self.degrade.ws_elems()
     }
 
     /// Same in bytes.
     pub fn workspace_bytes(&self) -> usize {
-        self.ws_elems * std::mem::size_of::<f32>()
+        self.workspace_elems() * std::mem::size_of::<f32>()
     }
 
     /// Activation-arena bytes each session is pre-sized to (Σ liveness
@@ -191,6 +305,60 @@ impl Engine {
     /// Per-layer planning outcomes recorded at build time.
     pub fn plan_report(&self) -> &[LayerPlan] {
         &self.report
+    }
+
+    /// [`Engine::plan_report`] with the degradation ladder's transitions
+    /// applied: a degraded layer's `chosen` plan is replaced by its
+    /// zero-workspace fallback (taken from the recorded `candidates` —
+    /// the family is admissible under any budget — or synthesized with a
+    /// zero workspace when the build report predates the candidate).
+    /// Identical to the build report until [`Engine::degrade`] fires.
+    pub fn plan_report_current(&self) -> Vec<LayerPlan> {
+        let degraded = self.degrade.degraded_layers();
+        let mut report = self.report.clone();
+        for d in &degraded {
+            if let Some(lp) = report.iter_mut().find(|lp| lp.layer == d.layer) {
+                lp.chosen = lp
+                    .candidates
+                    .iter()
+                    .find(|c| c.algo == d.to)
+                    .cloned()
+                    .unwrap_or(Plan {
+                        algo: d.to,
+                        workspace_bytes: 0,
+                        est_ns: lp.chosen.est_ns,
+                    });
+                lp.measurements = None;
+            }
+        }
+        report
+    }
+
+    /// Force the degradation ladder now (operational use: shed workspace
+    /// ahead of anticipated memory pressure). Atomically re-plans every
+    /// conv layer onto the zero-workspace family {kn2row, smm, direct}
+    /// and returns the transitions; idempotent — once degraded, later
+    /// calls return the recorded transitions without re-planning. The
+    /// same path runs automatically when a session's workspace
+    /// reservation is refused.
+    pub fn degrade(&self) -> Vec<DegradedLayer> {
+        self.degrade.degrade()
+    }
+
+    /// Whether the engine has degraded onto the zero-workspace family.
+    pub fn is_degraded(&self) -> bool {
+        self.degrade.is_degraded()
+    }
+
+    /// Degradation epoch: 0 until the first (and only) degrade, then 1.
+    /// Sessions resync their plan memos against this.
+    pub fn degrade_epoch(&self) -> u64 {
+        self.degrade.epoch()
+    }
+
+    /// Layer transitions recorded by the degrade (empty while healthy).
+    pub fn degraded_layers(&self) -> Vec<DegradedLayer> {
+        self.degrade.degraded_layers()
     }
 
     /// Chosen algorithm per conv layer (delegates to the model).
@@ -349,6 +517,63 @@ mod tests {
             .build()
             .unwrap();
         assert!(mt.estimate_batch_ns(4) < four);
+    }
+
+    #[test]
+    fn degrade_replans_onto_the_zero_workspace_family() {
+        let engine = Engine::builder(conv_model(7)).build().unwrap();
+        assert!(!engine.is_degraded());
+        assert!(engine.workspace_elems() > 0, "3x3 conv plans a workspace");
+        let transitions = engine.degrade();
+        assert!(engine.is_degraded());
+        assert_eq!(engine.degrade_epoch(), 1);
+        assert_eq!(
+            engine.workspace_elems(),
+            0,
+            "the zero-workspace family needs no arena"
+        );
+        assert!(
+            !transitions.is_empty(),
+            "a workspace-hungry plan must have moved"
+        );
+        for lp in engine.plan_report_current() {
+            assert_eq!(
+                lp.chosen.workspace_bytes, 0,
+                "layer {} still reports a workspace after degrade",
+                lp.layer
+            );
+        }
+        // Build-time report is untouched (it documents what was built).
+        assert!(engine.plan_report()[0].chosen.workspace_bytes > 0);
+        // Idempotent: a second degrade re-plans nothing and reports the
+        // same transitions.
+        assert_eq!(engine.degrade(), transitions);
+        assert_eq!(engine.degrade_epoch(), 1);
+    }
+
+    #[test]
+    fn degraded_outputs_match_a_zero_budget_build_bitwise() {
+        let mut rng = Rng::new(11);
+        let x = Tensor::random(Nhwc::new(2, 8, 8, 2), &mut rng);
+        let engine = Engine::builder(conv_model(8)).build().unwrap();
+        let mut s = engine.session();
+        let healthy = s.infer_batch(&x).unwrap();
+        engine.degrade();
+        // The same session picks the re-plan up on its next forward (its
+        // memo resyncs against the degrade epoch).
+        let degraded = s.infer_batch(&x).unwrap();
+        assert_eq!(healthy.shape(), degraded.shape());
+        let zero = Engine::builder(conv_model(8))
+            .budget(Budget::new(0))
+            .build()
+            .unwrap();
+        let reference = zero.session().infer_batch(&x).unwrap();
+        assert_eq!(
+            degraded.data(),
+            reference.data(),
+            "degraded forward must be bitwise identical to a fresh \
+             zero-budget plan"
+        );
     }
 
     #[test]

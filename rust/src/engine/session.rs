@@ -8,7 +8,7 @@
 //! allocation. Everything read-only (planned `ConvPlan`s, shared kernel
 //! prepacks, weights) stays in the engine's `Arc<Model>`.
 
-use super::EngineError;
+use super::{DegradeCtl, EngineError};
 use crate::conv::ConvContext;
 use crate::memory::{ActivationArena, Arena};
 use crate::model::{Model, PlanMemo};
@@ -54,23 +54,90 @@ pub struct Session {
     acts: ActivationArena,
     memo: PlanMemo,
     input_hwc: (usize, usize, usize),
+    /// Shared degradation state (see `engine::DegradeCtl`). Each forward
+    /// starts by resyncing against its epoch, so a re-plan by any session
+    /// invalidates every other session's memo before its next use.
+    degrade: Arc<DegradeCtl>,
+    /// Last degradation epoch this session synced its memo/targets to.
+    epoch_seen: u64,
+    /// Workspace floats to (fallibly) reserve before each forward —
+    /// follows the engine-wide target across degradations.
+    ws_target: usize,
 }
 
 impl Session {
     pub(crate) fn new(
         model: Arc<Model>,
         ctx: ConvContext,
-        ws_elems: usize,
         act_slots: &[usize],
+        degrade: Arc<DegradeCtl>,
     ) -> Session {
         let input_hwc = model.input_hwc;
+        let epoch_seen = degrade.epoch();
+        let ws_target = degrade.ws_elems();
         Session {
             model,
             ctx,
-            arena: Arena::with_capacity(ws_elems),
+            arena: Arena::with_capacity(ws_target),
             acts: ActivationArena::with_slots(act_slots),
             memo: PlanMemo::new(),
             input_hwc,
+            degrade,
+            epoch_seen,
+            ws_target,
+        }
+    }
+
+    /// Pick up an engine-wide re-plan: clear the memo (its entries point
+    /// at the superseded plans) and reload the workspace target. Cheap in
+    /// steady state — one atomic load and a branch.
+    fn resync(&mut self) {
+        let epoch = self.degrade.epoch();
+        if epoch != self.epoch_seen {
+            self.memo.clear();
+            self.ws_target = self.degrade.ws_elems();
+            self.epoch_seen = epoch;
+        }
+    }
+
+    /// Fallibly reserve everything a forward will touch, then run it.
+    /// All growth happens here, typed; the executor below never allocates
+    /// for pinned batch sizes.
+    fn try_forward(&mut self, input: &Tensor) -> Result<Tensor, EngineError> {
+        self.arena
+            .try_reserve(self.ws_target)
+            .map_err(EngineError::Alloc)?;
+        let n = input.shape().n;
+        for (i, &e) in self.model.exec().slot_elems().iter().enumerate() {
+            self.acts
+                .try_ensure(i, e * n)
+                .map_err(EngineError::Alloc)?;
+        }
+        Ok(self.model.forward_with(
+            &self.ctx,
+            input,
+            &mut self.arena,
+            &mut self.acts,
+            Some(&mut self.memo),
+        ))
+    }
+
+    /// The degradation ladder's session-side rung: a refused *workspace*
+    /// reservation triggers one engine-wide re-plan onto the
+    /// zero-workspace family and a single retry (which cannot need the
+    /// refused bytes — the degraded target is workspace-free). Activation
+    /// refusals are not helped by re-planning (activation demand is set
+    /// by the graph, not the algorithm choice), so they surface typed to
+    /// this one request.
+    fn forward(&mut self, input: &Tensor) -> Result<Tensor, EngineError> {
+        self.resync();
+        match self.try_forward(input) {
+            Err(EngineError::Alloc(e)) if e.site != "memory.activation.grow" => {
+                self.degrade.degrade();
+                self.resync();
+                self.try_forward(input)
+            }
+            other => other,
         }
     }
 
@@ -85,13 +152,7 @@ impl Session {
             });
         }
         let input = Tensor::from_vec(Nhwc::new(1, h, w, c), sample.to_vec());
-        let out = self.model.forward_with(
-            &self.ctx,
-            &input,
-            &mut self.arena,
-            &mut self.acts,
-            Some(&mut self.memo),
-        );
+        let out = self.forward(&input)?;
         Ok(Prediction::from_scores(out.into_vec()))
     }
 
@@ -105,13 +166,7 @@ impl Session {
                 got: (sh.h, sh.w, sh.c),
             });
         }
-        Ok(self.model.forward_with(
-            &self.ctx,
-            batch,
-            &mut self.arena,
-            &mut self.acts,
-            Some(&mut self.memo),
-        ))
+        self.forward(batch)
     }
 
     /// [`Session::infer_batch`] plus per-sample argmax — what the

@@ -1,0 +1,549 @@
+//! Deterministic, seeded fault injection — the test harness for every
+//! recovery path in the crate.
+//!
+//! Production code is sprinkled with *named fault sites* (the
+//! [`faultpoint!`](crate::faultpoint) macro): places where an allocation
+//! may be made to fail, a forward pass made to panic, or a compute step
+//! artificially delayed. With no plan armed the check is a single
+//! relaxed atomic load — the hot path pays nothing measurable.
+//!
+//! A plan arms from the environment
+//! (`MEC_FAULTS=<seed>:<site>=<action>[@<prob>][#<limit>][,…]`) or from
+//! a [`ScopedFaults`] guard in tests. Every probabilistic decision
+//! draws from a [`SplitMix64`](crate::util::Rng) stream derived from
+//! `seed ^ fnv1a(site)`, so a failing run replays bit-for-bit from the
+//! one-line spec — the same discipline as `MEC_FUZZ_SEED` in the
+//! differential oracle.
+//!
+//! Spec grammar (comma-separated clauses):
+//!
+//! ```text
+//! <site>=<action>[@<prob>][#<limit>]
+//!   site    exact site name, or a prefix ending in `*`
+//!   action  alloc         fail the allocation (typed AllocError)
+//!           panic         panic at the site
+//!           delay<ms>     sleep <ms> milliseconds at the site
+//!   @<prob> firing probability in [0,1] (default 1)
+//!   #<limit> max number of firings (default unlimited)
+//! ```
+//!
+//! Example: `MEC_FAULTS=0xbad5eed:memory.arena.grow=alloc#1,engine.forward=panic@0.01`
+//!
+//! This module is policy only and contains no `unsafe`.
+
+#![forbid(unsafe_code)]
+
+use crate::util::Rng;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock, RwLock};
+
+/// What a firing fault site does.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    /// Report allocation failure (the site returns a typed `AllocError`).
+    FailAlloc,
+    /// Panic at the site.
+    Panic,
+    /// Sleep this many milliseconds at the site.
+    DelayMs(u64),
+}
+
+/// One armed clause of a fault plan.
+#[derive(Debug)]
+struct SiteSpec {
+    /// Site name; a trailing `*` makes it a prefix match.
+    site: String,
+    action: FaultAction,
+    prob: f64,
+    limit: Option<u64>,
+    fired: AtomicU64,
+    rng: Mutex<Rng>,
+}
+
+impl SiteSpec {
+    fn matches(&self, site: &str) -> bool {
+        match self.site.strip_suffix('*') {
+            Some(prefix) => site.starts_with(prefix),
+            None => self.site == site,
+        }
+    }
+
+    /// Decide (deterministically) whether this clause fires now.
+    fn fire(&self) -> bool {
+        if let Some(limit) = self.limit {
+            if self.fired.load(Ordering::Relaxed) >= limit {
+                return false;
+            }
+        }
+        let hit = self.prob >= 1.0 || lock_ignore_poison(&self.rng).bool(self.prob);
+        if !hit {
+            return false;
+        }
+        if let Some(limit) = self.limit {
+            // Claim a firing slot; back off if a racing thread took the last.
+            if self.fired.fetch_add(1, Ordering::Relaxed) >= limit {
+                return false;
+            }
+        } else {
+            self.fired.fetch_add(1, Ordering::Relaxed);
+        }
+        true
+    }
+}
+
+/// A parsed, armed fault plan.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    spec: String,
+    sites: Vec<SiteSpec>,
+}
+
+/// Typed parse failure for a `MEC_FAULTS` spec.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseFaultsError(pub String);
+
+impl std::fmt::Display for ParseFaultsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "invalid MEC_FAULTS spec: {} (expected <seed>:<site>=<action>[@<prob>][#<limit>],…)",
+            self.0
+        )
+    }
+}
+
+impl std::error::Error for ParseFaultsError {}
+
+impl FaultPlan {
+    /// Parse the full `<seed>:<spec>` form (the `MEC_FAULTS` value).
+    pub fn parse(value: &str) -> Result<FaultPlan, ParseFaultsError> {
+        let (seed_s, spec) = value
+            .split_once(':')
+            .ok_or_else(|| ParseFaultsError(format!("{value:?}: missing `seed:` prefix")))?;
+        let seed_t = seed_s.trim();
+        let seed = match seed_t.strip_prefix("0x").or_else(|| seed_t.strip_prefix("0X")) {
+            Some(hex) => u64::from_str_radix(hex, 16),
+            None => seed_t.parse::<u64>(),
+        }
+        .map_err(|_| ParseFaultsError(format!("{value:?}: bad seed {seed_t:?}")))?;
+        FaultPlan::from_spec(seed, spec)
+    }
+
+    /// Build a plan from a seed and the clause list (no `seed:` prefix).
+    pub fn from_spec(seed: u64, spec: &str) -> Result<FaultPlan, ParseFaultsError> {
+        let mut sites = Vec::new();
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (site, rest) = clause
+                .split_once('=')
+                .ok_or_else(|| ParseFaultsError(format!("{clause:?}: missing `=`")))?;
+            let site = site.trim();
+            if site.is_empty() {
+                return Err(ParseFaultsError(format!("{clause:?}: empty site")));
+            }
+            let (rest, limit) = match rest.split_once('#') {
+                Some((r, l)) => {
+                    let n = l.trim().parse::<u64>().map_err(|_| {
+                        ParseFaultsError(format!("{clause:?}: bad limit {l:?}"))
+                    })?;
+                    (r, Some(n))
+                }
+                None => (rest, None),
+            };
+            let (action_s, prob) = match rest.split_once('@') {
+                Some((a, p)) => {
+                    let p = p.trim().parse::<f64>().ok().filter(|p| (0.0..=1.0).contains(p));
+                    match p {
+                        Some(p) => (a, p),
+                        None => {
+                            return Err(ParseFaultsError(format!("{clause:?}: bad probability")))
+                        }
+                    }
+                }
+                None => (rest, 1.0),
+            };
+            let action_s = action_s.trim();
+            let action = if action_s == "alloc" {
+                FaultAction::FailAlloc
+            } else if action_s == "panic" {
+                FaultAction::Panic
+            } else if let Some(ms) = action_s.strip_prefix("delay") {
+                let ms = ms.parse::<u64>().map_err(|_| {
+                    ParseFaultsError(format!("{clause:?}: bad delay {ms:?}"))
+                })?;
+                FaultAction::DelayMs(ms)
+            } else {
+                return Err(ParseFaultsError(format!(
+                    "{clause:?}: unknown action {action_s:?}"
+                )));
+            };
+            sites.push(SiteSpec {
+                site: site.to_string(),
+                action,
+                prob,
+                limit,
+                fired: AtomicU64::new(0),
+                rng: Mutex::new(Rng::new(seed ^ fnv1a(site))),
+            });
+        }
+        if sites.is_empty() {
+            return Err(ParseFaultsError(format!("{spec:?}: no clauses")));
+        }
+        Ok(FaultPlan { seed, spec: spec.trim().to_string(), sites })
+    }
+
+    /// The one-line env setting that replays this exact plan.
+    pub fn replay_line(&self) -> String {
+        format!("MEC_FAULTS={:#x}:{}", self.seed, self.spec)
+    }
+
+    /// Total firings so far across every clause.
+    pub fn fired(&self) -> u64 {
+        self.sites.iter().map(|s| s.fired.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// FNV-1a, so each site gets an independent deterministic stream.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+const STATE_UNKNOWN: u8 = 0;
+const STATE_OFF: u8 = 1;
+const STATE_ON: u8 = 2;
+
+/// Fast-path switch: faultpoints read this before touching any lock.
+static STATE: AtomicU8 = AtomicU8::new(STATE_UNKNOWN);
+
+fn active() -> &'static RwLock<Option<std::sync::Arc<FaultPlan>>> {
+    static ACTIVE: OnceLock<RwLock<Option<std::sync::Arc<FaultPlan>>>> = OnceLock::new();
+    ACTIVE.get_or_init(|| RwLock::new(None))
+}
+
+/// Serializes [`ScopedFaults`] guards so concurrent tests can't fight
+/// over the global plan.
+fn scope_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Cold path of [`armed`]: parse `MEC_FAULTS` once.
+#[cold]
+fn init_from_env() -> bool {
+    let on = match std::env::var("MEC_FAULTS") {
+        Ok(v) if !v.trim().is_empty() => match FaultPlan::parse(&v) {
+            Ok(plan) => {
+                let mut g = active().write().unwrap_or_else(|p| p.into_inner());
+                if g.is_none() {
+                    *g = Some(std::sync::Arc::new(plan));
+                }
+                true
+            }
+            Err(e) => {
+                eprintln!("mec: ignoring {e}");
+                false
+            }
+        },
+        _ => false,
+    };
+    // A racing ScopedFaults install wins: only move UNKNOWN.
+    let _ = STATE.compare_exchange(
+        STATE_UNKNOWN,
+        if on { STATE_ON } else { STATE_OFF },
+        Ordering::AcqRel,
+        Ordering::Acquire,
+    );
+    STATE.load(Ordering::Acquire) == STATE_ON
+}
+
+/// Is any fault plan armed? One relaxed load when the answer is no.
+#[inline]
+pub fn armed() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        STATE_OFF => false,
+        STATE_ON => true,
+        _ => init_from_env(),
+    }
+}
+
+/// The armed plan, if any (for replay lines and firing counts).
+pub fn current_plan() -> Option<std::sync::Arc<FaultPlan>> {
+    if !armed() {
+        return None;
+    }
+    active().read().unwrap_or_else(|p| p.into_inner()).clone()
+}
+
+/// Total fault firings under the armed plan (0 when disarmed).
+pub fn fired() -> u64 {
+    current_plan().map(|p| p.fired()).unwrap_or(0)
+}
+
+fn decide(site: &str) -> Option<FaultAction> {
+    let plan = active().read().unwrap_or_else(|p| p.into_inner()).clone()?;
+    for spec in &plan.sites {
+        if spec.matches(site) && spec.fire() {
+            return Some(spec.action);
+        }
+    }
+    None
+}
+
+/// Should an allocation at `site` be made to fail? Only `alloc` clauses
+/// apply here (a `panic` clause at the same site panics instead, so a
+/// mis-targeted spec fails loudly rather than silently doing nothing).
+#[inline]
+pub fn alloc_should_fail(site: &str) -> bool {
+    if !armed() {
+        return false;
+    }
+    match decide(site) {
+        Some(FaultAction::FailAlloc) => true,
+        Some(FaultAction::Panic) => panic!("mec::fault: injected panic at {site}"),
+        Some(FaultAction::DelayMs(ms)) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            false
+        }
+        None => false,
+    }
+}
+
+/// Panic or delay at `site` if an armed clause says so.
+#[inline]
+pub fn check(site: &str) {
+    if !armed() {
+        return;
+    }
+    match decide(site) {
+        Some(FaultAction::Panic) => panic!("mec::fault: injected panic at {site}"),
+        Some(FaultAction::DelayMs(ms)) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms))
+        }
+        Some(FaultAction::FailAlloc) | None => {}
+    }
+}
+
+/// A named fault site.
+///
+/// * `faultpoint!(alloc "site")` → `bool`: should this allocation fail?
+/// * `faultpoint!("site")` → may panic or sleep here, per the armed plan.
+///
+/// Both forms compile to a single relaxed atomic load when no plan is
+/// armed.
+#[macro_export]
+macro_rules! faultpoint {
+    (alloc $site:expr) => {
+        $crate::fault::alloc_should_fail($site)
+    };
+    ($site:expr) => {
+        $crate::fault::check($site)
+    };
+}
+
+// ---------------------------------------------------------------------
+// Panic-layer breadcrumbs: which graph node was executing when a forward
+// panicked. The executor wraps each step in a LayerScope; if the step
+// unwinds, the scope's Drop records the node index for the
+// catch_unwind boundary (coordinator worker) to pick up.
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static CURRENT_LAYER: Cell<Option<usize>> = const { Cell::new(None) };
+    static LAST_PANIC_LAYER: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// RAII marker: "layer `idx` is executing on this thread".
+pub struct LayerScope {
+    prev: Option<usize>,
+}
+
+impl LayerScope {
+    pub fn enter(idx: usize) -> LayerScope {
+        let prev = CURRENT_LAYER.with(|c| c.replace(Some(idx)));
+        LayerScope { prev }
+    }
+}
+
+impl Drop for LayerScope {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            if let Some(idx) = CURRENT_LAYER.with(|c| c.get()) {
+                LAST_PANIC_LAYER.with(|c| c.set(Some(idx)));
+            }
+        }
+        CURRENT_LAYER.with(|c| c.set(self.prev));
+    }
+}
+
+/// The node index recorded by the most recent panicking [`LayerScope`]
+/// on this thread, clearing it. `None` if the panic happened outside
+/// any layer.
+pub fn take_panic_layer() -> Option<usize> {
+    LAST_PANIC_LAYER.with(|c| c.take())
+}
+
+/// Test guard: arm `plan` globally for the guard's lifetime, restoring
+/// the previous state (env plan or disarmed) on drop. Guards serialize
+/// on a global lock so `#[test]`s using faults never interleave.
+pub struct ScopedFaults {
+    prev_plan: Option<std::sync::Arc<FaultPlan>>,
+    prev_state: u8,
+    _scope: MutexGuard<'static, ()>,
+}
+
+impl ScopedFaults {
+    /// Arm a parsed plan.
+    pub fn install(plan: FaultPlan) -> ScopedFaults {
+        let scope = lock_ignore_poison(scope_lock());
+        // Resolve the env state first so `prev_state` is never UNKNOWN.
+        armed();
+        let mut g = active().write().unwrap_or_else(|p| p.into_inner());
+        let prev_plan = g.replace(std::sync::Arc::new(plan));
+        let prev_state = STATE.swap(STATE_ON, Ordering::AcqRel);
+        drop(g);
+        ScopedFaults { prev_plan, prev_state, _scope: scope }
+    }
+
+    /// Arm `spec` under `seed` (panics on a malformed spec — tests).
+    pub fn new(seed: u64, spec: &str) -> ScopedFaults {
+        ScopedFaults::install(FaultPlan::from_spec(seed, spec).expect("valid fault spec"))
+    }
+
+    /// The plan this guard armed.
+    pub fn plan(&self) -> std::sync::Arc<FaultPlan> {
+        active()
+            .read()
+            .unwrap_or_else(|p| p.into_inner())
+            .clone()
+            .expect("ScopedFaults holds a plan")
+    }
+}
+
+impl Drop for ScopedFaults {
+    fn drop(&mut self) {
+        let mut g = active().write().unwrap_or_else(|p| p.into_inner());
+        *g = self.prev_plan.take();
+        STATE.store(self.prev_state, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let p = FaultPlan::parse(
+            "0xbeef:memory.arena.grow=alloc#1,engine.forward=panic@0.25,serve.dispatch=delay3",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 0xbeef);
+        assert_eq!(p.sites.len(), 3);
+        assert_eq!(p.sites[0].action, FaultAction::FailAlloc);
+        assert_eq!(p.sites[0].limit, Some(1));
+        assert_eq!(p.sites[1].action, FaultAction::Panic);
+        assert!((p.sites[1].prob - 0.25).abs() < 1e-12);
+        assert_eq!(p.sites[2].action, FaultAction::DelayMs(3));
+        assert!(p.replay_line().starts_with("MEC_FAULTS=0xbeef:"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in [
+            "no-colon",
+            "12:",
+            "zz:a=alloc",
+            "1:a",
+            "1:=alloc",
+            "1:a=explode",
+            "1:a=alloc@7",
+            "1:a=alloc#x",
+            "1:a=delayy",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn limit_caps_firings() {
+        let _g = ScopedFaults::new(7, "memtest.site=alloc#2");
+        assert!(alloc_should_fail("memtest.site"));
+        assert!(alloc_should_fail("memtest.site"));
+        assert!(!alloc_should_fail("memtest.site"));
+        assert!(!alloc_should_fail("memtest.other"));
+        assert_eq!(fired(), 2);
+    }
+
+    #[test]
+    fn prefix_wildcard_matches() {
+        let _g = ScopedFaults::new(7, "memory.*=alloc");
+        assert!(alloc_should_fail("memory.arena.grow"));
+        assert!(alloc_should_fail("memory.activation.grow"));
+        assert!(!alloc_should_fail("engine.forward"));
+    }
+
+    #[test]
+    fn probability_is_seed_deterministic() {
+        let run = |seed: u64| {
+            let _g = ScopedFaults::new(seed, "p.site=alloc@0.5");
+            (0..64).map(|_| alloc_should_fail("p.site")).collect::<Vec<_>>()
+        };
+        let a = run(42);
+        let b = run(42);
+        let c = run(43);
+        assert_eq!(a, b, "same seed, same firing pattern");
+        assert_ne!(a, c, "different seed, different pattern");
+        assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x), "p=0.5 mixes");
+    }
+
+    #[test]
+    fn injected_panic_fires_and_disarms_on_drop() {
+        {
+            let _g = ScopedFaults::new(1, "boom.site=panic#1");
+            let err =
+                std::panic::catch_unwind(|| check("boom.site")).expect_err("must panic once");
+            let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+            assert!(msg.contains("boom.site"), "payload names the site: {msg}");
+            check("boom.site"); // limit hit: no second panic
+        }
+        check("boom.site"); // disarmed: no panic
+    }
+
+    #[test]
+    fn layer_scope_records_panicking_layer() {
+        let err = std::panic::catch_unwind(|| {
+            let _l = LayerScope::enter(3);
+            panic!("inside layer 3");
+        })
+        .expect_err("panics");
+        drop(err);
+        assert_eq!(take_panic_layer(), Some(3));
+        assert_eq!(take_panic_layer(), None, "take clears");
+        // A clean pass records nothing.
+        {
+            let _l = LayerScope::enter(9);
+        }
+        assert_eq!(take_panic_layer(), None);
+    }
+
+    #[test]
+    fn scoped_faults_nest_and_restore() {
+        assert!(!alloc_should_fail("nest.site"));
+        {
+            let g = ScopedFaults::new(5, "nest.site=alloc");
+            assert!(alloc_should_fail("nest.site"));
+            assert!(g.plan().fired() >= 1);
+        }
+        assert!(!alloc_should_fail("nest.site"));
+    }
+}

@@ -49,6 +49,7 @@ pub mod bench;
 pub mod conv;
 pub mod coordinator;
 pub mod engine;
+pub mod fault;
 pub mod fft;
 pub mod gemm;
 pub mod memory;
@@ -60,5 +61,5 @@ pub mod tensor;
 pub mod threadpool;
 pub mod util;
 
-pub use engine::{Engine, EngineBuilder, EngineError, Prediction, Session};
+pub use engine::{DegradedLayer, Engine, EngineBuilder, EngineError, Prediction, Session};
 pub use tensor::{ConvShape, Kernel, KernelShape, Nhwc, Tensor};

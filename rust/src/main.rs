@@ -284,6 +284,11 @@ fn cmd_serve(args: &mut Args) {
         "latency SLO in ms (deadline per request; \"none\" = best-effort)",
     );
     let queue_depth = args.opt_usize("queue-depth", 1024, "bounded request-queue capacity");
+    let health_ms = args.opt_usize(
+        "health-interval",
+        0,
+        "print a fault-domain health snapshot every N ms while serving (0 = off)",
+    );
     let budget = budget_arg(args, "conv workspace budget");
     let threads = args.opt_usize(
         "threads",
@@ -356,30 +361,49 @@ fn cmd_serve(args: &mut Args) {
         eprintln!("{e}");
         std::process::exit(2);
     });
+    if let Some(plan) = mec::fault::current_plan() {
+        println!("fault injection armed — replay with {}", plan.replay_line());
+    }
     let client = server.client();
     let mut rng = Rng::new(7);
-    let mut pending = Vec::new();
+    let mut served = 0usize;
     let mut shed = 0usize;
-    for _ in 0..requests {
-        let mut sample = vec![0.0f32; h * w * c];
-        rng.fill_uniform(&mut sample, 0.0, 1.0);
-        match client.submit(sample) {
-            Ok(rx) => pending.push(rx),
-            Err(mec::coordinator::SubmitError::Shed(reason)) => {
-                shed += 1;
-                mec::log_warn!("request shed: {reason}");
-            }
-            Err(e) => mec::log_warn!("request rejected: {e}"),
+    // The health printer borrows the server while the main thread
+    // submits and drains, so it runs in a scope joined before shutdown.
+    std::thread::scope(|s| {
+        let stop = &std::sync::atomic::AtomicBool::new(false);
+        let server = &server;
+        if health_ms > 0 {
+            s.spawn(move || {
+                while !stop.load(std::sync::atomic::Ordering::Acquire) {
+                    std::thread::sleep(Duration::from_millis(health_ms as u64));
+                    println!("health: {}", server.health());
+                }
+            });
         }
-    }
-    let mut served = 0;
-    for rx in pending {
-        if let Ok(resp) = rx.recv() {
-            if resp.result.is_ok() {
-                served += 1;
+        let mut pending = Vec::new();
+        for _ in 0..requests {
+            let mut sample = vec![0.0f32; h * w * c];
+            rng.fill_uniform(&mut sample, 0.0, 1.0);
+            match client.submit(sample) {
+                Ok(rx) => pending.push(rx),
+                Err(mec::coordinator::SubmitError::Shed(reason)) => {
+                    shed += 1;
+                    mec::log_warn!("request shed: {reason}");
+                }
+                Err(e) => mec::log_warn!("request rejected: {e}"),
             }
         }
-    }
+        for rx in pending {
+            if let Ok(resp) = rx.recv() {
+                if resp.result.is_ok() {
+                    served += 1;
+                }
+            }
+        }
+        stop.store(true, std::sync::atomic::Ordering::Release);
+    });
+    println!("health: {}", server.health());
     let metrics = server.shutdown();
     println!("\nserved {served}/{requests} (shed at submit: {shed})");
     println!("{}", metrics.snapshot().render());

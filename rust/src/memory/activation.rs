@@ -88,6 +88,48 @@ impl ActivationArena {
         }
     }
 
+    /// Fallible [`ensure`](Self::ensure): a refused growth (real, or
+    /// injected at the `memory.activation.grow` fault site) comes back
+    /// as a typed [`AllocError`](super::AllocError) with the arena
+    /// unchanged. Unlike workspace, activation demand does not shrink
+    /// under plan degradation — a refusal here fails the one request,
+    /// typed, at the session boundary.
+    pub fn try_ensure(&mut self, slot: usize, elems: usize) -> Result<(), super::AllocError> {
+        if elems > 0 && crate::faultpoint!(alloc "memory.activation.grow") {
+            return Err(super::AllocError {
+                bytes: elems.saturating_sub(self.caps.get(slot).copied().unwrap_or(0)) * 4,
+                site: "memory.activation.grow",
+            });
+        }
+        while self.slots.len() <= slot {
+            self.slots.push(Vec::new());
+            self.caps.push(0);
+            #[cfg(debug_assertions)]
+            self.taken.push(false);
+        }
+        if elems > self.caps[slot] {
+            let grow = elems - self.caps[slot];
+            let want = elems - self.slots[slot].len();
+            if self.slots[slot].try_reserve_exact(want).is_err() {
+                return Err(super::AllocError {
+                    bytes: grow * 4,
+                    site: "memory.activation.grow",
+                });
+            }
+            tracker::track_alloc(grow * 4);
+            self.caps[slot] = elems;
+            #[cfg(debug_assertions)]
+            {
+                debug_assert!(
+                    !self.taken[slot],
+                    "ActivationArena::try_ensure({slot}): slot is currently taken"
+                );
+                self.slots[slot].resize(elems, super::poison());
+            }
+        }
+        Ok(())
+    }
+
     /// Move slot `slot`'s buffer out (zero-copy). Must be paired with
     /// [`ActivationArena::put`]; the slot accounts for its capacity even
     /// while taken. Debug builds panic on a double-take — the symptom of

@@ -11,6 +11,7 @@
 //! Restricted to `T: Copy` element types (`f32`, `i16`): no drop glue, so
 //! truncation and reallocation are plain memcpys.
 
+use super::AllocError;
 use std::alloc::{alloc, dealloc, handle_alloc_error, Layout};
 use std::fmt;
 use std::ops::{Deref, DerefMut};
@@ -72,15 +73,27 @@ impl<T: Copy> AlignedVec<T> {
 
     /// Grow the allocation to hold at least `needed` elements, copying
     /// the live prefix. Geometric growth so repeated small `resize`s
-    /// stay amortized-O(1), like `Vec`.
+    /// stay amortized-O(1), like `Vec`. Aborts on allocation failure
+    /// (the infallible path); [`AlignedVec::try_grow`] is the fallible
+    /// twin.
     fn grow(&mut self, needed: usize) {
+        if self.try_grow(needed).is_err() {
+            handle_alloc_error(Self::layout(needed.max(self.cap * 2).max(8)));
+        }
+    }
+
+    /// Fallible [`grow`](Self::grow): identical growth recipe, but a
+    /// refused allocation comes back as a typed [`AllocError`] with the
+    /// vector untouched, instead of aborting the process.
+    pub fn try_grow(&mut self, needed: usize) -> Result<(), AllocError> {
         let new_cap = needed.max(self.cap * 2).max(8);
         let layout = Self::layout(new_cap);
-        // SAFETY: layout has non-zero size — new_cap >= 8 and `resize`
-        // short-circuits zero-sized element types before calling grow.
+        // SAFETY: layout has non-zero size — new_cap >= 8 and
+        // `resize`/`try_resize` short-circuit zero-sized element types
+        // before calling grow.
         let new_ptr = unsafe { alloc(layout) as *mut T };
         let Some(new_nn) = NonNull::new(new_ptr) else {
-            handle_alloc_error(layout);
+            return Err(AllocError { bytes: layout.size(), site: "memory.aligned.alloc" });
         };
         if self.cap > 0 {
             // SAFETY: both regions are valid for `self.len` elements and
@@ -92,6 +105,17 @@ impl<T: Copy> AlignedVec<T> {
         }
         self.ptr = new_nn;
         self.cap = new_cap;
+        Ok(())
+    }
+
+    /// Fallible [`resize`](Self::resize): on `Err` the vector is
+    /// unchanged (length and contents intact).
+    pub fn try_resize(&mut self, new_len: usize, value: T) -> Result<(), AllocError> {
+        if std::mem::size_of::<T>() > 0 && new_len > self.cap {
+            self.try_grow(new_len)?;
+        }
+        self.resize(new_len, value);
+        Ok(())
     }
 
     /// Set the length to `new_len`, filling any newly exposed tail with

@@ -140,6 +140,31 @@ impl Arena {
         );
     }
 
+    /// Fallible [`reserve`](Self::reserve): a refused growth (real, or
+    /// injected at the `memory.arena.grow` fault site) comes back as a
+    /// typed [`AllocError`](super::AllocError) with the arena unchanged,
+    /// so the engine can degrade the plan instead of aborting. A
+    /// zero-element request never fails: the zero-workspace algorithm
+    /// family is immune by construction, which is what makes it the
+    /// bottom rung of the degradation ladder.
+    pub fn try_reserve(&mut self, elems: usize) -> Result<(), super::AllocError> {
+        if elems > 0 && crate::faultpoint!(alloc "memory.arena.grow") {
+            return Err(super::AllocError {
+                bytes: elems.saturating_sub(self.buf.len()) * 4,
+                site: "memory.arena.grow",
+            });
+        }
+        if elems > self.buf.len() {
+            let grow = elems - self.buf.len();
+            self.buf.try_resize(elems, 0.0).map_err(|e| super::AllocError {
+                site: "memory.arena.grow",
+                ..e
+            })?;
+            tracker::track_alloc(grow * 4);
+        }
+        Ok(())
+    }
+
     /// Borrow the first `elems` floats. Contents are stale (whatever the
     /// previous frame left) — plans fully overwrite what they read, which
     /// is why this is not zero-filled. Debug builds poison the slice with

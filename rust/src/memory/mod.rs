@@ -52,6 +52,31 @@ pub(crate) fn poison_fill(s: &mut [f32]) {
     }
 }
 
+/// A refused allocation, reported as a value instead of an abort.
+///
+/// Carried up from the `try_*` growth paths ([`Workspace::try_reserve`],
+/// [`Arena::try_reserve`], [`ActivationArena::try_ensure`],
+/// [`AlignedVec::try_grow`]) so the engine can react — degrade the plan
+/// to the zero-workspace family, fail one request with a typed error —
+/// rather than taking the whole process down. `site` names the fault
+/// domain that refused (also the [`faultpoint!`](crate::faultpoint)
+/// site that can inject the refusal deterministically).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllocError {
+    /// Bytes the failed request would have added.
+    pub bytes: usize,
+    /// The named growth site that refused.
+    pub site: &'static str,
+}
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "allocation of {} bytes refused at {}", self.bytes, self.site)
+    }
+}
+
+impl std::error::Error for AllocError {}
+
 /// A tracked scratch buffer of `f32`s. Allocation and release are recorded
 /// in the global [`tracker`]; the buffer is reusable across calls (the
 /// serving hot path allocates once per worker, then reuses). Storage is
@@ -90,6 +115,29 @@ impl Workspace {
             self.buf.is_empty() || self.buf.as_ptr() as usize % ALIGN == 0,
             "Workspace buffer lost {ALIGN}-byte alignment"
         );
+    }
+
+    /// Fallible [`reserve`](Self::reserve): a refused growth (real, or
+    /// injected at the `memory.workspace.grow` fault site) comes back as
+    /// a typed [`AllocError`] with the workspace unchanged. A request
+    /// for zero elements can never fail — zero-workspace plans are
+    /// immune by construction.
+    pub fn try_reserve(&mut self, elems: usize) -> Result<(), AllocError> {
+        if elems > 0 && crate::faultpoint!(alloc "memory.workspace.grow") {
+            return Err(AllocError {
+                bytes: elems.saturating_sub(self.buf.len()) * 4,
+                site: "memory.workspace.grow",
+            });
+        }
+        if elems > self.buf.len() {
+            let grow = elems - self.buf.len();
+            self.buf.try_resize(elems, 0.0).map_err(|e| AllocError {
+                site: "memory.workspace.grow",
+                ..e
+            })?;
+            tracker::track_alloc(grow * 4);
+        }
+        Ok(())
     }
 
     /// Borrow the first `elems` floats (must be reserved), zeroed.

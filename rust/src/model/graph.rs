@@ -29,6 +29,7 @@ use crate::planner::Planner;
 use crate::tensor::quant::QParams;
 use crate::tensor::{ConvShape, Kernel, Nhwc, Precision, Tensor};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 
 /// A CNN over a compiled [`Graph`] with planned convolution algorithms
@@ -42,7 +43,11 @@ pub struct Model {
     /// The compiled pass-pipeline output: step list + activation slots.
     exec: ExecGraph,
     /// Chosen conv algorithm per node id (None for non-conv nodes).
-    plans: Vec<Option<AlgoKind>>,
+    /// Behind an `RwLock` so the degradation ladder
+    /// ([`Model::replan_with`]) can swap algorithm choices on a shared
+    /// (`Arc`ed) model while sessions keep serving; the steady-state
+    /// forward never touches it (plans resolve through the session memo).
+    plans: RwLock<Vec<Option<AlgoKind>>>,
     /// Prepared plans keyed by (node id, exact conv geometry, build
     /// precision). The planned batch size is populated eagerly by
     /// [`Model::plan`]; other batch sizes (dynamic batching remainders)
@@ -56,8 +61,9 @@ pub struct Model {
     /// per-batch-size plan above.
     prepack_cache: RwLock<HashMap<(NodeId, AlgoKind, Precision), Arc<dyn KernelPrepack>>>,
     /// Shared-arena requirement at the planned batch: max over planned
-    /// conv nodes of `ConvPlan::workspace_elems`.
-    planned_ws_elems: usize,
+    /// conv nodes of `ConvPlan::workspace_elems`. Atomic so
+    /// [`Model::replan_with`] can shrink it on a shared model.
+    planned_ws_elems: AtomicUsize,
     /// The context [`Model::plan`] ran under. Lazily-built plans (other
     /// batch sizes) reuse it, so every conv node executes under ONE
     /// consistent context regardless of batch size; `forward`'s ctx then
@@ -103,6 +109,14 @@ impl PlanMemo {
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
+
+    /// Drop every memoized binding. Sessions call this when the engine's
+    /// degradation epoch moves: the entries point at superseded plans,
+    /// and the next forward re-resolves through the model's re-planned
+    /// cache (then memoizes again — one locked pass, lock-free after).
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
 }
 
 impl Model {
@@ -117,7 +131,7 @@ impl Model {
     /// liveness pass fix the execution schedule and activation slots).
     pub fn from_graph(graph: Graph) -> Model {
         let exec = graph.compile();
-        let plans = vec![None; graph.node_count()];
+        let plans = RwLock::new(vec![None; graph.node_count()]);
         Model {
             name: graph.name.clone(),
             input_hwc: graph.input_hwc,
@@ -126,7 +140,7 @@ impl Model {
             plans,
             plan_cache: RwLock::new(HashMap::new()),
             prepack_cache: RwLock::new(HashMap::new()),
-            planned_ws_elems: 0,
+            planned_ws_elems: AtomicUsize::new(0),
             planned_ctx: None,
             act_qparams: HashMap::new(),
         }
@@ -200,24 +214,45 @@ impl Model {
         &mut self,
         ctx: &ConvContext,
         batch: usize,
-        mut choose: impl FnMut(NodeId, &ConvShape) -> AlgoKind,
+        choose: impl FnMut(NodeId, &ConvShape) -> AlgoKind,
     ) {
+        self.planned_ctx = Some(ctx.clone());
+        self.replan_with(batch, choose);
+    }
+
+    /// Re-run the prepack/plan/arena-sizing round through a **shared**
+    /// reference — the degradation ladder's entry point
+    /// ([`Engine::degrade`](crate::engine::Engine::degrade) re-plans the
+    /// conv nodes of an `Arc`-shared model onto the zero-workspace
+    /// family while sessions keep serving). Plans build under the
+    /// context of the original planning round ([`Model::plan_with`] must
+    /// have run; falls back to the default context otherwise, matching
+    /// [`Model::plan_for`]). Caches are cleared first, so in-flight
+    /// forwards resolving a node mid-swap lazily rebuild it under the
+    /// new choice; sessions holding memoized plans stay self-consistent
+    /// until they observe the engine's degrade epoch and drop the memo.
+    /// Returns the new shared-arena requirement (max over conv nodes).
+    pub fn replan_with(
+        &self,
+        batch: usize,
+        mut choose: impl FnMut(NodeId, &ConvShape) -> AlgoKind,
+    ) -> usize {
+        let ctx = self.planned_ctx.clone().unwrap_or_default();
         self.plan_cache.write().unwrap().clear();
         self.prepack_cache.write().unwrap().clear();
-        self.planned_ws_elems = 0;
-        self.planned_ctx = Some(ctx.clone());
+        self.planned_ws_elems.store(0, Ordering::Release);
         // Reset stale choices (e.g. a previous pin) so the summary only
         // ever reports what this planning round actually chose.
-        self.plans = vec![None; self.graph.node_count()];
+        let mut new_plans = vec![None; self.graph.node_count()];
         let mut max_ws = 0usize;
         let mut prepared: Vec<((NodeId, ConvShape, Precision), Arc<dyn ConvPlan>)> = Vec::new();
         let mut prepacks: Vec<((NodeId, AlgoKind, Precision), Arc<dyn KernelPrepack>)> = Vec::new();
         for (i, cs) in self.conv_shapes(batch) {
             let chosen = choose(i, &cs);
-            self.plans[i] = Some(chosen);
+            new_plans[i] = Some(chosen);
             let kernel = self.conv_kernel(i);
             let algo_impl = chosen.build();
-            let node_ctx = self.node_ctx(i, ctx);
+            let node_ctx = self.node_ctx(i, &ctx);
             // One batch-independent prepack per node; every batch size
             // this node ever plans for shares it.
             let pk = algo_impl.prepack(&node_ctx, &cs, kernel);
@@ -227,9 +262,11 @@ impl Model {
             prepared.push(((i, cs, ctx.precision), conv_plan));
             prepacks.push(((i, chosen, ctx.precision), pk));
         }
+        *self.plans.write().unwrap() = new_plans;
         self.plan_cache.write().unwrap().extend(prepared);
         self.prepack_cache.write().unwrap().extend(prepacks);
-        self.planned_ws_elems = max_ws;
+        self.planned_ws_elems.store(max_ws, Ordering::Release);
+        max_ws
     }
 
     /// Pin a single algorithm for all compiled (live) conv nodes
@@ -238,14 +275,15 @@ impl Model {
     pub fn pin_algo(&mut self, algo: AlgoKind) {
         self.plan_cache.write().unwrap().clear();
         self.prepack_cache.write().unwrap().clear();
-        self.planned_ws_elems = 0;
+        self.planned_ws_elems.store(0, Ordering::Release);
         self.planned_ctx = None;
-        self.plans = vec![None; self.graph.node_count()];
+        let mut plans = vec![None; self.graph.node_count()];
         for step in self.exec.steps() {
             if matches!(self.graph.node(step.node).op, Op::Layer(Layer::Conv { .. })) {
-                self.plans[step.node] = Some(algo);
+                plans[step.node] = Some(algo);
             }
         }
+        *self.plans.write().unwrap() = plans;
     }
 
     /// Install calibrated per-node activation scales (q16 serving): the
@@ -275,6 +313,8 @@ impl Model {
     /// Chosen algorithm per conv node (for reports).
     pub fn plan_summary(&self) -> Vec<(NodeId, AlgoKind)> {
         self.plans
+            .read()
+            .unwrap()
             .iter()
             .enumerate()
             .filter_map(|(i, p)| p.map(|a| (i, a)))
@@ -296,12 +336,12 @@ impl Model {
     /// Shared-arena floats required at the planned batch size (0 if
     /// [`Model::plan`] has not run — the arena then grows on demand).
     pub fn planned_workspace_elems(&self) -> usize {
-        self.planned_ws_elems
+        self.planned_ws_elems.load(Ordering::Acquire)
     }
 
     /// Same in bytes.
     pub fn planned_workspace_bytes(&self) -> usize {
-        self.planned_ws_elems * std::mem::size_of::<f32>()
+        self.planned_workspace_elems() * std::mem::size_of::<f32>()
     }
 
     /// An [`Arena`] pre-sized for this model's planned conv nodes — what
@@ -309,7 +349,7 @@ impl Model {
     /// of a forward pass equal the max (not the sum) of per-node
     /// workspaces.
     pub fn sized_arena(&self) -> Arena {
-        Arena::with_capacity(self.planned_ws_elems)
+        Arena::with_capacity(self.planned_workspace_elems())
     }
 
     /// Activation-arena floats the liveness plan needs at `batch`
@@ -372,7 +412,7 @@ impl Model {
         if let Some(p) = self.plan_cache.read().unwrap().get(&key) {
             return Arc::clone(p);
         }
-        let algo = self.plans[idx].unwrap_or(AlgoKind::Mec);
+        let algo = self.plans.read().unwrap()[idx].unwrap_or(AlgoKind::Mec);
         let algo_impl = algo.build();
         let node_ctx = self.node_ctx(idx, build_ctx);
         let pk_key = (idx, algo, build_ctx.precision);

@@ -505,6 +505,12 @@ impl ExecGraph {
             acts.ensure(i, elems * n);
         }
         for step in &self.steps {
+            // Breadcrumb for panic containment: if this step unwinds
+            // (kernel bug, or the `engine.forward` fault site below),
+            // the scope's Drop records the node index so the serving
+            // boundary can report WHICH layer died in its typed error.
+            let _layer = crate::fault::LayerScope::enter(step.node);
+            crate::faultpoint!("engine.forward");
             self.run_step(step, graph, ctx, batch, ws, acts, resolve, &mut observe, n);
         }
         match self.output {

@@ -112,6 +112,41 @@ fn loom_worker_panic_is_delivered_to_the_submitter() {
 }
 
 #[test]
+fn loom_panicking_job_leaves_the_dispatch_path_pooled() {
+    // Panic-then-reuse, across every interleaving: depending on which
+    // thread claims chunk 0 first, the panic is raised on the submitter
+    // (the `catch_unwind` around its own chunks) or on the worker (the
+    // flag re-raised after the barrier) — both re-raise paths must leave
+    // the submit mutex released and unpoisoned. The model mutex does not
+    // poison, which is exactly why the historical wedge (re-raising
+    // while still holding the submit guard, poisoning the std mutex)
+    // could never surface here; the dispatch counter closes that gap by
+    // asserting the next job is *published*, not merely correct.
+    model(|| {
+        let pool = Pool::new(1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(2, 2, &|_, i| {
+                if i == 0 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "the panic must propagate exactly once");
+        let before = pool.jobs_dispatched();
+        let ok = AtomicUsize::new(0);
+        pool.run(2, 2, &|_, _| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 2);
+        assert_eq!(
+            pool.jobs_dispatched(),
+            before + 1,
+            "the job after a panic must publish to the workers, not run inline"
+        );
+    });
+}
+
+#[test]
 fn loom_shutdown_joins_every_worker() {
     model(|| {
         let pool = Pool::new(2);

@@ -145,6 +145,24 @@ pub struct Pool {
     submit: Mutex<()>,
     workers: usize,
     spawned: AtomicUsize,
+    /// Jobs actually published to the workers (the inline fallbacks are
+    /// not counted) — lets tests prove a loop went pooled rather than
+    /// silently degrading to the inline path.
+    dispatched: AtomicU64,
+}
+
+/// How a pooled job ended, carried *out* of the submit-guard scope so
+/// the re-raise in [`Pool::run`] happens with the dispatch mutex
+/// already released — re-raising under the guard would poison it and
+/// permanently (and silently) wedge every later loop onto the inline
+/// fallback path.
+enum JobOutcome {
+    Completed,
+    /// The submitting thread's own chunks panicked; payload preserved.
+    SubmitterPanicked(Box<dyn std::any::Any + Send>),
+    /// A pool worker's chunks panicked (flagged, payload stays on the
+    /// worker side).
+    WorkerPanicked,
 }
 
 impl Pool {
@@ -172,6 +190,7 @@ impl Pool {
             submit: Mutex::new(()),
             workers,
             spawned: AtomicUsize::new(0),
+            dispatched: AtomicU64::new(0),
         };
         let mut handles = pool.handles.lock().unwrap();
         for id in 0..workers {
@@ -208,6 +227,14 @@ impl Pool {
         self.shared.live.load(Ordering::Acquire)
     }
 
+    /// Jobs published to the workers so far (inline fallbacks excluded).
+    /// The panic-recovery regression test asserts this keeps advancing
+    /// after a panicking job — i.e. the pool really recovered instead of
+    /// silently serving every later loop inline.
+    pub fn jobs_dispatched(&self) -> u64 {
+        self.dispatched.load(Ordering::Acquire)
+    }
+
     /// Run `body(worker_slot, i)` for every `i in 0..n` using up to
     /// `threads` participants (the calling thread is slot 0). Falls back
     /// to an inline loop when the pool is already running a job — which
@@ -222,63 +249,87 @@ impl Pool {
             }
             return;
         }
-        let Ok(_submit) = self.submit.try_lock() else {
-            for i in 0..n {
-                body(0, i);
+        // The whole dispatch runs inside this block so the submit guard
+        // is released before any panic is re-raised below; the outcome
+        // carries the failure across the guard's scope.
+        let outcome = {
+            let Ok(_submit) = self.submit.try_lock() else {
+                for i in 0..n {
+                    body(0, i);
+                }
+                return;
+            };
+            let next = AtomicUsize::new(0);
+            let slots = AtomicUsize::new(1);
+            // Chunk size balances scheduling overhead vs. load balance; the
+            // conv loops have fairly uniform bodies so a modest chunk works.
+            let chunk = (n / (threads * 4)).max(1);
+            let desc = JobDesc {
+                // SAFETY: lifetime erasure is sound because `CloseGuard`
+                // below keeps this frame alive until every registered worker
+                // has deregistered — no worker can hold the erased reference
+                // past this function's return.
+                func: unsafe {
+                    std::mem::transmute::<
+                        &(dyn Fn(usize, usize) + Sync),
+                        &'static (dyn Fn(usize, usize) + Sync),
+                    >(body)
+                },
+                next: &next,
+                slots: &slots,
+                n,
+                chunk,
+                threads,
+            };
+            // A stale flag can survive an aborted previous job; clear it
+            // so this job cannot be blamed for it.
+            self.shared.panicked.store(false, Ordering::Release);
+            {
+                let mut st = self.shared.state.lock().unwrap();
+                st.epoch += 1;
+                st.job = Some(desc);
+                self.shared.epoch.store(st.epoch, Ordering::Release);
             }
-            return;
-        };
-        let next = AtomicUsize::new(0);
-        let slots = AtomicUsize::new(1);
-        // Chunk size balances scheduling overhead vs. load balance; the
-        // conv loops have fairly uniform bodies so a modest chunk works.
-        let chunk = (n / (threads * 4)).max(1);
-        let desc = JobDesc {
-            // SAFETY: lifetime erasure is sound because `CloseGuard`
-            // below keeps this frame alive until every registered worker
-            // has deregistered — no worker can hold the erased reference
-            // past this function's return.
-            func: unsafe {
-                std::mem::transmute::<
-                    &(dyn Fn(usize, usize) + Sync),
-                    &'static (dyn Fn(usize, usize) + Sync),
-                >(body)
-            },
-            next: &next,
-            slots: &slots,
-            n,
-            chunk,
-            threads,
-        };
-        // A stale flag can survive a submitter-side panic in a previous
-        // job; clear it so this job cannot be blamed for it.
-        self.shared.panicked.store(false, Ordering::Release);
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            st.epoch += 1;
-            st.job = Some(desc);
-            self.shared.epoch.store(st.epoch, Ordering::Release);
-        }
-        // Wake only as many parked workers as the job can seat (the
-        // submitter is participant 0). Spinning workers join on their
-        // own via the epoch ticker; latecomers find the slots taken and
-        // skip without registering, so a budget-capped job on a big
-        // pool never pays wake-ups or barrier waits for idle workers.
-        let extra = threads - 1;
-        if extra >= self.workers {
-            self.shared.work_cv.notify_all();
-        } else {
-            for _ in 0..extra {
-                self.shared.work_cv.notify_one();
+            self.dispatched.fetch_add(1, Ordering::AcqRel);
+            // Wake only as many parked workers as the job can seat (the
+            // submitter is participant 0). Spinning workers join on their
+            // own via the epoch ticker; latecomers find the slots taken and
+            // skip without registering, so a budget-capped job on a big
+            // pool never pays wake-ups or barrier waits for idle workers.
+            let extra = threads - 1;
+            if extra >= self.workers {
+                self.shared.work_cv.notify_all();
+            } else {
+                for _ in 0..extra {
+                    self.shared.work_cv.notify_one();
+                }
             }
-        }
-        // Close the job and drain stragglers even if `body` panics on
-        // this thread — workers may still hold the erased borrow.
-        let guard = CloseGuard { shared: &self.shared };
-        run_chunks(&next, n, chunk, 0, body);
-        drop(guard);
-        if self.shared.panicked.swap(false, Ordering::AcqRel) {
-            panic!("mec::threadpool: a pool worker panicked inside parallel_for");
+            // Close the job and drain stragglers even if `body` panics on
+            // this thread — workers may still hold the erased borrow. The
+            // submitter's own chunks are run under `catch_unwind` for the
+            // same reason the re-raise is deferred: unwinding through the
+            // submit guard would poison it.
+            let guard = CloseGuard { shared: &self.shared };
+            let mine = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run_chunks(&next, n, chunk, 0, body);
+            }));
+            drop(guard);
+            let theirs = self.shared.panicked.swap(false, Ordering::AcqRel);
+            match mine {
+                Err(payload) => JobOutcome::SubmitterPanicked(payload),
+                Ok(()) if theirs => JobOutcome::WorkerPanicked,
+                Ok(()) => JobOutcome::Completed,
+            }
+        };
+        match outcome {
+            JobOutcome::Completed => {}
+            // Propagate exactly one panic per failed job, with the pool
+            // fully reusable: the next `run` takes the (unpoisoned)
+            // submit lock and dispatches to the workers again.
+            JobOutcome::SubmitterPanicked(payload) => std::panic::resume_unwind(payload),
+            JobOutcome::WorkerPanicked => {
+                panic!("mec::threadpool: a pool worker panicked inside parallel_for")
+            }
         }
     }
 
@@ -904,6 +955,59 @@ mod tests {
             hits.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn panicking_job_does_not_wedge_the_pool_onto_the_inline_path() {
+        // Regression: `Pool::run` used to re-raise a worker panic while
+        // still holding the `submit` mutex guard, poisoning it; every
+        // later `try_lock` then failed and every loop silently fell back
+        // to the inline path — results stayed correct, so only a
+        // dispatch counter can catch it.
+        let par = Parallelism::new(4);
+        let pool = par.pool().unwrap();
+        par.parallel_for(1000, |_| {});
+        let base = pool.jobs_dispatched();
+        assert!(base >= 1, "warm-up loop must dispatch to the pool");
+        // Exactly one panic propagates, through the grain-aware entry
+        // point the conv layers use.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            par.parallel_for_macs(1000, 1 << 20, |i| {
+                if i == 500 {
+                    panic!("injected fault");
+                }
+            });
+        }));
+        assert!(result.is_err(), "the injected panic must propagate");
+        // The next submit completes normally AND goes to the workers.
+        let hits = AtomicUsize::new(0);
+        par.parallel_for(1000, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+        assert!(
+            pool.jobs_dispatched() >= base + 2,
+            "post-panic loops must be pooled again (dispatched {} vs base {base}), \
+             not silent inline fallbacks",
+            pool.jobs_dispatched()
+        );
+        assert_eq!(pool.threads_spawned(), 3, "recovery must not respawn workers");
+        // Submitter-slot panics (index 0 always runs on the caller's
+        // first chunk grab unless a worker raced it) take the
+        // catch_unwind path; either way the pool must stay pooled.
+        for _ in 0..4 {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                par.parallel_for(1000, |i| {
+                    if i == 0 {
+                        panic!("early fault");
+                    }
+                });
+            }));
+            assert!(r.is_err());
+        }
+        let before = pool.jobs_dispatched();
+        par.parallel_for(1000, |_| {});
+        assert!(pool.jobs_dispatched() > before);
     }
 
     #[test]

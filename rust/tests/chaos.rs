@@ -1,0 +1,451 @@
+//! Chaos suite: the fault-domain contract under seeded fault injection.
+//!
+//! Every test arms a deterministic [`ScopedFaults`] plan (the in-process
+//! equivalent of `MEC_FAULTS=<seed>:<spec>`) and asserts the graceful-
+//! degradation guarantees end to end:
+//!
+//! * **Conservation** — `requests == responses + rejected` holds no
+//!   matter what faults fire; a panicked request still gets a typed
+//!   reply and counts as a response.
+//! * **Containment** — a forward-pass panic costs exactly its batch:
+//!   typed [`ServeError::Panicked`] replies (with the layer attributed),
+//!   then the worker rebuilds its session and keeps serving.
+//! * **Supervision** — a worker that dies outside containment is
+//!   respawned by the supervisor within the backoff bound, visible in
+//!   [`Server::health`].
+//! * **Degradation ladder** — a refused workspace reservation re-plans
+//!   the engine onto the zero-workspace family; the degraded forward is
+//!   bitwise-identical to a fresh zero-budget build, and the steady
+//!   state afterwards is back to zero tracked allocation and zero OS
+//!   thread spawns *between* faults.
+//!
+//! # Reproducing a failure
+//!
+//! The randomized soak derives its plan from `MEC_CHAOS_SEED` and prints
+//! a ready-to-paste `MEC_FAULTS=…` replay line on failure — the same
+//! discipline as `MEC_FUZZ_SEED` in the differential oracle.
+//!
+//! Tracker-sensitive work serializes on the tracker's global lock (via
+//! `measure_peak`), *then* arms faults — every test takes the locks in
+//! that order, so parallel test threads neither perturb the zero-alloc
+//! assertions nor deadlock on the two global locks.
+
+use mec::conv::AlgoKind;
+use mec::coordinator::{RetryPolicy, ServeError, Server, ServerConfig, SubmitError};
+use mec::engine::Engine;
+use mec::fault::ScopedFaults;
+use mec::memory::{self, measure_peak, Budget};
+use mec::model::{Layer, Model};
+use mec::serving::ShedReason;
+use mec::tensor::{Kernel, KernelShape, Nhwc, Tensor};
+use mec::util::Rng;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Run `f` holding the tracker's global lock, so engine-building tests
+/// in this binary never perturb each other's tracked-allocation reads.
+/// Lock order is fixed: tracker first, [`ScopedFaults`] second.
+fn with_tracker_lock<T>(f: impl FnOnce() -> T) -> T {
+    measure_peak(f).0
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    match std::env::var(name) {
+        Ok(v) => {
+            let t = v.trim();
+            match t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+                Some(hex) => u64::from_str_radix(hex, 16).unwrap_or(default),
+                None => t.parse().unwrap_or(default),
+            }
+        }
+        Err(_) => default,
+    }
+}
+
+/// 6×6×1 conv model for the serving tests (36-float samples).
+fn serve_model() -> Model {
+    let mut rng = Rng::new(0xc405);
+    Model::new(
+        "chaos-serve",
+        (6, 6, 1),
+        vec![
+            Layer::Conv {
+                kernel: Kernel::random(KernelShape::new(3, 3, 1, 2), &mut rng),
+                bias: vec![0.0; 2],
+                sh: 1,
+                sw: 1,
+                ph: 1,
+                pw: 1,
+            },
+            Layer::Relu,
+        ],
+    )
+}
+
+/// 8×8×2 conv model for the degradation-ladder tests (MEC plans a real
+/// workspace here, so there is something to degrade away from).
+fn ladder_model() -> Model {
+    let mut rng = Rng::new(0x1adde7);
+    Model::new(
+        "chaos-ladder",
+        (8, 8, 2),
+        vec![
+            Layer::Conv {
+                kernel: Kernel::random(KernelShape::new(3, 3, 2, 4), &mut rng),
+                bias: vec![0.1; 4],
+                sh: 1,
+                sw: 1,
+                ph: 1,
+                pw: 1,
+            },
+            Layer::Relu,
+        ],
+    )
+}
+
+fn serve_engine() -> Arc<Engine> {
+    Arc::new(
+        Engine::builder(serve_model())
+            .algo_override(0, AlgoKind::Mec)
+            .pin_batch_sizes(&[1, 2, 4, 8])
+            .build()
+            .expect("serve model builds"),
+    )
+}
+
+/// Conservation invariant: every request the server ever saw is either
+/// a delivered response or a counted rejection — nothing vanishes.
+fn assert_conservation(metrics: &mec::coordinator::Metrics, context: &str) {
+    let requests = metrics.requests.load(Ordering::Relaxed);
+    let responses = metrics.responses.load(Ordering::Relaxed);
+    let rejected = metrics.rejected.load(Ordering::Relaxed);
+    assert_eq!(
+        requests,
+        responses + rejected,
+        "{context}: conservation violated — {requests} requests != \
+         {responses} responses + {rejected} rejected"
+    );
+}
+
+#[test]
+fn injected_forward_panic_gets_a_typed_reply_and_the_worker_keeps_serving() {
+    with_tracker_lock(|| {
+        let engine = serve_engine();
+        let _g = ScopedFaults::new(0xc0a5, "engine.forward=panic#1");
+        let server =
+            Server::start(Arc::clone(&engine), ServerConfig::default()).expect("server starts");
+        let client = server.client();
+        // First request: the forward pass panics at the injected site.
+        // Containment converts that into a typed reply, not a lost
+        // request and not a dead worker.
+        let resp = client.infer(vec![0.2; 36]).expect("submit is accepted");
+        match resp.result {
+            Err(ServeError::Panicked { layer, ref payload }) => {
+                assert!(
+                    layer.is_some(),
+                    "the executor's layer scope must attribute the panic"
+                );
+                assert!(
+                    payload.contains("engine.forward"),
+                    "payload names the fault site: {payload:?}"
+                );
+            }
+            ref other => panic!("expected a Panicked reply, got {other:?}"),
+        }
+        // Same worker, fresh session: the very next request serves.
+        assert!(client.infer(vec![0.2; 36]).unwrap().result.is_ok());
+        let health = server.health();
+        assert_eq!(health.panicked_requests, 1);
+        assert_eq!(health.restarts, 0, "containment means no worker died");
+        let metrics = server.shutdown();
+        assert_eq!(metrics.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.responses.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.panicked.load(Ordering::Relaxed), 1);
+        assert_conservation(&metrics, "panic containment");
+    });
+}
+
+#[test]
+fn dead_worker_is_respawned_within_the_backoff_bound() {
+    with_tracker_lock(|| {
+        let engine = serve_engine();
+        // A panic *between* batches (the serve.worker site) escapes
+        // per-request containment by design: it kills the whole worker
+        // thread while it holds no requests. The supervisor must notice
+        // and respawn it.
+        let _g = ScopedFaults::new(0xdead, "serve.worker=panic#1");
+        let server =
+            Server::start(Arc::clone(&engine), ServerConfig::default()).expect("server starts");
+        // First backoff is 10 ms + a 2 ms supervisor poll; 5 s is the
+        // generous CI-machine bound, not the expectation.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let h = server.health();
+            if h.restarts >= 1 && h.live_workers == h.workers {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "worker not respawned within the backoff bound: {h}"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // The respawned worker serves (its faultpoint's #1 limit is
+        // already spent).
+        let client = server.client();
+        assert!(client.infer(vec![0.4; 36]).unwrap().result.is_ok());
+        let health = server.health();
+        assert_eq!(health.restarts, 1, "exactly one death, one respawn");
+        let metrics = server.shutdown();
+        assert_conservation(&metrics, "worker respawn");
+    });
+}
+
+#[test]
+fn injected_alloc_refusal_walks_the_degradation_ladder() {
+    with_tracker_lock(|| {
+        let engine = Engine::builder(ladder_model())
+            .algo_override(0, AlgoKind::Mec)
+            .pin_batch_sizes(&[1, 2])
+            .build()
+            .expect("ladder model builds");
+        assert!(engine.workspace_elems() > 0, "MEC plans a real workspace");
+        let mut rng = Rng::new(3);
+        let x = Tensor::random(Nhwc::new(2, 8, 8, 2), &mut rng);
+        let mut session = engine.session();
+        let degraded_out = {
+            let _g = ScopedFaults::new(0x10ad, "memory.arena.grow=alloc#1");
+            // The refused workspace reservation triggers one engine-wide
+            // re-plan onto the zero-workspace family and a retry — the
+            // caller sees a successful forward, not an error.
+            session.infer_batch(&x).expect("degrade + retry serves the request")
+        };
+        assert!(engine.is_degraded());
+        assert_eq!(engine.degrade_epoch(), 1);
+        assert_eq!(engine.workspace_elems(), 0, "the fallback family needs no arena");
+        let transitions = engine.degraded_layers();
+        assert!(!transitions.is_empty(), "the MEC layer must have moved");
+        for t in &transitions {
+            assert_ne!(t.from, t.to, "a recorded transition must change the algorithm");
+        }
+        assert_eq!(transitions[0].from, AlgoKind::Mec);
+        // LayerPlan reporting follows the ladder: the current report
+        // shows the fallback with zero workspace, while the build-time
+        // report still documents what was built.
+        for lp in engine.plan_report_current() {
+            assert_eq!(
+                lp.chosen.workspace_bytes, 0,
+                "layer {} still reports a workspace after degrade",
+                lp.layer
+            );
+        }
+        assert!(engine.plan_report()[0].chosen.workspace_bytes > 0);
+        // Bitwise identity: the degraded forward equals a fresh engine
+        // planned under a zero budget from the start (same planner, same
+        // zero-workspace choices — not merely "close").
+        let zero = Engine::builder(ladder_model())
+            .budget(Budget::new(0))
+            .pin_batch_sizes(&[1, 2])
+            .build()
+            .expect("zero-budget build");
+        let reference = zero.session().infer_batch(&x).expect("reference forward");
+        assert_eq!(
+            degraded_out.data(),
+            reference.data(),
+            "degraded forward must be bitwise identical to the zero-budget plan"
+        );
+        // Steady state after the fault: zero tracked allocation. The
+        // degraded plans own no lowering buffers, the activation arena
+        // was pre-sized at session creation, and the memo re-warmed on
+        // the retry.
+        let before = memory::current_bytes();
+        for rep in 0..10 {
+            session.infer_batch(&x).expect("degraded steady state serves");
+            assert_eq!(
+                memory::current_bytes(),
+                before,
+                "rep {rep}: tracked allocation in degraded steady state"
+            );
+        }
+    });
+}
+
+#[test]
+fn server_reports_degradation_in_health_and_stays_quiet_between_faults() {
+    with_tracker_lock(|| {
+        let engine = Arc::new(
+            Engine::builder(serve_model())
+                .algo_override(0, AlgoKind::Mec)
+                .pin_batch_sizes(&[1, 2, 4, 8])
+                .threads(2)
+                .build()
+                .expect("serve model builds"),
+        );
+        let _g = ScopedFaults::new(0xf00d, "memory.arena.grow=alloc#1");
+        let server =
+            Server::start(Arc::clone(&engine), ServerConfig::default()).expect("server starts");
+        let client = server.client();
+        // The first forward hits the refusal, degrades, retries, and
+        // still answers — the client never sees the fault.
+        assert!(client.infer(vec![0.3; 36]).unwrap().result.is_ok());
+        let health = server.health();
+        assert!(health.degraded, "health must surface the ladder: {health}");
+        assert!(!health.degraded_layers.is_empty());
+        assert_eq!(health.live_workers, health.workers);
+        assert_eq!(health.restarts, 0, "degradation is not a worker death");
+        // Between faults the system is quiet: no tracked allocation, no
+        // OS thread spawns, no respawns — just serving.
+        for _ in 0..5 {
+            assert!(client.infer(vec![0.3; 36]).unwrap().result.is_ok());
+        }
+        let bytes_before = memory::current_bytes();
+        let spawned_before = engine.pool_threads_spawned();
+        for rep in 0..20 {
+            assert!(client.infer(vec![0.3; 36]).unwrap().result.is_ok());
+            assert_eq!(
+                memory::current_bytes(),
+                bytes_before,
+                "rep {rep}: tracked allocation between faults"
+            );
+            assert_eq!(
+                engine.pool_threads_spawned(),
+                spawned_before,
+                "rep {rep}: OS thread spawned between faults"
+            );
+        }
+        assert_eq!(server.health().restarts, 0);
+        let metrics = server.shutdown();
+        assert_conservation(&metrics, "degraded serving");
+    });
+}
+
+#[test]
+fn retry_schedule_is_deterministic_and_survives_backpressure() {
+    with_tracker_lock(|| {
+        let engine = serve_engine();
+        // Stall the single worker for 400 ms before it consumes
+        // anything, so a depth-1 queue stays full for the whole retry
+        // schedule — deterministic backpressure without racing a drain.
+        let _g = ScopedFaults::new(0xb0ff, "serve.worker=delay400#1");
+        let server = Server::start(
+            Arc::clone(&engine),
+            ServerConfig { queue_depth: 1, ..ServerConfig::default() },
+        )
+        .expect("server starts");
+        let client = server.client();
+        let rx_first = client.submit(vec![0.5; 36]).expect("empty queue admits");
+        // Every attempt sees the full queue; the recorded delays must be
+        // exactly the policy's seeded schedule (no wall-clock sleeps —
+        // the injected sleep only records).
+        let policy = RetryPolicy::default();
+        let mut recorded = Vec::new();
+        let err = client
+            .submit_with_retry_using(vec![0.5; 36], &policy, |d| recorded.push(d))
+            .expect_err("backpressure outlives the retry budget");
+        assert!(
+            matches!(err, SubmitError::Shed(ShedReason::QueueFull { .. })),
+            "got {err:?}"
+        );
+        let mut rng = Rng::new(policy.seed);
+        let expected: Vec<Duration> = (0..policy.max_attempts - 1)
+            .map(|i| policy.delay(i, &mut rng))
+            .collect();
+        assert_eq!(recorded, expected, "jittered schedule replays from the seed");
+        // The stalled worker wakes, drains the queue, and the same
+        // client recovers with real sleeps.
+        assert!(rx_first.recv().expect("stalled request is served").result.is_ok());
+        let rx = client
+            .submit_with_retry(vec![0.5; 36], &policy)
+            .expect("drained queue admits");
+        assert!(rx.recv().expect("answered").result.is_ok());
+        let metrics = server.shutdown();
+        // 1 stalled + 4 shed attempts + 1 recovered.
+        assert_eq!(metrics.requests.load(Ordering::Relaxed), 6);
+        assert_eq!(metrics.rejected.load(Ordering::Relaxed), 4);
+        assert_eq!(metrics.responses.load(Ordering::Relaxed), 2);
+        assert_conservation(&metrics, "retry under backpressure");
+    });
+}
+
+/// Randomized soak: one seeded plan mixing alloc refusals, forward
+/// panics, worker deaths, and dispatch delays under concurrent load.
+/// Override the plan with `MEC_CHAOS_SEED=<u64>`; a failure prints the
+/// `MEC_FAULTS=…` line that replays it bit-for-bit.
+#[test]
+fn randomized_chaos_soak_holds_conservation() {
+    let seed = env_u64("MEC_CHAOS_SEED", 0xc4a0_5eed);
+    let spec = "engine.forward=panic@0.04#3,memory.arena.grow=alloc@0.25#1,\
+                serve.worker=panic@0.3#2,serve.dispatch=delay1@0.05";
+    with_tracker_lock(|| {
+        let engine = Arc::new(
+            Engine::builder(serve_model())
+                .algo_override(0, AlgoKind::Mec)
+                .pin_batch_sizes(&[1, 2, 4, 8])
+                .threads(2)
+                .build()
+                .expect("serve model builds"),
+        );
+        let g = ScopedFaults::new(seed, spec);
+        let replay = format!(
+            "chaos soak failed — replay with: {} cargo test --test chaos \
+             randomized_chaos_soak (or MEC_CHAOS_SEED={seed:#x})",
+            g.plan().replay_line()
+        );
+        let server = Server::start(
+            Arc::clone(&engine),
+            ServerConfig { workers: 2, queue_depth: 256, ..ServerConfig::default() },
+        )
+        .expect("server starts");
+        let client = server.client();
+        let mut submitted = 0u64;
+        let mut shed_at_submit = 0u64;
+        let mut rxs = Vec::new();
+        for i in 0..120 {
+            match client.submit(vec![0.1 + (i % 7) as f32 * 0.05; 36]) {
+                Ok(rx) => {
+                    submitted += 1;
+                    rxs.push(rx);
+                }
+                Err(SubmitError::Shed(_)) => shed_at_submit += 1,
+                Err(e) => panic!("{replay}\nunexpected submit error: {e}"),
+            }
+        }
+        // Every admitted request gets a reply — success, typed engine
+        // error, typed shed, or typed panic — within the respawn bound.
+        let mut answered = 0u64;
+        let mut panicked = 0u64;
+        for rx in rxs {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(10))
+                .unwrap_or_else(|_| panic!("{replay}\nadmitted request never answered"));
+            match resp.result {
+                Ok(_) | Err(ServeError::Engine(_)) | Err(ServeError::Shed(_)) => {}
+                Err(ServeError::Panicked { .. }) => panicked += 1,
+            }
+            answered += 1;
+        }
+        assert_eq!(answered, submitted, "{replay}");
+        let health = server.health();
+        let metrics = server.shutdown();
+        let requests = metrics.requests.load(Ordering::Relaxed);
+        let responses = metrics.responses.load(Ordering::Relaxed);
+        let rejected = metrics.rejected.load(Ordering::Relaxed);
+        assert_eq!(
+            requests,
+            responses + rejected,
+            "{replay}\nconservation violated: {requests} != {responses} + {rejected}"
+        );
+        assert_eq!(responses, submitted, "{replay}");
+        assert_eq!(rejected, shed_at_submit, "{replay}");
+        assert_eq!(
+            metrics.panicked.load(Ordering::Relaxed),
+            panicked,
+            "{replay}\npanicked counter disagrees with typed replies"
+        );
+        assert_eq!(
+            health.panicked_requests, panicked,
+            "{replay}\nhealth disagrees with typed replies"
+        );
+    });
+}

@@ -258,6 +258,30 @@ fn bench_serving_seed_carries_real_measurements() {
             reports.push(loadgen::run(&server, &[0.25; 36], &cfg));
             server.shutdown();
         }
+        // Degraded-mode point: the same smoke load against an engine
+        // forced down the degradation ladder (every conv layer on the
+        // zero-workspace family), so the trajectory records what the
+        // fallback costs with real measurements.
+        let degraded_engine = tiny_engine();
+        degraded_engine.degrade();
+        let server = Server::start(
+            Arc::clone(&degraded_engine),
+            ServerConfig {
+                workers: 2,
+                queue_depth: 256,
+                max_wait: Duration::from_millis(1),
+                ..ServerConfig::default()
+            },
+        )
+        .expect("server starts");
+        let mut degraded = loadgen::run(
+            &server,
+            &[0.25; 36],
+            &LoadConfig { mode: LoadMode::Closed { clients: 2 }, requests: 40, slo },
+        );
+        server.shutdown();
+        degraded.label = format!("degraded-{}", degraded.label);
+        reports.push(degraded);
         reports
     });
     let json = loadgen::render_json(250.0, 2, &[1, 2, 4, 8], &reports);
@@ -265,5 +289,6 @@ fn bench_serving_seed_carries_real_measurements() {
     let written = std::fs::read_to_string(path).expect("read back");
     assert!(written.starts_with("{\"bench\":\"serving\""));
     assert!(!written.contains("\"status\":\"pending\""));
-    assert_eq!(written.matches("\"label\":").count(), 4);
+    assert_eq!(written.matches("\"label\":").count(), 5);
+    assert!(written.contains("\"label\":\"degraded-closed-2\""));
 }
